@@ -1,0 +1,64 @@
+//! Quickstart: learn the optimal Vgg16 partition point online.
+//!
+//! Builds the paper's default setting — Vgg16, TX2-class device, GPU edge,
+//! 12 Mbps uplink — runs μLinUCB for 500 frames against the calibrated
+//! environment simulator, and prints how the learner's choices converge to
+//! the oracle's.  Run with:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ans::bandit::LinUcb;
+use ans::coordinator::{experiment, FrameSource};
+use ans::models::zoo;
+use ans::simulator::Environment;
+
+fn main() {
+    let frames = 500;
+    let mut env = Environment::simple(zoo::vgg16(), 12.0, 42);
+    let oracle_p = env.oracle_partition();
+    println!(
+        "environment: vgg16 @ 12 Mbps, GPU edge — oracle partition p={} ({}), {:.1} ms",
+        oracle_p,
+        env.net.partition_label(oracle_p),
+        env.oracle_delay()
+    );
+    println!(
+        "static baselines: EO {:.1} ms | MO {:.1} ms",
+        env.expected_total(0),
+        env.expected_total(env.num_partitions())
+    );
+
+    let mut policy = LinUcb::ans_default(frames);
+    let mut source = FrameSource::uniform();
+    let metrics = experiment::run(&mut policy, &mut env, frames, &mut source);
+
+    let p_max = env.num_partitions();
+    println!("\nμLinUCB learning (warm-up sweep, then UCB + forced sampling):");
+    for window in [(0usize, 50usize), (50, 100), (100, 200), (200, 350), (350, 500)] {
+        let s = metrics.summary_range(window.0, window.1, p_max);
+        println!(
+            "  frames {:3}..{:3}: mean {:6.1} ms, oracle-match {:5.1}%",
+            window.0,
+            window.1,
+            s.mean_delay_ms,
+            100.0 * s.oracle_match_rate
+        );
+    }
+    let s = metrics.summary(p_max);
+    println!(
+        "\noverall mean delay {:.1} ms (oracle {:.1} ms); total regret {:.0} ms over {frames} frames",
+        s.mean_delay_ms,
+        env.oracle_delay(),
+        s.total_regret_ms
+    );
+    println!(
+        "learned θ̂ = {:?}",
+        policy.theta().iter().map(|v| (v * 10.0).round() / 10.0).collect::<Vec<_>>()
+    );
+    println!(
+        "prediction error (last 100 frames): {:.2}%",
+        100.0 * metrics.mean_prediction_error(100)
+    );
+}

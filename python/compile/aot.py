@@ -1,0 +1,161 @@
+"""AOT lowering: PartNet (front, back) pairs -> HLO text + manifest.json.
+
+This is the only bridge between the python build path and the rust request
+path.  For every partition point p and batch-size variant B we lower
+
+    front_fn(params, p, .)  over f32[B,32,32,3]   (device side)
+    back_fn(params, p, .)   over f32[psi_p shape] (edge side)
+
+to HLO **text** (NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly — see /opt/xla-example/README.md).
+Weights are closed over, so every artifact is self-contained: rust feeds
+the frame (or psi) tensor and gets a 1-tuple back (return_tuple=True ->
+``to_tuple1()`` on the rust side).
+
+The manifest records, per partition point: artifact file names, psi_p
+shape/bytes, and the paper's 7-dim contextual features of DNN_p^back —
+everything the rust coordinator needs to build x_p without touching
+python at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH_SIZES = (1, 4)
+SEED = 0
+SCHEMA_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_fingerprint() -> str:
+    """Hash of the compile-path sources + seed: drives idempotence."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(pkg)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    h.update(str(SEED).encode())
+    h.update(str(BATCH_SIZES).encode())
+    return h.hexdigest()[:16]
+
+
+def build_manifest(out_dir: str) -> Dict[str, Any]:
+    params = model.init_params(SEED)
+    P = model.NUM_PARTITIONS
+    entries = []
+    n_lowered = 0
+    for batch in BATCH_SIZES:
+        frame_spec = jax.ShapeDtypeStruct(
+            (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_C), jnp.float32
+        )
+        for p in range(P + 1):
+            psi_shape = model.intermediate_shape(p, batch)
+            psi_bytes = 4
+            for d in psi_shape:
+                psi_bytes *= d
+            entry: Dict[str, Any] = {
+                "batch": batch,
+                "p": p,
+                "psi_shape": list(psi_shape),
+                "psi_bytes": 0 if p == P else psi_bytes,
+                "front": None,
+                "back": None,
+                "features": model.backend_features(p, batch),
+            }
+            if p > 0:
+                fname = f"partnet_b{batch}_p{p}_front.hlo.txt"
+
+                def front(x, _p=p):
+                    return (model.front_fn(params, _p, x),)
+
+                text = to_hlo_text(jax.jit(front).lower(frame_spec))
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                entry["front"] = fname
+                n_lowered += 1
+            if p < P:
+                fname = f"partnet_b{batch}_p{p}_back.hlo.txt"
+                psi_spec = jax.ShapeDtypeStruct(psi_shape, jnp.float32)
+
+                def back(psi, _p=p):
+                    return (model.back_fn(params, _p, psi),)
+
+                text = to_hlo_text(jax.jit(back).lower(psi_spec))
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    f.write(text)
+                entry["back"] = fname
+                n_lowered += 1
+            entries.append(entry)
+            print(f"  lowered p={p} batch={batch} psi={psi_shape}", file=sys.stderr)
+
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "model": "partnet",
+        "fingerprint": _source_fingerprint(),
+        "seed": SEED,
+        "num_partitions": P,
+        "input_shape": [model.INPUT_HW, model.INPUT_HW, model.INPUT_C],
+        "num_classes": model.NUM_CLASSES,
+        "batch_sizes": list(BATCH_SIZES),
+        "stages": [
+            {"name": name, "kind": kind, **{k: v for k, v in cfg.items()}}
+            for name, kind, cfg in model.STAGES
+        ],
+        "partitions": entries,
+    }
+    print(f"lowered {n_lowered} HLO modules", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = _source_fingerprint()
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and old.get("schema_version") == SCHEMA_VERSION:
+                print(f"artifacts up to date (fingerprint {fp}); skipping", file=sys.stderr)
+                return
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    manifest = build_manifest(args.out_dir)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+All kernels run under ``interpret=True`` so the resulting HLO executes on
+any PJRT backend, including the rust CPU client on the request path.
+"""
+
+from . import ref
+from .conv import conv2d
+from .linear import linear
+from .matmul import matmul
+
+__all__ = ["conv2d", "linear", "matmul", "ref"]

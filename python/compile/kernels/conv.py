@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: NHWC conv2d (stride 1, SAME) as im2col + fused matmul.
+
+GPU->TPU rethink (DESIGN.md §Hardware-Adaptation): the paper's testbed
+runs convs through cuDNN's implicit-GEMM path on threadblocks.  On TPU the
+same insight — convolution *is* a matmul — maps to the MXU: we extract
+kxkxCin patches (im2col, done with ``conv_general_dilated_patches`` so XLA
+fuses it) and feed the resulting [N*H*W, K*K*Cin] x [K*K*Cin, Cout] GEMM
+to the blocked Pallas schedule from ``linear.py`` with the bias+ReLU
+epilogue fused in VMEM.  BlockSpec expresses the HBM->VMEM slab streaming
+that CUDA did with shared-memory tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linear import linear
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Fused conv2d+bias(+ReLU): x [N,H,W,Cin], w [KH,KW,Cin,Cout], b [Cout].
+
+    Stride 1, SAME padding (what PartNet uses; the generality the paper
+    needs lives in the layer-graph IR on the rust side, not the kernel).
+    """
+    if x.ndim != 4 or w.ndim != 4 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    n, h, wd, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    if wcin != cin or b.shape[0] != cout:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # im2col: [N, H, W, KH*KW*Cin] patches (SAME padding, stride 1).
+    # conv_general_dilated_patches returns feature dim ordered as
+    # (Cin, KH, KW) when given NHWC inputs with these dimension numbers.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [N, H, W, Cin*KH*KW]
+
+    lhs = patches.reshape(n * h * wd, cin * kh * kw)
+    # Reorder weights to match the (Cin, KH, KW) patch feature order.
+    rhs = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+
+    out = linear(lhs, rhs, b, relu=relu, bm=bm, bn=bn, bk=bk)
+    return out.reshape(n, h, wd, cout)

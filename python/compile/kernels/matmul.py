@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: blocked matmul with in-place block accumulation.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the output
+into ``BM x BN`` blocks sized for the 128x128 MXU systolic array; the K
+dimension is streamed HBM->VMEM in ``BK`` slabs expressed through the
+BlockSpec index maps.  The output block is revisited across the K grid
+dimension (grid iteration is sequential), so it doubles as the VMEM
+accumulator — the canonical Pallas matmul schedule.  On this testbed the
+kernel runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls), so the BlockSpec structure is what we optimize and the
+numerics are validated against ``ref.matmul``.
+
+Arbitrary shapes are supported by padding the operands up to the block
+grid and slicing the product back down — zero padding is exact for matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile sizes.  128 matches the MXU systolic array
+# edge; smaller dims fall back to the (padded) dimension itself.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``m``."""
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Blocked Pallas matmul ``x @ y`` for 2-D operands of any shape.
+
+    Accumulates in f32 inside each block step.  Output dtype follows ``x``.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(k, 1))
+
+    xp = pad_to(pad_to(x, bm, 0), bk, 1)
+    yp = pad_to(pad_to(y, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+# VMEM footprint of one grid step, in bytes: x block + y block + out block.
+# Used by the static §Perf analysis (python/compile/perf_report.py).
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+# Fraction of MXU 128x128 tile area covered by a (bm, bn, bk) schedule —
+# a structural utilization estimate (1.0 = perfectly tiled for the MXU).
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    def frac(b: int) -> float:
+        return min(b, 128) / 128.0
+
+    return frac(bm) * frac(bn) * frac(bk)

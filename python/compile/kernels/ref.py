@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` / ``jax.lax`` ops only.  pytest compares kernel
+outputs against these references with ``assert_allclose`` — this is the
+core correctness signal for the L1 layer (interpret-mode Pallas on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference matmul: plain ``jnp.matmul`` with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Reference fused linear layer: ``relu(x @ w + b)``."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Reference NHWC conv2d, stride 1, SAME padding, fused bias+ReLU.
+
+    x: [N, H, W, Cin], w: [KH, KW, Cin, Cout], b: [Cout].
+    """
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """Reference 2x2 stride-2 max pool, NHWC."""
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return jax.lax.reduce_window(
+        x,
+        init,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

@@ -1,0 +1,193 @@
+"""L2: PartNet — the partitionable CNN served by the rust coordinator.
+
+PartNet is a VGG-style network over 32x32x3 frames, small enough to run
+end-to-end through CPU PJRT at serving rates, but with the structural
+properties the paper's partition problem needs:
+
+  * a chain of stages with a partition point after each stage;
+  * non-monotone intermediate sizes (conv1 *inflates* the tensor 5.3x over
+    the raw input, just like Vgg16's early layers — this is why the
+    optimal split is non-trivial);
+  * a mix of conv / fully-connected / activation work so the 7-dim
+    contextual feature vector is exercised.
+
+Every compute stage calls the L1 Pallas kernels (``kernels.conv2d``,
+``kernels.linear``), so the AOT-lowered HLO contains the fused MXU-blocked
+schedules.  ``front_fn``/``back_fn`` realize the paper's DNN_p^front /
+DNN_p^back for every partition point p; pytest asserts
+``back(p, front(p, x)) == full(x)`` for all p.
+
+Build-time only: this module is never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+INPUT_HW = 32
+INPUT_C = 3
+NUM_CLASSES = 16  # padded to an MXU-friendly width; 10 valid classes
+
+# Stage table: (name, kind, params). Partition point p sits *after* stage p;
+# p=0 => pure edge offloading, p=len(STAGES) => pure on-device processing.
+STAGES: List[Tuple[str, str, Dict[str, Any]]] = [
+    ("conv1", "conv", dict(cin=3, cout=16, k=3, relu=True)),
+    ("pool1", "pool", {}),
+    ("conv2", "conv", dict(cin=16, cout=32, k=3, relu=True)),
+    ("pool2", "pool", {}),
+    ("conv3", "conv", dict(cin=32, cout=64, k=3, relu=True)),
+    ("pool3", "pool", {}),
+    ("fc1", "fc", dict(din=4 * 4 * 64, dout=256, relu=True)),
+    ("fc2", "fc", dict(din=256, dout=64, relu=True)),
+    ("fc3", "fc", dict(din=64, dout=NUM_CLASSES, relu=False)),
+]
+NUM_PARTITIONS = len(STAGES)  # P; partition points are 0..P inclusive
+
+
+def init_params(seed: int = 0) -> Dict[str, Dict[str, jax.Array]]:
+    """He-init weights for every compute stage, deterministically from seed."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, Dict[str, jax.Array]] = {}
+    for name, kind, cfg in STAGES:
+        if kind == "conv":
+            key, kw, kb = jax.random.split(key, 3)
+            fan_in = cfg["k"] * cfg["k"] * cfg["cin"]
+            params[name] = {
+                "w": jax.random.normal(kw, (cfg["k"], cfg["k"], cfg["cin"], cfg["cout"]), jnp.float32)
+                * jnp.sqrt(2.0 / fan_in),
+                "b": jnp.zeros((cfg["cout"],), jnp.float32),
+            }
+        elif kind == "fc":
+            key, kw, kb = jax.random.split(key, 3)
+            params[name] = {
+                "w": jax.random.normal(kw, (cfg["din"], cfg["dout"]), jnp.float32)
+                * jnp.sqrt(2.0 / cfg["din"]),
+                "b": jnp.zeros((cfg["dout"],), jnp.float32),
+            }
+    return params
+
+
+def _apply_stage(params, idx: int, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    name, kind, cfg = STAGES[idx]
+    if kind == "conv":
+        f = kernels.conv2d if use_pallas else ref.conv2d
+        return f(x, params[name]["w"], params[name]["b"], relu=cfg["relu"])
+    if kind == "pool":
+        return ref.maxpool2(x)  # data movement, not MXU work — plain XLA op
+    if kind == "fc":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        f = kernels.linear if use_pallas else ref.linear
+        return f(x, params[name]["w"], params[name]["b"], relu=cfg["relu"])
+    raise ValueError(f"unknown stage kind {kind}")
+
+
+def front_fn(params, p: int, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """DNN_p^front: stages 1..p on the mobile device. p=0 is the identity."""
+    for i in range(p):
+        x = _apply_stage(params, i, x, use_pallas)
+    return x
+
+
+def back_fn(params, p: int, psi: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """DNN_p^back: stages p+1..P on the edge server. p=P is the identity."""
+    for i in range(p, NUM_PARTITIONS):
+        psi = _apply_stage(params, i, psi, use_pallas)
+    return psi
+
+
+def full_fn(params, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """The unpartitioned network (== back_fn(0) == front_fn(P))."""
+    return back_fn(params, 0, x, use_pallas)
+
+
+def intermediate_shape(p: int, batch: int) -> Tuple[int, ...]:
+    """Shape of psi_p, the tensor crossing the device->edge link at point p."""
+    shape: Tuple[int, ...] = (batch, INPUT_HW, INPUT_HW, INPUT_C)
+    for i in range(p):
+        _, kind, cfg = STAGES[i]
+        if kind == "conv":
+            shape = (*shape[:3], cfg["cout"])
+        elif kind == "pool":
+            shape = (shape[0], shape[1] // 2, shape[2] // 2, shape[3])
+        elif kind == "fc":
+            shape = (shape[0], cfg["dout"])
+    return shape
+
+
+def _stage_shapes(batch: int) -> List[Tuple[int, ...]]:
+    return [intermediate_shape(p, batch) for p in range(NUM_PARTITIONS + 1)]
+
+
+def stage_macs(idx: int, batch: int = 1) -> Dict[str, int]:
+    """MAC counts by layer type for stage idx (per batch): conv/fc/act.
+
+    Matches the paper's feature construction: activation "MACs" are one
+    unit per output element (ReLU/pool are memory-bound elementwise work).
+    """
+    name, kind, cfg = STAGES[idx]
+    in_shape = intermediate_shape(idx, batch)
+    out_shape = intermediate_shape(idx + 1, batch)
+    out_elems = 1
+    for d in out_shape:
+        out_elems *= d
+    if kind == "conv":
+        return {
+            "conv": out_elems * cfg["k"] * cfg["k"] * cfg["cin"],
+            "fc": 0,
+            "act": out_elems if cfg["relu"] else 0,
+        }
+    if kind == "fc":
+        return {
+            "conv": 0,
+            "fc": batch * cfg["din"] * cfg["dout"],
+            "act": out_elems if cfg["relu"] else 0,
+        }
+    if kind == "pool":
+        return {"conv": 0, "fc": 0, "act": out_elems * 4}
+    raise ValueError(kind)
+
+
+def backend_features(p: int, batch: int = 1) -> Dict[str, float]:
+    """The paper's 7-dim context x_p for DNN_p^back + psi_p bytes.
+
+    [m_c, m_f, m_a, n_c, n_f, n_a, psi] — MACs by type, layer counts by
+    type, intermediate size.  Raw counts; the rust side normalizes.
+    """
+    m = {"conv": 0, "fc": 0, "act": 0}
+    n = {"conv": 0, "fc": 0, "act": 0}
+    for i in range(p, NUM_PARTITIONS):
+        s = stage_macs(i, batch)
+        for k in m:
+            m[k] += s[k]
+        _, kind, cfg = STAGES[i]
+        if kind == "conv":
+            n["conv"] += 1
+            n["act"] += 1 if cfg["relu"] else 0
+        elif kind == "fc":
+            n["fc"] += 1
+            n["act"] += 1 if cfg["relu"] else 0
+        elif kind == "pool":
+            n["act"] += 1
+    shape = intermediate_shape(p, batch)
+    psi_bytes = 4
+    for d in shape:
+        psi_bytes *= d
+    if p == NUM_PARTITIONS:
+        psi_bytes = 0  # MO: nothing crosses the link
+    return {
+        "m_conv": float(m["conv"]),
+        "m_fc": float(m["fc"]),
+        "m_act": float(m["act"]),
+        "n_conv": float(n["conv"]),
+        "n_fc": float(n["fc"]),
+        "n_act": float(n["act"]),
+        "psi_bytes": float(psi_bytes),
+    }

@@ -1,0 +1,83 @@
+"""§Perf static analysis for L1/L2 (build-time).
+
+L1 (Pallas): interpret-mode wall-clock is NOT a TPU proxy, so the kernel
+analysis is structural — per-layer VMEM footprint of the chosen BlockSpec
+schedule and the MXU-tile utilization estimate (DESIGN.md §8).
+
+L2 (JAX graph): op census of the lowered HLO per artifact — total ops,
+fusion count, and the absence of redundant transposes — plus artifact
+sizes.  Run:
+
+    cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+from . import model
+from .kernels.matmul import mxu_utilization, vmem_bytes
+
+VMEM_BUDGET = 16 * 1024 * 1024  # ~16 MiB VMEM per TPU core
+
+
+def kernel_report() -> None:
+    print("== L1 Pallas kernels: VMEM footprint / MXU utilization ==")
+    print(f"{'stage':>8} {'GEMM (MxKxN)':>22} {'blocks':>18} {'VMEM':>10} {'MXU util':>9}")
+    for name, kind, cfg in model.STAGES:
+        if kind == "conv":
+            # im2col GEMM: [H*W, k*k*cin] x [k*k*cin, cout]
+            shape = model.intermediate_shape(
+                [s[0] for s in model.STAGES].index(name), 1
+            )
+            hw = shape[1] * shape[2]
+            m, k, n = hw, cfg["k"] * cfg["k"] * cfg["cin"], cfg["cout"]
+        elif kind == "fc":
+            m, k, n = 1, cfg["din"], cfg["dout"]
+        else:
+            continue
+        bm, bk, bn = min(m, 128), min(k, 128), min(n, 128)
+        v = vmem_bytes(bm, bn, bk)
+        u = mxu_utilization(bm, bn, bk)
+        ok = "ok" if v <= VMEM_BUDGET else "OVER"
+        print(
+            f"{name:>8} {f'{m}x{k}x{n}':>22} {f'({bm},{bk},{bn})':>18} "
+            f"{v:>8}B {u:>8.2%} {ok}"
+        )
+
+
+def hlo_report(art_dir: str) -> None:
+    print("\n== L2 lowered HLO census (per artifact) ==")
+    manifest = json.load(open(os.path.join(art_dir, "manifest.json")))
+    total_ops = 0
+    print(f"{'artifact':>28} {'bytes':>9} {'ops':>6} {'fusions':>8} {'transposes':>11}")
+    for e in manifest["partitions"]:
+        if e["batch"] != 1:
+            continue
+        for side in ("front", "back"):
+            if e[side] is None:
+                continue
+            path = os.path.join(art_dir, e[side])
+            text = open(path).read()
+            ops = len(re.findall(r"^\s+\S+ = ", text, re.M))
+            fus = len(re.findall(r"fusion", text))
+            tr = len(re.findall(r"transpose\(", text))
+            total_ops += ops
+            print(f"{e[side]:>28} {os.path.getsize(path):>9} {ops:>6} {fus:>8} {tr:>11}")
+    print(f"total HLO instructions across batch-1 artifacts: {total_ops}")
+
+
+def main() -> None:
+    art = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    kernel_report()
+    if os.path.exists(os.path.join(art, "manifest.json")):
+        hlo_report(art)
+    else:
+        print(f"(no artifacts at {art}; run `make artifacts` for the HLO census)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""AOT pipeline integrity: manifest vs artifacts vs model ground truth."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_schema(self, manifest):
+        assert manifest["schema_version"] == aot.SCHEMA_VERSION
+        assert manifest["model"] == "partnet"
+        assert manifest["num_partitions"] == model.NUM_PARTITIONS
+
+    def test_every_partition_present(self, manifest):
+        for batch in manifest["batch_sizes"]:
+            ps = sorted(e["p"] for e in manifest["partitions"] if e["batch"] == batch)
+            assert ps == list(range(model.NUM_PARTITIONS + 1))
+
+    def test_artifact_files_exist_and_parse(self, manifest):
+        for e in manifest["partitions"]:
+            for side in ("front", "back"):
+                if e[side] is not None:
+                    path = os.path.join(ART, e[side])
+                    assert os.path.exists(path), path
+                    head = open(path).read(4096)
+                    assert "ENTRY" in head or "HloModule" in head
+
+    def test_front_back_presence_rule(self, manifest):
+        P = model.NUM_PARTITIONS
+        for e in manifest["partitions"]:
+            assert (e["front"] is None) == (e["p"] == 0)
+            assert (e["back"] is None) == (e["p"] == P)
+
+    def test_psi_shapes_match_model(self, manifest):
+        for e in manifest["partitions"]:
+            assert tuple(e["psi_shape"]) == model.intermediate_shape(e["p"], e["batch"])
+
+    def test_psi_bytes_match_features(self, manifest):
+        for e in manifest["partitions"]:
+            assert e["psi_bytes"] == e["features"]["psi_bytes"]
+
+    def test_features_match_model(self, manifest):
+        for e in manifest["partitions"]:
+            want = model.backend_features(e["p"], e["batch"])
+            assert e["features"] == pytest.approx(want)
+
+    def test_fingerprint_idempotence(self, manifest):
+        assert manifest["fingerprint"] == aot._source_fingerprint()

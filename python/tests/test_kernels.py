@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every property compares against the
+reference with assert_allclose.  Interpret-mode Pallas is slow, so shape
+ranges are kept moderate — coverage comes from randomized shapes, not
+giant tensors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+
+def _arr(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+dims = st.integers(min_value=1, max_value=70)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims, seed=seeds)
+    def test_matches_ref_f32(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = _arr(k1, (m, k)), _arr(k2, (k, n))
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(deadline=None, max_examples=8)
+    @given(m=dims, k=dims, n=dims, seed=seeds)
+    def test_matches_ref_bf16(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = _arr(k1, (m, k), jnp.bfloat16), _arr(k2, (k, n), jnp.bfloat16)
+        got = kernels.matmul(x, y).astype(jnp.float32)
+        want = ref.matmul(x, y).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=0.1, atol=0.5)
+
+    @settings(deadline=None, max_examples=6)
+    @given(seed=seeds, bm=st.sampled_from([8, 32, 128]), bk=st.sampled_from([8, 64, 128]))
+    def test_block_shape_invariance(self, seed, bm, bk):
+        """The result must not depend on the BlockSpec schedule."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = _arr(k1, (57, 91)), _arr(k2, (91, 33))
+        base = kernels.matmul(x, y)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y, bm=bm, bk=bk), base, rtol=1e-5, atol=1e-5
+        )
+
+    def test_shape_errors(self):
+        x = jnp.zeros((3, 4))
+        with pytest.raises(ValueError):
+            kernels.matmul(x, jnp.zeros((5, 2)))
+        with pytest.raises(ValueError):
+            kernels.matmul(x, jnp.zeros((4, 2, 1)))
+
+    def test_exact_tile_multiple(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x, y = _arr(k1, (128, 256)), _arr(k2, (256, 128))
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_single_row_col(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        x, y = _arr(k1, (1, 17)), _arr(k2, (17, 1))
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestLinear:
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims, seed=seeds, relu=st.booleans())
+    def test_matches_ref(self, m, k, n, seed, relu):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x, w, b = _arr(k1, (m, k)), _arr(k2, (k, n)), _arr(k3, (n,))
+        np.testing.assert_allclose(
+            kernels.linear(x, w, b, relu=relu),
+            ref.linear(x, w, b, relu=relu),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_relu_clamps(self):
+        x = jnp.full((4, 8), -10.0)
+        w = jnp.eye(8)
+        b = jnp.zeros((8,))
+        assert float(kernels.linear(x, w, b, relu=True).max()) == 0.0
+        assert float(kernels.linear(x, w, b, relu=False).min()) < 0.0
+
+    def test_bias_broadcast(self):
+        x = jnp.zeros((3, 5))
+        w = jnp.zeros((5, 7))
+        b = jnp.arange(7, dtype=jnp.float32)
+        got = kernels.linear(x, w, b, relu=False)
+        np.testing.assert_allclose(got, jnp.broadcast_to(b, (3, 7)))
+
+
+class TestConv2d:
+    @settings(deadline=None, max_examples=12)
+    @given(
+        n=st.integers(1, 3),
+        hw=st.integers(3, 14),
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 12),
+        k=st.sampled_from([1, 3, 5]),
+        seed=seeds,
+        relu=st.booleans(),
+    )
+    def test_matches_ref(self, n, hw, cin, cout, k, seed, relu):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _arr(k1, (n, hw, hw, cin))
+        w = _arr(k2, (k, k, cin, cout), scale=0.3)
+        b = _arr(k3, (cout,))
+        np.testing.assert_allclose(
+            kernels.conv2d(x, w, b, relu=relu),
+            ref.conv2d(x, w, b, relu=relu),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_identity_kernel(self):
+        """1x1 identity conv must pass the input through."""
+        x = _arr(jax.random.PRNGKey(0), (1, 6, 6, 4))
+        w = jnp.eye(4).reshape(1, 1, 4, 4)
+        b = jnp.zeros((4,))
+        np.testing.assert_allclose(
+            kernels.conv2d(x, w, b, relu=False), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_shape_errors(self):
+        with pytest.raises(ValueError):
+            kernels.conv2d(jnp.zeros((1, 4, 4, 3)), jnp.zeros((3, 3, 2, 5)), jnp.zeros((5,)))
+
+
+class TestPerfHelpers:
+    def test_vmem_bytes(self):
+        from compile.kernels.matmul import vmem_bytes
+
+        assert vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+
+    def test_mxu_utilization_bounds(self):
+        from compile.kernels.matmul import mxu_utilization
+
+        assert mxu_utilization(128, 128, 128) == 1.0
+        assert 0.0 < mxu_utilization(8, 128, 128) < 1.0

@@ -1,0 +1,123 @@
+"""L2 correctness: PartNet partition composition and feature construction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+PARAMS = model.init_params(0)
+P = model.NUM_PARTITIONS
+
+
+def _frame(batch=1, seed=1):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_C)
+    )
+
+
+class TestComposition:
+    @pytest.mark.parametrize("p", range(P + 1))
+    def test_front_back_compose_ref(self, p):
+        """back(p, front(p, x)) == full(x) for every partition point (ref path)."""
+        x = _frame(2)
+        full = model.full_fn(PARAMS, x, use_pallas=False)
+        psi = model.front_fn(PARAMS, p, x, use_pallas=False)
+        out = model.back_fn(PARAMS, p, psi, use_pallas=False)
+        np.testing.assert_allclose(out, full, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("p", [0, 2, 5, 7, P])
+    def test_front_back_compose_pallas(self, p):
+        """Same composition through the Pallas kernels (the AOT path)."""
+        x = _frame(1)
+        full = model.full_fn(PARAMS, x, use_pallas=False)
+        psi = model.front_fn(PARAMS, p, x, use_pallas=True)
+        out = model.back_fn(PARAMS, p, psi, use_pallas=True)
+        np.testing.assert_allclose(out, full, rtol=1e-4, atol=1e-4)
+
+    def test_pallas_matches_ref_full(self):
+        x = _frame(1)
+        np.testing.assert_allclose(
+            model.full_fn(PARAMS, x, use_pallas=True),
+            model.full_fn(PARAMS, x, use_pallas=False),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_deterministic_params(self):
+        p2 = model.init_params(0)
+        for name in PARAMS:
+            for k in PARAMS[name]:
+                np.testing.assert_array_equal(PARAMS[name][k], p2[name][k])
+
+    def test_different_seeds_differ(self):
+        p2 = model.init_params(1)
+        assert not np.allclose(PARAMS["conv1"]["w"], p2["conv1"]["w"])
+
+
+class TestShapes:
+    @pytest.mark.parametrize("p", range(P + 1))
+    @pytest.mark.parametrize("batch", [1, 4])
+    def test_intermediate_shape_matches_real(self, p, batch):
+        x = _frame(batch)
+        psi = model.front_fn(PARAMS, p, x, use_pallas=False)
+        assert tuple(psi.shape) == model.intermediate_shape(p, batch)
+
+    def test_output_shape(self):
+        out = model.full_fn(PARAMS, _frame(3), use_pallas=False)
+        assert out.shape == (3, model.NUM_CLASSES)
+
+    def test_inflation_then_compression(self):
+        """psi sizes are non-monotone: conv1 inflates, later layers shrink.
+
+        This is the structural property that makes the partition problem
+        non-trivial (paper Fig 1/3).
+        """
+        sizes = [
+            np.prod(model.intermediate_shape(p, 1)) for p in range(P + 1)
+        ]
+        assert sizes[1] > sizes[0]          # conv1 inflates over raw input
+        assert sizes[P] < sizes[0]          # logits are tiny
+        assert min(sizes) == sizes[P]
+
+
+class TestFeatures:
+    def test_dims_and_zero_at_P(self):
+        f = model.backend_features(P)
+        assert all(v == 0.0 for v in f.values())  # MO arm: zero context
+
+    def test_macs_decrease_with_p(self):
+        """Back-end MAC totals must be non-increasing in p."""
+        tot = [
+            sum(model.backend_features(p)[k] for k in ("m_conv", "m_fc", "m_act"))
+            for p in range(P + 1)
+        ]
+        assert all(a >= b for a, b in zip(tot, tot[1:]))
+
+    def test_macs_conserve_across_partition(self):
+        """front MACs + back MACs == full MACs for every p."""
+        full = model.backend_features(0)
+        for p in range(P + 1):
+            back = model.backend_features(p)
+            front_m = sum(
+                model.stage_macs(i)[t] for i in range(p) for t in ("conv", "fc", "act")
+            )
+            back_m = back["m_conv"] + back["m_fc"] + back["m_act"]
+            total = full["m_conv"] + full["m_fc"] + full["m_act"]
+            assert front_m + back_m == pytest.approx(total)
+
+    def test_psi_bytes_match_real_array(self):
+        for p in range(P + 1):
+            f = model.backend_features(p, batch=1)
+            if p == P:
+                assert f["psi_bytes"] == 0.0
+                continue
+            psi = model.front_fn(PARAMS, p, _frame(1), use_pallas=False)
+            assert f["psi_bytes"] == psi.size * 4
+
+    def test_batch_scales_macs(self):
+        f1 = model.backend_features(0, batch=1)
+        f4 = model.backend_features(0, batch=4)
+        assert f4["m_conv"] == 4 * f1["m_conv"]
+        assert f4["n_conv"] == f1["n_conv"]  # layer counts don't scale

@@ -1,0 +1,121 @@
+//! Ablation benches: the design choices DESIGN.md calls out, each
+//! toggled independently and measured on the two canonical workloads —
+//! stationary (Vgg16 @ 16 Mbps, 600 frames) and the Fig 12(a) adaptation
+//! trace (800 frames).  Output: mean expected delay (lower is better) and
+//! final-phase oracle tracking.  Run: `cargo bench --bench ablations`.
+
+use ans::bandit::policy::{FrameContext, Privileged};
+use ans::bandit::{LinUcb, Policy, DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DRIFT};
+use ans::models::{features, zoo, FeatureScale, CONTEXT_DIM};
+use ans::simulator::{scenario, Environment};
+
+/// Drive a policy; returns (mean expected delay, final-100 oracle-match %).
+fn run(pol: &mut dyn Policy, env: &mut Environment, frames: usize) -> (f64, f64) {
+    let scale = FeatureScale::for_network(&env.net);
+    let contexts = features::context_vectors(&env.net, &scale);
+    let front: Vec<f64> = env.front_delays().to_vec();
+    let p_max = env.num_partitions();
+    let mut total = 0.0;
+    let mut tail_hits = 0usize;
+    for t in 0..frames {
+        env.tick(t);
+        let ctx = FrameContext {
+            t,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+        };
+        let p = pol.select(&ctx);
+        total += env.expected_total(p);
+        if p != p_max {
+            let d = env.observe_edge_delay(p);
+            pol.observe(p, &contexts[p], d);
+        }
+        if t >= frames - 100 && p == env.oracle_partition() {
+            tail_hits += 1;
+        }
+    }
+    (total / frames as f64, tail_hits as f64)
+}
+
+fn measure(name: &str, mk: &dyn Fn(usize) -> Box<dyn Policy>) {
+    let mut stat_pol = mk(600);
+    let (stat, stat_hits) = run(stat_pol.as_mut(), &mut Environment::simple(zoo::vgg16(), 16.0, 1), 600);
+    let mut adapt_pol = mk(800);
+    let (adapt, adapt_hits) =
+        run(adapt_pol.as_mut(), &mut scenario::fig12a(zoo::vgg16(), 5), 800);
+    println!(
+        "{name:<34} stationary {stat:7.1} ms (tail-match {stat_hits:3.0}%)   fig12a {adapt:7.1} ms (tail-match {adapt_hits:3.0}%)"
+    );
+}
+
+fn main() {
+    println!("ablations over μLinUCB design choices (oracle: stationary 286.4 ms):\n");
+
+    // The full operational configuration.
+    measure("ans_default (all features)", &|t| Box::new(LinUcb::ans_default(t)));
+
+    // − drift-reset: Algorithm 1 verbatim.
+    measure("- drift_reset (Algorithm 1)", &|t| Box::new(LinUcb::paper_default(t)));
+
+    // − warm-up sweep.
+    measure("- warmup sweep", &|t| Box::new(LinUcb::ans_default(t).without_warmup()));
+
+    // − forced sampling (AdaLinUCB: weights only) — trappable.
+    measure("- forced sampling (AdaLinUCB)", &|_| {
+        Box::new(LinUcb::ada(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA).with_drift_reset(DEFAULT_DRIFT))
+    });
+
+    // − weights − forcing (classic LinUCB) — the paper's trap case.
+    measure("- weights - forcing (LinUCB)", &|_| {
+        Box::new(LinUcb::classic(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA))
+    });
+
+    // Unknown-T phase-doubling schedule instead of known T.
+    measure("phase-doubling (unknown T)", &|_| {
+        Box::new(
+            LinUcb::mu_linucb_unknown_t(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, 50)
+                .with_drift_reset(DEFAULT_DRIFT)
+                .with_auto_scale(),
+        )
+    });
+
+    // Sliding window instead of drift-reset.
+    measure("window(150) instead of drift", &|t| {
+        Box::new(LinUcb::paper_default(t).with_window(150))
+    });
+
+    // μ sensitivity.
+    for mu in [0.1, 0.4] {
+        measure(&format!("mu = {mu}"), &|t| {
+            Box::new(
+                LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, mu, t)
+                    .with_drift_reset(DEFAULT_DRIFT)
+                    .with_auto_scale(),
+            )
+        });
+    }
+
+    // α sensitivity.
+    for alpha in [30.0, 1000.0] {
+        measure(&format!("alpha = {alpha}"), &|t| {
+            Box::new(
+                LinUcb::mu_linucb(CONTEXT_DIM, alpha, DEFAULT_BETA, 0.25, t)
+                    .with_drift_reset(DEFAULT_DRIFT)
+                    .with_auto_scale(),
+            )
+        });
+    }
+
+    // β sensitivity (the ridge-prior scale analysis of DESIGN.md §4).
+    for beta in [1.0, 0.0001] {
+        measure(&format!("beta = {beta}"), &|t| {
+            Box::new(
+                LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, beta, 0.25, t)
+                    .with_drift_reset(DEFAULT_DRIFT)
+                    .with_auto_scale(),
+            )
+        });
+    }
+}

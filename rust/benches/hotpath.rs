@@ -1,0 +1,98 @@
+//! Hot-path micro-benchmarks (§Perf, L3): the per-frame decision cost of
+//! μLinUCB, its components, and the supporting substrates.  The paper's
+//! §3.2 complexity analysis claims the per-frame cost is "negligible
+//! compared to regular deep inference" — these benches quantify that on
+//! this machine.  Custom harness (criterion is unavailable offline); see
+//! `ans::util::bench`.
+
+use ans::bandit::linalg::RidgeState;
+use ans::bandit::policy::{FrameContext, Privileged};
+use ans::bandit::{LinUcb, Policy};
+use ans::models::{features, zoo, FeatureScale, CONTEXT_DIM};
+use ans::util::bench::Bench;
+use ans::util::rng::Rng;
+use ans::video::{ssim, stream::VideoStream};
+
+fn main() {
+    let mut b = Bench::from_env().with_samples(50);
+
+    // --- the per-frame decision hot path -------------------------------
+    let net = zoo::vgg16();
+    let scale = FeatureScale::for_network(&net);
+    let contexts = features::context_vectors(&net, &scale);
+    let front: Vec<f64> = (0..=net.num_partitions()).map(|p| p as f64).collect();
+    let mut rng = Rng::new(1);
+
+    let mut pol = LinUcb::paper_default(100_000);
+    // Pre-train so the bench measures steady state, not warm-up branches.
+    for p in 0..net.num_partitions() {
+        pol.observe(p, &contexts[p], rng.uniform(10.0, 500.0));
+    }
+    let mut t = net.num_partitions() + 1;
+    b.run("decide/mu_linucb_select_22_arms", || {
+        let ctx = FrameContext {
+            t,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged { rate_mbps: 16.0, expected_totals: None },
+        };
+        t += 1;
+        pol.select(&ctx)
+    });
+
+    let x = contexts[3];
+    b.run("decide/observe_update_d7", || {
+        pol.observe(3, &x, 123.4);
+    });
+
+    // --- linalg substrate ----------------------------------------------
+    let mut ridge = RidgeState::new(CONTEXT_DIM, 0.01);
+    let xs: Vec<[f64; CONTEXT_DIM]> = (0..64)
+        .map(|_| std::array::from_fn(|_| rng.uniform(0.0, 1.0)))
+        .collect();
+    for v in &xs {
+        ridge.update(v, rng.uniform(0.0, 100.0));
+    }
+    b.run("linalg/sherman_morrison_update", || {
+        ridge.update(&xs[0], 42.0);
+        ridge.downdate(&xs[0], 42.0);
+    });
+    b.run("linalg/theta_solve", || ridge.theta());
+    b.run("linalg/confidence_quadform", || ridge.confidence_sq(&xs[1]));
+    b.run("linalg/cholesky_7x7", || ridge.a.cholesky().unwrap());
+
+    // --- feature construction -------------------------------------------
+    b.run("features/context_vectors_vgg16", || features::context_vectors(&net, &scale));
+
+    // --- video substrate -------------------------------------------------
+    let mut vs = VideoStream::new(64, 64, 7);
+    let a = vs.next_frame();
+    let c = vs.next_frame();
+    b.run("video/frame_generation_64x64", || vs.next_frame());
+    b.run("video/mean_ssim_64x64", || ssim::mean_ssim(&a, &c));
+
+    // --- end-to-end simulated frame -------------------------------------
+    let mut env = ans::simulator::Environment::simple(zoo::vgg16(), 16.0, 3);
+    let mut pol2 = LinUcb::paper_default(100_000);
+    let mut tt = 0usize;
+    b.run("frame/full_simulated_frame", || {
+        env.tick(tt);
+        let ctx = FrameContext {
+            t: tt,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+        };
+        let p = pol2.select(&ctx);
+        if p != net.num_partitions() {
+            let d = env.observe_edge_delay(p);
+            pol2.observe(p, &contexts[p], d);
+        }
+        tt += 1;
+        p
+    });
+
+    b.write_csv("hotpath.csv").expect("writing bench_results/hotpath.csv");
+}

@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating every table and figure of the paper's
+//! evaluation (DESIGN.md §5).  One exhibit per paper artifact; pass a
+//! substring filter to run a subset, e.g. `cargo bench --bench
+//! paper_experiments -- fig11`.  CSVs land in `bench_results/`.
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "all".to_string());
+    if let Err(e) = ans::coordinator::exhibits::run_all(&filter) {
+        eprintln!("exhibits failed: {e:#}");
+        std::process::exit(1);
+    }
+}

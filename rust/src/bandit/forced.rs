@@ -1,0 +1,192 @@
+//! Forced-sampling schedules (paper §3.2, Mitigation #2 and Fig 8).
+//!
+//! With a known horizon T, the schedule is F = {t | t = n·⌊T^μ⌋}: one
+//! forced frame every T^μ frames, giving Theorem 1's
+//! max{O(T^{0.5+μ} log T), O(T^{1−μ})} regret (sublinear for μ ∈ (0, ½),
+//! order-optimal at μ = 0.25).
+//!
+//! With an unknown horizon, the phase-doubling construction runs the
+//! known-T schedule inside phases of length T_i = 2^i·T_0, so the forced
+//! interval T_i^μ stretches as confidence accumulates (Fig 8's
+//! increasingly sparse ticks) while keeping the sublinear guarantee.
+
+/// A forced-sampling schedule over frame indices.
+#[derive(Debug, Clone)]
+pub enum ForcedSchedule {
+    /// Known horizon: forced every `interval` = ⌊T^μ⌋ frames.
+    KnownHorizon { interval: usize },
+    /// Unknown horizon: phases of length T_i = 2^i·T_0, interval ⌊T_i^μ⌋.
+    PhaseDoubling { t0: usize, mu: f64 },
+}
+
+impl ForcedSchedule {
+    /// Known-T schedule with the paper's parameterization.
+    pub fn known(horizon: usize, mu: f64) -> ForcedSchedule {
+        assert!(horizon > 0, "horizon must be positive");
+        assert!((0.0..1.0).contains(&mu), "μ must be in [0,1), got {mu}");
+        let interval = (horizon as f64).powf(mu).floor().max(1.0) as usize;
+        ForcedSchedule::KnownHorizon { interval }
+    }
+
+    /// Unknown-T phase-doubling schedule.
+    pub fn phase_doubling(t0: usize, mu: f64) -> ForcedSchedule {
+        assert!(t0 > 0, "T0 must be positive");
+        assert!((0.0..1.0).contains(&mu));
+        ForcedSchedule::PhaseDoubling { t0, mu }
+    }
+
+    /// Is frame `t` (0-based) a forced-sampling frame?
+    ///
+    /// Frame 0 is never forced: with A = βI the learner has maximal
+    /// uncertainty everywhere and forcing adds nothing.
+    pub fn is_forced(&self, t: usize) -> bool {
+        if t == 0 {
+            return false;
+        }
+        match self {
+            ForcedSchedule::KnownHorizon { interval } => t % interval == 0,
+            ForcedSchedule::PhaseDoubling { t0, mu } => {
+                let (_, offset, len) = phase_of(t, *t0);
+                let interval = (len as f64).powf(*mu).floor().max(1.0) as usize;
+                offset % interval == 0 && offset > 0
+            }
+        }
+    }
+
+    /// Number of forced frames in `0..horizon` (theory: ~T^{1−μ}).
+    pub fn count_forced(&self, horizon: usize) -> usize {
+        (0..horizon).filter(|&t| self.is_forced(t)).count()
+    }
+}
+
+/// Locate frame `t` in the doubling phase structure: phase i covers
+/// `[T0(2^i − 1), T0(2^{i+1} − 1))` with length T_i = 2^i·T0.
+/// Returns (phase index, offset within phase, phase length).
+fn phase_of(t: usize, t0: usize) -> (usize, usize, usize) {
+    let mut start = 0usize;
+    let mut len = t0;
+    let mut i = 0;
+    loop {
+        if t < start + len {
+            return (i, t - start, len);
+        }
+        start += len;
+        len *= 2;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall, Shrink};
+
+    #[test]
+    fn known_horizon_interval() {
+        // T = 10000, μ = 0.25 -> interval 10.
+        let f = ForcedSchedule::known(10_000, 0.25);
+        assert!(matches!(f, ForcedSchedule::KnownHorizon { interval: 10 }));
+        assert!(!f.is_forced(0));
+        assert!(f.is_forced(10));
+        assert!(!f.is_forced(11));
+        assert!(f.is_forced(9990));
+    }
+
+    #[test]
+    fn forced_count_matches_theory() {
+        // ~T/⌊T^μ⌋ = T^{1−μ} forced frames.
+        let t = 10_000;
+        let f = ForcedSchedule::known(t, 0.25);
+        let count = f.count_forced(t);
+        let expect = t / 10 - 1; // frame 0 excluded
+        assert_eq!(count, expect);
+    }
+
+    #[test]
+    fn mu_zero_forces_every_frame() {
+        let f = ForcedSchedule::known(100, 0.0);
+        assert_eq!(f.count_forced(100), 99); // all but frame 0
+    }
+
+    #[test]
+    fn larger_mu_means_fewer_forced() {
+        let t = 4096;
+        let lo = ForcedSchedule::known(t, 0.1).count_forced(t);
+        let hi = ForcedSchedule::known(t, 0.45).count_forced(t);
+        assert!(lo > hi, "{lo} vs {hi}");
+    }
+
+    #[test]
+    fn phase_of_structure() {
+        // T0 = 100: phase 0 = [0,100), phase 1 = [100,300), phase 2 = [300,700).
+        assert_eq!(phase_of(0, 100), (0, 0, 100));
+        assert_eq!(phase_of(99, 100), (0, 99, 100));
+        assert_eq!(phase_of(100, 100), (1, 0, 200));
+        assert_eq!(phase_of(299, 100), (1, 199, 200));
+        assert_eq!(phase_of(300, 100), (2, 0, 400));
+    }
+
+    #[test]
+    fn phase_doubling_gets_sparser() {
+        // Forced density inside later phases must be lower (Fig 8).
+        let f = ForcedSchedule::phase_doubling(64, 0.25);
+        let phase0: usize = (0..64).filter(|&t| f.is_forced(t)).count();
+        let phase3_start = 64 * (8 - 1); // phases 0..2 cover 64+128+256
+        let phase3_len = 64 * 8;
+        let phase3: usize =
+            (phase3_start..phase3_start + phase3_len).filter(|&t| f.is_forced(t)).count();
+        let d0 = phase0 as f64 / 64.0;
+        let d3 = phase3 as f64 / phase3_len as f64;
+        assert!(d3 < d0, "density {d0} -> {d3}");
+    }
+
+    #[test]
+    fn prop_forced_frames_recur_within_interval() {
+        // In any window of length `interval`, exactly one forced frame
+        // occurs (known-horizon schedule) — the learner is never starved.
+        forall(
+            7,
+            30,
+            |rng| 100 + rng.below(5000),
+            |&horizon| {
+                let f = ForcedSchedule::known(horizon, 0.25);
+                let interval = match f {
+                    ForcedSchedule::KnownHorizon { interval } => interval,
+                    _ => unreachable!(),
+                };
+                for w in (interval..horizon.min(2000)).step_by(interval) {
+                    let count = (w..w + interval).filter(|&t| f.is_forced(t)).count();
+                    ensure(count == 1, format!("window at {w} has {count} forced"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    impl Shrink for (usize, f64) {}
+
+    #[test]
+    fn prop_phase_doubling_never_starves() {
+        // Gap between consecutive forced frames inside the first 8 phases
+        // is bounded by the current phase interval (+1 phase boundary).
+        forall(
+            8,
+            20,
+            |rng| (8 + rng.below(100), 0.1 + rng.f64() * 0.35),
+            |&(t0, mu)| {
+                let f = ForcedSchedule::phase_doubling(t0, mu);
+                let horizon = t0 * 255; // 8 phases
+                let forced: Vec<usize> = (0..horizon).filter(|&t| f.is_forced(t)).collect();
+                ensure(!forced.is_empty(), "no forced frames at all")?;
+                let max_interval = ((t0 * 128) as f64).powf(mu).ceil() as usize;
+                for w in forced.windows(2) {
+                    ensure(
+                        w[1] - w[0] <= 2 * max_interval + 2,
+                        format!("gap {} at t={} exceeds bound", w[1] - w[0], w[0]),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,503 @@
+//! Small dense linear algebra for the bandit hot path (d = 7).
+//!
+//! μLinUCB needs, per frame: θ̂ = A⁻¹ b, quadratic forms xᵀA⁻¹x for every
+//! arm, and the rank-1 update A ← A + xxᵀ.  We keep **A⁻¹ incrementally**
+//! via Sherman–Morrison, so the per-frame cost is O(d²) per arm with no
+//! O(d³) inversion — this is the §Perf-critical path (the paper's claimed
+//! "ultra-lightweight" property).  A Cholesky solve is kept alongside as
+//! the slow-but-simple oracle for property tests.
+
+/// Dense square matrix, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub d: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(d: usize) -> Mat {
+        Mat { d, data: vec![0.0; d * d] }
+    }
+
+    /// β·I (the ridge prior A₀ = βI of Algorithm 1, line 4).
+    pub fn scaled_identity(d: usize, beta: f64) -> Mat {
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            m[(i, i)] = beta;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.d + c]
+    }
+
+    /// y = M x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.d];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = M x into a caller-provided buffer (hot path: no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.d);
+        assert_eq!(y.len(), self.d);
+        for r in 0..self.d {
+            let row = &self.data[r * self.d..(r + 1) * self.d];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Symmetric rank-1 update: M ← M + xxᵀ.
+    pub fn rank1_update(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.d);
+        for r in 0..self.d {
+            for c in 0..self.d {
+                self.data[r * self.d + c] += x[r] * x[c];
+            }
+        }
+    }
+
+    /// Quadratic form xᵀ M x (allocation-free: row-wise accumulation).
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.d);
+        let mut acc = 0.0;
+        for r in 0..self.d {
+            let row = &self.data[r * self.d..(r + 1) * self.d];
+            acc += x[r] * dot(row, x);
+        }
+        acc
+    }
+
+    /// Cholesky factorization M = LLᵀ (M must be symmetric positive
+    /// definite).  Returns the lower factor; errors on non-PD input.
+    pub fn cholesky(&self) -> Result<Mat, String> {
+        let d = self.d;
+        let mut l = Mat::zeros(d);
+        for i in 0..d {
+            for j in 0..=i {
+                let mut sum = self.at(i, j);
+                for k in 0..j {
+                    sum -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(format!("not positive definite (pivot {i}: {sum})"));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l.at(j, j);
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve M x = rhs via Cholesky (the property-test oracle).
+    pub fn solve(&self, rhs: &[f64]) -> Result<Vec<f64>, String> {
+        let l = self.cholesky()?;
+        let d = self.d;
+        // Forward: L y = rhs.
+        let mut y = vec![0.0; d];
+        for i in 0..d {
+            let mut sum = rhs[i];
+            for k in 0..i {
+                sum -= l.at(i, k) * y[k];
+            }
+            y[i] = sum / l.at(i, i);
+        }
+        // Backward: Lᵀ x = y.
+        let mut x = vec![0.0; d];
+        for i in (0..d).rev() {
+            let mut sum = y[i];
+            for k in i + 1..d {
+                sum -= l.at(k, i) * x[k];
+            }
+            x[i] = sum / l.at(i, i);
+        }
+        Ok(x)
+    }
+
+    /// Dense inverse via Cholesky solves (oracle / non-hot-path use).
+    pub fn inverse(&self) -> Result<Mat, String> {
+        let d = self.d;
+        let mut inv = Mat::zeros(d);
+        let mut e = vec![0.0; d];
+        for c in 0..d {
+            e[c] = 1.0;
+            let col = self.solve(&e)?;
+            e[c] = 0.0;
+            for r in 0..d {
+                inv[(r, c)] = col[r];
+            }
+        }
+        Ok(inv)
+    }
+
+    /// log det M via Cholesky (used by diagnostics).
+    pub fn log_det(&self) -> Result<f64, String> {
+        let l = self.cholesky()?;
+        Ok((0..self.d).map(|i| l.at(i, i).ln()).sum::<f64>() * 2.0)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.d + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.d + c]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Ridge-regression state with an incrementally maintained inverse:
+/// A = βI + Σ xxᵀ, b = Σ x·y, A⁻¹ kept via Sherman–Morrison.
+///
+/// Numerical hygiene: rank-1 updates drift; with a weak prior (β ≪ 1) and
+/// thousands of update/downdate pairs (sliding-window mode) the drift can
+/// corrupt A⁻¹ enough to zero out confidence widths — which silently kills
+/// exploration.  Every [`REFRESH_INTERVAL`] rank-1 ops the inverse is
+/// recomputed exactly from A via Cholesky (O(d³) with d = 7: negligible).
+#[derive(Debug, Clone)]
+pub struct RidgeState {
+    pub d: usize,
+    pub a: Mat,
+    pub a_inv: Mat,
+    pub b: Vec<f64>,
+    /// Scratch buffer (A⁻¹x) reused across updates to avoid allocation.
+    scratch: Vec<f64>,
+    /// Rank-1 operations since the last exact refresh.
+    ops_since_refresh: usize,
+}
+
+/// Rank-1 ops between exact inverse recomputations.
+pub const REFRESH_INTERVAL: usize = 64;
+
+impl RidgeState {
+    pub fn new(d: usize, beta: f64) -> RidgeState {
+        assert!(beta > 0.0, "ridge prior β must be positive");
+        RidgeState {
+            d,
+            a: Mat::scaled_identity(d, beta),
+            a_inv: Mat::scaled_identity(d, 1.0 / beta),
+            b: vec![0.0; d],
+            scratch: vec![0.0; d],
+            ops_since_refresh: 0,
+        }
+    }
+
+    /// Exact refresh of A⁻¹ from A (called periodically and on demand).
+    pub fn refresh_inverse(&mut self) {
+        self.a_inv = self.a.inverse().expect("A must stay positive definite");
+        self.ops_since_refresh = 0;
+    }
+
+    fn maybe_refresh(&mut self) {
+        self.ops_since_refresh += 1;
+        if self.ops_since_refresh >= REFRESH_INTERVAL {
+            self.refresh_inverse();
+        }
+    }
+
+    /// Incorporate an observation (x, y):
+    /// A += xxᵀ;  b += x·y;  A⁻¹ via Sherman–Morrison:
+    /// A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x).
+    pub fn update(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.d);
+        self.a.rank1_update(x);
+        for (bi, xi) in self.b.iter_mut().zip(x) {
+            *bi += xi * y;
+        }
+        let ax = self.a_inv.matvec(x);
+        let denom = 1.0 + dot(x, &ax);
+        self.scratch.copy_from_slice(&ax);
+        for r in 0..self.d {
+            for c in 0..self.d {
+                self.a_inv.data[r * self.d + c] -= self.scratch[r] * self.scratch[c] / denom;
+            }
+        }
+        self.maybe_refresh();
+    }
+
+    /// Remove a previously incorporated observation (sliding-window mode):
+    /// A −= xxᵀ; b −= x·y; A⁻¹ via the negative-sign Sherman–Morrison
+    /// A⁻¹ ← A⁻¹ + (A⁻¹x)(A⁻¹x)ᵀ / (1 − xᵀA⁻¹x).
+    /// Only valid for (x, y) pairs that were `update`d before — then
+    /// A − xxᵀ ⪰ βI stays positive definite and the denominator is > 0.
+    pub fn downdate(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.d);
+        for r in 0..self.d {
+            for c in 0..self.d {
+                self.a.data[r * self.d + c] -= x[r] * x[c];
+            }
+        }
+        for (bi, xi) in self.b.iter_mut().zip(x) {
+            *bi -= xi * y;
+        }
+        let ax = self.a_inv.matvec(x);
+        let denom = 1.0 - dot(x, &ax);
+        if denom <= 1e-9 {
+            // Drifted inverse made the downdate look degenerate; A itself is
+            // already downdated above, so an exact refresh restores truth.
+            self.refresh_inverse();
+            return;
+        }
+        self.scratch.copy_from_slice(&ax);
+        for r in 0..self.d {
+            for c in 0..self.d {
+                self.a_inv.data[r * self.d + c] += self.scratch[r] * self.scratch[c] / denom;
+            }
+        }
+        self.maybe_refresh();
+    }
+
+    /// θ̂ = A⁻¹ b.
+    pub fn theta(&self) -> Vec<f64> {
+        self.a_inv.matvec(&self.b)
+    }
+
+    /// θ̂ = A⁻¹ b into a caller-provided buffer (hot path).
+    pub fn theta_into(&self, out: &mut [f64]) {
+        self.a_inv.matvec_into(&self.b, out);
+    }
+
+    /// Confidence width² = xᵀ A⁻¹ x (non-negative for PD A by construction).
+    pub fn confidence_sq(&self, x: &[f64]) -> f64 {
+        self.a_inv.quad_form(x).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_close, forall, Shrink};
+    use crate::util::rng::Rng;
+
+    fn random_vec(rng: &mut Rng, d: usize) -> Vec<f64> {
+        (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn identity_solve() {
+        let m = Mat::scaled_identity(4, 2.0);
+        let x = m.solve(&[2.0, 4.0, 6.0, 8.0]).unwrap();
+        for (got, want) in x.iter().zip([1.0, 2.0, 3.0, 4.0]) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut m = Mat::scaled_identity(2, 1.0);
+        m[(0, 0)] = -1.0;
+        assert!(m.cholesky().is_err());
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        // Random SPD matrix: A = βI + Σ xxᵀ.
+        let mut rng = Rng::new(1);
+        let d = 5;
+        let mut a = Mat::scaled_identity(d, 0.5);
+        for _ in 0..8 {
+            let x = random_vec(&mut rng, d);
+            a.rank1_update(&x);
+        }
+        let rhs = random_vec(&mut rng, d);
+        let x = a.solve(&rhs).unwrap();
+        let back = a.matvec(&x);
+        for (u, v) in back.iter().zip(&rhs) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn quad_form_matches_manual() {
+        let mut m = Mat::scaled_identity(2, 1.0);
+        m[(0, 1)] = 0.5;
+        m[(1, 0)] = 0.5;
+        // [1,2] M [1,2]^T = 1 + 0.5*2 + 0.5*2 + 4 = 7
+        assert!((m.quad_form(&[1.0, 2.0]) - 7.0).abs() < 1e-12);
+    }
+
+    #[derive(Debug, Clone)]
+    struct UpdateSeq(Vec<(Vec<f64>, f64)>);
+
+    impl Shrink for UpdateSeq {
+        fn shrink(&self) -> Vec<UpdateSeq> {
+            let mut out = Vec::new();
+            if self.0.len() > 1 {
+                out.push(UpdateSeq(self.0[..self.0.len() / 2].to_vec()));
+                out.push(UpdateSeq(self.0[1..].to_vec()));
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_sherman_morrison_matches_fresh_inverse() {
+        // After any update sequence, the incrementally maintained A⁻¹
+        // equals the freshly computed inverse of A.
+        forall(
+            42,
+            40,
+            |rng| {
+                let n = 1 + rng.below(20);
+                UpdateSeq(
+                    (0..n)
+                        .map(|_| (random_vec(rng, 7), rng.uniform(0.0, 100.0)))
+                        .collect(),
+                )
+            },
+            |seq| {
+                let mut st = RidgeState::new(7, 1.0);
+                for (x, y) in &seq.0 {
+                    st.update(x, *y);
+                }
+                let fresh = st.a.inverse().map_err(|e| e)?;
+                for (u, v) in st.a_inv.data.iter().zip(&fresh.data) {
+                    ensure_close(*u, *v, 1e-8, "A_inv entry")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_theta_matches_cholesky_solve() {
+        forall(
+            43,
+            40,
+            |rng| {
+                let n = 1 + rng.below(15);
+                UpdateSeq(
+                    (0..n)
+                        .map(|_| (random_vec(rng, 7), rng.uniform(0.0, 50.0)))
+                        .collect(),
+                )
+            },
+            |seq| {
+                let mut st = RidgeState::new(7, 2.0);
+                for (x, y) in &seq.0 {
+                    st.update(x, *y);
+                }
+                let fast = st.theta();
+                let slow = st.a.solve(&st.b).map_err(|e| e)?;
+                for (u, v) in fast.iter().zip(&slow) {
+                    ensure_close(*u, *v, 1e-8, "theta")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_a_stays_positive_definite_and_confidence_shrinks() {
+        forall(
+            44,
+            30,
+            |rng| {
+                let n = 2 + rng.below(12);
+                UpdateSeq((0..n).map(|_| (random_vec(rng, 7), 0.0)).collect())
+            },
+            |seq| {
+                let mut st = RidgeState::new(7, 1.0);
+                let probe: Vec<f64> = seq.0[0].0.clone();
+                let mut last_conf = st.confidence_sq(&probe);
+                for (x, y) in &seq.0 {
+                    st.update(x, *y);
+                    ensure(st.a.cholesky().is_ok(), "A lost positive definiteness")?;
+                    let conf = st.confidence_sq(&probe);
+                    ensure(
+                        conf <= last_conf + 1e-9,
+                        format!("confidence grew: {last_conf} -> {conf}"),
+                    )?;
+                    last_conf = conf;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ridge_recovers_linear_model() {
+        // y = θ*·x exactly; after enough diverse samples θ̂ ≈ θ*.
+        let theta_star = [1.0, -2.0, 0.5, 3.0, 0.0, -1.0, 2.0];
+        let mut st = RidgeState::new(7, 0.01);
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let x = random_vec(&mut rng, 7);
+            let y = dot(&x, &theta_star);
+            st.update(&x, y);
+        }
+        for (est, truth) in st.theta().iter().zip(&theta_star) {
+            assert!((est - truth).abs() < 0.01, "{est} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn prop_downdate_inverts_update() {
+        // update(x₁..xₙ) then downdate(x₁..xₖ) ≡ fresh state with xₖ₊₁..xₙ.
+        forall(
+            45,
+            30,
+            |rng| {
+                let n = 2 + rng.below(12);
+                UpdateSeq(
+                    (0..n)
+                        .map(|_| (random_vec(rng, 7), rng.uniform(0.0, 50.0)))
+                        .collect(),
+                )
+            },
+            |seq| {
+                let k = seq.0.len() / 2;
+                let mut full = RidgeState::new(7, 1.0);
+                for (x, y) in &seq.0 {
+                    full.update(x, *y);
+                }
+                for (x, y) in &seq.0[..k] {
+                    full.downdate(x, *y);
+                }
+                let mut fresh = RidgeState::new(7, 1.0);
+                for (x, y) in &seq.0[k..] {
+                    fresh.update(x, *y);
+                }
+                for (u, v) in full.a_inv.data.iter().zip(&fresh.a_inv.data) {
+                    ensure_close(*u, *v, 1e-7, "A_inv after downdate")?;
+                }
+                for (u, v) in full.theta().iter().zip(&fresh.theta()) {
+                    ensure_close(*u, *v, 1e-7, "theta after downdate")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn log_det_increases_with_updates() {
+        let mut st = RidgeState::new(3, 1.0);
+        let d0 = st.a.log_det().unwrap();
+        st.update(&[1.0, 2.0, 3.0], 0.0);
+        assert!(st.a.log_det().unwrap() > d0);
+    }
+}

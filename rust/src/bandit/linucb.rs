@@ -1,0 +1,559 @@
+//! The LinUCB family: classic LinUCB, AdaLinUCB, and the paper's μLinUCB.
+//!
+//! All three share the online ridge core (A = βI + Σxxᵀ, b = Σx·d^e,
+//! θ̂ = A⁻¹b) and the optimistic selection rule
+//!
+//! ```text
+//! p_t = argmin_p  d_p^f + θ̂ᵀx_p − α·√((1 − L_t)·x_pᵀ A⁻¹ x_p)
+//! ```
+//!
+//! differing in two switches that map exactly onto the paper's Mitigations:
+//!
+//! | policy    | frame weights L_t | forced sampling |
+//! |-----------|-------------------|-----------------|
+//! | LinUCB    | no (L_t ≡ 0)      | no              |
+//! | AdaLinUCB | yes               | no              |
+//! | μLinUCB   | yes               | yes             |
+//!
+//! Without forced sampling, the MO arm (x_P = 0: zero predicted delay,
+//! zero confidence width) is absorbing — once chosen, no feedback arrives,
+//! A and b freeze, and the same argmin repeats forever (Limitation #2).
+//! μLinUCB's schedule excludes p = P on forced frames, restoring learning.
+
+use super::forced::ForcedSchedule;
+use super::linalg::{dot, RidgeState};
+use super::policy::{FrameContext, Policy};
+use crate::models::FeatureVector;
+
+/// Shared implementation of the LinUCB family (see module docs).
+pub struct LinUcb {
+    name: String,
+    ridge: RidgeState,
+    /// Ridge prior (kept for drift resets).
+    beta: f64,
+    /// Confidence-width multiplier α (Lemma 1 sets the theoretical value;
+    /// in practice a tuned constant, as in the original LinUCB paper).
+    pub alpha: f64,
+    /// Apply frame weights L_t (Mitigation #1)?
+    use_weights: bool,
+    /// Forced-sampling schedule (Mitigation #2), if any.
+    forced: Option<ForcedSchedule>,
+    /// Scratch: scores per arm, reused across frames (no hot-path alloc).
+    scores: Vec<f64>,
+    /// Scratch: θ̂ buffer, reused across frames (no hot-path alloc).
+    theta_scratch: Vec<f64>,
+    /// Number of feedback observations incorporated.
+    n_obs: usize,
+    /// Sliding-window length in FRAMES: only observations made within the
+    /// last W frames stay in the ridge state (SW-LinUCB style).  `None` =
+    /// Algorithm 1 verbatim (cumulative).  Frame-based (not count-based)
+    /// aging matters: pure on-device frames produce no feedback, so a
+    /// count-based window can stretch over arbitrarily many frames and
+    /// pin stale-environment observations forever.  Frame aging bounds
+    /// staleness at W frames, matching the 20–80-frame adaptation the
+    /// paper reports in Fig 12 — see DESIGN.md §4.
+    window: Option<usize>,
+    /// FIFO of windowed observations with their frame stamps.
+    history: std::collections::VecDeque<(FeatureVector, f64, usize)>,
+    /// Frame index of the most recent select() (stamps observations).
+    current_frame: usize,
+    /// Drift detection: EMA of relative prediction residuals.  When the
+    /// model's own predictions go persistently wrong (environment change),
+    /// the learner resets and re-runs the warm-up sweep — which is what
+    /// produces the paper's 20–80-frame adaptation in Fig 12.  `None`
+    /// disables (Algorithm 1 verbatim).  This is an *operational
+    /// extension*, clearly flagged in DESIGN.md §4.
+    drift_threshold: Option<f64>,
+    drift_ema: f64,
+    drift_samples: usize,
+    /// Scale α by the environment's on-device delay (see [`REF_SCALE_MS`]).
+    auto_scale: bool,
+    /// Warm-up: next arm of the initial one-pass sweep over all
+    /// off-device arms.  Under the *theoretical* α of Lemma 1 the
+    /// confidence bonus dwarfs every prediction for the first ~P frames,
+    /// so LinUCB behaves exactly like a one-shot sweep of the arms; we
+    /// implement that phase explicitly, which is what gives the paper's
+    /// "accurate prediction in about 20 frames" (Fig 9, P ≈ 21) without
+    /// carrying a thousands-scale α into steady state.
+    warmup_next: Option<usize>,
+}
+
+/// Default ridge prior β.  Theory assumption (v) states β ≥ max{1, C_θ²}
+/// *for rewards normalized to O(1)*; our delays stay in ms (θ entries are
+/// O(10²..10³)), so the prior must be weak or predictions for small-norm
+/// arms (late partitions, |x|² ≈ 0.03) shrink toward zero and converge at
+/// O(1/β) observations.  β = 0.01 keeps A positive definite while letting
+/// a handful of samples pin each direction.
+pub const DEFAULT_BETA: f64 = 0.01;
+/// Default confidence multiplier.  Tuned on the Fig 12 adaptation traces:
+/// large enough that post-drift re-exploration finds the new optimum
+/// (including rehabilitating the EO arm after a bad-network phase), small
+/// enough that stationary-regime exploration overhead stays ~1%.
+pub const DEFAULT_ALPHA: f64 = 200.0;
+
+/// Default drift-reset threshold (EMA of relative prediction residuals).
+pub const DEFAULT_DRIFT: f64 = 0.25;
+
+/// Reference delay scale for [`LinUcb::with_auto_scale`]: DEFAULT_ALPHA is
+/// calibrated for environments whose on-device delay d_P^f is ~this many
+/// ms (the Vgg16/TX2 setting).  Auto-scaling multiplies α by
+/// d_P^f / REF_SCALE_MS so the exploration bonus stays proportionate on
+/// models whose delays are milliseconds (e.g. the real PartNet pipeline).
+pub const REF_SCALE_MS: f64 = 400.0;
+
+impl LinUcb {
+    /// Classic LinUCB (Chu et al. 2011): no weights, no forced sampling.
+    pub fn classic(d: usize, alpha: f64, beta: f64) -> LinUcb {
+        LinUcb {
+            name: "LinUCB".into(),
+            ridge: RidgeState::new(d, beta),
+            beta,
+            alpha,
+            use_weights: false,
+            forced: None,
+            scores: Vec::new(),
+            theta_scratch: vec![0.0; d],
+            n_obs: 0,
+            window: None,
+            history: std::collections::VecDeque::new(),
+            current_frame: 0,
+            drift_threshold: None,
+            drift_ema: 0.0,
+            drift_samples: 0,
+            auto_scale: false,
+            warmup_next: Some(0),
+        }
+    }
+
+    /// AdaLinUCB-style weighted variant: weights but no forced sampling.
+    pub fn ada(d: usize, alpha: f64, beta: f64) -> LinUcb {
+        LinUcb {
+            name: "AdaLinUCB".into(),
+            ridge: RidgeState::new(d, beta),
+            beta,
+            alpha,
+            use_weights: true,
+            forced: None,
+            scores: Vec::new(),
+            theta_scratch: vec![0.0; d],
+            n_obs: 0,
+            window: None,
+            history: std::collections::VecDeque::new(),
+            current_frame: 0,
+            drift_threshold: None,
+            drift_ema: 0.0,
+            drift_samples: 0,
+            auto_scale: false,
+            warmup_next: Some(0),
+        }
+    }
+
+    /// μLinUCB with a known horizon T (Algorithm 1).
+    pub fn mu_linucb(d: usize, alpha: f64, beta: f64, mu: f64, horizon: usize) -> LinUcb {
+        LinUcb {
+            name: format!("muLinUCB(mu={mu})"),
+            ridge: RidgeState::new(d, beta),
+            beta,
+            alpha,
+            use_weights: true,
+            forced: Some(ForcedSchedule::known(horizon, mu)),
+            scores: Vec::new(),
+            theta_scratch: vec![0.0; d],
+            n_obs: 0,
+            window: None,
+            history: std::collections::VecDeque::new(),
+            current_frame: 0,
+            drift_threshold: None,
+            drift_ema: 0.0,
+            drift_samples: 0,
+            auto_scale: false,
+            warmup_next: Some(0),
+        }
+    }
+
+    /// μLinUCB for unknown T: phase-doubling forced sampling (§3.2).
+    pub fn mu_linucb_unknown_t(d: usize, alpha: f64, beta: f64, mu: f64, t0: usize) -> LinUcb {
+        LinUcb {
+            name: format!("muLinUCB-phase(mu={mu})"),
+            ridge: RidgeState::new(d, beta),
+            beta,
+            alpha,
+            use_weights: true,
+            forced: Some(ForcedSchedule::phase_doubling(t0, mu)),
+            scores: Vec::new(),
+            theta_scratch: vec![0.0; d],
+            n_obs: 0,
+            window: None,
+            history: std::collections::VecDeque::new(),
+            current_frame: 0,
+            drift_threshold: None,
+            drift_ema: 0.0,
+            drift_samples: 0,
+            auto_scale: false,
+            warmup_next: Some(0),
+        }
+    }
+
+    /// The paper's defaults for a given horizon (μ = 0.25 minimizes the
+    /// regret order at O(T^0.75 log T)).  Algorithm 1 verbatim.
+    pub fn paper_default(horizon: usize) -> LinUcb {
+        LinUcb::mu_linucb(crate::models::CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, horizon)
+    }
+
+    /// The recommended operational configuration: Algorithm 1 plus
+    /// drift-reset and delay-scale-proportionate exploration
+    /// (DESIGN.md §4).  This is what `ans serve`, the examples and the
+    /// adaptation exhibits run.
+    pub fn ans_default(horizon: usize) -> LinUcb {
+        LinUcb::paper_default(horizon).with_drift_reset(DEFAULT_DRIFT).with_auto_scale()
+    }
+
+    /// Scale the exploration bonus by d_P^f / [`REF_SCALE_MS`].
+    pub fn with_auto_scale(mut self) -> LinUcb {
+        self.auto_scale = true;
+        self
+    }
+
+    /// Disable the warm-up sweep (ablation benches).
+    pub fn without_warmup(mut self) -> LinUcb {
+        self.warmup_next = None;
+        self
+    }
+
+    /// Enable sliding-window forgetting with the given window length.
+    pub fn with_window(mut self, window: usize) -> LinUcb {
+        assert!(window > 0, "window must be positive");
+        self.window = Some(window);
+        self
+    }
+
+    /// Enable drift-reset: when the EMA of relative prediction residuals
+    /// exceeds `threshold` (e.g. 0.5), reset the ridge state and re-run
+    /// the warm-up sweep.  Pairs naturally with forced sampling: on-device
+    /// phases still produce the forced observations that reveal a change.
+    pub fn with_drift_reset(mut self, threshold: f64) -> LinUcb {
+        assert!(threshold > 0.0);
+        self.drift_threshold = Some(threshold);
+        self
+    }
+
+    /// Forget the stale model (drift response).  Deliberately does NOT
+    /// re-enter the deterministic warm-up sweep: a full sweep pays every
+    /// arm's cost unconditionally (ruinous if the environment that
+    /// triggered the reset is a 1 Mbps uplink and some arms ship
+    /// megabytes); optimistic UCB exploration from the fresh prior
+    /// re-identifies the optimum in ~10–20 targeted samples instead.
+    fn reset_learning(&mut self) {
+        self.ridge = RidgeState::new(self.ridge.d, self.beta);
+        self.history.clear();
+        self.n_obs = 0;
+        self.drift_ema = 0.0;
+        self.drift_samples = 0;
+    }
+
+    /// Current estimate θ̂ (diagnostics / EXPERIMENTS.md).
+    pub fn theta(&self) -> Vec<f64> {
+        self.ridge.theta()
+    }
+
+    /// Number of feedback observations incorporated so far.
+    pub fn observations(&self) -> usize {
+        self.n_obs
+    }
+}
+
+impl LinUcb {
+    fn score_arms(&mut self, ctx: &FrameContext) {
+        // Allocation-free: θ̂ lands in a reused scratch buffer.
+        let mut theta = std::mem::take(&mut self.theta_scratch);
+        self.ridge.theta_into(&mut theta);
+        let l_t = if self.use_weights { ctx.weight } else { 0.0 };
+        let conf_scale = (1.0 - l_t).max(0.0);
+        let alpha = if self.auto_scale {
+            // d_P^f (the known on-device delay) anchors the delay scale.
+            let scale = ctx.front_delays[ctx.max_partition()] / REF_SCALE_MS;
+            self.alpha * scale.max(1e-3)
+        } else {
+            self.alpha
+        };
+        self.scores.clear();
+        for (p, x) in ctx.contexts.iter().enumerate() {
+            let pred = dot(&theta, x);
+            let width = (conf_scale * self.ridge.confidence_sq(x)).max(0.0).sqrt();
+            self.scores.push(ctx.front_delays[p] + pred - alpha * width);
+        }
+        self.theta_scratch = theta;
+    }
+}
+
+impl Policy for LinUcb {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn select(&mut self, ctx: &FrameContext) -> usize {
+        let p_max = ctx.max_partition();
+        self.current_frame = ctx.t;
+        // Frame-aged eviction: drop observations older than the window.
+        if let Some(w) = self.window {
+            while let Some(&(x, y, t0)) = self.history.front() {
+                if t0 + w <= ctx.t {
+                    self.ridge.downdate(&x, y);
+                    self.history.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        // Warm-up sweep: sample every off-device arm once, in order.
+        if let Some(next) = self.warmup_next {
+            if next < p_max {
+                self.warmup_next = Some(next + 1);
+                return next;
+            }
+            self.warmup_next = None;
+        }
+        self.score_arms(ctx);
+        let exclude_mo = self
+            .forced
+            .as_ref()
+            .map(|f| f.is_forced(ctx.t))
+            .unwrap_or(false);
+        let limit = if exclude_mo { p_max } else { p_max + 1 };
+        let mut best = 0;
+        for p in 1..limit {
+            if self.scores[p] < self.scores[best] {
+                best = p;
+            }
+        }
+        best
+    }
+
+    fn observe(&mut self, _p: usize, x: &FeatureVector, edge_delay_ms: f64) {
+        // Drift check BEFORE the update: how wrong was the current model
+        // about this observation?
+        if let Some(threshold) = self.drift_threshold {
+            if self.warmup_next.is_none() && self.n_obs >= 5 {
+                let pred = dot(&self.ridge.theta(), x);
+                let scale = edge_delay_ms.abs().max(pred.abs()).max(10.0);
+                let rel = (edge_delay_ms - pred).abs() / scale;
+                self.drift_ema = if self.drift_samples == 0 {
+                    rel
+                } else {
+                    0.5 * rel + 0.5 * self.drift_ema
+                };
+                self.drift_samples += 1;
+                if self.drift_samples >= 3 && self.drift_ema > threshold {
+                    self.reset_learning();
+                    // The triggering observation is still valid data for the
+                    // fresh model.
+                    self.ridge.update(x, edge_delay_ms);
+                    self.n_obs = 1;
+                    return;
+                }
+            }
+        }
+        self.ridge.update(x, edge_delay_ms);
+        self.n_obs += 1;
+        if self.window.is_some() {
+            self.history.push_back((*x, edge_delay_ms, self.current_frame));
+        }
+    }
+
+    fn predict_edge_delay(&self, x: &FeatureVector) -> Option<f64> {
+        Some(dot(&self.ridge.theta(), x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::policy::Privileged;
+    use crate::models::{features, zoo, FeatureScale, CONTEXT_DIM};
+    use crate::simulator::Environment;
+
+    /// Drive a policy against a simulator environment for `frames` frames;
+    /// returns the chosen partitions.
+    fn run(policy: &mut dyn Policy, env: &mut Environment, frames: usize) -> Vec<usize> {
+        let scale = FeatureScale::for_network(&env.net);
+        let contexts = features::context_vectors(&env.net, &scale);
+        let front: Vec<f64> = env.front_delays().to_vec();
+        let p_max = env.num_partitions();
+        let mut chosen = Vec::with_capacity(frames);
+        for t in 0..frames {
+            env.tick(t);
+            let ctx = FrameContext {
+                t,
+                weight: 0.2,
+                front_delays: &front,
+                contexts: &contexts,
+                privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+            };
+            let p = policy.select(&ctx);
+            if p != p_max {
+                let d_e = env.observe_edge_delay(p);
+                policy.observe(p, &contexts[p], d_e);
+            }
+            chosen.push(p);
+        }
+        chosen
+    }
+
+    #[test]
+    fn mu_linucb_converges_to_oracle_on_stationary_env() {
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 1);
+        let oracle = env.oracle_partition();
+        let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, 300);
+        let chosen = run(&mut pol, &mut env, 300);
+        // Converged: the expected delay of the tail choices is within a few
+        // percent of the oracle's (adjacent arms can tie near the optimum).
+        let oracle_delay = env.expected_total(oracle);
+        let tail_avg: f64 =
+            chosen[250..].iter().map(|&p| env.expected_total(p)).sum::<f64>() / 50.0;
+        assert!(
+            tail_avg <= oracle_delay * 1.08,
+            "tail avg {tail_avg} vs oracle {oracle_delay} (arm {oracle})"
+        );
+    }
+
+    #[test]
+    fn linucb_gets_trapped_in_mo() {
+        // Bad network: MO is optimal. Classic LinUCB picks P eventually and
+        // then NEVER leaves (Limitation #2) — even after the rate recovers.
+        let net = zoo::vgg16();
+        let p_max = net.num_partitions();
+        let mut env = crate::simulator::Environment::new(
+            net,
+            crate::simulator::DEVICE_MAXN,
+            crate::simulator::EDGE_GPU,
+            crate::simulator::Workload::constant(1.0),
+            crate::simulator::Uplink::steps(vec![(0, 1.0), (150, 50.0)]),
+            7,
+        );
+        let mut pol = LinUcb::classic(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA);
+        let chosen = run(&mut pol, &mut env, 400);
+        let first_mo = chosen.iter().position(|&p| p == p_max).expect("LinUCB never chose MO");
+        assert!(
+            chosen[first_mo..].iter().all(|&p| p == p_max),
+            "LinUCB escaped MO after frame {first_mo} — should be absorbing"
+        );
+        // ...and it stays stuck after the network recovers at t=150.
+        assert!(first_mo < 150, "first MO at {first_mo}");
+    }
+
+    #[test]
+    fn mu_linucb_escapes_mo_after_recovery() {
+        // Same trace shape as above: the operational config (drift-reset)
+        // adapts back after the rate recovers (the Fig 12 behaviour).
+        let net = zoo::vgg16();
+        let p_max = net.num_partitions();
+        let mut env = crate::simulator::Environment::new(
+            net,
+            crate::simulator::DEVICE_MAXN,
+            crate::simulator::EDGE_GPU,
+            crate::simulator::Workload::constant(1.0),
+            crate::simulator::Uplink::steps(vec![(0, 1.0), (150, 50.0)]),
+            7,
+        );
+        let mut pol = LinUcb::ans_default(600);
+        let chosen = run(&mut pol, &mut env, 600);
+        // During the bad phase it should mostly sit at MO...
+        let mo_share = chosen[50..150].iter().filter(|&&p| p == p_max).count();
+        assert!(mo_share > 70, "MO share in bad phase: {mo_share}/100");
+        // ...and well after recovery it must leave MO on most frames.
+        let tail_off_device = chosen[500..].iter().filter(|&&p| p != p_max).count();
+        assert!(tail_off_device >= 90, "after recovery off-device {tail_off_device}/100");
+    }
+
+    #[test]
+    fn forced_frames_never_pick_mo() {
+        let mut env = Environment::simple(zoo::vgg16(), 1.0, 3); // MO optimal
+        let horizon = 200;
+        let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, horizon);
+        let sched = ForcedSchedule::known(horizon, 0.25);
+        let chosen = run(&mut pol, &mut env, horizon);
+        let p_max = env.num_partitions();
+        for (t, &p) in chosen.iter().enumerate() {
+            if sched.is_forced(t) {
+                assert_ne!(p, p_max, "forced frame {t} picked MO");
+            }
+        }
+    }
+
+    #[test]
+    fn learned_theta_predicts_delays() {
+        // After convergence the linear model predicts d^e accurately
+        // (the Table 1 / Fig 9 property).
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 5);
+        let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.2, 500);
+        let chosen = run(&mut pol, &mut env, 500);
+        let scale = FeatureScale::for_network(&env.net);
+        // Error is evaluated on the arms the policy actually visits (the
+        // Table 1 metric): a bandit never refines arms it has ruled out.
+        let mut visits = vec![0usize; env.num_partitions() + 1];
+        for &p in &chosen {
+            visits[p] += 1;
+        }
+        let mut worst = 0.0f64;
+        for p in 0..env.num_partitions() {
+            if visits[p] < 5 {
+                continue;
+            }
+            let x = features::context_vector(&env.net, p, &scale);
+            let pred = pol.predict_edge_delay(&x).unwrap();
+            let truth = env.expected_edge_delay(p);
+            let err = (pred - truth).abs() / truth.max(1.0);
+            worst = worst.max(err);
+        }
+        assert!(worst < 0.15, "worst relative prediction error {worst}");
+    }
+
+    #[test]
+    fn key_frames_exploit_more_than_non_key() {
+        // With a high weight, the confidence bonus shrinks: a key frame
+        // must pick the greedy arm while a non-key frame explores.
+        let mut pol = LinUcb::ada(CONTEXT_DIM, 50.0, 1.0).without_warmup();
+        // Feed one observation so arm A (context e0) looks good.
+        let mut e0 = [0.0; CONTEXT_DIM];
+        e0[0] = 1.0;
+        let mut e1 = [0.0; CONTEXT_DIM];
+        e1[1] = 1.0;
+        pol.observe(0, &e0, 10.0); // arm 0 measured
+        let contexts = vec![e0, e1];
+        // Arm 1 is unexplored but its front-end cost makes it look worse
+        // on predictions alone; only the exploration bonus can pick it.
+        let front = vec![0.0, 8.0];
+        let priv_ = Privileged { rate_mbps: 10.0, expected_totals: None };
+        // Non-key frame (low weight): exploration bonus dominates -> arm 1.
+        let c_explore = FrameContext {
+            t: 1,
+            weight: 0.01,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: priv_,
+        };
+        assert_eq!(pol.select(&c_explore), 1);
+        // Key frame (weight ~1): bonus vanishes -> greedy arm 0.
+        let c_exploit = FrameContext {
+            t: 2,
+            weight: 0.999,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: priv_,
+        };
+        assert_eq!(pol.select(&c_exploit), 0);
+    }
+
+    #[test]
+    fn classic_ignores_weights() {
+        let mut a = LinUcb::classic(CONTEXT_DIM, 10.0, 1.0).without_warmup();
+        let mut e0 = [0.0; CONTEXT_DIM];
+        e0[0] = 1.0;
+        let contexts = vec![e0, [0.0; CONTEXT_DIM]];
+        let front = vec![0.0, 100.0];
+        let priv_ = Privileged { rate_mbps: 10.0, expected_totals: None };
+        let lo = FrameContext { t: 0, weight: 0.01, front_delays: &front, contexts: &contexts, privileged: priv_ };
+        let hi = FrameContext { t: 0, weight: 0.99, front_delays: &front, contexts: &contexts, privileged: priv_ };
+        assert_eq!(a.select(&lo), a.select(&hi), "classic LinUCB must ignore L_t");
+    }
+}

@@ -1,0 +1,102 @@
+//! Online-learning policies for partition-point selection.
+//!
+//! The paper's contribution lives here: [`linucb::LinUcb`] implements the
+//! whole LinUCB family — classic LinUCB (which the paper shows gets
+//! *trapped* in on-device processing), AdaLinUCB (weighted, still
+//! trappable) and **μLinUCB** (weighted + forced sampling, Algorithm 1,
+//! Theorem 1).  [`neurosurgeon::Neurosurgeon`] is the offline layer-wise
+//! profiling baseline, and [`policy`] holds the static EO/MO/Fixed/Oracle
+//! baselines plus the [`policy::Policy`] trait everything implements.
+//!
+//! [`linalg`] carries the d=7 ridge-regression hot path (Sherman–Morrison
+//! incremental inverse — the §Perf-critical code), and [`forced`] the
+//! forced-sampling schedules (known-T and phase-doubling).
+
+pub mod forced;
+pub mod linalg;
+pub mod linucb;
+pub mod neurosurgeon;
+pub mod policy;
+
+pub use forced::ForcedSchedule;
+pub use linucb::{LinUcb, DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DRIFT};
+pub use neurosurgeon::Neurosurgeon;
+pub use policy::{EdgeOnly, Fixed, FrameContext, MobileOnly, Oracle, Policy, Privileged};
+
+use crate::models::{Network, CONTEXT_DIM};
+use crate::simulator::ComputeProfile;
+
+/// Construct a policy by name (CLI / config entry point).
+///
+/// `horizon` parameterizes μLinUCB's forced-sampling schedule; `alpha`/
+/// `mu` fall back to the paper defaults when `None`.
+pub fn by_name(
+    name: &str,
+    net: &Network,
+    device: &ComputeProfile,
+    edge: &ComputeProfile,
+    horizon: usize,
+    alpha: Option<f64>,
+    mu: Option<f64>,
+) -> Option<Box<dyn Policy>> {
+    let alpha = alpha.unwrap_or(DEFAULT_ALPHA);
+    let mu = mu.unwrap_or(0.25);
+    match name {
+        "mu-linucb" | "ans" | "mulinucb" => Some(Box::new(
+            LinUcb::mu_linucb(CONTEXT_DIM, alpha, DEFAULT_BETA, mu, horizon)
+                .with_drift_reset(DEFAULT_DRIFT),
+        )),
+        "mu-linucb-pure" => {
+            // Algorithm 1 verbatim (no drift-reset) — ablation target.
+            Some(Box::new(LinUcb::mu_linucb(CONTEXT_DIM, alpha, DEFAULT_BETA, mu, horizon)))
+        }
+        "mu-linucb-phase" | "ans-unknown-t" => {
+            Some(Box::new(LinUcb::mu_linucb_unknown_t(CONTEXT_DIM, alpha, DEFAULT_BETA, mu, 50)))
+        }
+        "linucb" => Some(Box::new(LinUcb::classic(CONTEXT_DIM, alpha, DEFAULT_BETA))),
+        "adalinucb" => Some(Box::new(LinUcb::ada(CONTEXT_DIM, alpha, DEFAULT_BETA))),
+        "neurosurgeon" => Some(Box::new(Neurosurgeon::new(net, device, edge, 1.0, crate::simulator::DEFAULT_RTT_MS))),
+        "oracle" => Some(Box::new(Oracle)),
+        "eo" => Some(Box::new(EdgeOnly)),
+        "mo" => Some(Box::new(MobileOnly)),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`] (for CLI help / validation).
+pub const POLICY_NAMES: &[&str] = &[
+    "mu-linucb",
+    "mu-linucb-pure",
+    "mu-linucb-phase",
+    "linucb",
+    "adalinucb",
+    "neurosurgeon",
+    "oracle",
+    "eo",
+    "mo",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::simulator::{DEVICE_MAXN, EDGE_GPU};
+
+    #[test]
+    fn factory_builds_every_listed_policy() {
+        let net = zoo::vgg16();
+        for name in POLICY_NAMES {
+            let p = by_name(name, &net, &DEVICE_MAXN, &EDGE_GPU, 100, None, None);
+            assert!(p.is_some(), "factory failed for {name}");
+        }
+        assert!(by_name("bogus", &net, &DEVICE_MAXN, &EDGE_GPU, 100, None, None).is_none());
+    }
+
+    #[test]
+    fn factory_applies_overrides() {
+        let net = zoo::vgg16();
+        let p = by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, 100, Some(5.0), Some(0.4))
+            .unwrap();
+        assert!(p.name().contains("0.4"), "{}", p.name());
+    }
+}

@@ -1,0 +1,203 @@
+//! The partition-selection policy interface and the static baselines.
+//!
+//! Per frame, a policy sees the **decision context** — the known front-end
+//! delay profile, the contextual features of every partition point, and
+//! the frame weight L_t — selects a partition point, and (when the choice
+//! was not pure on-device processing) later receives the aggregate edge
+//! delay feedback `d_p^e`.  That is all the information the paper's
+//! limited-feedback setting grants ANS.
+//!
+//! Some baselines are *privileged*: Oracle reads the true expected delays
+//! and Neurosurgeon reads real-time system parameters (the paper grants it
+//! those, noting the comparison "is not fair to ANS").  Privileged fields
+//! live in [`Privileged`] so it is explicit which policy touches what.
+
+use crate::models::FeatureVector;
+
+/// Per-frame decision context (the device-side view).
+#[derive(Debug, Clone, Copy)]
+pub struct FrameContext<'a> {
+    /// Frame index t (0-based).
+    pub t: usize,
+    /// Frame weight L_t ∈ (0,1); larger = more important (key frame).
+    pub weight: f64,
+    /// d_p^f for every p ∈ 0..=P (known via on-device profiling).
+    pub front_delays: &'a [f64],
+    /// x_p for every p ∈ 0..=P (x_P is the zero vector).
+    pub contexts: &'a [FeatureVector],
+    /// Information hidden from ANS but available to privileged baselines.
+    pub privileged: Privileged<'a>,
+}
+
+/// Ground-truth values only privileged baselines may read.
+#[derive(Debug, Clone, Copy)]
+pub struct Privileged<'a> {
+    /// Real-time uplink rate (Neurosurgeon's real-time input).
+    pub rate_mbps: f64,
+    /// True expected end-to-end delay per p (Oracle only).
+    pub expected_totals: Option<&'a [f64]>,
+}
+
+impl<'a> FrameContext<'a> {
+    /// Number of partition points P (arms are 0..=P).
+    pub fn max_partition(&self) -> usize {
+        self.front_delays.len() - 1
+    }
+}
+
+/// A partition-selection policy.
+pub trait Policy: Send {
+    fn name(&self) -> &str;
+
+    /// Choose a partition point for this frame.
+    fn select(&mut self, ctx: &FrameContext) -> usize;
+
+    /// Feedback: observed aggregate edge delay for the pulled arm.
+    /// Never called for p = P (MO produces no offloading feedback).
+    fn observe(&mut self, _p: usize, _x: &FeatureVector, _edge_delay_ms: f64) {}
+
+    /// Predicted edge-offloading delay for a context, if this policy
+    /// maintains a prediction model (Table 1 / Fig 9 evaluation hook).
+    fn predict_edge_delay(&self, _x: &FeatureVector) -> Option<f64> {
+        None
+    }
+}
+
+/// Pure Edge Offloading: always p = 0.
+pub struct EdgeOnly;
+
+impl Policy for EdgeOnly {
+    fn name(&self) -> &str {
+        "EO"
+    }
+
+    fn select(&mut self, _ctx: &FrameContext) -> usize {
+        0
+    }
+}
+
+/// Pure On-device Processing: always p = P.
+pub struct MobileOnly;
+
+impl Policy for MobileOnly {
+    fn name(&self) -> &str {
+        "MO"
+    }
+
+    fn select(&mut self, ctx: &FrameContext) -> usize {
+        ctx.max_partition()
+    }
+}
+
+/// Always the same fixed partition (Fig 1/2/3 sweeps).
+pub struct Fixed {
+    pub p: usize,
+    name: String,
+}
+
+impl Fixed {
+    pub fn new(p: usize) -> Fixed {
+        Fixed { p, name: format!("fixed({p})") }
+    }
+}
+
+impl Policy for Fixed {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn select(&mut self, ctx: &FrameContext) -> usize {
+        assert!(self.p <= ctx.max_partition(), "fixed partition out of range");
+        self.p
+    }
+}
+
+/// Oracle: reads the true expected delays (privileged; regret reference).
+pub struct Oracle;
+
+impl Policy for Oracle {
+    fn name(&self) -> &str {
+        "Oracle"
+    }
+
+    fn select(&mut self, ctx: &FrameContext) -> usize {
+        let totals = ctx
+            .privileged
+            .expected_totals
+            .expect("Oracle needs privileged expected_totals");
+        argmin(totals)
+    }
+}
+
+/// Index of the minimum value (first on ties).
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::CONTEXT_DIM;
+
+    fn ctx<'a>(
+        front: &'a [f64],
+        contexts: &'a [FeatureVector],
+        totals: Option<&'a [f64]>,
+    ) -> FrameContext<'a> {
+        FrameContext {
+            t: 0,
+            weight: 0.2,
+            front_delays: front,
+            contexts,
+            privileged: Privileged { rate_mbps: 10.0, expected_totals: totals },
+        }
+    }
+
+    #[test]
+    fn static_policies() {
+        let front = [0.0, 1.0, 2.0];
+        let xs = [[0.0; CONTEXT_DIM]; 3];
+        let c = ctx(&front, &xs, None);
+        assert_eq!(EdgeOnly.select(&c), 0);
+        assert_eq!(MobileOnly.select(&c), 2);
+        assert_eq!(Fixed::new(1).select(&c), 1);
+    }
+
+    #[test]
+    fn oracle_picks_true_minimum() {
+        let front = [0.0, 1.0, 2.0];
+        let xs = [[0.0; CONTEXT_DIM]; 3];
+        let totals = [5.0, 3.0, 9.0];
+        let c = ctx(&front, &xs, Some(&totals));
+        assert_eq!(Oracle.select(&c), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "privileged")]
+    fn oracle_requires_privileged_info() {
+        let front = [0.0, 1.0];
+        let xs = [[0.0; CONTEXT_DIM]; 2];
+        let c = ctx(&front, &xs, None);
+        Oracle.select(&c);
+    }
+
+    #[test]
+    fn argmin_first_on_ties() {
+        assert_eq!(argmin(&[2.0, 1.0, 1.0]), 1);
+        assert_eq!(argmin(&[0.5]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn fixed_bounds_checked() {
+        let front = [0.0, 1.0];
+        let xs = [[0.0; CONTEXT_DIM]; 2];
+        Fixed::new(5).select(&ctx(&front, &xs, None));
+    }
+}

@@ -1,0 +1,655 @@
+//! Paper-exhibit regenerators: one function per table/figure of the
+//! evaluation (DESIGN.md §5 maps exhibit → modules).  Each prints the
+//! paper's rows/series as an aligned table and writes a CSV under
+//! `bench_results/`.  Absolute numbers come from the calibrated simulator
+//! (DESIGN.md §4); the claims that must hold are the *shapes*: who wins,
+//! by what factor, where the crossovers sit.
+
+use super::experiment::{run, FrameSource};
+use super::metrics::Metrics;
+use crate::bandit::{self, LinUcb, Policy};
+use crate::models::{zoo, Network, CONTEXT_DIM};
+use crate::simulator::{
+    scenario, Environment, Uplink, Workload, DEVICE_MAXN, DEVICE_MAXQ, EDGE_CPU, EDGE_GPU,
+};
+use crate::util::stats::mean;
+use crate::video::Weights;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Run every exhibit whose name contains `filter` ("all" = everything).
+pub fn run_all(filter: &str) -> Result<()> {
+    let all: &[(&str, fn() -> Result<String>)] = &[
+        ("fig1_partition_sweep", fig1),
+        ("fig2_edge_capability", fig2),
+        ("fig3_network_conditions", fig3),
+        ("table1_prediction_error", table1),
+        ("fig9_error_convergence", fig9),
+        ("fig10_delay_convergence", fig10),
+        ("fig11_delay_improvement", fig11),
+        ("fig12_adaptation_traces", fig12),
+        ("fig13_change_frequency", fig13),
+        ("fig14_forced_sampling_tradeoff", fig14),
+        ("fig15_key_frame_weights", fig15),
+        ("fig16_model_compression", fig16),
+        ("fig17_low_end_devices", fig17),
+    ];
+    std::fs::create_dir_all("bench_results")?;
+    let mut ran = 0;
+    for (name, f) in all {
+        if filter != "all" && !name.contains(filter) {
+            continue;
+        }
+        println!("\n=== {name} ===");
+        let csv = f()?;
+        let path = format!("bench_results/{name}.csv");
+        std::fs::write(&path, csv)?;
+        println!("[csv -> {path}]");
+        ran += 1;
+    }
+    anyhow::ensure!(ran > 0, "no exhibit matches `{filter}`");
+    Ok(())
+}
+
+/// Mean expected delay of a fixed partition p in a fresh environment.
+fn fixed_delay(env: &Environment, p: usize) -> f64 {
+    env.expected_total(p)
+}
+
+/// Drive a fresh policy over a fresh environment; returns metrics.
+fn drive(mut policy: Box<dyn Policy>, mut env: Environment, frames: usize) -> Metrics {
+    let mut source = FrameSource::uniform();
+    run(policy.as_mut(), &mut env, frames, &mut source)
+}
+
+/// μLinUCB in the recommended operational configuration (Algorithm 1 +
+/// drift-reset; DESIGN.md §4) — used by every exhibit that runs ANS over
+/// a possibly non-stationary trace.
+fn ans_policy(frames: usize) -> Box<dyn Policy> {
+    Box::new(LinUcb::ans_default(frames))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — end-to-end delay at every partition point (Vgg16, 12 Mbps).
+// ---------------------------------------------------------------------------
+fn fig1() -> Result<String> {
+    let env = Environment::simple(zoo::vgg16(), 12.0, 1);
+    let net = &env.net;
+    let mut csv = String::from("partition,label,delay_ms\n");
+    println!("Vgg16 @ 12 Mbps uplink, GPU edge — delay per partition point:");
+    let mut best = (0usize, f64::INFINITY);
+    for p in 0..=net.num_partitions() {
+        let d = fixed_delay(&env, p);
+        if d < best.1 {
+            best = (p, d);
+        }
+        println!("  p={p:2} {:<12} {:8.1} ms", net.partition_label(p), d);
+        writeln!(csv, "{p},{},{d:.3}", net.partition_label(p)).unwrap();
+    }
+    let eo = fixed_delay(&env, 0);
+    let mo = fixed_delay(&env, net.num_partitions());
+    let gain = 100.0 * (1.0 - best.1 / eo.min(mo));
+    println!(
+        "best: p={} ({}) at {:.1} ms -> {:.1}% below min(EO {:.1}, MO {:.1})  [paper: fc1, 29.64%]",
+        best.0,
+        net.partition_label(best.0),
+        best.1,
+        gain,
+        eo,
+        mo
+    );
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 — partition sweep under high vs low edge capability.
+// ---------------------------------------------------------------------------
+fn fig2() -> Result<String> {
+    let net = zoo::vgg16();
+    let mk = |edge, load| {
+        Environment::new(
+            zoo::vgg16(),
+            DEVICE_MAXN,
+            edge,
+            Workload::constant(load),
+            Uplink::constant(12.0),
+            1,
+        )
+    };
+    let hi = mk(EDGE_GPU, 1.0);
+    let lo = mk(EDGE_CPU, 4.0);
+    let mut csv = String::from("partition,label,high_capability_ms,low_capability_ms\n");
+    println!("Vgg16 @ 12 Mbps — high (GPU idle) vs low (CPU loaded 4x) edge:");
+    for p in 0..=net.num_partitions() {
+        let dh = fixed_delay(&hi, p);
+        let dl = fixed_delay(&lo, p);
+        println!("  p={p:2} {:<12} {dh:9.1} ms   {dl:9.1} ms", net.partition_label(p));
+        writeln!(csv, "{p},{},{dh:.3},{dl:.3}", net.partition_label(p)).unwrap();
+    }
+    println!(
+        "optimum: high-capability p={} | low-capability p={}  [paper: weaker edge -> later partition / MO]",
+        hi.oracle_partition(),
+        lo.oracle_partition()
+    );
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — partition sweep under high/medium/low uplink rate.
+// ---------------------------------------------------------------------------
+fn fig3() -> Result<String> {
+    let net = zoo::vgg16();
+    let rates = [50.0, 16.0, 4.0];
+    let envs: Vec<Environment> =
+        rates.iter().map(|&r| Environment::simple(zoo::vgg16(), r, 1)).collect();
+    let mut csv = String::from("partition,label,high_50mbps,medium_16mbps,low_4mbps\n");
+    println!("Vgg16, GPU edge — delay per partition at 50 / 16 / 4 Mbps:");
+    for p in 0..=net.num_partitions() {
+        let ds: Vec<f64> = envs.iter().map(|e| fixed_delay(e, p)).collect();
+        println!(
+            "  p={p:2} {:<12} {:9.1} {:9.1} {:9.1}",
+            net.partition_label(p),
+            ds[0],
+            ds[1],
+            ds[2]
+        );
+        writeln!(csv, "{p},{},{:.3},{:.3},{:.3}", net.partition_label(p), ds[0], ds[1], ds[2])
+            .unwrap();
+    }
+    for (r, e) in rates.iter().zip(&envs) {
+        println!("  optimum @ {r:4.0} Mbps: p={} ({})", e.oracle_partition(),
+            net.partition_label(e.oracle_partition()));
+    }
+    println!("[paper: lower uplink rate pushes the partition point later]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — prediction error of ANS vs the layer-wise method.
+// ---------------------------------------------------------------------------
+fn table1() -> Result<String> {
+    let rates = [("Low", 4.0), ("Medium", 16.0), ("High", 50.0)];
+    let edges = [("GPU", EDGE_GPU), ("CPU", EDGE_CPU)];
+    let models: [(&str, fn() -> Network); 3] =
+        [("Vgg16", zoo::vgg16 as fn() -> Network), ("YoLo", zoo::yolo), ("ResNet", zoo::resnet50)];
+    let frames = 300;
+    let mut csv = String::from("condition,model,ans_error_pct,layerwise_error_pct\n");
+    println!("Edge-offloading delay prediction error after {frames} frames (all off-device arms):");
+    println!("{:<12} {:>8} | {:>8} {:>10}", "condition", "model", "ANS", "layer-wise");
+    for (ename, edge) in &edges {
+        for (rname, rate) in &rates {
+            for (mname, mk) in &models {
+                let net = mk();
+                let mut env = Environment::new(
+                    mk(),
+                    DEVICE_MAXN,
+                    *edge,
+                    Workload::constant(1.0),
+                    Uplink::constant(*rate),
+                    7,
+                );
+                let mut ans = LinUcb::paper_default(frames);
+                let mut source = FrameSource::uniform();
+                run(&mut ans, &mut env, frames, &mut source);
+                // Prediction-model quality after 300 frames: MAPE of d̂^e
+                // over every off-device partition point.  The layer-wise
+                // estimate pays the isolation penalty (no fusion credit),
+                // which dominates wherever the back-end leg dominates.
+                let scale = crate::models::FeatureScale::for_network(&net);
+                let surgeon = bandit::Neurosurgeon::new(&net, &DEVICE_MAXN, edge, 1.0, crate::simulator::DEFAULT_RTT_MS);
+                let (mut ans_errs, mut lw_errs) = (Vec::new(), Vec::new());
+                for p in 0..net.num_partitions() {
+                    let truth = env.expected_edge_delay(p);
+                    if truth <= 0.0 {
+                        continue;
+                    }
+                    let x = crate::models::features::context_vector(&net, p, &scale);
+                    let pa = ans.predict_edge_delay(&x).unwrap();
+                    ans_errs.push((pa - truth).abs() / truth);
+                    let pl = surgeon.estimate_edge_delay(p, *rate);
+                    lw_errs.push((pl - truth).abs() / truth);
+                }
+                let (ea, el) = (100.0 * mean(&ans_errs), 100.0 * mean(&lw_errs));
+                println!("{:<12} {:>8} | {:7.2}% {:9.2}%", format!("{rname}/{ename}"), mname, ea, el);
+                writeln!(csv, "{rname}/{ename},{mname},{ea:.3},{el:.3}").unwrap();
+            }
+        }
+    }
+    println!("[paper: ANS 0.4–10%, layer-wise 9–52%; gap largest at high rates]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9 — online prediction error vs frames analyzed.
+// ---------------------------------------------------------------------------
+fn fig9() -> Result<String> {
+    let seeds = [1u64, 2, 3, 4, 5];
+    let frames = 300;
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    for &seed in &seeds {
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, seed);
+        let mut ans = LinUcb::paper_default(frames);
+        let mut source = FrameSource::uniform();
+        let m = run(&mut ans, &mut env, frames, &mut source);
+        // Error of the *chosen arm's* prediction at each frame.
+        let mut series = vec![f64::NAN; frames];
+        for (t, e) in m.prediction_errors() {
+            series[t] = e;
+        }
+        curves.push(series);
+    }
+    let mut csv = String::from("frame,mean_rel_error\n");
+    println!("ANS online prediction error (Vgg16, 16 Mbps, {} seeds):", seeds.len());
+    let checkpoints = [1usize, 5, 10, 20, 40, 80, 150, 299];
+    for t in 0..frames {
+        let vals: Vec<f64> = curves.iter().filter_map(|c| {
+            if c[t].is_nan() { None } else { Some(c[t]) }
+        }).collect();
+        if vals.is_empty() {
+            continue;
+        }
+        let e = mean(&vals);
+        writeln!(csv, "{t},{e:.5}").unwrap();
+        if checkpoints.contains(&t) {
+            println!("  frame {t:3}: {:6.2}%", 100.0 * e);
+        }
+    }
+    println!("[paper: accurate (<5%) in about 20 frames]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — runtime average end-to-end delay: ANS vs Oracle vs Neurosurgeon.
+// ---------------------------------------------------------------------------
+fn fig10() -> Result<String> {
+    let frames = 300;
+    // The edge is a CPU at 2x load while Neurosurgeon's offline profile
+    // assumed an idle machine (the paper's realism gap): the stale profile
+    // underestimates the back-end and picks an offloading split when pure
+    // on-device is actually optimal.  ANS learns the truth from feedback.
+    let mk_env = |seed| {
+        Environment::new(
+            zoo::vgg16(),
+            DEVICE_MAXN,
+            EDGE_CPU,
+            Workload::constant(2.0),
+            Uplink::constant(12.0),
+            seed,
+        )
+    };
+    let net = zoo::vgg16();
+    let policies: Vec<(&str, Box<dyn Policy>)> = vec![
+        ("ANS", Box::new(LinUcb::paper_default(frames))),
+        ("Oracle", Box::new(bandit::Oracle)),
+        (
+            "Neurosurgeon",
+            Box::new(bandit::Neurosurgeon::new(
+                &net,
+                &DEVICE_MAXN,
+                &EDGE_CPU,
+                1.0,
+                crate::simulator::DEFAULT_RTT_MS,
+            )),
+        ),
+    ];
+    let mut cum = Vec::new();
+    let mut inst = Vec::new();
+    for (name, policy) in policies {
+        let m = drive(policy, mk_env(3), frames);
+        cum.push((name, m.running_average_delay()));
+        inst.push(m.records.iter().map(|r| r.expected_ms).collect::<Vec<f64>>());
+    }
+    let mut csv = String::from(
+        "frame,ans_cum_ms,oracle_cum_ms,neurosurgeon_cum_ms,ans_trail30_ms\n",
+    );
+    let trail30 = |xs: &[f64], t: usize| {
+        let lo = t.saturating_sub(29);
+        mean(&xs[lo..=t])
+    };
+    for t in 0..frames {
+        writeln!(
+            csv,
+            "{t},{:.3},{:.3},{:.3},{:.3}",
+            cum[0].1[t],
+            cum[1].1[t],
+            cum[2].1[t],
+            trail30(&inst[0], t)
+        )
+        .unwrap();
+    }
+    println!("End-to-end delay, cumulative average (Vgg16, 12 Mbps, CPU edge @2x load):");
+    println!(
+        "{:>7} {:>10} {:>10} {:>14} | {:>12}",
+        "frame", "ANS", "Oracle", "Neurosurgeon", "ANS trail-30"
+    );
+    for t in [9usize, 19, 39, 79, 159, 299] {
+        println!(
+            "{:>7} {:>9.1} {:>9.1} {:>13.1} | {:>11.1}",
+            t + 1,
+            cum[0].1[t],
+            cum[1].1[t],
+            cum[2].1[t],
+            trail30(&inst[0], t)
+        );
+    }
+    // Convergence: trailing per-frame delay within 10% of the oracle's
+    // (the cumulative average carries the one-off warm-up sweep forever —
+    // see EXPERIMENTS.md).
+    let conv = (0..frames)
+        .find(|&t| t > 30 && trail30(&inst[0], t) <= trail30(&inst[1], t) * 1.10);
+    println!("ANS (trailing-30) within 10% of Oracle from frame {conv:?}  [paper: ~80 frames]");
+    println!(
+        "Neurosurgeon steady-state vs Oracle: {:.1} vs {:.1} ms  [paper: Neurosurgeon above both]",
+        cum[2].1[frames - 1],
+        cum[1].1[frames - 1]
+    );
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 — MO / EO / ANS across uplink rates, per DNN; (d) best reduction.
+// ---------------------------------------------------------------------------
+fn fig11() -> Result<String> {
+    let rates = [4.0, 8.0, 12.0, 16.0, 25.0, 50.0];
+    let models: [(&str, fn() -> Network); 3] =
+        [("vgg16", zoo::vgg16 as fn() -> Network), ("yolo", zoo::yolo), ("resnet50", zoo::resnet50)];
+    let frames = 600;
+    let mut csv = String::from("model,rate_mbps,mo_ms,eo_ms,ans_ms,reduction_pct\n");
+    for (mname, mk) in &models {
+        println!("{mname} (GPU edge):");
+        println!("  {:>6} {:>10} {:>10} {:>10} {:>10}", "Mbps", "MO", "EO", "ANS", "gain%");
+        for &rate in &rates {
+            let env = Environment::simple(mk(), rate, 11);
+            let mo = fixed_delay(&env, env.num_partitions());
+            let eo = fixed_delay(&env, 0);
+            let m = drive(ans_policy(frames), Environment::simple(mk(), rate, 11), frames);
+            // Steady-state ANS delay (exclude the warm-up sweep).
+            let ans =
+                m.summary_range(frames / 2, frames, mk().num_partitions()).mean_delay_ms;
+            let gain = 100.0 * (1.0 - ans / mo.min(eo));
+            println!("  {rate:>6.0} {mo:>10.1} {eo:>10.1} {ans:>10.1} {gain:>9.1}%");
+            writeln!(csv, "{mname},{rate},{mo:.3},{eo:.3},{ans:.3},{gain:.2}").unwrap();
+        }
+    }
+    println!("[paper: low rate -> ANS≈MO; high rate -> ANS≈EO; mid rates -> ANS beats both]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — adaptation traces: (a) rate changes, (b) edge workload changes.
+// ---------------------------------------------------------------------------
+fn fig12() -> Result<String> {
+    let frames = scenario::FIG12_FRAMES;
+    let mut csv = String::from("trace,t,rate_or_load,ans_p,linucb_p,oracle_p\n");
+    for (trace, mk_env) in [
+        ("a_network", (|s| scenario::fig12a(zoo::vgg16(), s)) as fn(u64) -> Environment),
+        ("b_workload", |s| scenario::fig12b(zoo::vgg16(), s)),
+    ] {
+        let mut ans = LinUcb::ans_default(frames);
+        let mut lin = LinUcb::classic(CONTEXT_DIM, bandit::DEFAULT_ALPHA, bandit::DEFAULT_BETA);
+        let ma = {
+            let mut src = FrameSource::uniform();
+            run(&mut ans, &mut mk_env(5), frames, &mut src)
+        };
+        let ml = {
+            let mut src = FrameSource::uniform();
+            run(&mut lin, &mut mk_env(5), frames, &mut src)
+        };
+        let mut env = mk_env(5);
+        for t in 0..frames {
+            env.tick(t);
+            let knob =
+                if trace == "a_network" { env.current_rate_mbps() } else { env.current_load() };
+            writeln!(
+                csv,
+                "{trace},{t},{knob},{},{},{}",
+                ma.records[t].p, ml.records[t].p, ma.records[t].oracle_p
+            )
+            .unwrap();
+        }
+        // Phase-modal partitions.
+        println!("trace {trace}: modal partition per phase (ANS vs LinUCB vs oracle):");
+        for (lo, hi) in [(0usize, 150usize), (150, 390), (390, 630), (630, frames)] {
+            let modal = |m: &Metrics| {
+                let mut hist = std::collections::BTreeMap::new();
+                for r in &m.records[lo..hi] {
+                    *hist.entry(r.p).or_insert(0usize) += 1;
+                }
+                hist.into_iter().max_by_key(|(_, n)| *n).map(|(p, _)| p).unwrap()
+            };
+            env.tick((lo + hi) / 2);
+            println!(
+                "  frames {lo:3}..{hi:3}: ANS p={:2}  LinUCB p={:2}  oracle p={:2}",
+                modal(&ma),
+                modal(&ml),
+                env.oracle_partition()
+            );
+        }
+        let p_max = zoo::vgg16().num_partitions();
+        let linucb_stuck = ml.records[630..].iter().all(|r| r.p == p_max);
+        println!(
+            "  LinUCB stuck at MO in the final phase: {linucb_stuck}  [paper: trapped from ~frame 170]"
+        );
+    }
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13 — average delay vs environment change frequency P_f.
+// ---------------------------------------------------------------------------
+fn fig13() -> Result<String> {
+    let pfs = [0.001, 0.005, 0.01, 0.05, 0.1, 0.2];
+    let frames = 1000;
+    let seeds = [1u64, 2, 3];
+    let mut csv = String::from("p_f,ans_ms,mo_ms,eo_ms,oracle_ms\n");
+    println!("Two-state Markov network (50/5 Mbps), switch prob P_f per frame:");
+    println!("  {:>7} {:>9} {:>9} {:>9} {:>9}", "P_f", "ANS", "MO", "EO", "Oracle");
+    for &pf in &pfs {
+        let mut res = [0.0f64; 4];
+        for &seed in &seeds {
+            let mk = || scenario::fig13(zoo::vgg16(), pf, seed);
+            let p_max = zoo::vgg16().num_partitions();
+            res[0] += drive(ans_policy(frames), mk(), frames).summary(p_max).mean_delay_ms;
+            res[1] += drive(Box::new(bandit::MobileOnly), mk(), frames).summary(p_max).mean_delay_ms;
+            res[2] += drive(Box::new(bandit::EdgeOnly), mk(), frames).summary(p_max).mean_delay_ms;
+            res[3] += drive(Box::new(bandit::Oracle), mk(), frames).summary(p_max).mean_delay_ms;
+        }
+        for r in res.iter_mut() {
+            *r /= seeds.len() as f64;
+        }
+        println!(
+            "  {pf:>7.3} {:>9.1} {:>9.1} {:>9.1} {:>9.1}",
+            res[0], res[1], res[2], res[3]
+        );
+        writeln!(csv, "{pf},{:.3},{:.3},{:.3},{:.3}", res[0], res[1], res[2], res[3]).unwrap();
+    }
+    println!("[paper: ANS excellent at low P_f; can fall behind MO when switching is very fast]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 14 — forced-sampling frequency tradeoff.
+// ---------------------------------------------------------------------------
+fn fig14() -> Result<String> {
+    let mus = [0.10, 0.20, 0.25, 0.30, 0.40, 0.49];
+    let t1 = 400usize;
+    let frames = 1200usize;
+    let seeds = [1u64, 2, 3, 4];
+    let mut csv = String::from("mu,adaptation_frames,incumbent_delay_ms\n");
+    println!("Bad network (MO optimal) until t1={t1}, then 16 Mbps; μ controls forcing:");
+    println!("  {:>5} {:>18} {:>22}", "μ", "adaptation frames", "incumbent delay (ms)");
+    for &mu in &mus {
+        let (mut adapt_sum, mut adapt_n, mut incumbent_sum) = (0.0, 0usize, 0.0);
+        for &seed in &seeds {
+            let (mut env, _) = scenario::fig14(zoo::vgg16(), t1, frames, seed);
+            let mut pol =
+                LinUcb::mu_linucb(CONTEXT_DIM, bandit::DEFAULT_ALPHA, bandit::DEFAULT_BETA, mu, frames)
+                    .with_drift_reset(bandit::linucb::DEFAULT_DRIFT);
+            let mut src = FrameSource::uniform();
+            let m = run(&mut pol, &mut env, frames, &mut src);
+            // Incumbent performance: mean delay in the stable bad phase
+            // (after warm-up, before the switch).
+            let p_max = zoo::vgg16().num_partitions();
+            incumbent_sum += m.summary_range(100, t1, p_max).mean_delay_ms;
+            // Adaptation: first frame ≥ t1 from which the *new* optimum is
+            // held for 20 consecutive frames.
+            env.tick(t1 + 1);
+            let target = env.oracle_partition();
+            let mut streak = 0;
+            for t in t1..frames {
+                if m.records[t].p == target {
+                    streak += 1;
+                    if streak >= 20 {
+                        adapt_sum += (t - 19 - t1) as f64;
+                        adapt_n += 1;
+                        break;
+                    }
+                } else {
+                    streak = 0;
+                }
+            }
+        }
+        let adapt = if adapt_n > 0 { adapt_sum / adapt_n as f64 } else { f64::NAN };
+        let incumbent = incumbent_sum / seeds.len() as f64;
+        println!("  {mu:>5.2} {adapt:>18.1} {incumbent:>22.1}   (adapted {adapt_n}/{} seeds)", seeds.len());
+        writeln!(csv, "{mu},{adapt:.2},{incumbent:.3}").unwrap();
+    }
+    println!("[paper: smaller μ -> faster adaptation but worse incumbent performance]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 15 — differentiated service to key frames.
+// ---------------------------------------------------------------------------
+fn fig15() -> Result<String> {
+    // Differentiated service shows in the exploration-heavy regime: the
+    // paper's theoretical α (Lemma 1; C_θ is in ms units) keeps the
+    // learner exploring indefinitely, and the L_t weights decide WHICH
+    // frames carry that exploration.  We therefore run this exhibit at
+    // theory-scale α on the stationary medium-rate environment.
+    let frames = 1500;
+    let alpha = 3000.0;
+    let mk_pol = || LinUcb::mu_linucb(CONTEXT_DIM, alpha, bandit::DEFAULT_BETA, 0.25, frames);
+    let mut csv = String::from("experiment,x,key_ms,non_key_ms\n");
+    // (a) SSIM threshold sweep at fixed weights.
+    println!("(a) SSIM threshold sweep (weights 0.8/0.2):");
+    println!("  {:>9} {:>10} {:>12} {:>8}", "threshold", "key ms", "non-key ms", "keys%");
+    for &thr in &[0.5, 0.7, 0.85, 0.95, 1.0] {
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 9);
+        let mut pol = mk_pol();
+        let mut src = FrameSource::video(9, thr, Weights::new(0.8, 0.2));
+        let m = run(&mut pol, &mut env, frames, &mut src);
+        let s = m.summary(env.num_partitions());
+        let keys = m.records.iter().filter(|r| r.is_key).count();
+        println!(
+            "  {thr:>9.2} {:>10.1} {:>12.1} {:>7.1}%",
+            s.mean_key_delay_ms,
+            s.mean_non_key_delay_ms,
+            100.0 * keys as f64 / frames as f64
+        );
+        writeln!(csv, "ssim,{thr},{:.3},{:.3}", s.mean_key_delay_ms, s.mean_non_key_delay_ms)
+            .unwrap();
+    }
+    // (b) weight-ratio sweep at fixed threshold.
+    println!("(b) L_key/L_non-key ratio sweep (threshold 0.85):");
+    println!("  {:>7} {:>10} {:>12}", "ratio", "key ms", "non-key ms");
+    for &ratio in &[1.5, 2.0, 4.0, 8.0] {
+        let l_non = 0.1f64;
+        let l_key = (l_non * ratio).min(0.99);
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 9);
+        let mut pol = mk_pol();
+        let mut src = FrameSource::video(9, 0.85, Weights::new(l_key, l_non));
+        let m = run(&mut pol, &mut env, frames, &mut src);
+        let s = m.summary(env.num_partitions());
+        println!("  {ratio:>7.1} {:>10.1} {:>12.1}", s.mean_key_delay_ms, s.mean_non_key_delay_ms);
+        writeln!(csv, "ratio,{ratio},{:.3},{:.3}", s.mean_key_delay_ms, s.mean_non_key_delay_ms)
+            .unwrap();
+    }
+    println!("[paper: key frames see lower delay; larger ratio -> larger differentiation]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 16 — ANS on the compressed model (YoLo-tiny).
+// ---------------------------------------------------------------------------
+fn fig16() -> Result<String> {
+    let rates = [4.0, 16.0, 50.0];
+    let frames = 600;
+    let mut csv = String::from("rate_mbps,mo_ms,ans_ms,reduction_pct\n");
+    // Context: compression factor vs the full model.
+    let yolo_mo = Environment::simple(zoo::yolo(), 16.0, 1);
+    let tiny_mo = Environment::simple(zoo::yolo_tiny(), 16.0, 1);
+    let ratio = fixed_delay(&yolo_mo, yolo_mo.num_partitions())
+        / fixed_delay(&tiny_mo, tiny_mo.num_partitions());
+    println!("YoLo-tiny on-device runtime is {ratio:.2}x below YoLo  [paper: 7.76x]");
+    println!("  {:>6} {:>10} {:>10} {:>10}", "Mbps", "MO", "ANS", "gain%");
+    for &rate in &rates {
+        let env = Environment::simple(zoo::yolo_tiny(), rate, 13);
+        let mo = fixed_delay(&env, env.num_partitions());
+        let m = drive(ans_policy(frames), Environment::simple(zoo::yolo_tiny(), rate, 13), frames);
+        let ans = m
+            .summary_range(frames / 2, frames, zoo::yolo_tiny().num_partitions())
+            .mean_delay_ms;
+        let gain = 100.0 * (1.0 - ans / mo);
+        println!("  {rate:>6.0} {mo:>10.1} {ans:>10.1} {gain:>9.1}%");
+        writeln!(csv, "{rate},{mo:.3},{ans:.3},{gain:.2}").unwrap();
+    }
+    println!("[paper: ANS further accelerates even compressed models; largest gain at fast rates]");
+    Ok(csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 17 — high-end vs low-end mobile devices.
+// ---------------------------------------------------------------------------
+fn fig17() -> Result<String> {
+    let rates = [("low", 4.0), ("medium", 16.0), ("high", 50.0)];
+    let models: [(&str, fn() -> Network); 3] =
+        [("vgg16", zoo::vgg16 as fn() -> Network), ("yolo", zoo::yolo), ("resnet50", zoo::resnet50)];
+    let devices = [("high-end(Max-N)", DEVICE_MAXN), ("low-end(Max-Q)", DEVICE_MAXQ)];
+    let frames = 600;
+    let mut csv = String::from("device,model,rate,reduction_pct\n");
+    println!("Delay reduction of ANS vs MO (steady state):");
+    println!(
+        "  {:<16} {:>9} | {:>7} {:>7} {:>7}",
+        "device", "model", "low", "medium", "high"
+    );
+    for (dname, dev) in &devices {
+        for (mname, mk) in &models {
+            let mut row = Vec::new();
+            for (_rname, rate) in &rates {
+                let env = Environment::new(
+                    mk(),
+                    *dev,
+                    EDGE_GPU,
+                    Workload::constant(1.0),
+                    Uplink::constant(*rate),
+                    17,
+                );
+                let mo = fixed_delay(&env, env.num_partitions());
+                let env2 = Environment::new(
+                    mk(),
+                    *dev,
+                    EDGE_GPU,
+                    Workload::constant(1.0),
+                    Uplink::constant(*rate),
+                    17,
+                );
+                let m = drive(ans_policy(frames), env2, frames);
+                let ans = m
+                    .summary_range(frames / 2, frames, mk().num_partitions())
+                    .mean_delay_ms;
+                let red = (100.0 * (1.0 - ans / mo)).max(0.0);
+                row.push(red);
+            }
+            for ((rname, _), red) in rates.iter().zip(&row) {
+                writeln!(csv, "{dname},{mname},{rname},{red:.2}").unwrap();
+            }
+            println!(
+                "  {:<16} {:>9} | {:>6.1}% {:>6.1}% {:>6.1}%",
+                dname, mname, row[0], row[1], row[2]
+            );
+        }
+    }
+    println!("[paper: low-end devices gain more, especially at fast rates]");
+    Ok(csv)
+}

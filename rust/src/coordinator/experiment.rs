@@ -1,0 +1,234 @@
+//! The simulation experiment runner: policy × environment × video stream.
+//!
+//! Drives one [`Policy`] over a scripted [`Environment`] for T frames,
+//! feeding it exactly the information the paper allows (front-delay
+//! profile, contextual features, L_t weights, and aggregate d_p^e
+//! feedback for pulled arms ≠ P), while recording ground-truth metrics
+//! against the per-frame oracle.  Every table/figure bench and several
+//! integration tests drive this one function.
+
+use super::metrics::{FrameRecord, Metrics};
+use crate::bandit::{FrameContext, Policy, Privileged};
+use crate::models::{features, FeatureScale};
+use crate::simulator::Environment;
+use crate::video::{KeyframeDetector, VideoStream, Weights};
+
+/// How frame weights L_t are produced.
+pub enum FrameSource {
+    /// Every frame gets the same (non-key) weight — experiments where key
+    /// frames are irrelevant.
+    Uniform { weight: f64 },
+    /// A synthetic video stream with SSIM key-frame detection
+    /// (Fig 15; also the default serving configuration).
+    Video { stream: VideoStream, detector: KeyframeDetector },
+}
+
+impl FrameSource {
+    pub fn uniform() -> FrameSource {
+        FrameSource::Uniform { weight: 0.2 }
+    }
+
+    pub fn video(seed: u64, ssim_threshold: f64, weights: Weights) -> FrameSource {
+        FrameSource::Video {
+            stream: VideoStream::new(64, 64, seed),
+            detector: KeyframeDetector::new(ssim_threshold, weights),
+        }
+    }
+
+    /// (is_key, weight) for the next frame.
+    fn next(&mut self) -> (bool, f64) {
+        match self {
+            FrameSource::Uniform { weight } => (false, *weight),
+            FrameSource::Video { stream, detector } => {
+                let frame = stream.next_frame();
+                let c = detector.classify(&frame);
+                (c.is_key, c.weight)
+            }
+        }
+    }
+}
+
+/// Run `policy` in `env` for `frames` frames; returns per-frame metrics.
+pub fn run(
+    policy: &mut dyn Policy,
+    env: &mut Environment,
+    frames: usize,
+    source: &mut FrameSource,
+) -> Metrics {
+    let scale = FeatureScale::for_network(&env.net);
+    let contexts = features::context_vectors(&env.net, &scale);
+    let front: Vec<f64> = env.front_delays().to_vec();
+    let p_max = env.num_partitions();
+    let mut metrics = Metrics::new();
+    let mut expected_totals = vec![0.0; p_max + 1];
+
+    for t in 0..frames {
+        env.tick(t);
+        let (is_key, weight) = source.next();
+        for (p, v) in expected_totals.iter_mut().enumerate() {
+            *v = env.expected_total(p);
+        }
+        let ctx = FrameContext {
+            t,
+            weight,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged {
+                rate_mbps: env.current_rate_mbps(),
+                expected_totals: Some(&expected_totals),
+            },
+        };
+        let p = policy.select(&ctx);
+        assert!(p <= p_max, "policy {} chose invalid arm {p}", policy.name());
+
+        // Record the prediction BEFORE feedback (honest Fig 9 curve).
+        let predicted_edge_ms =
+            if p == p_max { None } else { policy.predict_edge_delay(&contexts[p]) };
+
+        // Realize the frame: front (deterministic profile) + noisy edge leg.
+        let realized_edge = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
+        let delay_ms = front[p] + realized_edge;
+        if p != p_max {
+            policy.observe(p, &contexts[p], realized_edge);
+        }
+
+        let oracle_p = crate::bandit::policy::argmin(&expected_totals);
+        metrics.push(FrameRecord {
+            t,
+            p,
+            is_key,
+            weight,
+            delay_ms,
+            expected_ms: expected_totals[p],
+            oracle_p,
+            oracle_ms: expected_totals[oracle_p],
+            rate_mbps: env.current_rate_mbps(),
+            predicted_edge_ms,
+            true_edge_ms: env.expected_edge_delay(p),
+        });
+    }
+    metrics
+}
+
+/// Convenience: run a fresh policy by name over a fresh simple environment.
+pub fn quick_run(
+    policy_name: &str,
+    net: crate::models::Network,
+    rate_mbps: f64,
+    frames: usize,
+    seed: u64,
+) -> Metrics {
+    let mut env = Environment::simple(net, rate_mbps, seed);
+    let mut policy = crate::bandit::by_name(
+        policy_name,
+        &env.net,
+        &env.device,
+        &env.edge,
+        frames,
+        None,
+        None,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+    let mut source = FrameSource::uniform();
+    run(policy.as_mut(), &mut env, frames, &mut source)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn oracle_has_zero_regret() {
+        let m = quick_run("oracle", zoo::vgg16(), 16.0, 100, 1);
+        let s = m.summary(zoo::vgg16().num_partitions());
+        assert!(s.total_regret_ms.abs() < 1e-9);
+        assert_eq!(s.oracle_match_rate, 1.0);
+    }
+
+    #[test]
+    fn static_policies_have_expected_histograms() {
+        let p_max = zoo::vgg16().num_partitions();
+        let eo = quick_run("eo", zoo::vgg16(), 16.0, 50, 1).summary(p_max);
+        assert_eq!(eo.partition_histogram[0], 50);
+        let mo = quick_run("mo", zoo::vgg16(), 16.0, 50, 1).summary(p_max);
+        assert_eq!(mo.partition_histogram[p_max], 50);
+        // MO never produces predictions or regret-free behaviour.
+        assert!(mo.total_regret_ms > 0.0);
+    }
+
+    #[test]
+    fn ans_beats_static_policies_at_medium_rate() {
+        // The headline claim (Fig 11): ANS < min(EO, MO) at medium rates
+        // (12 Mbps, the paper's Fig 1 setting).  The horizon must amortize
+        // the warm-up sweep: one pass over 21 arms includes some very
+        // expensive early-layer splits.
+        let p_max = zoo::vgg16().num_partitions();
+        let ans = quick_run("mu-linucb", zoo::vgg16(), 12.0, 1000, 2).summary(p_max);
+        let eo = quick_run("eo", zoo::vgg16(), 12.0, 1000, 2).summary(p_max);
+        let mo = quick_run("mo", zoo::vgg16(), 12.0, 1000, 2).summary(p_max);
+        assert!(
+            ans.mean_delay_ms < eo.mean_delay_ms.min(mo.mean_delay_ms),
+            "ans {} vs eo {} mo {}",
+            ans.mean_delay_ms,
+            eo.mean_delay_ms,
+            mo.mean_delay_ms
+        );
+    }
+
+    #[test]
+    fn ans_converges_to_near_oracle() {
+        // Fig 10: running average approaches the oracle's.
+        let p_max = zoo::vgg16().num_partitions();
+        let ans = quick_run("mu-linucb", zoo::vgg16(), 16.0, 400, 3);
+        let oracle = quick_run("oracle", zoo::vgg16(), 16.0, 400, 3);
+        let tail_ans = ans.summary_range(300, 400, p_max).mean_delay_ms;
+        let tail_oracle = oracle.summary_range(300, 400, p_max).mean_delay_ms;
+        assert!(
+            tail_ans <= tail_oracle * 1.10,
+            "tail ans {tail_ans} vs oracle {tail_oracle}"
+        );
+    }
+
+    #[test]
+    fn prediction_error_drops_fast() {
+        // Fig 9: error after warm-up is far below the initial error.
+        let m = quick_run("mu-linucb", zoo::vgg16(), 16.0, 300, 4);
+        let errs = m.prediction_errors();
+        assert!(!errs.is_empty());
+        let early: f64 =
+            errs.iter().take(10).map(|(_, e)| e).sum::<f64>() / 10.0_f64.min(errs.len() as f64);
+        let late = m.mean_prediction_error(50);
+        assert!(late < 0.10, "late prediction error {late}");
+        assert!(late < early, "late {late} !< early {early}");
+    }
+
+    #[test]
+    fn video_source_produces_key_frames() {
+        let mut env = crate::simulator::Environment::simple(zoo::partnet(), 10.0, 5);
+        let mut policy =
+            crate::bandit::by_name("mu-linucb", &env.net, &env.device, &env.edge, 200, None, None)
+                .unwrap();
+        let mut source = FrameSource::video(5, 0.85, Weights::default_paper());
+        let m = run(policy.as_mut(), &mut env, 200, &mut source);
+        let keys = m.records.iter().filter(|r| r.is_key).count();
+        assert!(keys > 0 && keys < 200, "keys={keys}");
+    }
+
+    #[test]
+    fn neurosurgeon_runs_and_uses_rate() {
+        let p_max = zoo::vgg16().num_partitions();
+        let lo = quick_run("neurosurgeon", zoo::vgg16(), 2.0, 30, 6).summary(p_max);
+        let hi = quick_run("neurosurgeon", zoo::vgg16(), 80.0, 30, 6).summary(p_max);
+        // Low rate → later partitions; high rate → earlier.
+        let mean_p = |s: &crate::coordinator::metrics::Summary| {
+            s.partition_histogram
+                .iter()
+                .enumerate()
+                .map(|(p, &n)| p * n)
+                .sum::<usize>() as f64
+                / s.frames as f64
+        };
+        assert!(mean_p(&lo) > mean_p(&hi));
+    }
+}

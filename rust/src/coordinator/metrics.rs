@@ -1,0 +1,238 @@
+//! Per-frame records and experiment summaries.
+
+use crate::util::stats::{percentile, Streaming};
+
+/// Everything recorded about one served frame.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub t: usize,
+    /// Chosen partition point.
+    pub p: usize,
+    pub is_key: bool,
+    pub weight: f64,
+    /// Realized end-to-end delay (ms) — noisy in simulation, measured in
+    /// the real pipeline.
+    pub delay_ms: f64,
+    /// Expected delay of the chosen arm under the true environment (ms).
+    pub expected_ms: f64,
+    /// Oracle's arm and expected delay at this frame.
+    pub oracle_p: usize,
+    pub oracle_ms: f64,
+    /// Uplink rate when the frame was served.
+    pub rate_mbps: f64,
+    /// Policy's predicted edge delay for the chosen arm (None for
+    /// policies without a prediction model, or for p = P).
+    pub predicted_edge_ms: Option<f64>,
+    /// True expected edge delay of the chosen arm.
+    pub true_edge_ms: f64,
+}
+
+/// Aggregated metrics over a run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub frames: usize,
+    pub mean_delay_ms: f64,
+    pub p50_delay_ms: f64,
+    pub p95_delay_ms: f64,
+    pub mean_key_delay_ms: f64,
+    pub mean_non_key_delay_ms: f64,
+    /// Σ (expected(chosen) − oracle) — the paper's regret.
+    pub total_regret_ms: f64,
+    /// Histogram of chosen partitions.
+    pub partition_histogram: Vec<usize>,
+    /// Share of frames on which the oracle arm was chosen.
+    pub oracle_match_rate: f64,
+}
+
+/// Accumulates [`FrameRecord`]s and produces summaries / CSV.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<FrameRecord>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: FrameRecord) {
+        self.records.push(r);
+    }
+
+    /// Summary over all frames (`num_partitions` sizes the histogram).
+    pub fn summary(&self, num_partitions: usize) -> Summary {
+        self.summary_range(0, self.records.len(), num_partitions)
+    }
+
+    /// Summary over records `[from, to)`.
+    pub fn summary_range(&self, from: usize, to: usize, num_partitions: usize) -> Summary {
+        let recs = &self.records[from..to];
+        assert!(!recs.is_empty(), "summary over empty range");
+        let mut all = Streaming::new();
+        let mut key = Streaming::new();
+        let mut non_key = Streaming::new();
+        let mut regret = 0.0;
+        let mut hist = vec![0usize; num_partitions + 1];
+        let mut oracle_hits = 0usize;
+        let delays: Vec<f64> = recs.iter().map(|r| r.delay_ms).collect();
+        for r in recs {
+            all.push(r.delay_ms);
+            if r.is_key {
+                key.push(r.delay_ms);
+            } else {
+                non_key.push(r.delay_ms);
+            }
+            regret += r.expected_ms - r.oracle_ms;
+            hist[r.p] += 1;
+            if r.p == r.oracle_p {
+                oracle_hits += 1;
+            }
+        }
+        Summary {
+            frames: recs.len(),
+            mean_delay_ms: all.mean(),
+            p50_delay_ms: percentile(&delays, 0.5),
+            p95_delay_ms: percentile(&delays, 0.95),
+            mean_key_delay_ms: key.mean(),
+            mean_non_key_delay_ms: non_key.mean(),
+            total_regret_ms: regret,
+            partition_histogram: hist,
+            oracle_match_rate: oracle_hits as f64 / recs.len() as f64,
+        }
+    }
+
+    /// Running average delay after each frame (Fig 10's y-axis).
+    pub fn running_average_delay(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut acc = 0.0;
+        for (i, r) in self.records.iter().enumerate() {
+            acc += r.delay_ms;
+            out.push(acc / (i + 1) as f64);
+        }
+        out
+    }
+
+    /// Per-frame relative prediction error |pred − truth| / truth for
+    /// frames where both are defined (Fig 9's y-axis).
+    pub fn prediction_errors(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| {
+                let pred = r.predicted_edge_ms?;
+                if r.true_edge_ms <= 0.0 {
+                    return None;
+                }
+                Some((r.t, (pred - r.true_edge_ms).abs() / r.true_edge_ms))
+            })
+            .collect()
+    }
+
+    /// Mean relative prediction error over the last `n` predicted frames
+    /// (the Table 1 metric).
+    pub fn mean_prediction_error(&self, last_n: usize) -> f64 {
+        let errs = self.prediction_errors();
+        let tail = &errs[errs.len().saturating_sub(last_n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|(_, e)| e).sum::<f64>() / tail.len() as f64
+    }
+
+    /// CSV dump (one row per frame).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "t,p,is_key,weight,delay_ms,expected_ms,oracle_p,oracle_ms,rate_mbps,predicted_edge_ms,true_edge_ms\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{:.3},{:.3},{},{:.3},{:.3},{},{:.3}\n",
+                r.t,
+                r.p,
+                r.is_key as u8,
+                r.weight,
+                r.delay_ms,
+                r.expected_ms,
+                r.oracle_p,
+                r.oracle_ms,
+                r.rate_mbps,
+                r.predicted_edge_ms.map(|v| format!("{v:.3}")).unwrap_or_default(),
+                r.true_edge_ms,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, p: usize, delay: f64, is_key: bool) -> FrameRecord {
+        FrameRecord {
+            t,
+            p,
+            is_key,
+            weight: if is_key { 0.8 } else { 0.2 },
+            delay_ms: delay,
+            expected_ms: delay,
+            oracle_p: 1,
+            oracle_ms: 10.0,
+            rate_mbps: 16.0,
+            predicted_edge_ms: Some(delay * 0.9),
+            true_edge_ms: delay,
+        }
+    }
+
+    #[test]
+    fn summary_basics() {
+        let mut m = Metrics::new();
+        m.push(rec(0, 1, 10.0, true));
+        m.push(rec(1, 2, 20.0, false));
+        m.push(rec(2, 1, 30.0, false));
+        let s = m.summary(2);
+        assert_eq!(s.frames, 3);
+        assert!((s.mean_delay_ms - 20.0).abs() < 1e-12);
+        assert_eq!(s.partition_histogram, vec![0, 2, 1]);
+        assert!((s.mean_key_delay_ms - 10.0).abs() < 1e-12);
+        assert!((s.mean_non_key_delay_ms - 25.0).abs() < 1e-12);
+        assert!((s.oracle_match_rate - 2.0 / 3.0).abs() < 1e-12);
+        // regret = (10-10) + (20-10) + (30-10) = 30
+        assert!((s.total_regret_ms - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_average() {
+        let mut m = Metrics::new();
+        m.push(rec(0, 1, 10.0, false));
+        m.push(rec(1, 1, 20.0, false));
+        assert_eq!(m.running_average_delay(), vec![10.0, 15.0]);
+    }
+
+    #[test]
+    fn prediction_errors_skip_mo() {
+        let mut m = Metrics::new();
+        let mut r = rec(0, 2, 10.0, false);
+        r.predicted_edge_ms = None; // MO frame: no prediction
+        m.push(r);
+        m.push(rec(1, 1, 10.0, false));
+        let errs = m.prediction_errors();
+        assert_eq!(errs.len(), 1);
+        assert!((errs[0].1 - 0.1).abs() < 1e-9);
+        assert!((m.mean_prediction_error(10) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = Metrics::new();
+        m.push(rec(0, 1, 10.0, true));
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("t,p,"));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty range")]
+    fn empty_summary_panics() {
+        Metrics::new().summary(3);
+    }
+}

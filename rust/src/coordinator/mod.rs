@@ -1,0 +1,17 @@
+//! L3 coordinator: the serving system around the learner.
+//!
+//! * [`experiment`] — the simulation runner driving any [`crate::bandit::Policy`]
+//!   over a scripted [`crate::simulator::Environment`] (all paper exhibits).
+//! * [`pipeline`] — the *real* serving path: PartNet over two PJRT clients
+//!   (device thread / edge thread) joined by a byte-accurate shaped link.
+//! * [`metrics`] — per-frame records, summaries, regret accounting, CSV.
+//! * [`exhibits`] — one generator per paper table/figure (see DESIGN.md §5).
+
+pub mod exhibits;
+pub mod experiment;
+pub mod metrics;
+pub mod pipeline;
+
+pub use experiment::{quick_run, run, FrameSource};
+pub use metrics::{FrameRecord, Metrics, Summary};
+pub use pipeline::{serve, PipelineConfig, ServingReport};

@@ -1,0 +1,26 @@
+//! # ANS — Autodidactic Neurosurgeon
+//!
+//! A reproduction of *"Autodidactic Neurosurgeon: Collaborative Deep
+//! Inference for Mobile Edge Intelligence via Online Learning"* (WWW 2021)
+//! as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the rust coordinator: per-frame DNN partition
+//!   decisions via the μLinUCB contextual bandit ([`bandit`]), the serving
+//!   pipeline ([`coordinator`]), the environment/testbed simulator
+//!   ([`simulator`]), the model zoo with contextual features ([`models`]),
+//!   SSIM key-frame detection ([`video`]), and the PJRT runtime that
+//!   executes AOT-compiled partitions ([`runtime`]).
+//! * **L2/L1 (python, build-time only)** — the partitionable CNN and its
+//!   Pallas kernels, lowered once to HLO text under `artifacts/`.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bandit;
+pub mod config;
+pub mod coordinator;
+pub mod models;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod video;

@@ -1,0 +1,195 @@
+//! `ans` — the leader binary of the collaborative deep inference system.
+//!
+//! Subcommands:
+//!   simulate   run a policy over the calibrated testbed simulator
+//!   serve      real serving: PartNet over PJRT with SSIM + μLinUCB
+//!   bench      regenerate paper exhibits (fig1..fig17, table1)
+//!   models     print the model zoo with partition structure
+//!   help       this text
+
+use ans::config::Config;
+use ans::coordinator::{exhibits, experiment, pipeline};
+use ans::util::cli::Args;
+use ans::video::Weights;
+use anyhow::{Context, Result};
+
+const HELP: &str = "\
+ans — Autodidactic Neurosurgeon (WWW'21 reproduction)
+
+USAGE:
+  ans <subcommand> [--key value]...
+
+SUBCOMMANDS:
+  simulate   Run a policy over the calibrated testbed simulator.
+             --model M --policy P --frames N --rate MBPS --device maxn|maxq
+             --edge gpu|cpu --load X --alpha A --mu MU --window W --seed S
+  serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
+             dynamic batching, simulated shaped uplink.
+             --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
+             --ssim-threshold T --l-key K --l-non-key NK --seed S
+  bench      Regenerate paper exhibits: positional filter, e.g.
+             `ans bench fig11` or `ans bench all` (CSV → bench_results/).
+  models     Print the model zoo (stages, MACs, ψ sizes).
+  help       Show this text.
+
+All subcommands accept --config file.json (CLI flags win).
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "models" => cmd_models(),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let mut env = cfg.environment();
+    let mut policy = cfg.policy(&env.net, &env.device, &env.edge);
+    let mut source = experiment::FrameSource::video(
+        cfg.seed,
+        cfg.ssim_threshold,
+        Weights::new(cfg.l_key, cfg.l_non_key),
+    );
+    let metrics = experiment::run(policy.as_mut(), &mut env, cfg.frames, &mut source);
+    let s = metrics.summary(env.num_partitions());
+
+    println!("model={} policy={} frames={} rate={} Mbps edge={}@{}x device={}",
+        cfg.model, policy.name(), cfg.frames, cfg.rate_mbps, cfg.edge, cfg.load, cfg.device);
+    println!("mean delay      {:8.1} ms   (p50 {:.1}, p95 {:.1})",
+        s.mean_delay_ms, s.p50_delay_ms, s.p95_delay_ms);
+    println!("key frames      {:8.1} ms   non-key {:.1} ms",
+        s.mean_key_delay_ms, s.mean_non_key_delay_ms);
+    println!("total regret    {:8.1} ms   oracle-match {:.1}%",
+        s.total_regret_ms, 100.0 * s.oracle_match_rate);
+    println!("prediction err  {:8.2} %    (mean over last 100 predicted frames)",
+        100.0 * metrics.mean_prediction_error(100));
+    print!("partition histogram:");
+    for (p, n) in s.partition_histogram.iter().enumerate() {
+        if *n > 0 {
+            print!(" {}:{}", env.net.partition_label(p), n);
+        }
+    }
+    println!();
+    if args.flag("csv") {
+        std::fs::create_dir_all("bench_results")?;
+        let path = format!("bench_results/simulate_{}_{}.csv", cfg.model, cfg.policy);
+        std::fs::write(&path, metrics.to_csv())?;
+        println!("per-frame CSV -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    anyhow::ensure!(
+        cfg.artifacts_dir.join("manifest.json").exists(),
+        "artifacts missing at {:?} — run `make artifacts`",
+        cfg.artifacts_dir
+    );
+    let net = ans::models::zoo::partnet();
+    let device = ans::simulator::DEVICE_MAXN;
+    let edge = ans::simulator::EDGE_GPU;
+    let mut policy = cfg.policy(&net, &device, &edge);
+    let pcfg = pipeline::PipelineConfig {
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        frames: cfg.frames,
+        fps: cfg.fps,
+        rate_mbps: cfg.rate_mbps,
+        ssim_threshold: cfg.ssim_threshold,
+        weights: Weights::new(cfg.l_key, cfg.l_non_key),
+        max_batch: cfg.max_batch,
+        seed: cfg.seed,
+    };
+    println!("serving {} frames of partnet via PJRT (rate {} Mbps, fps {}, max_batch {})...",
+        cfg.frames, cfg.rate_mbps, cfg.fps, cfg.max_batch);
+    let report = pipeline::serve(&pcfg, policy.as_mut())?;
+    let n = report.metrics.records.len();
+    let s = report.metrics.summary(net.num_partitions());
+    println!("served {n} batches ({} frames) in {:.1} ms logical makespan", cfg.frames, report.makespan_ms);
+    println!("throughput      {:8.1} frames/s", report.throughput_fps);
+    println!("batch delay     {:8.2} ms mean   (p50 {:.2}, p95 {:.2})",
+        s.mean_delay_ms, s.p50_delay_ms, s.p95_delay_ms);
+    println!("key frames      {:8.2} ms   non-key {:.2} ms",
+        s.mean_key_delay_ms, s.mean_non_key_delay_ms);
+    println!("front exec      {:8.1} ms total   back exec {:.1} ms total",
+        report.front_exec_ms, report.back_exec_ms);
+    print!("batches by size:");
+    for (b, n) in report.batch_histogram.iter().enumerate() {
+        if *n > 0 {
+            print!(" b{b}:{n}");
+        }
+    }
+    println!();
+    print!("partition histogram:");
+    for (p, n) in s.partition_histogram.iter().enumerate() {
+        if *n > 0 {
+            print!(" {}:{}", net.partition_label(p), n);
+        }
+    }
+    println!();
+    println!("front-delay profile d_p^f (b1, ms): {:?}",
+        report.front_profile_b1.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+    if args.flag("csv") {
+        std::fs::create_dir_all("bench_results")?;
+        std::fs::write("bench_results/serve.csv", report.metrics.to_csv())?;
+        println!("per-batch CSV -> bench_results/serve.csv");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let filter = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    exhibits::run_all(&filter).context("running exhibits")
+}
+
+fn cmd_models() -> Result<()> {
+    for name in ["vgg16", "yolo", "yolo_tiny", "resnet50", "partnet"] {
+        let net = ans::models::zoo::by_name(name).unwrap();
+        let s = net.backend_stats(0);
+        println!(
+            "{:>9}: {:2} partition points, {:5.2} GMACs (conv {:.2}, fc {:.3}), output {:?}",
+            name,
+            net.num_partitions(),
+            s.total_macs() as f64 / 1e9,
+            s.macs_conv as f64 / 1e9,
+            s.macs_fc as f64 / 1e9,
+            net.output_shape(),
+        );
+        for p in 0..=net.num_partitions() {
+            println!(
+                "    p={p:2} {:<12} psi={:>9} B  back-MACs={:>6.3} G",
+                net.partition_label(p),
+                net.intermediate_bytes(p),
+                net.backend_stats(p).total_macs() as f64 / 1e9
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Contextual feature construction: the paper's x_p (§2.2, Fig 5).
+//!
+//! x_p = [m_c, m_f, m_a, n_c, n_f, n_a, ψ_p]ᵀ — back-end MAC counts per
+//! layer type, back-end layer counts per type, and the intermediate data
+//! size crossing the link.  d = 7.  Raw counts span ~9 orders of
+//! magnitude, so a [`FeatureScale`] normalizes them to O(1) before they
+//! hit the ridge regression (conditioning of A_t); the scale is fixed
+//! per-network so the linearity of the delay model is preserved.
+
+use super::Network;
+
+/// Context dimension d (paper: d = 7).
+pub const CONTEXT_DIM: usize = 7;
+
+/// A normalized context vector for one partition point.
+pub type FeatureVector = [f64; CONTEXT_DIM];
+
+/// Per-network normalization constants.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureScale {
+    /// Divisor for MAC counts (per type).
+    pub macs: f64,
+    /// Divisor for layer counts.
+    pub layers: f64,
+    /// Divisor for ψ bytes.
+    pub bytes: f64,
+}
+
+impl FeatureScale {
+    /// Scale derived from the full network so every feature lands in ~[0, 1].
+    pub fn for_network(net: &Network) -> FeatureScale {
+        let full = net.backend_stats(0);
+        let max_macs = full
+            .macs_conv
+            .max(full.macs_fc)
+            .max(full.macs_act)
+            .max(1) as f64;
+        let max_layers = (full.n_conv.max(full.n_fc).max(full.n_act)).max(1) as f64;
+        let max_bytes = (0..=net.num_partitions())
+            .map(|p| net.intermediate_bytes(p))
+            .max()
+            .unwrap_or(1)
+            .max(1) as f64;
+        FeatureScale { macs: max_macs, layers: max_layers, bytes: max_bytes }
+    }
+}
+
+/// Build the normalized x_p for every partition point of `net`.
+///
+/// `x_P` (pure on-device processing) is the **zero vector** — the paper's
+/// Limitation #2: every θ predicts 0 edge-offloading delay for it, which
+/// is what traps plain LinUCB and what μLinUCB's forced sampling escapes.
+pub fn context_vectors(net: &Network, scale: &FeatureScale) -> Vec<FeatureVector> {
+    (0..=net.num_partitions())
+        .map(|p| context_vector(net, p, scale))
+        .collect()
+}
+
+/// Build the normalized x_p for a single partition point.
+pub fn context_vector(net: &Network, p: usize, scale: &FeatureScale) -> FeatureVector {
+    let s = net.backend_stats(p);
+    [
+        s.macs_conv as f64 / scale.macs,
+        s.macs_fc as f64 / scale.macs,
+        s.macs_act as f64 / scale.macs,
+        s.n_conv as f64 / scale.layers,
+        s.n_fc as f64 / scale.layers,
+        s.n_act as f64 / scale.layers,
+        net.intermediate_bytes(p) as f64 / scale.bytes,
+    ]
+}
+
+/// ℓ2 norm of a feature vector (the theory's C_x bound).
+pub fn norm(x: &FeatureVector) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn mo_arm_is_zero_vector() {
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        let xs = context_vectors(&net, &scale);
+        let last = xs.last().unwrap();
+        assert!(last.iter().all(|&v| v == 0.0), "x_P must be zero: {last:?}");
+    }
+
+    #[test]
+    fn eo_arm_has_full_macs() {
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        let x0 = context_vector(&net, 0, &scale);
+        // Normalized conv MACs at p=0 equal max over types / itself = 1.
+        assert!((x0[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn features_bounded_for_all_models() {
+        for net in [zoo::vgg16(), zoo::yolo(), zoo::yolo_tiny(), zoo::resnet50(), zoo::partnet()] {
+            let scale = FeatureScale::for_network(&net);
+            for (p, x) in context_vectors(&net, &scale).iter().enumerate() {
+                for (i, v) in x.iter().enumerate() {
+                    assert!(
+                        (0.0..=1.5).contains(v),
+                        "{} p={p} feature[{i}]={v} out of range",
+                        net.name
+                    );
+                }
+                assert!(norm(x) <= 2.0, "{} p={p} |x|={}", net.name, norm(x));
+            }
+        }
+    }
+
+    #[test]
+    fn mac_features_monotone_decreasing_in_p() {
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        let xs = context_vectors(&net, &scale);
+        for w in xs.windows(2) {
+            assert!(w[0][0] >= w[1][0], "conv MACs must shrink with p");
+            assert!(w[0][3] >= w[1][3], "conv layer count must shrink with p");
+        }
+    }
+
+    #[test]
+    fn psi_feature_non_monotone_for_vgg() {
+        // conv1_1 inflates ψ over the raw input — the crux of the problem.
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        let xs = context_vectors(&net, &scale);
+        assert!(xs[1][6] > xs[0][6]);
+        assert!(xs[net.num_partitions()][6] == 0.0);
+    }
+
+    #[test]
+    fn distinct_partitions_have_distinct_contexts() {
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        let xs = context_vectors(&net, &scale);
+        for i in 0..xs.len() {
+            for j in i + 1..xs.len() {
+                assert_ne!(xs[i], xs[j], "p={i} vs p={j}");
+            }
+        }
+    }
+}

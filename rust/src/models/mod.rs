@@ -1,0 +1,353 @@
+//! DNN layer-graph IR: shape inference, MAC counting, partition points.
+//!
+//! The paper's contextual features are functions of the network *structure*
+//! (multiply-accumulate counts per layer type, layer counts per type,
+//! intermediate tensor size).  This module gives every benchmark network a
+//! common IR from which those quantities are derived:
+//!
+//! * a [`Network`] is a chain of [`Stage`]s; a **partition point** sits
+//!   after each stage (`p = 0` ⇒ pure edge offloading, `p = P` ⇒ pure
+//!   on-device processing), matching the paper's marking scheme — for
+//!   chain DNNs each layer group is a stage, for ResNet50 each residual
+//!   block is a stage (the paper's residual-block method);
+//! * a [`Stage`] is a list of [`Layer`]s that must stay together;
+//! * per-layer MACs follow the conventions in the paper §2.2: convolution
+//!   and fully-connected MACs from the arithmetic, activation "MACs" are
+//!   one unit per output element (elementwise, memory-bound).
+
+pub mod features;
+pub mod zoo;
+
+pub use features::{FeatureScale, FeatureVector, CONTEXT_DIM};
+
+/// Tensor shape flowing between layers (f32 throughout, NHWC for images).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Spatial feature map: height, width, channels (batch implicit).
+    Hwc(usize, usize, usize),
+    /// Flattened vector of the given width.
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Hwc(h, w, c) => h * w * c,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    /// Bytes on the wire for batch size 1 (f32).
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// One DNN layer. MAC/shape semantics in [`Layer::out_shape`] / [`Layer::macs`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// 2-D convolution, square kernel, SAME-style padding unless `valid`.
+    Conv { out_ch: usize, k: usize, stride: usize },
+    /// Fully connected (flattens its input implicitly).
+    Fc { out: usize },
+    /// Elementwise activation (ReLU / leaky — identical cost model).
+    Act,
+    /// Max/avg pool, square window.
+    Pool { k: usize, stride: usize },
+    /// Global average pool: HWC -> Flat(C).
+    GlobalPool,
+    /// Residual add (elementwise, costed like an activation layer).
+    Add,
+}
+
+/// The three layer-type buckets the paper builds features from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerType {
+    Conv,
+    Fc,
+    Act,
+}
+
+impl Layer {
+    /// Output shape given the input shape.
+    pub fn out_shape(&self, input: Shape) -> Shape {
+        match (self, input) {
+            (Layer::Conv { out_ch, stride, .. }, Shape::Hwc(h, w, _)) => {
+                Shape::Hwc(h.div_ceil(*stride), w.div_ceil(*stride), *out_ch)
+            }
+            (Layer::Fc { out }, _) => Shape::Flat(*out),
+            (Layer::Act, s) | (Layer::Add, s) => s,
+            (Layer::Pool { stride, .. }, Shape::Hwc(h, w, c)) => {
+                Shape::Hwc(h / stride, w / stride, c)
+            }
+            (Layer::GlobalPool, Shape::Hwc(_, _, c)) => Shape::Flat(c),
+            (l, s) => panic!("layer {l:?} cannot take input shape {s:?}"),
+        }
+    }
+
+    /// Multiply-accumulate count for batch 1 with the given input shape.
+    pub fn macs(&self, input: Shape) -> u64 {
+        let out = self.out_shape(input);
+        match (self, input) {
+            (Layer::Conv { k, .. }, Shape::Hwc(_, _, cin)) => {
+                (out.elems() * k * k * cin) as u64
+            }
+            (Layer::Fc { out }, i) => (i.elems() * out) as u64,
+            (Layer::Act, _) | (Layer::Add, _) => out.elems() as u64,
+            (Layer::Pool { k, .. }, _) => (out.elems() * k * k) as u64,
+            (Layer::GlobalPool, i) => i.elems() as u64,
+            (l, s) => panic!("layer {l:?} cannot take input shape {s:?}"),
+        }
+    }
+
+    /// Which feature bucket this layer contributes to.
+    pub fn layer_type(&self) -> LayerType {
+        match self {
+            Layer::Conv { .. } => LayerType::Conv,
+            Layer::Fc { .. } => LayerType::Fc,
+            Layer::Act | Layer::Pool { .. } | Layer::GlobalPool | Layer::Add => LayerType::Act,
+        }
+    }
+}
+
+/// A named group of layers between two adjacent partition points.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Stage {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Stage {
+        Stage { name: name.to_string(), layers }
+    }
+
+    pub fn out_shape(&self, mut input: Shape) -> Shape {
+        for l in &self.layers {
+            input = l.out_shape(input);
+        }
+        input
+    }
+}
+
+/// Aggregated structural statistics of a span of stages.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanStats {
+    pub macs_conv: u64,
+    pub macs_fc: u64,
+    pub macs_act: u64,
+    pub n_conv: u64,
+    pub n_fc: u64,
+    pub n_act: u64,
+    /// Number of fusable (conv|fc → act) adjacent pairs — the inter-layer
+    /// optimization the simulator's ground truth discounts and layer-wise
+    /// profiling misses (DESIGN.md §4).
+    pub fused_pairs: u64,
+    /// MACs of activation layers that fuse into their producer (their
+    /// elementwise pass runs as a register epilogue: no extra launch, no
+    /// memory round-trip).
+    pub macs_fused_act: u64,
+}
+
+impl SpanStats {
+    pub fn total_macs(&self) -> u64 {
+        self.macs_conv + self.macs_fc + self.macs_act
+    }
+}
+
+/// A partitionable DNN: input shape plus the stage chain.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub stages: Vec<Stage>,
+}
+
+impl Network {
+    /// Number of partition points P (valid p ∈ 0..=P).
+    pub fn num_partitions(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Shape of ψ_p — the tensor crossing the link when partitioned at `p`.
+    pub fn intermediate_shape(&self, p: usize) -> Shape {
+        assert!(p <= self.stages.len(), "partition {p} out of range");
+        let mut s = self.input;
+        for stage in &self.stages[..p] {
+            s = stage.out_shape(s);
+        }
+        s
+    }
+
+    /// Bytes of ψ_p on the wire (0 for p = P: nothing is transmitted).
+    pub fn intermediate_bytes(&self, p: usize) -> usize {
+        if p == self.num_partitions() {
+            0
+        } else {
+            self.intermediate_shape(p).bytes()
+        }
+    }
+
+    /// Structural stats over stages `[from, to)`.
+    pub fn span_stats(&self, from: usize, to: usize) -> SpanStats {
+        assert!(from <= to && to <= self.stages.len());
+        let mut s = SpanStats::default();
+        let mut shape = self.intermediate_shape(from);
+        let mut prev_was_compute = false;
+        for stage in &self.stages[from..to] {
+            for layer in &stage.layers {
+                let macs = layer.macs(shape);
+                match layer.layer_type() {
+                    LayerType::Conv => {
+                        s.macs_conv += macs;
+                        s.n_conv += 1;
+                    }
+                    LayerType::Fc => {
+                        s.macs_fc += macs;
+                        s.n_fc += 1;
+                    }
+                    LayerType::Act => {
+                        s.macs_act += macs;
+                        s.n_act += 1;
+                    }
+                }
+                // conv/fc immediately followed by an activation fuses (cuDNN-style).
+                let is_compute = !matches!(layer.layer_type(), LayerType::Act);
+                if prev_was_compute && matches!(layer, Layer::Act) {
+                    s.fused_pairs += 1;
+                    s.macs_fused_act += macs;
+                }
+                prev_was_compute = is_compute;
+                shape = layer.out_shape(shape);
+            }
+        }
+        s
+    }
+
+    /// Stats of the back-end partition DNN_p^back (stages p..P).
+    pub fn backend_stats(&self, p: usize) -> SpanStats {
+        self.span_stats(p, self.stages.len())
+    }
+
+    /// Stats of the front-end partition DNN_p^front (stages 0..p).
+    pub fn frontend_stats(&self, p: usize) -> SpanStats {
+        self.span_stats(0, p)
+    }
+
+    /// Output shape of the whole network.
+    pub fn output_shape(&self) -> Shape {
+        self.intermediate_shape(self.num_partitions())
+    }
+
+    /// Stage names, aligned with partition point p = index + 1.
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Human label for partition point `p` (for traces and reports).
+    pub fn partition_label(&self, p: usize) -> String {
+        if p == 0 {
+            "input(EO)".to_string()
+        } else if p == self.num_partitions() {
+            format!("{}(MO)", self.stages[p - 1].name)
+        } else {
+            self.stages[p - 1].name.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Network {
+        Network {
+            name: "toy".into(),
+            input: Shape::Hwc(8, 8, 3),
+            stages: vec![
+                Stage::new("conv1", vec![Layer::Conv { out_ch: 4, k: 3, stride: 1 }, Layer::Act]),
+                Stage::new("pool1", vec![Layer::Pool { k: 2, stride: 2 }]),
+                Stage::new("fc1", vec![Layer::Fc { out: 10 }, Layer::Act]),
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_inference() {
+        let n = toy();
+        assert_eq!(n.intermediate_shape(0), Shape::Hwc(8, 8, 3));
+        assert_eq!(n.intermediate_shape(1), Shape::Hwc(8, 8, 4));
+        assert_eq!(n.intermediate_shape(2), Shape::Hwc(4, 4, 4));
+        assert_eq!(n.intermediate_shape(3), Shape::Flat(10));
+        assert_eq!(n.output_shape(), Shape::Flat(10));
+    }
+
+    #[test]
+    fn conv_macs() {
+        // 8x8x4 outputs, 3x3x3 window each.
+        let l = Layer::Conv { out_ch: 4, k: 3, stride: 1 };
+        assert_eq!(l.macs(Shape::Hwc(8, 8, 3)), (8 * 8 * 4 * 3 * 3 * 3) as u64);
+    }
+
+    #[test]
+    fn fc_macs_flatten_implicitly() {
+        let l = Layer::Fc { out: 10 };
+        assert_eq!(l.macs(Shape::Hwc(4, 4, 4)), (4 * 4 * 4 * 10) as u64);
+        assert_eq!(l.out_shape(Shape::Hwc(4, 4, 4)), Shape::Flat(10));
+    }
+
+    #[test]
+    fn strided_conv_halves_spatial() {
+        let l = Layer::Conv { out_ch: 64, k: 7, stride: 2 };
+        assert_eq!(l.out_shape(Shape::Hwc(224, 224, 3)), Shape::Hwc(112, 112, 64));
+    }
+
+    #[test]
+    fn macs_conserve_across_partition() {
+        let n = toy();
+        let total = n.backend_stats(0);
+        for p in 0..=n.num_partitions() {
+            let f = n.frontend_stats(p);
+            let b = n.backend_stats(p);
+            assert_eq!(f.total_macs() + b.total_macs(), total.total_macs(), "p={p}");
+            assert_eq!(f.n_conv + b.n_conv, total.n_conv);
+        }
+    }
+
+    #[test]
+    fn backend_stats_at_p_max_is_zero() {
+        let n = toy();
+        let b = n.backend_stats(n.num_partitions());
+        assert_eq!(b, SpanStats::default());
+        assert_eq!(n.intermediate_bytes(n.num_partitions()), 0);
+    }
+
+    #[test]
+    fn fused_pairs_counted() {
+        let n = toy();
+        // conv1+act and fc1+act fuse; pool does not.
+        assert_eq!(n.backend_stats(0).fused_pairs, 2);
+        assert_eq!(n.backend_stats(1).fused_pairs, 1);
+    }
+
+    #[test]
+    fn partition_labels() {
+        let n = toy();
+        assert_eq!(n.partition_label(0), "input(EO)");
+        assert_eq!(n.partition_label(1), "conv1");
+        assert_eq!(n.partition_label(3), "fc1(MO)");
+    }
+
+    #[test]
+    fn global_pool_flattens() {
+        let l = Layer::GlobalPool;
+        assert_eq!(l.out_shape(Shape::Hwc(7, 7, 2048)), Shape::Flat(2048));
+        assert_eq!(l.macs(Shape::Hwc(7, 7, 2048)), (7 * 7 * 2048) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn intermediate_shape_bounds() {
+        toy().intermediate_shape(99);
+    }
+}

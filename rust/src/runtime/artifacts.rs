@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust request path.
+//!
+//! `artifacts/manifest.json` records, per (batch, partition point):
+//! the front/back HLO file names, ψ_p's shape and byte size, and the
+//! paper's 7-dim contextual features of DNN_p^back — everything the
+//! coordinator needs to build x_p with python long gone.
+
+use crate::models::{FeatureVector, CONTEXT_DIM};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema version this loader understands (must match aot.py).
+pub const SCHEMA_VERSION: i64 = 2;
+
+/// One (batch, p) entry of the manifest.
+#[derive(Debug, Clone)]
+pub struct PartitionEntry {
+    pub batch: usize,
+    pub p: usize,
+    pub psi_shape: Vec<usize>,
+    pub psi_bytes: usize,
+    pub front: Option<PathBuf>,
+    pub back: Option<PathBuf>,
+    /// Raw (un-normalized) context features from the manifest:
+    /// [m_c, m_f, m_a, n_c, n_f, n_a, ψ_bytes].
+    pub raw_features: FeatureVector,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub num_partitions: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    entries: BTreeMap<(usize, usize), PartitionEntry>,
+}
+
+const FEATURE_KEYS: [&str; CONTEXT_DIM] =
+    ["m_conv", "m_fc", "m_act", "n_conv", "n_fc", "n_act", "psi_bytes"];
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let schema = v.get("schema_version")?.as_i64()?;
+        anyhow::ensure!(
+            schema == SCHEMA_VERSION,
+            "manifest schema {schema} != supported {SCHEMA_VERSION} (re-run `make artifacts`)"
+        );
+        let num_partitions = v.get("num_partitions")?.as_usize()?;
+        let mut entries = BTreeMap::new();
+        for e in v.get("partitions")?.as_arr()? {
+            let batch = e.get("batch")?.as_usize()?;
+            let p = e.get("p")?.as_usize()?;
+            let feats = e.get("features")?;
+            let mut raw = [0.0; CONTEXT_DIM];
+            for (i, key) in FEATURE_KEYS.iter().enumerate() {
+                raw[i] = feats.get(key)?.as_f64()?;
+            }
+            let entry = PartitionEntry {
+                batch,
+                p,
+                psi_shape: e
+                    .get("psi_shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>, _>>()?,
+                psi_bytes: e.get("psi_bytes")?.as_usize()?,
+                front: e.opt("front").map(|f| dir.join(f.as_str().unwrap_or_default())),
+                back: e.opt("back").map(|f| dir.join(f.as_str().unwrap_or_default())),
+                raw_features: raw,
+            };
+            entries.insert((batch, p), entry);
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: v.get("model")?.as_str()?.to_string(),
+            num_partitions,
+            input_shape: v
+                .get("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>, _>>()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            batch_sizes: v
+                .get("batch_sizes")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>, _>>()?,
+            entries,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for &b in &self.batch_sizes {
+            for p in 0..=self.num_partitions {
+                let e = self
+                    .entry(b, p)
+                    .with_context(|| format!("manifest missing entry batch={b} p={p}"))?;
+                anyhow::ensure!((e.front.is_none()) == (p == 0), "front presence rule at p={p}");
+                anyhow::ensure!(
+                    (e.back.is_none()) == (p == self.num_partitions),
+                    "back presence rule at p={p}"
+                );
+                for side in [&e.front, &e.back].into_iter().flatten() {
+                    anyhow::ensure!(side.exists(), "artifact file missing: {side:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, batch: usize, p: usize) -> Option<&PartitionEntry> {
+        self.entries.get(&(batch, p))
+    }
+
+    /// Normalized context vectors for every p at the given batch size
+    /// (same normalization rule as [`crate::models::FeatureScale`]:
+    /// divide by the per-kind maxima so features land in ~[0, 1]).
+    pub fn context_vectors(&self, batch: usize) -> Result<Vec<FeatureVector>> {
+        let mut raws = Vec::new();
+        for p in 0..=self.num_partitions {
+            let e = self
+                .entry(batch, p)
+                .with_context(|| format!("no entry for batch={batch} p={p}"))?;
+            raws.push(e.raw_features);
+        }
+        // Normalizers: max MAC bucket, max layer count, max ψ.
+        let max_macs = raws.iter().flat_map(|r| r[..3].iter()).fold(1.0f64, |a, &b| a.max(b));
+        let max_layers = raws.iter().flat_map(|r| r[3..6].iter()).fold(1.0f64, |a, &b| a.max(b));
+        let max_bytes = raws.iter().map(|r| r[6]).fold(1.0f64, |a, b| a.max(b));
+        Ok(raws
+            .into_iter()
+            .map(|r| {
+                [
+                    r[0] / max_macs,
+                    r[1] / max_macs,
+                    r[2] / max_macs,
+                    r[3] / max_layers,
+                    r[4] / max_layers,
+                    r[5] / max_layers,
+                    r[6] / max_bytes,
+                ]
+            })
+            .collect())
+    }
+}
+
+/// Default artifact directory (relative to the repo root).
+pub fn default_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest should load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.model, "partnet");
+        assert_eq!(m.num_partitions, 9);
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
+        assert!(m.batch_sizes.contains(&1));
+    }
+
+    #[test]
+    fn entries_follow_presence_rules() {
+        let Some(m) = manifest() else { return };
+        let e0 = m.entry(1, 0).unwrap();
+        assert!(e0.front.is_none() && e0.back.is_some());
+        let ep = m.entry(1, m.num_partitions).unwrap();
+        assert!(ep.front.is_some() && ep.back.is_none());
+    }
+
+    #[test]
+    fn features_match_rust_model_zoo() {
+        // The manifest's raw features must agree with the rust-side
+        // PartNet definition — the L2/L3 contract.
+        let Some(m) = manifest() else { return };
+        let net = crate::models::zoo::partnet();
+        for p in 0..=net.num_partitions() {
+            let e = m.entry(1, p).unwrap();
+            let s = net.backend_stats(p);
+            assert_eq!(e.raw_features[0], s.macs_conv as f64, "m_conv at p={p}");
+            assert_eq!(e.raw_features[1], s.macs_fc as f64, "m_fc at p={p}");
+            assert_eq!(e.raw_features[3], s.n_conv as f64, "n_conv at p={p}");
+            assert_eq!(e.raw_features[4], s.n_fc as f64, "n_fc at p={p}");
+            assert_eq!(e.raw_features[6], net.intermediate_bytes(p) as f64, "psi at p={p}");
+        }
+    }
+
+    #[test]
+    fn context_vectors_normalized() {
+        let Some(m) = manifest() else { return };
+        let xs = m.context_vectors(1).unwrap();
+        assert_eq!(xs.len(), m.num_partitions + 1);
+        assert!(xs.last().unwrap().iter().all(|&v| v == 0.0), "MO arm must be zero");
+        for x in &xs {
+            for v in x {
+                assert!((0.0..=1.0).contains(v), "feature {v} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn psi_bytes_consistent_with_shape() {
+        let Some(m) = manifest() else { return };
+        for &b in &m.batch_sizes {
+            for p in 0..m.num_partitions {
+                let e = m.entry(b, p).unwrap();
+                let elems: usize = e.psi_shape.iter().product();
+                assert_eq!(e.psi_bytes, elems * 4, "batch={b} p={p}");
+            }
+        }
+    }
+}

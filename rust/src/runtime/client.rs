@@ -1,0 +1,73 @@
+//! PJRT client wrapper: load AOT-compiled HLO text, execute f32 tensors.
+//!
+//! This is the only place the `xla` crate is touched.  HLO **text** is the
+//! interchange format (jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids — see /opt/xla-example/README.md).  Artifacts are lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus executable cache keys (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled (partition, side, batch) executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected input element count (product of dims), for early errors.
+    pub in_elems: usize,
+    /// Input dims as i64 (what `Literal::reshape` wants).
+    pub in_dims: Vec<i64>,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact with a declared input shape.
+    pub fn load_hlo(&self, path: &Path, in_shape: &[usize]) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            in_elems: in_shape.iter().product(),
+            in_dims: in_shape.iter().map(|&d| d as i64).collect(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute on one f32 input tensor; returns the flat f32 output.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.in_elems,
+            "input has {} elements, executable expects {}",
+            input.len(),
+            self.in_elems
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&self.in_dims)
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>().context("reading f32 output")?)
+    }
+}

@@ -1,0 +1,186 @@
+//! Device/edge executors: compiled-partition caches over one PJRT client.
+//!
+//! A [`PartitionedModel`] owns, for one batch size, the compiled front and
+//! back executables of every partition point.  The *device* executor runs
+//! fronts, the *edge* executor runs backs; in this testbed both sit on the
+//! same CPU PJRT client (DESIGN.md §Hardware-Adaptation), separated by the
+//! simulated uplink in the coordinator.  Execution times are measured with
+//! a monotonic clock and reported per call.
+
+use super::artifacts::Manifest;
+use super::client::{Executable, Runtime};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Compiled partitions of one model at one batch size.
+pub struct PartitionedModel {
+    pub batch: usize,
+    pub num_partitions: usize,
+    /// fronts[p] is Some for p ≥ 1.
+    fronts: Vec<Option<Executable>>,
+    /// backs[p] is Some for p < P.
+    backs: Vec<Option<Executable>>,
+    /// ψ_p byte sizes (what crosses the simulated link).
+    pub psi_bytes: Vec<usize>,
+    /// Flat input element count per frame batch.
+    pub input_elems: usize,
+    pub num_classes: usize,
+}
+
+/// Result of one side execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    pub data: Vec<f32>,
+    pub elapsed_ms: f64,
+}
+
+impl PartitionedModel {
+    /// Compile every (front, back) pair for `batch` from the manifest.
+    pub fn compile(rt: &Runtime, manifest: &Manifest, batch: usize) -> Result<PartitionedModel> {
+        anyhow::ensure!(
+            manifest.batch_sizes.contains(&batch),
+            "batch {batch} not in manifest (have {:?})",
+            manifest.batch_sizes
+        );
+        let p_max = manifest.num_partitions;
+        let mut input_shape = vec![batch];
+        input_shape.extend(&manifest.input_shape);
+        let input_elems = input_shape.iter().product();
+
+        let mut fronts = Vec::with_capacity(p_max + 1);
+        let mut backs = Vec::with_capacity(p_max + 1);
+        let mut psi_bytes = Vec::with_capacity(p_max + 1);
+        for p in 0..=p_max {
+            let e = manifest
+                .entry(batch, p)
+                .with_context(|| format!("manifest entry batch={batch} p={p}"))?;
+            psi_bytes.push(e.psi_bytes);
+            fronts.push(match &e.front {
+                Some(path) => Some(rt.load_hlo(path, &input_shape)?),
+                None => None,
+            });
+            backs.push(match &e.back {
+                Some(path) => Some(rt.load_hlo(path, &e.psi_shape)?),
+                None => None,
+            });
+        }
+        Ok(PartitionedModel {
+            batch,
+            num_partitions: p_max,
+            fronts,
+            backs,
+            psi_bytes,
+            input_elems,
+            num_classes: manifest.num_classes,
+        })
+    }
+
+    /// Run the front partition (device side). For p = 0 this is a no-op
+    /// pass-through: the raw input is what crosses the link.
+    pub fn run_front(&self, p: usize, input: &[f32]) -> Result<ExecOutput> {
+        anyhow::ensure!(p <= self.num_partitions, "partition {p} out of range");
+        anyhow::ensure!(
+            input.len() == self.input_elems,
+            "input {} elems, expected {}",
+            input.len(),
+            self.input_elems
+        );
+        match &self.fronts[p] {
+            None => Ok(ExecOutput { data: input.to_vec(), elapsed_ms: 0.0 }),
+            Some(exe) => {
+                let start = Instant::now();
+                let data = exe.run(input)?;
+                Ok(ExecOutput { data, elapsed_ms: start.elapsed().as_secs_f64() * 1e3 })
+            }
+        }
+    }
+
+    /// Run the back partition (edge side). For p = P this is a no-op:
+    /// the front already produced the logits on-device.
+    pub fn run_back(&self, p: usize, psi: &[f32]) -> Result<ExecOutput> {
+        anyhow::ensure!(p <= self.num_partitions, "partition {p} out of range");
+        match &self.backs[p] {
+            None => Ok(ExecOutput { data: psi.to_vec(), elapsed_ms: 0.0 }),
+            Some(exe) => {
+                let start = Instant::now();
+                let data = exe.run(psi)?;
+                Ok(ExecOutput { data, elapsed_ms: start.elapsed().as_secs_f64() * 1e3 })
+            }
+        }
+    }
+
+    /// Full collaborative inference at partition p (front → back), no link.
+    /// Returns (logits, front ms, back ms, ψ bytes).
+    pub fn run_split(&self, p: usize, input: &[f32]) -> Result<(Vec<f32>, f64, f64, usize)> {
+        let front = self.run_front(p, input)?;
+        let back = self.run_back(p, &front.data)?;
+        Ok((back.data, front.elapsed_ms, back.elapsed_ms, self.psi_bytes[p]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn model() -> Option<(Runtime, PartitionedModel)> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        let m = Manifest::load(&dir).expect("manifest");
+        let pm = PartitionedModel::compile(&rt, &m, 1).expect("compile partitions");
+        Some((rt, pm))
+    }
+
+    fn input(pm: &PartitionedModel, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..pm.input_elems).map(|_| rng.uniform(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn all_partitions_agree_with_full_model() {
+        // The core L2↔L3 numerical contract: every split reproduces the
+        // unpartitioned logits.
+        let Some((_rt, pm)) = model() else { return };
+        let x = input(&pm, 1);
+        let (full, _, _, _) = pm.run_split(0, &x).expect("p=0 split");
+        assert_eq!(full.len(), pm.num_classes);
+        for p in 1..=pm.num_partitions {
+            let (logits, _, _, _) = pm.run_split(p, &x).expect("split");
+            for (i, (a, b)) in logits.iter().zip(&full).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "p={p} logit[{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn psi_sizes_match_manifest() {
+        let Some((_rt, pm)) = model() else { return };
+        let x = input(&pm, 2);
+        for p in 0..pm.num_partitions {
+            let front = pm.run_front(p, &x).expect("front");
+            assert_eq!(front.data.len() * 4, pm.psi_bytes[p], "p={p}");
+        }
+    }
+
+    #[test]
+    fn deterministic_outputs() {
+        let Some((_rt, pm)) = model() else { return };
+        let x = input(&pm, 3);
+        let (a, _, _, _) = pm.run_split(3, &x).unwrap();
+        let (b, _, _, _) = pm.run_split(3, &x).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_wrong_input_size() {
+        let Some((_rt, pm)) = model() else { return };
+        assert!(pm.run_front(1, &[0.0; 7]).is_err());
+        assert!(pm.run_front(99, &input(&pm, 4)).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Request-path runtime: PJRT execution of AOT-compiled model partitions.
+//!
+//! [`client`] wraps the `xla` crate (PJRT CPU); [`artifacts`] parses the
+//! manifest contract written by `python/compile/aot.py`; [`executor`]
+//! caches compiled front/back executables per partition point and batch
+//! size.  Python never runs here — artifacts are self-contained HLO text
+//! with weights baked in as constants.
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::Manifest;
+pub use client::{Executable, Runtime};
+pub use executor::{ExecOutput, PartitionedModel};

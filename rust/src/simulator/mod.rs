@@ -1,0 +1,292 @@
+//! Ground-truth environment simulator (the paper's physical testbed,
+//! substituted per DESIGN.md §Hardware-Adaptation).
+//!
+//! An [`Environment`] combines a network model, a device profile, an edge
+//! profile with a time-varying workload, and an uplink rate process into
+//! the end-to-end delay ground truth of DESIGN.md §4:
+//!
+//! ```text
+//! d_p(t) = d_p^f                          front-end (device, known)
+//!        + ψ_p·8/rate(t) + rtt            uplink transmission
+//!        + edge.delay(backend_stats(p))   back-end (edge, unknown to ANS)
+//!        + N(0, σ²)                       measurement noise
+//! ```
+//!
+//! Policies observe only `d_p^f` (known a priori, as in the paper) and the
+//! noisy aggregate `d_p^e = d_p^tx + d_p^b` for the arm they pulled —
+//! never the rate, the workload, or the decomposition.
+
+pub mod compute;
+pub mod network;
+pub mod scenario;
+
+pub use compute::{
+    profile_by_name, ComputeProfile, Workload, DEVICE_MAXN, DEVICE_MAXQ, EDGE_CPU, EDGE_GPU,
+};
+pub use network::{tx_delay_ms, TokenBucket, Uplink};
+
+/// Default link round-trip latency (point-to-point Wi-Fi).  Kept small:
+/// an additive constant is the one term the paper's 7-dim linear model
+/// cannot represent (no intercept feature), so it bounds ANS's best
+/// achievable prediction error.
+pub const DEFAULT_RTT_MS: f64 = 0.5;
+
+use crate::models::{Network, SpanStats};
+use crate::util::rng::Rng;
+
+/// The complete collaborative-inference environment for one experiment.
+#[derive(Debug, Clone)]
+pub struct Environment {
+    pub net: Network,
+    pub device: ComputeProfile,
+    pub edge: ComputeProfile,
+    pub workload: Workload,
+    pub uplink: Uplink,
+    pub rtt_ms: f64,
+    pub noise_std_ms: f64,
+    rng: Rng,
+    /// Cached d_p^f for every p.
+    front: Vec<f64>,
+    /// Cached back-end span stats for every p.
+    back_stats: Vec<SpanStats>,
+    /// Cached ψ_p bytes for every p.
+    psi_bytes: Vec<usize>,
+    /// State advanced by [`Environment::tick`].
+    frame: usize,
+    current_rate: f64,
+    current_load: f64,
+}
+
+impl Environment {
+    pub fn new(
+        net: Network,
+        device: ComputeProfile,
+        edge: ComputeProfile,
+        workload: Workload,
+        uplink: Uplink,
+        seed: u64,
+    ) -> Environment {
+        let front: Vec<f64> = (0..=net.num_partitions())
+            .map(|p| device.delay_ms(&net.frontend_stats(p), 1.0))
+            .collect();
+        let back_stats: Vec<SpanStats> =
+            (0..=net.num_partitions()).map(|p| net.backend_stats(p)).collect();
+        let psi_bytes: Vec<usize> =
+            (0..=net.num_partitions()).map(|p| net.intermediate_bytes(p)).collect();
+        let mut env = Environment {
+            net,
+            device,
+            edge,
+            workload,
+            uplink,
+            rtt_ms: DEFAULT_RTT_MS,
+            noise_std_ms: 2.0,
+            rng: Rng::new(seed),
+            front,
+            back_stats,
+            psi_bytes,
+            frame: 0,
+            current_rate: 1.0,
+            current_load: 1.0,
+        };
+        env.tick(0);
+        env
+    }
+
+    /// Convenience: constant-rate GPU-edge Max-N device environment.
+    pub fn simple(net: Network, rate_mbps: f64, seed: u64) -> Environment {
+        Environment::new(
+            net,
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::constant(1.0),
+            Uplink::constant(rate_mbps),
+            seed,
+        )
+    }
+
+    /// Advance the environment to frame `t` (call once per frame, in order).
+    pub fn tick(&mut self, t: usize) {
+        self.frame = t;
+        self.current_rate = self.uplink.rate_at(t);
+        self.current_load = self.workload.at(t);
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.net.num_partitions()
+    }
+
+    pub fn current_rate_mbps(&self) -> f64 {
+        self.current_rate
+    }
+
+    pub fn current_load(&self) -> f64 {
+        self.current_load
+    }
+
+    /// Front-end delay d_p^f — known to the decision maker (paper §2.1).
+    pub fn front_delay(&self, p: usize) -> f64 {
+        self.front[p]
+    }
+
+    /// All front-end delays (what the device profiles offline for itself).
+    pub fn front_delays(&self) -> &[f64] {
+        &self.front
+    }
+
+    /// Expected edge-offloading delay d_p^e = d_p^tx + d_p^b (no noise).
+    pub fn expected_edge_delay(&self, p: usize) -> f64 {
+        if p == self.num_partitions() {
+            return 0.0; // MO: no offloading leg
+        }
+        tx_delay_ms(self.psi_bytes[p], self.current_rate, self.rtt_ms)
+            + self.edge.delay_ms(&self.back_stats[p], self.current_load)
+    }
+
+    /// Expected end-to-end delay of partition p at the current frame.
+    pub fn expected_total(&self, p: usize) -> f64 {
+        self.front_delay(p) + self.expected_edge_delay(p)
+    }
+
+    /// One noisy observation of d_p^e — what the device actually measures.
+    pub fn observe_edge_delay(&mut self, p: usize) -> f64 {
+        let mean = self.expected_edge_delay(p);
+        if p == self.num_partitions() {
+            return 0.0;
+        }
+        (mean + self.rng.normal(0.0, self.noise_std_ms)).max(0.0)
+    }
+
+    /// The oracle's choice: argmin_p of the expected end-to-end delay.
+    pub fn oracle_partition(&self) -> usize {
+        (0..=self.num_partitions())
+            .min_by(|&a, &b| {
+                self.expected_total(a).partial_cmp(&self.expected_total(b)).unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Expected delay of the oracle's choice.
+    pub fn oracle_delay(&self) -> f64 {
+        self.expected_total(self.oracle_partition())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn vgg_env(rate: f64) -> Environment {
+        Environment::simple(zoo::vgg16(), rate, 42)
+    }
+
+    #[test]
+    fn fig1_shape_mid_rate_prefers_mid_split() {
+        // Paper Fig 1: at 12 Mbps the best partition is an interior point,
+        // beating both EO (p=0) and MO (p=P) by a dominant margin (~30%).
+        let env = vgg_env(12.0);
+        let p_star = env.oracle_partition();
+        let p_max = env.num_partitions();
+        assert!(p_star != 0 && p_star != p_max, "optimal p={p_star} should be interior");
+        let best = env.expected_total(p_star);
+        let eo = env.expected_total(0);
+        let mo = env.expected_total(p_max);
+        let improvement = 1.0 - best / eo.min(mo);
+        assert!(
+            (0.10..0.50).contains(&improvement),
+            "improvement {improvement} (best {best}, eo {eo}, mo {mo})"
+        );
+    }
+
+    #[test]
+    fn fig3_low_rate_pushes_partition_later() {
+        // Paper Fig 3: 4 Mbps -> MO optimal; 50 Mbps -> EO/early optimal.
+        let lo = vgg_env(4.0);
+        assert_eq!(lo.oracle_partition(), lo.num_partitions(), "4 Mbps should favor MO");
+        let hi = vgg_env(50.0);
+        assert!(hi.oracle_partition() <= 1, "50 Mbps should favor EO/early");
+        let mid = vgg_env(16.0);
+        let p = mid.oracle_partition();
+        assert!(p > 0 && p < mid.num_partitions(), "16 Mbps interior, got {p}");
+    }
+
+    #[test]
+    fn fig2_low_capability_edge_pushes_to_device() {
+        // Paper Fig 2: CPU + high workload edge makes MO optimal.
+        let net = zoo::vgg16();
+        let env = Environment::new(
+            net,
+            DEVICE_MAXN,
+            EDGE_CPU,
+            Workload::constant(4.0),
+            Uplink::constant(12.0),
+            1,
+        );
+        assert_eq!(env.oracle_partition(), env.num_partitions());
+    }
+
+    #[test]
+    fn mo_edge_delay_is_zero_and_noiseless() {
+        let mut env = vgg_env(12.0);
+        let p_max = env.num_partitions();
+        assert_eq!(env.expected_edge_delay(p_max), 0.0);
+        assert_eq!(env.observe_edge_delay(p_max), 0.0);
+    }
+
+    #[test]
+    fn observations_are_noisy_but_unbiased() {
+        let mut env = vgg_env(12.0);
+        let mean = env.expected_edge_delay(3);
+        let n = 3000;
+        let avg: f64 = (0..n).map(|_| env.observe_edge_delay(3)).sum::<f64>() / n as f64;
+        assert!((avg - mean).abs() < 0.25, "avg {avg} vs mean {mean}");
+        let first = env.observe_edge_delay(3);
+        let second = env.observe_edge_delay(3);
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn tick_applies_rate_schedule() {
+        let net = zoo::vgg16();
+        let mut env = Environment::new(
+            net,
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::constant(1.0),
+            Uplink::steps(vec![(0, 50.0), (100, 4.0)]),
+            1,
+        );
+        env.tick(0);
+        let d0 = env.expected_edge_delay(0);
+        env.tick(100);
+        let d1 = env.expected_edge_delay(0);
+        assert!(d1 > d0 * 5.0, "rate drop must inflate tx delay: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn front_delays_monotone_nondecreasing() {
+        let env = vgg_env(12.0);
+        for w in env.front_delays().windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "front delay must grow with p");
+        }
+        assert_eq!(env.front_delay(0), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = vgg_env(12.0);
+        let mut b = vgg_env(12.0);
+        for p in 0..5 {
+            assert_eq!(a.observe_edge_delay(p), b.observe_edge_delay(p));
+        }
+    }
+
+    #[test]
+    fn partnet_env_works() {
+        let env = Environment::simple(zoo::partnet(), 10.0, 3);
+        let p = env.oracle_partition();
+        assert!(p <= env.num_partitions());
+        assert!(env.oracle_delay() > 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Wireless uplink models (the testbed's point-to-point Wi-Fi shaped with
+//! WonderShaper, replaced here per DESIGN.md §Hardware-Adaptation).
+//!
+//! Three rate processes cover every experiment in the paper:
+//! * [`Uplink::Constant`] — Fig 1/2/3/11/16/17 fixed-rate sweeps;
+//! * [`Uplink::Steps`] — scripted piecewise traces (Fig 12/14);
+//! * [`Uplink::Markov`] — two-state fast/slow switching chain (Fig 13).
+//!
+//! A [`TokenBucket`] provides *real* byte-level shaping for the end-to-end
+//! serving path, where actual intermediate tensors cross the simulated link.
+
+use crate::util::rng::Rng;
+
+/// Uplink rate process: maps a frame index to the current rate in Mbps.
+#[derive(Debug, Clone)]
+pub enum Uplink {
+    /// Fixed rate.
+    Constant(f64),
+    /// Piecewise-constant schedule: `(start_frame, rate_mbps)` pairs,
+    /// sorted by frame; the rate of the last segment ≤ t applies.
+    Steps(Vec<(usize, f64)>),
+    /// Two-state Markov chain (paper Fig 13): each frame switches between
+    /// `fast`/`slow` with probability `p_switch`.
+    Markov { fast: f64, slow: f64, p_switch: f64, state_fast: bool, rng: Rng },
+}
+
+impl Uplink {
+    pub fn constant(mbps: f64) -> Uplink {
+        assert!(mbps > 0.0);
+        Uplink::Constant(mbps)
+    }
+
+    pub fn steps(steps: Vec<(usize, f64)>) -> Uplink {
+        assert!(!steps.is_empty() && steps[0].0 == 0, "schedule must start at frame 0");
+        assert!(steps.windows(2).all(|w| w[0].0 < w[1].0), "frames must increase");
+        assert!(steps.iter().all(|&(_, r)| r > 0.0));
+        Uplink::Steps(steps)
+    }
+
+    pub fn markov(fast: f64, slow: f64, p_switch: f64, seed: u64) -> Uplink {
+        assert!(fast > 0.0 && slow > 0.0 && (0.0..=1.0).contains(&p_switch));
+        Uplink::Markov { fast, slow, p_switch, state_fast: true, rng: Rng::new(seed) }
+    }
+
+    /// Advance to frame `t` and return the rate. For the Markov process this
+    /// must be called once per frame in order (it mutates the chain state).
+    pub fn rate_at(&mut self, t: usize) -> f64 {
+        match self {
+            Uplink::Constant(r) => *r,
+            Uplink::Steps(steps) => {
+                let mut rate = steps[0].1;
+                for &(start, r) in steps.iter() {
+                    if start <= t {
+                        rate = r;
+                    } else {
+                        break;
+                    }
+                }
+                rate
+            }
+            Uplink::Markov { fast, slow, p_switch, state_fast, rng } => {
+                if rng.bernoulli(*p_switch) {
+                    *state_fast = !*state_fast;
+                }
+                if *state_fast { *fast } else { *slow }
+            }
+        }
+    }
+}
+
+/// Transmission delay in ms for `bytes` at `rate_mbps`, plus one RTT.
+pub fn tx_delay_ms(bytes: usize, rate_mbps: f64, rtt_ms: f64) -> f64 {
+    assert!(rate_mbps > 0.0);
+    if bytes == 0 {
+        return 0.0; // MO: nothing crosses the link
+    }
+    bytes as f64 * 8.0 / (rate_mbps * 1e6) * 1e3 + rtt_ms
+}
+
+/// Byte-level link shaper for the real serving path (virtual-time FIFO).
+///
+/// Models the shaped point-to-point link as a single server of the given
+/// rate: a payload starts serializing when the link is free and occupies
+/// it for `bytes / rate`; `consume` returns the total delay (queueing +
+/// serialization, in ms) the payload experiences.  Deterministic — driven
+/// by a logical clock, not wall time.  WonderShaper-style live retargeting
+/// via [`TokenBucket::set_rate`].
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate_bytes_per_ms: f64,
+    /// Virtual time (ms) at which the link becomes free.
+    next_free_ms: f64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_mbps: f64) -> TokenBucket {
+        assert!(rate_mbps > 0.0);
+        TokenBucket { rate_bytes_per_ms: rate_mbps * 1e6 / 8.0 / 1e3, next_free_ms: 0.0 }
+    }
+
+    /// Retarget the shaper (WonderShaper-style live rate change).
+    pub fn set_rate(&mut self, rate_mbps: f64) {
+        assert!(rate_mbps > 0.0);
+        self.rate_bytes_per_ms = rate_mbps * 1e6 / 8.0 / 1e3;
+    }
+
+    /// Send `bytes` at logical time `now_ms`; returns the queuing +
+    /// serialization delay in ms the payload experiences.
+    pub fn consume(&mut self, bytes: usize, now_ms: f64) -> f64 {
+        let start = now_ms.max(self.next_free_ms);
+        let done = start + bytes as f64 / self.rate_bytes_per_ms;
+        self.next_free_ms = done;
+        done - now_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_rate() {
+        let mut u = Uplink::constant(12.0);
+        assert_eq!(u.rate_at(0), 12.0);
+        assert_eq!(u.rate_at(999), 12.0);
+    }
+
+    #[test]
+    fn steps_schedule() {
+        let mut u = Uplink::steps(vec![(0, 50.0), (150, 1.0), (390, 16.0)]);
+        assert_eq!(u.rate_at(0), 50.0);
+        assert_eq!(u.rate_at(149), 50.0);
+        assert_eq!(u.rate_at(150), 1.0);
+        assert_eq!(u.rate_at(389), 1.0);
+        assert_eq!(u.rate_at(1000), 16.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "start at frame 0")]
+    fn steps_must_start_at_zero() {
+        Uplink::steps(vec![(5, 10.0)]);
+    }
+
+    #[test]
+    fn markov_switches_at_expected_rate() {
+        let mut u = Uplink::markov(50.0, 5.0, 0.3, 7);
+        let mut switches = 0;
+        let mut last = u.rate_at(0);
+        for t in 1..10_000 {
+            let r = u.rate_at(t);
+            if r != last {
+                switches += 1;
+            }
+            last = r;
+        }
+        let rate = switches as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "switch rate {rate}");
+    }
+
+    #[test]
+    fn markov_zero_prob_never_switches() {
+        let mut u = Uplink::markov(50.0, 5.0, 0.0, 1);
+        for t in 0..100 {
+            assert_eq!(u.rate_at(t), 50.0);
+        }
+    }
+
+    #[test]
+    fn tx_delay_math() {
+        // 1.5 MB at 12 Mbps = 1 second + rtt.
+        let d = tx_delay_ms(1_500_000, 12.0, 2.0);
+        assert!((d - 1002.0).abs() < 1e-9, "{d}");
+        assert_eq!(tx_delay_ms(0, 12.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn token_bucket_serialization_time() {
+        // 1 Mbps = 125 bytes/ms; 1250 bytes take 10 ms on an idle link.
+        let mut tb = TokenBucket::new(1.0);
+        let d = tb.consume(1250, 0.0);
+        assert!((d - 10.0).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn token_bucket_queues_behind_inflight_payload() {
+        let mut tb = TokenBucket::new(1.0);
+        let _ = tb.consume(1000, 0.0); // occupies the link for 8 ms
+        let d = tb.consume(125, 0.0); // queues behind it: 8 + 1 ms
+        assert!((d - 9.0).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn token_bucket_idle_link_resets_queue() {
+        let mut tb = TokenBucket::new(1.0);
+        let _ = tb.consume(1000, 0.0); // busy until t=8
+        let d = tb.consume(125, 8.0); // link already free again
+        assert!((d - 1.0).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn token_bucket_conservation() {
+        // Total delay of back-to-back sends == total_bytes / rate exactly.
+        let mut tb = TokenBucket::new(8.0); // 1000 bytes/ms
+        let mut now = 0.0;
+        let mut total_delay = 0.0;
+        let sends = 200;
+        for _ in 0..sends {
+            let d = tb.consume(5000, now);
+            total_delay += d;
+            now += d; // back-to-back
+        }
+        let expect = sends as f64 * 5000.0 / 1000.0;
+        assert!((total_delay - expect).abs() / expect < 1e-9, "{total_delay} vs {expect}");
+    }
+
+    #[test]
+    fn token_bucket_rate_change_applies() {
+        let mut tb = TokenBucket::new(8.0);
+        let fast = tb.consume(8000, 0.0);
+        tb.set_rate(1.0);
+        let slow = tb.consume(8000, 100.0);
+        assert!((slow / fast - 8.0).abs() < 1e-9, "{fast} vs {slow}");
+    }
+}

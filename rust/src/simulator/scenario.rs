@@ -1,0 +1,121 @@
+//! Scripted experiment scenarios: the exact environment traces behind the
+//! paper's adaptation experiments (Fig 12, 13, 14), expressed once here so
+//! benches, examples and tests share them.
+
+use super::{compute, network, Environment, Workload};
+use crate::models::Network;
+
+/// Fig 12(a): uplink rate trace — high (50) → bad (1) at frame 150 →
+/// medium (16) at frame 390 → high (50) again at frame 630; 800 frames.
+pub fn fig12a_uplink() -> network::Uplink {
+    network::Uplink::steps(vec![(0, 50.0), (150, 1.0), (390, 16.0), (630, 50.0)])
+}
+
+/// Total frames in the Fig 12 traces.
+pub const FIG12_FRAMES: usize = 800;
+
+/// Fig 12(a) environment: network condition changes, constant edge load.
+pub fn fig12a(net: Network, seed: u64) -> Environment {
+    Environment::new(
+        net,
+        compute::DEVICE_MAXN,
+        compute::EDGE_GPU,
+        Workload::constant(1.0),
+        fig12a_uplink(),
+        seed,
+    )
+}
+
+/// Fig 12(b): edge workload trace at a constant medium uplink — idle →
+/// heavily loaded at 150 → moderate at 390 → idle at 630.
+pub fn fig12b(net: Network, seed: u64) -> Environment {
+    Environment::new(
+        net,
+        compute::DEVICE_MAXN,
+        compute::EDGE_CPU,
+        Workload::steps(vec![(0, 1.0), (150, 6.0), (390, 2.0), (630, 1.0)]),
+        network::Uplink::constant(16.0),
+        seed,
+    )
+}
+
+/// Fig 13: two-state Markov network (fast 50 / slow 5 Mbps) with switch
+/// probability `p_f` per frame.
+pub fn fig13(net: Network, p_f: f64, seed: u64) -> Environment {
+    Environment::new(
+        net,
+        compute::DEVICE_MAXN,
+        compute::EDGE_GPU,
+        Workload::constant(1.0),
+        network::Uplink::markov(50.0, 5.0, p_f, seed),
+        seed ^ 0x5eed,
+    )
+}
+
+/// Fig 14: starts in a bad network (MO optimal), switches to good at
+/// `t1` (interior split optimal).  Returns (environment, t1).
+pub fn fig14(net: Network, t1: usize, total: usize, seed: u64) -> (Environment, usize) {
+    assert!(t1 < total);
+    let env = Environment::new(
+        net,
+        compute::DEVICE_MAXN,
+        compute::EDGE_GPU,
+        Workload::constant(1.0),
+        network::Uplink::steps(vec![(0, 1.0), (t1, 16.0)]),
+        seed,
+    );
+    (env, t1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn fig12a_phases_change_the_optimum() {
+        let mut env = fig12a(zoo::vgg16(), 1);
+        env.tick(0);
+        let p_high = env.oracle_partition();
+        env.tick(200);
+        let p_bad = env.oracle_partition();
+        env.tick(450);
+        let p_mid = env.oracle_partition();
+        // High rate -> EO/early; bad network -> MO; medium -> interior.
+        assert!(p_high <= 1, "high-rate optimum {p_high}");
+        assert_eq!(p_bad, env.num_partitions(), "bad-network optimum {p_bad}");
+        assert!(p_mid > 0 && p_mid < env.num_partitions(), "mid optimum {p_mid}");
+    }
+
+    #[test]
+    fn fig12b_load_spike_pushes_toward_device() {
+        let mut env = fig12b(zoo::vgg16(), 1);
+        env.tick(0);
+        let p_idle = env.oracle_partition();
+        env.tick(200);
+        let p_loaded = env.oracle_partition();
+        assert!(p_loaded >= p_idle, "load spike should push later: {p_idle} -> {p_loaded}");
+        assert_eq!(p_loaded, env.num_partitions());
+    }
+
+    #[test]
+    fn fig14_transition_flips_optimum() {
+        let (mut env, t1) = fig14(zoo::vgg16(), 300, 900, 2);
+        env.tick(0);
+        assert_eq!(env.oracle_partition(), env.num_partitions());
+        env.tick(t1);
+        let p = env.oracle_partition();
+        assert!(p < env.num_partitions(), "after switch optimum {p}");
+    }
+
+    #[test]
+    fn fig13_switches_states() {
+        let mut env = fig13(zoo::vgg16(), 0.1, 3);
+        let mut rates = std::collections::BTreeSet::new();
+        for t in 0..200 {
+            env.tick(t);
+            rates.insert(env.current_rate_mbps() as u64);
+        }
+        assert_eq!(rates.len(), 2, "both Markov states must occur");
+    }
+}

@@ -1,0 +1,176 @@
+//! Micro/milli-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, fixed sample count, trimmed-mean + p50/p95 reporting, and a
+//! substring filter from argv so `cargo bench fig11` runs one exhibit.
+//! Results are also appended as CSV rows under `bench_results/`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats;
+
+/// One measured benchmark result (times in nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        stats::trimmed_mean(&self.samples, 0.05)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples, 0.5)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples, 0.95)
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with warmup and sample control.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+    filter: Option<String>,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    /// Construct from argv: any positional argument is a substring filter.
+    pub fn from_env() -> Bench {
+        // `cargo bench` passes `--bench`; ignore dashed args.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        Bench { warmup_iters: 3, samples: 30, iters_per_sample: 1, filter, results: Vec::new() }
+    }
+
+    pub fn with_samples(mut self, samples: usize) -> Bench {
+        self.samples = samples;
+        self
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => name.contains(f.as_str()),
+        }
+    }
+
+    /// Measure `f`, which performs one unit of work per call.
+    pub fn run<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                black_box(f());
+            }
+            samples.push(start.elapsed().as_nanos() as f64 / self.iters_per_sample as f64);
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        println!("{}", m.report_line());
+        self.results.push(m);
+    }
+
+    /// Write accumulated results as a CSV under `bench_results/`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_results")?;
+        let mut out = String::from("name,mean_ns,p50_ns,p95_ns,n\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{:.1},{:.1},{:.1},{}\n",
+                m.name,
+                m.mean_ns(),
+                m.p50_ns(),
+                m.p95_ns(),
+                m.samples.len()
+            ));
+        }
+        std::fs::write(format!("bench_results/{file}"), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup_iters: 1,
+            samples: 5,
+            iters_per_sample: 10,
+            filter: None,
+            results: Vec::new(),
+        };
+        b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns() > 0.0);
+        assert!(b.results[0].p95_ns() >= b.results[0].p50_ns());
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench {
+            warmup_iters: 0,
+            samples: 1,
+            iters_per_sample: 1,
+            filter: Some("fig1".into()),
+            results: Vec::new(),
+        };
+        assert!(b.enabled("fig1_vgg16"));
+        assert!(!b.enabled("fig2_edge"));
+        b.run("fig2_edge", || 0);
+        assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `prog <subcommand> [--key value]... [--flag]...` with typed
+//! accessors, defaults, and generated `--help` text.  All knobs of the
+//! `ans` binary and the benches go through this.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments: a subcommand plus `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(CliError("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected number, got `{s}`"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got `{s}`"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got `{s}`"))),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Names of all `--key value` options provided (for validation).
+    pub fn option_names(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --frames 500 --policy mu-linucb --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("frames", 0).unwrap(), 500);
+        assert_eq!(a.str_or("policy", "x"), "mu-linucb");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --mu=0.25 --out=results");
+        assert_eq!(a.f64_or("mu", 0.0).unwrap(), 0.25);
+        assert_eq!(a.str_or("out", ""), "results");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.f64_or("alpha", 1.5).unwrap(), 1.5);
+        assert_eq!(a.usize_or("frames", 300).unwrap(), 300);
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("serve --frames abc");
+        assert!(a.usize_or("frames", 0).is_err());
+        assert!(a.f64_or("frames", 0.0).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("bench fig1 fig2 --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional(), &["fig1".to_string(), "fig2".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("x --verbose --frames 3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("frames", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: PRNG, JSON, stats, CLI, bench and property-test
+//! frameworks.  These stand in for `rand`, `serde_json`, `clap`,
+//! `criterion` and `proptest`, none of which are reachable in this build
+//! environment (see DESIGN.md §2, substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,171 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and checks `prop` on each; on failure it reports the failing
+//! input (via `Debug`), the case index, and the seed needed to replay.
+//! A lightweight shrink loop retries the property on `shrink()`-produced
+//! simplifications of the failing input, keeping the smallest failure.
+//!
+//! Used by the L3 test suite for bandit/linalg/simulator invariants.
+
+use super::rng::Rng;
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Inputs that know how to propose simpler versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate simplifications, roughly in decreasing aggressiveness.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        if self.abs() > 1.0 {
+            out.push(self.signum());
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // Shrink one element at a time (first position only, to bound cost).
+            for (i, x) in self.iter().enumerate().take(4) {
+                for sx in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`; panic with replay info on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Shrink + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink loop: greedily accept any simplification that still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: loop {
+                for cand in best.shrink() {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {best:?}\n  error: {best_msg}\n  \
+                 (shrunk from: {input:?})"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.below(100),
+            |_x| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 50, |r| r.below(100), |&x| ensure(x < 40, format!("x={x}")));
+    }
+
+    #[test]
+    fn shrinking_reduces_vec() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(
+                3,
+                20,
+                |r| (0..r.below(30) + 5).map(|_| r.uniform(0.0, 10.0)).collect::<Vec<f64>>(),
+                |v| ensure(v.len() < 3, format!("len={}", v.len())),
+            );
+        });
+        let payload = caught.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap();
+        // The shrunk failing input should be close to the boundary (len 3..4).
+        assert!(msg.contains("property failed"), "{msg}");
+    }
+
+    #[test]
+    fn ensure_close_scales() {
+        assert!(ensure_close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(ensure_close(1.0, 1.5, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! SSIM-threshold key-frame detection and frame weighting (paper §2.3).
+//!
+//! A frame is a **key frame** when its mean SSIM against the previous
+//! frame falls below a threshold — it is "sufficiently different" (scene
+//! change, object entrance).  Key frames receive weight `L_key`, others
+//! `L_non_key`, with `0 < L_non_key < L_key < 1` (theory assumption (iv));
+//! μLinUCB scales its confidence term by `√(1 − L_t)`, so key frames are
+//! served exploitation-first.
+
+use super::ssim::mean_ssim;
+use super::stream::Frame;
+
+/// Frame weights for key / non-key frames.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    pub key: f64,
+    pub non_key: f64,
+}
+
+impl Weights {
+    pub fn new(key: f64, non_key: f64) -> Weights {
+        assert!(
+            0.0 < non_key && non_key < key && key < 1.0,
+            "need 0 < L_non_key < L_key < 1, got non_key={non_key} key={key}"
+        );
+        Weights { key, non_key }
+    }
+
+    /// The paper's defaults (high differentiation).
+    pub fn default_paper() -> Weights {
+        Weights::new(0.8, 0.2)
+    }
+}
+
+/// Stateful detector: compares each frame with its predecessor.
+#[derive(Debug)]
+pub struct KeyframeDetector {
+    pub threshold: f64,
+    pub weights: Weights,
+    prev: Option<Frame>,
+}
+
+/// Per-frame detection outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameClass {
+    pub is_key: bool,
+    /// SSIM against the previous frame (1.0 for the first frame).
+    pub ssim: f64,
+    /// The weight L_t handed to the learner.
+    pub weight: f64,
+}
+
+impl KeyframeDetector {
+    pub fn new(threshold: f64, weights: Weights) -> KeyframeDetector {
+        assert!((0.0..=1.0).contains(&threshold));
+        KeyframeDetector { threshold, weights, prev: None }
+    }
+
+    /// Classify the next frame of the stream.
+    ///
+    /// The first frame is always a key frame (it opens the scene).
+    /// With `threshold = 1.0` every frame classifies as key (paper
+    /// Fig 15(a): "when threshold is set to 1, all frames are key frames").
+    pub fn classify(&mut self, frame: &Frame) -> FrameClass {
+        let (is_key, ssim) = match &self.prev {
+            None => (true, 1.0),
+            Some(prev) => {
+                let s = mean_ssim(prev, frame);
+                (s < self.threshold, s)
+            }
+        };
+        self.prev = Some(frame.clone());
+        FrameClass {
+            is_key,
+            ssim,
+            weight: if is_key { self.weights.key } else { self.weights.non_key },
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::stream::VideoStream;
+
+    fn detector(threshold: f64) -> KeyframeDetector {
+        KeyframeDetector::new(threshold, Weights::default_paper())
+    }
+
+    #[test]
+    fn first_frame_is_key() {
+        let mut v = VideoStream::new(32, 32, 1);
+        let mut d = detector(0.7);
+        let c = d.classify(&v.next_frame());
+        assert!(c.is_key);
+        assert_eq!(c.weight, 0.8);
+    }
+
+    #[test]
+    fn smooth_motion_is_not_key() {
+        let mut v = VideoStream::new(48, 48, 2);
+        v.scene_cut_prob = 0.0;
+        v.entrance_prob = 0.0;
+        let mut d = detector(0.7);
+        d.classify(&v.next_frame());
+        let keys = (0..50).filter(|_| d.classify(&v.next_frame()).is_key).count();
+        assert!(keys <= 2, "smooth stream produced {keys} key frames");
+    }
+
+    #[test]
+    fn scene_cuts_are_detected() {
+        let mut v = VideoStream::new(48, 48, 3);
+        v.scene_cut_prob = 0.0;
+        v.entrance_prob = 0.0;
+        let mut d = detector(0.8);
+        d.classify(&v.next_frame());
+        // Force a scene cut by constructing a very different stream frame.
+        let mut v2 = VideoStream::new(48, 48, 999);
+        let cut = v2.next_frame();
+        let c = d.classify(&cut);
+        assert!(c.is_key, "scene cut missed (ssim={})", c.ssim);
+    }
+
+    #[test]
+    fn detector_tracks_ground_truth_events() {
+        // On a stream with generated events, key-frame recall should be
+        // decent: most scene cuts drop SSIM below a mid threshold.
+        let mut v = VideoStream::new(64, 64, 4);
+        v.scene_cut_prob = 0.05;
+        v.entrance_prob = 0.0;
+        let mut d = detector(0.85);
+        d.classify(&v.next_frame());
+        let (mut events, mut caught) = (0, 0);
+        for _ in 0..300 {
+            let f = v.next_frame();
+            let c = d.classify(&f);
+            if f.is_event {
+                events += 1;
+                if c.is_key {
+                    caught += 1;
+                }
+            }
+        }
+        assert!(events > 5);
+        assert!(
+            caught as f64 >= 0.7 * events as f64,
+            "recall {caught}/{events}"
+        );
+    }
+
+    #[test]
+    fn threshold_one_marks_everything_key() {
+        let mut v = VideoStream::new(32, 32, 5);
+        v.scene_cut_prob = 0.0;
+        v.entrance_prob = 0.0;
+        let mut d = detector(1.0);
+        for _ in 0..20 {
+            assert!(d.classify(&v.next_frame()).is_key);
+        }
+    }
+
+    #[test]
+    fn threshold_zero_marks_only_first_key() {
+        let mut v = VideoStream::new(32, 32, 6);
+        let mut d = detector(0.0);
+        assert!(d.classify(&v.next_frame()).is_key);
+        for _ in 0..20 {
+            assert!(!d.classify(&v.next_frame()).is_key);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "L_non_key < L_key")]
+    fn weights_validated() {
+        Weights::new(0.2, 0.8);
+    }
+
+    #[test]
+    fn reset_restarts_detection() {
+        let mut v = VideoStream::new(32, 32, 7);
+        let mut d = detector(0.7);
+        d.classify(&v.next_frame());
+        d.reset();
+        assert!(d.classify(&v.next_frame()).is_key);
+    }
+}

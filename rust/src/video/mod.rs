@@ -1,0 +1,18 @@
+//! Video substrate: synthetic frame source, SSIM, key-frame detection.
+//!
+//! The paper's testbed captures 1280×720 camera frames and flags key
+//! frames with SSIM against the previous frame (Fig 6) — key frames get
+//! larger weights L_t in μLinUCB.  We have no camera, so [`stream`]
+//! synthesizes a video: moving objects over a static background with
+//! occasional scene cuts and object entrances — exactly the events SSIM
+//! key-frame detection is meant to catch.  [`ssim`] is a full windowed
+//! structural-similarity implementation (Wang et al. 2004), and
+//! [`keyframe`] thresholds mean-SSIM to produce per-frame weights.
+
+pub mod keyframe;
+pub mod ssim;
+pub mod stream;
+
+pub use keyframe::{KeyframeDetector, Weights};
+pub use ssim::mean_ssim;
+pub use stream::{Frame, VideoStream};

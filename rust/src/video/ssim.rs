@@ -1,0 +1,156 @@
+//! Structural similarity (SSIM) — Wang, Bovik, Sheikh & Simoncelli 2004.
+//!
+//! Windowed implementation over 8×8 blocks with the standard stabilizing
+//! constants (K1 = 0.01, K2 = 0.03, L = 255): per window,
+//!
+//! ```text
+//! SSIM = (2 μx μy + C1)(2 σxy + C2) / ((μx² + μy² + C1)(σx² + σy² + C2))
+//! ```
+//!
+//! and [`mean_ssim`] averages windows over the frame — the quantity the
+//! paper thresholds for key-frame detection (Fig 6).
+
+use super::stream::Frame;
+
+const K1: f64 = 0.01;
+const K2: f64 = 0.03;
+const L: f64 = 255.0;
+/// Window edge (8×8 blocks, standard for fast SSIM variants).
+pub const WINDOW: usize = 8;
+
+/// SSIM of one aligned window pair.
+fn window_ssim(a: &Frame, b: &Frame, x0: usize, y0: usize, w: usize, h: usize) -> f64 {
+    let n = (w * h) as f64;
+    let (mut sa, mut sb) = (0.0, 0.0);
+    for y in y0..y0 + h {
+        for x in x0..x0 + w {
+            sa += a.pixel(x, y) as f64;
+            sb += b.pixel(x, y) as f64;
+        }
+    }
+    let (ma, mb) = (sa / n, sb / n);
+    let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+    for y in y0..y0 + h {
+        for x in x0..x0 + w {
+            let da = a.pixel(x, y) as f64 - ma;
+            let db = b.pixel(x, y) as f64 - mb;
+            va += da * da;
+            vb += db * db;
+            cov += da * db;
+        }
+    }
+    va /= n;
+    vb /= n;
+    cov /= n;
+    let c1 = (K1 * L) * (K1 * L);
+    let c2 = (K2 * L) * (K2 * L);
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2)) / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+/// Mean SSIM over all full 8×8 windows of two equally-sized frames.
+/// Returns a value in [-1, 1]; 1 means structurally identical.
+pub fn mean_ssim(a: &Frame, b: &Frame) -> f64 {
+    assert_eq!(
+        (a.width, a.height),
+        (b.width, b.height),
+        "SSIM needs equally sized frames"
+    );
+    assert!(a.width >= WINDOW && a.height >= WINDOW, "frame smaller than SSIM window");
+    let mut total = 0.0;
+    let mut count = 0;
+    let mut y = 0;
+    while y + WINDOW <= a.height {
+        let mut x = 0;
+        while x + WINDOW <= a.width {
+            total += window_ssim(a, b, x, y, WINDOW, WINDOW);
+            count += 1;
+            x += WINDOW;
+        }
+        y += WINDOW;
+    }
+    total / count as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn frame_from(pixels: Vec<u8>, w: usize, h: usize) -> Frame {
+        Frame { width: w, height: h, pixels, index: 0, is_event: false }
+    }
+
+    fn random_frame(seed: u64, w: usize, h: usize) -> Frame {
+        let mut rng = Rng::new(seed);
+        frame_from((0..w * h).map(|_| rng.below(256) as u8).collect(), w, h)
+    }
+
+    #[test]
+    fn identical_frames_have_ssim_one() {
+        let f = random_frame(1, 32, 32);
+        assert!((mean_ssim(&f, &f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = random_frame(1, 32, 32);
+        let b = random_frame(2, 32, 32);
+        assert!((mean_ssim(&a, &b) - mean_ssim(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded() {
+        for s in 0..20 {
+            let a = random_frame(s, 24, 24);
+            let b = random_frame(s + 100, 24, 24);
+            let v = mean_ssim(&a, &b);
+            assert!((-1.0..=1.0).contains(&v), "ssim={v}");
+        }
+    }
+
+    #[test]
+    fn unrelated_noise_scores_low() {
+        let a = random_frame(1, 64, 64);
+        let b = random_frame(2, 64, 64);
+        assert!(mean_ssim(&a, &b) < 0.2);
+    }
+
+    #[test]
+    fn small_perturbation_scores_high() {
+        let a = random_frame(3, 32, 32);
+        let mut pixels = a.pixels.clone();
+        for p in pixels.iter_mut() {
+            *p = p.saturating_add(2);
+        }
+        let b = frame_from(pixels, 32, 32);
+        assert!(mean_ssim(&a, &b) > 0.95);
+    }
+
+    #[test]
+    fn constant_shift_detected_less_than_structure_change() {
+        // Luminance-only shift vs structural scramble of the same frame.
+        let a = random_frame(4, 32, 32);
+        let mut shifted = a.pixels.clone();
+        for p in shifted.iter_mut() {
+            *p = p.saturating_add(30);
+        }
+        let shift = frame_from(shifted, 32, 32);
+        let scrambled = random_frame(5, 32, 32);
+        assert!(mean_ssim(&a, &shift) > mean_ssim(&a, &scrambled));
+    }
+
+    #[test]
+    #[should_panic(expected = "equally sized")]
+    fn size_mismatch_panics() {
+        let a = random_frame(1, 32, 32);
+        let b = random_frame(1, 16, 16);
+        mean_ssim(&a, &b);
+    }
+
+    #[test]
+    fn uniform_frames_max_similarity() {
+        let a = frame_from(vec![100; 16 * 16], 16, 16);
+        let b = frame_from(vec![100; 16 * 16], 16, 16);
+        assert!((mean_ssim(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

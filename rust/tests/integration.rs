@@ -1,0 +1,332 @@
+//! Cross-module integration tests: policy × simulator × coordinator,
+//! config plumbing, manifest contract, and failure injection.
+//! (PJRT-backed serving integration lives in `serving.rs`.)
+
+use ans::bandit::{self, LinUcb};
+use ans::config::Config;
+use ans::coordinator::{experiment, quick_run, FrameSource};
+use ans::models::{features, zoo, FeatureScale};
+use ans::simulator::{scenario, Environment, Uplink, Workload, DEVICE_MAXN, EDGE_CPU, EDGE_GPU};
+use ans::util::cli::Args;
+use ans::util::prop::{ensure, forall, Shrink};
+use ans::video::Weights;
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Policy × environment matrix: every policy must run on every model.
+// ---------------------------------------------------------------------------
+#[test]
+fn every_policy_runs_on_every_model() {
+    for model in ["vgg16", "yolo", "yolo_tiny", "resnet50", "partnet"] {
+        for policy in bandit::POLICY_NAMES {
+            let net = zoo::by_name(model).unwrap();
+            let p_max = net.num_partitions();
+            let m = quick_run(policy, net, 16.0, 60, 3);
+            let s = m.summary(p_max);
+            assert_eq!(s.frames, 60, "{model}/{policy}");
+            assert!(s.mean_delay_ms.is_finite() && s.mean_delay_ms > 0.0, "{model}/{policy}");
+            assert!(
+                s.partition_histogram.iter().sum::<usize>() == 60,
+                "{model}/{policy} histogram"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Regret ordering: Oracle ≤ ANS steady state ≤ trapped/static baselines.
+// ---------------------------------------------------------------------------
+#[test]
+fn regret_ordering_holds_at_medium_rate() {
+    let p_max = zoo::vgg16().num_partitions();
+    let oracle = quick_run("oracle", zoo::vgg16(), 12.0, 800, 5).summary(p_max);
+    let ans = quick_run("mu-linucb", zoo::vgg16(), 12.0, 800, 5).summary(p_max);
+    let eo = quick_run("eo", zoo::vgg16(), 12.0, 800, 5).summary(p_max);
+    let mo = quick_run("mo", zoo::vgg16(), 12.0, 800, 5).summary(p_max);
+    assert!(oracle.total_regret_ms.abs() < 1e-6);
+    assert!(ans.total_regret_ms < eo.total_regret_ms);
+    assert!(ans.total_regret_ms < mo.total_regret_ms);
+}
+
+// ---------------------------------------------------------------------------
+// The paper's sublinear-regret claim, empirically: doubling T must grow
+// μLinUCB's regret by clearly less than 2× (Theorem 1: O(T^0.75 log T)).
+// ---------------------------------------------------------------------------
+#[test]
+fn regret_grows_sublinearly() {
+    let p_max = zoo::vgg16().num_partitions();
+    let r1 = quick_run("mu-linucb", zoo::vgg16(), 16.0, 700, 9).summary(p_max).total_regret_ms;
+    let r2 = quick_run("mu-linucb", zoo::vgg16(), 16.0, 1400, 9).summary(p_max).total_regret_ms;
+    assert!(
+        r2 < 1.7 * r1,
+        "regret not sublinear: R(700)={r1:.0}, R(1400)={r2:.0}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 end-to-end through the public API: μLinUCB adapts, LinUCB traps.
+// ---------------------------------------------------------------------------
+#[test]
+fn adaptation_vs_trap_integration() {
+    let frames = scenario::FIG12_FRAMES;
+    let p_max = zoo::vgg16().num_partitions();
+    let mut ans_pol = LinUcb::ans_default(frames);
+    let mut lin_pol = LinUcb::classic(ans::models::CONTEXT_DIM, bandit::DEFAULT_ALPHA, bandit::DEFAULT_BETA);
+    let mut src_a = FrameSource::uniform();
+    let mut src_b = FrameSource::uniform();
+    let ma = experiment::run(&mut ans_pol, &mut scenario::fig12a(zoo::vgg16(), 5), frames, &mut src_a);
+    let ml = experiment::run(&mut lin_pol, &mut scenario::fig12a(zoo::vgg16(), 5), frames, &mut src_b);
+    // LinUCB trapped at MO for the whole final phase; μLinUCB is not.
+    assert!(ml.records[630..].iter().all(|r| r.p == p_max));
+    let ans_mo_tail = ma.records[700..].iter().filter(|r| r.p == p_max).count();
+    assert!(ans_mo_tail < 50, "ANS stuck at MO {ans_mo_tail}/100 in final phase");
+    assert!(
+        ma.summary(p_max).total_regret_ms < 0.5 * ml.summary(p_max).total_regret_ms,
+        "ANS regret should be far below trapped LinUCB"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Config plumbing drives real runs.
+// ---------------------------------------------------------------------------
+#[test]
+fn config_to_run_roundtrip() {
+    let cfg = Config::from_args(&args(
+        "simulate --model resnet50 --policy neurosurgeon --frames 40 --rate 8 --edge cpu --load 2",
+    ))
+    .unwrap();
+    let mut env = cfg.environment();
+    assert_eq!(env.net.name, "resnet50");
+    assert_eq!(env.edge.name, "edge_cpu_i7");
+    let mut pol = cfg.policy(&env.net, &env.device, &env.edge);
+    let mut src = FrameSource::uniform();
+    let m = experiment::run(pol.as_mut(), &mut env, cfg.frames, &mut src);
+    assert_eq!(m.records.len(), 40);
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: broken manifests must be rejected with context.
+// ---------------------------------------------------------------------------
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join(format!("ans_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Not JSON at all.
+    std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+    assert!(ans::runtime::Manifest::load(&dir).is_err());
+    // Wrong schema version.
+    std::fs::write(dir.join("manifest.json"), r#"{"schema_version": 1}"#).unwrap();
+    let err = format!("{:#}", ans::runtime::Manifest::load(&dir).unwrap_err());
+    assert!(err.contains("schema"), "{err}");
+    // Valid schema but missing artifact files.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"schema_version": 2, "model": "partnet", "fingerprint": "x", "seed": 0,
+            "num_partitions": 1, "input_shape": [4, 4, 1], "num_classes": 2,
+            "batch_sizes": [1],
+            "partitions": [
+              {"batch": 1, "p": 0, "psi_shape": [1, 4, 4, 1], "psi_bytes": 64,
+               "front": null, "back": "missing.hlo.txt",
+               "features": {"m_conv": 0, "m_fc": 0, "m_act": 0,
+                             "n_conv": 0, "n_fc": 0, "n_act": 0, "psi_bytes": 64}},
+              {"batch": 1, "p": 1, "psi_shape": [1, 2], "psi_bytes": 0,
+               "front": "missing2.hlo.txt", "back": null,
+               "features": {"m_conv": 0, "m_fc": 0, "m_act": 0,
+                             "n_conv": 0, "n_fc": 0, "n_act": 0, "psi_bytes": 0}}
+            ]}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", ans::runtime::Manifest::load(&dir).unwrap_err());
+    assert!(err.contains("missing"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Environment determinism end to end: same seed, same everything.
+// ---------------------------------------------------------------------------
+#[test]
+fn full_runs_are_reproducible() {
+    let run = || {
+        let mut env = Environment::new(
+            zoo::yolo_tiny(),
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::steps(vec![(0, 1.0), (50, 3.0)]),
+            Uplink::markov(40.0, 6.0, 0.05, 11),
+            11,
+        );
+        let mut pol = LinUcb::ans_default(200);
+        let mut src = FrameSource::video(11, 0.8, Weights::default_paper());
+        experiment::run(&mut pol, &mut env, 200, &mut src)
+    };
+    let a = run();
+    let b = run();
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.p, y.p);
+        assert_eq!(x.delay_ms, y.delay_ms);
+        assert_eq!(x.is_key, y.is_key);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property: forced sampling guarantees a minimum feedback rate, whatever
+// the environment does (the Mitigation #2 invariant, end to end).
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct Scenario {
+    rate0: f64,
+    rate1: f64,
+    switch_at: usize,
+    seed: u64,
+}
+
+impl Shrink for Scenario {}
+
+#[test]
+fn prop_learner_never_starves() {
+    forall(
+        21,
+        12,
+        |rng| Scenario {
+            rate0: rng.uniform(0.5, 60.0),
+            rate1: rng.uniform(0.5, 60.0),
+            switch_at: 50 + rng.below(100),
+            seed: rng.next_u64(),
+        },
+        |sc| {
+            let frames = 400;
+            let mut env = Environment::new(
+                zoo::vgg16(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::steps(vec![(0, sc.rate0), (sc.switch_at, sc.rate1)]),
+                sc.seed,
+            );
+            let mut pol = LinUcb::paper_default(frames);
+            let mut src = FrameSource::uniform();
+            let m = experiment::run(&mut pol, &mut env, frames, &mut src);
+            let p_max = env.num_partitions();
+            // Off-device (feedback-producing) frames at least every T^mu-ish.
+            let feedback = m.records.iter().filter(|r| r.p != p_max).count();
+            let min_expected = frames / 5; // interval = floor(400^0.25) = 4
+            ensure(
+                feedback >= min_expected,
+                format!("only {feedback} feedback frames (< {min_expected})"),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Manifest ↔ rust model-zoo contract (when artifacts are built).
+// ---------------------------------------------------------------------------
+#[test]
+fn manifest_features_match_zoo_when_present() {
+    let dir = ans::runtime::artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let m = ans::runtime::Manifest::load(&dir).unwrap();
+    let net = zoo::partnet();
+    let scale = FeatureScale::for_network(&net);
+    let from_manifest = m.context_vectors(1).unwrap();
+    let from_zoo = features::context_vectors(&net, &scale);
+    for (p, (a, b)) in from_manifest.iter().zip(&from_zoo).enumerate() {
+        for i in 0..a.len() {
+            assert!(
+                (a[i] - b[i]).abs() < 1e-9,
+                "feature {i} at p={p}: manifest {} vs zoo {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Neurosurgeon integration: real-time rate input changes its decisions.
+// ---------------------------------------------------------------------------
+#[test]
+fn neurosurgeon_follows_rate_changes_online() {
+    let frames = 200;
+    let net = zoo::vgg16();
+    let p_max = net.num_partitions();
+    let mut env = Environment::new(
+        zoo::vgg16(),
+        DEVICE_MAXN,
+        EDGE_GPU,
+        Workload::constant(1.0),
+        Uplink::steps(vec![(0, 2.0), (100, 80.0)]),
+        3,
+    );
+    let mut pol = bandit::Neurosurgeon::new(&net, &DEVICE_MAXN, &EDGE_GPU, 1.0, 0.5);
+    let mut src = FrameSource::uniform();
+    let m = experiment::run(&mut pol, &mut env, frames, &mut src);
+    assert!(m.records[..100].iter().all(|r| r.p == p_max), "2 Mbps phase should be MO");
+    assert!(m.records[100..].iter().all(|r| r.p <= 1), "80 Mbps phase should be EO/early");
+}
+
+// ---------------------------------------------------------------------------
+// Key-frame weighting plumbs through from video to policy decisions.
+// ---------------------------------------------------------------------------
+#[test]
+fn video_weights_reach_the_policy() {
+    let frames = 300;
+    let mut env = Environment::simple(zoo::vgg16(), 16.0, 7);
+    let mut pol = LinUcb::paper_default(frames);
+    let mut src = FrameSource::video(7, 0.85, Weights::new(0.9, 0.2));
+    let m = experiment::run(&mut pol, &mut env, frames, &mut src);
+    let weights: std::collections::BTreeSet<u64> =
+        m.records.iter().map(|r| (r.weight * 100.0) as u64).collect();
+    assert_eq!(weights, [20u64, 90].into_iter().collect());
+    assert!(m.records.iter().any(|r| r.is_key));
+    assert!(m.records.iter().any(|r| !r.is_key));
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate environments don't break anything.
+// ---------------------------------------------------------------------------
+#[test]
+fn extreme_rates_are_stable() {
+    for rate in [0.1, 10_000.0] {
+        let p_max = zoo::vgg16().num_partitions();
+        // 300 frames -> forced-sampling interval ⌊300^0.25⌋ = 4, so at most
+        // every 4th tail frame is forced off the MO arm.
+        let m = quick_run("mu-linucb", zoo::vgg16(), rate, 300, 13);
+        let s = m.summary(p_max);
+        assert!(s.mean_delay_ms.is_finite());
+        if rate < 1.0 {
+            // Absurdly slow link: must end up on-device (minus forced frames).
+            let tail_mo = m.records[200..].iter().filter(|r| r.p == p_max).count();
+            assert!(tail_mo >= 70, "tail MO {tail_mo}/100");
+        } else {
+            // Absurdly fast link: must offload.
+            let tail_eo = m.records[200..].iter().filter(|r| r.p == 0).count();
+            assert!(tail_eo > 70, "tail EO {tail_eo}/100");
+        }
+    }
+}
+
+#[test]
+fn loaded_cpu_edge_traps_nobody() {
+    // CPU edge at heavy load: everyone should settle on MO, no panics.
+    let net = zoo::vgg16();
+    let p_max = net.num_partitions();
+    let mut env = Environment::new(
+        net,
+        DEVICE_MAXN,
+        EDGE_CPU,
+        Workload::constant(6.0),
+        Uplink::constant(16.0),
+        17,
+    );
+    let mut pol = LinUcb::ans_default(300);
+    let mut src = FrameSource::uniform();
+    let m = experiment::run(&mut pol, &mut env, 300, &mut src);
+    let tail_mo = m.records[200..].iter().filter(|r| r.p == p_max).count();
+    assert!(tail_mo >= 70, "tail MO {tail_mo}/100");
+}

@@ -1,0 +1,288 @@
+//! System-level property tests (randomized, seeded, shrinking via the
+//! mini framework in `ans::util::prop`).  These complement the per-module
+//! `#[cfg(test)]` properties with cross-cutting invariants.
+
+use ans::bandit::forced::ForcedSchedule;
+use ans::models::{features, zoo, FeatureScale, Layer, Network, Shape, Stage};
+use ans::simulator::network::TokenBucket;
+use ans::simulator::{Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU};
+use ans::util::prop::{ensure, ensure_close, forall, Shrink};
+use ans::util::rng::Rng;
+use ans::video::ssim::mean_ssim;
+use ans::video::stream::{Frame, VideoStream};
+
+// ---------------------------------------------------------------------------
+// Random chain networks: structural invariants must hold for ANY network,
+// not just the zoo.
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct RandomNet(Network);
+
+impl Shrink for RandomNet {
+    fn shrink(&self) -> Vec<RandomNet> {
+        let mut out = Vec::new();
+        if self.0.stages.len() > 1 {
+            let mut n = self.0.clone();
+            n.stages.truncate(n.stages.len() / 2);
+            out.push(RandomNet(n));
+        }
+        out
+    }
+}
+
+fn random_chain(rng: &mut Rng) -> RandomNet {
+    let mut stages = Vec::new();
+    let mut hw = 32usize;
+    let n_conv = 1 + rng.below(5);
+    for i in 0..n_conv {
+        let out_ch = 4 << rng.below(4);
+        stages.push(Stage::new(
+            &format!("conv{i}"),
+            vec![Layer::Conv { out_ch, k: 1 + 2 * rng.below(3), stride: 1 }, Layer::Act],
+        ));
+        if hw >= 4 && rng.bernoulli(0.5) {
+            stages.push(Stage::new(&format!("pool{i}"), vec![Layer::Pool { k: 2, stride: 2 }]));
+            hw /= 2;
+        }
+    }
+    for i in 0..1 + rng.below(3) {
+        stages.push(Stage::new(
+            &format!("fc{i}"),
+            vec![Layer::Fc { out: 8 << rng.below(5) }, Layer::Act],
+        ));
+    }
+    RandomNet(Network { name: "random".into(), input: Shape::Hwc(32, 32, 3), stages })
+}
+
+#[test]
+fn prop_random_networks_conserve_macs_across_partitions() {
+    forall(1, 40, random_chain, |RandomNet(net)| {
+        let total = net.backend_stats(0).total_macs();
+        for p in 0..=net.num_partitions() {
+            let f = net.frontend_stats(p).total_macs();
+            let b = net.backend_stats(p).total_macs();
+            ensure(f + b == total, format!("p={p}: {f}+{b} != {total}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_networks_have_valid_features() {
+    forall(2, 40, random_chain, |RandomNet(net)| {
+        let scale = FeatureScale::for_network(net);
+        let xs = features::context_vectors(net, &scale);
+        ensure(xs.len() == net.num_partitions() + 1, "feature count")?;
+        ensure(xs.last().unwrap().iter().all(|&v| v == 0.0), "MO arm must be zero")?;
+        for (p, x) in xs.iter().enumerate() {
+            for (i, v) in x.iter().enumerate() {
+                ensure(
+                    v.is_finite() && (0.0..=1.5).contains(v),
+                    format!("feature[{i}]={v} at p={p}"),
+                )?;
+            }
+        }
+        // MAC features monotone non-increasing in p.
+        for w in xs.windows(2) {
+            ensure(w[0][0] >= w[1][0] - 1e-12, "conv MACs must shrink")?;
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug, Clone)]
+struct NetEnvCase {
+    net: RandomNet,
+    rate: f64,
+    seed: u64,
+}
+
+impl Shrink for NetEnvCase {}
+
+#[test]
+fn prop_oracle_is_argmin_in_any_environment() {
+    forall(
+        3,
+        30,
+        |rng| NetEnvCase { net: random_chain(rng), rate: rng.uniform(0.5, 80.0), seed: rng.next_u64() },
+        |NetEnvCase { net: RandomNet(net), rate, seed }| {
+            let env = Environment::new(
+                net.clone(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::constant(*rate),
+                *seed,
+            );
+            let star = env.oracle_partition();
+            let best = env.expected_total(star);
+            for p in 0..=env.num_partitions() {
+                ensure(
+                    best <= env.expected_total(p) + 1e-9,
+                    format!("oracle {star} beaten by {p}"),
+                )?;
+            }
+            ensure_close(best, env.oracle_delay(), 1e-12, "oracle delay")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Forced schedules: theory-count bound ~T^{1-mu}.
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct MuT(f64, usize);
+
+impl Shrink for MuT {}
+
+#[test]
+fn prop_forced_count_close_to_theory() {
+    forall(
+        4,
+        40,
+        |rng| MuT(0.05 + rng.f64() * 0.45, 200 + rng.below(20_000)),
+        |MuT(mu, horizon)| {
+            let sched = ForcedSchedule::known(*horizon, *mu);
+            let count = sched.count_forced(*horizon) as f64;
+            let interval = (*horizon as f64).powf(*mu).floor().max(1.0);
+            let expect = *horizon as f64 / interval;
+            ensure(
+                (count - expect).abs() <= interval + 1.0,
+                format!("count {count} vs expect {expect} (T={horizon}, mu={mu})"),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shaped link: work conservation and FIFO ordering for any send pattern.
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct Sends(Vec<(usize, f64)>); // (bytes, inter-arrival gap ms)
+
+impl Shrink for Sends {
+    fn shrink(&self) -> Vec<Sends> {
+        let mut out = Vec::new();
+        if self.0.len() > 1 {
+            out.push(Sends(self.0[..self.0.len() / 2].to_vec()));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_shaper_conserves_and_orders() {
+    forall(
+        5,
+        40,
+        |rng| {
+            let n = 2 + rng.below(40);
+            Sends(
+                (0..n)
+                    .map(|_| (64 + rng.below(100_000), rng.uniform(0.0, 5.0)))
+                    .collect(),
+            )
+        },
+        |Sends(sends)| {
+            let rate_mbps = 8.0; // 1000 bytes per ms
+            let mut link = TokenBucket::new(rate_mbps);
+            let mut now = 0.0;
+            let mut last_departure = 0.0;
+            let total_bytes: usize = sends.iter().map(|(b, _)| b).sum();
+            let mut first_arrival = None;
+            for (bytes, gap) in sends {
+                now += gap;
+                first_arrival.get_or_insert(now);
+                let d = link.consume(*bytes, now);
+                let departure = now + d;
+                ensure(
+                    departure >= last_departure - 1e-9,
+                    format!("FIFO violated: {departure} < {last_departure}"),
+                )?;
+                ensure(
+                    d + 1e-9 >= *bytes as f64 / 1000.0,
+                    "delay below pure serialization time",
+                )?;
+                last_departure = departure;
+            }
+            // Work conservation: the link can't finish earlier than
+            // first_arrival + total_serialization.
+            let min_finish = first_arrival.unwrap() + total_bytes as f64 / 1000.0;
+            ensure(
+                last_departure + 1e-9 >= min_finish,
+                format!("finished {last_departure} before possible {min_finish}"),
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SSIM metric properties on arbitrary frames.
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct TwoFrames(Frame, Frame);
+
+impl Shrink for TwoFrames {}
+
+#[test]
+fn prop_ssim_bounded_symmetric_reflexive() {
+    forall(
+        6,
+        30,
+        |rng| {
+            let mut v1 = VideoStream::new(32, 32, rng.next_u64());
+            let mut v2 = VideoStream::new(32, 32, rng.next_u64());
+            TwoFrames(v1.next_frame(), v2.next_frame())
+        },
+        |TwoFrames(a, b)| {
+            let ab = mean_ssim(a, b);
+            ensure((-1.0..=1.0).contains(&ab), format!("out of range {ab}"))?;
+            ensure_close(ab, mean_ssim(b, a), 1e-12, "symmetry")?;
+            ensure_close(mean_ssim(a, a), 1.0, 1e-12, "reflexivity")?;
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Environment: expected vs observed consistency under any rate/load.
+// ---------------------------------------------------------------------------
+#[derive(Debug, Clone)]
+struct EnvCase {
+    rate: f64,
+    load: f64,
+    seed: u64,
+}
+
+impl Shrink for EnvCase {}
+
+#[test]
+fn prop_observations_match_expectations_in_mean() {
+    forall(
+        7,
+        15,
+        |rng| EnvCase {
+            rate: rng.uniform(1.0, 60.0),
+            load: 1.0 + rng.f64() * 4.0,
+            seed: rng.next_u64(),
+        },
+        |c| {
+            let mut env = Environment::new(
+                zoo::yolo_tiny(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(c.load),
+                Uplink::constant(c.rate),
+                c.seed,
+            );
+            let p = env.num_partitions() / 2;
+            let expect = env.expected_edge_delay(p);
+            let n = 800;
+            let avg: f64 = (0..n).map(|_| env.observe_edge_delay(p)).sum::<f64>() / n as f64;
+            ensure(
+                (avg - expect).abs() < 0.5,
+                format!("avg {avg} vs expected {expect} (rate {}, load {})", c.rate, c.load),
+            )
+        },
+    );
+}

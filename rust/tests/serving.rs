@@ -1,0 +1,101 @@
+//! PJRT-backed serving integration: the real pipeline over real artifacts.
+//! Skipped gracefully when `artifacts/` hasn't been built.
+
+use ans::bandit::LinUcb;
+use ans::coordinator::pipeline::{serve, PipelineConfig};
+use ans::models::zoo;
+
+fn artifacts_present() -> bool {
+    ans::runtime::artifacts::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pipeline_serves_frames_end_to_end() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        frames: 40,
+        fps: 120.0,
+        rate_mbps: 20.0,
+        max_batch: 1,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut policy = LinUcb::ans_default(cfg.frames);
+    let report = serve(&cfg, &mut policy).expect("pipeline run");
+    assert_eq!(report.metrics.records.len(), 40);
+    let s = report.metrics.summary(zoo::partnet().num_partitions());
+    assert!(s.mean_delay_ms > 0.0 && s.mean_delay_ms.is_finite());
+    assert!(report.throughput_fps > 0.0);
+    // Front profile is monotone-ish and ends above where it starts.
+    let prof = &report.front_profile_b1;
+    assert_eq!(prof[0], 0.0);
+    assert!(prof[prof.len() - 1] > 0.0);
+}
+
+#[test]
+fn pipeline_batches_under_backlog() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = PipelineConfig {
+        frames: 48,
+        fps: 100_000.0, // everything arrives immediately -> constant backlog
+        rate_mbps: 20.0,
+        max_batch: 4,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut policy = LinUcb::ans_default(cfg.frames);
+    let report = serve(&cfg, &mut policy).expect("pipeline run");
+    assert!(
+        report.batch_histogram[4] > 0,
+        "batch-4 never used under full backlog: {:?}",
+        report.batch_histogram
+    );
+}
+
+#[test]
+fn pipeline_adapts_to_link_speed() {
+    // Note: in the real pipeline both "device" and "edge" run on the same
+    // CPU, so on a fast link offloading and on-device arms genuinely TIE
+    // (same FLOPs, negligible link cost) — only the slow-link direction is
+    // decisive.  Assertions: a punishing link must drive the learner
+    // on-device/onto tiny-ψ arms, and must cost more than a fast link.
+    if !artifacts_present() {
+        return;
+    }
+    let run = |rate| {
+        let cfg = PipelineConfig {
+            frames: 120,
+            fps: 240.0,
+            rate_mbps: rate,
+            max_batch: 1,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut policy = LinUcb::ans_default(cfg.frames);
+        let report = serve(&cfg, &mut policy).expect("pipeline run");
+        let p_max = zoo::partnet().num_partitions();
+        let served = report.metrics.records.len();
+        let on_device =
+            report.metrics.records.iter().filter(|r| r.p == p_max).count() as f64 / served as f64;
+        let mean = report.metrics.summary(p_max).mean_delay_ms;
+        (on_device, mean)
+    };
+    let (slow_share, slow_mean) = run(0.5);
+    let (fast_share, fast_mean) = run(100.0);
+    assert!(
+        slow_share >= 0.4,
+        "punishing link should be mostly on-device: {slow_share:.2}"
+    );
+    assert!(
+        slow_share + 1e-9 >= fast_share,
+        "slow link should be at least as on-device: slow {slow_share:.2} vs fast {fast_share:.2}"
+    );
+    assert!(
+        fast_mean <= slow_mean,
+        "fast link should be cheaper: fast {fast_mean:.2} vs slow {slow_mean:.2} ms"
+    );
+}
