@@ -22,7 +22,7 @@
 
 use super::forced::ForcedSchedule;
 use super::linalg::{dot, RidgeState};
-use super::policy::{FrameContext, Policy};
+use super::policy::{FrameContext, Policy, PolicySnapshot};
 use crate::models::FeatureVector;
 
 /// Shared implementation of the LinUCB family (see module docs).
@@ -66,6 +66,8 @@ pub struct LinUcb {
     drift_threshold: Option<f64>,
     drift_ema: f64,
     drift_samples: usize,
+    /// Drift resets triggered so far (per-session diagnostics).
+    resets: usize,
     /// Scale α by the environment's on-device delay (see [`REF_SCALE_MS`]).
     auto_scale: bool,
     /// Warm-up: next arm of the initial one-pass sweep over all
@@ -120,6 +122,7 @@ impl LinUcb {
             drift_threshold: None,
             drift_ema: 0.0,
             drift_samples: 0,
+            resets: 0,
             auto_scale: false,
             warmup_next: Some(0),
         }
@@ -143,6 +146,7 @@ impl LinUcb {
             drift_threshold: None,
             drift_ema: 0.0,
             drift_samples: 0,
+            resets: 0,
             auto_scale: false,
             warmup_next: Some(0),
         }
@@ -166,6 +170,7 @@ impl LinUcb {
             drift_threshold: None,
             drift_ema: 0.0,
             drift_samples: 0,
+            resets: 0,
             auto_scale: false,
             warmup_next: Some(0),
         }
@@ -189,6 +194,7 @@ impl LinUcb {
             drift_threshold: None,
             drift_ema: 0.0,
             drift_samples: 0,
+            resets: 0,
             auto_scale: false,
             warmup_next: Some(0),
         }
@@ -249,6 +255,7 @@ impl LinUcb {
         self.n_obs = 0;
         self.drift_ema = 0.0;
         self.drift_samples = 0;
+        self.resets += 1;
     }
 
     /// Current estimate θ̂ (diagnostics / EXPERIMENTS.md).
@@ -259,6 +266,11 @@ impl LinUcb {
     /// Number of feedback observations incorporated so far.
     pub fn observations(&self) -> usize {
         self.n_obs
+    }
+
+    /// Number of drift resets triggered so far.
+    pub fn resets(&self) -> usize {
+        self.resets
     }
 }
 
@@ -362,6 +374,15 @@ impl Policy for LinUcb {
 
     fn predict_edge_delay(&self, x: &FeatureVector) -> Option<f64> {
         Some(dot(&self.ridge.theta(), x))
+    }
+
+    fn snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            name: self.name.clone(),
+            observations: self.n_obs,
+            resets: self.resets,
+            theta: Some(self.ridge.theta()),
+        }
     }
 }
 
@@ -542,6 +563,38 @@ mod tests {
             privileged: priv_,
         };
         assert_eq!(pol.select(&c_exploit), 0);
+    }
+
+    #[test]
+    fn snapshot_reports_learning_state() {
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 5);
+        let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, 100);
+        run(&mut pol, &mut env, 100);
+        let snap = pol.snapshot();
+        assert!(snap.observations > 0);
+        assert_eq!(snap.observations, pol.observations());
+        assert_eq!(snap.resets, 0, "stationary env must not trigger resets");
+        let theta = snap.theta.expect("LinUCB keeps a model");
+        assert_eq!(theta.len(), CONTEXT_DIM);
+        assert!(theta.iter().any(|v| v.abs() > 0.0));
+    }
+
+    #[test]
+    fn drift_reset_counter_increments() {
+        // The recovery trace from `mu_linucb_escapes_mo_after_recovery`
+        // adapts via at least one drift reset.
+        let net = zoo::vgg16();
+        let mut env = crate::simulator::Environment::new(
+            net,
+            crate::simulator::DEVICE_MAXN,
+            crate::simulator::EDGE_GPU,
+            crate::simulator::Workload::constant(1.0),
+            crate::simulator::Uplink::steps(vec![(0, 1.0), (150, 50.0)]),
+            7,
+        );
+        let mut pol = LinUcb::ans_default(600);
+        run(&mut pol, &mut env, 600);
+        assert!(pol.snapshot().resets >= 1, "rate flip should trigger a drift reset");
     }
 
     #[test]

@@ -21,7 +21,9 @@ pub mod policy;
 pub use forced::ForcedSchedule;
 pub use linucb::{LinUcb, DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DRIFT};
 pub use neurosurgeon::Neurosurgeon;
-pub use policy::{EdgeOnly, Fixed, FrameContext, MobileOnly, Oracle, Policy, Privileged};
+pub use policy::{
+    EdgeOnly, Fixed, FrameContext, MobileOnly, Oracle, Policy, PolicySnapshot, Privileged,
+};
 
 use crate::models::{Network, CONTEXT_DIM};
 use crate::simulator::ComputeProfile;

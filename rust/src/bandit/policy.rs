@@ -45,6 +45,19 @@ impl<'a> FrameContext<'a> {
     }
 }
 
+/// Cheap per-policy diagnostics for per-session reporting (`ans fleet`).
+/// Stateless baselines return the default; learners fill in what they have.
+#[derive(Debug, Clone)]
+pub struct PolicySnapshot {
+    pub name: String,
+    /// Feedback observations incorporated so far (0 for stateless policies).
+    pub observations: usize,
+    /// Drift resets triggered so far (LinUCB family; 0 otherwise).
+    pub resets: usize,
+    /// Current model estimate θ̂, if the policy keeps one.
+    pub theta: Option<Vec<f64>>,
+}
+
 /// A partition-selection policy.
 pub trait Policy: Send {
     fn name(&self) -> &str;
@@ -60,6 +73,17 @@ pub trait Policy: Send {
     /// maintains a prediction model (Table 1 / Fig 9 evaluation hook).
     fn predict_edge_delay(&self, _x: &FeatureVector) -> Option<f64> {
         None
+    }
+
+    /// O(d) diagnostics snapshot for per-session fleet reporting.  The
+    /// default covers stateless policies; learners override it.
+    fn snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            name: self.name().to_string(),
+            observations: 0,
+            resets: 0,
+            theta: None,
+        }
     }
 }
 
@@ -191,6 +215,15 @@ mod tests {
     fn argmin_first_on_ties() {
         assert_eq!(argmin(&[2.0, 1.0, 1.0]), 1);
         assert_eq!(argmin(&[0.5]), 0);
+    }
+
+    #[test]
+    fn default_snapshot_is_stateless() {
+        let s = EdgeOnly.snapshot();
+        assert_eq!(s.name, "EO");
+        assert_eq!(s.observations, 0);
+        assert_eq!(s.resets, 0);
+        assert!(s.theta.is_none());
     }
 
     #[test]

@@ -40,6 +40,14 @@ pub struct Config {
     pub fps: f64,
     pub max_batch: usize,
     pub artifacts_dir: PathBuf,
+    /// Multi-session serving engine knobs (`ans fleet`).
+    pub sessions: usize,
+    /// Concurrent offloaded frames the edge absorbs with no slowdown.
+    pub contention_capacity: usize,
+    /// Edge load-multiplier growth per excess concurrent frame.
+    pub contention_slope: f64,
+    /// Shared edge-ingress bandwidth in Mbps (0 = not modelled).
+    pub ingress_mbps: f64,
 }
 
 impl Default for Config {
@@ -62,6 +70,10 @@ impl Default for Config {
             fps: 30.0,
             max_batch: 4,
             artifacts_dir: crate::runtime::artifacts::default_dir(),
+            sessions: 1,
+            contention_capacity: 1,
+            contention_slope: 0.5,
+            ingress_mbps: 0.0,
         }
     }
 }
@@ -101,6 +113,10 @@ impl Config {
                 "fps" => self.fps = val.as_f64()?,
                 "max_batch" => self.max_batch = val.as_usize()?,
                 "artifacts_dir" => self.artifacts_dir = PathBuf::from(val.as_str()?),
+                "sessions" => self.sessions = val.as_usize()?,
+                "contention_capacity" => self.contention_capacity = val.as_usize()?,
+                "contention_slope" => self.contention_slope = val.as_f64()?,
+                "ingress_mbps" => self.ingress_mbps = val.as_f64()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -135,20 +151,26 @@ impl Config {
         if let Some(v) = args.get("artifacts-dir") {
             self.artifacts_dir = PathBuf::from(v);
         }
+        self.sessions = args.usize_or("sessions", self.sessions)?;
+        self.contention_capacity =
+            args.usize_or("contention-capacity", self.contention_capacity)?;
+        self.contention_slope = args.f64_or("contention-slope", self.contention_slope)?;
+        self.ingress_mbps = args.f64_or("ingress", self.ingress_mbps)?;
         Ok(())
     }
 
     fn validate(&self) -> Result<()> {
         anyhow::ensure!(
             crate::models::zoo::by_name(&self.model).is_some(),
-            "unknown model `{}`",
-            self.model
+            "unknown model `{}` — valid models: {}",
+            self.model,
+            crate::models::zoo::MODEL_NAMES.join(", ")
         );
         anyhow::ensure!(
             crate::bandit::POLICY_NAMES.contains(&self.policy.as_str()),
-            "unknown policy `{}` (have {:?})",
+            "unknown policy `{}` — valid policies: {}",
             self.policy,
-            crate::bandit::POLICY_NAMES
+            crate::bandit::POLICY_NAMES.join(", ")
         );
         anyhow::ensure!(self.frames > 0, "frames must be positive");
         anyhow::ensure!(self.rate_mbps > 0.0, "rate must be positive");
@@ -167,6 +189,16 @@ impl Config {
             crate::simulator::profile_by_name(&self.edge).is_some(),
             "unknown edge profile `{}`",
             self.edge
+        );
+        anyhow::ensure!(self.sessions >= 1, "sessions must be ≥ 1");
+        anyhow::ensure!(self.contention_capacity >= 1, "contention-capacity must be ≥ 1");
+        anyhow::ensure!(
+            self.contention_slope >= 0.0 && self.contention_slope.is_finite(),
+            "contention-slope must be ≥ 0"
+        );
+        anyhow::ensure!(
+            self.ingress_mbps >= 0.0 && self.ingress_mbps.is_finite(),
+            "ingress must be ≥ 0 Mbps"
         );
         Ok(())
     }
@@ -288,6 +320,31 @@ mod tests {
         assert_eq!(env.net.name, "partnet");
         let pol = cfg.policy(&env.net, &env.device, &env.edge);
         assert_eq!(pol.name(), "LinUCB");
+    }
+
+    #[test]
+    fn fleet_knobs_parse_and_validate() {
+        let cfg = Config::from_args(&args(
+            "fleet --sessions 8 --contention-capacity 2 --contention-slope 0.35 --ingress 200",
+        ))
+        .unwrap();
+        assert_eq!(cfg.sessions, 8);
+        assert_eq!(cfg.contention_capacity, 2);
+        assert_eq!(cfg.contention_slope, 0.35);
+        assert_eq!(cfg.ingress_mbps, 200.0);
+        assert!(Config::from_args(&args("fleet --sessions 0")).is_err());
+        assert!(Config::from_args(&args("fleet --contention-capacity 0")).is_err());
+        assert!(Config::from_args(&args("fleet --contention-slope -1")).is_err());
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_choices() {
+        let err = Config::from_args(&args("x --policy sgd")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mu-linucb") && msg.contains("neurosurgeon"), "{msg}");
+        let err = Config::from_args(&args("x --model alexnet")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("vgg16") && msg.contains("partnet"), "{msg}");
     }
 
     #[test]

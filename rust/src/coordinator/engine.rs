@@ -1,0 +1,592 @@
+//! The multi-session serving engine: N users, one contended edge.
+//!
+//! The paper's testbed serves a single device against a single edge
+//! server; this module generalizes that loop into the crate's serving
+//! core (DESIGN.md §6).  A [`Session`] owns one user's complete state —
+//! boxed [`Policy`], frame source (video stream + key-frame detector),
+//! per-network [`FeatureScale`]/context cache, and per-session
+//! [`Metrics`] — while the [`Engine`] multiplexes all sessions over a
+//! **shared edge** in lockstep rounds:
+//!
+//! 1. *select phase* — every session ticks its own uplink/workload,
+//!    classifies its next frame, and asks its policy for a partition
+//!    point, under the edge-load estimate from the previous round;
+//! 2. *realize phase* — the engine counts how many sessions actually
+//!    offloaded (k_t), sets every environment's edge-load factor to
+//!    `Contention::factor(k_t)`, optionally queues each ψ_p through the
+//!    [`SharedIngress`] FIFO, realizes the noisy delays, and feeds each
+//!    policy its own feedback.
+//!
+//! Because the realized edge delay depends on k_t, the sessions' bandits
+//! genuinely interact (the CANS regime): one learner's decision to
+//! offload degrades every other learner's offloading arms.  With one
+//! session and [`Contention::none`] the rounds reduce *bit-identically*
+//! to the seed's single-stream experiment loop — `experiment::run` and
+//! `pipeline::serve` are thin wrappers over the phase functions here.
+
+use super::metrics::{FleetSummary, FrameRecord, Metrics, Summary};
+use crate::bandit::policy::argmin;
+use crate::bandit::{FrameContext, Policy, PolicySnapshot, Privileged};
+use crate::config::Config;
+use crate::models::{features, FeatureScale, FeatureVector};
+use crate::simulator::{Contention, Environment, SharedIngress};
+use crate::video::{Frame, KeyframeDetector, VideoStream, Weights};
+
+/// How frame weights L_t are produced for one session.
+pub enum FrameSource {
+    /// Every frame gets the same (non-key) weight — experiments where key
+    /// frames are irrelevant.
+    Uniform { weight: f64 },
+    /// A synthetic video stream with SSIM key-frame detection
+    /// (Fig 15; also the default serving configuration).
+    Video { stream: VideoStream, detector: KeyframeDetector },
+}
+
+impl FrameSource {
+    pub fn uniform() -> FrameSource {
+        FrameSource::Uniform { weight: 0.2 }
+    }
+
+    pub fn video(seed: u64, ssim_threshold: f64, weights: Weights) -> FrameSource {
+        FrameSource::Video {
+            stream: VideoStream::new(64, 64, seed),
+            detector: KeyframeDetector::new(ssim_threshold, weights),
+        }
+    }
+
+    /// (is_key, weight) for the next frame.
+    pub fn next(&mut self) -> (bool, f64) {
+        let (_, is_key, weight) = self.next_with_frame();
+        (is_key, weight)
+    }
+
+    /// Next frame with its pixels — the real serving path needs the
+    /// tensor, the simulator only the classification.  `Uniform` sources
+    /// yield no pixels.
+    pub fn next_with_frame(&mut self) -> (Option<Frame>, bool, f64) {
+        match self {
+            FrameSource::Uniform { weight } => (None, false, *weight),
+            FrameSource::Video { stream, detector } => {
+                let frame = stream.next_frame();
+                let c = detector.classify(&frame);
+                (Some(frame), c.is_key, c.weight)
+            }
+        }
+    }
+}
+
+/// One session's pending decision within a round.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub p: usize,
+    pub is_key: bool,
+    pub weight: f64,
+    /// Policy's pre-feedback prediction for the chosen arm (None for
+    /// p = P or policies without a model) — the honest Fig 9 curve.
+    pub predicted_edge_ms: Option<f64>,
+}
+
+/// One user's complete serving state.
+pub struct Session {
+    pub id: usize,
+    pub policy: Box<dyn Policy>,
+    /// This session's private environment: its own uplink and noise
+    /// stream; the edge *profile* is shared with the fleet and coupled
+    /// through the engine's contention factor.
+    pub env: Environment,
+    pub source: FrameSource,
+    pub metrics: Metrics,
+    /// Per-network feature normalization (cached at session creation).
+    pub scale: FeatureScale,
+    front: Vec<f64>,
+    contexts: Vec<FeatureVector>,
+    expected: Vec<f64>,
+}
+
+impl Session {
+    pub fn new(id: usize, policy: Box<dyn Policy>, env: Environment, source: FrameSource) -> Session {
+        let scale = FeatureScale::for_network(&env.net);
+        let contexts = features::context_vectors(&env.net, &scale);
+        let front = env.front_delays().to_vec();
+        let expected = vec![0.0; env.num_partitions() + 1];
+        Session {
+            id,
+            policy,
+            env,
+            source,
+            metrics: Metrics::new(),
+            scale,
+            front,
+            contexts,
+            expected,
+        }
+    }
+
+    /// Cheap per-session diagnostics (fleet tables).
+    pub fn snapshot(&self) -> PolicySnapshot {
+        self.policy.snapshot()
+    }
+
+    /// Summary of everything this session served so far.
+    pub fn summary(&self) -> Summary {
+        self.metrics.summary(self.env.num_partitions())
+    }
+}
+
+/// One decision through a policy without a simulator environment — the
+/// select step shared by the simulated rounds and the real PJRT pipeline.
+#[allow(clippy::too_many_arguments)]
+pub fn decide(
+    policy: &mut dyn Policy,
+    t: usize,
+    is_key: bool,
+    weight: f64,
+    front: &[f64],
+    contexts: &[FeatureVector],
+    rate_mbps: f64,
+    expected_totals: Option<&[f64]>,
+) -> Decision {
+    let ctx = FrameContext {
+        t,
+        weight,
+        front_delays: front,
+        contexts,
+        privileged: Privileged { rate_mbps, expected_totals },
+    };
+    let p = policy.select(&ctx);
+    let p_max = front.len() - 1;
+    assert!(p <= p_max, "policy {} chose invalid arm {p}", policy.name());
+    // Record the prediction BEFORE feedback (honest Fig 9 curve).
+    let predicted_edge_ms = if p == p_max { None } else { policy.predict_edge_delay(&contexts[p]) };
+    Decision { p, is_key, weight, predicted_edge_ms }
+}
+
+/// Select phase for one simulated session: advance its environment and
+/// frame source, expose the contention-adjusted expected delays to
+/// privileged baselines, and take the policy's decision.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn select_one(
+    policy: &mut dyn Policy,
+    env: &mut Environment,
+    source: &mut FrameSource,
+    front: &[f64],
+    contexts: &[FeatureVector],
+    expected: &mut [f64],
+    t: usize,
+    concurrent_estimate: usize,
+    contention: &Contention,
+) -> Decision {
+    env.tick(t);
+    env.set_contention_factor(contention.factor(concurrent_estimate));
+    let (is_key, weight) = source.next();
+    for (p, v) in expected.iter_mut().enumerate() {
+        *v = env.expected_total(p);
+    }
+    decide(
+        policy,
+        t,
+        is_key,
+        weight,
+        front,
+        contexts,
+        env.current_rate_mbps(),
+        Some(&*expected),
+    )
+}
+
+/// Realize phase for one simulated session: apply the fleet's actual
+/// concurrency, draw the noisy delay, add the precomputed shared-ingress
+/// queueing (see [`Engine::step`]'s arrival-ordered pass), feed the
+/// policy, and record ground-truth metrics.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn realize_one(
+    policy: &mut dyn Policy,
+    env: &mut Environment,
+    metrics: &mut Metrics,
+    front: &[f64],
+    contexts: &[FeatureVector],
+    expected: &mut [f64],
+    decision: &Decision,
+    t: usize,
+    concurrent: usize,
+    contention: &Contention,
+    ingress_queue_ms: f64,
+) {
+    env.set_contention_factor(contention.factor(concurrent));
+    for (p, v) in expected.iter_mut().enumerate() {
+        *v = env.expected_total(p);
+    }
+    let p_max = env.num_partitions();
+    let p = decision.p;
+    let mut realized_edge = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
+    if p != p_max {
+        // Queueing behind other sessions' payloads at the edge NIC is
+        // part of the d^e feedback the policy learns from.
+        realized_edge += ingress_queue_ms;
+    }
+    let delay_ms = front[p] + realized_edge;
+    if p != p_max {
+        policy.observe(p, &contexts[p], realized_edge);
+    }
+    let oracle_p = argmin(expected);
+    metrics.push(FrameRecord {
+        t,
+        p,
+        is_key: decision.is_key,
+        weight: decision.weight,
+        delay_ms,
+        expected_ms: expected[p],
+        oracle_p,
+        oracle_ms: expected[oracle_p],
+        rate_mbps: env.current_rate_mbps(),
+        predicted_edge_ms: decision.predicted_edge_ms,
+        true_edge_ms: env.expected_edge_delay(p),
+    });
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Logical frame interval (ms) — spaces rounds on the shared-ingress
+    /// clock.  Irrelevant without an ingress model.
+    pub frame_interval_ms: f64,
+    /// Shared-edge contention model coupling the sessions' edge legs.
+    pub contention: Contention,
+    /// Shared edge-ingress bandwidth (None = ingress not modelled; each
+    /// session's own uplink is then the only network leg).
+    pub ingress_mbps: Option<f64>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            frame_interval_ms: 1e3 / 30.0,
+            contention: Contention::none(),
+            ingress_mbps: None,
+        }
+    }
+}
+
+/// The multi-session serving engine (see module docs).
+pub struct Engine {
+    pub cfg: EngineConfig,
+    sessions: Vec<Session>,
+    ingress: Option<SharedIngress>,
+    round: usize,
+    /// Offload count of the previous round — the causal estimate every
+    /// session selects under in the next round.
+    offloaders_last: usize,
+    /// k_t per completed round (diagnostics; drives the reported
+    /// contention factors).
+    offload_counts: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let ingress = cfg.ingress_mbps.map(SharedIngress::new);
+        Engine {
+            cfg,
+            sessions: Vec::new(),
+            ingress,
+            round: 0,
+            offloaders_last: 0,
+            offload_counts: Vec::new(),
+        }
+    }
+
+    /// Register a session; returns its id.
+    pub fn add_session(
+        &mut self,
+        policy: Box<dyn Policy>,
+        env: Environment,
+        source: FrameSource,
+    ) -> usize {
+        let id = self.sessions.len();
+        self.sessions.push(Session::new(id, policy, env, source));
+        id
+    }
+
+    pub fn num_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    pub fn sessions_mut(&mut self) -> &mut [Session] {
+        &mut self.sessions
+    }
+
+    pub fn into_sessions(self) -> Vec<Session> {
+        self.sessions
+    }
+
+    /// Rounds completed so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Concurrent offload count k_t per completed round.
+    pub fn offload_counts(&self) -> &[usize] {
+        &self.offload_counts
+    }
+
+    /// Serve one frame for every session (one lockstep round).
+    pub fn step(&mut self) {
+        assert!(!self.sessions.is_empty(), "engine has no sessions");
+        let t = self.round;
+        let k_estimate = self.offloaders_last;
+        let contention = self.cfg.contention;
+
+        // Phase 1: every session picks a partition under last round's
+        // observed concurrency (the causal load estimate).
+        let mut decisions = Vec::with_capacity(self.sessions.len());
+        for s in &mut self.sessions {
+            let Session { policy, env, source, front, contexts, expected, .. } = s;
+            decisions.push(select_one(
+                policy.as_mut(),
+                env,
+                source,
+                front,
+                contexts,
+                expected,
+                t,
+                k_estimate,
+                &contention,
+            ));
+        }
+
+        // Phase 2: the actual concurrency this round determines the edge
+        // load everyone realizes.
+        let k = decisions
+            .iter()
+            .zip(&self.sessions)
+            .filter(|(d, s)| d.p != s.env.num_partitions())
+            .count();
+        let now_ms = t as f64 * self.cfg.frame_interval_ms;
+
+        // Shared-ingress pass, in *physical arrival order* (FIFO at the
+        // edge NIC, independent of session index): each ψ_p arrives once
+        // its front finished AND its bytes crossed the session's own
+        // uplink (expected tx time; the noisy realization is drawn in
+        // realize_one on top of this queueing term).
+        let mut ingress_queue_ms = vec![0.0; self.sessions.len()];
+        if let Some(ingress) = &mut self.ingress {
+            let mut arrivals: Vec<(f64, usize, usize)> = self
+                .sessions
+                .iter()
+                .zip(&decisions)
+                .enumerate()
+                .filter(|(_, (s, d))| d.p != s.env.num_partitions())
+                .map(|(i, (s, d))| {
+                    let bytes = s.env.psi_bytes(d.p);
+                    let tx = crate::simulator::tx_delay_ms(
+                        bytes,
+                        s.env.current_rate_mbps(),
+                        s.env.rtt_ms,
+                    );
+                    (now_ms + s.front[d.p] + tx, i, bytes)
+                })
+                .collect();
+            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (arrival_ms, i, bytes) in arrivals {
+                ingress_queue_ms[i] = ingress.consume(bytes, arrival_ms);
+            }
+        }
+
+        for (i, (s, d)) in self.sessions.iter_mut().zip(&decisions).enumerate() {
+            let Session { policy, env, metrics, front, contexts, expected, .. } = s;
+            realize_one(
+                policy.as_mut(),
+                env,
+                metrics,
+                front,
+                contexts,
+                expected,
+                d,
+                t,
+                k,
+                &contention,
+                ingress_queue_ms[i],
+            );
+        }
+
+        self.offloaders_last = k;
+        self.offload_counts.push(k);
+        self.round += 1;
+    }
+
+    /// Serve `rounds` frames per session.
+    pub fn run(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            self.step();
+        }
+    }
+
+    /// Per-session and fleet-aggregate views of everything served so far.
+    pub fn fleet_summary(&self) -> FleetSummary {
+        assert!(self.round > 0, "fleet_summary before any round");
+        let per_session: Vec<Summary> = self.sessions.iter().map(|s| s.summary()).collect();
+        let merged = Metrics::merged(self.sessions.iter().map(|s| &s.metrics));
+        let p_max = self.sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        let aggregate = merged.summary(p_max);
+        let mean_offloaders =
+            self.offload_counts.iter().sum::<usize>() as f64 / self.offload_counts.len() as f64;
+        let peak_offloaders = self.offload_counts.iter().copied().max().unwrap_or(0);
+        FleetSummary {
+            per_session,
+            aggregate,
+            mean_offloaders,
+            peak_offloaders,
+            peak_contention_factor: self.cfg.contention.factor(peak_offloaders),
+        }
+    }
+}
+
+/// Assemble the fleet engine a [`Config`] describes: `cfg.sessions`
+/// sessions over [`crate::simulator::scenario::fleet_with`] environments
+/// (per-session uplinks), each with its own policy instance and video
+/// source, coupled by the configured contention/ingress models.
+pub fn fleet_from_config(cfg: &Config) -> Engine {
+    let net = crate::models::zoo::by_name(&cfg.model).expect("validated model");
+    let device = crate::simulator::profile_by_name(&cfg.device).expect("validated device");
+    let edge = crate::simulator::profile_by_name(&cfg.edge).expect("validated edge");
+    let envs = crate::simulator::scenario::fleet_with(
+        net,
+        cfg.sessions,
+        cfg.rate_mbps,
+        device,
+        edge,
+        cfg.load,
+        cfg.seed,
+    );
+    let mut engine = Engine::new(EngineConfig {
+        frame_interval_ms: 1e3 / cfg.fps,
+        contention: Contention::new(cfg.contention_capacity, cfg.contention_slope),
+        ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
+    });
+    for (i, env) in envs.into_iter().enumerate() {
+        let policy = cfg.policy(&env.net, &env.device, &env.edge);
+        let source = FrameSource::video(
+            cfg.seed.wrapping_add(1 + i as u64),
+            cfg.ssim_threshold,
+            Weights::new(cfg.l_key, cfg.l_non_key),
+        );
+        engine.add_session(policy, env, source);
+    }
+    engine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::simulator::{Uplink, Workload, DEVICE_MAXN, EDGE_GPU};
+
+    fn policy(net: &crate::models::Network, name: &str, horizon: usize) -> Box<dyn Policy> {
+        crate::bandit::by_name(name, net, &DEVICE_MAXN, &EDGE_GPU, horizon, None, None).unwrap()
+    }
+
+    fn env(rate: f64, seed: u64) -> Environment {
+        Environment::simple(zoo::partnet(), rate, seed)
+    }
+
+    #[test]
+    fn single_session_round_produces_records() {
+        let mut eng = Engine::new(EngineConfig::default());
+        let net = zoo::partnet();
+        eng.add_session(policy(&net, "mu-linucb", 50), env(10.0, 1), FrameSource::uniform());
+        eng.run(50);
+        assert_eq!(eng.round(), 50);
+        let s = &eng.sessions()[0];
+        assert_eq!(s.metrics.records.len(), 50);
+        let sum = s.summary();
+        assert!(sum.mean_delay_ms.is_finite() && sum.mean_delay_ms > 0.0);
+    }
+
+    #[test]
+    fn offload_counts_track_policies() {
+        // EO sessions offload every round; MO sessions never do.
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig::default());
+        eng.add_session(policy(&net, "eo", 20), env(10.0, 1), FrameSource::uniform());
+        eng.add_session(policy(&net, "eo", 20), env(10.0, 2), FrameSource::uniform());
+        eng.add_session(policy(&net, "mo", 20), env(10.0, 3), FrameSource::uniform());
+        eng.run(20);
+        assert!(eng.offload_counts().iter().all(|&k| k == 2), "{:?}", eng.offload_counts());
+    }
+
+    #[test]
+    fn contention_inflates_realized_edge_delays() {
+        // Same EO arm, same uplink: an 8-way contended engine must realize
+        // strictly larger mean delays than a lone session.
+        let run_one = |n: usize| -> f64 {
+            let mut eng = Engine::new(EngineConfig {
+                contention: Contention::new(1, 0.5),
+                ..Default::default()
+            });
+            let net = zoo::partnet();
+            for i in 0..n {
+                eng.add_session(policy(&net, "eo", 60), env(10.0, 10 + i as u64), FrameSource::uniform());
+            }
+            eng.run(60);
+            eng.sessions()[0].summary().mean_delay_ms
+        };
+        let lone = run_one(1);
+        let crowded = run_one(8);
+        assert!(
+            crowded > lone * 1.5,
+            "8-way contention should inflate session 0's delay: {lone} -> {crowded}"
+        );
+    }
+
+    #[test]
+    fn shared_ingress_queues_later_sessions() {
+        // Both sessions offload the same ψ at the same instant over a slow
+        // shared ingress: session 1 must queue behind session 0.
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig {
+            ingress_mbps: Some(1.0),
+            ..Default::default()
+        });
+        // Noise-free for a clean ordering comparison.
+        let mk = |seed| {
+            let mut e = Environment::new(
+                net.clone(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::constant(10.0),
+                seed,
+            );
+            e.noise_std_ms = 0.0;
+            e
+        };
+        eng.add_session(policy(&net, "eo", 4), mk(1), FrameSource::uniform());
+        eng.add_session(policy(&net, "eo", 4), mk(1), FrameSource::uniform());
+        eng.step();
+        let d0 = eng.sessions()[0].metrics.records[0].delay_ms;
+        let d1 = eng.sessions()[1].metrics.records[0].delay_ms;
+        // ψ_0 of partnet is 12288 bytes = ~98 ms at 1 Mbps: queueing doubles it.
+        assert!(d1 > d0 + 50.0, "session 1 should queue behind session 0: {d0} vs {d1}");
+    }
+
+    #[test]
+    fn fleet_from_config_builds_n_sessions() {
+        let args = crate::util::cli::Args::parse(
+            "fleet --sessions 3 --model partnet --frames 30 --rate 10"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        let mut eng = fleet_from_config(&cfg);
+        assert_eq!(eng.num_sessions(), 3);
+        eng.run(cfg.frames);
+        let fs = eng.fleet_summary();
+        assert_eq!(fs.per_session.len(), 3);
+        assert_eq!(fs.aggregate.frames, 90);
+        assert!(fs.peak_contention_factor >= 1.0);
+    }
+}

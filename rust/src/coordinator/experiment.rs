@@ -1,52 +1,24 @@
-//! The simulation experiment runner: policy × environment × video stream.
+//! The single-stream experiment runner: policy × environment × video
+//! stream — now a **thin wrapper over the serving engine**
+//! ([`super::engine`]).
 //!
 //! Drives one [`Policy`] over a scripted [`Environment`] for T frames,
 //! feeding it exactly the information the paper allows (front-delay
 //! profile, contextual features, L_t weights, and aggregate d_p^e
 //! feedback for pulled arms ≠ P), while recording ground-truth metrics
 //! against the per-frame oracle.  Every table/figure bench and several
-//! integration tests drive this one function.
+//! integration tests drive this one function; since the engine refactor
+//! each frame is one engine select/realize round with a single session
+//! and [`Contention::none`], which is **bit-identical** to the original
+//! loop (asserted by `tests/fleet.rs`).
 
-use super::metrics::{FrameRecord, Metrics};
-use crate::bandit::{FrameContext, Policy, Privileged};
+use super::engine;
+use super::metrics::Metrics;
+use crate::bandit::Policy;
 use crate::models::{features, FeatureScale};
-use crate::simulator::Environment;
-use crate::video::{KeyframeDetector, VideoStream, Weights};
+use crate::simulator::{Contention, Environment};
 
-/// How frame weights L_t are produced.
-pub enum FrameSource {
-    /// Every frame gets the same (non-key) weight — experiments where key
-    /// frames are irrelevant.
-    Uniform { weight: f64 },
-    /// A synthetic video stream with SSIM key-frame detection
-    /// (Fig 15; also the default serving configuration).
-    Video { stream: VideoStream, detector: KeyframeDetector },
-}
-
-impl FrameSource {
-    pub fn uniform() -> FrameSource {
-        FrameSource::Uniform { weight: 0.2 }
-    }
-
-    pub fn video(seed: u64, ssim_threshold: f64, weights: Weights) -> FrameSource {
-        FrameSource::Video {
-            stream: VideoStream::new(64, 64, seed),
-            detector: KeyframeDetector::new(ssim_threshold, weights),
-        }
-    }
-
-    /// (is_key, weight) for the next frame.
-    fn next(&mut self) -> (bool, f64) {
-        match self {
-            FrameSource::Uniform { weight } => (false, *weight),
-            FrameSource::Video { stream, detector } => {
-                let frame = stream.next_frame();
-                let c = detector.classify(&frame);
-                (c.is_key, c.weight)
-            }
-        }
-    }
-}
+pub use super::engine::FrameSource;
 
 /// Run `policy` in `env` for `frames` frames; returns per-frame metrics.
 pub fn run(
@@ -58,54 +30,35 @@ pub fn run(
     let scale = FeatureScale::for_network(&env.net);
     let contexts = features::context_vectors(&env.net, &scale);
     let front: Vec<f64> = env.front_delays().to_vec();
-    let p_max = env.num_partitions();
+    let mut expected = vec![0.0; env.num_partitions() + 1];
     let mut metrics = Metrics::new();
-    let mut expected_totals = vec![0.0; p_max + 1];
+    let contention = Contention::none();
 
     for t in 0..frames {
-        env.tick(t);
-        let (is_key, weight) = source.next();
-        for (p, v) in expected_totals.iter_mut().enumerate() {
-            *v = env.expected_total(p);
-        }
-        let ctx = FrameContext {
+        let decision = engine::select_one(
+            policy,
+            env,
+            source,
+            &front,
+            &contexts,
+            &mut expected,
             t,
-            weight,
-            front_delays: &front,
-            contexts: &contexts,
-            privileged: Privileged {
-                rate_mbps: env.current_rate_mbps(),
-                expected_totals: Some(&expected_totals),
-            },
-        };
-        let p = policy.select(&ctx);
-        assert!(p <= p_max, "policy {} chose invalid arm {p}", policy.name());
-
-        // Record the prediction BEFORE feedback (honest Fig 9 curve).
-        let predicted_edge_ms =
-            if p == p_max { None } else { policy.predict_edge_delay(&contexts[p]) };
-
-        // Realize the frame: front (deterministic profile) + noisy edge leg.
-        let realized_edge = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
-        let delay_ms = front[p] + realized_edge;
-        if p != p_max {
-            policy.observe(p, &contexts[p], realized_edge);
-        }
-
-        let oracle_p = crate::bandit::policy::argmin(&expected_totals);
-        metrics.push(FrameRecord {
+            0,
+            &contention,
+        );
+        engine::realize_one(
+            policy,
+            env,
+            &mut metrics,
+            &front,
+            &contexts,
+            &mut expected,
+            &decision,
             t,
-            p,
-            is_key,
-            weight,
-            delay_ms,
-            expected_ms: expected_totals[p],
-            oracle_p,
-            oracle_ms: expected_totals[oracle_p],
-            rate_mbps: env.current_rate_mbps(),
-            predicted_edge_ms,
-            true_edge_ms: env.expected_edge_delay(p),
-        });
+            1,
+            &contention,
+            0.0,
+        );
     }
     metrics
 }
@@ -137,6 +90,7 @@ pub fn quick_run(
 mod tests {
     use super::*;
     use crate::models::zoo;
+    use crate::video::Weights;
 
     #[test]
     fn oracle_has_zero_regret() {

@@ -44,6 +44,20 @@ pub struct Summary {
     pub oracle_match_rate: f64,
 }
 
+impl Summary {
+    /// Most frequently chosen partition point (first on ties) — the
+    /// headline of the per-session fleet tables.
+    pub fn modal_partition(&self) -> usize {
+        let mut best = 0;
+        for (p, &n) in self.partition_histogram.iter().enumerate() {
+            if n > self.partition_histogram[best] {
+                best = p;
+            }
+        }
+        best
+    }
+}
+
 /// Accumulates [`FrameRecord`]s and produces summaries / CSV.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -138,6 +152,16 @@ impl Metrics {
         tail.iter().map(|(_, e)| e).sum::<f64>() / tail.len() as f64
     }
 
+    /// Concatenate per-session metrics into one fleet-wide view (records
+    /// keep their per-session frame indices; ordering is session-major).
+    pub fn merged<'a, I: IntoIterator<Item = &'a Metrics>>(parts: I) -> Metrics {
+        let mut out = Metrics::new();
+        for m in parts {
+            out.records.extend(m.records.iter().cloned());
+        }
+        out
+    }
+
     /// CSV dump (one row per frame).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
@@ -160,6 +184,39 @@ impl Metrics {
             ));
         }
         out
+    }
+}
+
+/// Fleet-aggregate view over a multi-session run: per-session summaries
+/// plus the merged whole and the engine's contention diagnostics.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub per_session: Vec<Summary>,
+    /// Summary over every session's records merged together.
+    pub aggregate: Summary,
+    /// Mean concurrent offload count k_t per round.
+    pub mean_offloaders: f64,
+    /// Largest k_t observed.
+    pub peak_offloaders: usize,
+    /// Edge load multiplier at the peak (1.0 = never contended).
+    pub peak_contention_factor: f64,
+}
+
+impl FleetSummary {
+    /// Spread between the best and worst per-session mean delay — the
+    /// fleet's fairness gap.
+    pub fn delay_spread_ms(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for s in &self.per_session {
+            lo = lo.min(s.mean_delay_ms);
+            hi = hi.max(s.mean_delay_ms);
+        }
+        if self.per_session.is_empty() {
+            0.0
+        } else {
+            hi - lo
+        }
     }
 }
 
@@ -234,5 +291,52 @@ mod tests {
     #[should_panic(expected = "empty range")]
     fn empty_summary_panics() {
         Metrics::new().summary(3);
+    }
+
+    #[test]
+    fn merged_concatenates_sessions() {
+        let mut a = Metrics::new();
+        a.push(rec(0, 1, 10.0, false));
+        a.push(rec(1, 1, 20.0, false));
+        let mut b = Metrics::new();
+        b.push(rec(0, 2, 30.0, true));
+        let m = Metrics::merged([&a, &b]);
+        assert_eq!(m.records.len(), 3);
+        let s = m.summary(2);
+        assert_eq!(s.frames, 3);
+        assert!((s.mean_delay_ms - 20.0).abs() < 1e-12);
+        assert_eq!(s.partition_histogram, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn fleet_summary_views() {
+        let mut a = Metrics::new();
+        a.push(rec(0, 1, 10.0, false));
+        let mut b = Metrics::new();
+        b.push(rec(0, 1, 30.0, false));
+        let fs = FleetSummary {
+            per_session: vec![a.summary(2), b.summary(2)],
+            aggregate: Metrics::merged([&a, &b]).summary(2),
+            mean_offloaders: 1.5,
+            peak_offloaders: 2,
+            peak_contention_factor: 1.5,
+        };
+        assert!((fs.delay_spread_ms() - 20.0).abs() < 1e-12);
+        // regret per rec(): expected 10/30 vs oracle 10 -> 0 + 20
+        assert!((fs.aggregate.total_regret_ms - 20.0).abs() < 1e-12);
+        assert_eq!(fs.aggregate.frames, 2);
+    }
+
+    #[test]
+    fn modal_partition_first_on_ties() {
+        let mut m = Metrics::new();
+        m.push(rec(0, 1, 10.0, false));
+        m.push(rec(1, 2, 10.0, false));
+        m.push(rec(2, 2, 10.0, false));
+        assert_eq!(m.summary(3).modal_partition(), 2);
+        let mut tied = Metrics::new();
+        tied.push(rec(0, 0, 10.0, false));
+        tied.push(rec(1, 3, 10.0, false));
+        assert_eq!(tied.summary(3).modal_partition(), 0);
     }
 }

@@ -1,17 +1,24 @@
 //! L3 coordinator: the serving system around the learner.
 //!
-//! * [`experiment`] — the simulation runner driving any [`crate::bandit::Policy`]
-//!   over a scripted [`crate::simulator::Environment`] (all paper exhibits).
+//! * [`engine`] — the multi-session serving core: [`engine::Session`]s
+//!   (per-user policy, video source, metrics) multiplexed by an
+//!   [`engine::Engine`] over a shared contended edge (DESIGN.md §6).
+//! * [`experiment`] — the single-stream simulation runner (all paper
+//!   exhibits); a thin wrapper over one engine session.
 //! * [`pipeline`] — the *real* serving path: PartNet over two PJRT clients
-//!   (device thread / edge thread) joined by a byte-accurate shaped link.
-//! * [`metrics`] — per-frame records, summaries, regret accounting, CSV.
+//!   (device thread / edge thread) joined by a byte-accurate shaped link;
+//!   its per-frame decision step routes through [`engine::decide`].
+//! * [`metrics`] — per-frame records, summaries, per-session and
+//!   fleet-aggregate views, regret accounting, CSV.
 //! * [`exhibits`] — one generator per paper table/figure (see DESIGN.md §5).
 
+pub mod engine;
 pub mod exhibits;
 pub mod experiment;
 pub mod metrics;
 pub mod pipeline;
 
-pub use experiment::{quick_run, run, FrameSource};
-pub use metrics::{FrameRecord, Metrics, Summary};
+pub use engine::{Engine, EngineConfig, FrameSource, Session};
+pub use experiment::{quick_run, run};
+pub use metrics::{FleetSummary, FrameRecord, Metrics, Summary};
 pub use pipeline::{serve, PipelineConfig, ServingReport};

@@ -18,9 +18,16 @@
 //! batch-1.  Compute legs are measured wall-clock; the link leg is
 //! simulated byte-accurately over the real intermediate tensors with a
 //! [`TokenBucket`] shaper.
+//!
+//! Since the engine refactor this path is one real-execution session of
+//! the serving core: the per-user stream state is an
+//! [`engine::FrameSource`] and each decision routes through
+//! [`engine::decide`] — exactly what the engine's simulated sessions run,
+//! minus the privileged oracle totals that only exist in simulation.
 
+use super::engine::{self, FrameSource};
 use super::metrics::{FrameRecord, Metrics};
-use crate::bandit::{FrameContext, Policy, Privileged};
+use crate::bandit::Policy;
 use crate::models::FeatureVector;
 use crate::runtime::{Manifest, PartitionedModel, Runtime};
 use crate::simulator::TokenBucket;
@@ -133,8 +140,12 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
     };
 
     // ---- serving loop ----
-    let mut stream = VideoStream::new(input_hw, input_hw, cfg.seed);
-    let mut detector = KeyframeDetector::new(cfg.ssim_threshold, cfg.weights);
+    // The per-user stream state is the engine's session-layer frame
+    // source (video stream + SSIM key-frame detector in one).
+    let mut source = FrameSource::Video {
+        stream: VideoStream::new(input_hw, input_hw, cfg.seed),
+        detector: KeyframeDetector::new(cfg.ssim_threshold, cfg.weights),
+    };
     let mut link = TokenBucket::new(cfg.rate_mbps);
     let mut metrics = Metrics::new();
     let frame_interval_ms = 1e3 / cfg.fps;
@@ -156,10 +167,10 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
         let mut is_key_any = false;
         let mut weight: f64 = 0.0;
         for _ in 0..batch {
-            let frame = stream.next_frame();
-            let class = detector.classify(&frame);
-            is_key_any |= class.is_key;
-            weight = weight.max(class.weight);
+            let (frame, is_key, w) = source.next_with_frame();
+            let frame = frame.expect("video source yields frames");
+            is_key_any |= is_key;
+            weight = weight.max(w);
             input.extend(frame.to_input(channels));
         }
 
@@ -168,14 +179,19 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
         } else {
             (&contexts_b1, &front_profile_b1)
         };
-        let ctx = FrameContext {
+        // Decision step: same engine path the simulated sessions take
+        // (no privileged totals exist on the real path).
+        let decision = engine::decide(
+            policy,
             t,
+            is_key_any,
             weight,
-            front_delays: front_profile,
+            front_profile,
             contexts,
-            privileged: Privileged { rate_mbps: cfg.rate_mbps, expected_totals: None },
-        };
-        let p = policy.select(&ctx);
+            cfg.rate_mbps,
+            None,
+        );
+        let p = decision.p;
 
         // Device leg (real PJRT execution).
         let model = &device_models[&batch];
@@ -211,11 +227,9 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
             oracle_p: 0, // no ground-truth oracle on the real path
             oracle_ms: 0.0,
             rate_mbps: cfg.rate_mbps,
-            predicted_edge_ms: if p == p_max {
-                None
-            } else {
-                policy.predict_edge_delay(&contexts[p])
-            },
+            // Pre-feedback prediction from the decision step (consistent
+            // with the simulator path's honest Fig 9 accounting).
+            predicted_edge_ms: decision.predicted_edge_ms,
             true_edge_ms: edge_ms,
         });
 

@@ -5,11 +5,13 @@
 //! as a three-layer rust + JAX + Pallas serving stack:
 //!
 //! * **L3 (this crate)** — the rust coordinator: per-frame DNN partition
-//!   decisions via the μLinUCB contextual bandit ([`bandit`]), the serving
-//!   pipeline ([`coordinator`]), the environment/testbed simulator
-//!   ([`simulator`]), the model zoo with contextual features ([`models`]),
-//!   SSIM key-frame detection ([`video`]), and the PJRT runtime that
-//!   executes AOT-compiled partitions ([`runtime`]).
+//!   decisions via the μLinUCB contextual bandit ([`bandit`]), the
+//!   multi-session serving engine and pipelines ([`coordinator`], with
+//!   [`coordinator::engine`] multiplexing N user sessions over one
+//!   contended edge), the environment/testbed simulator ([`simulator`]),
+//!   the model zoo with contextual features ([`models`]), SSIM key-frame
+//!   detection ([`video`]), and the PJRT runtime that executes
+//!   AOT-compiled partitions ([`runtime`]).
 //! * **L2/L1 (python, build-time only)** — the partitionable CNN and its
 //!   Pallas kernels, lowered once to HLO text under `artifacts/`.
 //!

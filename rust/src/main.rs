@@ -2,16 +2,19 @@
 //!
 //! Subcommands:
 //!   simulate   run a policy over the calibrated testbed simulator
+//!   fleet      multi-session serving over a shared contended edge
 //!   serve      real serving: PartNet over PJRT with SSIM + μLinUCB
 //!   bench      regenerate paper exhibits (fig1..fig17, table1)
 //!   models     print the model zoo with partition structure
 //!   help       this text
 
 use ans::config::Config;
-use ans::coordinator::{exhibits, experiment, pipeline};
+use ans::coordinator::{engine, exhibits, experiment, pipeline};
 use ans::util::cli::Args;
 use ans::video::Weights;
 use anyhow::{Context, Result};
+
+const SUBCOMMANDS: &[&str] = &["simulate", "fleet", "serve", "bench", "models", "help"];
 
 const HELP: &str = "\
 ans — Autodidactic Neurosurgeon (WWW'21 reproduction)
@@ -23,6 +26,12 @@ SUBCOMMANDS:
   simulate   Run a policy over the calibrated testbed simulator.
              --model M --policy P --frames N --rate MBPS --device maxn|maxq
              --edge gpu|cpu --load X --alpha A --mu MU --window W --seed S
+  fleet      Multi-session serving: N sessions (own uplinks, own μLinUCB
+             learners) over one shared contended edge; per-session and
+             aggregate regret/delay tables.
+             --sessions N --model M --policy P --frames N --rate MBPS
+             --contention-capacity K --contention-slope S --ingress MBPS
+             --device maxn|maxq --edge gpu|cpu --load X --seed S
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -46,6 +55,7 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let result = match sub.as_str() {
         "simulate" => cmd_simulate(&args),
+        "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "models" => cmd_models(),
@@ -54,7 +64,10 @@ fn main() {
             Ok(())
         }
         other => {
-            eprintln!("unknown subcommand `{other}`\n\n{HELP}");
+            eprintln!(
+                "unknown subcommand `{other}` — valid subcommands: {}\n\n{HELP}",
+                SUBCOMMANDS.join(", ")
+            );
             std::process::exit(2);
         }
     };
@@ -98,6 +111,74 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let path = format!("bench_results/simulate_{}_{}.csv", cfg.model, cfg.policy);
         std::fs::write(&path, metrics.to_csv())?;
         println!("per-frame CSV -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let mut eng = engine::fleet_from_config(&cfg);
+    println!(
+        "fleet: {} sessions × {} frames of {} ({}) over a shared {} edge",
+        cfg.sessions, cfg.frames, cfg.model, cfg.policy, cfg.edge
+    );
+    println!(
+        "  base rate {} Mbps (per-session spread), contention capacity {} slope {}, ingress {}",
+        cfg.rate_mbps,
+        cfg.contention_capacity,
+        cfg.contention_slope,
+        if cfg.ingress_mbps > 0.0 {
+            format!("{} Mbps", cfg.ingress_mbps)
+        } else {
+            "off".to_string()
+        },
+    );
+    eng.run(cfg.frames);
+    let fs = eng.fleet_summary();
+
+    println!(
+        "\n  {:<4} {:>10} {:>11} {:>10} {:>11} {:>8} {:>16} {:>6} {:>7}",
+        "sess", "rate Mbps", "mean ms", "p95 ms", "regret ms", "oracle%", "modal partition", "obs", "resets"
+    );
+    for (s, sum) in eng.sessions().iter().zip(&fs.per_session) {
+        let snap = s.snapshot();
+        let modal = sum.modal_partition();
+        println!(
+            "  s{:<3} {:>10.1} {:>11.1} {:>10.1} {:>11.1} {:>8.1} {:>16} {:>6} {:>7}",
+            s.id,
+            s.env.current_rate_mbps(),
+            sum.mean_delay_ms,
+            sum.p95_delay_ms,
+            sum.total_regret_ms,
+            100.0 * sum.oracle_match_rate,
+            s.env.net.partition_label(modal),
+            snap.observations,
+            snap.resets,
+        );
+    }
+    println!(
+        "\naggregate: {} frames  mean {:.1} ms  p95 {:.1} ms  regret {:.1} ms  oracle-match {:.1}%",
+        fs.aggregate.frames,
+        fs.aggregate.mean_delay_ms,
+        fs.aggregate.p95_delay_ms,
+        fs.aggregate.total_regret_ms,
+        100.0 * fs.aggregate.oracle_match_rate,
+    );
+    println!(
+        "contention: mean offloaders {:.2}/{}  peak {}  peak edge-load factor {:.2}x  fairness spread {:.1} ms",
+        fs.mean_offloaders,
+        cfg.sessions,
+        fs.peak_offloaders,
+        fs.peak_contention_factor,
+        fs.delay_spread_ms(),
+    );
+    if args.flag("csv") {
+        std::fs::create_dir_all("bench_results")?;
+        for s in eng.sessions() {
+            let path = format!("bench_results/fleet_{}_s{}.csv", cfg.model, s.id);
+            std::fs::write(&path, s.metrics.to_csv())?;
+        }
+        println!("per-session CSVs -> bench_results/fleet_{}_s*.csv", cfg.model);
     }
     Ok(())
 }
@@ -170,7 +251,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_models() -> Result<()> {
-    for name in ["vgg16", "yolo", "yolo_tiny", "resnet50", "partnet"] {
+    for name in ans::models::zoo::MODEL_NAMES {
         let net = ans::models::zoo::by_name(name).unwrap();
         let s = net.backend_stats(0);
         println!(

@@ -185,6 +185,9 @@ pub fn partnet() -> Network {
     }
 }
 
+/// Canonical names accepted by [`by_name`] (CLI help / validation).
+pub const MODEL_NAMES: &[&str] = &["vgg16", "yolo", "yolo_tiny", "resnet50", "partnet"];
+
 /// Look a network up by name (CLI / config entry point).
 pub fn by_name(name: &str) -> Option<Network> {
     match name {
@@ -307,8 +310,8 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for name in ["vgg16", "yolo", "yolo_tiny", "resnet50", "partnet"] {
-            assert_eq!(by_name(name).unwrap().name, name);
+        for name in MODEL_NAMES {
+            assert_eq!(by_name(name).unwrap().name, *name);
         }
         assert!(by_name("alexnet").is_none());
     }

@@ -1,6 +1,8 @@
 //! Request-path runtime: PJRT execution of AOT-compiled model partitions.
 //!
-//! [`client`] wraps the `xla` crate (PJRT CPU); [`artifacts`] parses the
+//! [`client`] wraps the `xla` crate (PJRT CPU; behind the `pjrt` cargo
+//! feature — a same-API stub that errors at runtime compiles otherwise);
+//! [`artifacts`] parses the
 //! manifest contract written by `python/compile/aot.py`; [`executor`]
 //! caches compiled front/back executables per partition point and batch
 //! size.  Python never runs here — artifacts are self-contained HLO text

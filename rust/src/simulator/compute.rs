@@ -122,6 +122,46 @@ pub fn profile_by_name(name: &str) -> Option<ComputeProfile> {
     }
 }
 
+/// Shared-queue contention model: the effective edge load multiplier grows
+/// with the number of frames offloaded to the edge *concurrently* (CANS-style
+/// multi-user coupling — see DESIGN.md §6).  Orthogonal to [`Workload`]:
+/// `Workload` scripts *exogenous* tenants, `Contention` couples the
+/// *endogenous* load our own sessions generate, so N bandits sharing one
+/// edge genuinely interact through each other's partition choices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Contention {
+    /// Concurrent offloaded frames the edge absorbs with no slowdown
+    /// (its parallel service slots).
+    pub capacity: usize,
+    /// Load-multiplier growth per concurrent frame beyond `capacity`.
+    pub slope: f64,
+}
+
+impl Contention {
+    pub fn new(capacity: usize, slope: f64) -> Contention {
+        assert!(capacity >= 1, "contention capacity must be ≥ 1, got {capacity}");
+        assert!(slope >= 0.0 && slope.is_finite(), "contention slope must be ≥ 0, got {slope}");
+        Contention { capacity, slope }
+    }
+
+    /// No coupling: the single-stream wrapper paths run with this, which
+    /// keeps them bit-identical to the pre-engine behaviour.
+    pub fn none() -> Contention {
+        Contention { capacity: usize::MAX, slope: 0.0 }
+    }
+
+    /// Edge load multiplier when `concurrent` frames are offloaded at once.
+    /// Always ≥ 1; exactly 1 while `concurrent ≤ capacity`.
+    pub fn factor(&self, concurrent: usize) -> f64 {
+        1.0 + self.slope * concurrent.saturating_sub(self.capacity) as f64
+    }
+
+    /// Does this model ever produce a factor above 1?
+    pub fn is_active(&self) -> bool {
+        self.slope > 0.0 && self.capacity != usize::MAX
+    }
+}
+
 /// Time-varying edge workload multiplier (multi-tenancy; Fig 12(b)).
 #[derive(Debug, Clone)]
 pub enum Workload {
@@ -245,6 +285,44 @@ mod tests {
         assert_eq!(w.at(199), 1.0);
         assert_eq!(w.at(200), 3.0);
         assert_eq!(w.at(10_000), 3.0);
+    }
+
+    #[test]
+    fn contention_factor_shape() {
+        let c = Contention::new(2, 0.5);
+        assert_eq!(c.factor(0), 1.0);
+        assert_eq!(c.factor(1), 1.0);
+        assert_eq!(c.factor(2), 1.0);
+        assert!((c.factor(3) - 1.5).abs() < 1e-12);
+        assert!((c.factor(8) - 4.0).abs() < 1e-12);
+        assert!(c.is_active());
+    }
+
+    #[test]
+    fn contention_none_is_identity() {
+        let c = Contention::none();
+        for k in [0usize, 1, 8, 1000] {
+            assert_eq!(c.factor(k), 1.0);
+        }
+        assert!(!c.is_active());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn contention_zero_capacity_rejected() {
+        Contention::new(0, 0.5);
+    }
+
+    #[test]
+    fn contention_composes_with_profile_load() {
+        // The engine multiplies Workload by the contention factor; the
+        // resulting delay must scale linearly in the product.
+        let net = zoo::vgg16();
+        let s = net.backend_stats(0);
+        let base = EDGE_GPU.delay_ms(&s, 1.0);
+        let c = Contention::new(1, 0.5);
+        let loaded = EDGE_GPU.delay_ms(&s, c.factor(8));
+        assert!((loaded / base - 4.5).abs() < 1e-9, "{base} -> {loaded}");
     }
 
     #[test]

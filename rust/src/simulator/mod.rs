@@ -15,15 +15,22 @@
 //! Policies observe only `d_p^f` (known a priori, as in the paper) and the
 //! noisy aggregate `d_p^e = d_p^tx + d_p^b` for the arm they pulled —
 //! never the rate, the workload, or the decomposition.
+//!
+//! In multi-session mode the serving engine additionally multiplies the
+//! edge leg by a [`Contention`] factor of the fleet's concurrent offload
+//! count (see [`Environment::set_contention_factor`]), so N sessions'
+//! bandits interact through the shared edge.  Single-stream paths leave
+//! the factor at 1.0 and behave exactly as before.
 
 pub mod compute;
 pub mod network;
 pub mod scenario;
 
 pub use compute::{
-    profile_by_name, ComputeProfile, Workload, DEVICE_MAXN, DEVICE_MAXQ, EDGE_CPU, EDGE_GPU,
+    profile_by_name, ComputeProfile, Contention, Workload, DEVICE_MAXN, DEVICE_MAXQ, EDGE_CPU,
+    EDGE_GPU,
 };
-pub use network::{tx_delay_ms, TokenBucket, Uplink};
+pub use network::{tx_delay_ms, SharedIngress, TokenBucket, Uplink};
 
 /// Default link round-trip latency (point-to-point Wi-Fi).  Kept small:
 /// an additive constant is the one term the paper's 7-dim linear model
@@ -55,6 +62,10 @@ pub struct Environment {
     frame: usize,
     current_rate: f64,
     current_load: f64,
+    /// Multiplicative edge-load factor from multi-session contention
+    /// (set each round by the serving engine; 1.0 = uncontended, which
+    /// keeps single-stream behaviour bit-identical to the seed).
+    contention_factor: f64,
 }
 
 impl Environment {
@@ -88,6 +99,7 @@ impl Environment {
             frame: 0,
             current_rate: 1.0,
             current_load: 1.0,
+            contention_factor: 1.0,
         };
         env.tick(0);
         env
@@ -124,6 +136,23 @@ impl Environment {
         self.current_load
     }
 
+    /// Set the multi-session contention factor (≥ 1) applied on top of the
+    /// scripted workload.  The serving engine calls this every round with
+    /// [`Contention::factor`] of the fleet's concurrent offload count.
+    pub fn set_contention_factor(&mut self, factor: f64) {
+        assert!(factor >= 1.0, "contention factor must be ≥ 1, got {factor}");
+        self.contention_factor = factor;
+    }
+
+    pub fn contention_factor(&self) -> f64 {
+        self.contention_factor
+    }
+
+    /// ψ_p bytes crossing the link at partition p (0 for p = P).
+    pub fn psi_bytes(&self, p: usize) -> usize {
+        self.psi_bytes[p]
+    }
+
     /// Front-end delay d_p^f — known to the decision maker (paper §2.1).
     pub fn front_delay(&self, p: usize) -> f64 {
         self.front[p]
@@ -140,7 +169,7 @@ impl Environment {
             return 0.0; // MO: no offloading leg
         }
         tx_delay_ms(self.psi_bytes[p], self.current_rate, self.rtt_ms)
-            + self.edge.delay_ms(&self.back_stats[p], self.current_load)
+            + self.edge.delay_ms(&self.back_stats[p], self.current_load * self.contention_factor)
     }
 
     /// Expected end-to-end delay of partition p at the current frame.
@@ -280,6 +309,45 @@ mod tests {
         for p in 0..5 {
             assert_eq!(a.observe_edge_delay(p), b.observe_edge_delay(p));
         }
+    }
+
+    #[test]
+    fn contention_scales_edge_leg_only() {
+        let mut env = vgg_env(12.0);
+        env.tick(0);
+        let front = env.front_delay(5);
+        let edge_base = env.expected_edge_delay(5);
+        let tx = tx_delay_ms(env.psi_bytes(5), env.current_rate_mbps(), env.rtt_ms);
+        env.set_contention_factor(3.0);
+        assert_eq!(env.front_delay(5), front, "front leg is on-device, uncontended");
+        let edge_loaded = env.expected_edge_delay(5);
+        // Only the compute part (edge leg minus tx) scales by the factor.
+        let compute_base = edge_base - tx;
+        let compute_loaded = edge_loaded - tx;
+        assert!((compute_loaded / compute_base - 3.0).abs() < 1e-9, "{compute_base} -> {compute_loaded}");
+    }
+
+    #[test]
+    fn contention_shifts_oracle_toward_device_at_high_rate() {
+        // The fleet acceptance setting: at 20 Mbps the uncontended oracle
+        // is EO/early, an 8-way contended edge (factor 4.5) pushes it to a
+        // late interior split (calibrated against the delay model).
+        let mut env = vgg_env(20.0);
+        env.tick(0);
+        let base = env.oracle_partition();
+        assert!(base <= 1, "uncontended 20 Mbps oracle {base}");
+        env.set_contention_factor(4.5);
+        let loaded = env.oracle_partition();
+        assert!(
+            loaded > base + 5 && loaded < env.num_partitions(),
+            "contended oracle should be a late interior split, got {loaded}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "contention factor")]
+    fn contention_factor_below_one_rejected() {
+        vgg_env(12.0).set_contention_factor(0.5);
     }
 
     #[test]

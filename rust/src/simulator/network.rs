@@ -114,6 +114,34 @@ impl TokenBucket {
     }
 }
 
+/// The edge server's shared ingress link: every session keeps its *own*
+/// uplink, but all uplinks terminate at this single byte-accurate FIFO
+/// (the edge NIC).  When many sessions offload in the same frame slot,
+/// later arrivals queue behind earlier ones — the network half of the
+/// multi-session coupling (the compute half is [`super::compute::Contention`]).
+#[derive(Debug, Clone)]
+pub struct SharedIngress {
+    pub rate_mbps: f64,
+    bucket: TokenBucket,
+}
+
+impl SharedIngress {
+    pub fn new(rate_mbps: f64) -> SharedIngress {
+        SharedIngress { rate_mbps, bucket: TokenBucket::new(rate_mbps) }
+    }
+
+    /// A payload of `bytes` arrives at the edge NIC at logical `now_ms`;
+    /// returns the queueing + serialization delay it experiences.
+    pub fn consume(&mut self, bytes: usize, now_ms: f64) -> f64 {
+        self.bucket.consume(bytes, now_ms)
+    }
+
+    /// Drop any queued backlog (fresh run).
+    pub fn reset(&mut self) {
+        self.bucket = TokenBucket::new(self.rate_mbps);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +239,22 @@ mod tests {
         }
         let expect = sends as f64 * 5000.0 / 1000.0;
         assert!((total_delay - expect).abs() / expect < 1e-9, "{total_delay} vs {expect}");
+    }
+
+    #[test]
+    fn shared_ingress_queues_across_sessions() {
+        // Two sessions' payloads arriving together: the second queues
+        // behind the first, a lone payload later does not.
+        let mut ingress = SharedIngress::new(1.0); // 125 bytes/ms
+        let first = ingress.consume(1250, 0.0); // 10 ms serialization
+        let second = ingress.consume(1250, 0.0); // queues: 10 + 10 ms
+        assert!((first - 10.0).abs() < 1e-9, "{first}");
+        assert!((second - 20.0).abs() < 1e-9, "{second}");
+        let later = ingress.consume(125, 100.0); // idle again
+        assert!((later - 1.0).abs() < 1e-9, "{later}");
+        ingress.reset();
+        let fresh = ingress.consume(1250, 0.0);
+        assert!((fresh - 10.0).abs() < 1e-9, "{fresh}");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! paper's adaptation experiments (Fig 12, 13, 14), expressed once here so
 //! benches, examples and tests share them.
 
-use super::{compute, network, Environment, Workload};
+use super::{compute, network, ComputeProfile, Environment, Workload};
 use crate::models::Network;
 
 /// Fig 12(a): uplink rate trace — high (50) → bad (1) at frame 150 →
@@ -67,6 +67,86 @@ pub fn fig14(net: Network, t1: usize, total: usize, seed: u64) -> (Environment, 
     (env, t1)
 }
 
+// ---------------------------------------------------------------------------
+// Fleet scenarios: N per-session environments sharing one edge (the
+// multi-session serving engine pairs these with a Contention model).
+// ---------------------------------------------------------------------------
+
+/// Per-session uplink-rate multipliers for [`fleet`].  Session 0 runs at
+/// exactly the base rate so `--sessions 1` is the unperturbed baseline;
+/// later sessions get a deterministic spread of better/worse links.
+pub const FLEET_RATE_MULTIPLIERS: [f64; 8] = [1.0, 0.75, 1.25, 0.6, 1.4, 0.85, 1.15, 0.95];
+
+/// A fleet of `n_sessions` environments over the default device/edge pair:
+/// each session owns its own constant-rate uplink (a deterministic
+/// perturbation of `base_rate_mbps`) and its own noise stream, while the
+/// edge profile is shared.  Pair with `coordinator::engine::Engine` for
+/// the contended multi-user serving core.
+pub fn fleet(net: Network, n_sessions: usize, base_rate_mbps: f64, seed: u64) -> Vec<Environment> {
+    fleet_with(
+        net,
+        n_sessions,
+        base_rate_mbps,
+        compute::DEVICE_MAXN,
+        compute::EDGE_GPU,
+        1.0,
+        seed,
+    )
+}
+
+/// [`fleet`] with explicit device/edge profiles and exogenous edge load.
+pub fn fleet_with(
+    net: Network,
+    n_sessions: usize,
+    base_rate_mbps: f64,
+    device: ComputeProfile,
+    edge: ComputeProfile,
+    load: f64,
+    seed: u64,
+) -> Vec<Environment> {
+    assert!(n_sessions >= 1, "fleet needs at least one session");
+    (0..n_sessions)
+        .map(|i| {
+            let rate = base_rate_mbps * FLEET_RATE_MULTIPLIERS[i % FLEET_RATE_MULTIPLIERS.len()];
+            Environment::new(
+                net.clone(),
+                device,
+                edge,
+                Workload::constant(load),
+                network::Uplink::constant(rate),
+                seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)),
+            )
+        })
+        .collect()
+}
+
+/// A fleet whose sessions each ride an independent two-state Markov uplink
+/// (fast/slow, per-session phase) — the non-stationary multi-uplink
+/// stress scenario.
+pub fn fleet_markov(
+    net: Network,
+    n_sessions: usize,
+    fast_mbps: f64,
+    slow_mbps: f64,
+    p_switch: f64,
+    seed: u64,
+) -> Vec<Environment> {
+    assert!(n_sessions >= 1, "fleet needs at least one session");
+    (0..n_sessions)
+        .map(|i| {
+            let s = seed.wrapping_add(0xD1B5_4A32_D192_ED03u64.wrapping_mul(i as u64 + 1));
+            Environment::new(
+                net.clone(),
+                compute::DEVICE_MAXN,
+                compute::EDGE_GPU,
+                Workload::constant(1.0),
+                network::Uplink::markov(fast_mbps, slow_mbps, p_switch, s),
+                s ^ 0x5eed,
+            )
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +186,57 @@ mod tests {
         env.tick(t1);
         let p = env.oracle_partition();
         assert!(p < env.num_partitions(), "after switch optimum {p}");
+    }
+
+    #[test]
+    fn fleet_builds_per_session_uplinks() {
+        let mut envs = fleet(zoo::vgg16(), 5, 16.0, 7);
+        assert_eq!(envs.len(), 5);
+        envs[0].tick(0);
+        assert_eq!(envs[0].current_rate_mbps(), 16.0, "session 0 is the unperturbed baseline");
+        let mut rates = std::collections::BTreeSet::new();
+        for env in envs.iter_mut() {
+            env.tick(0);
+            rates.insert((env.current_rate_mbps() * 100.0) as u64);
+            assert_eq!(env.net.name, "vgg16");
+        }
+        assert!(rates.len() >= 4, "sessions should spread over distinct rates: {rates:?}");
+    }
+
+    #[test]
+    fn fleet_sessions_draw_independent_noise() {
+        let mut envs = fleet(zoo::vgg16(), 2, 16.0, 7);
+        for env in envs.iter_mut() {
+            env.tick(0);
+        }
+        let (a, b) = envs.split_at_mut(1);
+        assert_ne!(a[0].observe_edge_delay(3), b[0].observe_edge_delay(3));
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let mut a = fleet(zoo::partnet(), 3, 10.0, 9);
+        let mut b = fleet(zoo::partnet(), 3, 10.0, 9);
+        for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+            x.tick(0);
+            y.tick(0);
+            assert_eq!(x.observe_edge_delay(1), y.observe_edge_delay(1));
+        }
+    }
+
+    #[test]
+    fn fleet_markov_sessions_decorrelate() {
+        let mut envs = fleet_markov(zoo::vgg16(), 2, 50.0, 5.0, 0.2, 3);
+        let mut diverged = false;
+        for t in 0..100 {
+            for env in envs.iter_mut() {
+                env.tick(t);
+            }
+            if envs[0].current_rate_mbps() != envs[1].current_rate_mbps() {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "per-session Markov chains must not move in lockstep");
     }
 
     #[test]

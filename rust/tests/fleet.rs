@@ -1,0 +1,300 @@
+//! Multi-session engine integration: wrapper equivalence with the legacy
+//! single-stream loop, CANS-style contention coupling between sessions'
+//! bandits, and the fleet reporting surface.
+
+use ans::bandit::policy::argmin;
+use ans::bandit::{self, FrameContext, Policy, Privileged};
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::{experiment, FrameRecord, FrameSource, Metrics};
+use ans::models::{features, zoo, FeatureScale, Network};
+use ans::simulator::{
+    scenario, Contention, Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU,
+};
+use ans::video::Weights;
+
+fn mu_linucb(net: &Network, horizon: usize) -> Box<dyn Policy> {
+    bandit::by_name("mu-linucb", net, &DEVICE_MAXN, &EDGE_GPU, horizon, None, None).unwrap()
+}
+
+/// The seed repo's experiment loop, verbatim — the refactored
+/// `experiment::run` must reproduce it bit for bit through the engine.
+fn legacy_run(
+    policy: &mut dyn Policy,
+    env: &mut Environment,
+    frames: usize,
+    source: &mut FrameSource,
+) -> Metrics {
+    let scale = FeatureScale::for_network(&env.net);
+    let contexts = features::context_vectors(&env.net, &scale);
+    let front: Vec<f64> = env.front_delays().to_vec();
+    let p_max = env.num_partitions();
+    let mut metrics = Metrics::new();
+    let mut expected_totals = vec![0.0; p_max + 1];
+
+    for t in 0..frames {
+        env.tick(t);
+        let (is_key, weight) = source.next();
+        for (p, v) in expected_totals.iter_mut().enumerate() {
+            *v = env.expected_total(p);
+        }
+        let ctx = FrameContext {
+            t,
+            weight,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged {
+                rate_mbps: env.current_rate_mbps(),
+                expected_totals: Some(&expected_totals),
+            },
+        };
+        let p = policy.select(&ctx);
+        let predicted_edge_ms =
+            if p == p_max { None } else { policy.predict_edge_delay(&contexts[p]) };
+        let realized_edge = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
+        let delay_ms = front[p] + realized_edge;
+        if p != p_max {
+            policy.observe(p, &contexts[p], realized_edge);
+        }
+        let oracle_p = argmin(&expected_totals);
+        metrics.push(FrameRecord {
+            t,
+            p,
+            is_key,
+            weight,
+            delay_ms,
+            expected_ms: expected_totals[p],
+            oracle_p,
+            oracle_ms: expected_totals[oracle_p],
+            rate_mbps: env.current_rate_mbps(),
+            predicted_edge_ms,
+            true_edge_ms: env.expected_edge_delay(p),
+        });
+    }
+    metrics
+}
+
+// ---------------------------------------------------------------------------
+// The wrapper contract: experiment::run through the engine phases is
+// bit-identical to the seed loop (same RNG draws, same records), so every
+// existing exhibit/bench reproduces its seed numbers.
+// ---------------------------------------------------------------------------
+#[test]
+fn engine_wrapper_reproduces_the_legacy_single_stream_loop() {
+    let frames = 300;
+    let net = zoo::vgg16();
+    let mut env_a = Environment::simple(net.clone(), 12.0, 2);
+    let mut pol_a = mu_linucb(&net, frames);
+    let mut src_a = FrameSource::video(9, 0.85, Weights::default_paper());
+    let legacy = legacy_run(pol_a.as_mut(), &mut env_a, frames, &mut src_a);
+
+    let mut env_b = Environment::simple(net.clone(), 12.0, 2);
+    let mut pol_b = mu_linucb(&net, frames);
+    let mut src_b = FrameSource::video(9, 0.85, Weights::default_paper());
+    let wrapped = experiment::run(pol_b.as_mut(), &mut env_b, frames, &mut src_b);
+
+    assert_eq!(legacy.records.len(), wrapped.records.len());
+    for (l, w) in legacy.records.iter().zip(&wrapped.records) {
+        assert_eq!(l.p, w.p, "t={}", l.t);
+        assert_eq!(l.delay_ms, w.delay_ms, "t={}", l.t);
+        assert_eq!(l.is_key, w.is_key, "t={}", l.t);
+        assert_eq!(l.weight, w.weight, "t={}", l.t);
+        assert_eq!(l.oracle_p, w.oracle_p, "t={}", l.t);
+        assert_eq!(l.expected_ms, w.expected_ms, "t={}", l.t);
+        assert_eq!(l.oracle_ms, w.oracle_ms, "t={}", l.t);
+        assert_eq!(l.predicted_edge_ms, w.predicted_edge_ms, "t={}", l.t);
+        assert_eq!(l.true_edge_ms, w.true_edge_ms, "t={}", l.t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A single-session Engine is the same thing again, via the public API.
+// ---------------------------------------------------------------------------
+#[test]
+fn single_session_engine_matches_wrapper_run() {
+    let frames = 250;
+    let net = zoo::resnet50();
+    let mut eng = Engine::new(EngineConfig::default());
+    eng.add_session(
+        mu_linucb(&net, frames),
+        Environment::simple(net.clone(), 14.0, 21),
+        FrameSource::video(3, 0.85, Weights::default_paper()),
+    );
+    eng.run(frames);
+
+    let mut env = Environment::simple(net.clone(), 14.0, 21);
+    let mut pol = mu_linucb(&net, frames);
+    let mut src = FrameSource::video(3, 0.85, Weights::default_paper());
+    let reference = experiment::run(pol.as_mut(), &mut env, frames, &mut src);
+
+    let session = &eng.sessions()[0];
+    assert_eq!(session.metrics.records.len(), reference.records.len());
+    for (a, b) in session.metrics.records.iter().zip(&reference.records) {
+        assert_eq!(a.p, b.p, "t={}", a.t);
+        assert_eq!(a.delay_ms, b.delay_ms, "t={}", a.t);
+        assert_eq!(a.expected_ms, b.expected_ms, "t={}", a.t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance property: with contention enabled, per-session μLinUCB
+// partition choices measurably shift versus the --sessions 1 baseline.
+// At 20 Mbps the lone session converges to pure edge offloading (p ≈ 0);
+// eight sessions sharing a capacity-1 edge (load factor 4.5) converge to
+// a late interior split (p ≈ 18 on Vgg16).
+// ---------------------------------------------------------------------------
+#[test]
+fn contention_shifts_partition_choices_vs_single_session_baseline() {
+    let frames = 500;
+    let rate = 20.0;
+    let contention = Contention::new(1, 0.5);
+
+    // Oracle-level precondition straight from the delay model.
+    let mut probe = Environment::simple(zoo::vgg16(), rate, 1);
+    probe.tick(0);
+    let base_oracle = probe.oracle_partition();
+    probe.set_contention_factor(contention.factor(8));
+    let loaded_oracle = probe.oracle_partition();
+    assert!(base_oracle <= 1, "uncontended 20 Mbps oracle should be EO/early, got {base_oracle}");
+    assert!(
+        loaded_oracle > base_oracle + 5,
+        "8-way contention should push the optimum to a late split, got {loaded_oracle}"
+    );
+
+    // Mean tail partition per session after convergence.
+    let run_fleet = |n: usize| -> Vec<f64> {
+        let mut eng = Engine::new(EngineConfig { contention, ..Default::default() });
+        for i in 0..n {
+            let env = Environment::new(
+                zoo::vgg16(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::constant(rate),
+                100 + i as u64,
+            );
+            eng.add_session(mu_linucb(&zoo::vgg16(), frames), env, FrameSource::uniform());
+        }
+        eng.run(frames);
+        eng.sessions()
+            .iter()
+            .map(|s| {
+                let tail = &s.metrics.records[frames - 100..];
+                tail.iter().map(|r| r.p as f64).sum::<f64>() / tail.len() as f64
+            })
+            .collect()
+    };
+
+    let single = run_fleet(1)[0];
+    let fleet = run_fleet(8);
+    let fleet_mean = fleet.iter().sum::<f64>() / fleet.len() as f64;
+    assert!(
+        single < 4.0,
+        "single-session tail should sit at early partitions, got mean p = {single:.2}"
+    );
+    assert!(
+        fleet_mean > single + 5.0,
+        "contended fleet should shift to later partitions: fleet mean p = {fleet_mean:.2} \
+         vs single {single:.2}"
+    );
+    // Every session individually feels the contention, not just the mean.
+    for (i, m) in fleet.iter().enumerate() {
+        assert!(*m > single + 2.0, "session {i} tail mean p = {m:.2} did not shift");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet reporting surface: per-session + aggregate views, contention
+// diagnostics, policy snapshots, and full determinism.
+// ---------------------------------------------------------------------------
+#[test]
+fn fleet_reporting_and_determinism() {
+    let build = || {
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.5),
+            ingress_mbps: Some(200.0),
+            ..Default::default()
+        });
+        for (i, env) in scenario::fleet(zoo::partnet(), 4, 10.0, 7).into_iter().enumerate() {
+            eng.add_session(
+                mu_linucb(&zoo::partnet(), 200),
+                env,
+                FrameSource::video(40 + i as u64, 0.85, Weights::default_paper()),
+            );
+        }
+        eng.run(200);
+        eng
+    };
+
+    let a = build();
+    let fs = a.fleet_summary();
+    assert_eq!(fs.per_session.len(), 4);
+    assert_eq!(fs.aggregate.frames, 800);
+    assert!(fs.aggregate.mean_delay_ms.is_finite() && fs.aggregate.mean_delay_ms > 0.0);
+    assert!(fs.mean_offloaders >= 0.0 && fs.mean_offloaders <= 4.0);
+    assert!(fs.peak_offloaders <= 4);
+    assert!(fs.peak_contention_factor >= 1.0);
+    assert!(fs.delay_spread_ms() >= 0.0);
+    assert!(fs.aggregate.total_regret_ms.is_finite());
+    assert_eq!(a.offload_counts().len(), 200);
+
+    for s in a.sessions() {
+        let snap = s.snapshot();
+        assert!(snap.observations > 0, "session {} never got feedback", s.id);
+        assert!(snap.theta.is_some(), "μLinUCB keeps a model");
+        assert_eq!(s.metrics.records.len(), 200);
+    }
+
+    // Bit-for-bit reproducible.
+    let b = build();
+    let fb = b.fleet_summary();
+    assert_eq!(fs.aggregate.mean_delay_ms, fb.aggregate.mean_delay_ms);
+    assert_eq!(fs.aggregate.partition_histogram, fb.aggregate.partition_histogram);
+    assert_eq!(a.offload_counts(), b.offload_counts());
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous uplinks: sessions on better links should not be worse off
+// than sessions on much worse links (sanity of the per-session coupling).
+// ---------------------------------------------------------------------------
+#[test]
+fn per_session_uplinks_differentiate_outcomes() {
+    let frames = 400;
+    let net = zoo::vgg16();
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(2, 0.25),
+        ..Default::default()
+    });
+    // Session 0: crippled 1 Mbps link; session 1: comfortable 40 Mbps.
+    for (i, rate) in [1.0, 40.0].into_iter().enumerate() {
+        let env = Environment::new(
+            net.clone(),
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::constant(1.0),
+            Uplink::constant(rate),
+            50 + i as u64,
+        );
+        eng.add_session(mu_linucb(&net, frames), env, FrameSource::uniform());
+    }
+    eng.run(frames);
+    let slow = eng.sessions()[0].summary();
+    let fast = eng.sessions()[1].summary();
+    assert!(
+        fast.mean_delay_ms < slow.mean_delay_ms,
+        "fast-link session should serve faster: {} vs {}",
+        fast.mean_delay_ms,
+        slow.mean_delay_ms
+    );
+    // The slow session must lean on-device, the fast one must offload.
+    let p_max = net.num_partitions();
+    let slow_mo = eng.sessions()[0].metrics.records[300..]
+        .iter()
+        .filter(|r| r.p == p_max)
+        .count();
+    let fast_off = eng.sessions()[1].metrics.records[300..]
+        .iter()
+        .filter(|r| r.p != p_max)
+        .count();
+    assert!(slow_mo >= 60, "slow link tail MO share {slow_mo}/100");
+    assert!(fast_off >= 90, "fast link tail off-device share {fast_off}/100");
+}

@@ -3,6 +3,7 @@
 //! `#[cfg(test)]` properties with cross-cutting invariants.
 
 use ans::bandit::forced::ForcedSchedule;
+use ans::bandit::linalg::RidgeState;
 use ans::models::{features, zoo, FeatureScale, Layer, Network, Shape, Stage};
 use ans::simulator::network::TokenBucket;
 use ans::simulator::{Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU};
@@ -152,6 +153,86 @@ fn prop_forced_count_close_to_theory() {
             )
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// Bandit linalg: the Sherman–Morrison hot path against the direct solver,
+// at production scale (the §Perf-critical invariant, long-horizon).
+// ---------------------------------------------------------------------------
+fn random_obs(rng: &mut Rng, n: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f64> = (0..7).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let y = rng.uniform(0.0, 100.0);
+            (x, y)
+        })
+        .collect()
+}
+
+#[test]
+fn sherman_morrison_tracks_direct_solve_over_1k_updates() {
+    // After 1k random rank-1 updates the incrementally maintained A⁻¹ and
+    // θ̂ must stay within 1e-8 (relative) of a direct Cholesky solve —
+    // checked at many intermediate points so periodic refreshes cannot
+    // mask drift between them.
+    let mut rng = Rng::new(0xA11CE);
+    let mut st = RidgeState::new(7, 1.0);
+    for (i, (x, y)) in random_obs(&mut rng, 1000).iter().enumerate() {
+        st.update(x, *y);
+        if i % 93 == 0 || i == 999 {
+            let fresh = st.a.inverse().expect("A must stay positive definite");
+            for (got, want) in st.a_inv.data.iter().zip(&fresh.data) {
+                assert!(
+                    (got - want).abs() <= 1e-8 * (1.0 + want.abs()),
+                    "A_inv drift at update {i}: {got} vs {want}"
+                );
+            }
+            let fast = st.theta();
+            let slow = st.a.solve(&st.b).expect("solve");
+            for (got, want) in fast.iter().zip(&slow) {
+                assert!(
+                    (got - want).abs() <= 1e-8 * (1.0 + want.abs()),
+                    "theta drift at update {i}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn downdating_everything_restores_the_identity_prior() {
+    // The drift-reset path: removing every observation (what a full
+    // sliding-window turnover amounts to) must restore A = βI,
+    // A⁻¹ = I/β, θ̂ = 0 — the same state a fresh reset constructs.
+    let beta = 1.0;
+    let mut rng = Rng::new(0xBEEF);
+    let obs = random_obs(&mut rng, 1000);
+    let mut st = RidgeState::new(7, beta);
+    for (x, y) in &obs {
+        st.update(x, *y);
+    }
+    for (x, y) in &obs {
+        st.downdate(x, *y);
+    }
+    for r in 0..7 {
+        for c in 0..7 {
+            let want_a = if r == c { beta } else { 0.0 };
+            let want_inv = if r == c { 1.0 / beta } else { 0.0 };
+            assert!(
+                (st.a.at(r, c) - want_a).abs() < 1e-7,
+                "A[{r},{c}] = {} after full downdate",
+                st.a.at(r, c)
+            );
+            assert!(
+                (st.a_inv.at(r, c) - want_inv).abs() < 1e-7,
+                "A_inv[{r},{c}] = {} after full downdate",
+                st.a_inv.at(r, c)
+            );
+        }
+    }
+    for (i, v) in st.theta().iter().enumerate() {
+        assert!(v.abs() < 1e-7, "theta[{i}] = {v} after full downdate");
+    }
 }
 
 // ---------------------------------------------------------------------------
