@@ -1,0 +1,76 @@
+//! Edge-scheduler hot paths: queue submit/drain per policy, batch
+//! formation, and a full engine round in lockstep vs event mode — the
+//! per-frame scheduling overhead must stay negligible next to inference
+//! (the same bar §3.2 of the paper sets for μLinUCB).  Custom harness
+//! (criterion is unavailable offline); see `ans::util::bench`.
+
+use ans::bandit;
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::FrameSource;
+use ans::edge::{AdmissionPolicy, EdgeJob, EdgeQueue, QueueConfig, SchedulerConfig};
+use ans::models::zoo;
+use ans::simulator::{scenario, Contention, DEVICE_MAXN, EDGE_GPU};
+use ans::util::bench::Bench;
+
+fn job(session: usize, p: usize, arrival: f64, solo: f64) -> EdgeJob {
+    EdgeJob {
+        session,
+        p,
+        bytes: 12_288,
+        capture_ms: arrival,
+        arrival_ms: arrival,
+        deadline_ms: arrival + 50.0,
+        weight: 0.2,
+        solo_ms: solo,
+        seq: 0,
+    }
+}
+
+fn bench_queue(b: &mut Bench, name: &str, policy: AdmissionPolicy, max_batch: usize) {
+    let mut cfg = QueueConfig::new(policy, Contention::new(1, 0.25));
+    cfg.max_batch = max_batch;
+    cfg.batch_window_ms = if max_batch > 1 { 8.0 } else { 0.0 };
+    let mut queue = EdgeQueue::new(cfg);
+    let mut round = 0u64;
+    b.run(name, || {
+        // One contended fleet round: 16 concurrent offloads, 4 splits.
+        let base = round as f64 * 33.3;
+        round += 1;
+        for s in 0..16 {
+            queue.submit(job(s, s % 4, base + s as f64 * 0.7, 5.0));
+        }
+        queue.drain().len()
+    });
+}
+
+fn engine_round(scheduler: SchedulerConfig) -> Engine {
+    let net = zoo::partnet();
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.25),
+        scheduler,
+        ..Default::default()
+    });
+    for env in scenario::fleet(net.clone(), 8, 10.0, 3) {
+        let policy =
+            bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, 100_000, None, None)
+                .unwrap();
+        eng.add_session(policy, env, FrameSource::uniform());
+    }
+    eng
+}
+
+fn main() {
+    let mut b = Bench::from_env().with_samples(40);
+
+    bench_queue(&mut b, "queue/fifo_16_jobs_no_batch", AdmissionPolicy::Fifo, 1);
+    bench_queue(&mut b, "queue/edf_16_jobs_batch8", AdmissionPolicy::Edf, 8);
+    bench_queue(&mut b, "queue/wfair_16_jobs_batch8", AdmissionPolicy::WeightedFair, 8);
+
+    // Full engine rounds: the lockstep fast path vs the event queue.
+    let mut lockstep = engine_round(SchedulerConfig::lockstep_fifo());
+    b.run("engine/8_session_round_lockstep", || lockstep.step());
+    let mut event = engine_round(SchedulerConfig::event(AdmissionPolicy::Edf));
+    b.run("engine/8_session_round_event_edf", || event.step());
+
+    b.write_csv("scheduler.csv").expect("writing bench_results/scheduler.csv");
+}

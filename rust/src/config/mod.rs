@@ -48,6 +48,22 @@ pub struct Config {
     pub contention_slope: f64,
     /// Shared edge-ingress bandwidth in Mbps (0 = not modelled).
     pub ingress_mbps: f64,
+    /// Edge scheduler admission policy (`fifo` | `edf` | `wfair`).
+    /// Plain `fifo` with no other scheduler knob set is the PR 1
+    /// lockstep path.
+    pub scheduler: String,
+    /// Batch-head hold time for cross-session coalescing (event mode).
+    pub batch_window_ms: f64,
+    /// Edge waiting-room bound (0 = unbounded); overflows are rejected
+    /// back to on-device execution.
+    pub queue_capacity: usize,
+    /// Per-frame completion budget anchored at capture (EDF's key;
+    /// 0 = no deadline).
+    pub deadline_ms: f64,
+    /// Per-session capture-clock offset (independent session clocks).
+    pub stagger_ms: f64,
+    /// Force the event-driven edge queue even for plain FIFO.
+    pub event_clock: bool,
 }
 
 impl Default for Config {
@@ -74,6 +90,12 @@ impl Default for Config {
             contention_capacity: 1,
             contention_slope: 0.5,
             ingress_mbps: 0.0,
+            scheduler: "fifo".into(),
+            batch_window_ms: 8.0,
+            queue_capacity: 0,
+            deadline_ms: 50.0,
+            stagger_ms: 0.0,
+            event_clock: false,
         }
     }
 }
@@ -117,6 +139,12 @@ impl Config {
                 "contention_capacity" => self.contention_capacity = val.as_usize()?,
                 "contention_slope" => self.contention_slope = val.as_f64()?,
                 "ingress_mbps" => self.ingress_mbps = val.as_f64()?,
+                "scheduler" => self.scheduler = val.as_str()?.to_string(),
+                "batch_window_ms" => self.batch_window_ms = val.as_f64()?,
+                "queue_capacity" => self.queue_capacity = val.as_usize()?,
+                "deadline_ms" => self.deadline_ms = val.as_f64()?,
+                "stagger_ms" => self.stagger_ms = val.as_f64()?,
+                "event_clock" => self.event_clock = val.as_bool()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -156,6 +184,16 @@ impl Config {
             args.usize_or("contention-capacity", self.contention_capacity)?;
         self.contention_slope = args.f64_or("contention-slope", self.contention_slope)?;
         self.ingress_mbps = args.f64_or("ingress", self.ingress_mbps)?;
+        if let Some(v) = args.get("scheduler") {
+            self.scheduler = v.to_string();
+        }
+        self.batch_window_ms = args.f64_or("batch-window", self.batch_window_ms)?;
+        self.queue_capacity = args.usize_or("queue-capacity", self.queue_capacity)?;
+        self.deadline_ms = args.f64_or("deadline", self.deadline_ms)?;
+        self.stagger_ms = args.f64_or("stagger", self.stagger_ms)?;
+        if args.flag("event-clock") {
+            self.event_clock = true;
+        }
         Ok(())
     }
 
@@ -200,7 +238,55 @@ impl Config {
             self.ingress_mbps >= 0.0 && self.ingress_mbps.is_finite(),
             "ingress must be ≥ 0 Mbps"
         );
+        anyhow::ensure!(
+            crate::edge::AdmissionPolicy::by_name(&self.scheduler).is_some(),
+            "unknown scheduler `{}` — valid schedulers: {}",
+            self.scheduler,
+            crate::edge::SCHEDULER_NAMES.join(", ")
+        );
+        anyhow::ensure!(
+            self.batch_window_ms >= 0.0 && self.batch_window_ms.is_finite(),
+            "batch-window must be ≥ 0 ms"
+        );
+        anyhow::ensure!(
+            self.deadline_ms >= 0.0 && self.deadline_ms.is_finite(),
+            "deadline must be ≥ 0 ms"
+        );
+        anyhow::ensure!(
+            self.stagger_ms >= 0.0 && self.stagger_ms.is_finite(),
+            "stagger must be ≥ 0 ms"
+        );
+        anyhow::ensure!(self.max_batch >= 1, "max-batch must be ≥ 1");
         Ok(())
+    }
+
+    /// The edge-scheduler configuration this config describes.  Plain
+    /// `--scheduler fifo` with no event-mode knob (no `--event-clock`,
+    /// no `--queue-capacity`, no `--stagger`) degenerates to the PR 1
+    /// lockstep rounds; anything else runs the event-driven edge queue
+    /// with `max_batch` taken from `--max-batch` (1 disables batching).
+    pub fn scheduler_config(&self) -> crate::edge::SchedulerConfig {
+        let policy = crate::edge::AdmissionPolicy::by_name(&self.scheduler).expect("validated");
+        let event = self.event_clock
+            || policy != crate::edge::AdmissionPolicy::Fifo
+            || self.queue_capacity > 0
+            || self.stagger_ms > 0.0;
+        if !event {
+            return crate::edge::SchedulerConfig::lockstep_fifo();
+        }
+        crate::edge::SchedulerConfig {
+            policy,
+            batch_window_ms: self.batch_window_ms,
+            max_batch: self.max_batch,
+            queue_capacity: if self.queue_capacity == 0 {
+                usize::MAX
+            } else {
+                self.queue_capacity
+            },
+            deadline_ms: if self.deadline_ms > 0.0 { self.deadline_ms } else { f64::INFINITY },
+            stagger_ms: self.stagger_ms,
+            force_event: true,
+        }
     }
 
     /// Build the simulator environment this config describes.
@@ -335,6 +421,41 @@ mod tests {
         assert!(Config::from_args(&args("fleet --sessions 0")).is_err());
         assert!(Config::from_args(&args("fleet --contention-capacity 0")).is_err());
         assert!(Config::from_args(&args("fleet --contention-slope -1")).is_err());
+    }
+
+    #[test]
+    fn scheduler_knobs_parse_and_degenerate_correctly() {
+        // Defaults: plain FIFO degenerates to the PR 1 lockstep path.
+        let cfg = Config::from_args(&args("fleet --sessions 8")).unwrap();
+        assert_eq!(cfg.scheduler, "fifo");
+        assert!(cfg.scheduler_config().is_lockstep());
+        // Any event-mode knob leaves the lockstep path.
+        let cfg = Config::from_args(&args("fleet --scheduler edf --deadline 60")).unwrap();
+        let sc = cfg.scheduler_config();
+        assert!(!sc.is_lockstep());
+        assert_eq!(sc.policy, crate::edge::AdmissionPolicy::Edf);
+        assert_eq!(sc.deadline_ms, 60.0);
+        assert_eq!(sc.max_batch, 4, "scheduler batching rides --max-batch");
+        let cfg = Config::from_args(&args("fleet --queue-capacity 4")).unwrap();
+        let sc = cfg.scheduler_config();
+        assert!(!sc.is_lockstep());
+        assert_eq!(sc.queue_capacity, 4);
+        let cfg = Config::from_args(&args("fleet --event-clock --max-batch 1")).unwrap();
+        assert!(!cfg.scheduler_config().is_lockstep());
+        let cfg = Config::from_args(&args("fleet --scheduler wfair --stagger 2.5")).unwrap();
+        let sc = cfg.scheduler_config();
+        assert_eq!(sc.policy, crate::edge::AdmissionPolicy::WeightedFair);
+        assert_eq!(sc.stagger_ms, 2.5);
+        // Deadline 0 means "no deadline".
+        let cfg = Config::from_args(&args("fleet --scheduler edf --deadline 0")).unwrap();
+        assert_eq!(cfg.scheduler_config().deadline_ms, f64::INFINITY);
+        // Bad values rejected with the valid list in the message.
+        let err = Config::from_args(&args("fleet --scheduler lifo")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("edf") && msg.contains("wfair"), "{msg}");
+        assert!(Config::from_args(&args("fleet --batch-window -1")).is_err());
+        assert!(Config::from_args(&args("fleet --max-batch 0")).is_err());
+        assert!(Config::from_args(&args("fleet --stagger -2")).is_err());
     }
 
     #[test]

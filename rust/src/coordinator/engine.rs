@@ -23,13 +23,26 @@
 //! session and [`Contention::none`] the rounds reduce *bit-identically*
 //! to the seed's single-stream experiment loop — `experiment::run` and
 //! `pipeline::serve` are thin wrappers over the phase functions here.
+//!
+//! The realize phase has two modes (DESIGN.md §7).  The default
+//! [`SchedulerConfig::lockstep_fifo`] keeps the PR 1 rounds above,
+//! byte for byte.  Any other scheduler config routes offloads through
+//! the event-driven [`crate::edge`] server instead: each ψ becomes an
+//! [`EdgeJob`] on the fleet's virtual clock, contention is realized as
+//! waiting-room delay plus cross-session batch amortization (not a
+//! multiplicative factor), the waiting room may reject overflow back to
+//! on-device execution, and executor backlog carries across rounds so
+//! offloads contend when they overlap in *time*, not round index.
 
 use super::metrics::{FleetSummary, FrameRecord, Metrics, Summary};
 use crate::bandit::policy::argmin;
 use crate::bandit::{FrameContext, Policy, PolicySnapshot, Privileged};
 use crate::config::Config;
+use crate::edge::{EdgeJob, EdgeScheduler, Outcome, QueueStats, SchedulerConfig};
 use crate::models::{features, FeatureScale, FeatureVector};
 use crate::simulator::{Contention, Environment, SharedIngress};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
 use crate::video::{Frame, KeyframeDetector, VideoStream, Weights};
 
 /// How frame weights L_t are produced for one session.
@@ -194,10 +207,27 @@ pub(crate) fn select_one(
     )
 }
 
+/// How one frame's edge leg realizes (see [`realize_one`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum EdgeLeg {
+    /// PR 1 lockstep: draw the session's noise on the contention-factored
+    /// compute + tx mean, then add the precomputed ingress queueing on
+    /// top.  Also covers MO frames (zero edge leg, no draw) in every
+    /// scheduler mode.
+    Lockstep,
+    /// Event-driven scheduler: the full mean edge leg (tx + ingress +
+    /// waiting room + amortized service — or tx + on-device fallback for
+    /// a rejected offload) was resolved on the virtual clock; draw the
+    /// session's noise on it.
+    Event { mean_ms: f64, rejected: bool },
+}
+
 /// Realize phase for one simulated session: apply the fleet's actual
-/// concurrency, draw the noisy delay, add the precomputed shared-ingress
-/// queueing (see [`Engine::step`]'s arrival-ordered pass), feed the
-/// policy, and record ground-truth metrics.
+/// concurrency, draw the noisy delay for the frame's [`EdgeLeg`], feed
+/// the policy, and record ground-truth metrics.  `queue_wait_ms` (edge
+/// NIC + waiting room) and `batch_size` are recorded; under
+/// [`EdgeLeg::Lockstep`] the queueing term is additionally added to the
+/// drawn delay (the PR 1 shared-ingress semantics).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn realize_one(
     policy: &mut dyn Policy,
@@ -210,7 +240,9 @@ pub(crate) fn realize_one(
     t: usize,
     concurrent: usize,
     contention: &Contention,
-    ingress_queue_ms: f64,
+    queue_wait_ms: f64,
+    batch_size: usize,
+    leg: EdgeLeg,
 ) {
     env.set_contention_factor(contention.factor(concurrent));
     for (p, v) in expected.iter_mut().enumerate() {
@@ -218,12 +250,21 @@ pub(crate) fn realize_one(
     }
     let p_max = env.num_partitions();
     let p = decision.p;
-    let mut realized_edge = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
-    if p != p_max {
-        // Queueing behind other sessions' payloads at the edge NIC is
-        // part of the d^e feedback the policy learns from.
-        realized_edge += ingress_queue_ms;
-    }
+    let (realized_edge, true_edge_ms, rejected) = match leg {
+        EdgeLeg::Lockstep => {
+            let mut d = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
+            if p != p_max {
+                // Queueing behind other sessions' payloads at the edge
+                // NIC is part of the d^e feedback the policy learns from.
+                d += queue_wait_ms;
+            }
+            (d, env.expected_edge_delay(p), false)
+        }
+        EdgeLeg::Event { mean_ms, rejected } => {
+            debug_assert!(p != p_max, "MO frames realize via EdgeLeg::Lockstep");
+            (env.noisy(mean_ms), mean_ms, rejected)
+        }
+    };
     let delay_ms = front[p] + realized_edge;
     if p != p_max {
         policy.observe(p, &contexts[p], realized_edge);
@@ -240,21 +281,32 @@ pub(crate) fn realize_one(
         oracle_ms: expected[oracle_p],
         rate_mbps: env.current_rate_mbps(),
         predicted_edge_ms: decision.predicted_edge_ms,
-        true_edge_ms: env.expected_edge_delay(p),
+        true_edge_ms,
+        queue_wait_ms,
+        batch_size: if p == p_max { 0 } else { batch_size },
+        rejected,
     });
 }
 
 /// Engine knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Logical frame interval (ms) — spaces rounds on the shared-ingress
-    /// clock.  Irrelevant without an ingress model.
+    /// Logical frame interval (ms) — spaces rounds on the shared virtual
+    /// clock (ingress + edge scheduler).
     pub frame_interval_ms: f64,
-    /// Shared-edge contention model coupling the sessions' edge legs.
+    /// Shared-edge contention model.  Lockstep rounds apply
+    /// `factor(k_t)` multiplicatively to every offloader; the
+    /// event-driven scheduler uses the same curve as the queue's batch
+    /// service-time model (see [`crate::edge::batcher`]).
     pub contention: Contention,
     /// Shared edge-ingress bandwidth (None = ingress not modelled; each
     /// session's own uplink is then the only network leg).
     pub ingress_mbps: Option<f64>,
+    /// Edge-server scheduling discipline.  The default
+    /// ([`SchedulerConfig::lockstep_fifo`]) reproduces the PR 1 rounds
+    /// bit-identically; anything else routes offloads through the
+    /// event-driven [`EdgeScheduler`].
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for EngineConfig {
@@ -263,6 +315,7 @@ impl Default for EngineConfig {
             frame_interval_ms: 1e3 / 30.0,
             contention: Contention::none(),
             ingress_mbps: None,
+            scheduler: SchedulerConfig::lockstep_fifo(),
         }
     }
 }
@@ -272,6 +325,9 @@ pub struct Engine {
     pub cfg: EngineConfig,
     sessions: Vec<Session>,
     ingress: Option<SharedIngress>,
+    /// The event-driven edge server — `None` when the scheduler config
+    /// degenerates to the PR 1 lockstep rounds.
+    scheduler: Option<EdgeScheduler>,
     round: usize,
     /// Offload count of the previous round — the causal estimate every
     /// session selects under in the next round.
@@ -284,10 +340,16 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Engine {
         let ingress = cfg.ingress_mbps.map(SharedIngress::new);
+        let scheduler = if cfg.scheduler.is_lockstep() {
+            None
+        } else {
+            Some(EdgeScheduler::new(cfg.scheduler.clone(), cfg.contention))
+        };
         Engine {
             cfg,
             sessions: Vec::new(),
             ingress,
+            scheduler,
             round: 0,
             offloaders_last: 0,
             offload_counts: Vec::new(),
@@ -332,7 +394,13 @@ impl Engine {
         &self.offload_counts
     }
 
-    /// Serve one frame for every session (one lockstep round).
+    /// The event-driven edge queue's cumulative diagnostics (None on the
+    /// lockstep path, where the per-record stats are the whole story).
+    pub fn scheduler_stats(&self) -> Option<&QueueStats> {
+        self.scheduler.as_ref().map(|s| s.stats())
+    }
+
+    /// Serve one frame for every session (one engine round).
     pub fn step(&mut self) {
         assert!(!self.sessions.is_empty(), "engine has no sessions");
         let t = self.round;
@@ -364,6 +432,23 @@ impl Engine {
             .zip(&self.sessions)
             .filter(|(d, s)| d.p != s.env.num_partitions())
             .count();
+
+        if self.scheduler.is_none() {
+            self.realize_lockstep(t, k, &decisions);
+        } else {
+            self.realize_event(t, k, &decisions);
+        }
+
+        self.offloaders_last = k;
+        self.offload_counts.push(k);
+        self.round += 1;
+    }
+
+    /// PR 1's lockstep realize phase, byte for byte: factor(k_t) on every
+    /// environment, the arrival-ordered shared-ingress pass, then one
+    /// noisy draw per session in session order.
+    fn realize_lockstep(&mut self, t: usize, k: usize, decisions: &[Decision]) {
+        let contention = self.cfg.contention;
         let now_ms = t as f64 * self.cfg.frame_interval_ms;
 
         // Shared-ingress pass, in *physical arrival order* (FIFO at the
@@ -376,7 +461,7 @@ impl Engine {
             let mut arrivals: Vec<(f64, usize, usize)> = self
                 .sessions
                 .iter()
-                .zip(&decisions)
+                .zip(decisions)
                 .enumerate()
                 .filter(|(_, (s, d))| d.p != s.env.num_partitions())
                 .map(|(i, (s, d))| {
@@ -395,7 +480,7 @@ impl Engine {
             }
         }
 
-        for (i, (s, d)) in self.sessions.iter_mut().zip(&decisions).enumerate() {
+        for (i, (s, d)) in self.sessions.iter_mut().zip(decisions).enumerate() {
             let Session { policy, env, metrics, front, contexts, expected, .. } = s;
             realize_one(
                 policy.as_mut(),
@@ -409,12 +494,135 @@ impl Engine {
                 k,
                 &contention,
                 ingress_queue_ms[i],
+                1,
+                EdgeLeg::Lockstep,
             );
         }
+    }
 
-        self.offloaders_last = k;
-        self.offload_counts.push(k);
-        self.round += 1;
+    /// Event-driven realize phase: offloads become [`EdgeJob`]s on the
+    /// fleet's virtual clock (capture + front + uplink + ingress),
+    /// admission rejects what the waiting room cannot hold (those frames
+    /// finish on-device), and the queue resolves waits/batches whose
+    /// delays — not a multiplicative factor — are the contention the
+    /// bandits observe.  Executor backlog persists across rounds, so
+    /// offloads contend when they overlap in *time*, not round index.
+    fn realize_event(&mut self, t: usize, k: usize, decisions: &[Decision]) {
+        let contention = self.cfg.contention;
+        let n = self.sessions.len();
+        let Engine { sessions, ingress, scheduler, cfg, .. } = self;
+        let scheduler = scheduler.as_mut().expect("event path has a scheduler");
+        let stagger = scheduler.cfg.stagger_ms;
+        let deadline = scheduler.cfg.deadline_ms;
+
+        // NIC arrivals in physical order (same ordering rule as the
+        // lockstep ingress pass).
+        struct Arrival {
+            nic_ms: f64,
+            session: usize,
+            bytes: usize,
+            tx_ms: f64,
+            capture_ms: f64,
+        }
+        let mut arrivals: Vec<Arrival> = sessions
+            .iter()
+            .zip(decisions.iter())
+            .enumerate()
+            .filter(|(_, (s, d))| d.p != s.env.num_partitions())
+            .map(|(i, (s, d))| {
+                let bytes = s.env.psi_bytes(d.p);
+                let tx =
+                    crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
+                let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
+                Arrival {
+                    nic_ms: capture + s.front[d.p] + tx,
+                    session: i,
+                    bytes,
+                    tx_ms: tx,
+                    capture_ms: capture,
+                }
+            })
+            .collect();
+        arrivals.sort_by(|a, b| a.nic_ms.total_cmp(&b.nic_ms).then(a.session.cmp(&b.session)));
+
+        // Admission (before the payload spends shared-ingress bandwidth),
+        // then ingress, then the waiting room.
+        let mut tx_ms = vec![0.0; n];
+        let mut ingress_wait = vec![0.0; n];
+        let mut was_rejected = vec![false; n];
+        for a in &arrivals {
+            let i = a.session;
+            tx_ms[i] = a.tx_ms;
+            if !scheduler.has_room() {
+                scheduler.note_rejected();
+                was_rejected[i] = true;
+                continue;
+            }
+            let ing = match ingress.as_mut() {
+                Some(g) => g.consume(a.bytes, a.nic_ms),
+                None => 0.0,
+            };
+            ingress_wait[i] = ing;
+            let d = &decisions[i];
+            let submitted = scheduler.submit(EdgeJob {
+                session: i,
+                p: d.p,
+                bytes: a.bytes,
+                capture_ms: a.capture_ms,
+                arrival_ms: a.nic_ms + ing,
+                deadline_ms: if deadline.is_finite() {
+                    a.capture_ms + deadline
+                } else {
+                    f64::INFINITY
+                },
+                weight: d.weight,
+                solo_ms: sessions[i].env.solo_backend_ms(d.p),
+                seq: 0,
+            });
+            debug_assert!(submitted, "has_room was checked");
+        }
+
+        let mut outcomes: Vec<Option<Outcome>> = vec![None; n];
+        for (sess, o) in scheduler.drain() {
+            outcomes[sess] = Some(o);
+        }
+
+        // Realize in session order so each session's noise stream draws
+        // deterministically, exactly one draw per offload attempt.
+        for (i, (s, d)) in sessions.iter_mut().zip(decisions).enumerate() {
+            let Session { policy, env, metrics, front, contexts, expected, .. } = s;
+            let p = d.p;
+            let (queue_wait, batch, leg) = if p == env.num_partitions() {
+                (0.0, 1, EdgeLeg::Lockstep)
+            } else if was_rejected[i] {
+                let mean = tx_ms[i] + env.device_fallback_ms(p);
+                (0.0, 0, EdgeLeg::Event { mean_ms: mean, rejected: true })
+            } else {
+                match outcomes[i] {
+                    Some(Outcome::Served { queue_wait_ms, service_ms, batch_size }) => {
+                        let qw = ingress_wait[i] + queue_wait_ms;
+                        let mean = tx_ms[i] + qw + service_ms;
+                        (qw, batch_size, EdgeLeg::Event { mean_ms: mean, rejected: false })
+                    }
+                    _ => unreachable!("every admitted offload is scheduled"),
+                }
+            };
+            realize_one(
+                policy.as_mut(),
+                env,
+                metrics,
+                front,
+                contexts,
+                expected,
+                d,
+                t,
+                k,
+                &contention,
+                queue_wait,
+                batch,
+                leg,
+            );
+        }
     }
 
     /// Serve `rounds` frames per session.
@@ -430,24 +638,41 @@ impl Engine {
         let per_session: Vec<Summary> = self.sessions.iter().map(|s| s.summary()).collect();
         let merged = Metrics::merged(self.sessions.iter().map(|s| &s.metrics));
         let p_max = self.sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        let queue_waits: Vec<f64> = merged.records.iter().map(|r| r.queue_wait_ms).collect();
         let aggregate = merged.summary(p_max);
         let mean_offloaders =
             self.offload_counts.iter().sum::<usize>() as f64 / self.offload_counts.len() as f64;
         let peak_offloaders = self.offload_counts.iter().copied().max().unwrap_or(0);
+        let scheduler = if self.scheduler.is_some() {
+            self.cfg.scheduler.policy.name().to_string()
+        } else {
+            // The PR 1 degenerate case; name it explicitly so JSON
+            // consumers can tell it from event-driven FIFO.
+            "fifo-lockstep".to_string()
+        };
         FleetSummary {
             per_session,
             aggregate,
             mean_offloaders,
             peak_offloaders,
             peak_contention_factor: self.cfg.contention.factor(peak_offloaders),
+            scheduler,
+            p95_queue_wait_ms: percentile(&queue_waits, 0.95),
         }
     }
 }
 
+/// Per-session video streams draw from a stream-id space disjoint from
+/// the environments' (see [`Rng::stream_seed`]).
+const VIDEO_STREAM_BASE: u64 = 1 << 32;
+
 /// Assemble the fleet engine a [`Config`] describes: `cfg.sessions`
 /// sessions over [`crate::simulator::scenario::fleet_with`] environments
 /// (per-session uplinks), each with its own policy instance and video
-/// source, coupled by the configured contention/ingress models.
+/// source, coupled by the configured contention/ingress models and the
+/// configured edge scheduler.  Every per-session RNG stream is a pure
+/// function of `(seed, session index)`, so growing the fleet never
+/// perturbs existing sessions' draws.
 pub fn fleet_from_config(cfg: &Config) -> Engine {
     let net = crate::models::zoo::by_name(&cfg.model).expect("validated model");
     let device = crate::simulator::profile_by_name(&cfg.device).expect("validated device");
@@ -465,11 +690,12 @@ pub fn fleet_from_config(cfg: &Config) -> Engine {
         frame_interval_ms: 1e3 / cfg.fps,
         contention: Contention::new(cfg.contention_capacity, cfg.contention_slope),
         ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
+        scheduler: cfg.scheduler_config(),
     });
     for (i, env) in envs.into_iter().enumerate() {
         let policy = cfg.policy(&env.net, &env.device, &env.edge);
         let source = FrameSource::video(
-            cfg.seed.wrapping_add(1 + i as u64),
+            Rng::stream_seed(cfg.seed, VIDEO_STREAM_BASE + i as u64),
             cfg.ssim_threshold,
             Weights::new(cfg.l_key, cfg.l_non_key),
         );
@@ -570,6 +796,74 @@ mod tests {
         let d1 = eng.sessions()[1].metrics.records[0].delay_ms;
         // ψ_0 of partnet is 12288 bytes = ~98 ms at 1 Mbps: queueing doubles it.
         assert!(d1 > d0 + 50.0, "session 1 should queue behind session 0: {d0} vs {d1}");
+    }
+
+    #[test]
+    fn event_scheduler_batches_concurrent_offloads() {
+        use crate::edge::AdmissionPolicy;
+        let net = zoo::partnet();
+        let cfg = EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: SchedulerConfig::event(AdmissionPolicy::Edf),
+            ..Default::default()
+        };
+        let mut eng = Engine::new(cfg);
+        for i in 0..4 {
+            eng.add_session(policy(&net, "eo", 30), env(10.0, 1 + i as u64), FrameSource::uniform());
+        }
+        eng.run(30);
+        let stats = eng.scheduler_stats().expect("event mode exposes queue stats");
+        assert_eq!(stats.dispatched, 120);
+        assert_eq!(stats.rejected, 0);
+        assert!(stats.mean_batch_size() > 1.5, "all-EO fleet must batch: {}", stats.mean_batch_size());
+        for s in eng.sessions() {
+            for r in &s.metrics.records {
+                assert!(r.batch_size >= 1, "served frames record their batch");
+                assert!(r.queue_wait_ms >= 0.0);
+                assert!(!r.rejected);
+                assert!(r.delay_ms.is_finite() && r.delay_ms >= 0.0);
+            }
+        }
+        let fs = eng.fleet_summary();
+        assert_eq!(fs.scheduler, "edf");
+        assert!(fs.aggregate.mean_batch_size > 1.5);
+    }
+
+    #[test]
+    fn bounded_waiting_room_rejects_and_falls_back_on_device() {
+        use crate::edge::AdmissionPolicy;
+        let net = zoo::partnet();
+        let cfg = EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: SchedulerConfig {
+                queue_capacity: 2,
+                ..SchedulerConfig::event(AdmissionPolicy::Fifo)
+            },
+            ..Default::default()
+        };
+        let mut eng = Engine::new(cfg);
+        for i in 0..6 {
+            eng.add_session(policy(&net, "eo", 10), env(10.0, 1 + i as u64), FrameSource::uniform());
+        }
+        eng.step();
+        // Six EO offloads into a 2-slot waiting room: 2 served, 4 bounced.
+        let stats = eng.scheduler_stats().unwrap();
+        assert_eq!(stats.dispatched, 2);
+        assert_eq!(stats.rejected, 4);
+        let rejected = eng
+            .sessions()
+            .iter()
+            .filter(|s| s.metrics.records[0].rejected)
+            .count();
+        assert_eq!(rejected, 4);
+        for s in eng.sessions() {
+            let r = &s.metrics.records[0];
+            if r.rejected {
+                assert_eq!(r.batch_size, 0);
+                assert!(r.delay_ms > 0.0, "fallback still costs device time");
+            }
+        }
+        assert_eq!(eng.fleet_summary().aggregate.rejected_offloads, 4);
     }
 
     #[test]

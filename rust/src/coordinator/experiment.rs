@@ -58,6 +58,8 @@ pub fn run(
             1,
             &contention,
             0.0,
+            1,
+            engine::EdgeLeg::Lockstep,
         );
     }
     metrics

@@ -1,5 +1,6 @@
 //! Per-frame records and experiment summaries.
 
+use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Streaming};
 
 /// Everything recorded about one served frame.
@@ -25,6 +26,16 @@ pub struct FrameRecord {
     pub predicted_edge_ms: Option<f64>,
     /// True expected edge delay of the chosen arm.
     pub true_edge_ms: f64,
+    /// Time the frame's ψ spent queued at the shared edge (ingress NIC +
+    /// waiting room); 0 for on-device frames.
+    pub queue_wait_ms: f64,
+    /// Frames co-executed with this one at the edge: 1 = solo edge run,
+    /// ≥ 2 = cross-session batch, 0 = never ran at the edge (on-device
+    /// frame, or a rejected offload).
+    pub batch_size: usize,
+    /// The frame attempted an offload but the edge scheduler turned it
+    /// away (waiting room full); the back-end ran on-device instead.
+    pub rejected: bool,
 }
 
 /// Aggregated metrics over a run.
@@ -42,6 +53,14 @@ pub struct Summary {
     pub partition_histogram: Vec<usize>,
     /// Share of frames on which the oracle arm was chosen.
     pub oracle_match_rate: f64,
+    /// Mean shared-edge queueing delay over all frames (0 for on-device
+    /// frames, so this is a fleet-pressure indicator, not a conditional).
+    pub mean_queue_wait_ms: f64,
+    /// Mean batch size over frames that executed at the edge (0 when no
+    /// frame did).
+    pub mean_batch_size: f64,
+    /// Offloads the edge scheduler rejected back to on-device execution.
+    pub rejected_offloads: usize,
 }
 
 impl Summary {
@@ -88,6 +107,9 @@ impl Metrics {
         let mut regret = 0.0;
         let mut hist = vec![0usize; num_partitions + 1];
         let mut oracle_hits = 0usize;
+        let mut queue_wait = Streaming::new();
+        let mut batch = Streaming::new();
+        let mut rejected = 0usize;
         let delays: Vec<f64> = recs.iter().map(|r| r.delay_ms).collect();
         for r in recs {
             all.push(r.delay_ms);
@@ -101,6 +123,13 @@ impl Metrics {
             if r.p == r.oracle_p {
                 oracle_hits += 1;
             }
+            queue_wait.push(r.queue_wait_ms);
+            if r.batch_size > 0 {
+                batch.push(r.batch_size as f64);
+            }
+            if r.rejected {
+                rejected += 1;
+            }
         }
         Summary {
             frames: recs.len(),
@@ -112,6 +141,9 @@ impl Metrics {
             total_regret_ms: regret,
             partition_histogram: hist,
             oracle_match_rate: oracle_hits as f64 / recs.len() as f64,
+            mean_queue_wait_ms: queue_wait.mean(),
+            mean_batch_size: if batch.count() > 0 { batch.mean() } else { 0.0 },
+            rejected_offloads: rejected,
         }
     }
 
@@ -165,11 +197,11 @@ impl Metrics {
     /// CSV dump (one row per frame).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "t,p,is_key,weight,delay_ms,expected_ms,oracle_p,oracle_ms,rate_mbps,predicted_edge_ms,true_edge_ms\n",
+            "t,p,is_key,weight,delay_ms,expected_ms,oracle_p,oracle_ms,rate_mbps,predicted_edge_ms,true_edge_ms,queue_wait_ms,batch_size,rejected\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{:.3},{:.3},{},{:.3},{:.3},{},{:.3}\n",
+                "{},{},{},{},{:.3},{:.3},{},{:.3},{:.3},{},{:.3},{:.3},{},{}\n",
                 r.t,
                 r.p,
                 r.is_key as u8,
@@ -181,6 +213,9 @@ impl Metrics {
                 r.rate_mbps,
                 r.predicted_edge_ms.map(|v| format!("{v:.3}")).unwrap_or_default(),
                 r.true_edge_ms,
+                r.queue_wait_ms,
+                r.batch_size,
+                r.rejected as u8,
             ));
         }
         out
@@ -188,7 +223,8 @@ impl Metrics {
 }
 
 /// Fleet-aggregate view over a multi-session run: per-session summaries
-/// plus the merged whole and the engine's contention diagnostics.
+/// plus the merged whole, the engine's contention diagnostics, and the
+/// edge scheduler's queue statistics.
 #[derive(Debug, Clone)]
 pub struct FleetSummary {
     pub per_session: Vec<Summary>,
@@ -200,17 +236,33 @@ pub struct FleetSummary {
     pub peak_offloaders: usize,
     /// Edge load multiplier at the peak (1.0 = never contended).
     pub peak_contention_factor: f64,
+    /// Admission policy name (`fifo` is the PR 1 lockstep when the
+    /// event clock is off).
+    pub scheduler: String,
+    /// p95 of the shared-edge queueing delay over every served frame.
+    pub p95_queue_wait_ms: f64,
 }
 
 impl FleetSummary {
     /// Spread between the best and worst per-session mean delay — the
     /// fleet's fairness gap.
     pub fn delay_spread_ms(&self) -> f64 {
+        self.spread(|s| s.mean_delay_ms)
+    }
+
+    /// Spread between the best and worst per-session p95 delay — the
+    /// fleet's *tail* fairness gap (what the admission policies compete
+    /// on in EXPERIMENTS.md).
+    pub fn p95_spread_ms(&self) -> f64 {
+        self.spread(|s| s.p95_delay_ms)
+    }
+
+    fn spread(&self, f: impl Fn(&Summary) -> f64) -> f64 {
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         for s in &self.per_session {
-            lo = lo.min(s.mean_delay_ms);
-            hi = hi.max(s.mean_delay_ms);
+            lo = lo.min(f(s));
+            hi = hi.max(f(s));
         }
         if self.per_session.is_empty() {
             0.0
@@ -218,6 +270,54 @@ impl FleetSummary {
             hi - lo
         }
     }
+
+    /// Machine-readable fleet metrics (one JSON object) — the companion
+    /// to `ans fleet`'s tables, consumed by the EXPERIMENTS.md plot
+    /// recipes.  Includes the fairness spreads and the queue-wait stats
+    /// that the aggregate table prints.
+    pub fn to_json(&self) -> String {
+        obj(vec![
+            ("scheduler", Json::from(self.scheduler.as_str())),
+            ("sessions", Json::from(self.per_session.len())),
+            ("mean_offloaders", jnum(self.mean_offloaders)),
+            ("peak_offloaders", Json::from(self.peak_offloaders)),
+            ("peak_contention_factor", jnum(self.peak_contention_factor)),
+            ("delay_spread_ms", jnum(self.delay_spread_ms())),
+            ("p95_spread_ms", jnum(self.p95_spread_ms())),
+            ("p95_queue_wait_ms", jnum(self.p95_queue_wait_ms)),
+            ("aggregate", summary_json(&self.aggregate)),
+            (
+                "per_session",
+                Json::Arr(self.per_session.iter().map(summary_json).collect()),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// JSON number, or `null` for non-finite values (empty key/non-key means
+/// are NaN, which must not leak into the document).
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn summary_json(s: &Summary) -> Json {
+    obj(vec![
+        ("frames", Json::from(s.frames)),
+        ("mean_delay_ms", jnum(s.mean_delay_ms)),
+        ("p50_delay_ms", jnum(s.p50_delay_ms)),
+        ("p95_delay_ms", jnum(s.p95_delay_ms)),
+        ("total_regret_ms", jnum(s.total_regret_ms)),
+        ("oracle_match_rate", jnum(s.oracle_match_rate)),
+        ("mean_queue_wait_ms", jnum(s.mean_queue_wait_ms)),
+        ("mean_batch_size", jnum(s.mean_batch_size)),
+        ("rejected_offloads", Json::from(s.rejected_offloads)),
+        ("modal_partition", Json::from(s.modal_partition())),
+    ])
 }
 
 #[cfg(test)]
@@ -237,6 +337,9 @@ mod tests {
             rate_mbps: 16.0,
             predicted_edge_ms: Some(delay * 0.9),
             true_edge_ms: delay,
+            queue_wait_ms: 0.0,
+            batch_size: 1,
+            rejected: false,
         }
     }
 
@@ -320,11 +423,84 @@ mod tests {
             mean_offloaders: 1.5,
             peak_offloaders: 2,
             peak_contention_factor: 1.5,
+            scheduler: "fifo".to_string(),
+            p95_queue_wait_ms: 0.0,
         };
         assert!((fs.delay_spread_ms() - 20.0).abs() < 1e-12);
+        assert!((fs.p95_spread_ms() - 20.0).abs() < 1e-12);
         // regret per rec(): expected 10/30 vs oracle 10 -> 0 + 20
         assert!((fs.aggregate.total_regret_ms - 20.0).abs() < 1e-12);
         assert_eq!(fs.aggregate.frames, 2);
+    }
+
+    #[test]
+    fn queue_stats_roll_into_summaries() {
+        let mut m = Metrics::new();
+        let mut served = rec(0, 1, 10.0, false);
+        served.queue_wait_ms = 4.0;
+        served.batch_size = 3;
+        m.push(served);
+        let mut rejected = rec(1, 1, 50.0, false);
+        rejected.queue_wait_ms = 0.0;
+        rejected.batch_size = 0;
+        rejected.rejected = true;
+        m.push(rejected);
+        let mut on_device = rec(2, 2, 8.0, false);
+        on_device.batch_size = 0;
+        m.push(on_device);
+        let s = m.summary(2);
+        // Queue wait averages over all frames; batch size only over
+        // frames that actually ran at the edge.
+        assert!((s.mean_queue_wait_ms - 4.0 / 3.0).abs() < 1e-12);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert_eq!(s.rejected_offloads, 1);
+    }
+
+    #[test]
+    fn fleet_json_is_well_formed_and_carries_the_plot_fields() {
+        let mut a = Metrics::new();
+        a.push(rec(0, 1, 10.0, false));
+        let mut b = Metrics::new();
+        b.push(rec(0, 1, 30.0, true));
+        let fs = FleetSummary {
+            per_session: vec![a.summary(2), b.summary(2)],
+            aggregate: Metrics::merged([&a, &b]).summary(2),
+            mean_offloaders: 2.0,
+            peak_offloaders: 2,
+            peak_contention_factor: 1.5,
+            scheduler: "edf".to_string(),
+            p95_queue_wait_ms: 1.25,
+        };
+        let json = fs.to_json();
+        // The fields the EXPERIMENTS.md recipes consume.
+        for key in [
+            "\"scheduler\":\"edf\"",
+            "\"delay_spread_ms\":20",
+            "\"p95_spread_ms\":20",
+            "\"p95_queue_wait_ms\":1.25",
+            "\"mean_queue_wait_ms\"",
+            "\"mean_batch_size\"",
+            "\"rejected_offloads\"",
+            "\"per_session\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
+        // Round-trips through the crate's own JSON reader (validity check).
+        let parsed = Json::parse(&json).expect("valid JSON");
+        assert_eq!(parsed.get("per_session").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.get("aggregate").unwrap().get("frames").unwrap().as_usize().unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn csv_carries_queue_columns() {
+        let mut m = Metrics::new();
+        m.push(rec(0, 1, 10.0, false));
+        let csv = m.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("queue_wait_ms,batch_size,rejected"), "{header}");
     }
 
     #[test]

@@ -231,6 +231,9 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
             // with the simulator path's honest Fig 9 accounting).
             predicted_edge_ms: decision.predicted_edge_ms,
             true_edge_ms: edge_ms,
+            queue_wait_ms: 0.0,
+            batch_size: if p == p_max { 0 } else { batch },
+            rejected: false,
         });
 
         clock_ms = (clock_ms + delay_ms).max((t + batch) as f64 * frame_interval_ms);

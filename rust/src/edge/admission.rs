@@ -1,0 +1,195 @@
+//! Admission-ordering policies for the shared edge queue.
+//!
+//! The edge server holds a bounded waiting room of offloaded ψ tensors
+//! and, whenever the executor frees up, must pick which pending job (and
+//! batch) to run next.  Three disciplines cover the fleet experiments:
+//!
+//! * [`AdmissionPolicy::Fifo`] — physical arrival order at the edge NIC.
+//!   With batching off and an unbounded waiting room this is the PR 1
+//!   lockstep degenerate case (the engine then skips the event queue
+//!   entirely and reproduces the legacy rounds bit-identically).
+//! * [`AdmissionPolicy::Edf`] — earliest deadline first.  Deadlines are
+//!   anchored at frame *capture* time, so a session whose front/uplink
+//!   legs already burned most of its budget arrives with little slack
+//!   and jumps the queue: EDF compensates uplink heterogeneity with
+//!   queue position, narrowing the fleet's delay spread.
+//! * [`AdmissionPolicy::WeightedFair`] — longest weighted attained-wait
+//!   first.  Each session accrues the queueing delay it has suffered so
+//!   far; the job whose session has waited most (scaled by the frame
+//!   weight L_t, so key frames count for more) is served next.  This is
+//!   the rotation discipline: persistent positional bias, which FIFO
+//!   locks in forever, is redistributed round over round.
+//!
+//! The policy only *orders* the waiting room; rejection (waiting room
+//! full) happens at submit time in [`super::queue::EdgeQueue`] and sends
+//! the frame back to on-device execution.
+
+use super::queue::EdgeJob;
+
+/// Pluggable ordering discipline for the edge waiting room.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Serve in NIC arrival order.
+    Fifo,
+    /// Earliest (capture-anchored) deadline first.
+    Edf,
+    /// Largest weighted accumulated queue-wait first.
+    WeightedFair,
+}
+
+/// Policy names accepted by the CLI / config (`--scheduler ...`).
+pub const SCHEDULER_NAMES: &[&str] = &["fifo", "edf", "wfair"];
+
+impl AdmissionPolicy {
+    /// Look a policy up by CLI/config name.
+    pub fn by_name(name: &str) -> Option<AdmissionPolicy> {
+        match name {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "edf" => Some(AdmissionPolicy::Edf),
+            "wfair" | "weighted-fair" | "wf" => Some(AdmissionPolicy::WeightedFair),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::Edf => "edf",
+            AdmissionPolicy::WeightedFair => "wfair",
+        }
+    }
+
+    /// Index of the next job to dispatch among `waiting[..]` restricted
+    /// to jobs that have arrived by `now_ms`.  `attained_wait_ms[s]` is
+    /// session `s`'s accumulated queueing delay (the WeightedFair
+    /// credit); sessions beyond the slice length count as zero.
+    ///
+    /// Ties always fall back to `(arrival, seq)`, so ordering *within* a
+    /// priority class is FIFO — a property the queue's tests pin.
+    pub fn select(
+        &self,
+        waiting: &[EdgeJob],
+        now_ms: f64,
+        attained_wait_ms: &[f64],
+    ) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, job) in waiting.iter().enumerate() {
+            if job.arrival_ms > now_ms {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if self.beats(job, &waiting[b], now_ms, attained_wait_ms) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Does `a` outrank `b` under this policy at time `now_ms`?
+    fn beats(&self, a: &EdgeJob, b: &EdgeJob, now_ms: f64, attained_wait_ms: &[f64]) -> bool {
+        let tie = |a: &EdgeJob, b: &EdgeJob| {
+            a.arrival_ms
+                .total_cmp(&b.arrival_ms)
+                .then_with(|| a.seq.cmp(&b.seq))
+                .is_lt()
+        };
+        match self {
+            AdmissionPolicy::Fifo => tie(a, b),
+            AdmissionPolicy::Edf => match a.deadline_ms.total_cmp(&b.deadline_ms) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => tie(a, b),
+            },
+            AdmissionPolicy::WeightedFair => {
+                let credit = |j: &EdgeJob| {
+                    let acc = attained_wait_ms.get(j.session).copied().unwrap_or(0.0);
+                    // Accrued wait plus this job's own age so far, scaled
+                    // by frame importance: heavily weighted (key) frames
+                    // of long-suffering sessions go first.
+                    (acc + (now_ms - j.arrival_ms).max(0.0)) * j.weight.max(1e-12)
+                };
+                match credit(a).total_cmp(&credit(b)) {
+                    std::cmp::Ordering::Greater => true,
+                    std::cmp::Ordering::Less => false,
+                    std::cmp::Ordering::Equal => tie(a, b),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(session: usize, arrival: f64, deadline: f64, weight: f64, seq: u64) -> EdgeJob {
+        EdgeJob {
+            session,
+            p: 0,
+            bytes: 1000,
+            capture_ms: 0.0,
+            arrival_ms: arrival,
+            deadline_ms: deadline,
+            weight,
+            solo_ms: 5.0,
+            seq,
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(AdmissionPolicy::by_name("fifo"), Some(AdmissionPolicy::Fifo));
+        assert_eq!(AdmissionPolicy::by_name("edf"), Some(AdmissionPolicy::Edf));
+        assert_eq!(AdmissionPolicy::by_name("wfair"), Some(AdmissionPolicy::WeightedFair));
+        assert_eq!(AdmissionPolicy::by_name("weighted-fair"), Some(AdmissionPolicy::WeightedFair));
+        assert!(AdmissionPolicy::by_name("lifo").is_none());
+        for n in SCHEDULER_NAMES {
+            assert!(AdmissionPolicy::by_name(n).is_some(), "{n} must resolve");
+        }
+    }
+
+    #[test]
+    fn fifo_picks_earliest_arrival() {
+        let w = vec![job(0, 3.0, 100.0, 0.2, 0), job(1, 1.0, 100.0, 0.2, 1)];
+        assert_eq!(AdmissionPolicy::Fifo.select(&w, 10.0, &[]), Some(1));
+    }
+
+    #[test]
+    fn unarrived_jobs_are_invisible() {
+        let w = vec![job(0, 50.0, 60.0, 0.2, 0), job(1, 5.0, 200.0, 0.2, 1)];
+        // At t=10 only job 1 has arrived, even though job 0's deadline wins.
+        assert_eq!(AdmissionPolicy::Edf.select(&w, 10.0, &[]), Some(1));
+        assert_eq!(AdmissionPolicy::Edf.select(&w, 55.0, &[]), Some(0));
+        assert_eq!(AdmissionPolicy::Fifo.select(&w, 1.0, &[]), None);
+    }
+
+    #[test]
+    fn edf_prefers_tight_deadline_then_fifo_within_class() {
+        let w = vec![
+            job(0, 1.0, 90.0, 0.2, 0),
+            job(1, 2.0, 40.0, 0.2, 1),
+            job(2, 3.0, 40.0, 0.2, 2),
+        ];
+        // Deadline 40 beats 90; within the 40-class, arrival order.
+        assert_eq!(AdmissionPolicy::Edf.select(&w, 10.0, &[]), Some(1));
+    }
+
+    #[test]
+    fn wfair_prefers_most_wronged_session() {
+        let w = vec![job(0, 1.0, 100.0, 0.2, 0), job(1, 2.0, 100.0, 0.2, 1)];
+        // Equal credit -> FIFO; session 1 with accrued wait jumps ahead.
+        assert_eq!(AdmissionPolicy::WeightedFair.select(&w, 5.0, &[0.0, 0.0]), Some(0));
+        assert_eq!(AdmissionPolicy::WeightedFair.select(&w, 5.0, &[0.0, 50.0]), Some(1));
+    }
+
+    #[test]
+    fn wfair_weights_key_frames_up() {
+        // Same accrued wait: the heavier (key) frame outranks.
+        let w = vec![job(0, 1.0, 100.0, 0.2, 0), job(1, 1.5, 100.0, 0.8, 1)];
+        assert_eq!(AdmissionPolicy::WeightedFair.select(&w, 11.0, &[10.0, 10.0]), Some(1));
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-session batching at the edge executor.
+//!
+//! PR 1's pipeline micro-batcher coalesced one session's backlog; here
+//! the *fleet's* concurrent ψ tensors at the same partition point fuse
+//! into a single edge execution.  The service-time model is the crate's
+//! [`Contention`] curve reinterpreted: where the lockstep engine
+//! multiplies everyone's solo delay by `factor(k)` (k concurrent
+//! offloaders), the event-driven edge runs one *shared* execution whose
+//! cost is
+//!
+//! ```text
+//! service(batch) = max_i(solo_i) · factor(b)        b = batch size
+//!                = max_i(solo_i) · (1 + slope·max(0, b − capacity))
+//! ```
+//!
+//! clamped to `Σ solo_i`: a batch can never cost more than serving its
+//! members back to back (the amortization invariant, property-tested in
+//! `tests/properties.rs`).  `capacity` is the executor's free
+//! parallelism (batches up to it run at the single-frame cost), `slope`
+//! the marginal cost per extra co-scheduled frame — the same two knobs,
+//! now acting as the queue's service-time model instead of a static
+//! multiplier.
+
+use crate::simulator::Contention;
+
+use super::admission::AdmissionPolicy;
+use super::queue::EdgeJob;
+
+/// Amortized service time (ms) of a batch with the given solo times.
+pub fn batch_service_ms(solo_ms: &[f64], contention: &Contention) -> f64 {
+    assert!(!solo_ms.is_empty(), "batch must have at least one member");
+    let max = solo_ms.iter().fold(0.0_f64, |a, &b| a.max(b));
+    let sum: f64 = solo_ms.iter().sum();
+    (max * contention.factor(solo_ms.len())).min(sum)
+}
+
+/// Pick the members of the next batch from `waiting`, headed by
+/// `waiting[head]`: jobs at the *same partition point* that have arrived
+/// by `launch_ms`, in policy-priority order, up to `max_batch` members.
+/// Returns indices into `waiting` (head first).
+pub fn select_batch(
+    waiting: &[EdgeJob],
+    head: usize,
+    launch_ms: f64,
+    max_batch: usize,
+    policy: &AdmissionPolicy,
+    attained_wait_ms: &[f64],
+) -> Vec<usize> {
+    assert!(head < waiting.len());
+    let mut members = vec![head];
+    if max_batch <= 1 {
+        return members;
+    }
+    let p = waiting[head].p;
+    // Candidates: same split point, arrived by launch, not the head.
+    let mut candidates: Vec<usize> = waiting
+        .iter()
+        .enumerate()
+        .filter(|(i, j)| *i != head && j.p == p && j.arrival_ms <= launch_ms)
+        .map(|(i, _)| i)
+        .collect();
+    // Policy order among the candidates (repeated selection keeps the
+    // implementation tiny; waiting rooms are fleet-sized, not huge).
+    while members.len() < max_batch && !candidates.is_empty() {
+        let mut best = 0;
+        for c in 1..candidates.len() {
+            let pool = [waiting[candidates[c]].clone(), waiting[candidates[best]].clone()];
+            if policy.select(&pool, launch_ms, attained_wait_ms) == Some(0) {
+                best = c;
+            }
+        }
+        members.push(candidates.swap_remove(best));
+    }
+    members
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(session: usize, p: usize, arrival: f64, solo: f64, seq: u64) -> EdgeJob {
+        EdgeJob {
+            session,
+            p,
+            bytes: 100,
+            capture_ms: 0.0,
+            arrival_ms: arrival,
+            deadline_ms: f64::INFINITY,
+            weight: 0.2,
+            solo_ms: solo,
+            seq,
+        }
+    }
+
+    #[test]
+    fn solo_batch_costs_solo_time() {
+        let c = Contention::new(1, 0.25);
+        assert_eq!(batch_service_ms(&[7.0], &c), 7.0);
+    }
+
+    #[test]
+    fn batch_amortizes_but_never_beats_free() {
+        let c = Contention::new(1, 0.25);
+        // 4 frames at 8 ms solo: 8·(1 + 0.25·3) = 14 ms, far below 32.
+        let s = batch_service_ms(&[8.0, 8.0, 8.0, 8.0], &c);
+        assert!((s - 14.0).abs() < 1e-9, "{s}");
+        // Capacity 4: the same batch rides free parallelism at solo cost.
+        let free = batch_service_ms(&[8.0, 8.0, 8.0, 8.0], &Contention::new(4, 0.25));
+        assert_eq!(free, 8.0);
+    }
+
+    #[test]
+    fn pathological_slope_clamps_to_sum_of_solos() {
+        // slope > 1 would make batching worse than serial: clamp.
+        let c = Contention::new(1, 3.0);
+        let s = batch_service_ms(&[5.0, 5.0, 5.0], &c);
+        assert!((s - 15.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn batch_groups_same_partition_only() {
+        let w = vec![
+            job(0, 3, 1.0, 5.0, 0),
+            job(1, 3, 2.0, 5.0, 1),
+            job(2, 7, 2.5, 5.0, 2), // different split point: excluded
+            job(3, 3, 3.0, 5.0, 3),
+        ];
+        let m = select_batch(&w, 0, 10.0, 8, &AdmissionPolicy::Fifo, &[]);
+        assert_eq!(m, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn batch_respects_max_and_arrival_cutoff() {
+        let w = vec![
+            job(0, 0, 1.0, 5.0, 0),
+            job(1, 0, 2.0, 5.0, 1),
+            job(2, 0, 99.0, 5.0, 2), // arrives after launch: excluded
+            job(3, 0, 3.0, 5.0, 3),
+        ];
+        let m = select_batch(&w, 0, 10.0, 2, &AdmissionPolicy::Fifo, &[]);
+        assert_eq!(m, vec![0, 1], "max_batch 2 takes head + first arrival");
+        let solo_only = select_batch(&w, 0, 10.0, 1, &AdmissionPolicy::Fifo, &[]);
+        assert_eq!(solo_only, vec![0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Virtual time for the event-driven edge server.
+//!
+//! The scheduler is driven entirely by a logical clock (milliseconds on
+//! the fleet's shared timeline), never wall time, so every schedule is
+//! bit-reproducible.  [`VirtualClock`] is a monotone cursor ("when does
+//! the executor free up"); [`EventQueue`] is a deterministic min-heap of
+//! timestamped payloads (ties broken by submission sequence) used to
+//! ingest offload arrivals in *time* order — the property that lets
+//! sessions advance on independent clocks and still contend correctly.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Monotone virtual-time cursor in milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now_ms: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now_ms: 0.0 }
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Advance to `t_ms` (no-op if the clock is already past it) and
+    /// return the new time.  Virtual clocks never run backwards.
+    pub fn advance_to(&mut self, t_ms: f64) -> f64 {
+        assert!(t_ms.is_finite(), "virtual time must be finite, got {t_ms}");
+        if t_ms > self.now_ms {
+            self.now_ms = t_ms;
+        }
+        self.now_ms
+    }
+}
+
+/// One timestamped entry in the event queue.
+#[derive(Debug, Clone)]
+struct Event<T> {
+    time_ms: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ms == other.time_ms && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Event<T> {}
+
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the earliest event (then
+        // the lowest sequence number) surfaces first.
+        other
+            .time_ms
+            .total_cmp(&self.time_ms)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic time-ordered queue: `pop` always yields the entry with
+/// the smallest timestamp, ties resolved by insertion order.
+#[derive(Debug, Clone)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Enqueue `payload` at `time_ms`.
+    pub fn push(&mut self, time_ms: f64, payload: T) {
+        assert!(time_ms.is_finite(), "event time must be finite, got {time_ms}");
+        self.heap.push(Event { time_ms, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time_ms(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time_ms)
+    }
+
+    /// Remove and return the earliest event as `(time_ms, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time_ms, e.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        assert_eq!(c.advance_to(5.0), 5.0);
+        assert_eq!(c.advance_to(3.0), 5.0, "clock must not run backwards");
+        assert_eq!(c.advance_to(9.5), 9.5);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_time_ms(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn simultaneous_events_keep_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(7.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some((7.0, i)), "ties must resolve FIFO");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_event_time_rejected() {
+        EventQueue::new().push(f64::NAN, ());
+    }
+}

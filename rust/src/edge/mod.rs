@@ -1,0 +1,223 @@
+//! The edge-server scheduler subsystem (DESIGN.md §7).
+//!
+//! PR 1's engine modelled the shared edge as a per-round multiplicative
+//! slowdown (`Contention::factor(k_t)` applied to every offloader's
+//! compute).  This module replaces that with a real server: an
+//! event-driven queue on a virtual clock ([`clock`], [`queue`]), a
+//! cross-session batcher whose amortization curve *is* the `Contention`
+//! model ([`batcher`]), and pluggable admission disciplines with
+//! on-device fallback for rejected offloads ([`admission`]).
+//!
+//! The old behaviour stays reachable: [`SchedulerConfig::is_lockstep`]
+//! (FIFO, batching off, unbounded waiting room, no staggering) makes the
+//! engine skip this subsystem entirely and run the PR 1 rounds, pinned
+//! bit-identical in `rust/tests/fleet.rs`.
+
+pub mod admission;
+pub mod batcher;
+pub mod clock;
+pub mod queue;
+
+pub use admission::{AdmissionPolicy, SCHEDULER_NAMES};
+pub use clock::{EventQueue, VirtualClock};
+pub use queue::{EdgeJob, EdgeQueue, QueueConfig, QueueStats, Scheduled};
+
+use crate::simulator::Contention;
+
+/// Engine-facing scheduler knobs (derived from CLI/config by
+/// [`crate::config::Config::scheduler_config`]).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: AdmissionPolicy,
+    /// How long a batch head holds the executor for co-riders.
+    pub batch_window_ms: f64,
+    /// Largest cross-session batch (1 = batching off).
+    pub max_batch: usize,
+    /// Edge waiting-room bound (`usize::MAX` = unbounded; smaller values
+    /// reject excess offloads back to on-device execution).
+    pub queue_capacity: usize,
+    /// Per-frame completion budget, anchored at capture time (EDF's key;
+    /// `f64::INFINITY` = no deadline).
+    pub deadline_ms: f64,
+    /// Per-session capture-clock offset: session `i` captures frame `t`
+    /// at `t·interval + i·stagger` — sessions advance on independent
+    /// clocks and only offloads that overlap in *time* contend.
+    pub stagger_ms: f64,
+    /// Run the event queue even for the plain-FIFO configuration (which
+    /// would otherwise take the lockstep fast path).
+    pub force_event: bool,
+}
+
+impl SchedulerConfig {
+    /// The PR 1 degenerate case: FIFO, no batching, nothing rejected,
+    /// shared lockstep clock.  [`crate::coordinator::engine::Engine`]
+    /// reproduces the legacy rounds bit-identically under this config.
+    pub fn lockstep_fifo() -> SchedulerConfig {
+        SchedulerConfig {
+            policy: AdmissionPolicy::Fifo,
+            batch_window_ms: 0.0,
+            max_batch: 1,
+            queue_capacity: usize::MAX,
+            deadline_ms: f64::INFINITY,
+            stagger_ms: 0.0,
+            force_event: false,
+        }
+    }
+
+    /// An event-driven scheduler under `policy` with batching enabled
+    /// (window 8 ms, batches up to 8 — the fleet-serving defaults).
+    pub fn event(policy: AdmissionPolicy) -> SchedulerConfig {
+        SchedulerConfig {
+            policy,
+            batch_window_ms: 8.0,
+            max_batch: 8,
+            queue_capacity: usize::MAX,
+            deadline_ms: 50.0,
+            stagger_ms: 0.0,
+            force_event: true,
+        }
+    }
+
+    /// Does this configuration degenerate to the PR 1 lockstep rounds?
+    pub fn is_lockstep(&self) -> bool {
+        self.policy == AdmissionPolicy::Fifo
+            && self.max_batch <= 1
+            && self.batch_window_ms == 0.0
+            && self.queue_capacity == usize::MAX
+            && self.stagger_ms == 0.0
+            && !self.force_event
+    }
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig::lockstep_fifo()
+    }
+}
+
+/// What the scheduler did with one offload request.
+#[derive(Debug, Clone, Copy)]
+pub enum Outcome {
+    /// Ran at the edge: total waiting-room delay, amortized execution
+    /// time, and the batch it rode in.
+    Served { queue_wait_ms: f64, service_ms: f64, batch_size: usize },
+    /// Waiting room full: the device completes the back-end locally.
+    Rejected,
+}
+
+/// The engine's handle on the event-driven edge server: wraps an
+/// [`EdgeQueue`] and maps per-round offload requests to [`Outcome`]s.
+#[derive(Debug, Clone)]
+pub struct EdgeScheduler {
+    pub cfg: SchedulerConfig,
+    queue: EdgeQueue,
+}
+
+impl EdgeScheduler {
+    pub fn new(cfg: SchedulerConfig, contention: Contention) -> EdgeScheduler {
+        let mut qc = QueueConfig::new(cfg.policy, contention);
+        qc.batch_window_ms = cfg.batch_window_ms;
+        qc.max_batch = cfg.max_batch;
+        qc.queue_capacity = cfg.queue_capacity;
+        EdgeScheduler { queue: EdgeQueue::new(qc), cfg }
+    }
+
+    /// Is there room for one more offload right now?  (The engine checks
+    /// before spending shared-ingress bandwidth on the payload.)
+    pub fn has_room(&self) -> bool {
+        self.queue.has_room()
+    }
+
+    /// Submit one offload; `false` = rejected (fall back on-device).
+    pub fn submit(&mut self, job: EdgeJob) -> bool {
+        self.queue.submit(job)
+    }
+
+    /// Count a rejection decided before submit (the engine checks
+    /// [`EdgeScheduler::has_room`] *before* spending shared-ingress
+    /// bandwidth on a doomed payload).
+    pub fn note_rejected(&mut self) {
+        self.queue.stats.rejected += 1;
+    }
+
+    /// Resolve every pending offload on the virtual timeline; returns
+    /// `(session, Outcome)` pairs in launch order.  Executor backlog
+    /// carries over to the next round.
+    pub fn drain(&mut self) -> Vec<(usize, Outcome)> {
+        self.queue
+            .drain()
+            .into_iter()
+            .map(|s| {
+                (
+                    s.session,
+                    Outcome::Served {
+                        queue_wait_ms: s.queue_wait_ms,
+                        service_ms: s.service_ms,
+                        batch_size: s.batch_size,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> &QueueStats {
+        &self.queue.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lockstep_detection() {
+        assert!(SchedulerConfig::lockstep_fifo().is_lockstep());
+        assert!(SchedulerConfig::default().is_lockstep());
+        assert!(!SchedulerConfig::event(AdmissionPolicy::Fifo).is_lockstep());
+        assert!(!SchedulerConfig::event(AdmissionPolicy::Edf).is_lockstep());
+        let mut batched = SchedulerConfig::lockstep_fifo();
+        batched.max_batch = 4;
+        assert!(!batched.is_lockstep(), "batching leaves the lockstep path");
+        let mut bounded = SchedulerConfig::lockstep_fifo();
+        bounded.queue_capacity = 8;
+        assert!(!bounded.is_lockstep(), "admission control leaves the lockstep path");
+        let mut forced = SchedulerConfig::lockstep_fifo();
+        forced.force_event = true;
+        assert!(!forced.is_lockstep());
+    }
+
+    #[test]
+    fn scheduler_round_trip() {
+        let mut sched = EdgeScheduler::new(
+            SchedulerConfig::event(AdmissionPolicy::Fifo),
+            Contention::new(1, 0.25),
+        );
+        for s in 0..3 {
+            let ok = sched.submit(EdgeJob {
+                session: s,
+                p: 0,
+                bytes: 100,
+                capture_ms: 0.0,
+                arrival_ms: s as f64,
+                deadline_ms: 50.0,
+                weight: 0.2,
+                solo_ms: 6.0,
+                seq: 0,
+            });
+            assert!(ok);
+        }
+        let out = sched.drain();
+        assert_eq!(out.len(), 3);
+        for (_, o) in &out {
+            match o {
+                Outcome::Served { batch_size, service_ms, .. } => {
+                    assert_eq!(*batch_size, 3, "window should coalesce all three");
+                    // 6 · (1 + 0.25·2) = 9 ms shared.
+                    assert!((*service_ms - 9.0).abs() < 1e-9);
+                }
+                Outcome::Rejected => panic!("nothing should be rejected"),
+            }
+        }
+        assert_eq!(sched.stats().dispatched, 3);
+    }
+}

@@ -1,0 +1,434 @@
+//! The event-driven edge server queue.
+//!
+//! One executor (the edge GPU), one bounded waiting room, a virtual
+//! clock.  Offloaded ψ tensors [`EdgeJob`]s arrive on the fleet's shared
+//! timeline (capture + front + uplink + ingress), wait under an
+//! [`AdmissionPolicy`], and run solo or as a cross-session batch whose
+//! cost comes from the [`Contention`] service-time curve
+//! (see [`super::batcher`]).  Offloads that find the waiting room full
+//! are rejected at submit time and fall back to on-device execution —
+//! the serving engine feeds that consequence to the session's bandit.
+//!
+//! Scheduling invariants (property-tested in `tests/properties.rs`):
+//!
+//! * **work conservation** — with batching off, the executor never
+//!   idles while an arrived job waits (a batch window may hold the
+//!   executor, but never longer than `batch_window_ms`);
+//! * **FIFO within a priority class** — ties in any policy's key
+//!   resolve by `(arrival, seq)`;
+//! * **amortization** — a batch never costs more than serving its
+//!   members back to back.
+
+use crate::simulator::Contention;
+
+use super::admission::AdmissionPolicy;
+use super::batcher;
+use super::clock::{EventQueue, VirtualClock};
+
+/// One offloaded frame's ψ tensor, en route to the edge executor.
+#[derive(Debug, Clone)]
+pub struct EdgeJob {
+    pub session: usize,
+    /// Partition point — only same-p jobs batch together.
+    pub p: usize,
+    /// ψ_p payload size (diagnostics; the uplink/ingress legs are already
+    /// folded into `arrival_ms`).
+    pub bytes: usize,
+    /// When the frame was captured on the device (deadline anchor).
+    pub capture_ms: f64,
+    /// When the tensor reaches the edge executor's waiting room.
+    pub arrival_ms: f64,
+    /// Absolute completion deadline (∞ = none): EDF's key.
+    pub deadline_ms: f64,
+    /// Frame weight L_t (key frames are heavier): WeightedFair's scale.
+    pub weight: f64,
+    /// Solo service time at the current exogenous edge load.
+    pub solo_ms: f64,
+    /// Submission sequence (assigned by the queue; final tie-break).
+    pub seq: u64,
+}
+
+/// One job's resolved schedule.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    pub session: usize,
+    pub p: usize,
+    pub seq: u64,
+    /// When the job's batch launched on the executor.
+    pub start_ms: f64,
+    pub finish_ms: f64,
+    /// `start − arrival`: time spent in the waiting room (plus any batch
+    /// window the job sat through).
+    pub queue_wait_ms: f64,
+    /// Amortized execution time of the batch the job rode in.
+    pub service_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Queue knobs (the engine derives these from [`crate::config::Config`]).
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    pub policy: AdmissionPolicy,
+    /// How long a batch head may hold the executor waiting for co-riders
+    /// (0 = only coalesce already-queued backlog).
+    pub batch_window_ms: f64,
+    /// Largest cross-session batch (1 = batching off).
+    pub max_batch: usize,
+    /// Waiting-room bound; arrivals beyond it are rejected
+    /// (`usize::MAX` = unbounded).
+    pub queue_capacity: usize,
+    /// Service-time model for batches (see [`super::batcher`]).
+    pub contention: Contention,
+}
+
+impl QueueConfig {
+    pub fn new(policy: AdmissionPolicy, contention: Contention) -> QueueConfig {
+        QueueConfig {
+            policy,
+            batch_window_ms: 0.0,
+            max_batch: 1,
+            queue_capacity: usize::MAX,
+            contention,
+        }
+    }
+}
+
+/// Cumulative queue diagnostics.  Per-frame queue waits live in the
+/// engine's [`crate::coordinator::metrics::FrameRecord`]s (which is
+/// where `FleetSummary` computes its percentiles from); this struct
+/// carries only what the records cannot: executor-side totals.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub dispatched: usize,
+    pub rejected: usize,
+    pub batches: usize,
+    /// Σ batch sizes over all launches (= `dispatched`).
+    pub batched_jobs: usize,
+    pub total_queue_wait_ms: f64,
+    /// Total executor busy time — utilization when divided by the served
+    /// horizon (`ans fleet` prints this line in event mode).
+    pub busy_ms: f64,
+}
+
+impl QueueStats {
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        if self.dispatched == 0 {
+            0.0
+        } else {
+            self.total_queue_wait_ms / self.dispatched as f64
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The edge server's scheduling core (see module docs).
+#[derive(Debug, Clone)]
+pub struct EdgeQueue {
+    pub cfg: QueueConfig,
+    arrivals: EventQueue<EdgeJob>,
+    waiting: Vec<EdgeJob>,
+    /// Executor availability on the virtual timeline.
+    clock: VirtualClock,
+    /// Per-session accumulated queue wait (WeightedFair credit).
+    attained_wait_ms: Vec<f64>,
+    next_seq: u64,
+    pub stats: QueueStats,
+}
+
+impl EdgeQueue {
+    pub fn new(cfg: QueueConfig) -> EdgeQueue {
+        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        assert!(
+            cfg.batch_window_ms >= 0.0 && cfg.batch_window_ms.is_finite(),
+            "batch window must be finite and ≥ 0"
+        );
+        EdgeQueue {
+            cfg,
+            arrivals: EventQueue::new(),
+            waiting: Vec::new(),
+            clock: VirtualClock::new(),
+            attained_wait_ms: Vec::new(),
+            next_seq: 0,
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Jobs submitted but not yet dispatched.
+    pub fn pending(&self) -> usize {
+        self.arrivals.len() + self.waiting.len()
+    }
+
+    /// Is there room for one more job?
+    pub fn has_room(&self) -> bool {
+        self.pending() < self.cfg.queue_capacity
+    }
+
+    /// Virtual time at which the executor frees up.
+    pub fn free_at_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    /// Submit a job; returns `false` (and counts a rejection) when the
+    /// waiting room is full — the caller then serves the frame on-device.
+    pub fn submit(&mut self, mut job: EdgeJob) -> bool {
+        if !self.has_room() {
+            self.stats.rejected += 1;
+            return false;
+        }
+        job.seq = self.next_seq;
+        self.next_seq += 1;
+        self.arrivals.push(job.arrival_ms, job);
+        true
+    }
+
+    /// Dispatch every pending job to completion on the virtual timeline
+    /// and return the resolved schedules (in launch order).  Executor
+    /// backlog persists across calls: a slow round delays the next one.
+    pub fn drain(&mut self) -> Vec<Scheduled> {
+        while let Some((_, job)) = self.arrivals.pop() {
+            self.waiting.push(job);
+        }
+        let mut out = Vec::with_capacity(self.waiting.len());
+        while !self.waiting.is_empty() {
+            let earliest =
+                self.waiting.iter().map(|j| j.arrival_ms).fold(f64::INFINITY, f64::min);
+            // Work conservation: start as soon as both the executor and
+            // at least one job are ready.
+            let start = self.clock.now_ms().max(earliest);
+            let head = self
+                .cfg
+                .policy
+                .select(&self.waiting, start, &self.attained_wait_ms)
+                .expect("some job has arrived by `start`");
+            // A batch head may hold the executor for its window so
+            // co-riders can join — but no longer than it takes to fill
+            // the batch: once max_batch same-p tensors are on hand there
+            // is nothing to wait for.  Solo dispatch launches at once.
+            let launch = if self.cfg.max_batch > 1 {
+                let window_close =
+                    self.waiting[head].arrival_ms + self.cfg.batch_window_ms;
+                let p = self.waiting[head].p;
+                let mut co_arrivals: Vec<f64> = self
+                    .waiting
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, j)| *i != head && j.p == p)
+                    .map(|(_, j)| j.arrival_ms)
+                    .collect();
+                co_arrivals.sort_by(f64::total_cmp);
+                let full_at =
+                    co_arrivals.get(self.cfg.max_batch - 2).copied().unwrap_or(f64::INFINITY);
+                start.max(window_close.min(full_at))
+            } else {
+                start
+            };
+            let members = batcher::select_batch(
+                &self.waiting,
+                head,
+                launch,
+                self.cfg.max_batch,
+                &self.cfg.policy,
+                &self.attained_wait_ms,
+            );
+            let solos: Vec<f64> = members.iter().map(|&i| self.waiting[i].solo_ms).collect();
+            let service = batcher::batch_service_ms(&solos, &self.cfg.contention);
+            let finish = launch + service;
+            let b = members.len();
+            self.stats.batches += 1;
+            self.stats.batched_jobs += b;
+            self.stats.busy_ms += service;
+            // Remove members back to front so indices stay valid.
+            let mut idxs = members;
+            idxs.sort_unstable_by(|a, b| b.cmp(a));
+            for &i in &idxs {
+                let job = self.waiting.swap_remove(i);
+                let wait = launch - job.arrival_ms;
+                if self.attained_wait_ms.len() <= job.session {
+                    self.attained_wait_ms.resize(job.session + 1, 0.0);
+                }
+                self.attained_wait_ms[job.session] += wait;
+                self.stats.dispatched += 1;
+                self.stats.total_queue_wait_ms += wait;
+                out.push(Scheduled {
+                    session: job.session,
+                    p: job.p,
+                    seq: job.seq,
+                    start_ms: launch,
+                    finish_ms: finish,
+                    queue_wait_ms: wait,
+                    service_ms: service,
+                    batch_size: b,
+                });
+            }
+            self.clock.advance_to(finish);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: AdmissionPolicy) -> QueueConfig {
+        QueueConfig::new(policy, Contention::new(1, 0.25))
+    }
+
+    fn job(session: usize, p: usize, arrival: f64, solo: f64) -> EdgeJob {
+        EdgeJob {
+            session,
+            p,
+            bytes: 100,
+            capture_ms: 0.0,
+            arrival_ms: arrival,
+            deadline_ms: f64::INFINITY,
+            weight: 0.2,
+            solo_ms: solo,
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_serves_in_arrival_order_with_queueing() {
+        let mut q = EdgeQueue::new(cfg(AdmissionPolicy::Fifo));
+        assert!(q.submit(job(0, 0, 10.0, 5.0)));
+        assert!(q.submit(job(1, 0, 11.0, 5.0)));
+        assert!(q.submit(job(2, 0, 30.0, 5.0)));
+        let s = q.drain();
+        assert_eq!(s.len(), 3);
+        // Job 0: starts at its arrival, no wait.
+        assert_eq!(s[0].session, 0);
+        assert_eq!(s[0].start_ms, 10.0);
+        assert_eq!(s[0].queue_wait_ms, 0.0);
+        // Job 1: queues behind job 0 (15 − 11 = 4 ms).
+        assert_eq!(s[1].session, 1);
+        assert_eq!(s[1].start_ms, 15.0);
+        assert!((s[1].queue_wait_ms - 4.0).abs() < 1e-9);
+        // Job 2: executor idle again by 30 — no wait.
+        assert_eq!(s[2].session, 2);
+        assert_eq!(s[2].start_ms, 30.0);
+        assert_eq!(s[2].queue_wait_ms, 0.0);
+        assert_eq!(q.stats.dispatched, 3);
+        assert_eq!(q.stats.rejected, 0);
+        assert!(q.stats.mean_queue_wait_ms() > 0.0);
+    }
+
+    #[test]
+    fn backlog_persists_across_drains() {
+        let mut q = EdgeQueue::new(cfg(AdmissionPolicy::Fifo));
+        q.submit(job(0, 0, 0.0, 100.0));
+        let first = q.drain();
+        assert_eq!(first[0].finish_ms, 100.0);
+        // Next round's job arrives at 10 but the executor is busy to 100.
+        q.submit(job(1, 0, 10.0, 5.0));
+        let second = q.drain();
+        assert_eq!(second[0].start_ms, 100.0);
+        assert!((second[0].queue_wait_ms - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_waiting_room_rejects() {
+        let mut c = cfg(AdmissionPolicy::Fifo);
+        c.queue_capacity = 2;
+        let mut q = EdgeQueue::new(c);
+        assert!(q.submit(job(0, 0, 0.0, 5.0)));
+        assert!(q.submit(job(1, 0, 0.0, 5.0)));
+        assert!(!q.submit(job(2, 0, 0.0, 5.0)), "third job must bounce");
+        assert_eq!(q.stats.rejected, 1);
+        assert_eq!(q.drain().len(), 2);
+        // Room frees after the drain.
+        assert!(q.submit(job(3, 0, 0.0, 5.0)));
+    }
+
+    #[test]
+    fn same_split_jobs_batch_and_finish_together() {
+        let mut c = cfg(AdmissionPolicy::Fifo);
+        c.max_batch = 4;
+        c.batch_window_ms = 10.0;
+        let mut q = EdgeQueue::new(c);
+        for s in 0..4 {
+            q.submit(job(s, 2, s as f64, 8.0));
+        }
+        let out = q.drain();
+        assert_eq!(out.len(), 4);
+        // The batch is full once the 4th tensor lands at t=3: launch then,
+        // not at the window close (t=10); factor(4) = 1.75.
+        let finish = out[0].finish_ms;
+        assert!((finish - 17.0).abs() < 1e-9, "launch 3 + 8·1.75 = 17, got {finish}");
+        for s in &out {
+            assert_eq!(s.batch_size, 4);
+            assert_eq!(s.finish_ms, finish, "batch members share a completion time");
+        }
+        assert!((q.stats.mean_batch_size() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_batch_waits_out_the_window_only() {
+        // Only 2 of max 4 tensors show up: the head holds for its full
+        // window, then launches with whoever arrived.
+        let mut c = cfg(AdmissionPolicy::Fifo);
+        c.max_batch = 4;
+        c.batch_window_ms = 10.0;
+        let mut q = EdgeQueue::new(c);
+        q.submit(job(0, 2, 0.0, 8.0));
+        q.submit(job(1, 2, 1.0, 8.0));
+        let out = q.drain();
+        assert_eq!(out.len(), 2);
+        // Launch at window close 10; factor(2) = 1.25 → finish 20.
+        assert!((out[0].start_ms - 10.0).abs() < 1e-9, "{}", out[0].start_ms);
+        assert!((out[0].finish_ms - 20.0).abs() < 1e-9, "{}", out[0].finish_ms);
+        assert_eq!(out[0].batch_size, 2);
+    }
+
+    #[test]
+    fn wfair_rotates_the_unlucky_session_forward() {
+        // Two sessions collide every round; under FIFO session 1 always
+        // queues behind session 0.  WeightedFair alternates.
+        let run = |policy| {
+            let mut q = EdgeQueue::new(cfg(policy));
+            let mut waits = [0.0, 0.0];
+            for round in 0..10 {
+                let t = round as f64 * 100.0;
+                q.submit(job(0, 0, t, 5.0));
+                q.submit(job(1, 0, t, 5.0));
+                for s in q.drain() {
+                    waits[s.session] += s.queue_wait_ms;
+                }
+            }
+            waits
+        };
+        let fifo = run(AdmissionPolicy::Fifo);
+        assert_eq!(fifo[0], 0.0, "FIFO: session 0 never waits");
+        assert!((fifo[1] - 50.0).abs() < 1e-9, "FIFO: session 1 always waits 5 ms");
+        let wf = run(AdmissionPolicy::WeightedFair);
+        assert!(wf[0] > 0.0 && wf[1] > 0.0, "wfair shares the pain: {wf:?}");
+        assert!(
+            (wf[0] - wf[1]).abs() <= 5.0 + 1e-9,
+            "wfair waits stay within one service of each other: {wf:?}"
+        );
+    }
+
+    #[test]
+    fn edf_jumps_the_tight_deadline_ahead() {
+        let mut q = EdgeQueue::new(cfg(AdmissionPolicy::Edf));
+        // Busy the executor so both contenders queue.
+        q.submit(job(9, 0, 0.0, 10.0));
+        let mut loose = job(0, 0, 1.0, 5.0);
+        loose.deadline_ms = 500.0;
+        let mut tight = job(1, 0, 2.0, 5.0);
+        tight.deadline_ms = 20.0;
+        q.submit(loose);
+        q.submit(tight);
+        let out = q.drain();
+        assert_eq!(out[0].session, 9);
+        assert_eq!(out[1].session, 1, "tight deadline overtakes earlier arrival");
+        assert_eq!(out[2].session, 0);
+    }
+}

@@ -8,7 +8,9 @@
 //!   decisions via the μLinUCB contextual bandit ([`bandit`]), the
 //!   multi-session serving engine and pipelines ([`coordinator`], with
 //!   [`coordinator::engine`] multiplexing N user sessions over one
-//!   contended edge), the environment/testbed simulator ([`simulator`]),
+//!   contended edge), the event-driven edge-server scheduler with
+//!   admission control and cross-session batching ([`edge`]),
+//!   the environment/testbed simulator ([`simulator`]),
 //!   the model zoo with contextual features ([`models`]), SSIM key-frame
 //!   detection ([`video`]), and the PJRT runtime that executes
 //!   AOT-compiled partitions ([`runtime`]).
@@ -21,6 +23,7 @@
 pub mod bandit;
 pub mod config;
 pub mod coordinator;
+pub mod edge;
 pub mod models;
 pub mod runtime;
 pub mod simulator;

@@ -28,10 +28,17 @@ SUBCOMMANDS:
              --edge gpu|cpu --load X --alpha A --mu MU --window W --seed S
   fleet      Multi-session serving: N sessions (own uplinks, own μLinUCB
              learners) over one shared contended edge; per-session and
-             aggregate regret/delay tables.
+             aggregate regret/delay tables (+ --json metrics dump).
              --sessions N --model M --policy P --frames N --rate MBPS
              --contention-capacity K --contention-slope S --ingress MBPS
              --device maxn|maxq --edge gpu|cpu --load X --seed S
+             Edge scheduler: --scheduler edf|wfair, --event-clock,
+             --queue-capacity Q or --stagger MS switch on the
+             event-driven edge queue; --batch-window MS, --max-batch B
+             and --deadline MS shape it once it is on.  Plain
+             --scheduler fifo (the default) keeps the PR-1-compatible
+             lockstep rounds; under the event queue, rejected offloads
+             fall back to on-device execution.
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -133,6 +140,29 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             "off".to_string()
         },
     );
+    let sched = cfg.scheduler_config();
+    if sched.is_lockstep() {
+        println!("  scheduler: fifo (lockstep rounds, batching off)");
+    } else {
+        println!(
+            "  scheduler: {} (event clock), batch window {} ms max {}, queue capacity {}, \
+             deadline {}, stagger {} ms",
+            sched.policy.name(),
+            sched.batch_window_ms,
+            sched.max_batch,
+            if sched.queue_capacity == usize::MAX {
+                "∞".to_string()
+            } else {
+                sched.queue_capacity.to_string()
+            },
+            if sched.deadline_ms.is_finite() {
+                format!("{} ms", sched.deadline_ms)
+            } else {
+                "none".to_string()
+            },
+            sched.stagger_ms,
+        );
+    }
     eng.run(cfg.frames);
     let fs = eng.fleet_summary();
 
@@ -165,13 +195,42 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         100.0 * fs.aggregate.oracle_match_rate,
     );
     println!(
-        "contention: mean offloaders {:.2}/{}  peak {}  peak edge-load factor {:.2}x  fairness spread {:.1} ms",
+        "contention: mean offloaders {:.2}/{}  peak {}  peak edge-load factor {:.2}x  fairness spread {:.1} ms (p95 spread {:.1} ms)",
         fs.mean_offloaders,
         cfg.sessions,
         fs.peak_offloaders,
         fs.peak_contention_factor,
         fs.delay_spread_ms(),
+        fs.p95_spread_ms(),
     );
+    println!(
+        "edge queue: mean wait {:.2} ms (p95 {:.2})  mean batch {:.2}  rejected offloads {}",
+        fs.aggregate.mean_queue_wait_ms,
+        fs.p95_queue_wait_ms,
+        fs.aggregate.mean_batch_size,
+        fs.aggregate.rejected_offloads,
+    );
+    if let Some(stats) = eng.scheduler_stats() {
+        let horizon_ms = cfg.frames as f64 * 1e3 / cfg.fps;
+        println!(
+            "edge executor: busy {:.1} ms over a {:.1} ms horizon ({:.0}% utilization, {} launches)",
+            stats.busy_ms,
+            horizon_ms,
+            100.0 * stats.busy_ms / horizon_ms.max(1e-9),
+            stats.batches,
+        );
+    }
+    if args.flag("json") {
+        std::fs::create_dir_all("bench_results")?;
+        // Key the file by every knob that changes the experiment, so
+        // recipe runs never overwrite each other.
+        let path = format!(
+            "bench_results/fleet_{}_{}_s{}x{}_seed{}.json",
+            cfg.model, fs.scheduler, cfg.sessions, cfg.frames, cfg.seed
+        );
+        std::fs::write(&path, fs.to_json())?;
+        println!("fleet metrics JSON -> {path}");
+    }
     if args.flag("csv") {
         std::fs::create_dir_all("bench_results")?;
         for s in eng.sessions() {

@@ -172,6 +172,34 @@ impl Environment {
             + self.edge.delay_ms(&self.back_stats[p], self.current_load * self.contention_factor)
     }
 
+    /// Solo back-end service time at the edge under the *exogenous*
+    /// workload only — the event scheduler's base service time.  Fleet
+    /// contention enters through the edge queue (waiting + batch
+    /// amortization) instead of the multiplicative factor.
+    pub fn solo_backend_ms(&self, p: usize) -> f64 {
+        if p == self.num_partitions() {
+            return 0.0;
+        }
+        self.edge.delay_ms(&self.back_stats[p], self.current_load)
+    }
+
+    /// On-device completion cost of the back-end span — what a frame
+    /// pays to finish locally after the edge rejects its offload.
+    pub fn device_fallback_ms(&self, p: usize) -> f64 {
+        if p == self.num_partitions() {
+            return 0.0;
+        }
+        self.device.delay_ms(&self.back_stats[p], 1.0)
+    }
+
+    /// One noisy observation of an externally computed mean delay (the
+    /// event scheduler's realized edge leg), drawn from this session's
+    /// own noise stream — same stream, same draw count per offload as
+    /// [`Environment::observe_edge_delay`].
+    pub fn noisy(&mut self, mean_ms: f64) -> f64 {
+        (mean_ms + self.rng.normal(0.0, self.noise_std_ms)).max(0.0)
+    }
+
     /// Expected end-to-end delay of partition p at the current frame.
     pub fn expected_total(&self, p: usize) -> f64 {
         self.front_delay(p) + self.expected_edge_delay(p)
@@ -348,6 +376,32 @@ mod tests {
     #[should_panic(expected = "contention factor")]
     fn contention_factor_below_one_rejected() {
         vgg_env(12.0).set_contention_factor(0.5);
+    }
+
+    #[test]
+    fn solo_backend_and_fallback_costs() {
+        let env = vgg_env(12.0);
+        let p_max = env.num_partitions();
+        assert_eq!(env.solo_backend_ms(p_max), 0.0);
+        assert_eq!(env.device_fallback_ms(p_max), 0.0);
+        // Solo edge service excludes both tx and contention; the device
+        // fallback (TX2) is far slower than the GPU edge on the same span.
+        let tx = tx_delay_ms(env.psi_bytes(3), env.current_rate_mbps(), env.rtt_ms);
+        let solo = env.solo_backend_ms(3);
+        assert!((solo + tx - env.expected_edge_delay(3)).abs() < 1e-9);
+        assert!(env.device_fallback_ms(3) > 5.0 * solo, "fallback should hurt");
+        let mut loaded = vgg_env(12.0);
+        loaded.set_contention_factor(4.0);
+        assert_eq!(loaded.solo_backend_ms(3), solo, "solo service ignores fleet contention");
+    }
+
+    #[test]
+    fn noisy_draws_track_the_given_mean() {
+        let mut env = vgg_env(12.0);
+        let n = 3000;
+        let avg: f64 = (0..n).map(|_| env.noisy(42.0)).sum::<f64>() / n as f64;
+        assert!((avg - 42.0).abs() < 0.25, "avg {avg}");
+        assert!(env.noisy(-100.0) >= 0.0, "clamped at zero like observe_edge_delay");
     }
 
     #[test]

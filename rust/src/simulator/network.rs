@@ -112,6 +112,12 @@ impl TokenBucket {
         self.next_free_ms = done;
         done - now_ms
     }
+
+    /// Virtual time at which the link frees up (backlog diagnostics for
+    /// the event-driven edge scheduler).
+    pub fn next_free_ms(&self) -> f64 {
+        self.next_free_ms
+    }
 }
 
 /// The edge server's shared ingress link: every session keeps its *own*
@@ -134,6 +140,11 @@ impl SharedIngress {
     /// returns the queueing + serialization delay it experiences.
     pub fn consume(&mut self, bytes: usize, now_ms: f64) -> f64 {
         self.bucket.consume(bytes, now_ms)
+    }
+
+    /// Virtual time at which the NIC drains its current backlog.
+    pub fn next_free_ms(&self) -> f64 {
+        self.bucket.next_free_ms()
     }
 
     /// Drop any queued backlog (fresh run).
@@ -255,6 +266,14 @@ mod tests {
         ingress.reset();
         let fresh = ingress.consume(1250, 0.0);
         assert!((fresh - 10.0).abs() < 1e-9, "{fresh}");
+    }
+
+    #[test]
+    fn next_free_tracks_backlog() {
+        let mut ingress = SharedIngress::new(1.0); // 125 bytes/ms
+        assert_eq!(ingress.next_free_ms(), 0.0);
+        ingress.consume(1250, 5.0);
+        assert!((ingress.next_free_ms() - 15.0).abs() < 1e-9);
     }
 
     #[test]

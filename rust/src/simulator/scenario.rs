@@ -4,6 +4,7 @@
 
 use super::{compute, network, ComputeProfile, Environment, Workload};
 use crate::models::Network;
+use crate::util::rng::Rng;
 
 /// Fig 12(a): uplink rate trace — high (50) → bad (1) at frame 150 →
 /// medium (16) at frame 390 → high (50) again at frame 630; 800 frames.
@@ -95,6 +96,10 @@ pub fn fleet(net: Network, n_sessions: usize, base_rate_mbps: f64, seed: u64) ->
 }
 
 /// [`fleet`] with explicit device/edge profiles and exogenous edge load.
+/// Session `i`'s noise stream is [`Rng::stream_seed`]`(seed, i)` — a pure
+/// function of the base seed and the session index, so growing the fleet
+/// never perturbs the draws of existing sessions (pinned in
+/// `rust/tests/fleet.rs`).
 pub fn fleet_with(
     net: Network,
     n_sessions: usize,
@@ -114,7 +119,7 @@ pub fn fleet_with(
                 edge,
                 Workload::constant(load),
                 network::Uplink::constant(rate),
-                seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)),
+                Rng::stream_seed(seed, i as u64),
             )
         })
         .collect()
@@ -134,7 +139,9 @@ pub fn fleet_markov(
     assert!(n_sessions >= 1, "fleet needs at least one session");
     (0..n_sessions)
         .map(|i| {
-            let s = seed.wrapping_add(0xD1B5_4A32_D192_ED03u64.wrapping_mul(i as u64 + 1));
+            // Independent (seed, i)-pure streams for the uplink chain and
+            // the noise draws — same invariant as [`fleet_with`].
+            let s = Rng::stream_seed(seed, i as u64);
             Environment::new(
                 net.clone(),
                 compute::DEVICE_MAXN,
@@ -211,6 +218,22 @@ mod tests {
         }
         let (a, b) = envs.split_at_mut(1);
         assert_ne!(a[0].observe_edge_delay(3), b[0].observe_edge_delay(3));
+    }
+
+    #[test]
+    fn growing_the_fleet_never_perturbs_existing_sessions() {
+        // Session i's noise stream is a pure function of (seed, i): the
+        // 3-session fleet's draws are bit-identical inside a 8-session
+        // fleet built from the same seed.
+        let mut small = fleet(zoo::vgg16(), 3, 16.0, 7);
+        let mut big = fleet(zoo::vgg16(), 8, 16.0, 7);
+        for (a, b) in small.iter_mut().zip(big.iter_mut()) {
+            a.tick(0);
+            b.tick(0);
+            for p in 0..5 {
+                assert_eq!(a.observe_edge_delay(p), b.observe_edge_delay(p));
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,27 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Pure `(seed, stream_id) → seed` split: both words pass through
+    /// SplitMix64 independently before mixing, so nearby stream ids (0,
+    /// 1, 2, …) land on uncorrelated generators.  Unlike [`Rng::fork`]
+    /// this consumes no generator state: stream `i` depends *only* on
+    /// `(seed, i)`, so adding streams (fleet sessions) never perturbs
+    /// the draws of existing ones.
+    pub fn stream_seed(seed: u64, stream_id: u64) -> u64 {
+        let mut a = seed;
+        let mixed_seed = splitmix64(&mut a);
+        // Offset the id so stream 0 of seed s is unrelated to Rng::new(s).
+        let mut b = stream_id ^ 0x6A09_E667_F3BC_C909;
+        let mixed_id = splitmix64(&mut b);
+        mixed_seed ^ mixed_id.rotate_left(32)
+    }
+
+    /// Generator for the `stream_id`-th independent stream of `seed`
+    /// (see [`Rng::stream_seed`]).
+    pub fn stream(seed: u64, stream_id: u64) -> Rng {
+        Rng::new(Rng::stream_seed(seed, stream_id))
+    }
+
     /// Next raw 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -201,6 +222,28 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn stream_split_is_pure_and_decorrelated() {
+        // Purity: stream i of a seed is a function of (seed, i) alone.
+        let mut a = Rng::stream(42, 3);
+        let mut b = Rng::stream(42, 3);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Nearby ids (the per-session case) must not correlate.
+        let mut s0 = Rng::stream(42, 0);
+        let mut s1 = Rng::stream(42, 1);
+        let same = (0..64).filter(|_| s0.next_u32() == s1.next_u32()).count();
+        assert!(same < 4, "{same} collisions between adjacent streams");
+        // Stream 0 is not the base generator in disguise.
+        let mut base = Rng::new(42);
+        let mut z = Rng::stream(42, 0);
+        let same = (0..64).filter(|_| base.next_u32() == z.next_u32()).count();
+        assert!(same < 4);
+        // Distinct seeds map the same id to distinct streams.
+        assert_ne!(Rng::stream_seed(1, 5), Rng::stream_seed(2, 5));
     }
 
     #[test]

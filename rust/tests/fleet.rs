@@ -68,6 +68,9 @@ fn legacy_run(
             rate_mbps: env.current_rate_mbps(),
             predicted_edge_ms,
             true_edge_ms: env.expected_edge_delay(p),
+            queue_wait_ms: 0.0,
+            batch_size: if p == p_max { 0 } else { 1 },
+            rejected: false,
         });
     }
     metrics
@@ -132,6 +135,218 @@ fn single_session_engine_matches_wrapper_run() {
         assert_eq!(a.p, b.p, "t={}", a.t);
         assert_eq!(a.delay_ms, b.delay_ms, "t={}", a.t);
         assert_eq!(a.expected_ms, b.expected_ms, "t={}", a.t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PR 1's lockstep fleet rounds, verbatim: phase 1 selects under the
+// previous round's offload count, phase 2 applies factor(k_t) to every
+// environment, runs the arrival-ordered shared-ingress pass, and draws
+// one noisy delay per session in session order.  The engine's default
+// (Fifo + batching off) scheduler must reproduce this bit for bit — the
+// degenerate-case acceptance pin for the event-driven edge scheduler.
+// ---------------------------------------------------------------------------
+#[allow(clippy::too_many_arguments)]
+fn legacy_fleet_run(
+    mut policies: Vec<Box<dyn Policy>>,
+    mut envs: Vec<Environment>,
+    mut sources: Vec<FrameSource>,
+    contention: Contention,
+    ingress_mbps: Option<f64>,
+    frame_interval_ms: f64,
+    rounds: usize,
+) -> Vec<Metrics> {
+    use ans::simulator::{tx_delay_ms, SharedIngress};
+    let n = envs.len();
+    let scales: Vec<_> = envs.iter().map(|e| FeatureScale::for_network(&e.net)).collect();
+    let contexts: Vec<Vec<_>> = envs
+        .iter()
+        .zip(&scales)
+        .map(|(e, s)| features::context_vectors(&e.net, s))
+        .collect();
+    let fronts: Vec<Vec<f64>> = envs.iter().map(|e| e.front_delays().to_vec()).collect();
+    let mut expected: Vec<Vec<f64>> =
+        envs.iter().map(|e| vec![0.0; e.num_partitions() + 1]).collect();
+    let mut metrics: Vec<Metrics> = (0..n).map(|_| Metrics::new()).collect();
+    let mut ingress = ingress_mbps.map(SharedIngress::new);
+    let mut k_prev = 0usize;
+
+    for t in 0..rounds {
+        // Phase 1: select under the previous round's concurrency.
+        let mut picks = Vec::with_capacity(n);
+        for i in 0..n {
+            let env = &mut envs[i];
+            env.tick(t);
+            env.set_contention_factor(contention.factor(k_prev));
+            let (is_key, weight) = sources[i].next();
+            for (p, v) in expected[i].iter_mut().enumerate() {
+                *v = env.expected_total(p);
+            }
+            let ctx = FrameContext {
+                t,
+                weight,
+                front_delays: &fronts[i],
+                contexts: &contexts[i],
+                privileged: Privileged {
+                    rate_mbps: env.current_rate_mbps(),
+                    expected_totals: Some(&expected[i]),
+                },
+            };
+            let p = policies[i].select(&ctx);
+            let p_max = env.num_partitions();
+            let predicted =
+                if p == p_max { None } else { policies[i].predict_edge_delay(&contexts[i][p]) };
+            picks.push((p, is_key, weight, predicted));
+        }
+
+        // Phase 2: realized concurrency, ingress in arrival order, then
+        // per-session noisy draws in session order.
+        let k = picks.iter().zip(&envs).filter(|((p, ..), e)| *p != e.num_partitions()).count();
+        let now_ms = t as f64 * frame_interval_ms;
+        let mut ingress_queue = vec![0.0; n];
+        if let Some(ing) = &mut ingress {
+            let mut arrivals: Vec<(f64, usize, usize)> = (0..n)
+                .filter(|&i| picks[i].0 != envs[i].num_partitions())
+                .map(|i| {
+                    let p = picks[i].0;
+                    let bytes = envs[i].psi_bytes(p);
+                    let tx =
+                        tx_delay_ms(bytes, envs[i].current_rate_mbps(), envs[i].rtt_ms);
+                    (now_ms + fronts[i][p] + tx, i, bytes)
+                })
+                .collect();
+            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (arrival_ms, i, bytes) in arrivals {
+                ingress_queue[i] = ing.consume(bytes, arrival_ms);
+            }
+        }
+        for i in 0..n {
+            let (p, is_key, weight, predicted) = picks[i];
+            let env = &mut envs[i];
+            env.set_contention_factor(contention.factor(k));
+            for (q, v) in expected[i].iter_mut().enumerate() {
+                *v = env.expected_total(q);
+            }
+            let p_max = env.num_partitions();
+            let mut realized = if p == p_max { 0.0 } else { env.observe_edge_delay(p) };
+            if p != p_max {
+                realized += ingress_queue[i];
+            }
+            let delay_ms = fronts[i][p] + realized;
+            if p != p_max {
+                policies[i].observe(p, &contexts[i][p], realized);
+            }
+            let oracle_p = argmin(&expected[i]);
+            metrics[i].push(FrameRecord {
+                t,
+                p,
+                is_key,
+                weight,
+                delay_ms,
+                expected_ms: expected[i][p],
+                oracle_p,
+                oracle_ms: expected[i][oracle_p],
+                rate_mbps: env.current_rate_mbps(),
+                predicted_edge_ms: predicted,
+                true_edge_ms: env.expected_edge_delay(p),
+                queue_wait_ms: ingress_queue[i],
+                batch_size: if p == p_max { 0 } else { 1 },
+                rejected: false,
+            });
+        }
+        k_prev = k;
+    }
+    metrics
+}
+
+#[test]
+fn default_scheduler_reproduces_the_legacy_lockstep_fleet_bit_identically() {
+    let rounds = 150;
+    let net = zoo::vgg16();
+    let build_parts = || {
+        let envs = scenario::fleet(net.clone(), 4, 16.0, 77);
+        let policies: Vec<Box<dyn Policy>> =
+            (0..4).map(|_| mu_linucb(&net, rounds)).collect();
+        let sources: Vec<FrameSource> = (0..4)
+            .map(|i| FrameSource::video(900 + i as u64, 0.85, Weights::default_paper()))
+            .collect();
+        (policies, envs, sources)
+    };
+
+    let (policies, envs, sources) = build_parts();
+    let contention = Contention::new(1, 0.5);
+    let legacy = legacy_fleet_run(
+        policies,
+        envs,
+        sources,
+        contention,
+        Some(200.0),
+        1e3 / 30.0,
+        rounds,
+    );
+
+    let (policies, envs, sources) = build_parts();
+    let mut eng = Engine::new(EngineConfig {
+        contention,
+        ingress_mbps: Some(200.0),
+        ..Default::default()
+    });
+    for ((policy, env), source) in policies.into_iter().zip(envs).zip(sources) {
+        eng.add_session(policy, env, source);
+    }
+    eng.run(rounds);
+
+    for (i, (legacy_m, session)) in legacy.iter().zip(eng.sessions()).enumerate() {
+        assert_eq!(legacy_m.records.len(), session.metrics.records.len());
+        for (l, w) in legacy_m.records.iter().zip(&session.metrics.records) {
+            assert_eq!(l.p, w.p, "s{i} t={}", l.t);
+            assert_eq!(l.delay_ms, w.delay_ms, "s{i} t={}", l.t);
+            assert_eq!(l.expected_ms, w.expected_ms, "s{i} t={}", l.t);
+            assert_eq!(l.oracle_p, w.oracle_p, "s{i} t={}", l.t);
+            assert_eq!(l.oracle_ms, w.oracle_ms, "s{i} t={}", l.t);
+            assert_eq!(l.predicted_edge_ms, w.predicted_edge_ms, "s{i} t={}", l.t);
+            assert_eq!(l.true_edge_ms, w.true_edge_ms, "s{i} t={}", l.t);
+            assert_eq!(l.queue_wait_ms, w.queue_wait_ms, "s{i} t={}", l.t);
+            assert_eq!(l.batch_size, w.batch_size, "s{i} t={}", l.t);
+            assert_eq!(l.is_key, w.is_key, "s{i} t={}", l.t);
+            assert_eq!(l.weight, w.weight, "s{i} t={}", l.t);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-session RNG streams are (seed, index)-pure: growing the configured
+// fleet must not perturb existing sessions' environment noise or video
+// draws (the regression the Rng::stream split exists for).
+// ---------------------------------------------------------------------------
+#[test]
+fn growing_the_configured_fleet_preserves_existing_session_streams() {
+    use ans::config::Config;
+    use ans::coordinator::engine::fleet_from_config;
+    use ans::util::cli::Args;
+
+    let build = |sessions: usize| {
+        let args = Args::parse(
+            format!("fleet --sessions {sessions} --model partnet --rate 10 --seed 5")
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        fleet_from_config(&Config::from_args(&args).unwrap())
+    };
+    let mut small = build(2);
+    let mut big = build(5);
+    for i in 0..2 {
+        let a = &mut small.sessions_mut()[i];
+        let b = &mut big.sessions_mut()[i];
+        // Identical environment noise streams...
+        for p in 0..3 {
+            assert_eq!(a.env.observe_edge_delay(p), b.env.observe_edge_delay(p), "session {i}");
+        }
+        // ...and identical video/key-frame streams.
+        for _ in 0..5 {
+            assert_eq!(a.source.next(), b.source.next(), "session {i} video stream");
+        }
     }
 }
 

@@ -367,3 +367,190 @@ fn prop_observations_match_expectations_in_mean() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Edge-queue scheduling invariants (DESIGN.md §7): work conservation,
+// FIFO ordering within a priority class, and batch amortization never
+// exceeding back-to-back service.  Random job sets over every admission
+// policy.
+// ---------------------------------------------------------------------------
+use ans::edge::{AdmissionPolicy, EdgeJob, EdgeQueue, QueueConfig, Scheduled};
+use ans::simulator::Contention;
+
+#[derive(Debug, Clone)]
+struct JobSpec {
+    arrival: f64,
+    solo: f64,
+    session: usize,
+    p: usize,
+    /// Relative deadline class (EDF priority tier).
+    budget: f64,
+}
+
+#[derive(Debug, Clone)]
+struct JobSet(Vec<JobSpec>);
+
+impl Shrink for JobSet {
+    fn shrink(&self) -> Vec<JobSet> {
+        let mut out = Vec::new();
+        if self.0.len() > 1 {
+            out.push(JobSet(self.0[..self.0.len() / 2].to_vec()));
+            out.push(JobSet(self.0[1..].to_vec()));
+        }
+        out
+    }
+}
+
+fn random_jobs(rng: &mut Rng) -> JobSet {
+    let n = 1 + rng.below(40);
+    JobSet(
+        (0..n)
+            .map(|_| JobSpec {
+                arrival: rng.uniform(0.0, 150.0),
+                solo: rng.uniform(0.5, 12.0),
+                session: rng.below(8),
+                p: rng.below(3),
+                budget: if rng.bernoulli(0.5) { 20.0 } else { 120.0 },
+            })
+            .collect(),
+    )
+}
+
+fn submit_all(queue: &mut EdgeQueue, jobs: &JobSet) {
+    for (i, j) in jobs.0.iter().enumerate() {
+        let ok = queue.submit(EdgeJob {
+            session: j.session,
+            p: j.p,
+            bytes: 1000,
+            capture_ms: j.arrival,
+            arrival_ms: j.arrival,
+            deadline_ms: j.arrival + j.budget,
+            weight: 0.2,
+            solo_ms: j.solo,
+            seq: i as u64,
+        });
+        assert!(ok, "unbounded room never rejects");
+    }
+}
+
+fn policy_for(case: usize) -> AdmissionPolicy {
+    match case % 3 {
+        0 => AdmissionPolicy::Fifo,
+        1 => AdmissionPolicy::Edf,
+        _ => AdmissionPolicy::WeightedFair,
+    }
+}
+
+#[test]
+fn prop_edge_queue_is_work_conserving() {
+    // With batching off, under ANY policy, the executor starts the
+    // moment both it and some arrived job are free: every dispatch
+    // launches at max(executor-free, earliest remaining arrival).
+    let mut case = 0usize;
+    forall(11, 60, random_jobs, |jobs| {
+        let policy = policy_for(case);
+        case += 1;
+        let mut q = EdgeQueue::new(QueueConfig::new(policy, Contention::new(1, 0.25)));
+        submit_all(&mut q, jobs);
+        let sched = q.drain();
+        ensure(sched.len() == jobs.0.len(), "every job is served")?;
+        let mut remaining: Vec<f64> = jobs.0.iter().map(|j| j.arrival).collect();
+        let mut free = 0.0_f64;
+        for s in &sched {
+            let earliest = remaining.iter().cloned().fold(f64::INFINITY, f64::min);
+            let expect = free.max(earliest);
+            ensure(
+                (s.start_ms - expect).abs() < 1e-9,
+                format!("idle executor: started {} expected {} ({policy:?})", s.start_ms, expect),
+            )?;
+            ensure(
+                s.start_ms >= jobs.0[s.seq as usize].arrival - 1e-9,
+                "job started before it arrived",
+            )?;
+            let pos = remaining
+                .iter()
+                .position(|&a| a == jobs.0[s.seq as usize].arrival)
+                .expect("dispatched job was pending");
+            remaining.swap_remove(pos);
+            free = s.finish_ms;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_queue_keeps_fifo_order_within_a_priority_class() {
+    // EDF with two deadline tiers: inside each tier, deadlines are
+    // arrival + constant, so dispatch order must preserve arrival order
+    // (the (arrival, seq) tie-break all policies share).
+    forall(12, 60, random_jobs, |jobs| {
+        let mut q =
+            EdgeQueue::new(QueueConfig::new(AdmissionPolicy::Edf, Contention::new(1, 0.25)));
+        submit_all(&mut q, jobs);
+        let sched = q.drain();
+        for tier in [20.0, 120.0] {
+            let mut last_arrival = f64::NEG_INFINITY;
+            for s in &sched {
+                let spec = &jobs.0[s.seq as usize];
+                if spec.budget != tier {
+                    continue;
+                }
+                ensure(
+                    spec.arrival >= last_arrival,
+                    format!("tier {tier}: arrival {} dispatched after {}", spec.arrival, last_arrival),
+                )?;
+                last_arrival = spec.arrival;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_queue_batch_delay_never_exceeds_sum_of_solo_delays() {
+    let mut case = 0usize;
+    forall(13, 60, random_jobs, |jobs| {
+        let policy = policy_for(case);
+        case += 1;
+        let mut cfg = QueueConfig::new(policy, Contention::new(1, 0.5));
+        cfg.max_batch = 1 + (case % 8);
+        cfg.batch_window_ms = (case % 4) as f64 * 3.0;
+        let mut q = EdgeQueue::new(cfg);
+        submit_all(&mut q, jobs);
+        let sched = q.drain();
+        ensure(sched.len() == jobs.0.len(), "every job is served")?;
+        // Group batches by shared (start, finish).
+        let mut batches: Vec<Vec<&Scheduled>> = Vec::new();
+        for s in &sched {
+            match batches
+                .iter_mut()
+                .find(|b| b[0].start_ms == s.start_ms && b[0].finish_ms == s.finish_ms)
+            {
+                Some(b) => b.push(s),
+                None => batches.push(vec![s]),
+            }
+        }
+        for batch in &batches {
+            let service = batch[0].service_ms;
+            let sum_solo: f64 = batch.iter().map(|s| jobs.0[s.seq as usize].solo).sum();
+            let max_solo =
+                batch.iter().map(|s| jobs.0[s.seq as usize].solo).fold(0.0_f64, f64::max);
+            ensure(
+                service <= sum_solo + 1e-9,
+                format!("batch of {} cost {service} > serial {sum_solo}", batch.len()),
+            )?;
+            ensure(
+                service >= max_solo - 1e-9,
+                format!("batch cannot beat its longest member: {service} < {max_solo}"),
+            )?;
+            for s in batch.iter() {
+                ensure(s.batch_size == batch.len(), "recorded batch size matches")?;
+                ensure(
+                    jobs.0[s.seq as usize].p == jobs.0[batch[0].seq as usize].p,
+                    "batch members share a partition point",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

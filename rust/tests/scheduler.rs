@@ -1,0 +1,196 @@
+//! Edge-scheduler integration: the event-driven queue against the PR 1
+//! lockstep baseline — fairness-spread reduction under EDF/WeightedFair
+//! with cross-session batching, amortization wins, admission-control
+//! fallback, independent session clocks, and full determinism.
+
+use ans::bandit::{self, Policy};
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::{FleetSummary, FrameSource};
+use ans::edge::{AdmissionPolicy, SchedulerConfig};
+use ans::models::{zoo, Network};
+use ans::simulator::{scenario, Contention, DEVICE_MAXN, EDGE_GPU};
+
+fn policy(net: &Network, name: &str, horizon: usize) -> Box<dyn Policy> {
+    bandit::by_name(name, net, &DEVICE_MAXN, &EDGE_GPU, horizon, None, None).unwrap()
+}
+
+/// The contended 8-session scenario of EXPERIMENTS.md: heterogeneous
+/// per-session uplinks (scenario::fleet spread) into one capacity-1 edge,
+/// every session offloading every frame (EO) so the comparison isolates
+/// the scheduling discipline from bandit adaptation.  Identical seeds →
+/// identical noise draws across scheduler variants.
+fn run_eight_eo(scheduler: SchedulerConfig, frames: usize) -> (FleetSummary, Engine) {
+    let net = zoo::partnet();
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.25),
+        scheduler,
+        ..Default::default()
+    });
+    for env in scenario::fleet(net.clone(), 8, 10.0, 42) {
+        eng.add_session(policy(&net, "eo", frames), env, FrameSource::uniform());
+    }
+    eng.run(frames);
+    (eng.fleet_summary(), eng)
+}
+
+fn batched(policy: AdmissionPolicy) -> SchedulerConfig {
+    let mut sc = SchedulerConfig::event(policy);
+    // Window wide enough to coalesce the fleet's uplink spread (~9.4 ms
+    // between the fastest and slowest session's ψ arrival).
+    sc.batch_window_ms = 12.0;
+    sc.max_batch = 8;
+    sc
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance property: the lockstep FIFO fleet's delay spread is
+// floored by uplink heterogeneity (every session pays its own tx plus
+// the same contention-factored compute), while the event scheduler's
+// cross-session batches complete *together* — EDF and WeightedFair both
+// collapse the fairness spread, in mean and at the tail.
+// ---------------------------------------------------------------------------
+#[test]
+fn edf_and_wfair_reduce_p95_delay_spread_vs_lockstep_fifo() {
+    let frames = 400;
+    let (fifo, _) = run_eight_eo(SchedulerConfig::lockstep_fifo(), frames);
+    let (edf, _) = run_eight_eo(batched(AdmissionPolicy::Edf), frames);
+    let (wfair, _) = run_eight_eo(batched(AdmissionPolicy::WeightedFair), frames);
+
+    // The baseline really is spread out (the ~9 ms tx heterogeneity).
+    assert!(
+        fifo.delay_spread_ms() > 5.0,
+        "lockstep baseline should show an uplink-driven spread, got {:.2}",
+        fifo.delay_spread_ms()
+    );
+    for (name, fs) in [("edf", &edf), ("wfair", &wfair)] {
+        assert!(
+            fs.p95_spread_ms() < 0.5 * fifo.p95_spread_ms(),
+            "{name} p95 spread {:.2} !< half of lockstep {:.2}",
+            fs.p95_spread_ms(),
+            fifo.p95_spread_ms()
+        );
+        assert!(
+            fs.delay_spread_ms() < 0.5 * fifo.delay_spread_ms(),
+            "{name} mean spread {:.2} !< half of lockstep {:.2}",
+            fs.delay_spread_ms(),
+            fifo.delay_spread_ms()
+        );
+        // The queue is visibly doing the work: batch-window waits show up,
+        // and the fleet batches well beyond solo execution.
+        assert!(fs.aggregate.mean_queue_wait_ms > 0.0, "{name} must queue");
+        assert!(fs.aggregate.mean_batch_size > 4.0, "{name} must batch: {}", fs.aggregate.mean_batch_size);
+        assert_eq!(fs.aggregate.rejected_offloads, 0);
+    }
+    assert_eq!(fifo.scheduler, "fifo-lockstep");
+    assert_eq!(edf.scheduler, "edf");
+    assert_eq!(wfair.scheduler, "wfair");
+}
+
+// ---------------------------------------------------------------------------
+// Cross-session batching amortizes the back end: the same overloaded
+// fleet (8 × ~5 ms solo service per 33 ms round into one executor) is
+// stable with batching and divergent without it.
+// ---------------------------------------------------------------------------
+#[test]
+fn batching_amortizes_an_otherwise_overloaded_edge() {
+    let frames = 300;
+    let mut solo = SchedulerConfig::event(AdmissionPolicy::Fifo);
+    solo.max_batch = 1;
+    solo.batch_window_ms = 0.0;
+    let (unbatched, _) = run_eight_eo(solo, frames);
+    let (amortized, _) = run_eight_eo(batched(AdmissionPolicy::Fifo), frames);
+    assert!(
+        amortized.aggregate.mean_delay_ms < unbatched.aggregate.mean_delay_ms,
+        "batching should amortize: batched {:.1} vs unbatched {:.1}",
+        amortized.aggregate.mean_delay_ms,
+        unbatched.aggregate.mean_delay_ms
+    );
+    assert!(
+        amortized.p95_queue_wait_ms < unbatched.p95_queue_wait_ms,
+        "batched tail waits {:.1} vs unbatched {:.1}",
+        amortized.p95_queue_wait_ms,
+        unbatched.p95_queue_wait_ms
+    );
+    assert!(amortized.aggregate.mean_batch_size > unbatched.aggregate.mean_batch_size);
+}
+
+// ---------------------------------------------------------------------------
+// Admission control: a bounded waiting room bounces the overflow back to
+// on-device execution, the engine records the fallback, and the bandits
+// keep serving (finite delays) under persistent rejection pressure.
+// ---------------------------------------------------------------------------
+#[test]
+fn bounded_queue_rejects_overflow_and_bandits_observe_the_consequence() {
+    let frames = 200;
+    let net = zoo::vgg16();
+    let mut sc = batched(AdmissionPolicy::Fifo);
+    sc.queue_capacity = 2;
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.25),
+        scheduler: sc,
+        ..Default::default()
+    });
+    for env in scenario::fleet(net.clone(), 8, 20.0, 7) {
+        eng.add_session(policy(&net, "mu-linucb", frames), env, FrameSource::uniform());
+    }
+    eng.run(frames);
+    let stats_rejected = eng.scheduler_stats().unwrap().rejected;
+    assert!(stats_rejected > 0, "8 learners into a 2-slot room must overflow");
+    let fs = eng.fleet_summary();
+    assert_eq!(fs.aggregate.rejected_offloads, stats_rejected, "records agree with the queue");
+    assert!(fs.aggregate.mean_delay_ms.is_finite() && fs.aggregate.mean_delay_ms > 0.0);
+    // Every rejection is a real offload attempt that finished on-device.
+    let p_max = net.num_partitions();
+    for s in eng.sessions() {
+        for r in &s.metrics.records {
+            if r.rejected {
+                assert_ne!(r.p, p_max, "MO frames cannot be rejected");
+                assert_eq!(r.batch_size, 0);
+                assert_eq!(r.queue_wait_ms, 0.0, "rejected before entering the room");
+                assert!(r.delay_ms > 0.0);
+            }
+        }
+        // Feedback kept flowing: the learner observed every offload arm
+        // it pulled, rejected or not.
+        assert!(s.snapshot().observations > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Independent session clocks: staggered captures spread arrivals beyond
+// the batch window, so the single fleet-wide batch splits up.
+// ---------------------------------------------------------------------------
+#[test]
+fn staggered_session_clocks_split_the_fleet_batch() {
+    let frames = 100;
+    let (aligned, _) = run_eight_eo(batched(AdmissionPolicy::Fifo), frames);
+    let mut sc = batched(AdmissionPolicy::Fifo);
+    sc.stagger_ms = 4.0; // 8 sessions over 28 ms ≫ the 12 ms window
+    let (staggered, _) = run_eight_eo(sc, frames);
+    assert!(
+        staggered.aggregate.mean_batch_size < aligned.aggregate.mean_batch_size,
+        "staggered clocks must break up batches: {:.2} vs {:.2}",
+        staggered.aggregate.mean_batch_size,
+        aligned.aggregate.mean_batch_size
+    );
+    assert!(aligned.aggregate.mean_batch_size > 6.0, "aligned fleet batches nearly whole");
+}
+
+// ---------------------------------------------------------------------------
+// Bit-for-bit determinism of the event path (same seeds, same schedule).
+// ---------------------------------------------------------------------------
+#[test]
+fn event_scheduler_is_deterministic() {
+    let run = || run_eight_eo(batched(AdmissionPolicy::WeightedFair), 120);
+    let (fs_a, eng_a) = run();
+    let (fs_b, eng_b) = run();
+    assert_eq!(fs_a.aggregate.mean_delay_ms, fs_b.aggregate.mean_delay_ms);
+    assert_eq!(fs_a.p95_queue_wait_ms, fs_b.p95_queue_wait_ms);
+    for (a, b) in eng_a.sessions().iter().zip(eng_b.sessions()) {
+        for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+            assert_eq!(ra.delay_ms, rb.delay_ms, "t={}", ra.t);
+            assert_eq!(ra.queue_wait_ms, rb.queue_wait_ms, "t={}", ra.t);
+            assert_eq!(ra.batch_size, rb.batch_size, "t={}", ra.t);
+        }
+    }
+}
