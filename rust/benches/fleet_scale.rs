@@ -1,0 +1,123 @@
+//! Fleet-scale throughput sweep: workers × sessions (§Perf, the sharded
+//! engine's acceptance exhibit).
+//!
+//! For each scenario the bench serves the same deterministic fleet —
+//! heterogeneous per-session uplinks into one contended edge, one
+//! μLinUCB learner per session — through the engine at 1/2/4/8 workers
+//! and reports frames/sec plus speedup vs the 1-worker baseline.  The
+//! sharded engine is bit-identical at every worker count (pinned in
+//! `rust/tests/fleet.rs`), so this sweep measures *only* wall-clock
+//! scaling, never behaviour drift.
+//!
+//! Results append to `bench_results/fleet_scale.json` so the perf
+//! trajectory is tracked from this PR on; CI runs the sweep in smoke
+//! mode (`BENCH_SAMPLES=3`) and uploads the artifact.  Speedups are
+//! hardware-bound: a W-worker sweep cannot beat the host's core count
+//! (recorded as `host_cores` in the artifact).
+
+use ans::bandit;
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::FrameSource;
+use ans::edge::{AdmissionPolicy, SchedulerConfig};
+use ans::models::zoo;
+use ans::simulator::{scenario, Contention, DEVICE_MAXN, EDGE_GPU};
+use ans::util::bench::Bench;
+use ans::util::json::{obj, Json};
+use std::time::Instant;
+
+const WORKERS: &[usize] = &[1, 2, 4, 8];
+const SESSIONS: &[usize] = &[16, 64, 256];
+/// Total session-frames per run, held roughly constant across fleet
+/// sizes so every cell does comparable work.
+const FRAME_BUDGET: usize = 40_000;
+
+fn build_engine(sessions: usize, workers: usize, scheduler: SchedulerConfig) -> Engine {
+    let net = zoo::partnet();
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(2, 0.25),
+        ingress_mbps: Some(400.0),
+        scheduler,
+        workers,
+        ..Default::default()
+    });
+    let rounds = (FRAME_BUDGET / sessions).max(20);
+    for env in scenario::fleet(net.clone(), sessions, 12.0, 7) {
+        let policy =
+            bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, rounds, None, None)
+                .expect("known policy");
+        eng.add_session(policy, env, FrameSource::uniform());
+    }
+    eng
+}
+
+/// Serve the scenario once; returns frames/sec over the timed run.
+fn serve_once(sessions: usize, workers: usize, scheduler: &SchedulerConfig) -> f64 {
+    let rounds = (FRAME_BUDGET / sessions).max(20);
+    let mut eng = build_engine(sessions, workers, scheduler.clone());
+    let start = Instant::now();
+    eng.run(rounds);
+    let secs = start.elapsed().as_secs_f64();
+    (sessions * rounds) as f64 / secs.max(1e-9)
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let samples = b.samples.max(1);
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "fleet_scale: {} sample(s) per cell, host has {} core(s); speedup is bounded by cores",
+        samples, host_cores
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut sweep = |label: &str, scheduler: SchedulerConfig, sessions_list: &[usize]| {
+        for &sessions in sessions_list {
+            let name = format!("fleet_scale/{label}_s{sessions}");
+            if !b.enabled(&name) {
+                continue;
+            }
+            let mut base_fps = 0.0;
+            for &workers in WORKERS {
+                // Best-of-samples: throughput benches want the least
+                // noisy estimate of the machine's capability.
+                let mut best = 0.0_f64;
+                for _ in 0..samples {
+                    best = best.max(serve_once(sessions, workers, &scheduler));
+                }
+                if workers == 1 {
+                    base_fps = best;
+                }
+                let speedup = if base_fps > 0.0 { best / base_fps } else { 1.0 };
+                println!(
+                    "{name:<40} workers {workers}  {best:>12.0} frames/s  speedup x{speedup:.2}"
+                );
+                rows.push(obj(vec![
+                    ("scenario", Json::from(label)),
+                    ("sessions", Json::from(sessions)),
+                    ("workers", Json::from(workers)),
+                    ("frames_per_sec", Json::from(best)),
+                    ("speedup_vs_1_worker", Json::from(speedup)),
+                ]));
+            }
+        }
+    };
+
+    // The dense per-frame path (lockstep rounds) is the scaling story;
+    // one event-driven cell shows the scheduler path scales too.
+    sweep("lockstep", SchedulerConfig::lockstep_fifo(), SESSIONS);
+    let mut edf = SchedulerConfig::event(AdmissionPolicy::Edf);
+    edf.batch_window_ms = 4.0;
+    sweep("edf_batched", edf, &[64]);
+
+    let doc = obj(vec![
+        ("bench", Json::from("fleet_scale")),
+        ("host_cores", Json::from(host_cores)),
+        ("samples", Json::from(samples)),
+        ("frame_budget", Json::from(FRAME_BUDGET)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").expect("creating bench_results/");
+    std::fs::write("bench_results/fleet_scale.json", doc.to_string())
+        .expect("writing bench_results/fleet_scale.json");
+    println!("scaling sweep JSON -> bench_results/fleet_scale.json");
+}

@@ -8,10 +8,20 @@
 use ans::bandit::linalg::RidgeState;
 use ans::bandit::policy::{FrameContext, Privileged};
 use ans::bandit::{LinUcb, Policy};
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::FrameSource;
 use ans::models::{features, zoo, FeatureScale, CONTEXT_DIM};
+use ans::simulator::Contention;
+use ans::util::alloc::{allocations, CountingAllocator};
 use ans::util::bench::Bench;
 use ans::util::rng::Rng;
 use ans::video::{ssim, stream::VideoStream};
+
+/// Every allocation in this bench binary is counted, which is what lets
+/// the steady-state sections below *assert* zero allocs per frame (the
+/// §Perf acceptance bar) instead of merely timing them.
+#[global_allocator]
+static ALLOC_COUNTER: CountingAllocator = CountingAllocator;
 
 fn main() {
     let mut b = Bench::from_env().with_samples(50);
@@ -93,6 +103,68 @@ fn main() {
         tt += 1;
         p
     });
+
+    // --- allocation audit ------------------------------------------------
+    // The acceptance bar: zero heap allocations per frame on the
+    // steady-state select/observe path.  Warm every scratch buffer
+    // first, then count allocations across a long run and assert the
+    // delta is exactly zero.
+    let p_max = net.num_partitions();
+    let mut audit_pol = LinUcb::paper_default(1_000_000);
+    let mut audit_env = ans::simulator::Environment::simple(zoo::vgg16(), 16.0, 11);
+    let frame = |pol: &mut LinUcb, env: &mut ans::simulator::Environment, t: usize| {
+        env.tick(t);
+        let ctx = FrameContext {
+            t,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+        };
+        let p = pol.select(&ctx);
+        if p != p_max {
+            let d = env.observe_edge_delay(p);
+            pol.observe(p, &contexts[p], d);
+        }
+    };
+    for t in 0..256 {
+        frame(&mut audit_pol, &mut audit_env, t); // warm-up: fills scratch
+    }
+    let before = allocations();
+    let audit_frames = 4096usize;
+    for t in 256..256 + audit_frames {
+        frame(&mut audit_pol, &mut audit_env, t);
+    }
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} frames",
+        "alloc/select_observe_steady_state", delta, audit_frames
+    );
+    assert_eq!(delta, 0, "steady-state select/observe must not allocate");
+
+    // Same audit through the full engine round (lockstep, contended,
+    // shared ingress — every per-round scratch buffer in play).
+    let mut eng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.5),
+        ingress_mbps: Some(200.0),
+        ..Default::default()
+    });
+    let audit_rounds = 512;
+    for i in 0..16 {
+        let env = ans::simulator::Environment::simple(zoo::vgg16(), 10.0 + i as f64, 20 + i as u64);
+        let pol = LinUcb::paper_default(1_000_000);
+        eng.add_session(Box::new(pol), env, FrameSource::uniform());
+    }
+    eng.reserve(64 + audit_rounds);
+    eng.run(64); // warm-up: scratch + record buffers at capacity
+    let before = allocations();
+    eng.run(audit_rounds);
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} rounds x 16 sessions",
+        "alloc/engine_lockstep_steady_state", delta, audit_rounds
+    );
+    assert_eq!(delta, 0, "steady-state engine rounds must not allocate");
 
     b.write_csv("hotpath.csv").expect("writing bench_results/hotpath.csv");
 }

@@ -78,8 +78,17 @@ impl Mat {
     /// Cholesky factorization M = LLᵀ (M must be symmetric positive
     /// definite).  Returns the lower factor; errors on non-PD input.
     pub fn cholesky(&self) -> Result<Mat, String> {
+        let mut l = Mat::zeros(self.d);
+        self.cholesky_into(&mut l)?;
+        Ok(l)
+    }
+
+    /// [`Mat::cholesky`] into a caller-provided factor (allocation-free;
+    /// `l` is fully overwritten).  Same math, same bits.
+    pub fn cholesky_into(&self, l: &mut Mat) -> Result<(), String> {
         let d = self.d;
-        let mut l = Mat::zeros(d);
+        assert_eq!(l.d, d, "factor must match the matrix dimension");
+        l.data.fill(0.0);
         for i in 0..d {
             for j in 0..=i {
                 let mut sum = self.at(i, j);
@@ -96,32 +105,23 @@ impl Mat {
                 }
             }
         }
-        Ok(l)
+        Ok(())
     }
 
     /// Solve M x = rhs via Cholesky (the property-test oracle).
     pub fn solve(&self, rhs: &[f64]) -> Result<Vec<f64>, String> {
-        let l = self.cholesky()?;
-        let d = self.d;
-        // Forward: L y = rhs.
-        let mut y = vec![0.0; d];
-        for i in 0..d {
-            let mut sum = rhs[i];
-            for k in 0..i {
-                sum -= l.at(i, k) * y[k];
-            }
-            y[i] = sum / l.at(i, i);
-        }
-        // Backward: Lᵀ x = y.
-        let mut x = vec![0.0; d];
-        for i in (0..d).rev() {
-            let mut sum = y[i];
-            for k in i + 1..d {
-                sum -= l.at(k, i) * x[k];
-            }
-            x[i] = sum / l.at(i, i);
-        }
+        let mut x = vec![0.0; self.d];
+        self.solve_into(rhs, &mut x)?;
         Ok(x)
+    }
+
+    /// Solve M x = rhs into a caller-provided buffer — the substitution
+    /// passes run in place (`out` holds y, then x), so only the Cholesky
+    /// factor itself allocates.  Bit-identical to [`Mat::solve`].
+    pub fn solve_into(&self, rhs: &[f64], out: &mut [f64]) -> Result<(), String> {
+        let l = self.cholesky()?;
+        solve_with_factor(&l, rhs, out);
+        Ok(())
     }
 
     /// Dense inverse via Cholesky solves (oracle / non-hot-path use).
@@ -160,6 +160,31 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// Two-pass triangular solve L Lᵀ x = rhs given the lower factor `l`,
+/// in place in `out` (allocation-free; shared by [`Mat::solve_into`] and
+/// the ridge state's periodic exact refresh).
+pub fn solve_with_factor(l: &Mat, rhs: &[f64], out: &mut [f64]) {
+    let d = l.d;
+    assert_eq!(rhs.len(), d);
+    assert_eq!(out.len(), d);
+    // Forward: L y = rhs (y lands in `out`).
+    for i in 0..d {
+        let mut sum = rhs[i];
+        for k in 0..i {
+            sum -= l.at(i, k) * out[k];
+        }
+        out[i] = sum / l.at(i, i);
+    }
+    // Backward: Lᵀ x = y, in place (entries above i are already x).
+    for i in (0..d).rev() {
+        let mut sum = out[i];
+        for k in i + 1..d {
+            sum -= l.at(k, i) * out[k];
+        }
+        out[i] = sum / l.at(i, i);
+    }
+}
+
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -186,6 +211,12 @@ pub struct RidgeState {
     pub b: Vec<f64>,
     /// Scratch buffer (A⁻¹x) reused across updates to avoid allocation.
     scratch: Vec<f64>,
+    /// Scratch Cholesky factor + column buffers for the periodic exact
+    /// refresh, so even the every-64-ops maintenance path stays
+    /// allocation-free (the hotpath bench asserts zero allocs/frame).
+    chol_scratch: Mat,
+    rhs_scratch: Vec<f64>,
+    col_scratch: Vec<f64>,
     /// Rank-1 operations since the last exact refresh.
     ops_since_refresh: usize,
 }
@@ -202,13 +233,28 @@ impl RidgeState {
             a_inv: Mat::scaled_identity(d, 1.0 / beta),
             b: vec![0.0; d],
             scratch: vec![0.0; d],
+            chol_scratch: Mat::zeros(d),
+            rhs_scratch: vec![0.0; d],
+            col_scratch: vec![0.0; d],
             ops_since_refresh: 0,
         }
     }
 
     /// Exact refresh of A⁻¹ from A (called periodically and on demand).
+    /// Column-by-column Cholesky solves through the scratch factor —
+    /// the same math (and bits) as `Mat::inverse`, without allocating.
     pub fn refresh_inverse(&mut self) {
-        self.a_inv = self.a.inverse().expect("A must stay positive definite");
+        self.a
+            .cholesky_into(&mut self.chol_scratch)
+            .expect("A must stay positive definite");
+        for c in 0..self.d {
+            self.rhs_scratch.fill(0.0);
+            self.rhs_scratch[c] = 1.0;
+            solve_with_factor(&self.chol_scratch, &self.rhs_scratch, &mut self.col_scratch);
+            for r in 0..self.d {
+                self.a_inv.data[r * self.d + c] = self.col_scratch[r];
+            }
+        }
         self.ops_since_refresh = 0;
     }
 
@@ -228,9 +274,9 @@ impl RidgeState {
         for (bi, xi) in self.b.iter_mut().zip(x) {
             *bi += xi * y;
         }
-        let ax = self.a_inv.matvec(x);
-        let denom = 1.0 + dot(x, &ax);
-        self.scratch.copy_from_slice(&ax);
+        // A⁻¹x lands in the reused scratch buffer (no per-update alloc).
+        self.a_inv.matvec_into(x, &mut self.scratch);
+        let denom = 1.0 + dot(x, &self.scratch);
         for r in 0..self.d {
             for c in 0..self.d {
                 self.a_inv.data[r * self.d + c] -= self.scratch[r] * self.scratch[c] / denom;
@@ -254,15 +300,14 @@ impl RidgeState {
         for (bi, xi) in self.b.iter_mut().zip(x) {
             *bi -= xi * y;
         }
-        let ax = self.a_inv.matvec(x);
-        let denom = 1.0 - dot(x, &ax);
+        self.a_inv.matvec_into(x, &mut self.scratch);
+        let denom = 1.0 - dot(x, &self.scratch);
         if denom <= 1e-9 {
             // Drifted inverse made the downdate look degenerate; A itself is
             // already downdated above, so an exact refresh restores truth.
             self.refresh_inverse();
             return;
         }
-        self.scratch.copy_from_slice(&ax);
         for r in 0..self.d {
             for c in 0..self.d {
                 self.a_inv.data[r * self.d + c] += self.scratch[r] * self.scratch[c] / denom;
@@ -279,6 +324,20 @@ impl RidgeState {
     /// θ̂ = A⁻¹ b into a caller-provided buffer (hot path).
     pub fn theta_into(&self, out: &mut [f64]) {
         self.a_inv.matvec_into(&self.b, out);
+    }
+
+    /// θ̂ᵀx = bᵀA⁻¹x without materializing θ̂ — the allocation-free
+    /// per-frame prediction path (`&self`, no buffer needed).  A⁻¹ is
+    /// symmetric, so this equals `dot(&theta(), x)` up to floating-point
+    /// summation order (the property test pins them to 1e-9).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.d);
+        let mut acc = 0.0;
+        for (r, br) in self.b.iter().enumerate() {
+            let row = &self.a_inv.data[r * self.d..(r + 1) * self.d];
+            acc += br * dot(row, x);
+        }
+        acc
     }
 
     /// Confidence width² = xᵀ A⁻¹ x (non-negative for PD A by construction).
@@ -491,6 +550,69 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_predict_matches_materialized_theta() {
+        // The allocation-free bᵀA⁻¹x path equals dot(θ̂, x) to summation
+        // -order tolerance, for any update history and probe.
+        forall(
+            46,
+            40,
+            |rng| {
+                let n = 1 + rng.below(20);
+                UpdateSeq(
+                    (0..n)
+                        .map(|_| (random_vec(rng, 7), rng.uniform(0.0, 100.0)))
+                        .collect(),
+                )
+            },
+            |seq| {
+                let mut st = RidgeState::new(7, 0.5);
+                for (x, y) in &seq.0 {
+                    st.update(x, *y);
+                }
+                let theta = st.theta();
+                for (x, _) in &seq.0 {
+                    let direct = st.predict(x);
+                    let via_theta = dot(&theta, x);
+                    ensure_close(direct, via_theta, 1e-9, "predict vs theta·x")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn refresh_inverse_matches_direct_inverse() {
+        // The allocation-free scratch refresh is the same math, same
+        // bits, as materializing A⁻¹ through Mat::inverse.
+        let mut rng = Rng::new(23);
+        let mut st = RidgeState::new(7, 0.5);
+        for _ in 0..10 {
+            let x = random_vec(&mut rng, 7);
+            let y = rng.uniform(0.0, 50.0);
+            st.update(&x, y);
+        }
+        let direct = st.a.inverse().unwrap();
+        st.refresh_inverse();
+        assert_eq!(st.a_inv.data, direct.data, "scratch refresh must be bit-identical");
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let mut rng = Rng::new(17);
+        let d = 6;
+        let mut a = Mat::scaled_identity(d, 0.25);
+        for _ in 0..10 {
+            let x = random_vec(&mut rng, d);
+            a.rank1_update(&x);
+        }
+        let rhs = random_vec(&mut rng, d);
+        let alloc = a.solve(&rhs).unwrap();
+        let mut buf = vec![0.0; d];
+        a.solve_into(&rhs, &mut buf).unwrap();
+        assert_eq!(alloc, buf, "in-place substitution must be bit-identical");
     }
 
     #[test]

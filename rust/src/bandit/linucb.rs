@@ -40,8 +40,11 @@ pub struct LinUcb {
     forced: Option<ForcedSchedule>,
     /// Scratch: scores per arm, reused across frames (no hot-path alloc).
     scores: Vec<f64>,
-    /// Scratch: θ̂ buffer, reused across frames (no hot-path alloc).
-    theta_scratch: Vec<f64>,
+    /// Cached θ̂, refreshed on every model mutation (select-time scoring,
+    /// observe, drift reset).  Doubles as the select-phase scratch buffer
+    /// and the borrow source for [`LinUcb::theta`]/snapshots — no
+    /// per-frame or per-snapshot solve + allocation.
+    theta_cache: Vec<f64>,
     /// Number of feedback observations incorporated.
     n_obs: usize,
     /// Sliding-window length in FRAMES: only observations made within the
@@ -114,7 +117,7 @@ impl LinUcb {
             use_weights: false,
             forced: None,
             scores: Vec::new(),
-            theta_scratch: vec![0.0; d],
+            theta_cache: vec![0.0; d],
             n_obs: 0,
             window: None,
             history: std::collections::VecDeque::new(),
@@ -138,7 +141,7 @@ impl LinUcb {
             use_weights: true,
             forced: None,
             scores: Vec::new(),
-            theta_scratch: vec![0.0; d],
+            theta_cache: vec![0.0; d],
             n_obs: 0,
             window: None,
             history: std::collections::VecDeque::new(),
@@ -162,7 +165,7 @@ impl LinUcb {
             use_weights: true,
             forced: Some(ForcedSchedule::known(horizon, mu)),
             scores: Vec::new(),
-            theta_scratch: vec![0.0; d],
+            theta_cache: vec![0.0; d],
             n_obs: 0,
             window: None,
             history: std::collections::VecDeque::new(),
@@ -186,7 +189,7 @@ impl LinUcb {
             use_weights: true,
             forced: Some(ForcedSchedule::phase_doubling(t0, mu)),
             scores: Vec::new(),
-            theta_scratch: vec![0.0; d],
+            theta_cache: vec![0.0; d],
             n_obs: 0,
             window: None,
             history: std::collections::VecDeque::new(),
@@ -256,11 +259,13 @@ impl LinUcb {
         self.drift_ema = 0.0;
         self.drift_samples = 0;
         self.resets += 1;
+        self.ridge.theta_into(&mut self.theta_cache);
     }
 
-    /// Current estimate θ̂ (diagnostics / EXPERIMENTS.md).
-    pub fn theta(&self) -> Vec<f64> {
-        self.ridge.theta()
+    /// Current estimate θ̂, borrowed from the cached buffer (refreshed on
+    /// every model mutation — no per-call solve or allocation).
+    pub fn theta(&self) -> &[f64] {
+        &self.theta_cache
     }
 
     /// Number of feedback observations incorporated so far.
@@ -276,9 +281,8 @@ impl LinUcb {
 
 impl LinUcb {
     fn score_arms(&mut self, ctx: &FrameContext) {
-        // Allocation-free: θ̂ lands in a reused scratch buffer.
-        let mut theta = std::mem::take(&mut self.theta_scratch);
-        self.ridge.theta_into(&mut theta);
+        // Allocation-free: θ̂ lands in the reused cache buffer.
+        self.ridge.theta_into(&mut self.theta_cache);
         let l_t = if self.use_weights { ctx.weight } else { 0.0 };
         let conf_scale = (1.0 - l_t).max(0.0);
         let alpha = if self.auto_scale {
@@ -290,11 +294,10 @@ impl LinUcb {
         };
         self.scores.clear();
         for (p, x) in ctx.contexts.iter().enumerate() {
-            let pred = dot(&theta, x);
+            let pred = dot(&self.theta_cache, x);
             let width = (conf_scale * self.ridge.confidence_sq(x)).max(0.0).sqrt();
             self.scores.push(ctx.front_delays[p] + pred - alpha * width);
         }
-        self.theta_scratch = theta;
     }
 }
 
@@ -308,13 +311,20 @@ impl Policy for LinUcb {
         self.current_frame = ctx.t;
         // Frame-aged eviction: drop observations older than the window.
         if let Some(w) = self.window {
+            let mut evicted = false;
             while let Some(&(x, y, t0)) = self.history.front() {
                 if t0 + w <= ctx.t {
                     self.ridge.downdate(&x, y);
                     self.history.pop_front();
+                    evicted = true;
                 } else {
                     break;
                 }
+            }
+            if evicted {
+                // Keep the θ̂ cache in lockstep with the model even when
+                // the warm-up branch below returns before scoring.
+                self.ridge.theta_into(&mut self.theta_cache);
             }
         }
         // Warm-up sweep: sample every off-device arm once, in order.
@@ -343,10 +353,11 @@ impl Policy for LinUcb {
 
     fn observe(&mut self, _p: usize, x: &FeatureVector, edge_delay_ms: f64) {
         // Drift check BEFORE the update: how wrong was the current model
-        // about this observation?
+        // about this observation?  `RidgeState::predict` is the
+        // allocation-free bᵀA⁻¹x form of dot(θ̂, x).
         if let Some(threshold) = self.drift_threshold {
             if self.warmup_next.is_none() && self.n_obs >= 5 {
-                let pred = dot(&self.ridge.theta(), x);
+                let pred = self.ridge.predict(x);
                 let scale = edge_delay_ms.abs().max(pred.abs()).max(10.0);
                 let rel = (edge_delay_ms - pred).abs() / scale;
                 self.drift_ema = if self.drift_samples == 0 {
@@ -361,6 +372,7 @@ impl Policy for LinUcb {
                     // fresh model.
                     self.ridge.update(x, edge_delay_ms);
                     self.n_obs = 1;
+                    self.ridge.theta_into(&mut self.theta_cache);
                     return;
                 }
             }
@@ -370,10 +382,11 @@ impl Policy for LinUcb {
         if self.window.is_some() {
             self.history.push_back((*x, edge_delay_ms, self.current_frame));
         }
+        self.ridge.theta_into(&mut self.theta_cache);
     }
 
     fn predict_edge_delay(&self, x: &FeatureVector) -> Option<f64> {
-        Some(dot(&self.ridge.theta(), x))
+        Some(self.ridge.predict(x))
     }
 
     fn snapshot(&self) -> PolicySnapshot {
@@ -381,7 +394,8 @@ impl Policy for LinUcb {
             name: self.name.clone(),
             observations: self.n_obs,
             resets: self.resets,
-            theta: Some(self.ridge.theta()),
+            // One clone of the cached buffer — no A⁻¹b solve per call.
+            theta: Some(self.theta_cache.clone()),
         }
     }
 }
@@ -563,6 +577,19 @@ mod tests {
             privileged: priv_,
         };
         assert_eq!(pol.select(&c_exploit), 0);
+    }
+
+    #[test]
+    fn theta_cache_tracks_the_model() {
+        // The borrowed cache equals a fresh A⁻¹b solve at every exit
+        // point of the policy (here: after a long select/observe run).
+        let mut env = Environment::simple(zoo::vgg16(), 16.0, 5);
+        let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, 120);
+        run(&mut pol, &mut env, 120);
+        let fresh = pol.ridge.theta();
+        assert_eq!(pol.theta(), &fresh[..], "cache must equal a fresh solve");
+        let snap = pol.snapshot();
+        assert_eq!(snap.theta.as_deref(), Some(pol.theta()));
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub struct Config {
     pub artifacts_dir: PathBuf,
     /// Multi-session serving engine knobs (`ans fleet`).
     pub sessions: usize,
+    /// Worker-pool size for the sharded engine phases (1 = single
+    /// threaded; output is bit-identical at every value).
+    pub workers: usize,
     /// Concurrent offloaded frames the edge absorbs with no slowdown.
     pub contention_capacity: usize,
     /// Edge load-multiplier growth per excess concurrent frame.
@@ -87,6 +90,7 @@ impl Default for Config {
             max_batch: 4,
             artifacts_dir: crate::runtime::artifacts::default_dir(),
             sessions: 1,
+            workers: 1,
             contention_capacity: 1,
             contention_slope: 0.5,
             ingress_mbps: 0.0,
@@ -136,6 +140,7 @@ impl Config {
                 "max_batch" => self.max_batch = val.as_usize()?,
                 "artifacts_dir" => self.artifacts_dir = PathBuf::from(val.as_str()?),
                 "sessions" => self.sessions = val.as_usize()?,
+                "workers" => self.workers = val.as_usize()?,
                 "contention_capacity" => self.contention_capacity = val.as_usize()?,
                 "contention_slope" => self.contention_slope = val.as_f64()?,
                 "ingress_mbps" => self.ingress_mbps = val.as_f64()?,
@@ -180,6 +185,7 @@ impl Config {
             self.artifacts_dir = PathBuf::from(v);
         }
         self.sessions = args.usize_or("sessions", self.sessions)?;
+        self.workers = args.usize_or("workers", self.workers)?;
         self.contention_capacity =
             args.usize_or("contention-capacity", self.contention_capacity)?;
         self.contention_slope = args.f64_or("contention-slope", self.contention_slope)?;
@@ -229,6 +235,11 @@ impl Config {
             self.edge
         );
         anyhow::ensure!(self.sessions >= 1, "sessions must be ≥ 1");
+        anyhow::ensure!(self.workers >= 1, "workers must be ≥ 1");
+        anyhow::ensure!(
+            self.workers <= 256,
+            "workers must be ≤ 256 (one OS thread each)"
+        );
         anyhow::ensure!(self.contention_capacity >= 1, "contention-capacity must be ≥ 1");
         anyhow::ensure!(
             self.contention_slope >= 0.0 && self.contention_slope.is_finite(),
@@ -418,9 +429,19 @@ mod tests {
         assert_eq!(cfg.contention_capacity, 2);
         assert_eq!(cfg.contention_slope, 0.35);
         assert_eq!(cfg.ingress_mbps, 200.0);
+        assert_eq!(cfg.workers, 1, "single-threaded by default");
         assert!(Config::from_args(&args("fleet --sessions 0")).is_err());
         assert!(Config::from_args(&args("fleet --contention-capacity 0")).is_err());
         assert!(Config::from_args(&args("fleet --contention-slope -1")).is_err());
+    }
+
+    #[test]
+    fn workers_knob_parses_and_validates() {
+        let cfg = Config::from_args(&args("fleet --sessions 8 --workers 4")).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert!(Config::from_args(&args("fleet --workers 0")).is_err());
+        assert!(Config::from_args(&args("fleet --workers 10000")).is_err());
+        assert!(Config::from_args(&args("fleet --workers two")).is_err());
     }
 
     #[test]

@@ -33,17 +33,33 @@
 //! multiplicative factor), the waiting room may reject overflow back to
 //! on-device execution, and executor backlog carries across rounds so
 //! offloads contend when they overlap in *time*, not round index.
+//!
+//! Both phases are **sharded** across a fixed-size worker pool
+//! ([`EngineConfig::workers`]; DESIGN.md §8): sessions split into
+//! contiguous ranges, each worker advances its range independently, and
+//! everything cross-session — the shared-ingress pass, edge-scheduler
+//! admission, batch formation — runs on the main thread in canonical
+//! *(arrival time, session id)* order via the deterministic
+//! [`EventQueue`].  Per-session RNG streams ([`Rng::stream_seed`]) and
+//! the canonical merge make the sharded engine bit-identical to the
+//! single-threaded one at any worker count (pinned in
+//! `rust/tests/fleet.rs` and `rust/tests/scheduler.rs`).
 
 use super::metrics::{FleetSummary, FrameRecord, Metrics, Summary};
+use super::pool::{shard_len, WorkerPool};
 use crate::bandit::policy::argmin;
 use crate::bandit::{FrameContext, Policy, PolicySnapshot, Privileged};
 use crate::config::Config;
-use crate::edge::{EdgeJob, EdgeScheduler, Outcome, QueueStats, SchedulerConfig};
+use crate::edge::{
+    EdgeJob, EdgeScheduler, EventQueue, Outcome, QueueStats, Scheduled, SchedulerConfig,
+};
 use crate::models::{features, FeatureScale, FeatureVector};
 use crate::simulator::{Contention, Environment, SharedIngress};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 use crate::video::{Frame, KeyframeDetector, VideoStream, Weights};
+use std::sync::Mutex;
+use std::time::Instant;
 
 /// How frame weights L_t are produced for one session.
 pub enum FrameSource {
@@ -307,6 +323,14 @@ pub struct EngineConfig {
     /// bit-identically; anything else routes offloads through the
     /// event-driven [`EdgeScheduler`].
     pub scheduler: SchedulerConfig,
+    /// Worker-pool size for the sharded select/observe phases (1 = run
+    /// everything on the calling thread).  Sessions shard across workers
+    /// in contiguous ranges; because every session owns its policy, RNG
+    /// streams, and metrics, and all cross-session coupling happens on
+    /// the main thread in canonical (timestamp, session) order, the
+    /// engine's output is **bit-identical at every worker count**
+    /// (pinned in `rust/tests/fleet.rs`; DESIGN.md §8).
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -316,8 +340,157 @@ impl Default for EngineConfig {
             contention: Contention::none(),
             ingress_mbps: None,
             scheduler: SchedulerConfig::lockstep_fifo(),
+            workers: 1,
         }
     }
+}
+
+/// `(queue_wait_ms, batch_size, edge leg)` — one session's realize input.
+type Leg = (f64, usize, EdgeLeg);
+
+/// Per-round scratch buffers, reused across rounds so a steady-state
+/// single-threaded (`workers = 1`) engine round performs no heap
+/// allocation on the select/observe path — asserted by the hotpath
+/// bench's allocation counter.  Sharded rounds additionally build O(W)
+/// shard handles per phase (plus channel nodes in the pool handoff);
+/// see DESIGN.md §8 scaling caveats.
+#[derive(Default)]
+struct StepScratch {
+    decisions: Vec<Decision>,
+    /// Canonical offload-merge queue: entries are `(session, ψ bytes)`
+    /// keyed by NIC-arrival time.  Pushing in session order makes ties
+    /// resolve by session id — the deterministic merge order every
+    /// worker count reproduces.
+    arrivals: EventQueue<(usize, usize)>,
+    legs: Vec<Leg>,
+    tx_ms: Vec<f64>,
+    ingress_wait: Vec<f64>,
+    rejected: Vec<bool>,
+    outcomes: Vec<Option<Outcome>>,
+    scheduled: Vec<Scheduled>,
+}
+
+/// Select step for one session (advance env/source, ask the policy).
+fn session_select(
+    s: &mut Session,
+    t: usize,
+    k_estimate: usize,
+    contention: &Contention,
+) -> Decision {
+    let Session { policy, env, source, front, contexts, expected, .. } = s;
+    select_one(
+        policy.as_mut(),
+        env,
+        source,
+        front,
+        contexts,
+        expected,
+        t,
+        k_estimate,
+        contention,
+    )
+}
+
+/// Realize step for one session (draw the noisy delay, learn, record).
+fn session_realize(
+    s: &mut Session,
+    d: &Decision,
+    leg: &Leg,
+    t: usize,
+    k: usize,
+    contention: &Contention,
+) {
+    let Session { policy, env, metrics, front, contexts, expected, .. } = s;
+    realize_one(
+        policy.as_mut(),
+        env,
+        metrics,
+        front,
+        contexts,
+        expected,
+        d,
+        t,
+        k,
+        contention,
+        leg.0,
+        leg.1,
+        leg.2,
+    );
+}
+
+/// Run the select phase across all sessions, sharded over the worker
+/// pool when one exists.  The phase is independent per session (each
+/// owns its policy, environment RNG, and frame source), so any worker
+/// count yields bit-identical decisions.
+fn select_phase(
+    pool: Option<&WorkerPool>,
+    sessions: &mut [Session],
+    decisions: &mut [Decision],
+    t: usize,
+    k_estimate: usize,
+    contention: Contention,
+) {
+    debug_assert_eq!(sessions.len(), decisions.len());
+    let Some(pool) = pool else {
+        for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
+            *d = session_select(s, t, k_estimate, &contention);
+        }
+        return;
+    };
+    let per = shard_len(sessions.len(), pool.workers());
+    let shards: Vec<_> = sessions
+        .chunks_mut(per)
+        .zip(decisions.chunks_mut(per))
+        .map(Mutex::new)
+        .collect();
+    pool.run(&|w| {
+        if let Some(shard) = shards.get(w) {
+            let mut guard = shard.lock().expect("select shard lock");
+            let (sessions, decisions) = &mut *guard;
+            for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
+                *d = session_select(s, t, k_estimate, &contention);
+            }
+        }
+    });
+}
+
+/// Run the observe/realize phase across all sessions, sharded over the
+/// worker pool when one exists.  All cross-session coupling (ingress
+/// queueing, the edge scheduler) has already been resolved into `legs`
+/// on the main thread, so this phase is again independent per session.
+#[allow(clippy::too_many_arguments)]
+fn observe_phase(
+    pool: Option<&WorkerPool>,
+    sessions: &mut [Session],
+    decisions: &[Decision],
+    legs: &[Leg],
+    t: usize,
+    k: usize,
+    contention: Contention,
+) {
+    debug_assert_eq!(sessions.len(), decisions.len());
+    debug_assert_eq!(sessions.len(), legs.len());
+    let Some(pool) = pool else {
+        for ((s, d), leg) in sessions.iter_mut().zip(decisions).zip(legs) {
+            session_realize(s, d, leg, t, k, &contention);
+        }
+        return;
+    };
+    let per = shard_len(sessions.len(), pool.workers());
+    let shards: Vec<_> = sessions
+        .chunks_mut(per)
+        .zip(decisions.chunks(per).zip(legs.chunks(per)))
+        .map(|(s, (d, l))| Mutex::new((s, d, l)))
+        .collect();
+    pool.run(&|w| {
+        if let Some(shard) = shards.get(w) {
+            let mut guard = shard.lock().expect("observe shard lock");
+            let (sessions, decisions, legs) = &mut *guard;
+            for ((s, d), leg) in sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()) {
+                session_realize(s, d, leg, t, k, &contention);
+            }
+        }
+    });
 }
 
 /// The multi-session serving engine (see module docs).
@@ -328,6 +501,11 @@ pub struct Engine {
     /// The event-driven edge server — `None` when the scheduler config
     /// degenerates to the PR 1 lockstep rounds.
     scheduler: Option<EdgeScheduler>,
+    /// Persistent worker pool for the sharded phases — `None` when
+    /// `cfg.workers <= 1` (every phase then runs inline).
+    pool: Option<WorkerPool>,
+    /// Reused per-round buffers (allocation-free steady state).
+    scratch: StepScratch,
     round: usize,
     /// Offload count of the previous round — the causal estimate every
     /// session selects under in the next round.
@@ -335,6 +513,9 @@ pub struct Engine {
     /// k_t per completed round (diagnostics; drives the reported
     /// contention factors).
     offload_counts: Vec<usize>,
+    /// Wall-clock time spent inside [`Engine::run`] (throughput
+    /// reporting; never feeds back into any simulated quantity).
+    serve_wall_ms: f64,
 }
 
 impl Engine {
@@ -345,14 +526,18 @@ impl Engine {
         } else {
             Some(EdgeScheduler::new(cfg.scheduler.clone(), cfg.contention))
         };
+        let pool = if cfg.workers > 1 { Some(WorkerPool::new(cfg.workers)) } else { None };
         Engine {
             cfg,
             sessions: Vec::new(),
             ingress,
             scheduler,
+            pool,
+            scratch: StepScratch::default(),
             round: 0,
             offloaders_last: 0,
             offload_counts: Vec::new(),
+            serve_wall_ms: 0.0,
         }
     }
 
@@ -406,38 +591,40 @@ impl Engine {
         let t = self.round;
         let k_estimate = self.offloaders_last;
         let contention = self.cfg.contention;
+        let n = self.sessions.len();
+        let mut scratch = std::mem::take(&mut self.scratch);
 
-        // Phase 1: every session picks a partition under last round's
-        // observed concurrency (the causal load estimate).
-        let mut decisions = Vec::with_capacity(self.sessions.len());
-        for s in &mut self.sessions {
-            let Session { policy, env, source, front, contexts, expected, .. } = s;
-            decisions.push(select_one(
-                policy.as_mut(),
-                env,
-                source,
-                front,
-                contexts,
-                expected,
-                t,
-                k_estimate,
-                &contention,
-            ));
-        }
+        // Phase 1 (sharded): every session picks a partition under last
+        // round's observed concurrency (the causal load estimate).
+        scratch.decisions.clear();
+        scratch.decisions.resize(
+            n,
+            Decision { p: 0, is_key: false, weight: 0.0, predicted_edge_ms: None },
+        );
+        select_phase(
+            self.pool.as_ref(),
+            &mut self.sessions,
+            &mut scratch.decisions,
+            t,
+            k_estimate,
+            contention,
+        );
 
         // Phase 2: the actual concurrency this round determines the edge
         // load everyone realizes.
-        let k = decisions
+        let k = scratch
+            .decisions
             .iter()
             .zip(&self.sessions)
             .filter(|(d, s)| d.p != s.env.num_partitions())
             .count();
 
         if self.scheduler.is_none() {
-            self.realize_lockstep(t, k, &decisions);
+            self.realize_lockstep(t, k, &mut scratch);
         } else {
-            self.realize_event(t, k, &decisions);
+            self.realize_event(t, k, &mut scratch);
         }
+        self.scratch = scratch;
 
         self.offloaders_last = k;
         self.offload_counts.push(k);
@@ -446,58 +633,52 @@ impl Engine {
 
     /// PR 1's lockstep realize phase, byte for byte: factor(k_t) on every
     /// environment, the arrival-ordered shared-ingress pass, then one
-    /// noisy draw per session in session order.
-    fn realize_lockstep(&mut self, t: usize, k: usize, decisions: &[Decision]) {
+    /// noisy draw per session — sharded across the pool, which preserves
+    /// the per-session draw order exactly (each session's RNG is its
+    /// own), so the result is identical at any worker count.
+    fn realize_lockstep(&mut self, t: usize, k: usize, scratch: &mut StepScratch) {
         let contention = self.cfg.contention;
         let now_ms = t as f64 * self.cfg.frame_interval_ms;
+        let n = self.sessions.len();
+        scratch.legs.clear();
+        scratch.legs.resize(n, (0.0, 1, EdgeLeg::Lockstep));
 
         // Shared-ingress pass, in *physical arrival order* (FIFO at the
         // edge NIC, independent of session index): each ψ_p arrives once
         // its front finished AND its bytes crossed the session's own
         // uplink (expected tx time; the noisy realization is drawn in
-        // realize_one on top of this queueing term).
-        let mut ingress_queue_ms = vec![0.0; self.sessions.len()];
+        // realize_one on top of this queueing term).  The merge order is
+        // canonical — arrival time, ties by session id — realized by
+        // pushing into the deterministic [`EventQueue`] in session order
+        // and popping in time order.
         if let Some(ingress) = &mut self.ingress {
-            let mut arrivals: Vec<(f64, usize, usize)> = self
-                .sessions
-                .iter()
-                .zip(decisions)
-                .enumerate()
-                .filter(|(_, (s, d))| d.p != s.env.num_partitions())
-                .map(|(i, (s, d))| {
-                    let bytes = s.env.psi_bytes(d.p);
-                    let tx = crate::simulator::tx_delay_ms(
-                        bytes,
-                        s.env.current_rate_mbps(),
-                        s.env.rtt_ms,
-                    );
-                    (now_ms + s.front[d.p] + tx, i, bytes)
-                })
-                .collect();
-            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            for (arrival_ms, i, bytes) in arrivals {
-                ingress_queue_ms[i] = ingress.consume(bytes, arrival_ms);
+            let queue = &mut scratch.arrivals;
+            for (i, (s, d)) in self.sessions.iter().zip(scratch.decisions.iter()).enumerate() {
+                if d.p == s.env.num_partitions() {
+                    continue;
+                }
+                let bytes = s.env.psi_bytes(d.p);
+                let tx = crate::simulator::tx_delay_ms(
+                    bytes,
+                    s.env.current_rate_mbps(),
+                    s.env.rtt_ms,
+                );
+                queue.push(now_ms + s.front[d.p] + tx, (i, bytes));
+            }
+            while let Some((arrival_ms, (i, bytes))) = queue.pop() {
+                scratch.legs[i].0 = ingress.consume(bytes, arrival_ms);
             }
         }
 
-        for (i, (s, d)) in self.sessions.iter_mut().zip(decisions).enumerate() {
-            let Session { policy, env, metrics, front, contexts, expected, .. } = s;
-            realize_one(
-                policy.as_mut(),
-                env,
-                metrics,
-                front,
-                contexts,
-                expected,
-                d,
-                t,
-                k,
-                &contention,
-                ingress_queue_ms[i],
-                1,
-                EdgeLeg::Lockstep,
-            );
-        }
+        observe_phase(
+            self.pool.as_ref(),
+            &mut self.sessions,
+            &scratch.decisions,
+            &scratch.legs,
+            t,
+            k,
+            contention,
+        );
     }
 
     /// Event-driven realize phase: offloads become [`EdgeJob`]s on the
@@ -507,71 +688,66 @@ impl Engine {
     /// delays — not a multiplicative factor — are the contention the
     /// bandits observe.  Executor backlog persists across rounds, so
     /// offloads contend when they overlap in *time*, not round index.
-    fn realize_event(&mut self, t: usize, k: usize, decisions: &[Decision]) {
+    ///
+    /// All shared state (ingress, waiting room, virtual clock) is
+    /// resolved here on the main thread in canonical (arrival time,
+    /// session id) merge order; only the final per-session noisy draw +
+    /// learn + record step fans out across the pool.
+    fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch) {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
-        let Engine { sessions, ingress, scheduler, cfg, .. } = self;
+        let Engine { sessions, ingress, scheduler, cfg, pool, .. } = self;
         let scheduler = scheduler.as_mut().expect("event path has a scheduler");
         let stagger = scheduler.cfg.stagger_ms;
         let deadline = scheduler.cfg.deadline_ms;
 
-        // NIC arrivals in physical order (same ordering rule as the
-        // lockstep ingress pass).
-        struct Arrival {
-            nic_ms: f64,
-            session: usize,
-            bytes: usize,
-            tx_ms: f64,
-            capture_ms: f64,
+        scratch.tx_ms.clear();
+        scratch.tx_ms.resize(n, 0.0);
+        scratch.ingress_wait.clear();
+        scratch.ingress_wait.resize(n, 0.0);
+        scratch.rejected.clear();
+        scratch.rejected.resize(n, false);
+        scratch.outcomes.clear();
+        scratch.outcomes.resize(n, None);
+
+        // NIC arrivals in physical order (same canonical merge as the
+        // lockstep ingress pass: arrival time, ties by session id).
+        let queue = &mut scratch.arrivals;
+        for (i, (s, d)) in sessions.iter().zip(scratch.decisions.iter()).enumerate() {
+            if d.p == s.env.num_partitions() {
+                continue;
+            }
+            let bytes = s.env.psi_bytes(d.p);
+            let tx =
+                crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
+            let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
+            scratch.tx_ms[i] = tx;
+            queue.push(capture + s.front[d.p] + tx, (i, bytes));
         }
-        let mut arrivals: Vec<Arrival> = sessions
-            .iter()
-            .zip(decisions.iter())
-            .enumerate()
-            .filter(|(_, (s, d))| d.p != s.env.num_partitions())
-            .map(|(i, (s, d))| {
-                let bytes = s.env.psi_bytes(d.p);
-                let tx =
-                    crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
-                let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
-                Arrival {
-                    nic_ms: capture + s.front[d.p] + tx,
-                    session: i,
-                    bytes,
-                    tx_ms: tx,
-                    capture_ms: capture,
-                }
-            })
-            .collect();
-        arrivals.sort_by(|a, b| a.nic_ms.total_cmp(&b.nic_ms).then(a.session.cmp(&b.session)));
 
         // Admission (before the payload spends shared-ingress bandwidth),
         // then ingress, then the waiting room.
-        let mut tx_ms = vec![0.0; n];
-        let mut ingress_wait = vec![0.0; n];
-        let mut was_rejected = vec![false; n];
-        for a in &arrivals {
-            let i = a.session;
-            tx_ms[i] = a.tx_ms;
+        while let Some((nic_ms, (i, bytes))) = queue.pop() {
             if !scheduler.has_room() {
                 scheduler.note_rejected();
-                was_rejected[i] = true;
+                scratch.rejected[i] = true;
                 continue;
             }
             let ing = match ingress.as_mut() {
-                Some(g) => g.consume(a.bytes, a.nic_ms),
+                Some(g) => g.consume(bytes, nic_ms),
                 None => 0.0,
             };
-            ingress_wait[i] = ing;
-            let d = &decisions[i];
+            scratch.ingress_wait[i] = ing;
+            let d = &scratch.decisions[i];
+            let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
             let submitted = scheduler.submit(EdgeJob {
                 session: i,
                 p: d.p,
-                bytes: a.bytes,
-                capture_ms: a.capture_ms,
-                arrival_ms: a.nic_ms + ing,
+                bytes,
+                capture_ms: capture,
+                arrival_ms: nic_ms + ing,
                 deadline_ms: if deadline.is_finite() {
-                    a.capture_ms + deadline
+                    capture + deadline
                 } else {
                     f64::INFINITY
                 },
@@ -582,54 +758,74 @@ impl Engine {
             debug_assert!(submitted, "has_room was checked");
         }
 
-        let mut outcomes: Vec<Option<Outcome>> = vec![None; n];
-        for (sess, o) in scheduler.drain() {
-            outcomes[sess] = Some(o);
+        scheduler.drain_scheduled_into(&mut scratch.scheduled);
+        for sch in &scratch.scheduled {
+            scratch.outcomes[sch.session] = Some(Outcome::Served {
+                queue_wait_ms: sch.queue_wait_ms,
+                service_ms: sch.service_ms,
+                batch_size: sch.batch_size,
+            });
         }
 
-        // Realize in session order so each session's noise stream draws
+        // Per-session leg resolution (cheap, read-only), then the
+        // sharded observe phase: each session's noise stream draws
         // deterministically, exactly one draw per offload attempt.
-        for (i, (s, d)) in sessions.iter_mut().zip(decisions).enumerate() {
-            let Session { policy, env, metrics, front, contexts, expected, .. } = s;
+        scratch.legs.clear();
+        for (i, (s, d)) in sessions.iter().zip(scratch.decisions.iter()).enumerate() {
             let p = d.p;
-            let (queue_wait, batch, leg) = if p == env.num_partitions() {
+            let leg = if p == s.env.num_partitions() {
                 (0.0, 1, EdgeLeg::Lockstep)
-            } else if was_rejected[i] {
-                let mean = tx_ms[i] + env.device_fallback_ms(p);
+            } else if scratch.rejected[i] {
+                let mean = scratch.tx_ms[i] + s.env.device_fallback_ms(p);
                 (0.0, 0, EdgeLeg::Event { mean_ms: mean, rejected: true })
             } else {
-                match outcomes[i] {
+                match scratch.outcomes[i] {
                     Some(Outcome::Served { queue_wait_ms, service_ms, batch_size }) => {
-                        let qw = ingress_wait[i] + queue_wait_ms;
-                        let mean = tx_ms[i] + qw + service_ms;
+                        let qw = scratch.ingress_wait[i] + queue_wait_ms;
+                        let mean = scratch.tx_ms[i] + qw + service_ms;
                         (qw, batch_size, EdgeLeg::Event { mean_ms: mean, rejected: false })
                     }
                     _ => unreachable!("every admitted offload is scheduled"),
                 }
             };
-            realize_one(
-                policy.as_mut(),
-                env,
-                metrics,
-                front,
-                contexts,
-                expected,
-                d,
-                t,
-                k,
-                &contention,
-                queue_wait,
-                batch,
-                leg,
-            );
+            scratch.legs.push(leg);
         }
+
+        observe_phase(
+            pool.as_ref(),
+            sessions,
+            &scratch.decisions,
+            &scratch.legs,
+            t,
+            k,
+            contention,
+        );
     }
 
-    /// Serve `rounds` frames per session.
+    /// Pre-size every per-session record buffer (and the k_t log) for
+    /// `rounds` more rounds, so steady-state serving never reallocates
+    /// on the hot path.  [`Engine::run`] calls this automatically.
+    pub fn reserve(&mut self, rounds: usize) {
+        for s in &mut self.sessions {
+            s.metrics.reserve(rounds);
+        }
+        self.offload_counts.reserve(rounds);
+    }
+
+    /// Serve `rounds` frames per session, accumulating wall-clock time
+    /// for throughput reporting ([`FleetSummary::frames_per_sec`]).
     pub fn run(&mut self, rounds: usize) {
+        self.reserve(rounds);
+        let start = Instant::now();
         for _ in 0..rounds {
             self.step();
         }
+        self.serve_wall_ms += start.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Wall-clock milliseconds spent serving inside [`Engine::run`].
+    pub fn serve_wall_ms(&self) -> f64 {
+        self.serve_wall_ms
     }
 
     /// Per-session and fleet-aggregate views of everything served so far.
@@ -650,6 +846,12 @@ impl Engine {
             // consumers can tell it from event-driven FIFO.
             "fifo-lockstep".to_string()
         };
+        let serve_ms = self.serve_wall_ms;
+        let frames_per_sec = if serve_ms > 0.0 {
+            aggregate.frames as f64 / (serve_ms / 1e3)
+        } else {
+            f64::NAN
+        };
         FleetSummary {
             per_session,
             aggregate,
@@ -658,6 +860,9 @@ impl Engine {
             peak_contention_factor: self.cfg.contention.factor(peak_offloaders),
             scheduler,
             p95_queue_wait_ms: percentile(&queue_waits, 0.95),
+            workers: self.cfg.workers.max(1),
+            serve_ms,
+            frames_per_sec,
         }
     }
 }
@@ -691,6 +896,7 @@ pub fn fleet_from_config(cfg: &Config) -> Engine {
         contention: Contention::new(cfg.contention_capacity, cfg.contention_slope),
         ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
         scheduler: cfg.scheduler_config(),
+        workers: cfg.workers,
     });
     for (i, env) in envs.into_iter().enumerate() {
         let policy = cfg.policy(&env.net, &env.device, &env.edge);
@@ -864,6 +1070,69 @@ mod tests {
             }
         }
         assert_eq!(eng.fleet_summary().aggregate.rejected_offloads, 4);
+    }
+
+    #[test]
+    fn sharded_step_matches_single_threaded_step() {
+        // The in-module smoke version of the tests/fleet.rs pin: a
+        // 6-session contended engine produces byte-identical records at
+        // workers = 1 and workers = 3.
+        let build = |workers: usize| {
+            let net = zoo::partnet();
+            let mut eng = Engine::new(EngineConfig {
+                contention: Contention::new(1, 0.5),
+                ingress_mbps: Some(150.0),
+                workers,
+                ..Default::default()
+            });
+            for i in 0..6 {
+                eng.add_session(
+                    policy(&net, "mu-linucb", 40),
+                    env(8.0 + i as f64, 30 + i as u64),
+                    FrameSource::uniform(),
+                );
+            }
+            eng.run(40);
+            eng
+        };
+        let solo = build(1);
+        let sharded = build(3);
+        assert_eq!(solo.offload_counts(), sharded.offload_counts());
+        for (a, b) in solo.sessions().iter().zip(sharded.sessions()) {
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.p, rb.p, "s{} t={}", a.id, ra.t);
+                assert_eq!(ra.delay_ms, rb.delay_ms, "s{} t={}", a.id, ra.t);
+                assert_eq!(ra.expected_ms, rb.expected_ms, "s{} t={}", a.id, ra.t);
+                assert_eq!(ra.queue_wait_ms, rb.queue_wait_ms, "s{} t={}", a.id, ra.t);
+            }
+        }
+    }
+
+    #[test]
+    fn more_workers_than_sessions_is_fine() {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig { workers: 8, ..Default::default() });
+        eng.add_session(policy(&net, "mu-linucb", 20), env(10.0, 1), FrameSource::uniform());
+        eng.add_session(policy(&net, "eo", 20), env(10.0, 2), FrameSource::uniform());
+        eng.run(20);
+        assert_eq!(eng.round(), 20);
+        for s in eng.sessions() {
+            assert_eq!(s.metrics.records.len(), 20);
+        }
+    }
+
+    #[test]
+    fn run_accumulates_wall_time_for_throughput() {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig::default());
+        eng.add_session(policy(&net, "eo", 30), env(10.0, 1), FrameSource::uniform());
+        eng.run(30);
+        assert!(eng.serve_wall_ms() > 0.0);
+        let fs = eng.fleet_summary();
+        assert_eq!(fs.workers, 1);
+        assert!(fs.serve_ms > 0.0);
+        assert!(fs.frames_per_sec.is_finite() && fs.frames_per_sec > 0.0);
     }
 
     #[test]

@@ -92,6 +92,13 @@ impl Metrics {
         self.records.push(r);
     }
 
+    /// Pre-size the record buffer for `additional` more frames — the
+    /// engine calls this up front so steady-state serving never pays an
+    /// amortized reallocation on the hot path.
+    pub fn reserve(&mut self, additional: usize) {
+        self.records.reserve(additional);
+    }
+
     /// Summary over all frames (`num_partitions` sizes the histogram).
     pub fn summary(&self, num_partitions: usize) -> Summary {
         self.summary_range(0, self.records.len(), num_partitions)
@@ -241,6 +248,14 @@ pub struct FleetSummary {
     pub scheduler: String,
     /// p95 of the shared-edge queueing delay over every served frame.
     pub p95_queue_wait_ms: f64,
+    /// Worker-pool size the engine served with (1 = single-threaded).
+    pub workers: usize,
+    /// Wall-clock milliseconds spent inside `Engine::run` (0 when the
+    /// engine was stepped manually).
+    pub serve_ms: f64,
+    /// Serving throughput: total frames / serve wall time (NaN — JSON
+    /// `null` — when no timed run happened).
+    pub frames_per_sec: f64,
 }
 
 impl FleetSummary {
@@ -279,6 +294,9 @@ impl FleetSummary {
         obj(vec![
             ("scheduler", Json::from(self.scheduler.as_str())),
             ("sessions", Json::from(self.per_session.len())),
+            ("workers", Json::from(self.workers)),
+            ("serve_ms", jnum(self.serve_ms)),
+            ("frames_per_sec", jnum(self.frames_per_sec)),
             ("mean_offloaders", jnum(self.mean_offloaders)),
             ("peak_offloaders", Json::from(self.peak_offloaders)),
             ("peak_contention_factor", jnum(self.peak_contention_factor)),
@@ -425,6 +443,9 @@ mod tests {
             peak_contention_factor: 1.5,
             scheduler: "fifo".to_string(),
             p95_queue_wait_ms: 0.0,
+            workers: 1,
+            serve_ms: 0.0,
+            frames_per_sec: f64::NAN,
         };
         assert!((fs.delay_spread_ms() - 20.0).abs() < 1e-12);
         assert!((fs.p95_spread_ms() - 20.0).abs() < 1e-12);
@@ -470,11 +491,17 @@ mod tests {
             peak_contention_factor: 1.5,
             scheduler: "edf".to_string(),
             p95_queue_wait_ms: 1.25,
+            workers: 4,
+            serve_ms: 125.0,
+            frames_per_sec: 16.0,
         };
         let json = fs.to_json();
         // The fields the EXPERIMENTS.md recipes consume.
         for key in [
             "\"scheduler\":\"edf\"",
+            "\"workers\":4",
+            "\"serve_ms\":125",
+            "\"frames_per_sec\":16",
             "\"delay_spread_ms\":20",
             "\"p95_spread_ms\":20",
             "\"p95_queue_wait_ms\":1.25",

@@ -2,7 +2,11 @@
 //!
 //! * [`engine`] — the multi-session serving core: [`engine::Session`]s
 //!   (per-user policy, video source, metrics) multiplexed by an
-//!   [`engine::Engine`] over a shared contended edge (DESIGN.md §6).
+//!   [`engine::Engine`] over a shared contended edge (DESIGN.md §6),
+//!   sharded across a [`pool::WorkerPool`] with a deterministic merge
+//!   (DESIGN.md §8).
+//! * [`pool`] — the fixed-size persistent worker pool behind the
+//!   engine's parallel select/observe phases.
 //! * [`experiment`] — the single-stream simulation runner (all paper
 //!   exhibits); a thin wrapper over one engine session.
 //! * [`pipeline`] — the *real* serving path: PartNet over two PJRT clients
@@ -17,6 +21,7 @@ pub mod exhibits;
 pub mod experiment;
 pub mod metrics;
 pub mod pipeline;
+pub mod pool;
 
 pub use engine::{Engine, EngineConfig, FrameSource, Session};
 pub use experiment::{quick_run, run};

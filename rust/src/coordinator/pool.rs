@@ -1,0 +1,219 @@
+//! A fixed-size persistent worker pool for the sharded fleet engine.
+//!
+//! The engine's per-round phases (select / observe) are embarrassingly
+//! parallel across sessions — every session owns its policy, environment
+//! RNG, frame source, and metrics — so the only thing a pool has to
+//! provide is a cheap fork/join: run one closure per worker, block until
+//! all of them finish.  [`std::thread::scope`] would give exactly that,
+//! but it spawns OS threads on every call, and an engine round is only a
+//! few hundred microseconds of work; the spawn cost would eat the
+//! speedup.  [`WorkerPool`] therefore keeps its threads parked on
+//! channels across calls and hands them a borrowed closure per phase.
+//!
+//! Determinism: the pool imposes *no* ordering of its own.  Callers
+//! shard work into disjoint, contiguous ranges indexed by worker id, so
+//! the result is a pure function of the inputs and identical at every
+//! worker count — the property `rust/tests/fleet.rs` pins bit-for-bit.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A borrowed job with its lifetime erased so it can cross the channel.
+/// Only [`WorkerPool::run`] constructs these, and it does not return
+/// until every worker has reported completion, so the pointee is always
+/// alive while a worker dereferences it.
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from several threads are
+// fine) and outlives every use (see `Job` docs / `run`).
+unsafe impl Send for Job {}
+
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Fixed-size pool of `workers` logical workers: `workers - 1` parked
+/// OS threads plus the calling thread itself (worker 0).
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    done_rx: Receiver<Result<(), PanicPayload>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` total workers (including the caller).
+    pub fn new(workers: usize) -> WorkerPool {
+        assert!(workers >= 1, "pool needs at least one worker");
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::with_capacity(workers.saturating_sub(1));
+        let mut handles = Vec::with_capacity(workers.saturating_sub(1));
+        for index in 1..workers {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ans-shard-{index}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // SAFETY: `run` keeps the closure alive until this
+                        // worker's completion message is received.
+                        let f = unsafe { &*job.0 };
+                        let result = catch_unwind(AssertUnwindSafe(|| f(index)));
+                        if done.send(result).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning pool worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { senders, done_rx, handles }
+    }
+
+    /// Total logical workers, including the calling thread.
+    pub fn workers(&self) -> usize {
+        self.senders.len() + 1
+    }
+
+    /// Run `f(w)` once for every worker id `w` in `0..workers()`, in
+    /// parallel; `f(0)` runs on the calling thread.  Blocks until every
+    /// worker has finished.  If any invocation panics, the panic is
+    /// re-raised here — but only after *all* workers have completed, so
+    /// no worker is left running with a dangling borrow.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the erased borrow is dereferenced only between the
+        // sends below and the matching completion receives, and this
+        // function does not return (or unwind) before every completion
+        // has been received.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        for tx in &self.senders {
+            tx.send(Job(job as *const _)).expect("pool worker thread alive");
+        }
+        let mut first_panic: Option<PanicPayload> =
+            catch_unwind(AssertUnwindSafe(|| f(0))).err();
+        for _ in 0..self.senders.len() {
+            if let Err(payload) = self.done_rx.recv().expect("pool worker completion") {
+                first_panic.get_or_insert(payload);
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels ends each worker's recv loop.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Contiguous shard length so `n` items split across `workers` shards
+/// (the last may be short; extra workers idle).
+pub fn shard_len(n: usize, workers: usize) -> usize {
+    n.div_ceil(workers.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn every_worker_runs_once_per_call() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        let slots: Vec<Mutex<usize>> = (0..4).map(|_| Mutex::new(0)).collect();
+        pool.run(&|w| {
+            *slots[w].lock().unwrap() += w + 1;
+        });
+        let total: usize = slots.iter().map(|m| *m.lock().unwrap()).sum();
+        assert_eq!(total, 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn threads_are_reused_across_calls() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn single_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disjoint_shards_can_be_mutated_in_parallel() {
+        // The engine's usage pattern: one Mutex'd shard of a larger
+        // buffer per worker, locked uncontended.
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 1000];
+        let per = shard_len(data.len(), pool.workers());
+        let shards: Vec<Mutex<&mut [u64]>> = data.chunks_mut(per).map(Mutex::new).collect();
+        pool.run(&|w| {
+            if let Some(shard) = shards.get(w) {
+                for v in shard.lock().unwrap().iter_mut() {
+                    *v += 1;
+                }
+            }
+        });
+        drop(shards);
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "boom in shard")]
+    fn worker_panics_propagate_to_the_caller() {
+        let pool = WorkerPool::new(2);
+        pool.run(&|w| {
+            if w == 1 {
+                panic!("boom in shard");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_phase() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 1 {
+                    panic!("transient");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // The pool is still serviceable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn shard_lengths_cover_everything() {
+        assert_eq!(shard_len(10, 4), 3); // shards of 3,3,3,1
+        assert_eq!(shard_len(8, 4), 2);
+        assert_eq!(shard_len(3, 8), 1); // extra workers idle
+        assert_eq!(shard_len(0, 4), 1); // degenerate: no items
+    }
+}

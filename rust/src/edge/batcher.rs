@@ -46,19 +46,49 @@ pub fn select_batch(
     policy: &AdmissionPolicy,
     attained_wait_ms: &[f64],
 ) -> Vec<usize> {
+    let mut members = Vec::new();
+    let mut candidates = Vec::new();
+    select_batch_into(
+        waiting,
+        head,
+        launch_ms,
+        max_batch,
+        policy,
+        attained_wait_ms,
+        &mut members,
+        &mut candidates,
+    );
+    members
+}
+
+/// [`select_batch`] into caller-provided buffers (`members` receives the
+/// result, `candidates` is working space) — the allocation-free form the
+/// queue's drain loop uses every launch.
+#[allow(clippy::too_many_arguments)]
+pub fn select_batch_into(
+    waiting: &[EdgeJob],
+    head: usize,
+    launch_ms: f64,
+    max_batch: usize,
+    policy: &AdmissionPolicy,
+    attained_wait_ms: &[f64],
+    members: &mut Vec<usize>,
+    candidates: &mut Vec<usize>,
+) {
     assert!(head < waiting.len());
-    let mut members = vec![head];
+    members.clear();
+    members.push(head);
     if max_batch <= 1 {
-        return members;
+        return;
     }
     let p = waiting[head].p;
     // Candidates: same split point, arrived by launch, not the head.
-    let mut candidates: Vec<usize> = waiting
-        .iter()
-        .enumerate()
-        .filter(|(i, j)| *i != head && j.p == p && j.arrival_ms <= launch_ms)
-        .map(|(i, _)| i)
-        .collect();
+    candidates.clear();
+    for (i, j) in waiting.iter().enumerate() {
+        if i != head && j.p == p && j.arrival_ms <= launch_ms {
+            candidates.push(i);
+        }
+    }
     // Policy order among the candidates (repeated selection keeps the
     // implementation tiny; waiting rooms are fleet-sized, not huge).
     while members.len() < max_batch && !candidates.is_empty() {
@@ -71,7 +101,6 @@ pub fn select_batch(
         }
         members.push(candidates.swap_remove(best));
     }
-    members
 }
 
 #[cfg(test)]

@@ -113,6 +113,16 @@ impl<T> EventQueue<T> {
     pub fn pop(&mut self) -> Option<(f64, T)> {
         self.heap.pop().map(|e| (e.time_ms, e.payload))
     }
+
+    /// Drop every pending event while keeping the allocated capacity.
+    /// (The engine's per-round merges drain via `pop` until empty and
+    /// never need this; it exists for callers that must abandon a
+    /// partially-consumed queue.)  The sequence counter keeps counting,
+    /// so later pushes still order after anything pushed before the
+    /// clear.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
 }
 
 #[cfg(test)]
@@ -158,5 +168,20 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn non_finite_event_time_rejected() {
         EventQueue::new().push(f64::NAN, ());
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_ordering_semantics() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "stale");
+        q.clear();
+        assert!(q.is_empty());
+        // Post-clear pushes still order (time, then push order).
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        q.push(2.0, "c");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((2.0, "c")));
     }
 }

@@ -160,6 +160,13 @@ impl EdgeScheduler {
             .collect()
     }
 
+    /// [`EdgeScheduler::drain`] into a caller-provided buffer of raw
+    /// [`Scheduled`] entries (cleared first) — the allocation-free form
+    /// the serving engine drives every round.
+    pub fn drain_scheduled_into(&mut self, out: &mut Vec<Scheduled>) {
+        self.queue.drain_into(out);
+    }
+
     pub fn stats(&self) -> &QueueStats {
         &self.queue.stats
     }

@@ -140,6 +140,12 @@ pub struct EdgeQueue {
     attained_wait_ms: Vec<f64>,
     next_seq: u64,
     pub stats: QueueStats,
+    /// Scratch buffers reused across launches so a steady-state drain
+    /// performs no heap allocation (hotpath bench's alloc counter).
+    scratch_members: Vec<usize>,
+    scratch_candidates: Vec<usize>,
+    scratch_solos: Vec<f64>,
+    scratch_co_arrivals: Vec<f64>,
 }
 
 impl EdgeQueue {
@@ -157,6 +163,10 @@ impl EdgeQueue {
             attained_wait_ms: Vec::new(),
             next_seq: 0,
             stats: QueueStats::default(),
+            scratch_members: Vec::new(),
+            scratch_candidates: Vec::new(),
+            scratch_solos: Vec::new(),
+            scratch_co_arrivals: Vec::new(),
         }
     }
 
@@ -192,10 +202,19 @@ impl EdgeQueue {
     /// and return the resolved schedules (in launch order).  Executor
     /// backlog persists across calls: a slow round delays the next one.
     pub fn drain(&mut self) -> Vec<Scheduled> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
+        out
+    }
+
+    /// [`EdgeQueue::drain`] into a caller-provided buffer (cleared
+    /// first) — the allocation-free form the serving engine drives every
+    /// round.  Identical schedule, byte for byte.
+    pub fn drain_into(&mut self, out: &mut Vec<Scheduled>) {
+        out.clear();
         while let Some((_, job)) = self.arrivals.pop() {
             self.waiting.push(job);
         }
-        let mut out = Vec::with_capacity(self.waiting.len());
         while !self.waiting.is_empty() {
             let earliest =
                 self.waiting.iter().map(|j| j.arrival_ms).fold(f64::INFINITY, f64::min);
@@ -215,39 +234,45 @@ impl EdgeQueue {
                 let window_close =
                     self.waiting[head].arrival_ms + self.cfg.batch_window_ms;
                 let p = self.waiting[head].p;
-                let mut co_arrivals: Vec<f64> = self
-                    .waiting
-                    .iter()
-                    .enumerate()
-                    .filter(|(i, j)| *i != head && j.p == p)
-                    .map(|(_, j)| j.arrival_ms)
-                    .collect();
-                co_arrivals.sort_by(f64::total_cmp);
-                let full_at =
-                    co_arrivals.get(self.cfg.max_batch - 2).copied().unwrap_or(f64::INFINITY);
+                self.scratch_co_arrivals.clear();
+                for (i, j) in self.waiting.iter().enumerate() {
+                    if i != head && j.p == p {
+                        self.scratch_co_arrivals.push(j.arrival_ms);
+                    }
+                }
+                self.scratch_co_arrivals.sort_by(f64::total_cmp);
+                let full_at = self
+                    .scratch_co_arrivals
+                    .get(self.cfg.max_batch - 2)
+                    .copied()
+                    .unwrap_or(f64::INFINITY);
                 start.max(window_close.min(full_at))
             } else {
                 start
             };
-            let members = batcher::select_batch(
+            batcher::select_batch_into(
                 &self.waiting,
                 head,
                 launch,
                 self.cfg.max_batch,
                 &self.cfg.policy,
                 &self.attained_wait_ms,
+                &mut self.scratch_members,
+                &mut self.scratch_candidates,
             );
-            let solos: Vec<f64> = members.iter().map(|&i| self.waiting[i].solo_ms).collect();
-            let service = batcher::batch_service_ms(&solos, &self.cfg.contention);
+            self.scratch_solos.clear();
+            for &i in &self.scratch_members {
+                self.scratch_solos.push(self.waiting[i].solo_ms);
+            }
+            let service = batcher::batch_service_ms(&self.scratch_solos, &self.cfg.contention);
             let finish = launch + service;
-            let b = members.len();
+            let b = self.scratch_members.len();
             self.stats.batches += 1;
             self.stats.batched_jobs += b;
             self.stats.busy_ms += service;
             // Remove members back to front so indices stay valid.
-            let mut idxs = members;
-            idxs.sort_unstable_by(|a, b| b.cmp(a));
-            for &i in &idxs {
+            self.scratch_members.sort_unstable_by(|a, b| b.cmp(a));
+            for &i in &self.scratch_members {
                 let job = self.waiting.swap_remove(i);
                 let wait = launch - job.arrival_ms;
                 if self.attained_wait_ms.len() <= job.session {
@@ -269,7 +294,6 @@ impl EdgeQueue {
             }
             self.clock.advance_to(finish);
         }
-        out
     }
 }
 

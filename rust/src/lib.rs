@@ -8,7 +8,9 @@
 //!   decisions via the μLinUCB contextual bandit ([`bandit`]), the
 //!   multi-session serving engine and pipelines ([`coordinator`], with
 //!   [`coordinator::engine`] multiplexing N user sessions over one
-//!   contended edge), the event-driven edge-server scheduler with
+//!   contended edge, sharded across a per-core worker pool with
+//!   bit-identical output at any worker count), the event-driven
+//!   edge-server scheduler with
 //!   admission control and cross-session batching ([`edge`]),
 //!   the environment/testbed simulator ([`simulator`]),
 //!   the model zoo with contextual features ([`models`]), SSIM key-frame

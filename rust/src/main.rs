@@ -32,6 +32,9 @@ SUBCOMMANDS:
              --sessions N --model M --policy P --frames N --rate MBPS
              --contention-capacity K --contention-slope S --ingress MBPS
              --device maxn|maxq --edge gpu|cpu --load X --seed S
+             --workers W shards sessions across a per-core worker pool
+             (output is bit-identical at every worker count; throughput
+             lands in the summary and --json artifact).
              Edge scheduler: --scheduler edf|wfair, --event-clock,
              --queue-capacity Q or --stagger MS switch on the
              event-driven edge queue; --batch-window MS, --max-batch B
@@ -126,8 +129,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
     let mut eng = engine::fleet_from_config(&cfg);
     println!(
-        "fleet: {} sessions × {} frames of {} ({}) over a shared {} edge",
-        cfg.sessions, cfg.frames, cfg.model, cfg.policy, cfg.edge
+        "fleet: {} sessions × {} frames of {} ({}) over a shared {} edge ({} worker{})",
+        cfg.sessions,
+        cfg.frames,
+        cfg.model,
+        cfg.policy,
+        cfg.edge,
+        cfg.workers,
+        if cfg.workers == 1 { "" } else { "s" },
     );
     println!(
         "  base rate {} Mbps (per-session spread), contention capacity {} slope {}, ingress {}",
@@ -209,6 +218,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fs.p95_queue_wait_ms,
         fs.aggregate.mean_batch_size,
         fs.aggregate.rejected_offloads,
+    );
+    println!(
+        "throughput: {:.0} frames/s over {:.1} ms wall ({} worker{})",
+        fs.frames_per_sec,
+        fs.serve_ms,
+        fs.workers,
+        if fs.workers == 1 { "" } else { "s" },
     );
     if let Some(stats) = eng.scheduler_stats() {
         let horizon_ms = cfg.frames as f64 * 1e3 / cfg.fps;

@@ -1,0 +1,85 @@
+//! Counting global allocator for allocation-audited benches.
+//!
+//! The §Perf acceptance bar for the serving hot path is *zero heap
+//! allocations per frame in steady state* — a property a timing bench
+//! cannot certify (allocators are fast until they are not: a stray
+//! per-frame `Vec` shows up as tail latency under fleet load, not as a
+//! mean).  Installing [`CountingAllocator`] as the `#[global_allocator]`
+//! of a bench binary makes the property testable: snapshot
+//! [`allocations`] around a steady-state loop and assert the delta is
+//! zero (see `benches/hotpath.rs`).
+//!
+//! The counters use relaxed atomics — they order nothing, they only
+//! count — so the instrumented allocator costs two uncontended atomic
+//! adds per allocation and nothing per free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`]-backed allocator that counts every allocation and
+/// reallocation.  Install in a bench with:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static A: ans::util::alloc::CountingAllocator = ans::util::alloc::CountingAllocator;
+/// ```
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counters have no effect on layout or
+// pointer validity.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations (+ reallocations) counted so far.  Monotone; only
+/// meaningful when [`CountingAllocator`] is the global allocator —
+/// otherwise it stays 0.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested so far (allocations + reallocation sizes).
+pub fn allocated_bytes() -> u64 {
+    ALLOCATED_BYTES.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The library's own tests do NOT install the counting allocator (a
+    // crate has one global allocator and the test harness should not pay
+    // for instrumentation), so the counters just read as stable zeros.
+    #[test]
+    fn counters_read_without_installation() {
+        let a = allocations();
+        let b = allocated_bytes();
+        let _v: Vec<u8> = Vec::with_capacity(128);
+        assert_eq!(allocations(), a, "not installed: counters must not move");
+        assert_eq!(allocated_bytes(), b);
+    }
+}

@@ -61,21 +61,42 @@ pub struct Bench {
     pub samples: usize,
     pub iters_per_sample: usize,
     filter: Option<String>,
+    /// Sample count forced by `BENCH_SAMPLES` (CI smoke mode); wins over
+    /// [`Bench::with_samples`].
+    env_samples: Option<usize>,
     pub results: Vec<Measurement>,
 }
 
 impl Bench {
-    /// Construct from argv: any positional argument is a substring filter.
+    /// Construct from argv: any positional argument is a substring
+    /// filter.  The `BENCH_SAMPLES` environment variable overrides the
+    /// sample count (CI runs benches in smoke mode with
+    /// `BENCH_SAMPLES=3`).
     pub fn from_env() -> Bench {
         // `cargo bench` passes `--bench`; ignore dashed args.
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with('-'));
-        Bench { warmup_iters: 3, samples: 30, iters_per_sample: 1, filter, results: Vec::new() }
+        let env_samples = std::env::var("BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0);
+        Bench {
+            warmup_iters: 3,
+            samples: env_samples.unwrap_or(30),
+            iters_per_sample: 1,
+            filter,
+            env_samples,
+            results: Vec::new(),
+        }
     }
 
+    /// Set the default sample count — ignored when `BENCH_SAMPLES` is
+    /// set, so CI smoke mode stays in control.
     pub fn with_samples(mut self, samples: usize) -> Bench {
-        self.samples = samples;
+        if self.env_samples.is_none() {
+            self.samples = samples;
+        }
         self
     }
 
@@ -137,6 +158,7 @@ mod tests {
             samples: 5,
             iters_per_sample: 10,
             filter: None,
+            env_samples: None,
             results: Vec::new(),
         };
         b.run("spin", || {
@@ -158,6 +180,7 @@ mod tests {
             samples: 1,
             iters_per_sample: 1,
             filter: Some("fig1".into()),
+            env_samples: None,
             results: Vec::new(),
         };
         assert!(b.enabled("fig1_vgg16"));

@@ -3,6 +3,7 @@
 //! `criterion` and `proptest`, none of which are reachable in this build
 //! environment (see DESIGN.md §2, substitution table).
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -315,6 +315,75 @@ fn default_scheduler_reproduces_the_legacy_lockstep_fleet_bit_identically() {
 }
 
 // ---------------------------------------------------------------------------
+// The sharded-engine pin (PR 3): the 8-session contended lockstep fleet
+// is bit-identical across workers ∈ {1, 2, 4} AND matches the pinned
+// PR 1/PR 2 transcript (the verbatim legacy loop above).  Sessions shard
+// across a per-core worker pool, but per-session RNG streams plus the
+// canonical (arrival time, session id) merge of all cross-session state
+// make worker count unobservable in the output.
+// ---------------------------------------------------------------------------
+#[test]
+fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
+    let rounds = 150;
+    let net = zoo::vgg16();
+    let contention = Contention::new(1, 0.5);
+    let build_parts = || {
+        let envs = scenario::fleet(net.clone(), 8, 16.0, 77);
+        let policies: Vec<Box<dyn Policy>> = (0..8).map(|_| mu_linucb(&net, rounds)).collect();
+        let sources: Vec<FrameSource> = (0..8)
+            .map(|i| FrameSource::video(700 + i as u64, 0.85, Weights::default_paper()))
+            .collect();
+        (policies, envs, sources)
+    };
+
+    // The pinned transcript: the verbatim PR 1/PR 2 lockstep loop.
+    let (policies, envs, sources) = build_parts();
+    let legacy = legacy_fleet_run(
+        policies,
+        envs,
+        sources,
+        contention,
+        Some(200.0),
+        1e3 / 30.0,
+        rounds,
+    );
+
+    for workers in [1usize, 2, 4] {
+        let (policies, envs, sources) = build_parts();
+        let mut eng = Engine::new(EngineConfig {
+            contention,
+            ingress_mbps: Some(200.0),
+            workers,
+            ..Default::default()
+        });
+        for ((policy, env), source) in policies.into_iter().zip(envs).zip(sources) {
+            eng.add_session(policy, env, source);
+        }
+        eng.run(rounds);
+        for (i, (legacy_m, session)) in legacy.iter().zip(eng.sessions()).enumerate() {
+            assert_eq!(legacy_m.records.len(), session.metrics.records.len());
+            for (l, w) in legacy_m.records.iter().zip(&session.metrics.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.delay_ms, w.delay_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.expected_ms, w.expected_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.oracle_p, w.oracle_p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.oracle_ms, w.oracle_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.predicted_edge_ms, w.predicted_edge_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.true_edge_ms, w.true_edge_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.queue_wait_ms, w.queue_wait_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.batch_size, w.batch_size, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.is_key, w.is_key, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.weight, w.weight, "workers={workers} s{i} t={}", l.t);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Per-session RNG streams are (seed, index)-pure: growing the configured
 // fleet must not perturb existing sessions' environment noise or video
 // draws (the regression the Rng::stream split exists for).

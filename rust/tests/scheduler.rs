@@ -177,6 +177,73 @@ fn staggered_session_clocks_split_the_fleet_batch() {
 }
 
 // ---------------------------------------------------------------------------
+// The sharded-engine pin, event-driven side (PR 3): the 8-session
+// contended fleet under edf + cross-session batching — adaptive
+// μLinUCB learners, so decisions really couple through the queue — is
+// bit-identical across workers ∈ {1, 2, 4}.  The waiting room, batch
+// formation, and virtual clock all run on the main thread in canonical
+// (arrival time, session id) order; only the per-session phases fan
+// out, and those own their RNG streams.
+// ---------------------------------------------------------------------------
+#[test]
+fn sharded_event_scheduler_is_bit_identical_across_worker_counts() {
+    let frames = 150;
+    let run_with_workers = |workers: usize| {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: batched(AdmissionPolicy::Edf),
+            workers,
+            ..Default::default()
+        });
+        for env in scenario::fleet(net.clone(), 8, 10.0, 42) {
+            eng.add_session(policy(&net, "mu-linucb", frames), env, FrameSource::uniform());
+        }
+        eng.run(frames);
+        eng
+    };
+    let reference = run_with_workers(1);
+    for workers in [2usize, 4] {
+        let sharded = run_with_workers(workers);
+        assert_eq!(
+            reference.offload_counts(),
+            sharded.offload_counts(),
+            "workers={workers}: per-round offload counts must match"
+        );
+        for (a, b) in reference.sessions().iter().zip(sharded.sessions()) {
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.p, rb.p, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(ra.delay_ms, rb.delay_ms, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(
+                    ra.queue_wait_ms, rb.queue_wait_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+                assert_eq!(
+                    ra.batch_size, rb.batch_size,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+                assert_eq!(ra.rejected, rb.rejected, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(
+                    ra.predicted_edge_ms, rb.predicted_edge_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+            }
+        }
+        // Queue-side totals agree too (same schedule, same batches).
+        let qa = reference.scheduler_stats().unwrap();
+        let qb = sharded.scheduler_stats().unwrap();
+        assert_eq!(qa.dispatched, qb.dispatched);
+        assert_eq!(qa.batches, qb.batches);
+        assert_eq!(qa.rejected, qb.rejected);
+        assert_eq!(qa.busy_ms, qb.busy_ms);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Bit-for-bit determinism of the event path (same seeds, same schedule).
 // ---------------------------------------------------------------------------
 #[test]
