@@ -1,0 +1,98 @@
+//! Queue-aware vs lockstep-context μLinUCB on a 16-session contended
+//! edge with a mid-run load swing.
+//!
+//! Sixteen learners share one edge executor (event-driven FIFO queue, no
+//! cross-session batching), and for the middle third of the run the edge
+//! slows 6× (exogenous tenants — the paper's Fig 12(b) regime, now with
+//! real queueing: during the slow phase a handful of offloads back the
+//! executor up for everyone).  The same fleet runs three times, varying
+//! only `--queue-signal`:
+//!
+//! * `off`  — the legacy lockstep decision context: policies select
+//!   against `Contention::factor(k)` while their feedback silently
+//!   includes queue luck, so they keep offloading into the divergent
+//!   backlog and churn through drift resets;
+//! * `wait` — the deterministic pre-round forecast wait becomes *known*
+//!   per-arm delay (and learner feedback is wait-stripped);
+//! * `full` — `wait` plus the widened learner context: μLinUCB also
+//!   regresses over the batch-merge / service-inflation dimensions.
+//!
+//! The table compares mean/p95 delay, cumulative **event-clock regret**
+//! (chosen arm at its realized mean vs the counterfactual replay of
+//! every candidate against the frozen queue snapshot), and deadline
+//! misses.  Closing the select→edge loop should cut both the regret and
+//! the delay (asserted for the 8-session variant in
+//! `rust/tests/scheduler.rs`).
+//!
+//! Run: `cargo run --release --example queue_aware`
+
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::{FleetSummary, FrameSource};
+use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
+use ans::models::zoo;
+use ans::simulator::{scenario, Contention, Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU};
+
+const SESSIONS: usize = 16;
+const FRAMES: usize = 300;
+
+fn run_fleet(signal: QueueSignal) -> FleetSummary {
+    let net = zoo::vgg16();
+    let mut scheduler = SchedulerConfig::event(AdmissionPolicy::Fifo);
+    scheduler.max_batch = 1; // no batching: queueing is the whole story
+    scheduler.batch_window_ms = 0.0;
+    let mut engine = Engine::new(EngineConfig {
+        // ~1.5 fps per session: absorbable at load 1, hopeless at load 6.
+        frame_interval_ms: 1e3 / 1.5,
+        contention: Contention::new(1, 0.25),
+        scheduler,
+        queue_signal: signal,
+        ..Default::default()
+    });
+    for i in 0..SESSIONS {
+        let mult = scenario::FLEET_RATE_MULTIPLIERS[i % scenario::FLEET_RATE_MULTIPLIERS.len()];
+        let env = Environment::new(
+            net.clone(),
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::steps(vec![(0, 1.0), (FRAMES / 3, 6.0), (2 * FRAMES / 3, 1.0)]),
+            Uplink::constant(20.0 * mult),
+            11 + i as u64,
+        );
+        let policy =
+            ans::bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, FRAMES, None, None)
+                .expect("known policy");
+        engine.add_session(policy, env, FrameSource::uniform());
+    }
+    engine.run(FRAMES);
+    engine.fleet_summary()
+}
+
+fn main() {
+    println!(
+        "{SESSIONS} sessions × {FRAMES} frames of vgg16, one shared edge executor \
+         (event FIFO, batching off); edge load 1× → 6× → 1× across the run\n"
+    );
+    println!(
+        "  {:<14} {:>9} {:>9} {:>16} {:>15} {:>9}",
+        "queue signal", "mean ms", "p95 ms", "event regret ms", "deadline miss", "rejected"
+    );
+    for signal in [QueueSignal::Off, QueueSignal::Wait, QueueSignal::Full] {
+        let fs = run_fleet(signal);
+        println!(
+            "  {:<14} {:>9.1} {:>9.1} {:>16.0} {:>15} {:>9}",
+            signal.name(),
+            fs.aggregate.mean_delay_ms,
+            fs.aggregate.p95_delay_ms,
+            fs.aggregate.event_regret_ms,
+            fs.aggregate.deadline_misses,
+            fs.aggregate.rejected_offloads,
+        );
+    }
+    println!(
+        "\n(event regret = Σ chosen-arm realized mean − frozen-snapshot counterfactual \
+         oracle; the queue-aware fleet shifts to late partitions the moment the backlog \
+         runs away and returns the moment it drains — compare with \
+         `ans fleet --sessions 16 --model vgg16 --rate 20 --fps 3 --event-clock \
+         --max-batch 1 --queue-signal full --json`)"
+    );
+}

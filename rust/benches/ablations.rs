@@ -24,6 +24,7 @@ fn run(pol: &mut dyn Policy, env: &mut Environment, frames: usize) -> (f64, f64)
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
         };
         let p = pol.select(&ctx);

@@ -10,6 +10,7 @@ use ans::bandit::policy::{FrameContext, Privileged};
 use ans::bandit::{LinUcb, Policy};
 use ans::coordinator::engine::{Engine, EngineConfig};
 use ans::coordinator::FrameSource;
+use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
 use ans::models::{features, zoo, FeatureScale, CONTEXT_DIM};
 use ans::simulator::Contention;
 use ans::util::alloc::{allocations, CountingAllocator};
@@ -45,6 +46,7 @@ fn main() {
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: Privileged { rate_mbps: 16.0, expected_totals: None },
         };
         t += 1;
@@ -93,6 +95,7 @@ fn main() {
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
         };
         let p = pol2.select(&ctx);
@@ -119,6 +122,7 @@ fn main() {
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
         };
         let p = pol.select(&ctx);
@@ -165,6 +169,38 @@ fn main() {
         "alloc/engine_lockstep_steady_state", delta, audit_rounds
     );
     assert_eq!(delta, 0, "steady-state engine rounds must not allocate");
+
+    // And through the queue-aware event path: per round, the engine now
+    // additionally computes the pre-round forecast, writes per-arm
+    // predicted waits + the widened context dimensions, and resolves the
+    // event-clock counterfactual oracle per frame — all of which must
+    // stay allocation-free in steady state.
+    let mut qeng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.25),
+        scheduler: SchedulerConfig {
+            batch_window_ms: 4.0,
+            max_batch: 8,
+            ..SchedulerConfig::event(AdmissionPolicy::Fifo)
+        },
+        queue_signal: QueueSignal::Full,
+        ..Default::default()
+    });
+    let qaudit_rounds = 256;
+    for i in 0..16 {
+        let env = ans::simulator::Environment::simple(zoo::vgg16(), 10.0 + i as f64, 40 + i as u64);
+        let pol = LinUcb::paper_default(1_000_000);
+        qeng.add_session(Box::new(pol), env, FrameSource::uniform());
+    }
+    qeng.reserve(64 + qaudit_rounds);
+    qeng.run(64); // warm-up: event-queue heaps + scratch at capacity
+    let before = allocations();
+    qeng.run(qaudit_rounds);
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} rounds x 16 sessions",
+        "alloc/engine_queue_aware_steady_state", delta, qaudit_rounds
+    );
+    assert_eq!(delta, 0, "queue-aware select/realize must not allocate");
 
     b.write_csv("hotpath.csv").expect("writing bench_results/hotpath.csv");
 }

@@ -1,4 +1,5 @@
-//! Small dense linear algebra for the bandit hot path (d = 7).
+//! Small dense linear algebra for the bandit hot path (d = 9: the
+//! paper's 7 structural features plus the two queue-state dimensions).
 //!
 //! μLinUCB needs, per frame: θ̂ = A⁻¹ b, quadratic forms xᵀA⁻¹x for every
 //! arm, and the rank-1 update A ← A + xxᵀ.  We keep **A⁻¹ incrementally**
@@ -202,7 +203,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// thousands of update/downdate pairs (sliding-window mode) the drift can
 /// corrupt A⁻¹ enough to zero out confidence widths — which silently kills
 /// exploration.  Every [`REFRESH_INTERVAL`] rank-1 ops the inverse is
-/// recomputed exactly from A via Cholesky (O(d³) with d = 7: negligible).
+/// recomputed exactly from A via Cholesky (O(d³) with d = 9: negligible).
 #[derive(Debug, Clone)]
 pub struct RidgeState {
     pub d: usize,

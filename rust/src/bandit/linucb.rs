@@ -296,7 +296,13 @@ impl LinUcb {
         for (p, x) in ctx.contexts.iter().enumerate() {
             let pred = dot(&self.theta_cache, x);
             let width = (conf_scale * self.ridge.confidence_sq(x)).max(0.0).sqrt();
-            self.scores.push(ctx.front_delays[p] + pred - alpha * width);
+            // The forecast queue wait is *known* per-arm delay, exactly
+            // like d_p^f: it joins the score's known part rather than
+            // the learned model (whose feedback the engine strips of
+            // the realized wait).  Empty slice (queue signal off) adds
+            // nothing and keeps the legacy scores bit-identical.
+            let wait = if ctx.queue_wait_ms.is_empty() { 0.0 } else { ctx.queue_wait(p) };
+            self.scores.push(ctx.front_delays[p] + wait + pred - alpha * width);
         }
     }
 }
@@ -422,6 +428,7 @@ mod tests {
                 weight: 0.2,
                 front_delays: &front,
                 contexts: &contexts,
+                queue_wait_ms: &[],
                 privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
             };
             let p = policy.select(&ctx);
@@ -565,6 +572,7 @@ mod tests {
             weight: 0.01,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: priv_,
         };
         assert_eq!(pol.select(&c_explore), 1);
@@ -574,6 +582,7 @@ mod tests {
             weight: 0.999,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: priv_,
         };
         assert_eq!(pol.select(&c_exploit), 0);
@@ -625,6 +634,38 @@ mod tests {
     }
 
     #[test]
+    fn predicted_queue_wait_shifts_the_argmin() {
+        // Two identically attractive offload arms; a large forecast wait
+        // on arm 0 must push the selection to arm 1 — and an empty wait
+        // slice must reproduce the wait-free choice exactly.
+        let mut pol = LinUcb::classic(CONTEXT_DIM, 1.0, 1.0).without_warmup();
+        let mut e0 = [0.0; CONTEXT_DIM];
+        e0[0] = 1.0;
+        let mut e1 = [0.0; CONTEXT_DIM];
+        e1[1] = 1.0;
+        pol.observe(0, &e0, 10.0);
+        pol.observe(1, &e1, 10.0);
+        let contexts = vec![e0, e1];
+        let front = vec![0.0, 0.0];
+        let priv_ = Privileged { rate_mbps: 10.0, expected_totals: None };
+        let base = FrameContext {
+            t: 2,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            queue_wait_ms: &[],
+            privileged: priv_,
+        };
+        let baseline = pol.select(&base);
+        assert_eq!(baseline, 0, "symmetric arms tie-break to the first");
+        let waits = [500.0, 0.0];
+        let mut loaded = base;
+        loaded.queue_wait_ms = &waits;
+        loaded.t = 3;
+        assert_eq!(pol.select(&loaded), 1, "forecast wait must repel arm 0");
+    }
+
+    #[test]
     fn classic_ignores_weights() {
         let mut a = LinUcb::classic(CONTEXT_DIM, 10.0, 1.0).without_warmup();
         let mut e0 = [0.0; CONTEXT_DIM];
@@ -632,8 +673,22 @@ mod tests {
         let contexts = vec![e0, [0.0; CONTEXT_DIM]];
         let front = vec![0.0, 100.0];
         let priv_ = Privileged { rate_mbps: 10.0, expected_totals: None };
-        let lo = FrameContext { t: 0, weight: 0.01, front_delays: &front, contexts: &contexts, privileged: priv_ };
-        let hi = FrameContext { t: 0, weight: 0.99, front_delays: &front, contexts: &contexts, privileged: priv_ };
+        let lo = FrameContext {
+            t: 0,
+            weight: 0.01,
+            front_delays: &front,
+            contexts: &contexts,
+            queue_wait_ms: &[],
+            privileged: priv_,
+        };
+        let hi = FrameContext {
+            t: 0,
+            weight: 0.99,
+            front_delays: &front,
+            contexts: &contexts,
+            queue_wait_ms: &[],
+            privileged: priv_,
+        };
         assert_eq!(a.select(&lo), a.select(&hi), "classic LinUCB must ignore L_t");
     }
 }

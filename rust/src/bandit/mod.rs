@@ -8,7 +8,7 @@
 //! profiling baseline, and [`policy`] holds the static EO/MO/Fixed/Oracle
 //! baselines plus the [`policy::Policy`] trait everything implements.
 //!
-//! [`linalg`] carries the d=7 ridge-regression hot path (Sherman–Morrison
+//! [`linalg`] carries the small-d ridge-regression hot path (Sherman–Morrison
 //! incremental inverse — the §Perf-critical code), and [`forced`] the
 //! forced-sampling schedules (known-T and phase-doubling).
 

@@ -109,7 +109,11 @@ impl Policy for Neurosurgeon {
         let rate = ctx.privileged.rate_mbps; // real-time system input
         self.totals.clear();
         for p in 0..=ctx.max_partition() {
-            self.totals.push(self.estimate_total(p, rate));
+            // Under the queue signal Neurosurgeon reads the forecast
+            // wait directly, as one more real-time system parameter —
+            // its layer-wise profile still carries the structural
+            // fusion/staleness errors the paper quantifies.
+            self.totals.push(self.estimate_total(p, rate) + ctx.queue_wait(p));
         }
         argmin(&self.totals)
     }
@@ -166,6 +170,7 @@ mod tests {
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: mk(1.0),
         });
         let fast = ns.select(&FrameContext {
@@ -173,11 +178,37 @@ mod tests {
             weight: 0.2,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: mk(100.0),
         });
         assert!(slow > fast, "slow rate {slow} should partition later than fast {fast}");
         assert_eq!(slow, net.num_partitions(), "1 Mbps should be MO");
         assert!(fast <= 1, "100 Mbps should be EO/early");
+    }
+
+    #[test]
+    fn forecast_wait_pushes_neurosurgeon_on_device() {
+        // A fast link makes an early split optimal; a huge uniform
+        // forecast wait on every offload arm must flip the choice to MO
+        // (whose wait entry is zero).
+        let net = zoo::vgg16();
+        let mut ns = surgeon(&net);
+        let scale = FeatureScale::for_network(&net);
+        let contexts = features::context_vectors(&net, &scale);
+        let env = Environment::simple(zoo::vgg16(), 100.0, 1);
+        let front: Vec<f64> = env.front_delays().to_vec();
+        let p_max = net.num_partitions();
+        let mut waits = vec![100_000.0; p_max + 1];
+        waits[p_max] = 0.0;
+        let loaded = ns.select(&FrameContext {
+            t: 0,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            queue_wait_ms: &waits,
+            privileged: Privileged { rate_mbps: 100.0, expected_totals: None },
+        });
+        assert_eq!(loaded, p_max, "a saturated queue should force MO, got {loaded}");
     }
 
     #[test]

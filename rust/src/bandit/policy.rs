@@ -25,6 +25,14 @@ pub struct FrameContext<'a> {
     pub front_delays: &'a [f64],
     /// x_p for every p ∈ 0..=P (x_P is the zero vector).
     pub contexts: &'a [FeatureVector],
+    /// Predicted edge-queue wait per arm, from the deterministic
+    /// pre-round forecast ([`crate::edge::forecast`]).  **Empty when the
+    /// queue signal is off** — every policy must then behave exactly as
+    /// if the field did not exist (the pinned legacy transcripts).  When
+    /// present it is *known* information, like `front_delays`: the edge
+    /// piggybacks its virtual-clock state on responses (CANS-style
+    /// load signalling), so reading it is not privileged.
+    pub queue_wait_ms: &'a [f64],
     /// Information hidden from ANS but available to privileged baselines.
     pub privileged: Privileged<'a>,
 }
@@ -42,6 +50,12 @@ impl<'a> FrameContext<'a> {
     /// Number of partition points P (arms are 0..=P).
     pub fn max_partition(&self) -> usize {
         self.front_delays.len() - 1
+    }
+
+    /// Predicted queue wait for arm `p` — 0.0 when the queue signal is
+    /// off (empty slice) or for the on-device arm.
+    pub fn queue_wait(&self, p: usize) -> f64 {
+        self.queue_wait_ms.get(p).copied().unwrap_or(0.0)
     }
 }
 
@@ -179,6 +193,7 @@ mod tests {
             weight: 0.2,
             front_delays: front,
             contexts,
+            queue_wait_ms: &[],
             privileged: Privileged { rate_mbps: 10.0, expected_totals: totals },
         }
     }
@@ -209,6 +224,20 @@ mod tests {
         let xs = [[0.0; CONTEXT_DIM]; 2];
         let c = ctx(&front, &xs, None);
         Oracle.select(&c);
+    }
+
+    #[test]
+    fn queue_wait_defaults_to_zero_when_absent() {
+        let front = [0.0, 1.0, 2.0];
+        let xs = [[0.0; CONTEXT_DIM]; 3];
+        let c = ctx(&front, &xs, None);
+        assert_eq!(c.queue_wait(0), 0.0);
+        assert_eq!(c.queue_wait(2), 0.0);
+        let mut with_wait = c;
+        let waits = [7.5, 3.0, 0.0];
+        with_wait.queue_wait_ms = &waits;
+        assert_eq!(with_wait.queue_wait(0), 7.5);
+        assert_eq!(with_wait.queue_wait(2), 0.0);
     }
 
     #[test]

@@ -63,10 +63,21 @@ pub struct Config {
     /// Per-frame completion budget anchored at capture (EDF's key;
     /// 0 = no deadline).
     pub deadline_ms: f64,
+    /// Was `deadline_ms` explicitly configured (CLI/JSON)?  The event
+    /// scheduler always uses the budget (it has a sensible default);
+    /// the lockstep path only counts deadline misses against an
+    /// *explicit* budget, so plain `ans fleet` runs don't suddenly
+    /// report misses versus a default the user never asked for.
+    pub deadline_set: bool,
     /// Per-session capture-clock offset (independent session clocks).
     pub stagger_ms: f64,
     /// Force the event-driven edge queue even for plain FIFO.
     pub event_clock: bool,
+    /// Queue-state signal for the select phase (`off` | `wait` | `full`).
+    /// `off` (the default) keeps the lockstep decision context, pinned
+    /// bit-identical to the legacy transcripts; `wait`/`full` require
+    /// the event-driven edge queue.
+    pub queue_signal: String,
 }
 
 impl Default for Config {
@@ -98,8 +109,10 @@ impl Default for Config {
             batch_window_ms: 8.0,
             queue_capacity: 0,
             deadline_ms: 50.0,
+            deadline_set: false,
             stagger_ms: 0.0,
             event_clock: false,
+            queue_signal: "off".into(),
         }
     }
 }
@@ -147,9 +160,13 @@ impl Config {
                 "scheduler" => self.scheduler = val.as_str()?.to_string(),
                 "batch_window_ms" => self.batch_window_ms = val.as_f64()?,
                 "queue_capacity" => self.queue_capacity = val.as_usize()?,
-                "deadline_ms" => self.deadline_ms = val.as_f64()?,
+                "deadline_ms" => {
+                    self.deadline_ms = val.as_f64()?;
+                    self.deadline_set = true;
+                }
                 "stagger_ms" => self.stagger_ms = val.as_f64()?,
                 "event_clock" => self.event_clock = val.as_bool()?,
+                "queue_signal" => self.queue_signal = val.as_str()?.to_string(),
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -195,10 +212,16 @@ impl Config {
         }
         self.batch_window_ms = args.f64_or("batch-window", self.batch_window_ms)?;
         self.queue_capacity = args.usize_or("queue-capacity", self.queue_capacity)?;
-        self.deadline_ms = args.f64_or("deadline", self.deadline_ms)?;
+        if args.get("deadline").is_some() {
+            self.deadline_ms = args.f64_or("deadline", self.deadline_ms)?;
+            self.deadline_set = true;
+        }
         self.stagger_ms = args.f64_or("stagger", self.stagger_ms)?;
         if args.flag("event-clock") {
             self.event_clock = true;
+        }
+        if let Some(v) = args.get("queue-signal") {
+            self.queue_signal = v.to_string();
         }
         Ok(())
     }
@@ -268,7 +291,37 @@ impl Config {
             "stagger must be ≥ 0 ms"
         );
         anyhow::ensure!(self.max_batch >= 1, "max-batch must be ≥ 1");
+        let signal = crate::edge::QueueSignal::by_name(&self.queue_signal);
+        anyhow::ensure!(
+            signal.is_some(),
+            "unknown queue-signal `{}` — valid signals: {}",
+            self.queue_signal,
+            crate::edge::QUEUE_SIGNAL_NAMES.join(", ")
+        );
+        if signal != Some(crate::edge::QueueSignal::Off) {
+            anyhow::ensure!(
+                self.uses_event_scheduler(),
+                "--queue-signal {} requires the event-driven edge queue \
+                 (add --event-clock, or a non-fifo --scheduler, --queue-capacity or --stagger)",
+                self.queue_signal
+            );
+        }
         Ok(())
+    }
+
+    /// Does this configuration route offloads through the event-driven
+    /// edge queue (as opposed to the PR 1 lockstep rounds)?
+    fn uses_event_scheduler(&self) -> bool {
+        let policy = crate::edge::AdmissionPolicy::by_name(&self.scheduler);
+        self.event_clock
+            || policy != Some(crate::edge::AdmissionPolicy::Fifo)
+            || self.queue_capacity > 0
+            || self.stagger_ms > 0.0
+    }
+
+    /// The queue-signal mode this config describes.
+    pub fn queue_signal_mode(&self) -> crate::edge::QueueSignal {
+        crate::edge::QueueSignal::by_name(&self.queue_signal).expect("validated")
     }
 
     /// The edge-scheduler configuration this config describes.  Plain
@@ -278,12 +331,17 @@ impl Config {
     /// with `max_batch` taken from `--max-batch` (1 disables batching).
     pub fn scheduler_config(&self) -> crate::edge::SchedulerConfig {
         let policy = crate::edge::AdmissionPolicy::by_name(&self.scheduler).expect("validated");
-        let event = self.event_clock
-            || policy != crate::edge::AdmissionPolicy::Fifo
-            || self.queue_capacity > 0
-            || self.stagger_ms > 0.0;
-        if !event {
-            return crate::edge::SchedulerConfig::lockstep_fifo();
+        let deadline_ms = if self.deadline_ms > 0.0 { self.deadline_ms } else { f64::INFINITY };
+        if !self.uses_event_scheduler() {
+            // Deadline-miss accounting rides an *explicitly* configured
+            // budget even on the lockstep path (it never affects
+            // admission there, and `is_lockstep` ignores it); the
+            // implicit event-path default must not leak misses into
+            // plain lockstep runs.
+            return crate::edge::SchedulerConfig {
+                deadline_ms: if self.deadline_set { deadline_ms } else { f64::INFINITY },
+                ..crate::edge::SchedulerConfig::lockstep_fifo()
+            };
         }
         crate::edge::SchedulerConfig {
             policy,
@@ -294,7 +352,7 @@ impl Config {
             } else {
                 self.queue_capacity
             },
-            deadline_ms: if self.deadline_ms > 0.0 { self.deadline_ms } else { f64::INFINITY },
+            deadline_ms,
             stagger_ms: self.stagger_ms,
             force_event: true,
         }
@@ -477,6 +535,47 @@ mod tests {
         assert!(Config::from_args(&args("fleet --batch-window -1")).is_err());
         assert!(Config::from_args(&args("fleet --max-batch 0")).is_err());
         assert!(Config::from_args(&args("fleet --stagger -2")).is_err());
+    }
+
+    #[test]
+    fn queue_signal_parses_and_requires_the_event_queue() {
+        // Default: off, valid with the lockstep scheduler.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert_eq!(cfg.queue_signal, "off");
+        assert_eq!(cfg.queue_signal_mode(), crate::edge::QueueSignal::Off);
+        // Signal on + event queue: fine.
+        let cfg =
+            Config::from_args(&args("fleet --queue-signal full --event-clock")).unwrap();
+        assert_eq!(cfg.queue_signal_mode(), crate::edge::QueueSignal::Full);
+        let cfg =
+            Config::from_args(&args("fleet --queue-signal wait --scheduler edf")).unwrap();
+        assert_eq!(cfg.queue_signal_mode(), crate::edge::QueueSignal::Wait);
+        // Signal on without the event queue: rejected with a hint.
+        let err = Config::from_args(&args("fleet --queue-signal full")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("event"), "{msg}");
+        // Unknown signal name lists the choices.
+        let err = Config::from_args(&args("fleet --queue-signal half")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("off") && msg.contains("wait") && msg.contains("full"), "{msg}");
+    }
+
+    #[test]
+    fn lockstep_scheduler_config_carries_only_an_explicit_deadline_budget() {
+        let cfg = Config::from_args(&args("fleet --deadline 40")).unwrap();
+        let sc = cfg.scheduler_config();
+        assert!(sc.is_lockstep(), "a deadline alone must not leave the lockstep path");
+        assert_eq!(sc.deadline_ms, 40.0);
+        let cfg = Config::from_args(&args("fleet --deadline 0")).unwrap();
+        assert_eq!(cfg.scheduler_config().deadline_ms, f64::INFINITY);
+        // No --deadline: the implicit event-path default (50 ms) must NOT
+        // leak deadline misses into plain lockstep runs...
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert!(!cfg.deadline_set);
+        assert_eq!(cfg.scheduler_config().deadline_ms, f64::INFINITY);
+        // ...while the event path keeps its sensible default budget.
+        let cfg = Config::from_args(&args("fleet --scheduler edf")).unwrap();
+        assert_eq!(cfg.scheduler_config().deadline_ms, 50.0);
     }
 
     #[test]

@@ -34,6 +34,16 @@
 //! on-device execution, and executor backlog carries across rounds so
 //! offloads contend when they overlap in *time*, not round index.
 //!
+//! With a **queue signal** ([`EngineConfig::queue_signal`]; DESIGN.md
+//! §9) the select phase stops pretending the edge is the lockstep
+//! `factor(k)` multiplier: a deterministic [`EdgeEstimate`] is frozen
+//! from the live queue before each round, every policy sees the per-arm
+//! predicted wait as known delay (μLinUCB additionally regresses over
+//! the widened queue-feature context under `full`), and the records
+//! carry an **event-clock oracle** — the chosen arm at its realized
+//! mean versus every candidate replayed against the frozen snapshot —
+//! from which `Summary::event_regret_ms` accumulates.
+//!
 //! Both phases are **sharded** across a fixed-size worker pool
 //! ([`EngineConfig::workers`]; DESIGN.md §8): sessions split into
 //! contiguous ranges, each worker advances its range independently, and
@@ -51,8 +61,10 @@ use crate::bandit::policy::argmin;
 use crate::bandit::{FrameContext, Policy, PolicySnapshot, Privileged};
 use crate::config::Config;
 use crate::edge::{
-    EdgeJob, EdgeScheduler, EventQueue, Outcome, QueueStats, Scheduled, SchedulerConfig,
+    EdgeEstimate, EdgeJob, EdgeScheduler, EventQueue, Outcome, QueueSignal, QueueStats, Scheduled,
+    SchedulerConfig,
 };
+use crate::models::features::{QUEUE_LOAD_FEATURE, QUEUE_MERGE_FEATURE};
 use crate::models::{features, FeatureScale, FeatureVector};
 use crate::simulator::{Contention, Environment, SharedIngress};
 use crate::util::rng::Rng;
@@ -130,6 +142,8 @@ pub struct Session {
     front: Vec<f64>,
     contexts: Vec<FeatureVector>,
     expected: Vec<f64>,
+    /// Per-arm forecast queue wait scratch (queue-signal modes).
+    waits: Vec<f64>,
 }
 
 impl Session {
@@ -138,6 +152,7 @@ impl Session {
         let contexts = features::context_vectors(&env.net, &scale);
         let front = env.front_delays().to_vec();
         let expected = vec![0.0; env.num_partitions() + 1];
+        let waits = vec![0.0; env.num_partitions() + 1];
         Session {
             id,
             policy,
@@ -148,6 +163,7 @@ impl Session {
             front,
             contexts,
             expected,
+            waits,
         }
     }
 
@@ -164,6 +180,8 @@ impl Session {
 
 /// One decision through a policy without a simulator environment — the
 /// select step shared by the simulated rounds and the real PJRT pipeline.
+/// `queue_wait_ms` is the per-arm forecast wait (empty = queue signal
+/// off, the legacy context).
 #[allow(clippy::too_many_arguments)]
 pub fn decide(
     policy: &mut dyn Policy,
@@ -174,42 +192,140 @@ pub fn decide(
     contexts: &[FeatureVector],
     rate_mbps: f64,
     expected_totals: Option<&[f64]>,
+    queue_wait_ms: &[f64],
 ) -> Decision {
     let ctx = FrameContext {
         t,
         weight,
         front_delays: front,
         contexts,
+        queue_wait_ms,
         privileged: Privileged { rate_mbps, expected_totals },
     };
     let p = policy.select(&ctx);
     let p_max = front.len() - 1;
     assert!(p <= p_max, "policy {} chose invalid arm {p}", policy.name());
-    // Record the prediction BEFORE feedback (honest Fig 9 curve).
-    let predicted_edge_ms = if p == p_max { None } else { policy.predict_edge_delay(&contexts[p]) };
+    // Record the prediction BEFORE feedback (honest Fig 9 curve).  The
+    // model predicts the wait-stripped edge leg under the queue signal,
+    // so the recorded prediction adds the known forecast wait back —
+    // comparable to `true_edge_ms` in every mode.
+    let predicted_edge_ms = if p == p_max {
+        None
+    } else {
+        policy.predict_edge_delay(&contexts[p]).map(|d| d + ctx.queue_wait(p))
+    };
     Decision { p, is_key, weight, predicted_edge_ms }
 }
 
+/// Frozen cross-session inputs of one engine round: the pre-round queue
+/// forecast, the queue-signal mode, and the capture-clock/deadline
+/// scalars.  Computed once on the main thread and `Copy`, so every
+/// sharded worker reads the same bits — worker count cannot perturb a
+/// round (DESIGN.md §8/§9).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RoundInfo {
+    pub estimate: EdgeEstimate,
+    pub signal: QueueSignal,
+    pub frame_interval_ms: f64,
+    pub stagger_ms: f64,
+    /// Per-frame completion budget for deadline-miss accounting
+    /// (∞ = none); counted in every scheduler mode, independent of EDF.
+    pub deadline_ms: f64,
+    /// Event-clock accounting on (the event scheduler is active)?
+    pub event: bool,
+}
+
+impl RoundInfo {
+    /// The single-stream/lockstep degenerate case: no queue, no signal,
+    /// no deadline — every new code path is dormant.
+    pub(crate) fn lockstep() -> RoundInfo {
+        RoundInfo {
+            estimate: EdgeEstimate::idle(),
+            signal: QueueSignal::Off,
+            frame_interval_ms: 0.0,
+            stagger_ms: 0.0,
+            deadline_ms: f64::INFINITY,
+            event: false,
+        }
+    }
+
+    /// When this frame was captured on session `id`'s device clock.
+    fn capture_ms(&self, t: usize, id: usize) -> f64 {
+        t as f64 * self.frame_interval_ms + self.stagger_ms * id as f64
+    }
+}
+
 /// Select phase for one simulated session: advance its environment and
-/// frame source, expose the contention-adjusted expected delays to
-/// privileged baselines, and take the policy's decision.
+/// frame source, build the decision context, and take the policy's
+/// decision.
+///
+/// With the queue signal **off** the context is the legacy lockstep one
+/// — `Contention::factor(k)` on the environment, expected totals from
+/// the multiplicative model — byte for byte.  With the signal on, the
+/// frozen [`RoundInfo`] forecast *replaces* the factor: the expected
+/// totals become `d_p^f + tx + ŵ_p + amortized solo service`, the
+/// per-arm waits are exposed to every policy as known delay, and under
+/// [`QueueSignal::Full`] the queue feature dimensions are written into
+/// each off-device arm's context vector for the learner to regress on.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_one(
     policy: &mut dyn Policy,
     env: &mut Environment,
     source: &mut FrameSource,
     front: &[f64],
-    contexts: &[FeatureVector],
+    contexts: &mut [FeatureVector],
     expected: &mut [f64],
+    waits: &mut [f64],
     t: usize,
     concurrent_estimate: usize,
     contention: &Contention,
+    round: &RoundInfo,
+    session_id: usize,
 ) -> Decision {
     env.tick(t);
-    env.set_contention_factor(contention.factor(concurrent_estimate));
+    if round.signal.is_off() {
+        env.set_contention_factor(contention.factor(concurrent_estimate));
+        let (is_key, weight) = source.next();
+        for (p, v) in expected.iter_mut().enumerate() {
+            *v = env.expected_total(p);
+        }
+        return decide(
+            policy,
+            t,
+            is_key,
+            weight,
+            front,
+            contexts,
+            env.current_rate_mbps(),
+            Some(&*expected),
+            &[],
+        );
+    }
+    // Queue-aware select: contention reaches the policies through the
+    // virtual-clock forecast, not a multiplicative factor.
+    env.set_contention_factor(1.0);
     let (is_key, weight) = source.next();
-    for (p, v) in expected.iter_mut().enumerate() {
-        *v = env.expected_total(p);
+    let est = &round.estimate;
+    let capture_ms = round.capture_ms(t, session_id);
+    let p_max = env.num_partitions();
+    let rate = env.current_rate_mbps();
+    for p in 0..=p_max {
+        if p == p_max {
+            waits[p] = 0.0;
+            expected[p] = front[p];
+            continue;
+        }
+        let tx = crate::simulator::tx_delay_ms(env.psi_bytes(p), rate, env.rtt_ms);
+        let wait = est.wait_ms(capture_ms + front[p] + tx);
+        waits[p] = wait;
+        expected[p] = front[p] + tx + wait + est.service_ms(env.solo_backend_ms(p));
+    }
+    if round.signal == QueueSignal::Full {
+        // The on-device arm (index p_max) stays the zero vector.
+        for x in contexts.iter_mut().take(p_max) {
+            x[QUEUE_MERGE_FEATURE] = est.merge_probability;
+            x[QUEUE_LOAD_FEATURE] = est.amortization - 1.0;
+        }
     }
     decide(
         policy,
@@ -218,8 +334,9 @@ pub(crate) fn select_one(
         weight,
         front,
         contexts,
-        env.current_rate_mbps(),
+        rate,
         Some(&*expected),
+        waits,
     )
 }
 
@@ -244,6 +361,22 @@ pub(crate) enum EdgeLeg {
 /// NIC + waiting room) and `batch_size` are recorded; under
 /// [`EdgeLeg::Lockstep`] the queueing term is additionally added to the
 /// drawn delay (the PR 1 shared-ingress semantics).
+///
+/// Two accounting layers land in the record (DESIGN.md §9):
+///
+/// * the **legacy lockstep oracle** (`expected_ms`/`oracle_*`) — the
+///   `factor(k)` model, unchanged in every mode so transcripts stay
+///   comparable and the `--queue-signal off` pins hold byte-for-byte;
+/// * the **event-clock oracle** (`event_*`) — when the event scheduler
+///   is active, the chosen arm is valued at its *true realized mean*
+///   and every other candidate replays against the round's frozen
+///   queue snapshot, so `event_oracle_ms ≤` the noise-free realized
+///   delay on every frame (property-tested).
+///
+/// Under a queue signal, learner feedback is the realized edge delay
+/// **minus the realized queue wait**: the wait is known (it entered the
+/// score as known delay), so the model regresses the tx + service
+/// residual instead of conflating it with queue luck.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn realize_one(
     policy: &mut dyn Policy,
@@ -259,6 +392,8 @@ pub(crate) fn realize_one(
     queue_wait_ms: f64,
     batch_size: usize,
     leg: EdgeLeg,
+    round: &RoundInfo,
+    session_id: usize,
 ) {
     env.set_contention_factor(contention.factor(concurrent));
     for (p, v) in expected.iter_mut().enumerate() {
@@ -283,9 +418,48 @@ pub(crate) fn realize_one(
     };
     let delay_ms = front[p] + realized_edge;
     if p != p_max {
-        policy.observe(p, &contexts[p], realized_edge);
+        let feedback = if round.signal.is_off() {
+            realized_edge
+        } else {
+            (realized_edge - queue_wait_ms).max(0.0)
+        };
+        policy.observe(p, &contexts[p], feedback);
     }
     let oracle_p = argmin(expected);
+    let (event_expected_ms, event_oracle_p, event_oracle_ms) = if round.event {
+        // Chosen arm at its realized mean; counterfactuals against the
+        // frozen pre-round snapshot.  Allocation-free running min.
+        let mine = match leg {
+            EdgeLeg::Lockstep => front[p], // only MO realizes this leg in event mode
+            EdgeLeg::Event { mean_ms, .. } => front[p] + mean_ms,
+        };
+        let est = &round.estimate;
+        let capture_ms = round.capture_ms(t, session_id);
+        let rate = env.current_rate_mbps();
+        let mut best_p = p;
+        let mut best = mine;
+        for q in 0..=p_max {
+            if q == p {
+                continue;
+            }
+            let cf = if q == p_max {
+                front[q]
+            } else {
+                let tx = crate::simulator::tx_delay_ms(env.psi_bytes(q), rate, env.rtt_ms);
+                front[q] + est.edge_delay_ms(tx, capture_ms + front[q] + tx, env.solo_backend_ms(q))
+            };
+            if cf < best {
+                best = cf;
+                best_p = q;
+            }
+        }
+        (mine, best_p, best)
+    } else {
+        // Lockstep rounds: the event clock degenerates to the legacy
+        // accounting (one oracle, two names).
+        (expected[p], oracle_p, expected[oracle_p])
+    };
+    let deadline_miss = round.deadline_ms.is_finite() && delay_ms > round.deadline_ms;
     metrics.push(FrameRecord {
         t,
         p,
@@ -301,6 +475,10 @@ pub(crate) fn realize_one(
         queue_wait_ms,
         batch_size: if p == p_max { 0 } else { batch_size },
         rejected,
+        event_expected_ms,
+        event_oracle_p,
+        event_oracle_ms,
+        deadline_miss,
     });
 }
 
@@ -331,6 +509,12 @@ pub struct EngineConfig {
     /// engine's output is **bit-identical at every worker count**
     /// (pinned in `rust/tests/fleet.rs`; DESIGN.md §8).
     pub workers: usize,
+    /// How much of the pre-round queue forecast the select phase
+    /// exposes to the policies (DESIGN.md §9).  [`QueueSignal::Off`]
+    /// (the default) keeps the legacy lockstep decision context, pinned
+    /// bit-identical to the PR 2/3 transcripts; `Wait`/`Full` require
+    /// the event-driven scheduler.
+    pub queue_signal: QueueSignal,
 }
 
 impl Default for EngineConfig {
@@ -341,6 +525,7 @@ impl Default for EngineConfig {
             ingress_mbps: None,
             scheduler: SchedulerConfig::lockstep_fifo(),
             workers: 1,
+            queue_signal: QueueSignal::Off,
         }
     }
 }
@@ -376,8 +561,10 @@ fn session_select(
     t: usize,
     k_estimate: usize,
     contention: &Contention,
+    round: &RoundInfo,
 ) -> Decision {
-    let Session { policy, env, source, front, contexts, expected, .. } = s;
+    let id = s.id;
+    let Session { policy, env, source, front, contexts, expected, waits, .. } = s;
     select_one(
         policy.as_mut(),
         env,
@@ -385,9 +572,12 @@ fn session_select(
         front,
         contexts,
         expected,
+        waits,
         t,
         k_estimate,
         contention,
+        round,
+        id,
     )
 }
 
@@ -399,7 +589,9 @@ fn session_realize(
     t: usize,
     k: usize,
     contention: &Contention,
+    round: &RoundInfo,
 ) {
+    let id = s.id;
     let Session { policy, env, metrics, front, contexts, expected, .. } = s;
     realize_one(
         policy.as_mut(),
@@ -415,6 +607,8 @@ fn session_realize(
         leg.0,
         leg.1,
         leg.2,
+        round,
+        id,
     );
 }
 
@@ -429,11 +623,12 @@ fn select_phase(
     t: usize,
     k_estimate: usize,
     contention: Contention,
+    round: RoundInfo,
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     let Some(pool) = pool else {
         for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
-            *d = session_select(s, t, k_estimate, &contention);
+            *d = session_select(s, t, k_estimate, &contention, &round);
         }
         return;
     };
@@ -448,7 +643,7 @@ fn select_phase(
             let mut guard = shard.lock().expect("select shard lock");
             let (sessions, decisions) = &mut *guard;
             for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
-                *d = session_select(s, t, k_estimate, &contention);
+                *d = session_select(s, t, k_estimate, &contention, &round);
             }
         }
     });
@@ -467,12 +662,13 @@ fn observe_phase(
     t: usize,
     k: usize,
     contention: Contention,
+    round: RoundInfo,
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), legs.len());
     let Some(pool) = pool else {
         for ((s, d), leg) in sessions.iter_mut().zip(decisions).zip(legs) {
-            session_realize(s, d, leg, t, k, &contention);
+            session_realize(s, d, leg, t, k, &contention, &round);
         }
         return;
     };
@@ -487,7 +683,7 @@ fn observe_phase(
             let mut guard = shard.lock().expect("observe shard lock");
             let (sessions, decisions, legs) = &mut *guard;
             for ((s, d), leg) in sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()) {
-                session_realize(s, d, leg, t, k, &contention);
+                session_realize(s, d, leg, t, k, &contention, &round);
             }
         }
     });
@@ -527,6 +723,12 @@ impl Engine {
             Some(EdgeScheduler::new(cfg.scheduler.clone(), cfg.contention))
         };
         let pool = if cfg.workers > 1 { Some(WorkerPool::new(cfg.workers)) } else { None };
+        assert!(
+            cfg.queue_signal.is_off() || scheduler.is_some(),
+            "--queue-signal {} requires the event-driven edge scheduler \
+             (enable --event-clock or a non-lockstep scheduler config)",
+            cfg.queue_signal.name()
+        );
         Engine {
             cfg,
             sessions: Vec::new(),
@@ -585,6 +787,24 @@ impl Engine {
         self.scheduler.as_ref().map(|s| s.stats())
     }
 
+    /// The frozen cross-session inputs of the next round: the queue
+    /// forecast is taken *before* any of the round's offloads submit
+    /// (the select-phase snapshot), on the main thread, so it is
+    /// identical at every worker count.
+    fn round_info(&self) -> RoundInfo {
+        RoundInfo {
+            estimate: match self.scheduler.as_ref() {
+                Some(s) => s.forecast(),
+                None => EdgeEstimate::idle(),
+            },
+            signal: self.cfg.queue_signal,
+            frame_interval_ms: self.cfg.frame_interval_ms,
+            stagger_ms: self.cfg.scheduler.stagger_ms,
+            deadline_ms: self.cfg.scheduler.deadline_ms,
+            event: self.scheduler.is_some(),
+        }
+    }
+
     /// Serve one frame for every session (one engine round).
     pub fn step(&mut self) {
         assert!(!self.sessions.is_empty(), "engine has no sessions");
@@ -592,10 +812,12 @@ impl Engine {
         let k_estimate = self.offloaders_last;
         let contention = self.cfg.contention;
         let n = self.sessions.len();
+        let round = self.round_info();
         let mut scratch = std::mem::take(&mut self.scratch);
 
         // Phase 1 (sharded): every session picks a partition under last
-        // round's observed concurrency (the causal load estimate).
+        // round's observed concurrency (the causal load estimate) — or,
+        // under a queue signal, the pre-round queue forecast.
         scratch.decisions.clear();
         scratch.decisions.resize(
             n,
@@ -608,6 +830,7 @@ impl Engine {
             t,
             k_estimate,
             contention,
+            round,
         );
 
         // Phase 2: the actual concurrency this round determines the edge
@@ -620,9 +843,9 @@ impl Engine {
             .count();
 
         if self.scheduler.is_none() {
-            self.realize_lockstep(t, k, &mut scratch);
+            self.realize_lockstep(t, k, &mut scratch, round);
         } else {
-            self.realize_event(t, k, &mut scratch);
+            self.realize_event(t, k, &mut scratch, round);
         }
         self.scratch = scratch;
 
@@ -636,7 +859,13 @@ impl Engine {
     /// noisy draw per session — sharded across the pool, which preserves
     /// the per-session draw order exactly (each session's RNG is its
     /// own), so the result is identical at any worker count.
-    fn realize_lockstep(&mut self, t: usize, k: usize, scratch: &mut StepScratch) {
+    fn realize_lockstep(
+        &mut self,
+        t: usize,
+        k: usize,
+        scratch: &mut StepScratch,
+        round: RoundInfo,
+    ) {
         let contention = self.cfg.contention;
         let now_ms = t as f64 * self.cfg.frame_interval_ms;
         let n = self.sessions.len();
@@ -678,6 +907,7 @@ impl Engine {
             t,
             k,
             contention,
+            round,
         );
     }
 
@@ -693,12 +923,11 @@ impl Engine {
     /// resolved here on the main thread in canonical (arrival time,
     /// session id) merge order; only the final per-session noisy draw +
     /// learn + record step fans out across the pool.
-    fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch) {
+    fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch, round: RoundInfo) {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
-        let Engine { sessions, ingress, scheduler, cfg, pool, .. } = self;
+        let Engine { sessions, ingress, scheduler, pool, .. } = self;
         let scheduler = scheduler.as_mut().expect("event path has a scheduler");
-        let stagger = scheduler.cfg.stagger_ms;
         let deadline = scheduler.cfg.deadline_ms;
 
         scratch.tx_ms.clear();
@@ -720,7 +949,7 @@ impl Engine {
             let bytes = s.env.psi_bytes(d.p);
             let tx =
                 crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
-            let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
+            let capture = round.capture_ms(t, i);
             scratch.tx_ms[i] = tx;
             queue.push(capture + s.front[d.p] + tx, (i, bytes));
         }
@@ -739,7 +968,7 @@ impl Engine {
             };
             scratch.ingress_wait[i] = ing;
             let d = &scratch.decisions[i];
-            let capture = t as f64 * cfg.frame_interval_ms + stagger * i as f64;
+            let capture = round.capture_ms(t, i);
             let submitted = scheduler.submit(EdgeJob {
                 session: i,
                 p: d.p,
@@ -799,6 +1028,7 @@ impl Engine {
             t,
             k,
             contention,
+            round,
         );
     }
 
@@ -897,6 +1127,7 @@ pub fn fleet_from_config(cfg: &Config) -> Engine {
         ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
         scheduler: cfg.scheduler_config(),
         workers: cfg.workers,
+        queue_signal: cfg.queue_signal_mode(),
     });
     for (i, env) in envs.into_iter().enumerate() {
         let policy = cfg.policy(&env.net, &env.device, &env.edge);
@@ -1133,6 +1364,81 @@ mod tests {
         assert_eq!(fs.workers, 1);
         assert!(fs.serve_ms > 0.0);
         assert!(fs.frames_per_sec.is_finite() && fs.frames_per_sec > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "queue-signal")]
+    fn queue_signal_requires_the_event_scheduler() {
+        Engine::new(EngineConfig {
+            queue_signal: QueueSignal::Full,
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    fn queue_aware_round_populates_event_accounting() {
+        use crate::edge::AdmissionPolicy;
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: SchedulerConfig::event(AdmissionPolicy::Fifo),
+            queue_signal: QueueSignal::Full,
+            ..Default::default()
+        });
+        for i in 0..4 {
+            eng.add_session(
+                policy(&net, "mu-linucb", 40),
+                env(10.0, 1 + i as u64),
+                FrameSource::uniform(),
+            );
+        }
+        eng.run(40);
+        for s in eng.sessions() {
+            assert_eq!(s.metrics.records.len(), 40);
+            for r in &s.metrics.records {
+                assert!(r.event_expected_ms.is_finite() && r.event_expected_ms >= 0.0);
+                assert!(
+                    r.event_oracle_ms <= r.event_expected_ms + 1e-9,
+                    "event oracle must not exceed the chosen arm: {} vs {}",
+                    r.event_oracle_ms,
+                    r.event_expected_ms
+                );
+                assert!(r.event_oracle_p <= s.env.num_partitions());
+            }
+            let sum = s.summary();
+            assert!(sum.event_regret_ms >= -1e-9, "event regret is non-negative per frame");
+        }
+    }
+
+    #[test]
+    fn lockstep_rounds_mirror_legacy_oracle_into_event_fields() {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig::default());
+        eng.add_session(policy(&net, "mu-linucb", 30), env(10.0, 5), FrameSource::uniform());
+        eng.run(30);
+        for r in &eng.sessions()[0].metrics.records {
+            assert_eq!(r.event_expected_ms, r.expected_ms);
+            assert_eq!(r.event_oracle_p, r.oracle_p);
+            assert_eq!(r.event_oracle_ms, r.oracle_ms);
+            assert!(!r.deadline_miss, "no deadline configured");
+        }
+    }
+
+    #[test]
+    fn deadline_misses_count_in_lockstep_mode_too() {
+        // A 1 ms budget on the lockstep path: every frame misses —
+        // deadline accounting is independent of EDF admission.
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig {
+            scheduler: SchedulerConfig { deadline_ms: 1.0, ..SchedulerConfig::lockstep_fifo() },
+            ..Default::default()
+        });
+        assert!(eng.cfg.scheduler.is_lockstep(), "deadline alone must not leave lockstep");
+        eng.add_session(policy(&net, "eo", 20), env(10.0, 2), FrameSource::uniform());
+        eng.run(20);
+        let sum = eng.sessions()[0].summary();
+        assert_eq!(sum.deadline_misses, 20);
+        assert_eq!(eng.fleet_summary().aggregate.deadline_misses, 20);
     }
 
     #[test]

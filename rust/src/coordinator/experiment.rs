@@ -28,11 +28,13 @@ pub fn run(
     source: &mut FrameSource,
 ) -> Metrics {
     let scale = FeatureScale::for_network(&env.net);
-    let contexts = features::context_vectors(&env.net, &scale);
+    let mut contexts = features::context_vectors(&env.net, &scale);
     let front: Vec<f64> = env.front_delays().to_vec();
     let mut expected = vec![0.0; env.num_partitions() + 1];
+    let mut waits = vec![0.0; env.num_partitions() + 1];
     let mut metrics = Metrics::new();
     let contention = Contention::none();
+    let round = engine::RoundInfo::lockstep();
 
     for t in 0..frames {
         let decision = engine::select_one(
@@ -40,11 +42,14 @@ pub fn run(
             env,
             source,
             &front,
-            &contexts,
+            &mut contexts,
             &mut expected,
+            &mut waits,
             t,
             0,
             &contention,
+            &round,
+            0,
         );
         engine::realize_one(
             policy,
@@ -60,6 +65,8 @@ pub fn run(
             0.0,
             1,
             engine::EdgeLeg::Lockstep,
+            &round,
+            0,
         );
     }
     metrics

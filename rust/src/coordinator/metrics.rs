@@ -36,6 +36,20 @@ pub struct FrameRecord {
     /// The frame attempted an offload but the edge scheduler turned it
     /// away (waiting room full); the back-end ran on-device instead.
     pub rejected: bool,
+    /// Event-clock expected delay of the chosen arm: its true realized
+    /// mean under the event scheduler (front + tx + wait + service), or
+    /// a mirror of `expected_ms` on the lockstep path.
+    pub event_expected_ms: f64,
+    /// Event-clock counterfactual oracle: every candidate partition
+    /// replayed against the round's frozen queue snapshot, the chosen
+    /// arm valued at its realized mean — so `event_oracle_ms` never
+    /// exceeds the noise-free realized delay (DESIGN.md §9).
+    pub event_oracle_p: usize,
+    pub event_oracle_ms: f64,
+    /// End-to-end delay exceeded the configured `--deadline` budget
+    /// (false when no finite deadline is set).  Counted independent of
+    /// EDF admission.
+    pub deadline_miss: bool,
 }
 
 /// Aggregated metrics over a run.
@@ -47,8 +61,19 @@ pub struct Summary {
     pub p95_delay_ms: f64,
     pub mean_key_delay_ms: f64,
     pub mean_non_key_delay_ms: f64,
-    /// Σ (expected(chosen) − oracle) — the paper's regret.
+    /// Σ (expected(chosen) − oracle) — the paper's regret, under the
+    /// lockstep `factor(k)` expected-delay model (kept in every mode so
+    /// transcripts stay comparable).
     pub total_regret_ms: f64,
+    /// Σ (event_expected − event_oracle) — cumulative regret rebased on
+    /// the event clock: what the chosen arm actually cost versus the
+    /// counterfactual replay of every candidate against the frozen
+    /// queue snapshot.  Equals `total_regret_ms`'s semantics on the
+    /// lockstep path (where the two oracles coincide).
+    pub event_regret_ms: f64,
+    /// Frames whose end-to-end delay exceeded the configured deadline
+    /// budget (0 when no finite deadline is set).
+    pub deadline_misses: usize,
     /// Histogram of chosen partitions.
     pub partition_histogram: Vec<usize>,
     /// Share of frames on which the oracle arm was chosen.
@@ -112,11 +137,13 @@ impl Metrics {
         let mut key = Streaming::new();
         let mut non_key = Streaming::new();
         let mut regret = 0.0;
+        let mut event_regret = 0.0;
         let mut hist = vec![0usize; num_partitions + 1];
         let mut oracle_hits = 0usize;
         let mut queue_wait = Streaming::new();
         let mut batch = Streaming::new();
         let mut rejected = 0usize;
+        let mut misses = 0usize;
         let delays: Vec<f64> = recs.iter().map(|r| r.delay_ms).collect();
         for r in recs {
             all.push(r.delay_ms);
@@ -126,6 +153,7 @@ impl Metrics {
                 non_key.push(r.delay_ms);
             }
             regret += r.expected_ms - r.oracle_ms;
+            event_regret += r.event_expected_ms - r.event_oracle_ms;
             hist[r.p] += 1;
             if r.p == r.oracle_p {
                 oracle_hits += 1;
@@ -137,6 +165,9 @@ impl Metrics {
             if r.rejected {
                 rejected += 1;
             }
+            if r.deadline_miss {
+                misses += 1;
+            }
         }
         Summary {
             frames: recs.len(),
@@ -146,6 +177,8 @@ impl Metrics {
             mean_key_delay_ms: key.mean(),
             mean_non_key_delay_ms: non_key.mean(),
             total_regret_ms: regret,
+            event_regret_ms: event_regret,
+            deadline_misses: misses,
             partition_histogram: hist,
             oracle_match_rate: oracle_hits as f64 / recs.len() as f64,
             mean_queue_wait_ms: queue_wait.mean(),
@@ -204,11 +237,11 @@ impl Metrics {
     /// CSV dump (one row per frame).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "t,p,is_key,weight,delay_ms,expected_ms,oracle_p,oracle_ms,rate_mbps,predicted_edge_ms,true_edge_ms,queue_wait_ms,batch_size,rejected\n",
+            "t,p,is_key,weight,delay_ms,expected_ms,oracle_p,oracle_ms,rate_mbps,predicted_edge_ms,true_edge_ms,queue_wait_ms,batch_size,rejected,event_expected_ms,event_oracle_p,event_oracle_ms,deadline_miss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{:.3},{:.3},{},{:.3},{:.3},{},{:.3},{:.3},{},{}\n",
+                "{},{},{},{},{:.3},{:.3},{},{:.3},{:.3},{},{:.3},{:.3},{},{},{:.3},{},{:.3},{}\n",
                 r.t,
                 r.p,
                 r.is_key as u8,
@@ -223,6 +256,10 @@ impl Metrics {
                 r.queue_wait_ms,
                 r.batch_size,
                 r.rejected as u8,
+                r.event_expected_ms,
+                r.event_oracle_p,
+                r.event_oracle_ms,
+                r.deadline_miss as u8,
             ));
         }
         out
@@ -330,6 +367,8 @@ fn summary_json(s: &Summary) -> Json {
         ("p50_delay_ms", jnum(s.p50_delay_ms)),
         ("p95_delay_ms", jnum(s.p95_delay_ms)),
         ("total_regret_ms", jnum(s.total_regret_ms)),
+        ("event_regret_ms", jnum(s.event_regret_ms)),
+        ("deadline_misses", Json::from(s.deadline_misses)),
         ("oracle_match_rate", jnum(s.oracle_match_rate)),
         ("mean_queue_wait_ms", jnum(s.mean_queue_wait_ms)),
         ("mean_batch_size", jnum(s.mean_batch_size)),
@@ -358,6 +397,10 @@ mod tests {
             queue_wait_ms: 0.0,
             batch_size: 1,
             rejected: false,
+            event_expected_ms: delay,
+            event_oracle_p: 1,
+            event_oracle_ms: 10.0,
+            deadline_miss: false,
         }
     }
 
@@ -508,6 +551,8 @@ mod tests {
             "\"mean_queue_wait_ms\"",
             "\"mean_batch_size\"",
             "\"rejected_offloads\"",
+            "\"event_regret_ms\"",
+            "\"deadline_misses\"",
             "\"per_session\"",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
@@ -522,12 +567,39 @@ mod tests {
     }
 
     #[test]
-    fn csv_carries_queue_columns() {
+    fn csv_carries_queue_and_event_columns() {
         let mut m = Metrics::new();
         m.push(rec(0, 1, 10.0, false));
         let csv = m.to_csv();
         let header = csv.lines().next().unwrap();
-        assert!(header.ends_with("queue_wait_ms,batch_size,rejected"), "{header}");
+        assert!(
+            header.ends_with(
+                "queue_wait_ms,batch_size,rejected,event_expected_ms,event_oracle_p,\
+                 event_oracle_ms,deadline_miss"
+            ),
+            "{header}"
+        );
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').count(), header.split(',').count());
+    }
+
+    #[test]
+    fn event_regret_and_deadline_misses_accumulate() {
+        let mut m = Metrics::new();
+        // Lockstep-mirrored frame: event regret equals legacy regret.
+        m.push(rec(0, 1, 30.0, false)); // legacy + event: 30 − 10 = 20
+        // Queue-aware frame where the event clock disagrees with the
+        // lockstep model: the lockstep oracle says 10, the frozen-queue
+        // replay says the chosen arm's realized mean 25 vs oracle 15.
+        let mut r = rec(1, 1, 40.0, false);
+        r.event_expected_ms = 25.0;
+        r.event_oracle_ms = 15.0;
+        r.deadline_miss = true;
+        m.push(r);
+        let s = m.summary(2);
+        assert!((s.total_regret_ms - (20.0 + 30.0)).abs() < 1e-12);
+        assert!((s.event_regret_ms - (20.0 + 10.0)).abs() < 1e-12);
+        assert_eq!(s.deadline_misses, 1);
     }
 
     #[test]

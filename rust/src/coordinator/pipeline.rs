@@ -190,6 +190,7 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
             contexts,
             cfg.rate_mbps,
             None,
+            &[],
         );
         let p = decision.p;
 
@@ -234,6 +235,12 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
             queue_wait_ms: 0.0,
             batch_size: if p == p_max { 0 } else { batch },
             rejected: false,
+            // No simulated event clock on the real path: mirror the
+            // realized/oracle placeholders.
+            event_expected_ms: delay_ms,
+            event_oracle_p: 0,
+            event_oracle_ms: 0.0,
+            deadline_miss: false,
         });
 
         clock_ms = (clock_ms + delay_ms).max((t + batch) as f64 * frame_interval_ms);

@@ -109,6 +109,14 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.time_ms)
     }
 
+    /// Iterate over every pending payload in unspecified (heap) order —
+    /// for order-insensitive aggregation such as the backlog work bound
+    /// in [`crate::edge::forecast`].  The heap layout is a pure function
+    /// of the push/pop history, so even this order is deterministic.
+    pub fn payloads(&self) -> impl Iterator<Item = &T> {
+        self.heap.iter().map(|e| &e.payload)
+    }
+
     /// Remove and return the earliest event as `(time_ms, payload)`.
     pub fn pop(&mut self) -> Option<(f64, T)> {
         self.heap.pop().map(|e| (e.time_ms, e.payload))

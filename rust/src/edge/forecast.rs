@@ -1,0 +1,244 @@
+//! Deterministic queue-state forecasting for the select phase.
+//!
+//! Since PR 2 the realize phase runs a real event-driven edge queue, but
+//! the select phase still decided against the lockstep
+//! `Contention::factor(k)` expected-delay model — the policies were
+//! blind to the very dynamics they are supposed to adapt to.  This
+//! module closes that loop (ROADMAP: "Close the select-phase loop on
+//! the event queue"): an [`EdgeEstimate`] is computed **once per round,
+//! on the main thread, before any of the round's offloads submit**,
+//! from nothing but the live [`super::queue::EdgeQueue`] state — the
+//! virtual-clock time at which the executor frees up, the pending
+//! backlog's serial work bound, and the queue's running batch-size
+//! statistics.  Every quantity is a pure function of the queue's
+//! deterministic history, so the estimate is bit-identical at every
+//! worker count and across reruns (DESIGN.md §9).
+//!
+//! What the estimate predicts, per candidate partition p of one session:
+//!
+//! ```text
+//! arrival_p  = capture + d_p^f + tx(ψ_p)        (session-local, known)
+//! wait_p     = max(0, free_at − arrival_p)      [EdgeEstimate::wait_ms]
+//! service_p  = solo_p · min(factor(b̂), b̂)       [EdgeEstimate::service_ms]
+//! d̂_p^e      = tx(ψ_p) + wait_p + service_p
+//! ```
+//!
+//! where `b̂` is the expected cross-session batch size (the queue's
+//! running mean, clamped to `[1, max_batch]`) and `factor` is the
+//! [`Contention`] service-time curve — the same two knobs the batcher
+//! itself runs on, reused as a forecast instead of a lockstep
+//! multiplier.  The model deliberately ignores *same-round* co-arrivals
+//! (they are unknowable before everyone has selected); DESIGN.md §9
+//! discusses that residual.
+//!
+//! [`QueueSignal`] picks how much of the estimate the select phase
+//! exposes: `off` (legacy lockstep context, pinned bit-identical),
+//! `wait` (predicted wait as a known per-arm delay), `full` (wait plus
+//! the widened μLinUCB context dimensions — see
+//! [`crate::models::features`]).
+
+use crate::simulator::Contention;
+
+/// How much queue state the select phase exposes to the policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueSignal {
+    /// Legacy lockstep context: policies select under
+    /// `Contention::factor(k)` exactly as before the forecast existed
+    /// (bit-identical to the PR 2/3 transcripts, pinned in tests).
+    #[default]
+    Off,
+    /// The per-arm predicted wait is exposed as a *known* additive
+    /// delay: μLinUCB folds it into the known part of its score (and
+    /// learns on wait-stripped feedback), Neurosurgeon adds it to its
+    /// layer-wise totals, and the privileged expected totals are the
+    /// queue-aware forecasts.
+    Wait,
+    /// [`QueueSignal::Wait`] plus the widened learner context: the
+    /// batch-merge and service-inflation features
+    /// ([`crate::models::features::QUEUE_MERGE_FEATURE`] /
+    /// [`crate::models::features::QUEUE_LOAD_FEATURE`]) are written
+    /// into every off-device arm's context vector, so μLinUCB regresses
+    /// the residual queue-correlated service structure.
+    Full,
+}
+
+/// Names accepted by `--queue-signal` (CLI / config).
+pub const QUEUE_SIGNAL_NAMES: &[&str] = &["off", "wait", "full"];
+
+impl QueueSignal {
+    /// Look a signal mode up by CLI/config name.
+    pub fn by_name(name: &str) -> Option<QueueSignal> {
+        match name {
+            "off" => Some(QueueSignal::Off),
+            "wait" => Some(QueueSignal::Wait),
+            "full" => Some(QueueSignal::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueSignal::Off => "off",
+            QueueSignal::Wait => "wait",
+            QueueSignal::Full => "full",
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        *self == QueueSignal::Off
+    }
+}
+
+/// A frozen, deterministic snapshot of the edge queue's expected
+/// behaviour, taken before a round's offloads submit (see module docs).
+/// `Copy`, so the sharded select workers all read the same bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeEstimate {
+    /// Virtual time at which the executor frees up, including a serial
+    /// (policy-agnostic) work bound on any still-pending backlog.
+    pub free_at_ms: f64,
+    /// Jobs submitted but not yet dispatched at forecast time (0 in the
+    /// engine's steady state, where every round drains fully).
+    pub backlog: usize,
+    /// Expected cross-session batch size b̂: the queue's running mean
+    /// batch size, clamped to `[1, max_batch]`; exactly 1 with batching
+    /// off or before any batch launched.
+    pub expected_batch: f64,
+    /// Expected per-member service multiplier of a b̂-sized batch:
+    /// `min(factor(b̂), b̂)` — the batcher's amortization curve evaluated
+    /// at the expected size (1.0 = solo cost).
+    pub amortization: f64,
+    /// Probability proxy that an offload shares its execution with at
+    /// least one co-rider: `(b̂ − 1) / (max_batch − 1)`, clamped to
+    /// [0, 1]; 0 with batching off.
+    pub merge_probability: f64,
+}
+
+impl EdgeEstimate {
+    /// The empty idle queue: zero wait at any arrival, solo service.
+    pub fn idle() -> EdgeEstimate {
+        EdgeEstimate {
+            free_at_ms: 0.0,
+            backlog: 0,
+            expected_batch: 1.0,
+            amortization: 1.0,
+            merge_probability: 0.0,
+        }
+    }
+
+    /// Assemble an estimate from raw queue observables (the
+    /// [`super::queue::EdgeQueue::forecast`] entry point).
+    pub fn from_parts(
+        free_at_ms: f64,
+        backlog: usize,
+        mean_batch: f64,
+        max_batch: usize,
+        contention: &Contention,
+    ) -> EdgeEstimate {
+        let expected_batch = if max_batch <= 1 {
+            1.0
+        } else {
+            mean_batch.clamp(1.0, max_batch as f64)
+        };
+        // factor_f ≥ 1 and expected_batch ≥ 1, so the min stays ≥ 1.
+        let amortization = contention.factor_f(expected_batch).min(expected_batch);
+        let merge_probability = if max_batch <= 1 {
+            0.0
+        } else {
+            ((expected_batch - 1.0) / (max_batch as f64 - 1.0)).clamp(0.0, 1.0)
+        };
+        EdgeEstimate { free_at_ms, backlog, expected_batch, amortization, merge_probability }
+    }
+
+    /// Predicted waiting-room delay for a ψ tensor arriving at
+    /// `arrival_ms`: how long until the executor frees up.  Zero for an
+    /// idle queue — and monotone in the backlog behind `free_at_ms`
+    /// (property-tested in `tests/properties.rs`).
+    pub fn wait_ms(&self, arrival_ms: f64) -> f64 {
+        (self.free_at_ms - arrival_ms).max(0.0)
+    }
+
+    /// Predicted execution time of a job with the given solo service
+    /// time, amortized over the expected batch.
+    pub fn service_ms(&self, solo_ms: f64) -> f64 {
+        solo_ms * self.amortization
+    }
+
+    /// Predicted edge-offloading delay d̂_p^e for one candidate arm:
+    /// uplink tx + predicted wait (at `arrival_ms = capture + front +
+    /// tx`) + amortized service.
+    pub fn edge_delay_ms(&self, tx_ms: f64, arrival_ms: f64, solo_ms: f64) -> f64 {
+        tx_ms + self.wait_ms(arrival_ms) + self.service_ms(solo_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_names_round_trip() {
+        for n in QUEUE_SIGNAL_NAMES {
+            let s = QueueSignal::by_name(n).expect("listed name must resolve");
+            assert_eq!(s.name(), *n);
+        }
+        assert!(QueueSignal::by_name("half").is_none());
+        assert!(QueueSignal::Off.is_off());
+        assert!(!QueueSignal::Full.is_off());
+        assert_eq!(QueueSignal::default(), QueueSignal::Off);
+    }
+
+    #[test]
+    fn idle_estimate_predicts_nothing() {
+        let e = EdgeEstimate::idle();
+        assert_eq!(e.wait_ms(0.0), 0.0);
+        assert_eq!(e.wait_ms(123.4), 0.0);
+        assert_eq!(e.service_ms(7.0), 7.0);
+        assert_eq!(e.edge_delay_ms(3.0, 50.0, 7.0), 10.0);
+        assert_eq!(e.merge_probability, 0.0);
+    }
+
+    #[test]
+    fn wait_is_the_gap_to_free_time() {
+        let c = Contention::new(1, 0.25);
+        let e = EdgeEstimate::from_parts(100.0, 3, 1.0, 1, &c);
+        assert_eq!(e.wait_ms(40.0), 60.0);
+        assert_eq!(e.wait_ms(100.0), 0.0);
+        assert_eq!(e.wait_ms(140.0), 0.0, "late arrivals never wait");
+    }
+
+    #[test]
+    fn amortization_follows_the_contention_curve() {
+        let c = Contention::new(1, 0.25);
+        // b̂ = 4 → factor 1.75, well below the serial bound of 4.
+        let e = EdgeEstimate::from_parts(0.0, 0, 4.0, 8, &c);
+        assert!((e.amortization - 1.75).abs() < 1e-12);
+        assert!((e.service_ms(8.0) - 14.0).abs() < 1e-12);
+        assert!((e.merge_probability - 3.0 / 7.0).abs() < 1e-12);
+        // Pathological slope clamps to the serial bound.
+        let steep = EdgeEstimate::from_parts(0.0, 0, 3.0, 8, &Contention::new(1, 3.0));
+        assert!((steep.amortization - 3.0).abs() < 1e-12);
+        // Capacity soaks the whole batch: solo cost.
+        let free = EdgeEstimate::from_parts(0.0, 0, 4.0, 8, &Contention::new(8, 0.5));
+        assert_eq!(free.amortization, 1.0);
+    }
+
+    #[test]
+    fn batching_off_pins_the_batch_features() {
+        let c = Contention::new(1, 0.5);
+        let e = EdgeEstimate::from_parts(10.0, 1, 6.5, 1, &c);
+        assert_eq!(e.expected_batch, 1.0);
+        assert_eq!(e.amortization, 1.0);
+        assert_eq!(e.merge_probability, 0.0);
+    }
+
+    #[test]
+    fn mean_batch_is_clamped_to_the_configured_maximum() {
+        let c = Contention::new(1, 0.25);
+        let e = EdgeEstimate::from_parts(0.0, 0, 40.0, 4, &c);
+        assert_eq!(e.expected_batch, 4.0);
+        assert_eq!(e.merge_probability, 1.0);
+        let cold = EdgeEstimate::from_parts(0.0, 0, 0.0, 4, &c);
+        assert_eq!(cold.expected_batch, 1.0, "no history yet → solo expectation");
+    }
+}

@@ -16,10 +16,12 @@
 pub mod admission;
 pub mod batcher;
 pub mod clock;
+pub mod forecast;
 pub mod queue;
 
 pub use admission::{AdmissionPolicy, SCHEDULER_NAMES};
 pub use clock::{EventQueue, VirtualClock};
+pub use forecast::{EdgeEstimate, QueueSignal, QUEUE_SIGNAL_NAMES};
 pub use queue::{EdgeJob, EdgeQueue, QueueConfig, QueueStats, Scheduled};
 
 use crate::simulator::Contention;
@@ -165,6 +167,12 @@ impl EdgeScheduler {
     /// the serving engine drives every round.
     pub fn drain_scheduled_into(&mut self, out: &mut Vec<Scheduled>) {
         self.queue.drain_into(out);
+    }
+
+    /// Deterministic pre-round forecast of the queue's behaviour — the
+    /// select phase's [`EdgeEstimate`] (see [`forecast`]).
+    pub fn forecast(&self) -> EdgeEstimate {
+        self.queue.forecast()
     }
 
     pub fn stats(&self) -> &QueueStats {

@@ -185,6 +185,28 @@ impl EdgeQueue {
         self.clock.now_ms()
     }
 
+    /// Deterministic forecast of this queue's near-future behaviour
+    /// (see [`super::forecast`]): executor-free time plus a serial work
+    /// bound on any pending backlog, and the running batch statistics
+    /// under the configured batching knobs.  Pure read — computing the
+    /// forecast never perturbs the schedule — and allocation-free.
+    pub fn forecast(&self) -> super::forecast::EdgeEstimate {
+        let mut free = self.clock.now_ms();
+        for job in &self.waiting {
+            free += job.solo_ms;
+        }
+        for job in self.arrivals.payloads() {
+            free += job.solo_ms;
+        }
+        super::forecast::EdgeEstimate::from_parts(
+            free,
+            self.pending(),
+            self.stats.mean_batch_size(),
+            self.cfg.max_batch,
+            &self.cfg.contention,
+        )
+    }
+
     /// Submit a job; returns `false` (and counts a rejection) when the
     /// waiting room is full — the caller then serves the frame on-device.
     pub fn submit(&mut self, mut job: EdgeJob) -> bool {

@@ -42,6 +42,15 @@ SUBCOMMANDS:
              --scheduler fifo (the default) keeps the PR-1-compatible
              lockstep rounds; under the event queue, rejected offloads
              fall back to on-device execution.
+             --queue-signal off|wait|full closes the select loop on a
+             deterministic pre-round queue forecast (wait: predicted
+             wait becomes known per-arm delay for every policy; full:
+             μLinUCB additionally learns over queue-state context
+             dimensions).  Requires the event queue; `off` (default) is
+             bit-identical to the legacy transcripts.  Frames whose
+             delay exceeds --deadline are counted as deadline misses in
+             every scheduler mode; event-clock regret lands in the
+             summaries and --json.
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -155,7 +164,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     } else {
         println!(
             "  scheduler: {} (event clock), batch window {} ms max {}, queue capacity {}, \
-             deadline {}, stagger {} ms",
+             deadline {}, stagger {} ms, queue signal {}",
             sched.policy.name(),
             sched.batch_window_ms,
             sched.max_batch,
@@ -170,6 +179,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 "none".to_string()
             },
             sched.stagger_ms,
+            cfg.queue_signal,
         );
     }
     eng.run(cfg.frames);
@@ -202,6 +212,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fs.aggregate.p95_delay_ms,
         fs.aggregate.total_regret_ms,
         100.0 * fs.aggregate.oracle_match_rate,
+    );
+    println!(
+        "event clock: regret {:.1} ms  deadline misses {}{}",
+        fs.aggregate.event_regret_ms,
+        fs.aggregate.deadline_misses,
+        if sched.deadline_ms.is_finite() {
+            format!(" (budget {} ms)", sched.deadline_ms)
+        } else {
+            " (no deadline)".to_string()
+        },
     );
     println!(
         "contention: mean offloaders {:.2}/{}  peak {}  peak edge-load factor {:.2}x  fairness spread {:.1} ms (p95 spread {:.1} ms)",

@@ -1,16 +1,41 @@
-//! Contextual feature construction: the paper's x_p (§2.2, Fig 5).
+//! Contextual feature construction: the paper's x_p (§2.2, Fig 5),
+//! widened with two queue-state dimensions (DESIGN.md §9).
 //!
+//! The paper's base context is
 //! x_p = [m_c, m_f, m_a, n_c, n_f, n_a, ψ_p]ᵀ — back-end MAC counts per
 //! layer type, back-end layer counts per type, and the intermediate data
-//! size crossing the link.  d = 7.  Raw counts span ~9 orders of
+//! size crossing the link (d = 7).  Raw counts span ~9 orders of
 //! magnitude, so a [`FeatureScale`] normalizes them to O(1) before they
 //! hit the ridge regression (conditioning of A_t); the scale is fixed
 //! per-network so the linearity of the delay model is preserved.
+//!
+//! Dimensions [`QUEUE_MERGE_FEATURE`] and [`QUEUE_LOAD_FEATURE`] carry
+//! the live edge-queue forecast ([`crate::edge::forecast`]) under
+//! `--queue-signal full`: the batch-merge probability and the expected
+//! service inflation of riding a cross-session batch.  The static
+//! vectors built here leave them at **exactly 0.0** — the serving
+//! engine writes them per frame when (and only when) the full queue
+//! signal is on, so every legacy path sees zero queue dimensions.
+//! Zeros in trailing dimensions leave the 7-dim ridge arithmetic
+//! bit-identical (the βI prior block-diagonalizes and every product
+//! against the extra coordinates is exactly 0.0), which is what keeps
+//! the `--queue-signal off` transcripts pinned byte-for-byte.
 
 use super::Network;
 
-/// Context dimension d (paper: d = 7).
-pub const CONTEXT_DIM: usize = 7;
+/// The paper's base context dimension (d = 7).
+pub const BASE_CONTEXT_DIM: usize = 7;
+
+/// Queue dimension: batch-merge probability
+/// ([`crate::edge::EdgeEstimate::merge_probability`]).
+pub const QUEUE_MERGE_FEATURE: usize = 7;
+
+/// Queue dimension: expected batch service inflation,
+/// `amortization − 1` ([`crate::edge::EdgeEstimate::amortization`]).
+pub const QUEUE_LOAD_FEATURE: usize = 8;
+
+/// Full context dimension: paper base + queue-state dimensions.
+pub const CONTEXT_DIM: usize = BASE_CONTEXT_DIM + 2;
 
 /// A normalized context vector for one partition point.
 pub type FeatureVector = [f64; CONTEXT_DIM];
@@ -56,18 +81,19 @@ pub fn context_vectors(net: &Network, scale: &FeatureScale) -> Vec<FeatureVector
         .collect()
 }
 
-/// Build the normalized x_p for a single partition point.
+/// Build the normalized x_p for a single partition point.  The queue
+/// dimensions stay 0.0 — dynamic state the engine fills at select time.
 pub fn context_vector(net: &Network, p: usize, scale: &FeatureScale) -> FeatureVector {
     let s = net.backend_stats(p);
-    [
-        s.macs_conv as f64 / scale.macs,
-        s.macs_fc as f64 / scale.macs,
-        s.macs_act as f64 / scale.macs,
-        s.n_conv as f64 / scale.layers,
-        s.n_fc as f64 / scale.layers,
-        s.n_act as f64 / scale.layers,
-        net.intermediate_bytes(p) as f64 / scale.bytes,
-    ]
+    let mut x = [0.0; CONTEXT_DIM];
+    x[0] = s.macs_conv as f64 / scale.macs;
+    x[1] = s.macs_fc as f64 / scale.macs;
+    x[2] = s.macs_act as f64 / scale.macs;
+    x[3] = s.n_conv as f64 / scale.layers;
+    x[4] = s.n_fc as f64 / scale.layers;
+    x[5] = s.n_act as f64 / scale.layers;
+    x[6] = net.intermediate_bytes(p) as f64 / scale.bytes;
+    x
 }
 
 /// ℓ2 norm of a feature vector (the theory's C_x bound).
@@ -79,6 +105,20 @@ pub fn norm(x: &FeatureVector) -> f64 {
 mod tests {
     use super::*;
     use crate::models::zoo;
+
+    #[test]
+    fn static_vectors_leave_the_queue_dims_zero() {
+        // The engine owns the queue dimensions; every statically built
+        // vector must leave them at exactly 0.0 so legacy paths are
+        // bit-identical to the 7-dim model.
+        let net = zoo::vgg16();
+        let scale = FeatureScale::for_network(&net);
+        for (p, x) in context_vectors(&net, &scale).iter().enumerate() {
+            assert_eq!(x[QUEUE_MERGE_FEATURE], 0.0, "p={p}");
+            assert_eq!(x[QUEUE_LOAD_FEATURE], 0.0, "p={p}");
+        }
+        assert_eq!(CONTEXT_DIM, BASE_CONTEXT_DIM + 2);
+    }
 
     #[test]
     fn mo_arm_is_zero_vector() {

@@ -18,7 +18,10 @@
 pub mod features;
 pub mod zoo;
 
-pub use features::{FeatureScale, FeatureVector, CONTEXT_DIM};
+pub use features::{
+    FeatureScale, FeatureVector, BASE_CONTEXT_DIM, CONTEXT_DIM, QUEUE_LOAD_FEATURE,
+    QUEUE_MERGE_FEATURE,
+};
 
 /// Tensor shape flowing between layers (f32 throughout, NHWC for images).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

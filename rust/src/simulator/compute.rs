@@ -156,6 +156,17 @@ impl Contention {
         1.0 + self.slope * concurrent.saturating_sub(self.capacity) as f64
     }
 
+    /// Continuous extension of [`Contention::factor`] for fractional
+    /// concurrency — the queue forecast evaluates the service curve at
+    /// the *expected* batch size, which is a running mean, not an
+    /// integer.  Agrees with `factor` at integer points.
+    pub fn factor_f(&self, concurrent: f64) -> f64 {
+        if self.capacity == usize::MAX {
+            return 1.0;
+        }
+        1.0 + self.slope * (concurrent - self.capacity as f64).max(0.0)
+    }
+
     /// Does this model ever produce a factor above 1?
     pub fn is_active(&self) -> bool {
         self.slope > 0.0 && self.capacity != usize::MAX
@@ -305,6 +316,16 @@ mod tests {
             assert_eq!(c.factor(k), 1.0);
         }
         assert!(!c.is_active());
+    }
+
+    #[test]
+    fn continuous_factor_agrees_at_integers_and_interpolates() {
+        let c = Contention::new(2, 0.5);
+        for k in [0usize, 1, 2, 3, 8] {
+            assert_eq!(c.factor_f(k as f64), c.factor(k), "k={k}");
+        }
+        assert!((c.factor_f(2.5) - 1.25).abs() < 1e-12);
+        assert_eq!(Contention::none().factor_f(1e9), 1.0);
     }
 
     #[test]

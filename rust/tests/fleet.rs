@@ -42,6 +42,7 @@ fn legacy_run(
             weight,
             front_delays: &front,
             contexts: &contexts,
+            queue_wait_ms: &[],
             privileged: Privileged {
                 rate_mbps: env.current_rate_mbps(),
                 expected_totals: Some(&expected_totals),
@@ -71,6 +72,11 @@ fn legacy_run(
             queue_wait_ms: 0.0,
             batch_size: if p == p_max { 0 } else { 1 },
             rejected: false,
+            // Lockstep rounds: the event clock mirrors the legacy oracle.
+            event_expected_ms: expected_totals[p],
+            event_oracle_p: oracle_p,
+            event_oracle_ms: expected_totals[oracle_p],
+            deadline_miss: false,
         });
     }
     metrics
@@ -187,6 +193,7 @@ fn legacy_fleet_run(
                 weight,
                 front_delays: &fronts[i],
                 contexts: &contexts[i],
+                queue_wait_ms: &[],
                 privileged: Privileged {
                     rate_mbps: env.current_rate_mbps(),
                     expected_totals: Some(&expected[i]),
@@ -252,6 +259,11 @@ fn legacy_fleet_run(
                 queue_wait_ms: ingress_queue[i],
                 batch_size: if p == p_max { 0 } else { 1 },
                 rejected: false,
+                // Lockstep rounds: the event clock mirrors the legacy oracle.
+                event_expected_ms: expected[i][p],
+                event_oracle_p: oracle_p,
+                event_oracle_ms: expected[i][oracle_p],
+                deadline_miss: false,
             });
         }
         k_prev = k;
@@ -350,10 +362,15 @@ fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
 
     for workers in [1usize, 2, 4] {
         let (policies, envs, sources) = build_parts();
+        // The regression pin for the new knob: `--queue-signal off` must
+        // keep the sharded engine on the verbatim legacy transcript —
+        // including the new event-clock record fields, which mirror the
+        // legacy oracle on the lockstep path.
         let mut eng = Engine::new(EngineConfig {
             contention,
             ingress_mbps: Some(200.0),
             workers,
+            queue_signal: ans::edge::QueueSignal::Off,
             ..Default::default()
         });
         for ((policy, env), source) in policies.into_iter().zip(envs).zip(sources) {
@@ -378,6 +395,22 @@ fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
                 assert_eq!(l.batch_size, w.batch_size, "workers={workers} s{i} t={}", l.t);
                 assert_eq!(l.is_key, w.is_key, "workers={workers} s{i} t={}", l.t);
                 assert_eq!(l.weight, w.weight, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.event_expected_ms, w.event_expected_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.event_oracle_p, w.event_oracle_p,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.event_oracle_ms, w.event_oracle_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.deadline_miss, w.deadline_miss, "workers={workers} s{i} t={}", l.t);
             }
         }
     }

@@ -506,6 +506,128 @@ fn prop_edge_queue_keeps_fifo_order_within_a_priority_class() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Queue forecast invariants (DESIGN.md §9): an empty idle queue predicts
+// zero, and the predicted wait is monotone in the backlog depth — more
+// executed (or pending) work can only push the free time later.
+// ---------------------------------------------------------------------------
+#[test]
+fn forecast_of_an_empty_idle_queue_is_zero() {
+    let q = EdgeQueue::new(QueueConfig::new(AdmissionPolicy::Fifo, Contention::new(1, 0.25)));
+    let est = q.forecast();
+    assert_eq!(est.backlog, 0);
+    assert_eq!(est.free_at_ms, 0.0);
+    for arrival in [0.0, 1.0, 33.3, 1e6] {
+        assert_eq!(est.wait_ms(arrival), 0.0, "idle queue must predict zero wait");
+    }
+    assert_eq!(est.expected_batch, 1.0);
+    assert_eq!(est.service_ms(8.0), 8.0, "idle queue predicts solo service");
+}
+
+#[test]
+fn prop_forecast_wait_is_monotone_in_backlog_depth() {
+    // Submit-and-drain a growing prefix of the same job set: the
+    // forecast wait at any probe arrival must be non-decreasing in the
+    // number of jobs the executor has absorbed, and likewise when the
+    // jobs are still pending (submitted, not drained).
+    forall(21, 40, random_jobs, |jobs| {
+        let probes = [0.0, 50.0, 200.0];
+        let mut last_drained = [0.0f64; 3];
+        let mut last_pending = [0.0f64; 3];
+        for depth in 1..=jobs.0.len() {
+            let prefix = JobSet(jobs.0[..depth].to_vec());
+            let cfg = || QueueConfig::new(AdmissionPolicy::Fifo, Contention::new(1, 0.25));
+            let mut drained = EdgeQueue::new(cfg());
+            submit_all(&mut drained, &prefix);
+            drained.drain();
+            let est_drained = drained.forecast();
+            ensure(est_drained.backlog == 0, "drained queue has no backlog")?;
+            let mut pending = EdgeQueue::new(cfg());
+            submit_all(&mut pending, &prefix);
+            let est_pending = pending.forecast();
+            ensure(est_pending.backlog == depth, "pending backlog counts submitted jobs")?;
+            for (i, &probe) in probes.iter().enumerate() {
+                let wd = est_drained.wait_ms(probe);
+                ensure(
+                    wd + 1e-9 >= last_drained[i],
+                    format!("drained wait shrank at depth {depth}: {} -> {wd}", last_drained[i]),
+                )?;
+                last_drained[i] = wd;
+                let wp = est_pending.wait_ms(probe);
+                ensure(
+                    wp + 1e-9 >= last_pending[i],
+                    format!("pending wait shrank at depth {depth}: {} -> {wp}", last_pending[i]),
+                )?;
+                last_pending[i] = wp;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Event-clock oracle invariant: with measurement noise off, the
+// counterfactual oracle (candidates replayed against the frozen
+// pre-round snapshot, the chosen arm at its realized mean) never
+// exceeds the realized end-to-end delay of any frame — on-device,
+// served, or rejected alike.
+// ---------------------------------------------------------------------------
+#[test]
+fn event_oracle_delay_never_exceeds_realized_delay() {
+    use ans::coordinator::engine::{Engine, EngineConfig, FrameSource};
+    use ans::edge::{QueueSignal, SchedulerConfig};
+    use ans::simulator::Contention as Cont;
+
+    for signal in [QueueSignal::Off, QueueSignal::Full] {
+        let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+        sc.max_batch = 4;
+        sc.batch_window_ms = 4.0;
+        sc.queue_capacity = 4; // below the 6-session burst: rejections occur
+        let mut eng = Engine::new(EngineConfig {
+            contention: Cont::new(1, 0.25),
+            scheduler: sc,
+            queue_signal: signal,
+            ..Default::default()
+        });
+        let net = zoo::vgg16();
+        for i in 0..6 {
+            let mut env = Environment::new(
+                net.clone(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::constant(12.0 + 2.0 * i as f64),
+                90 + i as u64,
+            );
+            env.noise_std_ms = 0.0;
+            let policy = ans::bandit::by_name(
+                if i % 2 == 0 { "mu-linucb" } else { "eo" },
+                &net,
+                &DEVICE_MAXN,
+                &EDGE_GPU,
+                120,
+                None,
+                None,
+            )
+            .unwrap();
+            eng.add_session(policy, env, FrameSource::uniform());
+        }
+        eng.run(120);
+        for s in eng.sessions() {
+            for r in &s.metrics.records {
+                assert!(
+                    r.event_oracle_ms <= r.delay_ms + 1e-9,
+                    "signal {signal:?} s{} t={}: oracle {:.4} > realized {:.4}",
+                    s.id,
+                    r.t,
+                    r.event_oracle_ms,
+                    r.delay_ms
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_edge_queue_batch_delay_never_exceeds_sum_of_solo_delays() {
     let mut case = 0usize;
