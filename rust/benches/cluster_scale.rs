@@ -1,0 +1,121 @@
+//! Cluster-scale sweep: replicas × sessions (§Scale, the replica tier's
+//! acceptance exhibit).
+//!
+//! For each cell the bench serves the same deterministic fleet —
+//! heterogeneous per-session uplinks, one μLinUCB learner per session —
+//! through the replica cluster at 1/2/4 replicas and reports frames/sec
+//! plus the fleet mean delay.  Replication is a *simulated-capacity*
+//! axis, not a wall-clock one: more replicas means more edge executors
+//! sharing the fleet (lower contention, lower delay), while the serving
+//! work per frame stays the same, so frames/sec mainly tracks router +
+//! per-replica bookkeeping overhead.  The cluster is bit-identical at
+//! every worker count (pinned in `rust/tests/cluster.rs`), so none of
+//! this sweep is behaviour drift.
+//!
+//! Results land in `bench_results/cluster_scale.json`; CI runs the
+//! sweep in smoke mode (`BENCH_SAMPLES=3`) and uploads the artifact
+//! alongside the other bench JSONs.
+
+use ans::bandit;
+use ans::coordinator::cluster::{Cluster, ClusterConfig, Placement, ReplicaSpec};
+use ans::coordinator::engine::EngineConfig;
+use ans::coordinator::FrameSource;
+use ans::models::zoo;
+use ans::simulator::{scenario, Contention, Workload, DEVICE_MAXN, EDGE_GPU};
+use ans::util::bench::Bench;
+use ans::util::json::{obj, Json};
+use std::time::Instant;
+
+const REPLICAS: &[usize] = &[1, 2, 4];
+const SESSIONS: &[usize] = &[64, 256];
+/// Total session-frames per run, held roughly constant across fleet
+/// sizes so every cell does comparable work.
+const FRAME_BUDGET: usize = 20_000;
+
+fn build_cluster(sessions: usize, replicas: usize, placement: Placement) -> Cluster {
+    let net = zoo::partnet();
+    let rounds = (FRAME_BUDGET / sessions).max(20);
+    let mut cl = Cluster::new(
+        ClusterConfig::new(
+            EngineConfig {
+                contention: Contention::new(2, 0.25),
+                ingress_mbps: Some(400.0),
+                ..Default::default()
+            },
+            placement,
+            50,
+        ),
+        ReplicaSpec::uniform(replicas, EDGE_GPU, Workload::constant(1.0)),
+    );
+    for env in scenario::fleet(net.clone(), sessions, 12.0, 7) {
+        let policy =
+            bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, rounds, None, None)
+                .expect("known policy");
+        cl.add_session(policy, env, FrameSource::uniform());
+    }
+    cl
+}
+
+/// Serve the scenario once; returns (frames/sec, fleet mean delay ms).
+fn serve_once(sessions: usize, replicas: usize, placement: Placement) -> (f64, f64) {
+    let rounds = (FRAME_BUDGET / sessions).max(20);
+    let mut cl = build_cluster(sessions, replicas, placement);
+    let start = Instant::now();
+    cl.run(rounds);
+    let secs = start.elapsed().as_secs_f64();
+    let fs = cl.fleet_summary();
+    ((sessions * rounds) as f64 / secs.max(1e-9), fs.aggregate.mean_delay_ms)
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let samples = b.samples.max(1);
+    println!("cluster_scale: {} sample(s) per cell", samples);
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &sessions in SESSIONS {
+        let name = format!("cluster_scale/s{sessions}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let mut base_fps = 0.0;
+        for &replicas in REPLICAS {
+            // Best-of-samples frames/sec (least-noisy machine estimate);
+            // the mean delay is deterministic across samples.
+            let mut best = 0.0_f64;
+            let mut mean_delay = f64::NAN;
+            for _ in 0..samples {
+                let (fps, delay) = serve_once(sessions, replicas, Placement::LeastLoaded);
+                best = best.max(fps);
+                mean_delay = delay;
+            }
+            if replicas == 1 {
+                base_fps = best;
+            }
+            let relative = if base_fps > 0.0 { best / base_fps } else { 1.0 };
+            println!(
+                "{name:<32} replicas {replicas}  {best:>12.0} frames/s  (x{relative:.2} vs 1 \
+                 replica)  fleet mean {mean_delay:>8.1} ms"
+            );
+            rows.push(obj(vec![
+                ("sessions", Json::from(sessions)),
+                ("replicas", Json::from(replicas)),
+                ("frames_per_sec", Json::from(best)),
+                ("throughput_vs_1_replica", Json::from(relative)),
+                ("mean_delay_ms", Json::from(mean_delay)),
+            ]));
+        }
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::from("cluster_scale")),
+        ("samples", Json::from(samples)),
+        ("frame_budget", Json::from(FRAME_BUDGET)),
+        ("placement", Json::from("least-loaded")),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").expect("creating bench_results/");
+    std::fs::write("bench_results/cluster_scale.json", doc.to_string())
+        .expect("writing bench_results/cluster_scale.json");
+    println!("cluster sweep JSON -> bench_results/cluster_scale.json");
+}

@@ -402,6 +402,8 @@ impl Policy for LinUcb {
             resets: self.resets,
             // One clone of the cached buffer — no A⁻¹b solve per call.
             theta: Some(self.theta_cache.clone()),
+            ridge_a: Some(self.ridge.a.data.clone()),
+            ridge_b: Some(self.ridge.b.clone()),
         }
     }
 }
@@ -613,6 +615,14 @@ mod tests {
         let theta = snap.theta.expect("LinUCB keeps a model");
         assert_eq!(theta.len(), CONTEXT_DIM);
         assert!(theta.iter().any(|v| v.abs() > 0.0));
+        // The full ridge state rides the snapshot (the migration-lossless
+        // property in tests/cluster.rs compares these bit-for-bit).
+        let a = snap.ridge_a.expect("LinUCB exposes A");
+        let b = snap.ridge_b.expect("LinUCB exposes b");
+        assert_eq!(a.len(), CONTEXT_DIM * CONTEXT_DIM);
+        assert_eq!(b.len(), CONTEXT_DIM);
+        assert_eq!(a, pol.ridge.a.data);
+        assert_eq!(b, pol.ridge.b);
     }
 
     #[test]

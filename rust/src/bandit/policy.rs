@@ -70,6 +70,13 @@ pub struct PolicySnapshot {
     pub resets: usize,
     /// Current model estimate θ̂, if the policy keeps one.
     pub theta: Option<Vec<f64>>,
+    /// Row-major ridge design matrix A = βI + Σxxᵀ (LinUCB family) —
+    /// with [`PolicySnapshot::ridge_b`], the complete learner state the
+    /// cluster's migration-lossless property pins bit-for-bit across
+    /// replica moves (`rust/tests/cluster.rs`).
+    pub ridge_a: Option<Vec<f64>>,
+    /// Ridge response vector b = Σx·d^e (see [`PolicySnapshot::ridge_a`]).
+    pub ridge_b: Option<Vec<f64>>,
 }
 
 /// A partition-selection policy.
@@ -97,6 +104,8 @@ pub trait Policy: Send {
             observations: 0,
             resets: 0,
             theta: None,
+            ridge_a: None,
+            ridge_b: None,
         }
     }
 }

@@ -78,6 +78,19 @@ pub struct Config {
     /// bit-identical to the legacy transcripts; `wait`/`full` require
     /// the event-driven edge queue.
     pub queue_signal: String,
+    /// Herding mitigation: amplitude (ms) of the deterministic
+    /// per-session phase offset folded into the published queue-signal
+    /// wait (0 = off, pinned bit-identical; > 0 requires an active
+    /// `--queue-signal`).
+    pub signal_stagger_ms: f64,
+    /// Engine replicas behind the cluster router (`ans fleet
+    /// --replicas`).  1 = the plain single-engine fleet, byte-for-byte.
+    pub replicas: usize,
+    /// Session-placement policy across replicas
+    /// (`static` | `least-loaded` | `migrate`).
+    pub placement: String,
+    /// Rounds between rebalances under `--placement migrate`.
+    pub migrate_every: usize,
 }
 
 impl Default for Config {
@@ -113,6 +126,10 @@ impl Default for Config {
             stagger_ms: 0.0,
             event_clock: false,
             queue_signal: "off".into(),
+            signal_stagger_ms: 0.0,
+            replicas: 1,
+            placement: "static".into(),
+            migrate_every: 50,
         }
     }
 }
@@ -167,6 +184,10 @@ impl Config {
                 "stagger_ms" => self.stagger_ms = val.as_f64()?,
                 "event_clock" => self.event_clock = val.as_bool()?,
                 "queue_signal" => self.queue_signal = val.as_str()?.to_string(),
+                "signal_stagger_ms" => self.signal_stagger_ms = val.as_f64()?,
+                "replicas" => self.replicas = val.as_usize()?,
+                "placement" => self.placement = val.as_str()?.to_string(),
+                "migrate_every" => self.migrate_every = val.as_usize()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -223,6 +244,12 @@ impl Config {
         if let Some(v) = args.get("queue-signal") {
             self.queue_signal = v.to_string();
         }
+        self.signal_stagger_ms = args.f64_or("signal-stagger", self.signal_stagger_ms)?;
+        self.replicas = args.usize_or("replicas", self.replicas)?;
+        if let Some(v) = args.get("placement") {
+            self.placement = v.to_string();
+        }
+        self.migrate_every = args.usize_or("migrate-every", self.migrate_every)?;
         Ok(())
     }
 
@@ -306,7 +333,41 @@ impl Config {
                 self.queue_signal
             );
         }
+        anyhow::ensure!(
+            self.signal_stagger_ms >= 0.0 && self.signal_stagger_ms.is_finite(),
+            "signal-stagger must be ≥ 0 ms"
+        );
+        if self.signal_stagger_ms > 0.0 {
+            anyhow::ensure!(
+                signal != Some(crate::edge::QueueSignal::Off),
+                "--signal-stagger perturbs the published queue signal — \
+                 add --queue-signal wait|full"
+            );
+        }
+        anyhow::ensure!(self.replicas >= 1, "replicas must be ≥ 1");
+        anyhow::ensure!(
+            self.replicas <= 64,
+            "replicas must be ≤ 64 (each replica owns a worker pool and an edge queue)"
+        );
+        anyhow::ensure!(
+            self.replicas * self.workers <= 256,
+            "replicas × workers must be ≤ 256 total worker threads \
+             (each replica spawns its own {}-worker pool)",
+            self.workers
+        );
+        anyhow::ensure!(
+            crate::coordinator::cluster::Placement::by_name(&self.placement).is_some(),
+            "unknown placement `{}` — valid placements: {}",
+            self.placement,
+            crate::coordinator::cluster::PLACEMENT_NAMES.join(", ")
+        );
+        anyhow::ensure!(self.migrate_every >= 1, "migrate-every must be ≥ 1 round");
         Ok(())
+    }
+
+    /// The cluster placement policy this config describes.
+    pub fn placement_mode(&self) -> crate::coordinator::cluster::Placement {
+        crate::coordinator::cluster::Placement::by_name(&self.placement).expect("validated")
     }
 
     /// Does this configuration route offloads through the event-driven
@@ -576,6 +637,53 @@ mod tests {
         // ...while the event path keeps its sensible default budget.
         let cfg = Config::from_args(&args("fleet --scheduler edf")).unwrap();
         assert_eq!(cfg.scheduler_config().deadline_ms, 50.0);
+    }
+
+    #[test]
+    fn cluster_knobs_parse_and_validate() {
+        use crate::coordinator::cluster::Placement;
+        // Defaults: one replica, static placement.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.placement, "static");
+        assert_eq!(cfg.placement_mode(), Placement::Static);
+        assert_eq!(cfg.migrate_every, 50);
+        // Full cluster spelling.
+        let cfg = Config::from_args(&args(
+            "fleet --sessions 16 --replicas 4 --placement migrate --migrate-every 25",
+        ))
+        .unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.placement_mode(), Placement::Migrate);
+        assert_eq!(cfg.migrate_every, 25);
+        let cfg = Config::from_args(&args("fleet --replicas 2 --placement least-loaded")).unwrap();
+        assert_eq!(cfg.placement_mode(), Placement::LeastLoaded);
+        // Bad values rejected, with the valid list in the message.
+        assert!(Config::from_args(&args("fleet --replicas 0")).is_err());
+        assert!(Config::from_args(&args("fleet --replicas 1000")).is_err());
+        assert!(Config::from_args(&args("fleet --migrate-every 0")).is_err());
+        // The thread budget is bounded by the product, not each knob alone.
+        assert!(Config::from_args(&args("fleet --replicas 64 --workers 8")).is_err());
+        assert!(Config::from_args(&args("fleet --replicas 64 --workers 4")).is_ok());
+        let err = Config::from_args(&args("fleet --placement roulette")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("least-loaded") && msg.contains("migrate"), "{msg}");
+    }
+
+    #[test]
+    fn signal_stagger_parses_and_requires_a_queue_signal() {
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert_eq!(cfg.signal_stagger_ms, 0.0);
+        let cfg = Config::from_args(&args(
+            "fleet --queue-signal wait --event-clock --signal-stagger 8",
+        ))
+        .unwrap();
+        assert_eq!(cfg.signal_stagger_ms, 8.0);
+        assert!(Config::from_args(&args("fleet --signal-stagger -1")).is_err());
+        // Stagger without a signal: rejected with a hint.
+        let err = Config::from_args(&args("fleet --event-clock --signal-stagger 8")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("queue-signal"), "{msg}");
     }
 
     #[test]

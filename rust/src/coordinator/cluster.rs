@@ -1,0 +1,739 @@
+//! The replica cluster: a routed tier of serving-engine replicas with
+//! session migration (DESIGN.md §10).
+//!
+//! PR 3/4 parallelized the phases *inside* one [`Engine`]; this module
+//! scales the next axis up.  A [`Cluster`] owns N [`Replica`]s — each a
+//! full engine core with its **own** edge queue, contention state,
+//! shared ingress, pre-round forecast, and worker shards — plus a router
+//! that decides which replica serves which session:
+//!
+//! * [`Placement::Static`] — session id modulo replica count.  The
+//!   baseline hash: deterministic, oblivious to replica speed and load.
+//! * [`Placement::LeastLoaded`] — greedy admission-time placement by
+//!   projected load: each replica's frozen [`EdgeEstimate`] wait plus
+//!   the accumulated full-offload (EO) service cost of the sessions
+//!   already routed to it, costed under *that replica's* edge profile
+//!   and workload.  A slow replica fills up at its own (higher) per-
+//!   session price, so the router naturally shifts population toward
+//!   fast edges.
+//! * [`Placement::Migrate`] — least-loaded admission plus periodic
+//!   rebalancing: every `migrate_every` rounds the router re-runs the
+//!   greedy assignment against the replicas' *current* workloads and
+//!   frozen queue forecasts, and moves every session whose best home
+//!   changed.  Moves happen strictly at round boundaries, in global
+//!   session-id order, and the whole [`crate::coordinator::engine::Session`]
+//!   struct moves — policy, RNG streams, metrics — so migration is
+//!   lossless (property-pinned in `rust/tests/cluster.rs`).
+//!
+//! **The replica owns the edge.**  A [`ReplicaSpec`] carries the edge
+//! compute profile and its exogenous workload; attaching a session to a
+//! replica (at admission or migration) rebinds the session environment's
+//! edge-side state to that replica's.  Heterogeneous clusters (one fast
+//! + one slow edge; `scenario::hetero_replica_edges`) are just specs
+//! that differ.
+//!
+//! Determinism: replicas step in index order but share no mutable state
+//! — every cross-session interaction stays inside one replica's engine,
+//! which is already bit-identical at every worker count (DESIGN.md §8).
+//! Router decisions read only frozen pre-round state (specs, workloads
+//! at the round index, per-replica [`EdgeEstimate`]s) on the main
+//! thread, so the entire cluster is bit-identical at every worker count,
+//! and a 1-replica static cluster is byte-for-byte the single engine
+//! (pinned against the legacy transcripts in `rust/tests/fleet.rs`).
+
+use super::engine::{engine_config_from, Engine, EngineConfig, FrameSource, Session};
+use super::metrics::{FleetSummary, Metrics, ReplicaSummary, Summary};
+use crate::bandit::Policy;
+use crate::config::Config;
+use crate::simulator::{ComputeProfile, Environment, Workload};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::video::Weights;
+use std::time::Instant;
+
+/// Session-to-replica routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// `session id % replicas` — the oblivious deterministic hash.
+    #[default]
+    Static,
+    /// Greedy admission-time routing by projected replica load (frozen
+    /// queue wait + accumulated EO service cost under the replica's own
+    /// edge).  Sessions never move after admission.
+    LeastLoaded,
+    /// [`Placement::LeastLoaded`] admission plus periodic rebalancing at
+    /// round boundaries ([`ClusterConfig::migrate_every`]).
+    Migrate,
+}
+
+/// Names accepted by `--placement` (CLI / config).
+pub const PLACEMENT_NAMES: &[&str] = &["static", "least-loaded", "migrate"];
+
+impl Placement {
+    pub fn by_name(name: &str) -> Option<Placement> {
+        match name {
+            "static" => Some(Placement::Static),
+            "least-loaded" => Some(Placement::LeastLoaded),
+            "migrate" => Some(Placement::Migrate),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Static => "static",
+            Placement::LeastLoaded => "least-loaded",
+            Placement::Migrate => "migrate",
+        }
+    }
+}
+
+/// What one replica's edge is: its compute profile and exogenous
+/// workload over time.  Sessions attached to the replica serve their
+/// back-ends on this edge (the spec is rebound into the session's
+/// environment at admission/migration).
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    /// Human-readable tag for tables/JSON (e.g. `gpu@1x`).
+    pub label: String,
+    pub edge: ComputeProfile,
+    pub load: Workload,
+}
+
+impl ReplicaSpec {
+    pub fn new(label: impl Into<String>, edge: ComputeProfile, load: Workload) -> ReplicaSpec {
+        ReplicaSpec { label: label.into(), edge, load }
+    }
+
+    /// `n` identical replicas (the homogeneous cluster `--replicas` builds).
+    pub fn uniform(n: usize, edge: ComputeProfile, load: Workload) -> Vec<ReplicaSpec> {
+        assert!(n >= 1, "cluster needs at least one replica");
+        (0..n)
+            .map(|i| ReplicaSpec::new(format!("{}#{i}", edge.name), edge, load.clone()))
+            .collect()
+    }
+
+    /// Labelled specs from an `(edge profile, workload)` family — the
+    /// shape `scenario::hetero_replica_edges`/`hetero_replica_swing`
+    /// produce.  Labels read `edge<i>@<initial load>x`.
+    pub fn from_edges(edges: Vec<(ComputeProfile, Workload)>) -> Vec<ReplicaSpec> {
+        edges
+            .into_iter()
+            .enumerate()
+            .map(|(i, (edge, load))| {
+                let label = format!("edge{i}@{}x", load.at(0));
+                ReplicaSpec::new(label, edge, load)
+            })
+            .collect()
+    }
+}
+
+/// One engine replica behind the router: the full per-round serving core
+/// (own edge queue, contention, ingress, forecast, worker shards) plus
+/// its edge spec and migration counters.
+pub struct Replica {
+    pub id: usize,
+    pub spec: ReplicaSpec,
+    pub engine: Engine,
+    pub migrations_in: usize,
+    pub migrations_out: usize,
+}
+
+impl Replica {
+    /// Expected full-offload (EO, p = 0) service cost of `env`'s network
+    /// on this replica at round `t` — the router's unit of load.  EO is
+    /// the worst-case back-end span, so the score upper-bounds what a
+    /// session can ask of the replica per round.
+    fn eo_cost_ms(&self, env: &Environment, t: usize) -> f64 {
+        self.spec.edge.delay_ms(&env.net.backend_stats(0), self.spec.load.at(t))
+    }
+
+    /// Per-replica reporting slice (see [`ReplicaSummary`] on the
+    /// current-residents attribution).
+    pub fn summary(&self) -> ReplicaSummary {
+        let sessions = self.engine.sessions();
+        let frames: usize = sessions.iter().map(|s| s.metrics.records.len()).sum();
+        let counts = self.engine.offload_counts();
+        let mean_offloaders = if counts.is_empty() {
+            0.0
+        } else {
+            counts.iter().sum::<usize>() as f64 / counts.len() as f64
+        };
+        if frames == 0 {
+            // Empty replica (or nothing served yet): NaN delay fields
+            // render as JSON null; never panic on the empty merge.
+            return ReplicaSummary {
+                id: self.id,
+                label: self.spec.label.clone(),
+                sessions: sessions.len(),
+                frames: 0,
+                mean_delay_ms: f64::NAN,
+                p95_delay_ms: f64::NAN,
+                mean_queue_wait_ms: f64::NAN,
+                total_regret_ms: 0.0,
+                event_regret_ms: 0.0,
+                deadline_misses: 0,
+                rejected_offloads: 0,
+                mean_offloaders,
+                migrations_in: self.migrations_in,
+                migrations_out: self.migrations_out,
+            };
+        }
+        let merged = Metrics::merged(sessions.iter().map(|s| &s.metrics));
+        let p_max = sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        let sum = merged.summary(p_max);
+        ReplicaSummary {
+            id: self.id,
+            label: self.spec.label.clone(),
+            sessions: sessions.len(),
+            frames,
+            mean_delay_ms: sum.mean_delay_ms,
+            p95_delay_ms: sum.p95_delay_ms,
+            mean_queue_wait_ms: sum.mean_queue_wait_ms,
+            total_regret_ms: sum.total_regret_ms,
+            event_regret_ms: sum.event_regret_ms,
+            deadline_misses: sum.deadline_misses,
+            rejected_offloads: sum.rejected_offloads,
+            mean_offloaders,
+            migrations_in: self.migrations_in,
+            migrations_out: self.migrations_out,
+        }
+    }
+}
+
+/// Cluster knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-replica engine template: every replica instantiates its own
+    /// pool, edge queue, ingress, and contention state from this.
+    pub engine: EngineConfig,
+    pub placement: Placement,
+    /// Rounds between rebalances under [`Placement::Migrate`] (≥ 1).
+    pub migrate_every: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(engine: EngineConfig, placement: Placement, migrate_every: usize) -> ClusterConfig {
+        ClusterConfig { engine, placement, migrate_every }
+    }
+}
+
+/// N engine replicas behind a routing front tier (see module docs).
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    replicas: Vec<Replica>,
+    /// Current home replica per global session id.
+    assignment: Vec<usize>,
+    /// Accumulated greedy auction load per replica (pure EO-cost units,
+    /// priced at the latest auction's round) — the least-loaded router's
+    /// running total; queue-forecast waits join at scoring time.
+    base_load: Vec<f64>,
+    round: usize,
+    /// Total sessions moved by the rebalancer so far.
+    migrations: usize,
+    serve_wall_ms: f64,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig, specs: Vec<ReplicaSpec>) -> Cluster {
+        assert!(!specs.is_empty(), "cluster needs at least one replica");
+        assert!(
+            cfg.placement != Placement::Migrate || cfg.migrate_every >= 1,
+            "migrate placement needs migrate-every ≥ 1"
+        );
+        let replicas: Vec<Replica> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(id, spec)| Replica {
+                id,
+                spec,
+                engine: Engine::new(cfg.engine.clone()),
+                migrations_in: 0,
+                migrations_out: 0,
+            })
+            .collect();
+        let base_load = vec![0.0; replicas.len()];
+        Cluster {
+            cfg,
+            replicas,
+            assignment: Vec::new(),
+            base_load,
+            round: 0,
+            migrations: 0,
+            serve_wall_ms: 0.0,
+        }
+    }
+
+    /// Admit a session: the router picks its home replica, the session
+    /// is bound to that replica's edge, and its global id is returned.
+    /// Admission prices replicas at the *current* round — workload at
+    /// `round()` plus each replica's frozen forecast wait — so sessions
+    /// joining mid-run see the same score the rebalancer uses (at round
+    /// 0 every queue is idle and the wait term is exactly 0).
+    pub fn add_session(
+        &mut self,
+        policy: Box<dyn Policy>,
+        env: Environment,
+        source: FrameSource,
+    ) -> usize {
+        let id = self.assignment.len();
+        let t = self.round;
+        let r = match self.cfg.placement {
+            Placement::Static => id % self.replicas.len(),
+            Placement::LeastLoaded | Placement::Migrate => self.cheapest_replica(&env, t),
+        };
+        self.base_load[r] += self.replicas[r].eo_cost_ms(&env, t);
+        let mut session = Session::new(id, policy, env, source);
+        attach(&mut session, &self.replicas[r].spec);
+        self.replicas[r].engine.push_session(session);
+        self.assignment.push(r);
+        id
+    }
+
+    /// The greedy router: argmin over replicas of frozen forecast wait +
+    /// accumulated admission load + this session's EO cost there, all at
+    /// round `t` (ties → lowest replica id).
+    fn cheapest_replica(&self, env: &Environment, t: usize) -> usize {
+        let now_ms = t as f64 * self.cfg.engine.frame_interval_ms;
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for (r, rep) in self.replicas.iter().enumerate() {
+            let score = rep.engine.forecast().wait_ms(now_ms)
+                + self.base_load[r]
+                + rep.eo_cost_ms(env, t);
+            if score < best_score {
+                best_score = score;
+                best = r;
+            }
+        }
+        best
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn num_sessions(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    /// Current home replica of each session, indexed by global id.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Total sessions the rebalancer has moved so far.
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    /// Rounds completed so far (every replica is always at this round).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// All sessions across the cluster, in global id order.
+    pub fn sessions(&self) -> Vec<&Session> {
+        let mut all: Vec<&Session> =
+            self.replicas.iter().flat_map(|r| r.engine.sessions().iter()).collect();
+        all.sort_by_key(|s| s.id);
+        all
+    }
+
+    /// Serve one frame for every session on every replica (one cluster
+    /// round).  Under [`Placement::Migrate`] the rebalancer runs first,
+    /// at the round boundary, so a moved session's next frame is served
+    /// entirely by its new replica.
+    pub fn step(&mut self) {
+        let t = self.round;
+        if self.cfg.placement == Placement::Migrate && t > 0 && t % self.cfg.migrate_every == 0 {
+            self.rebalance(t);
+        }
+        for r in &mut self.replicas {
+            r.engine.step();
+        }
+        self.round += 1;
+    }
+
+    /// Serve `rounds` frames per session, accumulating wall-clock time
+    /// for throughput reporting.
+    pub fn run(&mut self, rounds: usize) {
+        for r in &mut self.replicas {
+            r.engine.reserve(rounds);
+        }
+        let start = Instant::now();
+        for _ in 0..rounds {
+            self.step();
+        }
+        self.serve_wall_ms += start.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Move one session to `to` at the current round boundary (the
+    /// rebalancer's primitive; public for tests and manual drains).
+    /// No-op when the session already lives there.  The router's
+    /// admission totals move with the session (repriced at the current
+    /// round — a deterministic heuristic, exact again at the next
+    /// rebalance), so later `add_session` calls stay greedy after a
+    /// manual migration.
+    pub fn migrate_session(&mut self, id: usize, to: usize) {
+        assert!(to < self.replicas.len(), "no replica {to}");
+        assert!(id < self.assignment.len(), "no session {id}");
+        let from = self.assignment[id];
+        if from == to {
+            return;
+        }
+        let mut session = self.replicas[from].engine.remove_session(id);
+        let t = self.round;
+        let out_cost = self.replicas[from].eo_cost_ms(&session.env, t);
+        let in_cost = self.replicas[to].eo_cost_ms(&session.env, t);
+        self.base_load[from] = (self.base_load[from] - out_cost).max(0.0);
+        self.base_load[to] += in_cost;
+        attach(&mut session, &self.replicas[to].spec);
+        self.replicas[to].engine.push_session(session);
+        self.replicas[from].migrations_out += 1;
+        self.replicas[to].migrations_in += 1;
+        self.assignment[id] = to;
+        self.migrations += 1;
+    }
+
+    /// Re-run the greedy assignment against the replicas' *current*
+    /// workloads and frozen queue forecasts, then move every session
+    /// whose best home changed.  Sessions are considered in global id
+    /// order; every input is frozen main-thread state, so the outcome is
+    /// identical at every worker count.
+    fn rebalance(&mut self, t: usize) {
+        let now_ms = t as f64 * self.cfg.engine.frame_interval_ms;
+        // Frozen pre-round queue pressure per replica: a replica whose
+        // executor is backed up starts the auction handicapped by its
+        // forecast wait.  Kept separate from the accumulated-cost totals
+        // so `base_load` stays in pure EO-cost units (the admission path
+        // adds the *live* wait at scoring time).
+        let waits: Vec<f64> =
+            self.replicas.iter().map(|r| r.engine.forecast().wait_ms(now_ms)).collect();
+        let mut load = vec![0.0f64; self.replicas.len()];
+        let n = self.assignment.len();
+        let mut target = vec![0usize; n];
+        for id in 0..n {
+            let from = self.assignment[id];
+            let best = {
+                let sess = self.replicas[from].engine.sessions();
+                // Session lists are sorted by global id (the engine's
+                // push invariant), so the lookup is a binary search.
+                let idx = sess
+                    .binary_search_by_key(&id, |s| s.id)
+                    .expect("assignment tracks session homes");
+                let s = &sess[idx];
+                let mut best = 0;
+                let mut best_score = f64::INFINITY;
+                for (r, rep) in self.replicas.iter().enumerate() {
+                    let score = waits[r] + load[r] + rep.eo_cost_ms(&s.env, t);
+                    if score < best_score {
+                        best_score = score;
+                        best = r;
+                    }
+                }
+                load[best] += self.replicas[best].eo_cost_ms(&s.env, t);
+                best
+            };
+            target[id] = best;
+        }
+        for (id, &to) in target.iter().enumerate() {
+            self.migrate_session(id, to);
+        }
+        // The admission totals are stale after a rebalance; carry the
+        // fresh auction totals so later add_session calls stay greedy.
+        self.base_load = load;
+    }
+
+    /// Per-session, per-replica and fleet-aggregate views of everything
+    /// served so far ([`FleetSummary`] with the replica columns filled).
+    pub fn fleet_summary(&self) -> FleetSummary {
+        assert!(self.round > 0, "fleet_summary before any round");
+        let sessions = self.sessions();
+        assert!(!sessions.is_empty(), "cluster has no sessions");
+        let per_session: Vec<Summary> = sessions.iter().map(|s| s.summary()).collect();
+        let merged = Metrics::merged(sessions.iter().map(|s| &s.metrics));
+        let p_max = sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        let queue_waits: Vec<f64> = merged.records.iter().map(|r| r.queue_wait_ms).collect();
+        let aggregate = merged.summary(p_max);
+        // Cluster-wide concurrent offloads per round (replica counts are
+        // aligned: empty replicas log k_t = 0 every round).
+        let mut totals = vec![0usize; self.round];
+        for r in &self.replicas {
+            for (t, &k) in r.engine.offload_counts().iter().enumerate() {
+                totals[t] += k;
+            }
+        }
+        let mean_offloaders =
+            totals.iter().sum::<usize>() as f64 / totals.len().max(1) as f64;
+        let peak_offloaders = totals.iter().copied().max().unwrap_or(0);
+        // The contention factor applies within one replica's edge, so
+        // the peak factor is the worst any single replica saw.
+        let peak_replica_k = self
+            .replicas
+            .iter()
+            .map(|r| r.engine.offload_counts().iter().copied().max().unwrap_or(0))
+            .max()
+            .unwrap_or(0);
+        let scheduler = if self.cfg.engine.scheduler.is_lockstep() {
+            "fifo-lockstep".to_string()
+        } else {
+            self.cfg.engine.scheduler.policy.name().to_string()
+        };
+        let serve_ms = self.serve_wall_ms;
+        let frames_per_sec = if serve_ms > 0.0 {
+            aggregate.frames as f64 / (serve_ms / 1e3)
+        } else {
+            f64::NAN
+        };
+        FleetSummary {
+            per_session,
+            aggregate,
+            mean_offloaders,
+            peak_offloaders,
+            peak_contention_factor: self.cfg.engine.contention.factor(peak_replica_k),
+            scheduler,
+            p95_queue_wait_ms: percentile(&queue_waits, 0.95),
+            workers: self.cfg.engine.workers.max(1),
+            serve_ms,
+            frames_per_sec,
+            replicas: self.replicas.iter().map(|r| r.summary()).collect(),
+        }
+    }
+}
+
+/// Bind a session's environment to a replica's edge: the replica owns
+/// the edge compute profile and its exogenous workload; the session
+/// keeps everything device-side (uplink, noise stream, front delays).
+fn attach(session: &mut Session, spec: &ReplicaSpec) {
+    session.env.edge = spec.edge;
+    session.env.workload = spec.load.clone();
+}
+
+/// Assemble the replica cluster a [`Config`] describes: `cfg.replicas`
+/// identical replicas (the configured edge profile and load), the
+/// configured placement policy, and `cfg.sessions` sessions built
+/// exactly as [`super::engine::fleet_from_config`] builds them — same
+/// per-session environments, policies, and (seed, index)-pure RNG
+/// streams, so `--replicas 1 --placement static` is byte-for-byte the
+/// single-engine fleet (pinned in `rust/tests/fleet.rs`).
+pub fn cluster_from_config(cfg: &Config) -> Cluster {
+    let net = crate::models::zoo::by_name(&cfg.model).expect("validated model");
+    let device = crate::simulator::profile_by_name(&cfg.device).expect("validated device");
+    let edge = crate::simulator::profile_by_name(&cfg.edge).expect("validated edge");
+    let envs = crate::simulator::scenario::fleet_with(
+        net,
+        cfg.sessions,
+        cfg.rate_mbps,
+        device,
+        edge,
+        cfg.load,
+        cfg.seed,
+    );
+    let specs = ReplicaSpec::uniform(cfg.replicas, edge, Workload::constant(cfg.load));
+    let mut cluster = Cluster::new(
+        ClusterConfig {
+            engine: engine_config_from(cfg),
+            placement: cfg.placement_mode(),
+            migrate_every: cfg.migrate_every,
+        },
+        specs,
+    );
+    for (i, env) in envs.into_iter().enumerate() {
+        let policy = cfg.policy(&env.net, &env.device, &env.edge);
+        let source = FrameSource::video(
+            Rng::stream_seed(cfg.seed, super::engine::VIDEO_STREAM_BASE + i as u64),
+            cfg.ssim_threshold,
+            Weights::new(cfg.l_key, cfg.l_non_key),
+        );
+        cluster.add_session(policy, env, source);
+    }
+    cluster
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit;
+    use crate::models::zoo;
+    use crate::simulator::{DEVICE_MAXN, EDGE_GPU};
+
+    fn policy(name: &str, horizon: usize) -> Box<dyn Policy> {
+        bandit::by_name(name, &zoo::partnet(), &DEVICE_MAXN, &EDGE_GPU, horizon, None, None)
+            .unwrap()
+    }
+
+    fn env(rate: f64, seed: u64) -> Environment {
+        Environment::simple(zoo::partnet(), rate, seed)
+    }
+
+    fn uniform_cluster(n_replicas: usize, placement: Placement) -> Cluster {
+        Cluster::new(
+            ClusterConfig::new(EngineConfig::default(), placement, 25),
+            ReplicaSpec::uniform(n_replicas, EDGE_GPU, Workload::constant(1.0)),
+        )
+    }
+
+    #[test]
+    fn placement_names_round_trip() {
+        for n in PLACEMENT_NAMES {
+            assert_eq!(Placement::by_name(n).expect("listed name resolves").name(), *n);
+        }
+        assert!(Placement::by_name("roulette").is_none());
+        assert_eq!(Placement::default(), Placement::Static);
+    }
+
+    #[test]
+    fn static_hash_routes_round_robin() {
+        let mut c = uniform_cluster(3, Placement::Static);
+        for i in 0..7 {
+            c.add_session(policy("eo", 10), env(10.0, 1 + i), FrameSource::uniform());
+        }
+        assert_eq!(c.assignment(), &[0, 1, 2, 0, 1, 2, 0]);
+        c.run(5);
+        assert_eq!(c.round(), 5);
+        for s in c.sessions() {
+            assert_eq!(s.metrics.records.len(), 5);
+        }
+    }
+
+    #[test]
+    fn least_loaded_admission_prefers_the_fast_replica() {
+        // Fast edge at load 1 vs the same edge at load 6: the greedy
+        // router should send clearly more sessions to the fast replica.
+        let specs = vec![
+            ReplicaSpec::new("fast", EDGE_GPU, Workload::constant(1.0)),
+            ReplicaSpec::new("slow", EDGE_GPU, Workload::constant(6.0)),
+        ];
+        let mut c = Cluster::new(
+            ClusterConfig::new(EngineConfig::default(), Placement::LeastLoaded, 25),
+            specs,
+        );
+        for i in 0..14 {
+            c.add_session(policy("eo", 10), env(10.0, 1 + i), FrameSource::uniform());
+        }
+        let on_fast = c.assignment().iter().filter(|&&r| r == 0).count();
+        assert!(
+            on_fast >= 10,
+            "least-loaded should crowd the fast replica: {on_fast}/14 (assignment {:?})",
+            c.assignment()
+        );
+        assert!(on_fast < 14, "the slow replica still absorbs overflow");
+    }
+
+    #[test]
+    fn empty_replica_rounds_are_noops_and_summaries_stay_finite_free() {
+        // One session, two replicas: replica 1 idles the whole run.
+        let mut c = uniform_cluster(2, Placement::Static);
+        c.add_session(policy("mu-linucb", 20), env(10.0, 3), FrameSource::uniform());
+        c.run(20);
+        let fs = c.fleet_summary();
+        assert_eq!(fs.replicas.len(), 2);
+        assert_eq!(fs.replicas[0].sessions, 1);
+        assert_eq!(fs.replicas[1].sessions, 0);
+        assert_eq!(fs.replicas[1].frames, 0);
+        assert!(fs.replicas[1].mean_delay_ms.is_nan());
+        assert_eq!(fs.aggregate.frames, 20);
+        // The empty replica logged an aligned k_t = 0 history.
+        assert_eq!(c.replicas()[1].engine.offload_counts(), &[0; 20]);
+        // And its records match a lone single-replica run bit for bit.
+        let mut lone = uniform_cluster(1, Placement::Static);
+        lone.add_session(policy("mu-linucb", 20), env(10.0, 3), FrameSource::uniform());
+        lone.run(20);
+        let a = &c.sessions()[0].metrics.records;
+        let b = &lone.sessions()[0].metrics.records;
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.p, y.p);
+            assert_eq!(x.delay_ms, y.delay_ms);
+        }
+    }
+
+    #[test]
+    fn manual_migration_moves_state_and_counters() {
+        let mut c = uniform_cluster(2, Placement::Static);
+        c.add_session(policy("eo", 10), env(10.0, 1), FrameSource::uniform());
+        c.add_session(policy("eo", 10), env(10.0, 2), FrameSource::uniform());
+        assert_eq!(c.assignment(), &[0, 1]);
+        c.run(3);
+        c.migrate_session(0, 1);
+        assert_eq!(c.assignment(), &[1, 1]);
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.replicas()[0].migrations_out, 1);
+        assert_eq!(c.replicas()[1].migrations_in, 1);
+        assert_eq!(c.replicas()[0].engine.num_sessions(), 0);
+        assert_eq!(c.replicas()[1].engine.num_sessions(), 2);
+        // Records travelled with the session; the run continues cleanly.
+        c.run(3);
+        for s in c.sessions() {
+            assert_eq!(s.metrics.records.len(), 6);
+        }
+        // Migrating to the current home is a no-op.
+        c.migrate_session(0, 1);
+        assert_eq!(c.migrations(), 1);
+    }
+
+    #[test]
+    fn cluster_is_deterministic() {
+        let build = || {
+            let specs = vec![
+                ReplicaSpec::new("fast", EDGE_GPU, Workload::constant(1.0)),
+                ReplicaSpec::new("slow", EDGE_GPU, Workload::constant(4.0)),
+            ];
+            let mut c = Cluster::new(
+                ClusterConfig::new(EngineConfig::default(), Placement::Migrate, 10),
+                specs,
+            );
+            for i in 0..6 {
+                c.add_session(
+                    policy("mu-linucb", 40),
+                    env(8.0 + i as f64, 30 + i),
+                    FrameSource::uniform(),
+                );
+            }
+            c.run(40);
+            c
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.assignment(), b.assignment());
+        assert_eq!(a.migrations(), b.migrations());
+        for (x, y) in a.sessions().iter().zip(b.sessions()) {
+            for (rx, ry) in x.metrics.records.iter().zip(&y.metrics.records) {
+                assert_eq!(rx.p, ry.p);
+                assert_eq!(rx.delay_ms, ry.delay_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_from_config_routes_and_reports() {
+        use crate::util::cli::Args;
+        let args = Args::parse(
+            "fleet --sessions 6 --replicas 3 --placement least-loaded --model partnet \
+             --frames 20 --rate 10"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let cfg = Config::from_args(&args).unwrap();
+        let mut c = cluster_from_config(&cfg);
+        assert_eq!(c.num_replicas(), 3);
+        assert_eq!(c.num_sessions(), 6);
+        c.run(cfg.frames);
+        let fs = c.fleet_summary();
+        assert_eq!(fs.per_session.len(), 6);
+        assert_eq!(fs.aggregate.frames, 120);
+        assert_eq!(fs.replicas.len(), 3);
+        let routed: usize = fs.replicas.iter().map(|r| r.sessions).sum();
+        assert_eq!(routed, 6);
+        // Homogeneous replicas + equal-cost sessions → balanced routing.
+        for r in &fs.replicas {
+            assert_eq!(r.sessions, 2, "balanced homogeneous routing: {:?}", c.assignment());
+        }
+    }
+}

@@ -228,6 +228,10 @@ pub(crate) struct RoundInfo {
     pub signal: QueueSignal,
     pub frame_interval_ms: f64,
     pub stagger_ms: f64,
+    /// Herding mitigation (DESIGN.md §10): amplitude of the deterministic
+    /// per-session phase offset folded into the *published* forecast wait
+    /// (0 = off, bit-identical to the unstaggered transcripts).
+    pub signal_stagger_ms: f64,
     /// Per-frame completion budget for deadline-miss accounting
     /// (∞ = none); counted in every scheduler mode, independent of EDF.
     pub deadline_ms: f64,
@@ -244,6 +248,7 @@ impl RoundInfo {
             signal: QueueSignal::Off,
             frame_interval_ms: 0.0,
             stagger_ms: 0.0,
+            signal_stagger_ms: 0.0,
             deadline_ms: f64::INFINITY,
             event: false,
         }
@@ -309,6 +314,13 @@ pub(crate) fn select_one(
     let capture_ms = round.capture_ms(t, session_id);
     let p_max = env.num_partitions();
     let rate = env.current_rate_mbps();
+    // Herding stagger: a per-session golden-ratio phase offset on the
+    // *published* wait, so identical learners stop reacting to the same
+    // idle forecast in the same round (DESIGN.md §10).  0 ms (default)
+    // adds exactly +0.0 per arm — the unstaggered transcripts are
+    // bit-identical — and the realize-phase accounting (event oracle,
+    // realized waits) never sees the offset.
+    let stagger_ms = round.signal_stagger_ms * crate::edge::signal_phase(session_id);
     for p in 0..=p_max {
         if p == p_max {
             waits[p] = 0.0;
@@ -316,7 +328,7 @@ pub(crate) fn select_one(
             continue;
         }
         let tx = crate::simulator::tx_delay_ms(env.psi_bytes(p), rate, env.rtt_ms);
-        let wait = est.wait_ms(capture_ms + front[p] + tx);
+        let wait = est.wait_ms(capture_ms + front[p] + tx) + stagger_ms;
         waits[p] = wait;
         expected[p] = front[p] + tx + wait + est.service_ms(env.solo_backend_ms(p));
     }
@@ -515,6 +527,12 @@ pub struct EngineConfig {
     /// bit-identical to the PR 2/3 transcripts; `Wait`/`Full` require
     /// the event-driven scheduler.
     pub queue_signal: QueueSignal,
+    /// Herding mitigation (`--signal-stagger`; DESIGN.md §10): amplitude
+    /// in ms of the deterministic per-session phase offset
+    /// ([`crate::edge::signal_phase`]) folded into the published
+    /// forecast wait.  0 (the default) is pinned bit-identical to the
+    /// unstaggered transcripts; > 0 requires an active queue signal.
+    pub signal_stagger_ms: f64,
 }
 
 impl Default for EngineConfig {
@@ -526,6 +544,7 @@ impl Default for EngineConfig {
             scheduler: SchedulerConfig::lockstep_fifo(),
             workers: 1,
             queue_signal: QueueSignal::Off,
+            signal_stagger_ms: 0.0,
         }
     }
 }
@@ -626,6 +645,12 @@ fn select_phase(
     round: RoundInfo,
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
+    // Explicit empty-shard no-op: a replica holding zero sessions (or a
+    // pool wider than the session list) must not rely on chunk-range
+    // arithmetic producing nothing to iterate.
+    if sessions.is_empty() {
+        return;
+    }
     let Some(pool) = pool else {
         for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
             *d = session_select(s, t, k_estimate, &contention, &round);
@@ -666,6 +691,9 @@ fn observe_phase(
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), legs.len());
+    if sessions.is_empty() {
+        return;
+    }
     let Some(pool) = pool else {
         for ((s, d), leg) in sessions.iter_mut().zip(decisions).zip(legs) {
             session_realize(s, d, leg, t, k, &contention, &round);
@@ -729,6 +757,15 @@ impl Engine {
              (enable --event-clock or a non-lockstep scheduler config)",
             cfg.queue_signal.name()
         );
+        assert!(
+            cfg.signal_stagger_ms >= 0.0 && cfg.signal_stagger_ms.is_finite(),
+            "signal-stagger must be ≥ 0 ms"
+        );
+        assert!(
+            cfg.signal_stagger_ms == 0.0 || !cfg.queue_signal.is_off(),
+            "--signal-stagger perturbs the published queue signal and \
+             requires --queue-signal wait|full"
+        );
         Engine {
             cfg,
             sessions: Vec::new(),
@@ -753,6 +790,49 @@ impl Engine {
         let id = self.sessions.len();
         self.sessions.push(Session::new(id, policy, env, source));
         id
+    }
+
+    /// Attach a fully-built session (cluster placement/migration),
+    /// keeping the session list sorted by global id — the canonical
+    /// cross-session merge order (arrival time, session id) then matches
+    /// the push order at every worker count.
+    pub fn push_session(&mut self, session: Session) {
+        debug_assert!(
+            self.sessions.iter().all(|s| s.id != session.id),
+            "duplicate session id {}",
+            session.id
+        );
+        let pos = self
+            .sessions
+            .iter()
+            .position(|s| s.id > session.id)
+            .unwrap_or(self.sessions.len());
+        self.sessions.insert(pos, session);
+    }
+
+    /// Detach the session with the given global id (cluster migration).
+    /// All per-session state — policy, environment RNG streams, frame
+    /// source, metrics — moves wholesale with the struct, so the move
+    /// itself is lossless (property-tested in `rust/tests/cluster.rs`).
+    /// Only call at a round boundary: the edge queue holds no
+    /// per-session references between rounds.
+    pub fn remove_session(&mut self, id: usize) -> Session {
+        let idx = self
+            .sessions
+            .iter()
+            .position(|s| s.id == id)
+            .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
+        self.sessions.remove(idx)
+    }
+
+    /// The deterministic pre-round queue forecast ([`EdgeEstimate`]) —
+    /// idle when the engine runs the lockstep path.  The cluster router
+    /// freezes this per replica before placement decisions.
+    pub fn forecast(&self) -> EdgeEstimate {
+        match self.scheduler.as_ref() {
+            Some(s) => s.forecast(),
+            None => EdgeEstimate::idle(),
+        }
     }
 
     pub fn num_sessions(&self) -> usize {
@@ -793,21 +873,28 @@ impl Engine {
     /// identical at every worker count.
     fn round_info(&self) -> RoundInfo {
         RoundInfo {
-            estimate: match self.scheduler.as_ref() {
-                Some(s) => s.forecast(),
-                None => EdgeEstimate::idle(),
-            },
+            estimate: self.forecast(),
             signal: self.cfg.queue_signal,
             frame_interval_ms: self.cfg.frame_interval_ms,
             stagger_ms: self.cfg.scheduler.stagger_ms,
+            signal_stagger_ms: self.cfg.signal_stagger_ms,
             deadline_ms: self.cfg.scheduler.deadline_ms,
             event: self.scheduler.is_some(),
         }
     }
 
-    /// Serve one frame for every session (one engine round).
+    /// Serve one frame for every session (one engine round).  An engine
+    /// holding zero sessions (an idle cluster replica between
+    /// migrations) is a deterministic no-op round: the virtual clock and
+    /// queue state stay put, k_t = 0 is logged, and the round counter
+    /// advances so replicas stay aligned.
     pub fn step(&mut self) {
-        assert!(!self.sessions.is_empty(), "engine has no sessions");
+        if self.sessions.is_empty() {
+            self.offloaders_last = 0;
+            self.offload_counts.push(0);
+            self.round += 1;
+            return;
+        }
         let t = self.round;
         let k_estimate = self.offloaders_last;
         let contention = self.cfg.contention;
@@ -949,7 +1036,10 @@ impl Engine {
             let bytes = s.env.psi_bytes(d.p);
             let tx =
                 crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
-            let capture = round.capture_ms(t, i);
+            // Capture staggering keys on the *global* session id (== the
+            // local index in a standalone engine, but not in a cluster
+            // replica, where ids are cluster-wide).
+            let capture = round.capture_ms(t, s.id);
             scratch.tx_ms[i] = tx;
             queue.push(capture + s.front[d.p] + tx, (i, bytes));
         }
@@ -968,9 +1058,19 @@ impl Engine {
             };
             scratch.ingress_wait[i] = ing;
             let d = &scratch.decisions[i];
-            let capture = round.capture_ms(t, i);
+            let capture = round.capture_ms(t, sessions[i].id);
+            // Jobs carry the GLOBAL session id so the queue's cross-round
+            // per-session state (WeightedFair credit) is never
+            // misattributed after a cluster migration: a departing
+            // session's credit is parked under its own id (and restored
+            // if it returns to this replica) instead of silently
+            // accruing to whichever session occupies the same local slot
+            // next round.  Credit does NOT transfer between replicas — a
+            // migrant starts from zero on its new queue (DESIGN.md §10).
+            // In a standalone engine id == local index, so nothing
+            // changes.
             let submitted = scheduler.submit(EdgeJob {
-                session: i,
+                session: sessions[i].id,
                 p: d.p,
                 bytes,
                 capture_ms: capture,
@@ -989,7 +1089,13 @@ impl Engine {
 
         scheduler.drain_scheduled_into(&mut scratch.scheduled);
         for sch in &scratch.scheduled {
-            scratch.outcomes[sch.session] = Some(Outcome::Served {
+            // Map the job's global session id back to its local slot
+            // (sessions are kept sorted by id, so this is an exact,
+            // allocation-free lookup).
+            let local = sessions
+                .binary_search_by_key(&sch.session, |s| s.id)
+                .expect("scheduled job belongs to a resident session");
+            scratch.outcomes[local] = Some(Outcome::Served {
                 queue_wait_ms: sch.queue_wait_ms,
                 service_ms: sch.service_ms,
                 batch_size: sch.batch_size,
@@ -1093,13 +1199,29 @@ impl Engine {
             workers: self.cfg.workers.max(1),
             serve_ms,
             frames_per_sec,
+            replicas: Vec::new(),
         }
     }
 }
 
 /// Per-session video streams draw from a stream-id space disjoint from
 /// the environments' (see [`Rng::stream_seed`]).
-const VIDEO_STREAM_BASE: u64 = 1 << 32;
+pub(crate) const VIDEO_STREAM_BASE: u64 = 1 << 32;
+
+/// The per-engine knob set a [`Config`] describes — shared by
+/// [`fleet_from_config`] and the cluster builder (every replica's engine
+/// is instantiated from this same template).
+pub(crate) fn engine_config_from(cfg: &Config) -> EngineConfig {
+    EngineConfig {
+        frame_interval_ms: 1e3 / cfg.fps,
+        contention: Contention::new(cfg.contention_capacity, cfg.contention_slope),
+        ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
+        scheduler: cfg.scheduler_config(),
+        workers: cfg.workers,
+        queue_signal: cfg.queue_signal_mode(),
+        signal_stagger_ms: cfg.signal_stagger_ms,
+    }
+}
 
 /// Assemble the fleet engine a [`Config`] describes: `cfg.sessions`
 /// sessions over [`crate::simulator::scenario::fleet_with`] environments
@@ -1121,14 +1243,7 @@ pub fn fleet_from_config(cfg: &Config) -> Engine {
         cfg.load,
         cfg.seed,
     );
-    let mut engine = Engine::new(EngineConfig {
-        frame_interval_ms: 1e3 / cfg.fps,
-        contention: Contention::new(cfg.contention_capacity, cfg.contention_slope),
-        ingress_mbps: if cfg.ingress_mbps > 0.0 { Some(cfg.ingress_mbps) } else { None },
-        scheduler: cfg.scheduler_config(),
-        workers: cfg.workers,
-        queue_signal: cfg.queue_signal_mode(),
-    });
+    let mut engine = Engine::new(engine_config_from(cfg));
     for (i, env) in envs.into_iter().enumerate() {
         let policy = cfg.policy(&env.net, &env.device, &env.edge);
         let source = FrameSource::video(
@@ -1439,6 +1554,102 @@ mod tests {
         let sum = eng.sessions()[0].summary();
         assert_eq!(sum.deadline_misses, 20);
         assert_eq!(eng.fleet_summary().aggregate.deadline_misses, 20);
+    }
+
+    #[test]
+    fn empty_engine_step_is_a_noop() {
+        // A cluster replica can hold zero sessions between migrations:
+        // its rounds must be explicit no-ops that still advance the
+        // round counter and log k_t = 0 so replicas stay aligned.
+        let mut eng = Engine::new(EngineConfig::default());
+        eng.step();
+        eng.step();
+        assert_eq!(eng.round(), 2);
+        assert_eq!(eng.offload_counts(), &[0, 0]);
+        assert_eq!(eng.num_sessions(), 0);
+        // The sharded path is a no-op too (no shard arithmetic on 0).
+        let mut sharded = Engine::new(EngineConfig { workers: 4, ..Default::default() });
+        sharded.run(3);
+        assert_eq!(sharded.round(), 3);
+        assert_eq!(sharded.offload_counts(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn sessions_detach_and_reattach_in_id_order() {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig::default());
+        for i in 0..4 {
+            eng.add_session(
+                policy(&net, "eo", 10),
+                env(10.0, 1 + i as u64),
+                FrameSource::uniform(),
+            );
+        }
+        let s2 = eng.remove_session(2);
+        assert_eq!(s2.id, 2);
+        assert_eq!(
+            eng.sessions().iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![0, 1, 3]
+        );
+        eng.push_session(s2);
+        assert_eq!(
+            eng.sessions().iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "push_session restores canonical id order"
+        );
+        eng.run(5);
+        for s in eng.sessions() {
+            assert_eq!(s.metrics.records.len(), 5);
+        }
+    }
+
+    #[test]
+    fn signal_stagger_shifts_published_waits_per_session() {
+        use crate::edge::{signal_phase, AdmissionPolicy};
+        // Idle queue + queue-signal wait: on the warm-up frame every
+        // session picks arm 0 and the recorded prediction is exactly the
+        // published wait (the fresh ridge predicts 0), so the stagger
+        // offset is directly visible: session 0 stays unshifted (phase
+        // 0), session 1 gains stagger·phase(1).
+        let build = |stagger: f64| {
+            let net = zoo::partnet();
+            let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+            sc.max_batch = 1;
+            sc.batch_window_ms = 0.0;
+            let mut eng = Engine::new(EngineConfig {
+                scheduler: sc,
+                queue_signal: QueueSignal::Wait,
+                signal_stagger_ms: stagger,
+                ..Default::default()
+            });
+            for i in 0..2 {
+                eng.add_session(
+                    policy(&net, "mu-linucb", 4),
+                    env(10.0, 1 + i as u64),
+                    FrameSource::uniform(),
+                );
+            }
+            eng.step();
+            eng
+        };
+        let base = build(0.0);
+        let shifted = build(40.0);
+        let pred = |e: &Engine, i: usize| {
+            e.sessions()[i].metrics.records[0].predicted_edge_ms.expect("warm-up offloads")
+        };
+        assert_eq!(pred(&base, 0), pred(&shifted, 0), "session 0 is never shifted");
+        let delta = pred(&shifted, 1) - pred(&base, 1);
+        let want = 40.0 * signal_phase(1);
+        assert!(
+            (delta - want).abs() < 1e-9,
+            "session 1's published wait should shift by {want}, got {delta}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "signal-stagger")]
+    fn signal_stagger_requires_an_active_queue_signal() {
+        Engine::new(EngineConfig { signal_stagger_ms: 5.0, ..Default::default() });
     }
 
     #[test]

@@ -266,6 +266,35 @@ impl Metrics {
     }
 }
 
+/// Per-replica slice of a cluster run: everything the current residents
+/// of one replica served, plus the replica's own load and migration
+/// counters.  Sessions carry their records with them when they migrate,
+/// so a replica's delay/regret columns aggregate its *current residents'
+/// full histories* — exact under static placement, attribution-by-final-
+/// home under `migrate` (DESIGN.md §10).
+#[derive(Debug, Clone)]
+pub struct ReplicaSummary {
+    pub id: usize,
+    /// Replica spec label (e.g. `gpu@1x`).
+    pub label: String,
+    /// Sessions currently resident.
+    pub sessions: usize,
+    /// Frames recorded by the current residents (0 for an empty replica;
+    /// the delay fields are then NaN → JSON `null`).
+    pub frames: usize,
+    pub mean_delay_ms: f64,
+    pub p95_delay_ms: f64,
+    pub mean_queue_wait_ms: f64,
+    pub total_regret_ms: f64,
+    pub event_regret_ms: f64,
+    pub deadline_misses: usize,
+    pub rejected_offloads: usize,
+    /// Mean concurrent offload count per round on this replica's edge.
+    pub mean_offloaders: f64,
+    pub migrations_in: usize,
+    pub migrations_out: usize,
+}
+
 /// Fleet-aggregate view over a multi-session run: per-session summaries
 /// plus the merged whole, the engine's contention diagnostics, and the
 /// edge scheduler's queue statistics.
@@ -293,6 +322,9 @@ pub struct FleetSummary {
     /// Serving throughput: total frames / serve wall time (NaN — JSON
     /// `null` — when no timed run happened).
     pub frames_per_sec: f64,
+    /// Per-replica load/wait/regret columns when the run came from the
+    /// replica cluster (empty for a standalone engine).
+    pub replicas: Vec<ReplicaSummary>,
 }
 
 impl FleetSummary {
@@ -345,8 +377,48 @@ impl FleetSummary {
                 "per_session",
                 Json::Arr(self.per_session.iter().map(summary_json).collect()),
             ),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(replica_json).collect()),
+            ),
         ])
         .to_string()
+    }
+
+    /// Per-replica CSV companion to the cluster tables (one row per
+    /// replica; empty string when the run had no replica tier).
+    pub fn replicas_csv(&self) -> String {
+        if self.replicas.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "replica,label,sessions,frames,mean_delay_ms,p95_delay_ms,mean_queue_wait_ms,\
+             total_regret_ms,event_regret_ms,deadline_misses,rejected_offloads,\
+             mean_offloaders,migrations_in,migrations_out\n",
+        );
+        // Non-finite values (empty replica) render as empty cells — the
+        // same missing-value convention as the per-frame CSV.
+        let cell = |v: f64| if v.is_finite() { format!("{v:.3}") } else { String::new() };
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                r.id,
+                r.label,
+                r.sessions,
+                r.frames,
+                cell(r.mean_delay_ms),
+                cell(r.p95_delay_ms),
+                cell(r.mean_queue_wait_ms),
+                cell(r.total_regret_ms),
+                cell(r.event_regret_ms),
+                r.deadline_misses,
+                r.rejected_offloads,
+                cell(r.mean_offloaders),
+                r.migrations_in,
+                r.migrations_out,
+            ));
+        }
+        out
     }
 }
 
@@ -358,6 +430,25 @@ fn jnum(v: f64) -> Json {
     } else {
         Json::Null
     }
+}
+
+fn replica_json(r: &ReplicaSummary) -> Json {
+    obj(vec![
+        ("id", Json::from(r.id)),
+        ("label", Json::from(r.label.as_str())),
+        ("sessions", Json::from(r.sessions)),
+        ("frames", Json::from(r.frames)),
+        ("mean_delay_ms", jnum(r.mean_delay_ms)),
+        ("p95_delay_ms", jnum(r.p95_delay_ms)),
+        ("mean_queue_wait_ms", jnum(r.mean_queue_wait_ms)),
+        ("total_regret_ms", jnum(r.total_regret_ms)),
+        ("event_regret_ms", jnum(r.event_regret_ms)),
+        ("deadline_misses", Json::from(r.deadline_misses)),
+        ("rejected_offloads", Json::from(r.rejected_offloads)),
+        ("mean_offloaders", jnum(r.mean_offloaders)),
+        ("migrations_in", Json::from(r.migrations_in)),
+        ("migrations_out", Json::from(r.migrations_out)),
+    ])
 }
 
 fn summary_json(s: &Summary) -> Json {
@@ -489,6 +580,7 @@ mod tests {
             workers: 1,
             serve_ms: 0.0,
             frames_per_sec: f64::NAN,
+            replicas: Vec::new(),
         };
         assert!((fs.delay_spread_ms() - 20.0).abs() < 1e-12);
         assert!((fs.p95_spread_ms() - 20.0).abs() < 1e-12);
@@ -537,6 +629,41 @@ mod tests {
             workers: 4,
             serve_ms: 125.0,
             frames_per_sec: 16.0,
+            replicas: vec![
+                ReplicaSummary {
+                    id: 0,
+                    label: "gpu@1x".to_string(),
+                    sessions: 2,
+                    frames: 2,
+                    mean_delay_ms: 20.0,
+                    p95_delay_ms: 30.0,
+                    mean_queue_wait_ms: 0.5,
+                    total_regret_ms: 20.0,
+                    event_regret_ms: 20.0,
+                    deadline_misses: 0,
+                    rejected_offloads: 0,
+                    mean_offloaders: 2.0,
+                    migrations_in: 1,
+                    migrations_out: 0,
+                },
+                // An empty replica: NaN delays must render as JSON null.
+                ReplicaSummary {
+                    id: 1,
+                    label: "gpu@6x".to_string(),
+                    sessions: 0,
+                    frames: 0,
+                    mean_delay_ms: f64::NAN,
+                    p95_delay_ms: f64::NAN,
+                    mean_queue_wait_ms: f64::NAN,
+                    total_regret_ms: 0.0,
+                    event_regret_ms: 0.0,
+                    deadline_misses: 0,
+                    rejected_offloads: 0,
+                    mean_offloaders: 0.0,
+                    migrations_in: 0,
+                    migrations_out: 1,
+                },
+            ],
         };
         let json = fs.to_json();
         // The fields the EXPERIMENTS.md recipes consume.
@@ -564,6 +691,22 @@ mod tests {
             parsed.get("aggregate").unwrap().get("frames").unwrap().as_usize().unwrap(),
             2
         );
+        // Per-replica columns ride the same document; the empty replica's
+        // NaN delay is JSON null.
+        let reps = parsed.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("migrations_in").unwrap().as_usize().unwrap(), 1);
+        assert!(matches!(reps[1].get("mean_delay_ms").unwrap(), Json::Null));
+        // And the replica CSV has one row per replica with a matching header.
+        let csv = fs.replicas_csv();
+        assert_eq!(csv.lines().count(), 3);
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with("replica,label,sessions,frames,"));
+        assert!(header.contains("mean_offloaders"));
+        for row in csv.lines().skip(1) {
+            assert_eq!(row.split(',').count(), header.split(',').count());
+        }
+        assert!(!csv.contains("NaN"), "empty replicas render as empty cells:\n{csv}");
     }
 
     #[test]

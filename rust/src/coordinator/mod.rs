@@ -5,6 +5,10 @@
 //!   [`engine::Engine`] over a shared contended edge (DESIGN.md §6),
 //!   sharded across a [`pool::WorkerPool`] with a deterministic merge
 //!   (DESIGN.md §8).
+//! * [`cluster`] — the routed replica tier above the engine: N
+//!   [`cluster::Replica`]s (each a full engine core with its own edge
+//!   queue, forecast, and worker shards) behind a placement router with
+//!   deterministic session migration at round boundaries (DESIGN.md §10).
 //! * [`pool`] — the fixed-size persistent worker pool behind the
 //!   engine's parallel select/observe phases.
 //! * [`experiment`] — the single-stream simulation runner (all paper
@@ -16,6 +20,7 @@
 //!   fleet-aggregate views, regret accounting, CSV.
 //! * [`exhibits`] — one generator per paper table/figure (see DESIGN.md §5).
 
+pub mod cluster;
 pub mod engine;
 pub mod exhibits;
 pub mod experiment;
@@ -23,7 +28,8 @@ pub mod metrics;
 pub mod pipeline;
 pub mod pool;
 
+pub use cluster::{cluster_from_config, Cluster, ClusterConfig, Placement, Replica, ReplicaSpec};
 pub use engine::{Engine, EngineConfig, FrameSource, Session};
 pub use experiment::{quick_run, run};
-pub use metrics::{FleetSummary, FrameRecord, Metrics, Summary};
+pub use metrics::{FleetSummary, FrameRecord, Metrics, ReplicaSummary, Summary};
 pub use pipeline::{serve, PipelineConfig, ServingReport};

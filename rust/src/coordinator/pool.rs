@@ -215,5 +215,36 @@ mod tests {
         assert_eq!(shard_len(8, 4), 2);
         assert_eq!(shard_len(3, 8), 1); // extra workers idle
         assert_eq!(shard_len(0, 4), 1); // degenerate: no items
+        assert_eq!(shard_len(1, 1), 1);
+        assert_eq!(shard_len(0, 0), 1); // workers clamp: never divide by 0
+    }
+
+    #[test]
+    fn fewer_items_than_workers_leaves_trailing_workers_idle() {
+        // The engine's empty/short-shard contract: with n < workers,
+        // chunking yields exactly n shards and every worker id ≥ n sees
+        // None — and an empty buffer yields no shards at all.
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 2];
+        let per = shard_len(data.len(), pool.workers());
+        let shards: Vec<Mutex<&mut [u64]>> = data.chunks_mut(per).map(Mutex::new).collect();
+        assert_eq!(shards.len(), 2);
+        let visited = AtomicUsize::new(0);
+        pool.run(&|w| {
+            if let Some(shard) = shards.get(w) {
+                visited.fetch_add(1, Ordering::Relaxed);
+                for v in shard.lock().unwrap().iter_mut() {
+                    *v += 1;
+                }
+            }
+        });
+        assert_eq!(visited.load(Ordering::Relaxed), 2, "workers 2 and 3 idle");
+        drop(shards);
+        assert!(data.iter().all(|&v| v == 1));
+
+        let mut empty: Vec<u64> = Vec::new();
+        let per = shard_len(empty.len(), pool.workers());
+        let shards: Vec<Mutex<&mut [u64]>> = empty.chunks_mut(per).map(Mutex::new).collect();
+        assert!(shards.is_empty(), "zero items produce zero shards");
     }
 }

@@ -21,7 +21,7 @@ pub mod queue;
 
 pub use admission::{AdmissionPolicy, SCHEDULER_NAMES};
 pub use clock::{EventQueue, VirtualClock};
-pub use forecast::{EdgeEstimate, QueueSignal, QUEUE_SIGNAL_NAMES};
+pub use forecast::{signal_phase, EdgeEstimate, QueueSignal, QUEUE_SIGNAL_NAMES};
 pub use queue::{EdgeJob, EdgeQueue, QueueConfig, QueueStats, Scheduled};
 
 use crate::simulator::Contention;

@@ -9,7 +9,9 @@
 //!   multi-session serving engine and pipelines ([`coordinator`], with
 //!   [`coordinator::engine`] multiplexing N user sessions over one
 //!   contended edge, sharded across a per-core worker pool with
-//!   bit-identical output at any worker count), the event-driven
+//!   bit-identical output at any worker count, and
+//!   [`coordinator::cluster`] routing sessions across N engine replicas
+//!   with deterministic migration), the event-driven
 //!   edge-server scheduler with
 //!   admission control and cross-session batching ([`edge`]),
 //!   the environment/testbed simulator ([`simulator`]),

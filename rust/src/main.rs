@@ -9,7 +9,7 @@
 //!   help       this text
 
 use ans::config::Config;
-use ans::coordinator::{engine, exhibits, experiment, pipeline};
+use ans::coordinator::{cluster, engine, exhibits, experiment, pipeline, FleetSummary};
 use ans::util::cli::Args;
 use ans::video::Weights;
 use anyhow::{Context, Result};
@@ -50,7 +50,17 @@ SUBCOMMANDS:
              bit-identical to the legacy transcripts.  Frames whose
              delay exceeds --deadline are counted as deadline misses in
              every scheduler mode; event-clock regret lands in the
-             summaries and --json.
+             summaries and --json.  --signal-stagger MS folds a
+             deterministic per-session phase offset into the published
+             forecast wait (herding mitigation; 0 = off, bit-identical).
+             Replica cluster: --replicas N serves the fleet over N
+             engine replicas (each with its own edge queue, forecast
+             and worker pool) behind a session router; --placement
+             static|least-loaded|migrate picks the routing policy and
+             --migrate-every R the rebalance period (migrate only).
+             --replicas 1 (default) is byte-for-byte the single engine;
+             cluster runs add per-replica tables, --json columns and a
+             per-replica CSV.
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -136,7 +146,6 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
-    let mut eng = engine::fleet_from_config(&cfg);
     println!(
         "fleet: {} sessions × {} frames of {} ({}) over a shared {} edge ({} worker{})",
         cfg.sessions,
@@ -182,14 +191,55 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             cfg.queue_signal,
         );
     }
+
+    if cfg.replicas > 1 {
+        println!(
+            "  cluster: {} replicas, placement {}{}",
+            cfg.replicas,
+            cfg.placement,
+            if cfg.placement == "migrate" {
+                format!(" (rebalance every {} rounds)", cfg.migrate_every)
+            } else {
+                String::new()
+            },
+        );
+        let mut cl = cluster::cluster_from_config(&cfg);
+        cl.run(cfg.frames);
+        let fs = cl.fleet_summary();
+        let sessions = cl.sessions();
+        print_session_table(&sessions, &fs);
+        print_replica_table(&fs, cl.migrations());
+        print_fleet_footer(&fs, &cfg, sched.deadline_ms);
+        write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
+        return Ok(());
+    }
+
+    let mut eng = engine::fleet_from_config(&cfg);
     eng.run(cfg.frames);
     let fs = eng.fleet_summary();
+    let sessions: Vec<&engine::Session> = eng.sessions().iter().collect();
+    print_session_table(&sessions, &fs);
+    print_fleet_footer(&fs, &cfg, sched.deadline_ms);
+    if let Some(stats) = eng.scheduler_stats() {
+        let horizon_ms = cfg.frames as f64 * 1e3 / cfg.fps;
+        println!(
+            "edge executor: busy {:.1} ms over a {:.1} ms horizon ({:.0}% utilization, {} launches)",
+            stats.busy_ms,
+            horizon_ms,
+            100.0 * stats.busy_ms / horizon_ms.max(1e-9),
+            stats.batches,
+        );
+    }
+    write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
+    Ok(())
+}
 
+fn print_session_table(sessions: &[&engine::Session], fs: &FleetSummary) {
     println!(
         "\n  {:<4} {:>10} {:>11} {:>10} {:>11} {:>8} {:>16} {:>6} {:>7}",
         "sess", "rate Mbps", "mean ms", "p95 ms", "regret ms", "oracle%", "modal partition", "obs", "resets"
     );
-    for (s, sum) in eng.sessions().iter().zip(&fs.per_session) {
+    for (s, sum) in sessions.iter().zip(&fs.per_session) {
         let snap = s.snapshot();
         let modal = sum.modal_partition();
         println!(
@@ -205,6 +255,36 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             snap.resets,
         );
     }
+}
+
+fn print_replica_table(fs: &FleetSummary, migrations: usize) {
+    println!(
+        "\n  {:<8} {:<10} {:>5} {:>9} {:>9} {:>9} {:>13} {:>7} {:>7}",
+        "replica", "edge", "sess", "mean ms", "p95 ms", "wait ms", "ev regret ms", "mig in",
+        "mig out"
+    );
+    // Empty replicas have no delay stats: render "-", not NaN (same
+    // missing-value convention as the CSV/JSON artifacts).
+    let ms1 = |v: f64| if v.is_finite() { format!("{v:.1}") } else { "-".to_string() };
+    let ms2 = |v: f64| if v.is_finite() { format!("{v:.2}") } else { "-".to_string() };
+    for r in &fs.replicas {
+        println!(
+            "  r{:<7} {:<10} {:>5} {:>9} {:>9} {:>9} {:>13} {:>7} {:>7}",
+            r.id,
+            r.label,
+            r.sessions,
+            ms1(r.mean_delay_ms),
+            ms1(r.p95_delay_ms),
+            ms2(r.mean_queue_wait_ms),
+            ms1(r.event_regret_ms),
+            r.migrations_in,
+            r.migrations_out,
+        );
+    }
+    println!("  {} session migration(s) over the run", migrations);
+}
+
+fn print_fleet_footer(fs: &FleetSummary, cfg: &Config, deadline_ms: f64) {
     println!(
         "\naggregate: {} frames  mean {:.1} ms  p95 {:.1} ms  regret {:.1} ms  oracle-match {:.1}%",
         fs.aggregate.frames,
@@ -217,8 +297,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "event clock: regret {:.1} ms  deadline misses {}{}",
         fs.aggregate.event_regret_ms,
         fs.aggregate.deadline_misses,
-        if sched.deadline_ms.is_finite() {
-            format!(" (budget {} ms)", sched.deadline_ms)
+        if deadline_ms.is_finite() {
+            format!(" (budget {} ms)", deadline_ms)
         } else {
             " (no deadline)".to_string()
         },
@@ -246,34 +326,51 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fs.workers,
         if fs.workers == 1 { "" } else { "s" },
     );
-    if let Some(stats) = eng.scheduler_stats() {
-        let horizon_ms = cfg.frames as f64 * 1e3 / cfg.fps;
-        println!(
-            "edge executor: busy {:.1} ms over a {:.1} ms horizon ({:.0}% utilization, {} launches)",
-            stats.busy_ms,
-            horizon_ms,
-            100.0 * stats.busy_ms / horizon_ms.max(1e-9),
-            stats.batches,
-        );
+}
+
+fn write_fleet_artifacts(
+    args: &Args,
+    cfg: &Config,
+    fs: &FleetSummary,
+    sessions: &[&engine::Session],
+) -> Result<()> {
+    // Key every artifact by the knobs that change the experiment beyond
+    // the base name: replica tier (count + placement + rebalance period)
+    // and the herding stagger — so cluster runs never clobber the
+    // single-engine files or each other.
+    let mut suffix = String::new();
+    if cfg.replicas > 1 {
+        suffix.push_str(&format!("_r{}_{}", cfg.replicas, cfg.placement));
+        if cfg.placement == "migrate" {
+            suffix.push_str(&cfg.migrate_every.to_string());
+        }
+    }
+    if cfg.signal_stagger_ms > 0.0 {
+        suffix.push_str(&format!("_stag{}", cfg.signal_stagger_ms));
     }
     if args.flag("json") {
         std::fs::create_dir_all("bench_results")?;
         // Key the file by every knob that changes the experiment, so
         // recipe runs never overwrite each other.
         let path = format!(
-            "bench_results/fleet_{}_{}_s{}x{}_seed{}.json",
-            cfg.model, fs.scheduler, cfg.sessions, cfg.frames, cfg.seed
+            "bench_results/fleet_{}_{}_s{}x{}_seed{}{}.json",
+            cfg.model, fs.scheduler, cfg.sessions, cfg.frames, cfg.seed, suffix
         );
         std::fs::write(&path, fs.to_json())?;
         println!("fleet metrics JSON -> {path}");
     }
     if args.flag("csv") {
         std::fs::create_dir_all("bench_results")?;
-        for s in eng.sessions() {
-            let path = format!("bench_results/fleet_{}_s{}.csv", cfg.model, s.id);
+        for s in sessions {
+            let path = format!("bench_results/fleet_{}{}_s{}.csv", cfg.model, suffix, s.id);
             std::fs::write(&path, s.metrics.to_csv())?;
         }
-        println!("per-session CSVs -> bench_results/fleet_{}_s*.csv", cfg.model);
+        println!("per-session CSVs -> bench_results/fleet_{}{}_s*.csv", cfg.model, suffix);
+        if !fs.replicas.is_empty() {
+            let path = format!("bench_results/fleet_{}{}_replicas.csv", cfg.model, suffix);
+            std::fs::write(&path, fs.replicas_csv())?;
+            println!("per-replica CSV -> {path}");
+        }
     }
     Ok(())
 }

@@ -125,6 +125,51 @@ pub fn fleet_with(
         .collect()
 }
 
+/// Heterogeneous replica family for the cluster router
+/// (`coordinator::cluster`): one `(edge profile, edge workload)` pair
+/// per replica — even replicas are the fast edge (GPU at load 1), odd
+/// replicas the same GPU dragged down to `slow_load` by exogenous
+/// tenants.  Pair each entry with a `ReplicaSpec`; the 2-replica case is
+/// the canonical "one fast + one slow edge" scenario of EXPERIMENTS.md.
+pub fn hetero_replica_edges(
+    n_replicas: usize,
+    slow_load: f64,
+) -> Vec<(ComputeProfile, Workload)> {
+    assert!(n_replicas >= 1, "cluster needs at least one replica");
+    assert!(slow_load >= 1.0, "load multiplier must be ≥ 1");
+    (0..n_replicas)
+        .map(|i| {
+            if i % 2 == 0 {
+                (compute::EDGE_GPU, Workload::constant(1.0))
+            } else {
+                (compute::EDGE_GPU, Workload::constant(slow_load))
+            }
+        })
+        .collect()
+}
+
+/// The mid-run swing variant of [`hetero_replica_edges`]: which replica
+/// is fast flips at frame `swap_at` (even replicas 1 → `slow_load`, odd
+/// `slow_load` → 1) — the recovery scenario for `migrate` placement.
+pub fn hetero_replica_swing(
+    n_replicas: usize,
+    slow_load: f64,
+    swap_at: usize,
+) -> Vec<(ComputeProfile, Workload)> {
+    assert!(n_replicas >= 1, "cluster needs at least one replica");
+    assert!(slow_load >= 1.0, "load multiplier must be ≥ 1");
+    assert!(swap_at > 0, "the swing must happen after frame 0");
+    (0..n_replicas)
+        .map(|i| {
+            if i % 2 == 0 {
+                (compute::EDGE_GPU, Workload::steps(vec![(0, 1.0), (swap_at, slow_load)]))
+            } else {
+                (compute::EDGE_GPU, Workload::steps(vec![(0, slow_load), (swap_at, 1.0)]))
+            }
+        })
+        .collect()
+}
+
 /// A fleet whose sessions each ride an independent two-state Markov uplink
 /// (fast/slow, per-session phase) — the non-stationary multi-uplink
 /// stress scenario.
@@ -245,6 +290,29 @@ mod tests {
             y.tick(0);
             assert_eq!(x.observe_edge_delay(1), y.observe_edge_delay(1));
         }
+    }
+
+    #[test]
+    fn hetero_replicas_alternate_fast_and_slow() {
+        let edges = hetero_replica_edges(4, 6.0);
+        assert_eq!(edges.len(), 4);
+        for (i, (profile, load)) in edges.iter().enumerate() {
+            assert_eq!(profile.name, compute::EDGE_GPU.name);
+            let want = if i % 2 == 0 { 1.0 } else { 6.0 };
+            assert_eq!(load.at(0), want, "replica {i}");
+            assert_eq!(load.at(1000), want, "constant over time");
+        }
+    }
+
+    #[test]
+    fn hetero_swing_flips_which_replica_is_fast() {
+        let edges = hetero_replica_swing(2, 8.0, 100);
+        assert_eq!(edges[0].1.at(0), 1.0);
+        assert_eq!(edges[1].1.at(0), 8.0);
+        assert_eq!(edges[0].1.at(99), 1.0, "no early flip");
+        assert_eq!(edges[0].1.at(100), 8.0);
+        assert_eq!(edges[1].1.at(100), 1.0);
+        assert_eq!(edges[1].1.at(500), 1.0);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Replica-cluster integration: lossless migration (the property the
+//! router's determinism argument rests on), bit-identity of every
+//! cluster configuration across worker counts, and the routed tier's
+//! reporting surface.
+
+use ans::bandit::{self, Policy};
+use ans::coordinator::cluster::{Cluster, ClusterConfig, Placement, ReplicaSpec};
+use ans::coordinator::engine::EngineConfig;
+use ans::coordinator::FrameSource;
+use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
+use ans::models::{zoo, Network};
+use ans::simulator::{
+    scenario, Contention, Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU,
+};
+
+fn policy(net: &Network, name: &str, horizon: usize) -> Box<dyn Policy> {
+    bandit::by_name(name, net, &DEVICE_MAXN, &EDGE_GPU, horizon, None, None).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// The migration-lossless property: moving a session carries its ENTIRE
+// state (μLinUCB ridge A/b/θ̂, reset counter, metrics, RNG streams), so
+// when the target replica's state is identical to the source's, the
+// migrated run is bit-identical to never migrating.  Construction: two
+// identical replicas each serving one of two *twin* sessions (same env
+// seed, same policy, same source); the replicas' queue states evolve
+// bit-identically, so swapping the twins mid-run lands each session on
+// a replica indistinguishable from the one it left.
+// ---------------------------------------------------------------------------
+fn twin_cluster() -> Cluster {
+    let net = zoo::vgg16();
+    let mut cl = Cluster::new(
+        ClusterConfig::new(
+            EngineConfig {
+                contention: Contention::new(1, 0.25),
+                scheduler: SchedulerConfig::event(AdmissionPolicy::Fifo),
+                queue_signal: QueueSignal::Full,
+                ..Default::default()
+            },
+            Placement::Static,
+            1_000_000,
+        ),
+        vec![
+            ReplicaSpec::new("twin-a", EDGE_GPU, Workload::constant(1.0)),
+            ReplicaSpec::new("twin-b", EDGE_GPU, Workload::constant(1.0)),
+        ],
+    );
+    for _ in 0..2 {
+        let env = Environment::new(
+            net.clone(),
+            DEVICE_MAXN,
+            EDGE_GPU,
+            Workload::constant(1.0),
+            Uplink::constant(16.0),
+            9,
+        );
+        cl.add_session(policy(&net, "mu-linucb", 120), env, FrameSource::uniform());
+    }
+    cl
+}
+
+#[test]
+fn migration_between_identical_replicas_is_lossless() {
+    let rounds = 60;
+    // Reference: the twins never move.
+    let mut stay = twin_cluster();
+    stay.run(rounds);
+    // Treatment: swap the twins across the replicas twice mid-run (so
+    // session 0 also comes *back* — both directions of a move covered).
+    let mut moved = twin_cluster();
+    moved.run(20);
+    moved.migrate_session(0, 1);
+    moved.migrate_session(1, 0);
+    moved.run(20);
+    // ...and swap back, so both directions of a move are exercised.
+    moved.migrate_session(0, 0);
+    moved.migrate_session(1, 1);
+    moved.run(20);
+    assert_eq!(moved.migrations(), 4);
+    assert_eq!(moved.assignment(), &[0, 1], "the twins are back home");
+
+    let ref_sessions = stay.sessions();
+    let mig_sessions = moved.sessions();
+    for (a, b) in ref_sessions.iter().zip(&mig_sessions) {
+        assert_eq!(a.id, b.id);
+        // Per-frame transcript: bit-for-bit.
+        assert_eq!(a.metrics.records.len(), rounds);
+        assert_eq!(b.metrics.records.len(), rounds);
+        for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+            assert_eq!(ra.p, rb.p, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.delay_ms, rb.delay_ms, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.expected_ms, rb.expected_ms, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.queue_wait_ms, rb.queue_wait_ms, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.batch_size, rb.batch_size, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.predicted_edge_ms, rb.predicted_edge_ms, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.event_expected_ms, rb.event_expected_ms, "s{} t={}", a.id, ra.t);
+            assert_eq!(ra.event_oracle_ms, rb.event_oracle_ms, "s{} t={}", a.id, ra.t);
+        }
+        // Learner state: the μLinUCB snapshot (A, b, θ̂, reset counter)
+        // is bit-identical to the never-migrated twin.
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        assert_eq!(sa.observations, sb.observations, "s{}", a.id);
+        assert_eq!(sa.resets, sb.resets, "s{}", a.id);
+        assert_eq!(sa.theta, sb.theta, "s{} θ̂ must survive migration", a.id);
+        assert_eq!(sa.ridge_a, sb.ridge_a, "s{} ridge A must survive migration", a.id);
+        assert_eq!(sa.ridge_b, sb.ridge_b, "s{} ridge b must survive migration", a.id);
+        // Summary view: identical aggregates.
+        let (ua, ub) = (a.summary(), b.summary());
+        assert_eq!(ua.frames, ub.frames);
+        assert_eq!(ua.mean_delay_ms, ub.mean_delay_ms);
+        assert_eq!(ua.p95_delay_ms, ub.p95_delay_ms);
+        assert_eq!(ua.total_regret_ms, ub.total_regret_ms);
+        assert_eq!(ua.event_regret_ms, ub.event_regret_ms);
+        assert_eq!(ua.partition_histogram, ub.partition_histogram);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-count bit-identity for the full stack: heterogeneous swing
+// replicas + migrate placement + EDF batching + the queue-aware select
+// signal.  Every router input is frozen main-thread state and every
+// replica engine already pins this property, so the cluster must too.
+// ---------------------------------------------------------------------------
+#[test]
+fn migrating_hetero_cluster_is_bit_identical_across_worker_counts() {
+    let frames = 120;
+    let build = |workers: usize| {
+        let net = zoo::partnet();
+        let mut sc = SchedulerConfig::event(AdmissionPolicy::Edf);
+        sc.batch_window_ms = 12.0;
+        sc.max_batch = 8;
+        let specs = ReplicaSpec::from_edges(scenario::hetero_replica_swing(2, 6.0, 60));
+        let mut cl = Cluster::new(
+            ClusterConfig::new(
+                EngineConfig {
+                    frame_interval_ms: 1e3 / 3.0,
+                    contention: Contention::new(1, 0.25),
+                    scheduler: sc,
+                    queue_signal: QueueSignal::Full,
+                    workers,
+                    ..Default::default()
+                },
+                Placement::Migrate,
+                20,
+            ),
+            specs,
+        );
+        for env in scenario::fleet(net.clone(), 12, 10.0, 42) {
+            cl.add_session(policy(&net, "mu-linucb", frames), env, FrameSource::uniform());
+        }
+        cl.run(frames);
+        cl
+    };
+    let reference = build(1);
+    for workers in [2usize, 4] {
+        let sharded = build(workers);
+        assert_eq!(
+            reference.assignment(),
+            sharded.assignment(),
+            "workers={workers}: routing must not see the pool size"
+        );
+        assert_eq!(reference.migrations(), sharded.migrations(), "workers={workers}");
+        for (a, b) in reference.sessions().iter().zip(&sharded.sessions()) {
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.p, rb.p, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(ra.delay_ms, rb.delay_ms, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(
+                    ra.queue_wait_ms, rb.queue_wait_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+                assert_eq!(
+                    ra.event_oracle_ms, rb.event_oracle_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+                assert_eq!(ra.rejected, rb.rejected, "workers={workers} s{} t={}", a.id, ra.t);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The swing scenario really migrates: population follows the fast edge.
+// ---------------------------------------------------------------------------
+#[test]
+fn migrate_placement_follows_the_fast_replica() {
+    let frames = 120;
+    let specs = ReplicaSpec::from_edges(scenario::hetero_replica_swing(2, 8.0, 60));
+    let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+    sc.max_batch = 1;
+    sc.batch_window_ms = 0.0;
+    let net = zoo::vgg16();
+    let mut cl = Cluster::new(
+        ClusterConfig::new(
+            EngineConfig {
+                frame_interval_ms: 1e3 / 3.0,
+                contention: Contention::new(1, 0.25),
+                scheduler: sc,
+                ..Default::default()
+            },
+            Placement::Migrate,
+            30,
+        ),
+        specs,
+    );
+    for env in scenario::fleet(net.clone(), 10, 20.0, 7) {
+        cl.add_session(policy(&net, "eo", frames), env, FrameSource::uniform());
+    }
+    let initial_on_fast = cl.assignment().iter().filter(|&&r| r == 0).count();
+    assert!(
+        initial_on_fast >= 7,
+        "admission should crowd the initially-fast replica 0: {initial_on_fast}/10"
+    );
+    cl.run(frames);
+    // After the swing (replica 1 becomes the fast edge at t=60) the
+    // rebalancer must have moved the bulk of the fleet over.
+    let final_on_new_fast = cl.assignment().iter().filter(|&&r| r == 1).count();
+    assert!(
+        final_on_new_fast >= 7,
+        "rebalancing should follow the fast edge: {final_on_new_fast}/10 on replica 1 \
+         (assignment {:?})",
+        cl.assignment()
+    );
+    assert!(cl.migrations() >= 7, "migrations recorded: {}", cl.migrations());
+    let fs = cl.fleet_summary();
+    let moved: usize = fs.replicas.iter().map(|r| r.migrations_in).sum();
+    assert_eq!(moved, cl.migrations(), "per-replica counters agree with the router");
+}

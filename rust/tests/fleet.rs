@@ -417,6 +417,98 @@ fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
 }
 
 // ---------------------------------------------------------------------------
+// The cluster pin (PR 5): a 1-replica static cluster IS the single
+// engine — byte-for-byte against the verbatim PR 1/2 legacy transcript,
+// at every worker count, including the event-clock mirror fields.  The
+// replica tier must be free when it degenerates.
+// ---------------------------------------------------------------------------
+#[test]
+fn single_replica_static_cluster_is_pinned_to_the_legacy_transcript() {
+    use ans::coordinator::cluster::{Cluster, ClusterConfig, Placement, ReplicaSpec};
+
+    let rounds = 150;
+    let net = zoo::vgg16();
+    let contention = Contention::new(1, 0.5);
+    let build_parts = || {
+        let envs = scenario::fleet(net.clone(), 8, 16.0, 77);
+        let policies: Vec<Box<dyn Policy>> = (0..8).map(|_| mu_linucb(&net, rounds)).collect();
+        let sources: Vec<FrameSource> = (0..8)
+            .map(|i| FrameSource::video(700 + i as u64, 0.85, Weights::default_paper()))
+            .collect();
+        (policies, envs, sources)
+    };
+
+    let (policies, envs, sources) = build_parts();
+    let legacy = legacy_fleet_run(
+        policies,
+        envs,
+        sources,
+        contention,
+        Some(200.0),
+        1e3 / 30.0,
+        rounds,
+    );
+
+    for workers in [1usize, 2, 4] {
+        let (policies, envs, sources) = build_parts();
+        let mut cl = Cluster::new(
+            ClusterConfig::new(
+                EngineConfig {
+                    contention,
+                    ingress_mbps: Some(200.0),
+                    workers,
+                    ..Default::default()
+                },
+                Placement::Static,
+                50,
+            ),
+            ReplicaSpec::uniform(1, EDGE_GPU, Workload::constant(1.0)),
+        );
+        for ((policy, env), source) in policies.into_iter().zip(envs).zip(sources) {
+            cl.add_session(policy, env, source);
+        }
+        cl.run(rounds);
+        let sessions = cl.sessions();
+        for (i, (legacy_m, session)) in legacy.iter().zip(&sessions).enumerate() {
+            assert_eq!(legacy_m.records.len(), session.metrics.records.len());
+            for (l, w) in legacy_m.records.iter().zip(&session.metrics.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.delay_ms, w.delay_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.expected_ms, w.expected_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.oracle_p, w.oracle_p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.oracle_ms, w.oracle_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.predicted_edge_ms, w.predicted_edge_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.true_edge_ms, w.true_edge_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.queue_wait_ms, w.queue_wait_ms, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.batch_size, w.batch_size, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.event_expected_ms, w.event_expected_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.event_oracle_ms, w.event_oracle_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.deadline_miss, w.deadline_miss, "workers={workers} s{i} t={}", l.t);
+            }
+        }
+        // The replica tier reports itself honestly: one replica, every
+        // session resident, no migrations.
+        let fs = cl.fleet_summary();
+        assert_eq!(fs.replicas.len(), 1);
+        assert_eq!(fs.replicas[0].sessions, 8);
+        assert_eq!(fs.replicas[0].migrations_in, 0);
+        assert_eq!(cl.migrations(), 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Per-session RNG streams are (seed, index)-pure: growing the configured
 // fleet must not perturb existing sessions' environment noise or video
 // draws (the regression the Rng::stream split exists for).

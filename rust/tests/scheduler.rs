@@ -416,6 +416,193 @@ fn deadline_misses_match_a_manual_count_and_are_admission_independent() {
 }
 
 // ---------------------------------------------------------------------------
+// The PR 5 acceptance property, part 1: on the heterogeneous 2-replica
+// cluster (one fast edge, one 8×-loaded edge; scenario::
+// hetero_replica_edges) the speed-aware `least-loaded` router must
+// strictly beat the oblivious `static` hash on fleet mean delay AND p95
+// spread.  Twelve always-offload (EO) sessions at ~3 fps: static parks
+// 6 sessions on the slow edge — 6 × ~224 ms of work per 333 ms round, a
+// divergent backlog — while least-loaded prices the slow replica at its
+// own per-session cost and routes all but ~1 session to the fast edge,
+// keeping both replicas stable.  Margins are structural (divergent vs
+// stable queues), so the 0.5× factors are extremely loose.
+// ---------------------------------------------------------------------------
+fn hetero_cluster_run(
+    placement: ans::coordinator::cluster::Placement,
+    specs: Vec<ans::coordinator::cluster::ReplicaSpec>,
+    sessions: usize,
+    frames: usize,
+    migrate_every: usize,
+) -> (FleetSummary, ans::coordinator::cluster::Cluster) {
+    use ans::coordinator::cluster::{Cluster, ClusterConfig};
+    let net = zoo::vgg16();
+    let mut solo = SchedulerConfig::event(AdmissionPolicy::Fifo);
+    solo.max_batch = 1;
+    solo.batch_window_ms = 0.0;
+    let mut cl = Cluster::new(
+        ClusterConfig::new(
+            EngineConfig {
+                frame_interval_ms: 1e3 / 3.0,
+                contention: Contention::new(1, 0.25),
+                scheduler: solo,
+                ..Default::default()
+            },
+            placement,
+            migrate_every,
+        ),
+        specs,
+    );
+    for env in scenario::fleet(net.clone(), sessions, 20.0, 42) {
+        cl.add_session(policy(&net, "eo", frames), env, FrameSource::uniform());
+    }
+    cl.run(frames);
+    (cl.fleet_summary(), cl)
+}
+
+fn hetero_specs(
+    edges: Vec<(ans::simulator::ComputeProfile, ans::simulator::Workload)>,
+) -> Vec<ans::coordinator::cluster::ReplicaSpec> {
+    ans::coordinator::cluster::ReplicaSpec::from_edges(edges)
+}
+
+#[test]
+fn least_loaded_placement_beats_static_hash_on_the_heterogeneous_cluster() {
+    use ans::coordinator::cluster::Placement;
+    let frames = 240;
+    let specs = || hetero_specs(scenario::hetero_replica_edges(2, 8.0));
+    let (st, _) = hetero_cluster_run(Placement::Static, specs(), 12, frames, 50);
+    let (ll, ll_cl) = hetero_cluster_run(Placement::LeastLoaded, specs(), 12, frames, 50);
+
+    // The router really did shift population toward the fast edge.
+    let st_fast = st.replicas[0].sessions;
+    let ll_fast = ll.replicas[0].sessions;
+    assert_eq!(st_fast, 6, "static hash splits 50/50");
+    assert!(
+        ll_fast >= 9,
+        "least-loaded should crowd the fast replica: {ll_fast}/12 (assignment {:?})",
+        ll_cl.assignment()
+    );
+    // The slow replica under static placement is structurally divergent,
+    // so the margins are enormous; assert them loosely.
+    assert!(
+        st.aggregate.mean_delay_ms > 1_000.0,
+        "static's slow replica should diverge: mean {:.1} ms",
+        st.aggregate.mean_delay_ms
+    );
+    assert!(
+        ll.aggregate.mean_delay_ms < 0.5 * st.aggregate.mean_delay_ms,
+        "least-loaded mean {:.1} !< half of static {:.1}",
+        ll.aggregate.mean_delay_ms,
+        st.aggregate.mean_delay_ms
+    );
+    assert!(
+        ll.p95_spread_ms() < 0.5 * st.p95_spread_ms(),
+        "least-loaded p95 spread {:.1} !< half of static {:.1}",
+        ll.p95_spread_ms(),
+        st.p95_spread_ms()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The PR 5 acceptance property, part 2: `migrate` recovers after a
+// mid-run load swing flips which replica is fast.  Same fleet, but the
+// replicas swap speeds at t = 120 (scenario::hetero_replica_swing).
+// Least-loaded placed ~9 sessions on the initially-fast replica and
+// never moves again — after the swing they sit on a divergent queue for
+// the rest of the run.  The migrating router re-auctions every 30
+// rounds against the replicas' current workloads and frozen queue
+// forecasts, so at the swing boundary the fleet follows the fast edge.
+// ---------------------------------------------------------------------------
+#[test]
+fn migrate_recovers_after_a_load_swing_flips_the_fast_replica() {
+    use ans::coordinator::cluster::{Cluster, Placement};
+    let frames = 240;
+    let swing = || hetero_specs(scenario::hetero_replica_swing(2, 8.0, 120));
+    let (_, pinned) = hetero_cluster_run(Placement::LeastLoaded, swing(), 10, frames, 30);
+    let (_, migrating) = hetero_cluster_run(Placement::Migrate, swing(), 10, frames, 30);
+
+    // Post-swing window: everything after the first post-swing rebalance.
+    let window_mean = |cl: &Cluster, from: usize| -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for s in cl.sessions() {
+            for r in &s.metrics.records {
+                if r.t >= from {
+                    sum += r.delay_ms;
+                    n += 1;
+                }
+            }
+        }
+        sum / n as f64
+    };
+    let pinned_tail = window_mean(&pinned, 150);
+    let migrating_tail = window_mean(&migrating, 150);
+    assert!(
+        pinned_tail > 1_000.0,
+        "without migration the swung-slow replica should diverge: tail mean {pinned_tail:.1} ms"
+    );
+    assert!(
+        migrating_tail < 0.5 * pinned_tail,
+        "migrate tail mean {migrating_tail:.1} !< half of pinned {pinned_tail:.1}"
+    );
+    // The recovery is visible in the routing itself.
+    assert_eq!(pinned.migrations(), 0, "least-loaded never moves a session");
+    assert!(migrating.migrations() > 0);
+    let on_new_fast = migrating.assignment().iter().filter(|&&r| r == 1).count();
+    assert!(
+        on_new_fast >= 7,
+        "the fleet should follow the fast edge after the swing: {on_new_fast}/10 \
+         (assignment {:?})",
+        migrating.assignment()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The herding stagger is sharding-safe: the per-session signal offset is
+// a pure function of the session id, so `--signal-stagger` cannot
+// observe the worker count.
+// ---------------------------------------------------------------------------
+#[test]
+fn signal_stagger_is_bit_identical_across_worker_counts() {
+    let frames = 100;
+    let run_with_workers = |workers: usize| {
+        let net = zoo::partnet();
+        let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+        sc.max_batch = 1;
+        sc.batch_window_ms = 0.0;
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: sc,
+            queue_signal: QueueSignal::Wait,
+            signal_stagger_ms: 7.0,
+            workers,
+            ..Default::default()
+        });
+        for env in scenario::fleet(net.clone(), 8, 10.0, 42) {
+            eng.add_session(policy(&net, "mu-linucb", frames), env, FrameSource::uniform());
+        }
+        eng.run(frames);
+        eng
+    };
+    let reference = run_with_workers(1);
+    for workers in [2usize, 4] {
+        let sharded = run_with_workers(workers);
+        assert_eq!(reference.offload_counts(), sharded.offload_counts(), "workers={workers}");
+        for (a, b) in reference.sessions().iter().zip(sharded.sessions()) {
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.p, rb.p, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(ra.delay_ms, rb.delay_ms, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(
+                    ra.predicted_edge_ms, rb.predicted_edge_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Bit-for-bit determinism of the event path (same seeds, same schedule).
 // ---------------------------------------------------------------------------
 #[test]
