@@ -16,13 +16,16 @@
 //! (recorded as `host_cores` in the artifact).
 
 use ans::bandit;
+use ans::bandit::linalg::RidgeState;
+use ans::bandit::PolicyStore;
 use ans::coordinator::engine::{Engine, EngineConfig};
 use ans::coordinator::FrameSource;
 use ans::edge::{AdmissionPolicy, SchedulerConfig};
-use ans::models::zoo;
+use ans::models::{zoo, CONTEXT_DIM};
 use ans::simulator::{scenario, Contention, DEVICE_MAXN, EDGE_GPU};
 use ans::util::bench::Bench;
 use ans::util::json::{obj, Json};
+use ans::util::rng::Rng;
 use std::time::Instant;
 
 const WORKERS: &[usize] = &[1, 2, 4, 8];
@@ -120,4 +123,139 @@ fn main() {
     std::fs::write("bench_results/fleet_scale.json", doc.to_string())
         .expect("writing bench_results/fleet_scale.json");
     println!("scaling sweep JSON -> bench_results/fleet_scale.json");
+
+    policy_soa(&b, samples, host_cores);
+}
+
+/// Scalar-vs-SoA comparison of the cross-session policy math itself:
+/// per round every session scores every arm (predict + confidence) and
+/// absorbs one observation.  Both routes run the SAME slice kernels in
+/// the SAME per-session op order — decisions are asserted identical via
+/// checksum — so the ratio isolates the layout effect: boxed per-session
+/// `RidgeState`s chased through pointers vs one flat arena walked
+/// arm-major with `chunks_exact` strides.
+fn policy_soa(b: &Bench, samples: usize, host_cores: usize) {
+    const N: usize = 256; // sessions — the fleet_scale acceptance cell
+    const ROUNDS: usize = 300;
+    const ARMS: usize = 22; // VGG16-scale partition-point count
+    const D: usize = CONTEXT_DIM;
+    let name = "policy_soa/scalar_vs_soa_s256";
+    if !b.enabled(name) {
+        return;
+    }
+    let alpha = 1.0;
+    let beta = 1.0;
+
+    // Shared inputs: one context per arm, its N-fold tiling for the
+    // batch kernels, and one observation per (round, session).
+    let mut rng = Rng::new(0xBA7C4);
+    let ctxs: Vec<Vec<f64>> = (0..ARMS)
+        .map(|_| (0..D).map(|_| rng.uniform(0.0, 1.0)).collect())
+        .collect();
+    let tiled: Vec<Vec<f64>> = ctxs
+        .iter()
+        .map(|x| (0..N).flat_map(|_| x.iter().copied()).collect())
+        .collect();
+    let ys: Vec<f64> = (0..ROUNDS * N).map(|_| rng.uniform(5.0, 250.0)).collect();
+
+    // Array-of-structs baseline: one heap RidgeState per session,
+    // session-major iteration.
+    let run_scalar = || -> (f64, u64) {
+        let mut sts: Vec<RidgeState> = (0..N).map(|_| RidgeState::new(D, beta)).collect();
+        let mut sum = 0u64;
+        let start = Instant::now();
+        for r in 0..ROUNDS {
+            for (s, st) in sts.iter_mut().enumerate() {
+                let mut best = f64::INFINITY;
+                let mut bp = 0usize;
+                for (p, x) in ctxs.iter().enumerate() {
+                    let score = st.predict(x) - alpha * st.confidence_sq(x).sqrt();
+                    if score < best {
+                        best = score;
+                        bp = p;
+                    }
+                }
+                st.update(&ctxs[bp], ys[r * N + s]);
+                sum = sum.wrapping_add(bp as u64);
+            }
+        }
+        ((N * ROUNDS) as f64 / start.elapsed().as_secs_f64().max(1e-9), sum)
+    };
+
+    // Structure-of-arrays: the engine's policy store, arm-major batched
+    // predict/confidence over the packed arenas, then one batched
+    // Sherman–Morrison update (per-session op order unchanged).
+    let run_soa = || -> (f64, u64) {
+        let mut store = PolicyStore::with_capacity(D, N);
+        let prior = RidgeState::new(D, beta);
+        for i in 0..N {
+            store.push_slot();
+            store.slot_mut(i).load_from(&prior);
+        }
+        let mut pred = vec![0.0; N];
+        let mut conf = vec![0.0; N];
+        let mut best = vec![f64::INFINITY; N];
+        let mut bp = vec![0usize; N];
+        let mut xs_sel = vec![0.0; N * D];
+        let mut ys_sel = vec![0.0; N];
+        let mut sum = 0u64;
+        let start = Instant::now();
+        for r in 0..ROUNDS {
+            best.iter_mut().for_each(|v| *v = f64::INFINITY);
+            for (p, tx) in tiled.iter().enumerate() {
+                store.predict_batch(tx, &mut pred);
+                store.confidence_batch(tx, &mut conf);
+                for s in 0..N {
+                    let score = pred[s] - alpha * conf[s].sqrt();
+                    if score < best[s] {
+                        best[s] = score;
+                        bp[s] = p;
+                    }
+                }
+            }
+            for s in 0..N {
+                xs_sel[s * D..(s + 1) * D].copy_from_slice(&ctxs[bp[s]]);
+                ys_sel[s] = ys[r * N + s];
+                sum = sum.wrapping_add(bp[s] as u64);
+            }
+            store.update_batch(&xs_sel, &ys_sel);
+        }
+        ((N * ROUNDS) as f64 / start.elapsed().as_secs_f64().max(1e-9), sum)
+    };
+
+    let mut scalar_fps = 0.0_f64;
+    let mut soa_fps = 0.0_f64;
+    let mut scalar_sum = 0u64;
+    let mut soa_sum = 0u64;
+    for _ in 0..samples {
+        let (f, c) = run_scalar();
+        scalar_fps = scalar_fps.max(f);
+        scalar_sum = c;
+        let (f, c) = run_soa();
+        soa_fps = soa_fps.max(f);
+        soa_sum = c;
+    }
+    assert_eq!(
+        scalar_sum, soa_sum,
+        "scalar and SoA routes must pick identical arms — same kernels, same op order"
+    );
+    let speedup = soa_fps / scalar_fps.max(1e-9);
+    println!(
+        "{name:<40} scalar {scalar_fps:>12.0} f/s   soa {soa_fps:>12.0} f/s   speedup x{speedup:.2}"
+    );
+
+    let doc = obj(vec![
+        ("bench", Json::from("policy_soa")),
+        ("host_cores", Json::from(host_cores)),
+        ("samples", Json::from(samples)),
+        ("sessions", Json::from(N)),
+        ("rounds", Json::from(ROUNDS)),
+        ("arms", Json::from(ARMS)),
+        ("scalar_frames_per_sec", Json::from(scalar_fps)),
+        ("soa_frames_per_sec", Json::from(soa_fps)),
+        ("speedup", Json::from(speedup)),
+    ]);
+    std::fs::write("bench_results/policy_soa.json", doc.to_string())
+        .expect("writing bench_results/policy_soa.json");
+    println!("policy SoA comparison JSON -> bench_results/policy_soa.json");
 }

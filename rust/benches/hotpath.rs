@@ -7,7 +7,7 @@
 
 use ans::bandit::linalg::RidgeState;
 use ans::bandit::policy::{FrameContext, Privileged};
-use ans::bandit::{LinUcb, Policy};
+use ans::bandit::{LinUcb, Policy, PolicyStore};
 use ans::coordinator::engine::{Engine, EngineConfig};
 use ans::coordinator::FrameSource;
 use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
@@ -201,6 +201,52 @@ fn main() {
         "alloc/engine_queue_aware_steady_state", delta, qaudit_rounds
     );
     assert_eq!(delta, 0, "queue-aware select/realize must not allocate");
+
+    // And the SoA policy store's batched cross-session round directly:
+    // arm-major predict + confidence over the packed arenas, one batched
+    // Sherman–Morrison update and downdate (which also exercises the
+    // in-arena Cholesky refresh every 64 ops), plus an explicit
+    // refresh_batch — all against pre-sized slot arenas and caller
+    // buffers, so the steady state must be exactly zero allocations.
+    // (The engine audits above already cover this path end-to-end —
+    // every resident session's ridge state now lives in the store — but
+    // this section pins the batch kernels in isolation.)
+    let store_sessions = 16usize;
+    let mut store = PolicyStore::with_capacity(CONTEXT_DIM, store_sessions);
+    let prior = RidgeState::new(CONTEXT_DIM, 0.01);
+    for i in 0..store_sessions {
+        store.push_slot();
+        store.slot_mut(i).load_from(&prior);
+    }
+    let mut srng = Rng::new(0x5A0A);
+    let tile: Vec<f64> =
+        (0..store_sessions * CONTEXT_DIM).map(|_| srng.uniform(0.0, 1.0)).collect();
+    let ysb: Vec<f64> = (0..store_sessions).map(|_| srng.uniform(10.0, 500.0)).collect();
+    let mut pred = vec![0.0; store_sessions];
+    let mut conf = vec![0.0; store_sessions];
+    let store_round = |store: &mut PolicyStore, pred: &mut [f64], conf: &mut [f64], t: usize| {
+        store.predict_batch(&tile, pred);
+        store.confidence_batch(&tile, conf);
+        store.update_batch(&tile, &ysb);
+        store.downdate_batch(&tile, &ysb);
+        if t % 128 == 0 {
+            store.refresh_batch();
+        }
+    };
+    for t in 0..64 {
+        store_round(&mut store, &mut pred, &mut conf, t); // warm-up
+    }
+    let before = allocations();
+    let store_rounds = 4096usize;
+    for t in 64..64 + store_rounds {
+        store_round(&mut store, &mut pred, &mut conf, t);
+    }
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} rounds x {} slots",
+        "alloc/policy_store_batch_steady_state", delta, store_rounds, store_sessions
+    );
+    assert_eq!(delta, 0, "batched SoA store round must not allocate");
 
     b.write_csv("hotpath.csv").expect("writing bench_results/hotpath.csv");
 }

@@ -7,6 +7,425 @@
 //! O(d³) inversion — this is the §Perf-critical path (the paper's claimed
 //! "ultra-lightweight" property).  A Cholesky solve is kept alongside as
 //! the slow-but-simple oracle for property tests.
+//!
+//! Layout note (DESIGN.md §11): every operation here is defined once as a
+//! flat-slice kernel (`k_*`) and then wrapped twice — by the owned
+//! [`Mat`]/[`RidgeState`] types below, and by the structure-of-arrays
+//! policy store ([`super::store`]) whose slots are strided views into one
+//! contiguous arena per field.  Because both wrappers execute the *same*
+//! kernel on the *same-length* slices, the scalar and SoA paths are
+//! bit-identical by construction, and the batch entry points
+//! ([`predict_batch`], [`update_batch`], [`downdate_batch`],
+//! [`refresh_batch`]) are plain strided loops the compiler can
+//! autovectorize across sessions without changing any per-session
+//! floating-point op order.
+
+// ---------------------------------------------------------------------------
+// Flat-slice kernels: the single definition of every ridge operation.
+// `m` arguments are d×d row-major matrices of length d², vectors have
+// length d.  Each kernel performs exactly the op sequence the original
+// Mat/RidgeState methods performed, so refactoring them behind these
+// functions changes no bits.
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// y = M x (row-wise accumulation).
+#[inline]
+pub fn k_matvec(d: usize, m: &[f64], x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), d);
+    assert_eq!(y.len(), d);
+    for r in 0..d {
+        let row = &m[r * d..(r + 1) * d];
+        let mut acc = 0.0;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        y[r] = acc;
+    }
+}
+
+/// Symmetric rank-1 update M ← M + xxᵀ.
+#[inline]
+pub fn k_rank1_add(d: usize, m: &mut [f64], x: &[f64]) {
+    assert_eq!(x.len(), d);
+    for r in 0..d {
+        for c in 0..d {
+            m[r * d + c] += x[r] * x[c];
+        }
+    }
+}
+
+/// Symmetric rank-1 downdate M ← M − xxᵀ.
+#[inline]
+pub fn k_rank1_sub(d: usize, m: &mut [f64], x: &[f64]) {
+    assert_eq!(x.len(), d);
+    for r in 0..d {
+        for c in 0..d {
+            m[r * d + c] -= x[r] * x[c];
+        }
+    }
+}
+
+/// Quadratic form xᵀ M x (allocation-free: row-wise accumulation).
+#[inline]
+pub fn k_quad_form(d: usize, m: &[f64], x: &[f64]) -> f64 {
+    assert_eq!(x.len(), d);
+    let mut acc = 0.0;
+    for r in 0..d {
+        let row = &m[r * d..(r + 1) * d];
+        acc += x[r] * dot(row, x);
+    }
+    acc
+}
+
+/// bᵀ A⁻¹ x without materializing θ̂ (see [`RidgeState::predict`]).
+#[inline]
+pub fn k_predict(d: usize, a_inv: &[f64], b: &[f64], x: &[f64]) -> f64 {
+    assert_eq!(x.len(), d);
+    let mut acc = 0.0;
+    for (r, br) in b.iter().enumerate() {
+        let row = &a_inv[r * d..(r + 1) * d];
+        acc += br * dot(row, x);
+    }
+    acc
+}
+
+/// Cholesky factorization M = LLᵀ into `l` (fully overwritten).
+#[inline]
+pub fn k_cholesky(d: usize, m: &[f64], l: &mut [f64]) -> Result<(), String> {
+    assert_eq!(m.len(), d * d);
+    assert_eq!(l.len(), d * d);
+    l.fill(0.0);
+    for i in 0..d {
+        for j in 0..=i {
+            let mut sum = m[i * d + j];
+            for k in 0..j {
+                sum -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("not positive definite (pivot {i}: {sum})"));
+                }
+                l[i * d + j] = sum.sqrt();
+            } else {
+                l[i * d + j] = sum / l[j * d + j];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Two-pass triangular solve L Lᵀ x = rhs given the lower factor `l`,
+/// in place in `out` (allocation-free).
+#[inline]
+pub fn k_solve_with_factor(d: usize, l: &[f64], rhs: &[f64], out: &mut [f64]) {
+    assert_eq!(rhs.len(), d);
+    assert_eq!(out.len(), d);
+    // Forward: L y = rhs (y lands in `out`).
+    for i in 0..d {
+        let mut sum = rhs[i];
+        for k in 0..i {
+            sum -= l[i * d + k] * out[k];
+        }
+        out[i] = sum / l[i * d + i];
+    }
+    // Backward: Lᵀ x = y, in place (entries above i are already x).
+    for i in (0..d).rev() {
+        let mut sum = out[i];
+        for k in i + 1..d {
+            sum -= l[k * d + i] * out[k];
+        }
+        out[i] = sum / l[i * d + i];
+    }
+}
+
+/// Exact refresh of A⁻¹ from A: column-by-column Cholesky solves through
+/// the scratch factor — the same math (and bits) as `Mat::inverse`,
+/// without allocating.  Resets the rank-1 op counter.
+#[inline]
+pub fn k_refresh_inverse(
+    d: usize,
+    a: &[f64],
+    a_inv: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut usize,
+) {
+    k_cholesky(d, a, chol).expect("A must stay positive definite");
+    for c in 0..d {
+        rhs.fill(0.0);
+        rhs[c] = 1.0;
+        k_solve_with_factor(d, chol, rhs, col);
+        for r in 0..d {
+            a_inv[r * d + c] = col[r];
+        }
+    }
+    *ops = 0;
+}
+
+/// One ridge observation (x, y) on a flat slot:
+/// A += xxᵀ;  b += x·y;  A⁻¹ via Sherman–Morrison
+/// A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x);
+/// then the every-[`REFRESH_INTERVAL`]-ops exact refresh.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn k_update(
+    d: usize,
+    a: &mut [f64],
+    a_inv: &mut [f64],
+    b: &mut [f64],
+    scratch: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut usize,
+    x: &[f64],
+    y: f64,
+) {
+    assert_eq!(x.len(), d);
+    k_rank1_add(d, a, x);
+    for (bi, xi) in b.iter_mut().zip(x) {
+        *bi += xi * y;
+    }
+    // A⁻¹x lands in the reused scratch buffer (no per-update alloc).
+    k_matvec(d, a_inv, x, scratch);
+    let denom = 1.0 + dot(x, scratch);
+    for r in 0..d {
+        for c in 0..d {
+            a_inv[r * d + c] -= scratch[r] * scratch[c] / denom;
+        }
+    }
+    *ops += 1;
+    if *ops >= REFRESH_INTERVAL {
+        k_refresh_inverse(d, a, a_inv, chol, rhs, col, ops);
+    }
+}
+
+/// Remove a previously incorporated observation (sliding-window mode):
+/// A −= xxᵀ; b −= x·y; A⁻¹ via the negative-sign Sherman–Morrison
+/// A⁻¹ ← A⁻¹ + (A⁻¹x)(A⁻¹x)ᵀ / (1 − xᵀA⁻¹x).
+/// Only valid for (x, y) pairs that were updated before — then
+/// A − xxᵀ ⪰ βI stays positive definite and the denominator is > 0.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn k_downdate(
+    d: usize,
+    a: &mut [f64],
+    a_inv: &mut [f64],
+    b: &mut [f64],
+    scratch: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut usize,
+    x: &[f64],
+    y: f64,
+) {
+    assert_eq!(x.len(), d);
+    k_rank1_sub(d, a, x);
+    for (bi, xi) in b.iter_mut().zip(x) {
+        *bi -= xi * y;
+    }
+    k_matvec(d, a_inv, x, scratch);
+    let denom = 1.0 - dot(x, scratch);
+    if denom <= 1e-9 {
+        // Drifted inverse made the downdate look degenerate; A itself is
+        // already downdated above, so an exact refresh restores truth.
+        k_refresh_inverse(d, a, a_inv, chol, rhs, col, ops);
+        return;
+    }
+    for r in 0..d {
+        for c in 0..d {
+            a_inv[r * d + c] += scratch[r] * scratch[c] / denom;
+        }
+    }
+    *ops += 1;
+    if *ops >= REFRESH_INTERVAL {
+        k_refresh_inverse(d, a, a_inv, chol, rhs, col, ops);
+    }
+}
+
+/// Reset a flat slot to the ridge prior: A = βI, A⁻¹ = (1/β)I, b = 0,
+/// op counter 0 — exactly the state [`RidgeState::new`] constructs.
+#[inline]
+pub fn k_reset(
+    d: usize,
+    a: &mut [f64],
+    a_inv: &mut [f64],
+    b: &mut [f64],
+    ops: &mut usize,
+    beta: f64,
+) {
+    assert!(beta > 0.0, "ridge prior β must be positive");
+    a.fill(0.0);
+    a_inv.fill(0.0);
+    for i in 0..d {
+        a[i * d + i] = beta;
+        a_inv[i * d + i] = 1.0 / beta;
+    }
+    b.fill(0.0);
+    *ops = 0;
+}
+
+// ---------------------------------------------------------------------------
+// Batched SoA entry points: flat strided loops over n contiguous slots.
+// Matrix arenas (`a`, `a_inv`, `chol`) hold n·d² floats, vector arenas
+// (`b`, `scratch`, `rhs`, `col`, `xs`) hold n·d, `ops` holds n counters.
+// Slot i occupies [i·d², (i+1)·d²) / [i·d, (i+1)·d).  Each slot runs the
+// identical per-slot kernel in slot order, so per-session bits match the
+// scalar path while the memory walk is one forward sweep per arena.
+// ---------------------------------------------------------------------------
+
+/// bᵀA⁻¹x for every slot: `out[i] = b_i ᵀ A_i⁻¹ x_i`.
+pub fn predict_batch(d: usize, a_inv: &[f64], b: &[f64], xs: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    let dd = d * d;
+    assert_eq!(a_inv.len(), n * dd);
+    assert_eq!(b.len(), n * d);
+    assert_eq!(xs.len(), n * d);
+    for (((ai, bi), x), o) in a_inv
+        .chunks_exact(dd)
+        .zip(b.chunks_exact(d))
+        .zip(xs.chunks_exact(d))
+        .zip(out.iter_mut())
+    {
+        *o = k_predict(d, ai, bi, x);
+    }
+}
+
+/// Confidence width² xᵀA⁻¹x for every slot (clamped at 0 like
+/// [`RidgeState::confidence_sq`]).
+pub fn confidence_batch(d: usize, a_inv: &[f64], xs: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    let dd = d * d;
+    assert_eq!(a_inv.len(), n * dd);
+    assert_eq!(xs.len(), n * d);
+    for ((ai, x), o) in a_inv.chunks_exact(dd).zip(xs.chunks_exact(d)).zip(out.iter_mut()) {
+        *o = k_quad_form(d, ai, x).max(0.0);
+    }
+}
+
+/// Batched Sherman–Morrison update: slot i absorbs (xs[i], ys[i]).
+#[allow(clippy::too_many_arguments)]
+pub fn update_batch(
+    d: usize,
+    a: &mut [f64],
+    a_inv: &mut [f64],
+    b: &mut [f64],
+    scratch: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut [usize],
+    xs: &[f64],
+    ys: &[f64],
+) {
+    let n = ops.len();
+    let dd = d * d;
+    assert_eq!(a.len(), n * dd);
+    assert_eq!(a_inv.len(), n * dd);
+    assert_eq!(b.len(), n * d);
+    assert_eq!(xs.len(), n * d);
+    assert_eq!(ys.len(), n);
+    for i in 0..n {
+        let m = i * dd;
+        let v = i * d;
+        k_update(
+            d,
+            &mut a[m..m + dd],
+            &mut a_inv[m..m + dd],
+            &mut b[v..v + d],
+            &mut scratch[v..v + d],
+            &mut chol[m..m + dd],
+            &mut rhs[v..v + d],
+            &mut col[v..v + d],
+            &mut ops[i],
+            &xs[v..v + d],
+            ys[i],
+        );
+    }
+}
+
+/// Batched negative-sign Sherman–Morrison: slot i sheds (xs[i], ys[i]).
+#[allow(clippy::too_many_arguments)]
+pub fn downdate_batch(
+    d: usize,
+    a: &mut [f64],
+    a_inv: &mut [f64],
+    b: &mut [f64],
+    scratch: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut [usize],
+    xs: &[f64],
+    ys: &[f64],
+) {
+    let n = ops.len();
+    let dd = d * d;
+    assert_eq!(a.len(), n * dd);
+    assert_eq!(a_inv.len(), n * dd);
+    assert_eq!(b.len(), n * d);
+    assert_eq!(xs.len(), n * d);
+    assert_eq!(ys.len(), n);
+    for i in 0..n {
+        let m = i * dd;
+        let v = i * d;
+        k_downdate(
+            d,
+            &mut a[m..m + dd],
+            &mut a_inv[m..m + dd],
+            &mut b[v..v + d],
+            &mut scratch[v..v + d],
+            &mut chol[m..m + dd],
+            &mut rhs[v..v + d],
+            &mut col[v..v + d],
+            &mut ops[i],
+            &xs[v..v + d],
+            ys[i],
+        );
+    }
+}
+
+/// Batched exact refresh: every slot recomputes A⁻¹ from A via Cholesky
+/// and resets its rank-1 op counter.
+pub fn refresh_batch(
+    d: usize,
+    a: &[f64],
+    a_inv: &mut [f64],
+    chol: &mut [f64],
+    rhs: &mut [f64],
+    col: &mut [f64],
+    ops: &mut [usize],
+) {
+    let n = ops.len();
+    let dd = d * d;
+    assert_eq!(a.len(), n * dd);
+    assert_eq!(a_inv.len(), n * dd);
+    for i in 0..n {
+        let m = i * dd;
+        let v = i * d;
+        k_refresh_inverse(
+            d,
+            &a[m..m + dd],
+            &mut a_inv[m..m + dd],
+            &mut chol[m..m + dd],
+            &mut rhs[v..v + d],
+            &mut col[v..v + d],
+            &mut ops[i],
+        );
+    }
+}
 
 /// Dense square matrix, row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,37 +462,17 @@ impl Mat {
 
     /// y = M x into a caller-provided buffer (hot path: no allocation).
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.d);
-        assert_eq!(y.len(), self.d);
-        for r in 0..self.d {
-            let row = &self.data[r * self.d..(r + 1) * self.d];
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            y[r] = acc;
-        }
+        k_matvec(self.d, &self.data, x, y);
     }
 
     /// Symmetric rank-1 update: M ← M + xxᵀ.
     pub fn rank1_update(&mut self, x: &[f64]) {
-        assert_eq!(x.len(), self.d);
-        for r in 0..self.d {
-            for c in 0..self.d {
-                self.data[r * self.d + c] += x[r] * x[c];
-            }
-        }
+        k_rank1_add(self.d, &mut self.data, x);
     }
 
     /// Quadratic form xᵀ M x (allocation-free: row-wise accumulation).
     pub fn quad_form(&self, x: &[f64]) -> f64 {
-        assert_eq!(x.len(), self.d);
-        let mut acc = 0.0;
-        for r in 0..self.d {
-            let row = &self.data[r * self.d..(r + 1) * self.d];
-            acc += x[r] * dot(row, x);
-        }
-        acc
+        k_quad_form(self.d, &self.data, x)
     }
 
     /// Cholesky factorization M = LLᵀ (M must be symmetric positive
@@ -87,26 +486,8 @@ impl Mat {
     /// [`Mat::cholesky`] into a caller-provided factor (allocation-free;
     /// `l` is fully overwritten).  Same math, same bits.
     pub fn cholesky_into(&self, l: &mut Mat) -> Result<(), String> {
-        let d = self.d;
-        assert_eq!(l.d, d, "factor must match the matrix dimension");
-        l.data.fill(0.0);
-        for i in 0..d {
-            for j in 0..=i {
-                let mut sum = self.at(i, j);
-                for k in 0..j {
-                    sum -= l.at(i, k) * l.at(j, k);
-                }
-                if i == j {
-                    if sum <= 0.0 {
-                        return Err(format!("not positive definite (pivot {i}: {sum})"));
-                    }
-                    l[(i, j)] = sum.sqrt();
-                } else {
-                    l[(i, j)] = sum / l.at(j, j);
-                }
-            }
-        }
-        Ok(())
+        assert_eq!(l.d, self.d, "factor must match the matrix dimension");
+        k_cholesky(self.d, &self.data, &mut l.data)
     }
 
     /// Solve M x = rhs via Cholesky (the property-test oracle).
@@ -165,35 +546,7 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 /// in place in `out` (allocation-free; shared by [`Mat::solve_into`] and
 /// the ridge state's periodic exact refresh).
 pub fn solve_with_factor(l: &Mat, rhs: &[f64], out: &mut [f64]) {
-    let d = l.d;
-    assert_eq!(rhs.len(), d);
-    assert_eq!(out.len(), d);
-    // Forward: L y = rhs (y lands in `out`).
-    for i in 0..d {
-        let mut sum = rhs[i];
-        for k in 0..i {
-            sum -= l.at(i, k) * out[k];
-        }
-        out[i] = sum / l.at(i, i);
-    }
-    // Backward: Lᵀ x = y, in place (entries above i are already x).
-    for i in (0..d).rev() {
-        let mut sum = out[i];
-        for k in i + 1..d {
-            sum -= l.at(k, i) * out[k];
-        }
-        out[i] = sum / l.at(i, i);
-    }
-}
-
-#[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
+    k_solve_with_factor(l.d, &l.data, rhs, out);
 }
 
 /// Ridge-regression state with an incrementally maintained inverse:
@@ -241,49 +594,84 @@ impl RidgeState {
         }
     }
 
+    /// Rebuild an owned state from raw parts — used when a session leaves
+    /// the SoA policy store (migration / engine teardown) and must carry
+    /// its learner with it.  `ops` preserves the refresh phase so the
+    /// every-64-ops Cholesky fires on exactly the same future frame.
+    pub fn from_parts(
+        d: usize,
+        a: Vec<f64>,
+        a_inv: Vec<f64>,
+        b: Vec<f64>,
+        ops: usize,
+    ) -> RidgeState {
+        assert_eq!(a.len(), d * d);
+        assert_eq!(a_inv.len(), d * d);
+        assert_eq!(b.len(), d);
+        RidgeState {
+            d,
+            a: Mat { d, data: a },
+            a_inv: Mat { d, data: a_inv },
+            b,
+            scratch: vec![0.0; d],
+            chol_scratch: Mat::zeros(d),
+            rhs_scratch: vec![0.0; d],
+            col_scratch: vec![0.0; d],
+            ops_since_refresh: ops,
+        }
+    }
+
+    /// Rank-1 ops since the last exact refresh (the refresh phase; must
+    /// travel with the state on adopt/release for bit-identity).
+    pub fn ops_since_refresh(&self) -> usize {
+        self.ops_since_refresh
+    }
+
+    /// Reset to the ridge prior in place — identical values to
+    /// `RidgeState::new(self.d, beta)` without reallocating.
+    pub fn reset(&mut self, beta: f64) {
+        k_reset(
+            self.d,
+            &mut self.a.data,
+            &mut self.a_inv.data,
+            &mut self.b,
+            &mut self.ops_since_refresh,
+            beta,
+        );
+    }
+
     /// Exact refresh of A⁻¹ from A (called periodically and on demand).
     /// Column-by-column Cholesky solves through the scratch factor —
     /// the same math (and bits) as `Mat::inverse`, without allocating.
     pub fn refresh_inverse(&mut self) {
-        self.a
-            .cholesky_into(&mut self.chol_scratch)
-            .expect("A must stay positive definite");
-        for c in 0..self.d {
-            self.rhs_scratch.fill(0.0);
-            self.rhs_scratch[c] = 1.0;
-            solve_with_factor(&self.chol_scratch, &self.rhs_scratch, &mut self.col_scratch);
-            for r in 0..self.d {
-                self.a_inv.data[r * self.d + c] = self.col_scratch[r];
-            }
-        }
-        self.ops_since_refresh = 0;
-    }
-
-    fn maybe_refresh(&mut self) {
-        self.ops_since_refresh += 1;
-        if self.ops_since_refresh >= REFRESH_INTERVAL {
-            self.refresh_inverse();
-        }
+        k_refresh_inverse(
+            self.d,
+            &self.a.data,
+            &mut self.a_inv.data,
+            &mut self.chol_scratch.data,
+            &mut self.rhs_scratch,
+            &mut self.col_scratch,
+            &mut self.ops_since_refresh,
+        );
     }
 
     /// Incorporate an observation (x, y):
     /// A += xxᵀ;  b += x·y;  A⁻¹ via Sherman–Morrison:
     /// A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x).
     pub fn update(&mut self, x: &[f64], y: f64) {
-        assert_eq!(x.len(), self.d);
-        self.a.rank1_update(x);
-        for (bi, xi) in self.b.iter_mut().zip(x) {
-            *bi += xi * y;
-        }
-        // A⁻¹x lands in the reused scratch buffer (no per-update alloc).
-        self.a_inv.matvec_into(x, &mut self.scratch);
-        let denom = 1.0 + dot(x, &self.scratch);
-        for r in 0..self.d {
-            for c in 0..self.d {
-                self.a_inv.data[r * self.d + c] -= self.scratch[r] * self.scratch[c] / denom;
-            }
-        }
-        self.maybe_refresh();
+        k_update(
+            self.d,
+            &mut self.a.data,
+            &mut self.a_inv.data,
+            &mut self.b,
+            &mut self.scratch,
+            &mut self.chol_scratch.data,
+            &mut self.rhs_scratch,
+            &mut self.col_scratch,
+            &mut self.ops_since_refresh,
+            x,
+            y,
+        );
     }
 
     /// Remove a previously incorporated observation (sliding-window mode):
@@ -292,29 +680,19 @@ impl RidgeState {
     /// Only valid for (x, y) pairs that were `update`d before — then
     /// A − xxᵀ ⪰ βI stays positive definite and the denominator is > 0.
     pub fn downdate(&mut self, x: &[f64], y: f64) {
-        assert_eq!(x.len(), self.d);
-        for r in 0..self.d {
-            for c in 0..self.d {
-                self.a.data[r * self.d + c] -= x[r] * x[c];
-            }
-        }
-        for (bi, xi) in self.b.iter_mut().zip(x) {
-            *bi -= xi * y;
-        }
-        self.a_inv.matvec_into(x, &mut self.scratch);
-        let denom = 1.0 - dot(x, &self.scratch);
-        if denom <= 1e-9 {
-            // Drifted inverse made the downdate look degenerate; A itself is
-            // already downdated above, so an exact refresh restores truth.
-            self.refresh_inverse();
-            return;
-        }
-        for r in 0..self.d {
-            for c in 0..self.d {
-                self.a_inv.data[r * self.d + c] += self.scratch[r] * self.scratch[c] / denom;
-            }
-        }
-        self.maybe_refresh();
+        k_downdate(
+            self.d,
+            &mut self.a.data,
+            &mut self.a_inv.data,
+            &mut self.b,
+            &mut self.scratch,
+            &mut self.chol_scratch.data,
+            &mut self.rhs_scratch,
+            &mut self.col_scratch,
+            &mut self.ops_since_refresh,
+            x,
+            y,
+        );
     }
 
     /// θ̂ = A⁻¹ b.
@@ -332,13 +710,7 @@ impl RidgeState {
     /// symmetric, so this equals `dot(&theta(), x)` up to floating-point
     /// summation order (the property test pins them to 1e-9).
     pub fn predict(&self, x: &[f64]) -> f64 {
-        assert_eq!(x.len(), self.d);
-        let mut acc = 0.0;
-        for (r, br) in self.b.iter().enumerate() {
-            let row = &self.a_inv.data[r * self.d..(r + 1) * self.d];
-            acc += br * dot(row, x);
-        }
-        acc
+        k_predict(self.d, &self.a_inv.data, &self.b, x)
     }
 
     /// Confidence width² = xᵀ A⁻¹ x (non-negative for PD A by construction).
@@ -622,5 +994,85 @@ mod tests {
         let d0 = st.a.log_det().unwrap();
         st.update(&[1.0, 2.0, 3.0], 0.0);
         assert!(st.a.log_det().unwrap() > d0);
+    }
+
+    #[test]
+    fn reset_matches_fresh_state() {
+        let mut rng = Rng::new(31);
+        let mut st = RidgeState::new(7, 0.25);
+        for _ in 0..90 {
+            let x = random_vec(&mut rng, 7);
+            st.update(&x, rng.uniform(0.0, 20.0));
+        }
+        st.reset(0.25);
+        let fresh = RidgeState::new(7, 0.25);
+        assert_eq!(st.a.data, fresh.a.data);
+        assert_eq!(st.a_inv.data, fresh.a_inv.data);
+        assert_eq!(st.b, fresh.b);
+        assert_eq!(st.ops_since_refresh(), 0);
+    }
+
+    #[test]
+    fn from_parts_round_trips_through_raw_state() {
+        let mut rng = Rng::new(37);
+        let mut st = RidgeState::new(7, 0.5);
+        for _ in 0..70 {
+            let x = random_vec(&mut rng, 7);
+            st.update(&x, rng.uniform(0.0, 50.0));
+        }
+        let rebuilt = RidgeState::from_parts(
+            7,
+            st.a.data.clone(),
+            st.a_inv.data.clone(),
+            st.b.clone(),
+            st.ops_since_refresh(),
+        );
+        // Continue both with the same tail of ops: bit-identical forever,
+        // including the refresh phase carried through `ops`.
+        let mut a = st;
+        let mut b = rebuilt;
+        for _ in 0..70 {
+            let x = random_vec(&mut rng, 7);
+            let y = rng.uniform(0.0, 50.0);
+            a.update(&x, y);
+            b.update(&x, y);
+        }
+        assert_eq!(a.a.data, b.a.data);
+        assert_eq!(a.a_inv.data, b.a_inv.data);
+        assert_eq!(a.b, b.b);
+        assert_eq!(a.ops_since_refresh(), b.ops_since_refresh());
+    }
+
+    #[test]
+    fn single_slot_batch_ops_match_scalar_bits() {
+        // One-slot batch calls are literally the scalar kernels.
+        let d = 7;
+        let mut rng = Rng::new(41);
+        let mut st = RidgeState::new(d, 1.0);
+        let mut a = st.a.data.clone();
+        let mut a_inv = st.a_inv.data.clone();
+        let mut b = st.b.clone();
+        let (mut scratch, mut rhs, mut col) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        let mut chol = vec![0.0; d * d];
+        let mut ops = vec![0usize; 1];
+        for _ in 0..100 {
+            let x = random_vec(&mut rng, d);
+            let y = rng.uniform(0.0, 30.0);
+            st.update(&x, y);
+            update_batch(
+                d, &mut a, &mut a_inv, &mut b, &mut scratch, &mut chol, &mut rhs, &mut col,
+                &mut ops, &x, &[y],
+            );
+            let mut pred = [0.0];
+            predict_batch(d, &a_inv, &b, &x, &mut pred);
+            assert_eq!(pred[0], st.predict(&x), "predict bits");
+            let mut conf = [0.0];
+            confidence_batch(d, &a_inv, &x, &mut conf);
+            assert_eq!(conf[0], st.confidence_sq(&x), "confidence bits");
+        }
+        assert_eq!(a, st.a.data);
+        assert_eq!(a_inv, st.a_inv.data);
+        assert_eq!(b, st.b);
+        assert_eq!(ops[0], st.ops_since_refresh());
     }
 }

@@ -19,21 +19,42 @@
 //! zero confidence width) is absorbing — once chosen, no feedback arrives,
 //! A and b freeze, and the same argmin repeats forever (Limitation #2).
 //! μLinUCB's schedule excludes p = P on forced frames, restoring learning.
+//!
+//! Ridge-state placement (DESIGN.md §11): the decision logic below is
+//! generic over [`RidgeBacking`], so the same code runs against an
+//! **owned** [`RidgeState`] (standalone use: exhibits, the single-stream
+//! experiment, the real pipeline) or against a **slot** in the fleet
+//! engine's structure-of-arrays [`PolicyStore`](super::store::PolicyStore)
+//! handed in per call via the `*_in` trait methods.  Both backings invoke
+//! identical kernels in identical order, so where the state lives never
+//! changes a single output bit.
 
 use super::forced::ForcedSchedule;
 use super::linalg::{dot, RidgeState};
 use super::policy::{FrameContext, Policy, PolicySnapshot};
+use super::store::{RidgeBacking, RidgeSlot, RidgeSlotMut};
 use crate::models::FeatureVector;
 
-/// Shared implementation of the LinUCB family (see module docs).
-pub struct LinUcb {
+/// Where this policy's ridge state currently lives.
+enum Backing {
+    /// Self-contained: the policy owns its ridge state (standalone runs,
+    /// and sessions in transit between engines during migration).
+    Owned(RidgeState),
+    /// Store-backed: the state sits in the owning engine's SoA policy
+    /// store; every call must come through the `*_in` methods with the
+    /// session's slot.
+    Slot,
+}
+
+/// The decision logic of the LinUCB family — everything except the ridge
+/// state itself, which is threaded in per call (see [`Backing`]).
+struct Core {
     name: String,
-    ridge: RidgeState,
     /// Ridge prior (kept for drift resets).
     beta: f64,
     /// Confidence-width multiplier α (Lemma 1 sets the theoretical value;
     /// in practice a tuned constant, as in the original LinUCB paper).
-    pub alpha: f64,
+    alpha: f64,
     /// Apply frame weights L_t (Mitigation #1)?
     use_weights: bool,
     /// Forced-sampling schedule (Mitigation #2), if any.
@@ -83,6 +104,12 @@ pub struct LinUcb {
     warmup_next: Option<usize>,
 }
 
+/// Shared implementation of the LinUCB family (see module docs).
+pub struct LinUcb {
+    core: Core,
+    backing: Backing,
+}
+
 /// Default ridge prior β.  Theory assumption (v) states β ≥ max{1, C_θ²}
 /// *for rewards normalized to O(1)*; our delays stay in ms (θ entries are
 /// O(10²..10³)), so the prior must be weak or predictions for small-norm
@@ -106,100 +133,79 @@ pub const DEFAULT_DRIFT: f64 = 0.25;
 /// models whose delays are milliseconds (e.g. the real PartNet pipeline).
 pub const REF_SCALE_MS: f64 = 400.0;
 
+fn core(
+    name: String,
+    d: usize,
+    alpha: f64,
+    beta: f64,
+    use_weights: bool,
+    forced: Option<ForcedSchedule>,
+) -> Core {
+    Core {
+        name,
+        beta,
+        alpha,
+        use_weights,
+        forced,
+        scores: Vec::new(),
+        theta_cache: vec![0.0; d],
+        n_obs: 0,
+        window: None,
+        history: std::collections::VecDeque::new(),
+        current_frame: 0,
+        drift_threshold: None,
+        drift_ema: 0.0,
+        drift_samples: 0,
+        resets: 0,
+        auto_scale: false,
+        warmup_next: Some(0),
+    }
+}
+
 impl LinUcb {
     /// Classic LinUCB (Chu et al. 2011): no weights, no forced sampling.
     pub fn classic(d: usize, alpha: f64, beta: f64) -> LinUcb {
         LinUcb {
-            name: "LinUCB".into(),
-            ridge: RidgeState::new(d, beta),
-            beta,
-            alpha,
-            use_weights: false,
-            forced: None,
-            scores: Vec::new(),
-            theta_cache: vec![0.0; d],
-            n_obs: 0,
-            window: None,
-            history: std::collections::VecDeque::new(),
-            current_frame: 0,
-            drift_threshold: None,
-            drift_ema: 0.0,
-            drift_samples: 0,
-            resets: 0,
-            auto_scale: false,
-            warmup_next: Some(0),
+            core: core("LinUCB".into(), d, alpha, beta, false, None),
+            backing: Backing::Owned(RidgeState::new(d, beta)),
         }
     }
 
     /// AdaLinUCB-style weighted variant: weights but no forced sampling.
     pub fn ada(d: usize, alpha: f64, beta: f64) -> LinUcb {
         LinUcb {
-            name: "AdaLinUCB".into(),
-            ridge: RidgeState::new(d, beta),
-            beta,
-            alpha,
-            use_weights: true,
-            forced: None,
-            scores: Vec::new(),
-            theta_cache: vec![0.0; d],
-            n_obs: 0,
-            window: None,
-            history: std::collections::VecDeque::new(),
-            current_frame: 0,
-            drift_threshold: None,
-            drift_ema: 0.0,
-            drift_samples: 0,
-            resets: 0,
-            auto_scale: false,
-            warmup_next: Some(0),
+            core: core("AdaLinUCB".into(), d, alpha, beta, true, None),
+            backing: Backing::Owned(RidgeState::new(d, beta)),
         }
     }
 
     /// μLinUCB with a known horizon T (Algorithm 1).
     pub fn mu_linucb(d: usize, alpha: f64, beta: f64, mu: f64, horizon: usize) -> LinUcb {
         LinUcb {
-            name: format!("muLinUCB(mu={mu})"),
-            ridge: RidgeState::new(d, beta),
-            beta,
-            alpha,
-            use_weights: true,
-            forced: Some(ForcedSchedule::known(horizon, mu)),
-            scores: Vec::new(),
-            theta_cache: vec![0.0; d],
-            n_obs: 0,
-            window: None,
-            history: std::collections::VecDeque::new(),
-            current_frame: 0,
-            drift_threshold: None,
-            drift_ema: 0.0,
-            drift_samples: 0,
-            resets: 0,
-            auto_scale: false,
-            warmup_next: Some(0),
+            core: core(
+                format!("muLinUCB(mu={mu})"),
+                d,
+                alpha,
+                beta,
+                true,
+                Some(ForcedSchedule::known(horizon, mu)),
+            ),
+            backing: Backing::Owned(RidgeState::new(d, beta)),
         }
     }
 
     /// μLinUCB for unknown T: phase-doubling forced sampling (§3.2).
     pub fn mu_linucb_unknown_t(d: usize, alpha: f64, beta: f64, mu: f64, t0: usize) -> LinUcb {
         LinUcb {
-            name: format!("muLinUCB-phase(mu={mu})"),
-            ridge: RidgeState::new(d, beta),
-            beta,
-            alpha,
-            use_weights: true,
-            forced: Some(ForcedSchedule::phase_doubling(t0, mu)),
-            scores: Vec::new(),
-            theta_cache: vec![0.0; d],
-            n_obs: 0,
-            window: None,
-            history: std::collections::VecDeque::new(),
-            current_frame: 0,
-            drift_threshold: None,
-            drift_ema: 0.0,
-            drift_samples: 0,
-            resets: 0,
-            auto_scale: false,
-            warmup_next: Some(0),
+            core: core(
+                format!("muLinUCB-phase(mu={mu})"),
+                d,
+                alpha,
+                beta,
+                true,
+                Some(ForcedSchedule::phase_doubling(t0, mu)),
+            ),
+            backing: Backing::Owned(RidgeState::new(d, beta)),
         }
     }
 
@@ -219,20 +225,20 @@ impl LinUcb {
 
     /// Scale the exploration bonus by d_P^f / [`REF_SCALE_MS`].
     pub fn with_auto_scale(mut self) -> LinUcb {
-        self.auto_scale = true;
+        self.core.auto_scale = true;
         self
     }
 
     /// Disable the warm-up sweep (ablation benches).
     pub fn without_warmup(mut self) -> LinUcb {
-        self.warmup_next = None;
+        self.core.warmup_next = None;
         self
     }
 
     /// Enable sliding-window forgetting with the given window length.
     pub fn with_window(mut self, window: usize) -> LinUcb {
         assert!(window > 0, "window must be positive");
-        self.window = Some(window);
+        self.core.window = Some(window);
         self
     }
 
@@ -242,47 +248,60 @@ impl LinUcb {
     /// phases still produce the forced observations that reveal a change.
     pub fn with_drift_reset(mut self, threshold: f64) -> LinUcb {
         assert!(threshold > 0.0);
-        self.drift_threshold = Some(threshold);
+        self.core.drift_threshold = Some(threshold);
         self
     }
 
+    /// Confidence-width multiplier α.
+    pub fn alpha(&self) -> f64 {
+        self.core.alpha
+    }
+
+    /// Current estimate θ̂, borrowed from the cached buffer (refreshed on
+    /// every model mutation — no per-call solve or allocation).
+    pub fn theta(&self) -> &[f64] {
+        &self.core.theta_cache
+    }
+
+    /// Number of feedback observations incorporated so far.
+    pub fn observations(&self) -> usize {
+        self.core.n_obs
+    }
+
+    /// Number of drift resets triggered so far.
+    pub fn resets(&self) -> usize {
+        self.core.resets
+    }
+
+    #[cfg(test)]
+    fn owned_ridge(&self) -> &RidgeState {
+        match &self.backing {
+            Backing::Owned(r) => r,
+            Backing::Slot => panic!("ridge state lives in the store"),
+        }
+    }
+}
+
+impl Core {
     /// Forget the stale model (drift response).  Deliberately does NOT
     /// re-enter the deterministic warm-up sweep: a full sweep pays every
     /// arm's cost unconditionally (ruinous if the environment that
     /// triggered the reset is a 1 Mbps uplink and some arms ship
     /// megabytes); optimistic UCB exploration from the fresh prior
     /// re-identifies the optimum in ~10–20 targeted samples instead.
-    fn reset_learning(&mut self) {
-        self.ridge = RidgeState::new(self.ridge.d, self.beta);
+    fn reset_learning<R: RidgeBacking>(&mut self, ridge: &mut R) {
+        ridge.reset(self.beta);
         self.history.clear();
         self.n_obs = 0;
         self.drift_ema = 0.0;
         self.drift_samples = 0;
         self.resets += 1;
-        self.ridge.theta_into(&mut self.theta_cache);
+        ridge.theta_into(&mut self.theta_cache);
     }
 
-    /// Current estimate θ̂, borrowed from the cached buffer (refreshed on
-    /// every model mutation — no per-call solve or allocation).
-    pub fn theta(&self) -> &[f64] {
-        &self.theta_cache
-    }
-
-    /// Number of feedback observations incorporated so far.
-    pub fn observations(&self) -> usize {
-        self.n_obs
-    }
-
-    /// Number of drift resets triggered so far.
-    pub fn resets(&self) -> usize {
-        self.resets
-    }
-}
-
-impl LinUcb {
-    fn score_arms(&mut self, ctx: &FrameContext) {
+    fn score_arms<R: RidgeBacking>(&mut self, ridge: &R, ctx: &FrameContext) {
         // Allocation-free: θ̂ lands in the reused cache buffer.
-        self.ridge.theta_into(&mut self.theta_cache);
+        ridge.theta_into(&mut self.theta_cache);
         let l_t = if self.use_weights { ctx.weight } else { 0.0 };
         let conf_scale = (1.0 - l_t).max(0.0);
         let alpha = if self.auto_scale {
@@ -295,7 +314,7 @@ impl LinUcb {
         self.scores.clear();
         for (p, x) in ctx.contexts.iter().enumerate() {
             let pred = dot(&self.theta_cache, x);
-            let width = (conf_scale * self.ridge.confidence_sq(x)).max(0.0).sqrt();
+            let width = (conf_scale * ridge.confidence_sq(x)).max(0.0).sqrt();
             // The forecast queue wait is *known* per-arm delay, exactly
             // like d_p^f: it joins the score's known part rather than
             // the learned model (whose feedback the engine strips of
@@ -305,14 +324,8 @@ impl LinUcb {
             self.scores.push(ctx.front_delays[p] + wait + pred - alpha * width);
         }
     }
-}
 
-impl Policy for LinUcb {
-    fn name(&self) -> &str {
-        &self.name
-    }
-
-    fn select(&mut self, ctx: &FrameContext) -> usize {
+    fn select<R: RidgeBacking>(&mut self, ridge: &mut R, ctx: &FrameContext) -> usize {
         let p_max = ctx.max_partition();
         self.current_frame = ctx.t;
         // Frame-aged eviction: drop observations older than the window.
@@ -320,7 +333,7 @@ impl Policy for LinUcb {
             let mut evicted = false;
             while let Some(&(x, y, t0)) = self.history.front() {
                 if t0 + w <= ctx.t {
-                    self.ridge.downdate(&x, y);
+                    ridge.downdate(&x, y);
                     self.history.pop_front();
                     evicted = true;
                 } else {
@@ -330,7 +343,7 @@ impl Policy for LinUcb {
             if evicted {
                 // Keep the θ̂ cache in lockstep with the model even when
                 // the warm-up branch below returns before scoring.
-                self.ridge.theta_into(&mut self.theta_cache);
+                ridge.theta_into(&mut self.theta_cache);
             }
         }
         // Warm-up sweep: sample every off-device arm once, in order.
@@ -341,7 +354,7 @@ impl Policy for LinUcb {
             }
             self.warmup_next = None;
         }
-        self.score_arms(ctx);
+        self.score_arms(&*ridge, ctx);
         let exclude_mo = self
             .forced
             .as_ref()
@@ -357,13 +370,13 @@ impl Policy for LinUcb {
         best
     }
 
-    fn observe(&mut self, _p: usize, x: &FeatureVector, edge_delay_ms: f64) {
+    fn observe<R: RidgeBacking>(&mut self, ridge: &mut R, x: &FeatureVector, edge_delay_ms: f64) {
         // Drift check BEFORE the update: how wrong was the current model
-        // about this observation?  `RidgeState::predict` is the
-        // allocation-free bᵀA⁻¹x form of dot(θ̂, x).
+        // about this observation?  `predict` is the allocation-free
+        // bᵀA⁻¹x form of dot(θ̂, x).
         if let Some(threshold) = self.drift_threshold {
             if self.warmup_next.is_none() && self.n_obs >= 5 {
-                let pred = self.ridge.predict(x);
+                let pred = ridge.predict(x);
                 let scale = edge_delay_ms.abs().max(pred.abs()).max(10.0);
                 let rel = (edge_delay_ms - pred).abs() / scale;
                 self.drift_ema = if self.drift_samples == 0 {
@@ -373,37 +386,144 @@ impl Policy for LinUcb {
                 };
                 self.drift_samples += 1;
                 if self.drift_samples >= 3 && self.drift_ema > threshold {
-                    self.reset_learning();
+                    self.reset_learning(ridge);
                     // The triggering observation is still valid data for the
                     // fresh model.
-                    self.ridge.update(x, edge_delay_ms);
+                    ridge.update(x, edge_delay_ms);
                     self.n_obs = 1;
-                    self.ridge.theta_into(&mut self.theta_cache);
+                    ridge.theta_into(&mut self.theta_cache);
                     return;
                 }
             }
         }
-        self.ridge.update(x, edge_delay_ms);
+        ridge.update(x, edge_delay_ms);
         self.n_obs += 1;
         if self.window.is_some() {
             self.history.push_back((*x, edge_delay_ms, self.current_frame));
         }
-        self.ridge.theta_into(&mut self.theta_cache);
+        ridge.theta_into(&mut self.theta_cache);
     }
 
-    fn predict_edge_delay(&self, x: &FeatureVector) -> Option<f64> {
-        Some(self.ridge.predict(x))
-    }
-
-    fn snapshot(&self) -> PolicySnapshot {
+    fn snapshot(&self, ridge_a: Option<Vec<f64>>, ridge_b: Option<Vec<f64>>) -> PolicySnapshot {
         PolicySnapshot {
             name: self.name.clone(),
             observations: self.n_obs,
             resets: self.resets,
             // One clone of the cached buffer — no A⁻¹b solve per call.
             theta: Some(self.theta_cache.clone()),
-            ridge_a: Some(self.ridge.a.data.clone()),
-            ridge_b: Some(self.ridge.b.clone()),
+            ridge_a,
+            ridge_b,
+        }
+    }
+}
+
+impl Policy for LinUcb {
+    fn name(&self) -> &str {
+        &self.core.name
+    }
+
+    fn select(&mut self, ctx: &FrameContext) -> usize {
+        let LinUcb { core, backing } = self;
+        match backing {
+            Backing::Owned(r) => core.select(r, ctx),
+            Backing::Slot => panic!("store-backed {} must be driven via select_in", core.name),
+        }
+    }
+
+    fn observe(&mut self, _p: usize, x: &FeatureVector, edge_delay_ms: f64) {
+        let LinUcb { core, backing } = self;
+        match backing {
+            Backing::Owned(r) => core.observe(r, x, edge_delay_ms),
+            Backing::Slot => panic!("store-backed {} must be driven via observe_in", core.name),
+        }
+    }
+
+    fn predict_edge_delay(&self, x: &FeatureVector) -> Option<f64> {
+        match &self.backing {
+            Backing::Owned(r) => Some(r.predict(x)),
+            Backing::Slot => {
+                panic!("store-backed {} must be driven via predict_edge_delay_in", self.core.name)
+            }
+        }
+    }
+
+    fn snapshot(&self) -> PolicySnapshot {
+        match &self.backing {
+            Backing::Owned(r) => self.core.snapshot(Some(r.a.data.clone()), Some(r.b.clone())),
+            Backing::Slot => panic!(
+                "store-backed {} snapshots via snapshot_in (Engine::policy_snapshot)",
+                self.core.name
+            ),
+        }
+    }
+
+    fn adopt_slot(&mut self, slot: &mut RidgeSlotMut<'_>) -> bool {
+        match &self.backing {
+            // Dimension mismatch: stay self-contained (the engine's store
+            // is sized for CONTEXT_DIM; a custom-d learner keeps owning).
+            Backing::Owned(r) => {
+                if r.d != slot.dim() {
+                    return false;
+                }
+            }
+            Backing::Slot => return true,
+        }
+        if let Backing::Owned(r) = std::mem::replace(&mut self.backing, Backing::Slot) {
+            slot.load_from(&r);
+        }
+        true
+    }
+
+    fn release_slot(&mut self, slot: RidgeSlot<'_>) {
+        if matches!(self.backing, Backing::Slot) {
+            self.backing = Backing::Owned(slot.to_ridge_state());
+        }
+    }
+
+    fn select_in(&mut self, ctx: &FrameContext, slot: Option<&mut RidgeSlotMut<'_>>) -> usize {
+        let LinUcb { core, backing } = self;
+        match backing {
+            Backing::Owned(r) => core.select(r, ctx),
+            Backing::Slot => {
+                core.select(slot.expect("store-backed LinUCB select needs its slot"), ctx)
+            }
+        }
+    }
+
+    fn observe_in(
+        &mut self,
+        _p: usize,
+        x: &FeatureVector,
+        edge_delay_ms: f64,
+        slot: Option<&mut RidgeSlotMut<'_>>,
+    ) {
+        let LinUcb { core, backing } = self;
+        match backing {
+            Backing::Owned(r) => core.observe(r, x, edge_delay_ms),
+            Backing::Slot => core.observe(
+                slot.expect("store-backed LinUCB observe needs its slot"),
+                x,
+                edge_delay_ms,
+            ),
+        }
+    }
+
+    fn predict_edge_delay_in(&self, x: &FeatureVector, slot: Option<RidgeSlot<'_>>) -> Option<f64> {
+        match &self.backing {
+            Backing::Owned(r) => Some(r.predict(x)),
+            Backing::Slot => {
+                Some(slot.expect("store-backed LinUCB predict needs its slot").predict(x))
+            }
+        }
+    }
+
+    fn snapshot_in(&self, slot: Option<RidgeSlot<'_>>) -> PolicySnapshot {
+        match &self.backing {
+            Backing::Owned(r) => self.core.snapshot(Some(r.a.data.clone()), Some(r.b.clone())),
+            Backing::Slot => {
+                let s = slot.expect("store-backed LinUCB snapshot needs its slot");
+                self.core.snapshot(Some(s.a_data().to_vec()), Some(s.b_data().to_vec()))
+            }
         }
     }
 }
@@ -412,6 +532,7 @@ impl Policy for LinUcb {
 mod tests {
     use super::*;
     use crate::bandit::policy::Privileged;
+    use crate::bandit::store::PolicyStore;
     use crate::models::{features, zoo, FeatureScale, CONTEXT_DIM};
     use crate::simulator::Environment;
 
@@ -437,6 +558,42 @@ mod tests {
             if p != p_max {
                 let d_e = env.observe_edge_delay(p);
                 policy.observe(p, &contexts[p], d_e);
+            }
+            chosen.push(p);
+        }
+        chosen
+    }
+
+    /// Same loop as [`run`], but store-backed through the `*_in` methods —
+    /// the exact call shape the fleet engine uses.
+    fn run_in_store(
+        policy: &mut dyn Policy,
+        store: &mut PolicyStore,
+        slot_idx: usize,
+        env: &mut Environment,
+        frames: usize,
+    ) -> Vec<usize> {
+        let scale = FeatureScale::for_network(&env.net);
+        let contexts = features::context_vectors(&env.net, &scale);
+        let front: Vec<f64> = env.front_delays().to_vec();
+        let p_max = env.num_partitions();
+        let mut chosen = Vec::with_capacity(frames);
+        for t in 0..frames {
+            env.tick(t);
+            let ctx = FrameContext {
+                t,
+                weight: 0.2,
+                front_delays: &front,
+                contexts: &contexts,
+                queue_wait_ms: &[],
+                privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+            };
+            let mut slot = store.slot_mut(slot_idx);
+            let p = policy.select_in(&ctx, Some(&mut slot));
+            if p != p_max {
+                let d_e = env.observe_edge_delay(p);
+                let mut slot = store.slot_mut(slot_idx);
+                policy.observe_in(p, &contexts[p], d_e, Some(&mut slot));
             }
             chosen.push(p);
         }
@@ -597,7 +754,7 @@ mod tests {
         let mut env = Environment::simple(zoo::vgg16(), 16.0, 5);
         let mut pol = LinUcb::mu_linucb(CONTEXT_DIM, DEFAULT_ALPHA, DEFAULT_BETA, 0.25, 120);
         run(&mut pol, &mut env, 120);
-        let fresh = pol.ridge.theta();
+        let fresh = pol.owned_ridge().theta();
         assert_eq!(pol.theta(), &fresh[..], "cache must equal a fresh solve");
         let snap = pol.snapshot();
         assert_eq!(snap.theta.as_deref(), Some(pol.theta()));
@@ -621,8 +778,8 @@ mod tests {
         let b = snap.ridge_b.expect("LinUCB exposes b");
         assert_eq!(a.len(), CONTEXT_DIM * CONTEXT_DIM);
         assert_eq!(b.len(), CONTEXT_DIM);
-        assert_eq!(a, pol.ridge.a.data);
-        assert_eq!(b, pol.ridge.b);
+        assert_eq!(a, pol.owned_ridge().a.data);
+        assert_eq!(b, pol.owned_ridge().b);
     }
 
     #[test]
@@ -700,5 +857,63 @@ mod tests {
             privileged: priv_,
         };
         assert_eq!(a.select(&lo), a.select(&hi), "classic LinUCB must ignore L_t");
+    }
+
+    #[test]
+    fn store_backed_run_is_bit_identical_to_owned() {
+        // The tentpole's bit-identity claim at the policy level: the same
+        // μLinUCB config, driven (a) self-contained and (b) through a SoA
+        // store slot, produces identical decisions and identical learner
+        // state — including drift resets and refresh phases.
+        let frames = 500;
+        let mut env_a = Environment::simple(zoo::vgg16(), 12.0, 8);
+        let mut env_b = Environment::simple(zoo::vgg16(), 12.0, 8);
+        let mut owned = LinUcb::ans_default(frames);
+        let mut stored = LinUcb::ans_default(frames);
+        let mut store = PolicyStore::new(CONTEXT_DIM);
+        store.push_slot();
+        let mut slot = store.slot_mut(0);
+        assert!(stored.adopt_slot(&mut slot), "μLinUCB must adopt its slot");
+        let chosen_a = run(&mut owned, &mut env_a, frames);
+        let chosen_b = run_in_store(&mut stored, &mut store, 0, &mut env_b, frames);
+        assert_eq!(chosen_a, chosen_b, "decision streams must match bit-for-bit");
+        assert_eq!(owned.observations(), stored.observations());
+        assert_eq!(owned.resets(), stored.resets());
+        assert_eq!(owned.theta(), stored.theta());
+        let snap_a = owned.snapshot();
+        let snap_b = stored.snapshot_in(Some(store.slot(0)));
+        assert_eq!(snap_a.ridge_a, snap_b.ridge_a);
+        assert_eq!(snap_a.ridge_b, snap_b.ridge_b);
+        // Release: the policy is self-contained again, same bits.
+        stored.release_slot(store.slot(0));
+        let snap_c = stored.snapshot();
+        assert_eq!(snap_a.ridge_a, snap_c.ridge_a);
+        assert_eq!(snap_a.ridge_b, snap_c.ridge_b);
+        assert_eq!(
+            owned.owned_ridge().ops_since_refresh(),
+            stored.owned_ridge().ops_since_refresh(),
+            "refresh phase must survive adopt/release"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "select_in")]
+    fn store_backed_policy_rejects_slotless_select() {
+        let mut pol = LinUcb::paper_default(10);
+        let mut store = PolicyStore::new(CONTEXT_DIM);
+        store.push_slot();
+        let mut slot = store.slot_mut(0);
+        assert!(pol.adopt_slot(&mut slot));
+        let front = vec![0.0, 1.0];
+        let contexts = vec![[0.0; CONTEXT_DIM]; 2];
+        let ctx = FrameContext {
+            t: 0,
+            weight: 0.2,
+            front_delays: &front,
+            contexts: &contexts,
+            queue_wait_ms: &[],
+            privileged: Privileged { rate_mbps: 10.0, expected_totals: None },
+        };
+        pol.select(&ctx);
     }
 }

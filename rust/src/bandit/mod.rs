@@ -9,7 +9,9 @@
 //! baselines plus the [`policy::Policy`] trait everything implements.
 //!
 //! [`linalg`] carries the small-d ridge-regression hot path (Sherman–Morrison
-//! incremental inverse — the §Perf-critical code), and [`forced`] the
+//! incremental inverse — the §Perf-critical code) plus its batched SoA
+//! entry points, [`store`] the structure-of-arrays policy store the fleet
+//! engine keeps learner state in (DESIGN.md §11), and [`forced`] the
 //! forced-sampling schedules (known-T and phase-doubling).
 
 pub mod forced;
@@ -17,6 +19,7 @@ pub mod linalg;
 pub mod linucb;
 pub mod neurosurgeon;
 pub mod policy;
+pub mod store;
 
 pub use forced::ForcedSchedule;
 pub use linucb::{LinUcb, DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_DRIFT};
@@ -24,6 +27,7 @@ pub use neurosurgeon::Neurosurgeon;
 pub use policy::{
     EdgeOnly, Fixed, FrameContext, MobileOnly, Oracle, Policy, PolicySnapshot, Privileged,
 };
+pub use store::{PolicyStore, RidgeBacking, RidgeSlot, RidgeSlotMut, StoreSliceMut};
 
 use crate::models::{Network, CONTEXT_DIM};
 use crate::simulator::ComputeProfile;

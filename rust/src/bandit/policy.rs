@@ -12,6 +12,7 @@
 //! those, noting the comparison "is not fair to ANS").  Privileged fields
 //! live in [`Privileged`] so it is explicit which policy touches what.
 
+use super::store::{RidgeSlot, RidgeSlotMut};
 use crate::models::FeatureVector;
 
 /// Per-frame decision context (the device-side view).
@@ -107,6 +108,51 @@ pub trait Policy: Send {
             ridge_a: None,
             ridge_b: None,
         }
+    }
+
+    // --- Structure-of-arrays store integration (DESIGN.md §11) ---------
+    //
+    // The fleet engine keeps learner state in a SoA [`PolicyStore`] and
+    // hands each policy its slot at call time.  Policies that maintain no
+    // ridge state (all the baselines here) use these defaults, which
+    // ignore the slot and forward to the plain methods — so the store is
+    // invisible to them.  μLinUCB overrides all of them.
+
+    /// Move owned learner state into the given store slot.  Returns true
+    /// if the policy is now store-backed (stateless policies return
+    /// false and keep ignoring their slot).
+    fn adopt_slot(&mut self, _slot: &mut RidgeSlotMut<'_>) -> bool {
+        false
+    }
+
+    /// Copy learner state back out of the slot into owned storage, so the
+    /// policy is self-contained again (session departure / migration).
+    fn release_slot(&mut self, _slot: RidgeSlot<'_>) {}
+
+    /// [`Policy::select`] with the session's store slot (if any).
+    fn select_in(&mut self, ctx: &FrameContext, _slot: Option<&mut RidgeSlotMut<'_>>) -> usize {
+        self.select(ctx)
+    }
+
+    /// [`Policy::observe`] with the session's store slot (if any).
+    fn observe_in(
+        &mut self,
+        p: usize,
+        x: &FeatureVector,
+        edge_delay_ms: f64,
+        _slot: Option<&mut RidgeSlotMut<'_>>,
+    ) {
+        self.observe(p, x, edge_delay_ms)
+    }
+
+    /// [`Policy::predict_edge_delay`] with the session's store slot.
+    fn predict_edge_delay_in(&self, x: &FeatureVector, _slot: Option<RidgeSlot<'_>>) -> Option<f64> {
+        self.predict_edge_delay(x)
+    }
+
+    /// [`Policy::snapshot`] with the session's store slot.
+    fn snapshot_in(&self, _slot: Option<RidgeSlot<'_>>) -> PolicySnapshot {
+        self.snapshot()
     }
 }
 

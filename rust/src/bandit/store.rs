@@ -1,0 +1,617 @@
+//! Structure-of-arrays policy store: the fleet engine's home for every
+//! session's ridge learner state (DESIGN.md §11).
+//!
+//! Motivation: with per-session `Box<dyn Policy>` learners, each μLinUCB
+//! ridge state is its own scatter of small heap allocations, so the
+//! per-frame d×d predicts and Sherman–Morrison updates hop across the
+//! heap once per session.  The store instead keeps **one contiguous
+//! arena per field** — all `A` matrices back to back, all `A⁻¹`, all `b`,
+//! all scratch buffers, all refresh counters — with slot `i` occupying
+//! the strided range `[i·d², (i+1)·d²)` (matrices) / `[i·d, (i+1)·d)`
+//! (vectors).  Slot order equals local session order inside an engine, so
+//! a contiguous shard of sessions maps to a contiguous slice of every
+//! arena and the sharded select/observe phases borrow **disjoint SoA
+//! slices** instead of locking a vector of boxes.
+//!
+//! Bit-identity: slots run the exact same `k_*` kernels as the owned
+//! [`RidgeState`] (one shared definition in [`crate::bandit::linalg`]),
+//! and adopt/release copies the full state *including the rank-1 op
+//! counter*, so the every-64-ops Cholesky refresh fires on the same
+//! frame wherever the state lives.  Migration moves sessions between
+//! engines losslessly because `release` rebuilds an owned `RidgeState`
+//! from the slot bits and `adopt` writes them back verbatim.
+
+use super::linalg::{self, RidgeState};
+
+/// Read-write view of one learner slot (strided slices into the arenas).
+/// Mirrors [`RidgeState`]'s API through the shared kernels.
+pub struct RidgeSlotMut<'a> {
+    pub(crate) d: usize,
+    pub(crate) a: &'a mut [f64],
+    pub(crate) a_inv: &'a mut [f64],
+    pub(crate) b: &'a mut [f64],
+    pub(crate) scratch: &'a mut [f64],
+    pub(crate) chol: &'a mut [f64],
+    pub(crate) rhs: &'a mut [f64],
+    pub(crate) col: &'a mut [f64],
+    pub(crate) ops: &'a mut usize,
+}
+
+/// Read-only view of one learner slot (for snapshot/predict paths).
+#[derive(Clone, Copy)]
+pub struct RidgeSlot<'a> {
+    pub(crate) d: usize,
+    pub(crate) a: &'a [f64],
+    pub(crate) a_inv: &'a [f64],
+    pub(crate) b: &'a [f64],
+    pub(crate) ops: usize,
+}
+
+impl<'a> RidgeSlotMut<'a> {
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Reborrow with a shorter lifetime (pass down without consuming).
+    pub fn reborrow(&mut self) -> RidgeSlotMut<'_> {
+        RidgeSlotMut {
+            d: self.d,
+            a: self.a,
+            a_inv: self.a_inv,
+            b: self.b,
+            scratch: self.scratch,
+            chol: self.chol,
+            rhs: self.rhs,
+            col: self.col,
+            ops: self.ops,
+        }
+    }
+
+    /// Read-only view of this slot.
+    pub fn read(&self) -> RidgeSlot<'_> {
+        RidgeSlot { d: self.d, a: self.a, a_inv: self.a_inv, b: self.b, ops: *self.ops }
+    }
+
+    /// Copy an owned state into this slot verbatim (adopt), including the
+    /// refresh-phase counter.
+    pub fn load_from(&mut self, st: &RidgeState) {
+        assert_eq!(st.d, self.d, "slot/learner dimension mismatch");
+        self.a.copy_from_slice(&st.a.data);
+        self.a_inv.copy_from_slice(&st.a_inv.data);
+        self.b.copy_from_slice(&st.b);
+        *self.ops = st.ops_since_refresh();
+    }
+}
+
+impl<'a> RidgeSlot<'a> {
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn a_data(&self) -> &[f64] {
+        self.a
+    }
+
+    pub fn b_data(&self) -> &[f64] {
+        self.b
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        linalg::k_predict(self.d, self.a_inv, self.b, x)
+    }
+
+    pub fn confidence_sq(&self, x: &[f64]) -> f64 {
+        linalg::k_quad_form(self.d, self.a_inv, x).max(0.0)
+    }
+
+    pub fn theta_into(&self, out: &mut [f64]) {
+        linalg::k_matvec(self.d, self.a_inv, self.b, out);
+    }
+
+    /// Rebuild an owned state from the slot bits (release / migration).
+    pub fn to_ridge_state(&self) -> RidgeState {
+        RidgeState::from_parts(
+            self.d,
+            self.a.to_vec(),
+            self.a_inv.to_vec(),
+            self.b.to_vec(),
+            self.ops,
+        )
+    }
+}
+
+/// The learner operations μLinUCB needs, abstracted over where the ridge
+/// state lives: an owned [`RidgeState`] (standalone policy) or a
+/// [`RidgeSlotMut`] into the SoA store (fleet engine).  Both impls call
+/// the same flat-slice kernels, so the two paths are bit-identical.
+pub trait RidgeBacking {
+    fn dim(&self) -> usize;
+    fn predict(&self, x: &[f64]) -> f64;
+    fn confidence_sq(&self, x: &[f64]) -> f64;
+    fn theta_into(&self, out: &mut [f64]);
+    fn update(&mut self, x: &[f64], y: f64);
+    fn downdate(&mut self, x: &[f64], y: f64);
+    fn reset(&mut self, beta: f64);
+}
+
+impl RidgeBacking for RidgeState {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn predict(&self, x: &[f64]) -> f64 {
+        RidgeState::predict(self, x)
+    }
+    fn confidence_sq(&self, x: &[f64]) -> f64 {
+        RidgeState::confidence_sq(self, x)
+    }
+    fn theta_into(&self, out: &mut [f64]) {
+        RidgeState::theta_into(self, out)
+    }
+    fn update(&mut self, x: &[f64], y: f64) {
+        RidgeState::update(self, x, y)
+    }
+    fn downdate(&mut self, x: &[f64], y: f64) {
+        RidgeState::downdate(self, x, y)
+    }
+    fn reset(&mut self, beta: f64) {
+        RidgeState::reset(self, beta)
+    }
+}
+
+impl<'a> RidgeBacking for RidgeSlotMut<'a> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn predict(&self, x: &[f64]) -> f64 {
+        linalg::k_predict(self.d, self.a_inv, self.b, x)
+    }
+    fn confidence_sq(&self, x: &[f64]) -> f64 {
+        linalg::k_quad_form(self.d, self.a_inv, x).max(0.0)
+    }
+    fn theta_into(&self, out: &mut [f64]) {
+        linalg::k_matvec(self.d, self.a_inv, self.b, out);
+    }
+    fn update(&mut self, x: &[f64], y: f64) {
+        linalg::k_update(
+            self.d, self.a, self.a_inv, self.b, self.scratch, self.chol, self.rhs, self.col,
+            self.ops, x, y,
+        );
+    }
+    fn downdate(&mut self, x: &[f64], y: f64) {
+        linalg::k_downdate(
+            self.d, self.a, self.a_inv, self.b, self.scratch, self.chol, self.rhs, self.col,
+            self.ops, x, y,
+        );
+    }
+    fn reset(&mut self, beta: f64) {
+        linalg::k_reset(self.d, self.a, self.a_inv, self.b, self.ops, beta);
+    }
+}
+
+/// A mutable window over a contiguous run of slots — what each worker
+/// shard borrows during the sharded select/observe phases.  Windows over
+/// disjoint slot ranges alias nothing, so shards need no locks on the
+/// learner state itself.
+pub struct StoreSliceMut<'a> {
+    d: usize,
+    len: usize,
+    a: &'a mut [f64],
+    a_inv: &'a mut [f64],
+    b: &'a mut [f64],
+    scratch: &'a mut [f64],
+    chol: &'a mut [f64],
+    rhs: &'a mut [f64],
+    col: &'a mut [f64],
+    ops: &'a mut [usize],
+}
+
+impl<'a> StoreSliceMut<'a> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slot `j` *within this window* (0-based).
+    pub fn slot_mut(&mut self, j: usize) -> RidgeSlotMut<'_> {
+        assert!(j < self.len, "slot {j} out of window (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        let m = j * dd;
+        let v = j * d;
+        RidgeSlotMut {
+            d,
+            a: &mut self.a[m..m + dd],
+            a_inv: &mut self.a_inv[m..m + dd],
+            b: &mut self.b[v..v + d],
+            scratch: &mut self.scratch[v..v + d],
+            chol: &mut self.chol[m..m + dd],
+            rhs: &mut self.rhs[v..v + d],
+            col: &mut self.col[v..v + d],
+            ops: &mut self.ops[j],
+        }
+    }
+}
+
+/// Structure-of-arrays policy store: one slot of ridge state per session,
+/// slot index == local session index inside the owning engine.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyStore {
+    d: usize,
+    len: usize,
+    a: Vec<f64>,
+    a_inv: Vec<f64>,
+    b: Vec<f64>,
+    scratch: Vec<f64>,
+    chol: Vec<f64>,
+    rhs: Vec<f64>,
+    col: Vec<f64>,
+    ops: Vec<usize>,
+}
+
+impl PolicyStore {
+    pub fn new(d: usize) -> PolicyStore {
+        PolicyStore { d, len: 0, ..Default::default() }
+    }
+
+    pub fn with_capacity(d: usize, slots: usize) -> PolicyStore {
+        let mut s = PolicyStore::new(d);
+        s.a.reserve(slots * d * d);
+        s.a_inv.reserve(slots * d * d);
+        s.b.reserve(slots * d);
+        s.scratch.reserve(slots * d);
+        s.chol.reserve(slots * d * d);
+        s.rhs.reserve(slots * d);
+        s.col.reserve(slots * d);
+        s.ops.reserve(slots);
+        s
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append a zero-filled slot (the owner adopts real state into it, or
+    /// never touches it — non-learning policies leave their slot unused).
+    pub fn push_slot(&mut self) {
+        self.insert_slot(self.len);
+    }
+
+    /// Insert a zero-filled slot at position `pos`, shifting later slots
+    /// up.  O(store) — only called at round boundaries (admission /
+    /// migration), never on the per-frame path.
+    pub fn insert_slot(&mut self, pos: usize) {
+        assert!(pos <= self.len, "insert position {pos} out of bounds (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        let zero_m = std::iter::repeat(0.0).take(dd);
+        let zero_v = std::iter::repeat(0.0).take(d);
+        self.a.splice(pos * dd..pos * dd, zero_m.clone());
+        self.a_inv.splice(pos * dd..pos * dd, zero_m.clone());
+        self.chol.splice(pos * dd..pos * dd, zero_m);
+        self.b.splice(pos * d..pos * d, zero_v.clone());
+        self.scratch.splice(pos * d..pos * d, zero_v.clone());
+        self.rhs.splice(pos * d..pos * d, zero_v.clone());
+        self.col.splice(pos * d..pos * d, zero_v);
+        self.ops.insert(pos, 0);
+        self.len += 1;
+    }
+
+    /// Remove the slot at `pos`, shifting later slots down (the caller
+    /// releases the state first if it matters).
+    pub fn remove_slot(&mut self, pos: usize) {
+        assert!(pos < self.len, "remove position {pos} out of bounds (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        self.a.drain(pos * dd..(pos + 1) * dd);
+        self.a_inv.drain(pos * dd..(pos + 1) * dd);
+        self.chol.drain(pos * dd..(pos + 1) * dd);
+        self.b.drain(pos * d..(pos + 1) * d);
+        self.scratch.drain(pos * d..(pos + 1) * d);
+        self.rhs.drain(pos * d..(pos + 1) * d);
+        self.col.drain(pos * d..(pos + 1) * d);
+        self.ops.remove(pos);
+        self.len -= 1;
+    }
+
+    /// Read-only view of slot `i` (allocation-free).
+    pub fn slot(&self, i: usize) -> RidgeSlot<'_> {
+        assert!(i < self.len, "slot {i} out of bounds (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        RidgeSlot {
+            d,
+            a: &self.a[i * dd..(i + 1) * dd],
+            a_inv: &self.a_inv[i * dd..(i + 1) * dd],
+            b: &self.b[i * d..(i + 1) * d],
+            ops: self.ops[i],
+        }
+    }
+
+    /// Read-write view of slot `i` (allocation-free — the workers=1 hot
+    /// path takes this per session per phase).
+    pub fn slot_mut(&mut self, i: usize) -> RidgeSlotMut<'_> {
+        assert!(i < self.len, "slot {i} out of bounds (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        let m = i * dd;
+        let v = i * d;
+        RidgeSlotMut {
+            d,
+            a: &mut self.a[m..m + dd],
+            a_inv: &mut self.a_inv[m..m + dd],
+            b: &mut self.b[v..v + d],
+            scratch: &mut self.scratch[v..v + d],
+            chol: &mut self.chol[m..m + dd],
+            rhs: &mut self.rhs[v..v + d],
+            col: &mut self.col[v..v + d],
+            ops: &mut self.ops[i],
+        }
+    }
+
+    /// Split the store into disjoint windows of `per` slots (last window
+    /// may be short) — one per worker shard, mirroring
+    /// `sessions.chunks_mut(per)` so shard k's sessions and shard k's
+    /// slots line up index for index.
+    pub fn shard_slices(&mut self, per: usize) -> Vec<StoreSliceMut<'_>> {
+        assert!(per > 0, "shard size must be positive");
+        let d = self.d;
+        let dd = d * d;
+        let mut out = Vec::with_capacity(self.len.div_ceil(per));
+        let mut a: &mut [f64] = &mut self.a;
+        let mut a_inv: &mut [f64] = &mut self.a_inv;
+        let mut b: &mut [f64] = &mut self.b;
+        let mut scratch: &mut [f64] = &mut self.scratch;
+        let mut chol: &mut [f64] = &mut self.chol;
+        let mut rhs: &mut [f64] = &mut self.rhs;
+        let mut col: &mut [f64] = &mut self.col;
+        let mut ops: &mut [usize] = &mut self.ops;
+        let mut remaining = self.len;
+        while remaining > 0 {
+            let take = per.min(remaining);
+            let (a0, a1) = std::mem::take(&mut a).split_at_mut(take * dd);
+            let (ai0, ai1) = std::mem::take(&mut a_inv).split_at_mut(take * dd);
+            let (b0, b1) = std::mem::take(&mut b).split_at_mut(take * d);
+            let (s0, s1) = std::mem::take(&mut scratch).split_at_mut(take * d);
+            let (ch0, ch1) = std::mem::take(&mut chol).split_at_mut(take * dd);
+            let (r0, r1) = std::mem::take(&mut rhs).split_at_mut(take * d);
+            let (c0, c1) = std::mem::take(&mut col).split_at_mut(take * d);
+            let (o0, o1) = std::mem::take(&mut ops).split_at_mut(take);
+            a = a1;
+            a_inv = ai1;
+            b = b1;
+            scratch = s1;
+            chol = ch1;
+            rhs = r1;
+            col = c1;
+            ops = o1;
+            out.push(StoreSliceMut {
+                d,
+                len: take,
+                a: a0,
+                a_inv: ai0,
+                b: b0,
+                scratch: s0,
+                chol: ch0,
+                rhs: r0,
+                col: c0,
+                ops: o0,
+            });
+            remaining -= take;
+        }
+        out
+    }
+
+    // -- Batched SoA entry points over the whole store (bench / tests) --
+
+    /// `out[i] = bᵢᵀAᵢ⁻¹ xsᵢ` for every slot.
+    pub fn predict_batch(&self, xs: &[f64], out: &mut [f64]) {
+        linalg::predict_batch(self.d, &self.a_inv, &self.b, xs, out);
+    }
+
+    /// `out[i] = xsᵢᵀAᵢ⁻¹ xsᵢ` (clamped at 0) for every slot.
+    pub fn confidence_batch(&self, xs: &[f64], out: &mut [f64]) {
+        linalg::confidence_batch(self.d, &self.a_inv, xs, out);
+    }
+
+    /// Slot i absorbs (xsᵢ, ysᵢ) via batched Sherman–Morrison.
+    pub fn update_batch(&mut self, xs: &[f64], ys: &[f64]) {
+        linalg::update_batch(
+            self.d,
+            &mut self.a,
+            &mut self.a_inv,
+            &mut self.b,
+            &mut self.scratch,
+            &mut self.chol,
+            &mut self.rhs,
+            &mut self.col,
+            &mut self.ops,
+            xs,
+            ys,
+        );
+    }
+
+    /// Slot i sheds (xsᵢ, ysᵢ) via the negative-sign Sherman–Morrison.
+    pub fn downdate_batch(&mut self, xs: &[f64], ys: &[f64]) {
+        linalg::downdate_batch(
+            self.d,
+            &mut self.a,
+            &mut self.a_inv,
+            &mut self.b,
+            &mut self.scratch,
+            &mut self.chol,
+            &mut self.rhs,
+            &mut self.col,
+            &mut self.ops,
+            xs,
+            ys,
+        );
+    }
+
+    /// Every slot recomputes A⁻¹ exactly from A (batched Cholesky).
+    pub fn refresh_batch(&mut self) {
+        linalg::refresh_batch(
+            self.d,
+            &self.a,
+            &mut self.a_inv,
+            &mut self.chol,
+            &mut self.rhs,
+            &mut self.col,
+            &mut self.ops,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_x(rng: &mut Rng, d: usize) -> Vec<f64> {
+        (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn adopt_release_round_trip_preserves_all_bits() {
+        let d = 9;
+        let mut rng = Rng::new(5);
+        let mut owned = RidgeState::new(d, 0.01);
+        for _ in 0..80 {
+            let x = random_x(&mut rng, d);
+            owned.update(&x, rng.uniform(0.0, 400.0));
+        }
+        let mut store = PolicyStore::new(d);
+        store.push_slot();
+        store.slot_mut(0).load_from(&owned);
+        let released = store.slot(0).to_ridge_state();
+        assert_eq!(released.a.data, owned.a.data);
+        assert_eq!(released.a_inv.data, owned.a_inv.data);
+        assert_eq!(released.b, owned.b);
+        assert_eq!(released.ops_since_refresh(), owned.ops_since_refresh());
+    }
+
+    #[test]
+    fn slot_ops_match_owned_ridge_bits() {
+        let d = 9;
+        let mut rng = Rng::new(11);
+        let mut owned = RidgeState::new(d, 0.5);
+        let mut store = PolicyStore::new(d);
+        store.push_slot();
+        store.slot_mut(0).reset(0.5);
+        // Interleave updates and window downdates with periodic refreshes
+        // crossing the 64-op boundary several times.
+        let mut history: Vec<(Vec<f64>, f64)> = Vec::new();
+        for step in 0..300 {
+            let x = random_x(&mut rng, d);
+            let y = rng.uniform(0.0, 100.0);
+            owned.update(&x, y);
+            store.slot_mut(0).update(&x, y);
+            history.push((x, y));
+            if step % 3 == 2 {
+                let (x0, y0) = history.remove(0);
+                owned.downdate(&x0, y0);
+                store.slot_mut(0).downdate(&x0, y0);
+            }
+            let probe = random_x(&mut rng, d);
+            assert_eq!(store.slot(0).predict(&probe), owned.predict(&probe), "t={step}");
+            assert_eq!(
+                store.slot(0).confidence_sq(&probe),
+                owned.confidence_sq(&probe),
+                "t={step}"
+            );
+        }
+        let slot = store.slot(0);
+        assert_eq!(slot.a_data(), &owned.a.data[..]);
+        assert_eq!(slot.b_data(), &owned.b[..]);
+    }
+
+    #[test]
+    fn insert_and_remove_shift_slots_losslessly() {
+        let d = 3;
+        let mut store = PolicyStore::new(d);
+        let mut states = Vec::new();
+        let mut rng = Rng::new(17);
+        for i in 0..4 {
+            store.push_slot();
+            let mut st = RidgeState::new(d, 1.0 + i as f64);
+            for _ in 0..10 {
+                let x = random_x(&mut rng, d);
+                st.update(&x, rng.uniform(0.0, 10.0));
+            }
+            store.slot_mut(i).load_from(&st);
+            states.push(st);
+        }
+        // Insert a blank slot in the middle: later slots shift up intact.
+        store.insert_slot(2);
+        assert_eq!(store.len(), 5);
+        assert_eq!(store.slot(1).a_data(), &states[1].a.data[..]);
+        assert_eq!(store.slot(3).a_data(), &states[2].a.data[..]);
+        assert_eq!(store.slot(4).a_data(), &states[3].a.data[..]);
+        // Remove it again: original layout restored.
+        store.remove_slot(2);
+        for (i, st) in states.iter().enumerate() {
+            assert_eq!(store.slot(i).a_data(), &st.a.data[..], "slot {i}");
+            assert_eq!(store.slot(i).b_data(), &st.b[..], "slot {i}");
+        }
+    }
+
+    #[test]
+    fn shard_windows_tile_the_store_in_order() {
+        let d = 2;
+        let mut store = PolicyStore::new(d);
+        for i in 0..7 {
+            store.push_slot();
+            let mut slot = store.slot_mut(i);
+            slot.reset(1.0 + i as f64); // distinguishable diagonal
+        }
+        let mut seen = Vec::new();
+        for mut w in store.shard_slices(3) {
+            for j in 0..w.len() {
+                let slot = w.slot_mut(j);
+                seen.push(slot.read().a_data()[0]);
+            }
+        }
+        assert_eq!(seen, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn store_batches_match_per_slot_calls() {
+        let d = 9;
+        let n = 5;
+        let mut rng = Rng::new(23);
+        let mut store = PolicyStore::new(d);
+        let mut mirror = PolicyStore::new(d);
+        for i in 0..n {
+            store.push_slot();
+            mirror.push_slot();
+            store.slot_mut(i).reset(0.25);
+            mirror.slot_mut(i).reset(0.25);
+        }
+        for _ in 0..80 {
+            let xs: Vec<f64> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let ys: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 50.0)).collect();
+            store.update_batch(&xs, &ys);
+            for i in 0..n {
+                mirror.slot_mut(i).update(&xs[i * d..(i + 1) * d], ys[i]);
+            }
+        }
+        let mut out_a = vec![0.0; n];
+        let probe: Vec<f64> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        store.predict_batch(&probe, &mut out_a);
+        for i in 0..n {
+            assert_eq!(out_a[i], mirror.slot(i).predict(&probe[i * d..(i + 1) * d]));
+            assert_eq!(store.slot(i).a_data(), mirror.slot(i).a_data());
+            assert_eq!(store.slot(i).b_data(), mirror.slot(i).b_data());
+        }
+    }
+}

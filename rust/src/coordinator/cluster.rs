@@ -43,7 +43,7 @@
 
 use super::engine::{engine_config_from, Engine, EngineConfig, FrameSource, Session};
 use super::metrics::{FleetSummary, Metrics, ReplicaSummary, Summary};
-use crate::bandit::Policy;
+use crate::bandit::{Policy, PolicySnapshot};
 use crate::config::Config;
 use crate::simulator::{ComputeProfile, Environment, Workload};
 use crate::util::rng::Rng;
@@ -342,6 +342,19 @@ impl Cluster {
             self.replicas.iter().flat_map(|r| r.engine.sessions().iter()).collect();
         all.sort_by_key(|s| s.id);
         all
+    }
+
+    /// Diagnostics snapshot of the session with the given global id,
+    /// read through its home replica's SoA policy store (resident
+    /// learner state lives there, not in the [`Session`] struct).
+    pub fn policy_snapshot(&self, id: usize) -> PolicySnapshot {
+        assert!(id < self.assignment.len(), "no session {id}");
+        self.replicas[self.assignment[id]].engine.policy_snapshot_by_id(id)
+    }
+
+    /// One diagnostics snapshot per session, in global id order.
+    pub fn policy_snapshots(&self) -> Vec<PolicySnapshot> {
+        (0..self.assignment.len()).map(|id| self.policy_snapshot(id)).collect()
     }
 
     /// Serve one frame for every session on every replica (one cluster

@@ -58,7 +58,7 @@
 use super::metrics::{FleetSummary, FrameRecord, Metrics, Summary};
 use super::pool::{shard_len, WorkerPool};
 use crate::bandit::policy::argmin;
-use crate::bandit::{FrameContext, Policy, PolicySnapshot, Privileged};
+use crate::bandit::{FrameContext, Policy, PolicySnapshot, PolicyStore, Privileged, RidgeSlotMut};
 use crate::config::Config;
 use crate::edge::{
     EdgeEstimate, EdgeJob, EdgeScheduler, EventQueue, Outcome, QueueSignal, QueueStats, Scheduled,
@@ -167,7 +167,12 @@ impl Session {
         }
     }
 
-    /// Cheap per-session diagnostics (fleet tables).
+    /// Cheap per-session diagnostics (fleet tables).  Only valid while
+    /// the session is **detached** (self-contained policy state, e.g.
+    /// mid-migration or after [`Engine::into_sessions`]); a resident
+    /// session's ridge state lives in the engine's SoA store, so resident
+    /// snapshots go through [`Engine::policy_snapshot`] instead
+    /// (store-backed learners panic here by design).
     pub fn snapshot(&self) -> PolicySnapshot {
         self.policy.snapshot()
     }
@@ -181,10 +186,13 @@ impl Session {
 /// One decision through a policy without a simulator environment — the
 /// select step shared by the simulated rounds and the real PJRT pipeline.
 /// `queue_wait_ms` is the per-arm forecast wait (empty = queue signal
-/// off, the legacy context).
+/// off, the legacy context).  `slot` is the session's SoA store slot when
+/// the caller is the fleet engine (DESIGN.md §11); `None` drives the
+/// policy's owned state (single-stream experiment, real pipeline).
 #[allow(clippy::too_many_arguments)]
 pub fn decide(
     policy: &mut dyn Policy,
+    mut slot: Option<&mut RidgeSlotMut<'_>>,
     t: usize,
     is_key: bool,
     weight: f64,
@@ -202,7 +210,7 @@ pub fn decide(
         queue_wait_ms,
         privileged: Privileged { rate_mbps, expected_totals },
     };
-    let p = policy.select(&ctx);
+    let p = policy.select_in(&ctx, slot.as_mut().map(|s| &mut **s));
     let p_max = front.len() - 1;
     assert!(p <= p_max, "policy {} chose invalid arm {p}", policy.name());
     // Record the prediction BEFORE feedback (honest Fig 9 curve).  The
@@ -212,7 +220,9 @@ pub fn decide(
     let predicted_edge_ms = if p == p_max {
         None
     } else {
-        policy.predict_edge_delay(&contexts[p]).map(|d| d + ctx.queue_wait(p))
+        policy
+            .predict_edge_delay_in(&contexts[p], slot.as_ref().map(|s| s.read()))
+            .map(|d| d + ctx.queue_wait(p))
     };
     Decision { p, is_key, weight, predicted_edge_ms }
 }
@@ -275,6 +285,7 @@ impl RoundInfo {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn select_one(
     policy: &mut dyn Policy,
+    slot: Option<&mut RidgeSlotMut<'_>>,
     env: &mut Environment,
     source: &mut FrameSource,
     front: &[f64],
@@ -296,6 +307,7 @@ pub(crate) fn select_one(
         }
         return decide(
             policy,
+            slot,
             t,
             is_key,
             weight,
@@ -341,6 +353,7 @@ pub(crate) fn select_one(
     }
     decide(
         policy,
+        slot,
         t,
         is_key,
         weight,
@@ -392,6 +405,7 @@ pub(crate) enum EdgeLeg {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn realize_one(
     policy: &mut dyn Policy,
+    slot: Option<&mut RidgeSlotMut<'_>>,
     env: &mut Environment,
     metrics: &mut Metrics,
     front: &[f64],
@@ -435,7 +449,7 @@ pub(crate) fn realize_one(
         } else {
             (realized_edge - queue_wait_ms).max(0.0)
         };
-        policy.observe(p, &contexts[p], feedback);
+        policy.observe_in(p, &contexts[p], feedback, slot);
     }
     let oracle_p = argmin(expected);
     let (event_expected_ms, event_oracle_p, event_oracle_ms) = if round.event {
@@ -575,8 +589,10 @@ struct StepScratch {
 }
 
 /// Select step for one session (advance env/source, ask the policy).
+/// `slot` is the session's slot in the engine's SoA policy store.
 fn session_select(
     s: &mut Session,
+    slot: Option<&mut RidgeSlotMut<'_>>,
     t: usize,
     k_estimate: usize,
     contention: &Contention,
@@ -586,6 +602,7 @@ fn session_select(
     let Session { policy, env, source, front, contexts, expected, waits, .. } = s;
     select_one(
         policy.as_mut(),
+        slot,
         env,
         source,
         front,
@@ -603,6 +620,7 @@ fn session_select(
 /// Realize step for one session (draw the noisy delay, learn, record).
 fn session_realize(
     s: &mut Session,
+    slot: Option<&mut RidgeSlotMut<'_>>,
     d: &Decision,
     leg: &Leg,
     t: usize,
@@ -614,6 +632,7 @@ fn session_realize(
     let Session { policy, env, metrics, front, contexts, expected, .. } = s;
     realize_one(
         policy.as_mut(),
+        slot,
         env,
         metrics,
         front,
@@ -633,11 +652,13 @@ fn session_realize(
 
 /// Run the select phase across all sessions, sharded over the worker
 /// pool when one exists.  The phase is independent per session (each
-/// owns its policy, environment RNG, and frame source), so any worker
-/// count yields bit-identical decisions.
+/// owns its policy, environment RNG, and frame source; its learner state
+/// sits at the same index in `store`), so any worker count yields
+/// bit-identical decisions.
 fn select_phase(
     pool: Option<&WorkerPool>,
     sessions: &mut [Session],
+    store: &mut PolicyStore,
     decisions: &mut [Decision],
     t: usize,
     k_estimate: usize,
@@ -645,6 +666,7 @@ fn select_phase(
     round: RoundInfo,
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
+    debug_assert_eq!(sessions.len(), store.len());
     // Explicit empty-shard no-op: a replica holding zero sessions (or a
     // pool wider than the session list) must not rely on chunk-range
     // arithmetic producing nothing to iterate.
@@ -652,23 +674,30 @@ fn select_phase(
         return;
     }
     let Some(pool) = pool else {
-        for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
-            *d = session_select(s, t, k_estimate, &contention, &round);
+        for (i, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
+            let mut slot = store.slot_mut(i);
+            *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
         }
         return;
     };
     let per = shard_len(sessions.len(), pool.workers());
+    // The store tiles into per-shard strided windows exactly congruent
+    // with the session chunks: worker w's sessions and its ridge slots
+    // are disjoint borrows of the same arenas, no locks on the arrays
+    // themselves (DESIGN.md §11).
     let shards: Vec<_> = sessions
         .chunks_mut(per)
         .zip(decisions.chunks_mut(per))
-        .map(Mutex::new)
+        .zip(store.shard_slices(per))
+        .map(|((s, d), st)| Mutex::new((s, d, st)))
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let mut guard = shard.lock().expect("select shard lock");
-            let (sessions, decisions) = &mut *guard;
-            for (s, d) in sessions.iter_mut().zip(decisions.iter_mut()) {
-                *d = session_select(s, t, k_estimate, &contention, &round);
+            let (sessions, decisions, store) = &mut *guard;
+            for (j, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
+                let mut slot = store.slot_mut(j);
+                *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
             }
         }
     });
@@ -682,6 +711,7 @@ fn select_phase(
 fn observe_phase(
     pool: Option<&WorkerPool>,
     sessions: &mut [Session],
+    store: &mut PolicyStore,
     decisions: &[Decision],
     legs: &[Leg],
     t: usize,
@@ -691,12 +721,14 @@ fn observe_phase(
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), legs.len());
+    debug_assert_eq!(sessions.len(), store.len());
     if sessions.is_empty() {
         return;
     }
     let Some(pool) = pool else {
-        for ((s, d), leg) in sessions.iter_mut().zip(decisions).zip(legs) {
-            session_realize(s, d, leg, t, k, &contention, &round);
+        for (i, ((s, d), leg)) in sessions.iter_mut().zip(decisions).zip(legs).enumerate() {
+            let mut slot = store.slot_mut(i);
+            session_realize(s, Some(&mut slot), d, leg, t, k, &contention, &round);
         }
         return;
     };
@@ -704,14 +736,18 @@ fn observe_phase(
     let shards: Vec<_> = sessions
         .chunks_mut(per)
         .zip(decisions.chunks(per).zip(legs.chunks(per)))
-        .map(|(s, (d, l))| Mutex::new((s, d, l)))
+        .zip(store.shard_slices(per))
+        .map(|((s, (d, l)), st)| Mutex::new((s, d, l, st)))
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let mut guard = shard.lock().expect("observe shard lock");
-            let (sessions, decisions, legs) = &mut *guard;
-            for ((s, d), leg) in sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()) {
-                session_realize(s, d, leg, t, k, &contention, &round);
+            let (sessions, decisions, legs, store) = &mut *guard;
+            for (j, ((s, d), leg)) in
+                sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()).enumerate()
+            {
+                let mut slot = store.slot_mut(j);
+                session_realize(s, Some(&mut slot), d, leg, t, k, &contention, &round);
             }
         }
     });
@@ -721,6 +757,14 @@ fn observe_phase(
 pub struct Engine {
     pub cfg: EngineConfig,
     sessions: Vec<Session>,
+    /// Structure-of-arrays learner state, one slot per resident session
+    /// at the same index (DESIGN.md §11): all ridge A matrices
+    /// contiguous, all A⁻¹ contiguous, all b vectors contiguous.  On
+    /// attach every policy moves its ridge state into its slot
+    /// ([`Policy::adopt_slot`]); on detach ([`Engine::remove_session`])
+    /// it takes the state back, so a migrating [`Session`] struct stays
+    /// self-contained and cluster moves remain lossless.
+    store: PolicyStore,
     ingress: Option<SharedIngress>,
     /// The event-driven edge server — `None` when the scheduler config
     /// degenerates to the PR 1 lockstep rounds.
@@ -769,6 +813,7 @@ impl Engine {
         Engine {
             cfg,
             sessions: Vec::new(),
+            store: PolicyStore::new(crate::models::CONTEXT_DIM),
             ingress,
             scheduler,
             pool,
@@ -788,7 +833,11 @@ impl Engine {
         source: FrameSource,
     ) -> usize {
         let id = self.sessions.len();
-        self.sessions.push(Session::new(id, policy, env, source));
+        let mut session = Session::new(id, policy, env, source);
+        self.store.push_slot();
+        let mut slot = self.store.slot_mut(id);
+        session.policy.adopt_slot(&mut slot);
+        self.sessions.push(session);
         id
     }
 
@@ -796,7 +845,7 @@ impl Engine {
     /// keeping the session list sorted by global id — the canonical
     /// cross-session merge order (arrival time, session id) then matches
     /// the push order at every worker count.
-    pub fn push_session(&mut self, session: Session) {
+    pub fn push_session(&mut self, mut session: Session) {
         debug_assert!(
             self.sessions.iter().all(|s| s.id != session.id),
             "duplicate session id {}",
@@ -807,6 +856,12 @@ impl Engine {
             .iter()
             .position(|s| s.id > session.id)
             .unwrap_or(self.sessions.len());
+        // Open the store slot at the same index, then move the incoming
+        // policy's owned ridge state into it (exact bits, including the
+        // Sherman–Morrison refresh phase).
+        self.store.insert_slot(pos);
+        let mut slot = self.store.slot_mut(pos);
+        session.policy.adopt_slot(&mut slot);
         self.sessions.insert(pos, session);
     }
 
@@ -822,7 +877,12 @@ impl Engine {
             .iter()
             .position(|s| s.id == id)
             .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
-        self.sessions.remove(idx)
+        let mut session = self.sessions.remove(idx);
+        // Hand the ridge state back before closing the slot: the departing
+        // session is self-contained again (same bits, same refresh phase).
+        session.policy.release_slot(self.store.slot(idx));
+        self.store.remove_slot(idx);
+        session
     }
 
     /// The deterministic pre-round queue forecast ([`EdgeEstimate`]) —
@@ -847,8 +907,33 @@ impl Engine {
         &mut self.sessions
     }
 
-    pub fn into_sessions(self) -> Vec<Session> {
+    pub fn into_sessions(mut self) -> Vec<Session> {
+        for (i, s) in self.sessions.iter_mut().enumerate() {
+            s.policy.release_slot(self.store.slot(i));
+        }
         self.sessions
+    }
+
+    /// Diagnostics snapshot of the session at local index `idx`, read
+    /// through its store slot (works for store-backed and owned policies
+    /// alike — the slot is simply ignored by the latter).
+    pub fn policy_snapshot(&self, idx: usize) -> PolicySnapshot {
+        self.sessions[idx].policy.snapshot_in(Some(self.store.slot(idx)))
+    }
+
+    /// [`Engine::policy_snapshot`] addressed by *global* session id
+    /// (sessions are kept sorted by id, so this is an exact lookup).
+    pub fn policy_snapshot_by_id(&self, id: usize) -> PolicySnapshot {
+        let idx = self
+            .sessions
+            .binary_search_by_key(&id, |s| s.id)
+            .unwrap_or_else(|_| panic!("no session with id {id} in this engine"));
+        self.policy_snapshot(idx)
+    }
+
+    /// One diagnostics snapshot per resident session, in id order.
+    pub fn policy_snapshots(&self) -> Vec<PolicySnapshot> {
+        (0..self.sessions.len()).map(|i| self.policy_snapshot(i)).collect()
     }
 
     /// Rounds completed so far.
@@ -913,6 +998,7 @@ impl Engine {
         select_phase(
             self.pool.as_ref(),
             &mut self.sessions,
+            &mut self.store,
             &mut scratch.decisions,
             t,
             k_estimate,
@@ -989,6 +1075,7 @@ impl Engine {
         observe_phase(
             self.pool.as_ref(),
             &mut self.sessions,
+            &mut self.store,
             &scratch.decisions,
             &scratch.legs,
             t,
@@ -1013,7 +1100,7 @@ impl Engine {
     fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch, round: RoundInfo) {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
-        let Engine { sessions, ingress, scheduler, pool, .. } = self;
+        let Engine { sessions, store, ingress, scheduler, pool, .. } = self;
         let scheduler = scheduler.as_mut().expect("event path has a scheduler");
         let deadline = scheduler.cfg.deadline_ms;
 
@@ -1129,6 +1216,7 @@ impl Engine {
         observe_phase(
             pool.as_ref(),
             sessions,
+            store,
             &scratch.decisions,
             &scratch.legs,
             t,

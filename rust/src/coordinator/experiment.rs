@@ -39,6 +39,7 @@ pub fn run(
     for t in 0..frames {
         let decision = engine::select_one(
             policy,
+            None,
             env,
             source,
             &front,
@@ -53,6 +54,7 @@ pub fn run(
         );
         engine::realize_one(
             policy,
+            None,
             env,
             &mut metrics,
             &front,

@@ -183,6 +183,7 @@ pub fn serve(cfg: &PipelineConfig, policy: &mut dyn Policy) -> Result<ServingRep
         // (no privileged totals exist on the real path).
         let decision = engine::decide(
             policy,
+            None,
             t,
             is_key_any,
             weight,

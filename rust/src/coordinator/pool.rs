@@ -14,6 +14,13 @@
 //! shard work into disjoint, contiguous ranges indexed by worker id, so
 //! the result is a pure function of the inputs and identical at every
 //! worker count — the property `rust/tests/fleet.rs` pins bit-for-bit.
+//!
+//! Since the SoA policy-store refactor the engine's shard ranges tile
+//! *two* parallel structures with the same `chunks_mut(per)` geometry:
+//! the session vector and the store's per-field ridge arenas
+//! ([`PolicyStore::shard_slices`](crate::bandit::PolicyStore)).  Slot
+//! index == session index inside a shard, so each worker walks a
+//! contiguous window of both with no cross-shard aliasing.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

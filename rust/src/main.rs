@@ -8,6 +8,7 @@
 //!   models     print the model zoo with partition structure
 //!   help       this text
 
+use ans::bandit::PolicySnapshot;
 use ans::config::Config;
 use ans::coordinator::{cluster, engine, exhibits, experiment, pipeline, FleetSummary};
 use ans::util::cli::Args;
@@ -207,7 +208,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cl.run(cfg.frames);
         let fs = cl.fleet_summary();
         let sessions = cl.sessions();
-        print_session_table(&sessions, &fs);
+        print_session_table(&sessions, &cl.policy_snapshots(), &fs);
         print_replica_table(&fs, cl.migrations());
         print_fleet_footer(&fs, &cfg, sched.deadline_ms);
         write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
@@ -218,7 +219,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     eng.run(cfg.frames);
     let fs = eng.fleet_summary();
     let sessions: Vec<&engine::Session> = eng.sessions().iter().collect();
-    print_session_table(&sessions, &fs);
+    print_session_table(&sessions, &eng.policy_snapshots(), &fs);
     print_fleet_footer(&fs, &cfg, sched.deadline_ms);
     if let Some(stats) = eng.scheduler_stats() {
         let horizon_ms = cfg.frames as f64 * 1e3 / cfg.fps;
@@ -234,13 +235,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn print_session_table(sessions: &[&engine::Session], fs: &FleetSummary) {
+fn print_session_table(
+    sessions: &[&engine::Session],
+    snaps: &[PolicySnapshot],
+    fs: &FleetSummary,
+) {
     println!(
         "\n  {:<4} {:>10} {:>11} {:>10} {:>11} {:>8} {:>16} {:>6} {:>7}",
         "sess", "rate Mbps", "mean ms", "p95 ms", "regret ms", "oracle%", "modal partition", "obs", "resets"
     );
-    for (s, sum) in sessions.iter().zip(&fs.per_session) {
-        let snap = s.snapshot();
+    for ((s, snap), sum) in sessions.iter().zip(snaps).zip(&fs.per_session) {
         let modal = sum.modal_partition();
         println!(
             "  s{:<3} {:>10.1} {:>11.1} {:>10.1} {:>11.1} {:>8.1} {:>16} {:>6} {:>7}",

@@ -97,9 +97,11 @@ fn migration_between_identical_replicas_is_lossless() {
             assert_eq!(ra.event_oracle_ms, rb.event_oracle_ms, "s{} t={}", a.id, ra.t);
         }
         // Learner state: the μLinUCB snapshot (A, b, θ̂, reset counter)
-        // is bit-identical to the never-migrated twin.
-        let sa = a.snapshot();
-        let sb = b.snapshot();
+        // is bit-identical to the never-migrated twin.  Resident ridge
+        // state lives in the replica engines' SoA policy stores, so the
+        // snapshots are read through the cluster.
+        let sa = stay.policy_snapshot(a.id);
+        let sb = moved.policy_snapshot(b.id);
         assert_eq!(sa.observations, sb.observations, "s{}", a.id);
         assert_eq!(sa.resets, sb.resets, "s{}", a.id);
         assert_eq!(sa.theta, sb.theta, "s{} θ̂ must survive migration", a.id);

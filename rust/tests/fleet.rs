@@ -154,7 +154,7 @@ fn single_session_engine_matches_wrapper_run() {
 // ---------------------------------------------------------------------------
 #[allow(clippy::too_many_arguments)]
 fn legacy_fleet_run(
-    mut policies: Vec<Box<dyn Policy>>,
+    policies: &mut [Box<dyn Policy>],
     mut envs: Vec<Environment>,
     mut sources: Vec<FrameSource>,
     contention: Contention,
@@ -285,10 +285,10 @@ fn default_scheduler_reproduces_the_legacy_lockstep_fleet_bit_identically() {
         (policies, envs, sources)
     };
 
-    let (policies, envs, sources) = build_parts();
+    let (mut policies, envs, sources) = build_parts();
     let contention = Contention::new(1, 0.5);
     let legacy = legacy_fleet_run(
-        policies,
+        &mut policies,
         envs,
         sources,
         contention,
@@ -348,10 +348,12 @@ fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
         (policies, envs, sources)
     };
 
-    // The pinned transcript: the verbatim PR 1/PR 2 lockstep loop.
-    let (policies, envs, sources) = build_parts();
+    // The pinned transcript: the verbatim PR 1/PR 2 lockstep loop.  The
+    // driven policies are kept alive: their final owned ridge state is
+    // the reference the engine's SoA policy store is pinned against.
+    let (mut legacy_policies, envs, sources) = build_parts();
     let legacy = legacy_fleet_run(
-        policies,
+        &mut legacy_policies,
         envs,
         sources,
         contention,
@@ -413,6 +415,18 @@ fn sharded_lockstep_fleet_is_bit_identical_across_worker_counts() {
                 assert_eq!(l.deadline_miss, w.deadline_miss, "workers={workers} s{i} t={}", l.t);
             }
         }
+        // Learner-state pin: after an identical run the engine's SoA
+        // policy store must hold exactly the bits the legacy owned
+        // policies ended with — A, b, θ̂, observation and reset counters.
+        for (i, legacy_pol) in legacy_policies.iter().enumerate() {
+            let l = legacy_pol.snapshot();
+            let s = eng.policy_snapshot(i);
+            assert_eq!(l.observations, s.observations, "workers={workers} s{i}");
+            assert_eq!(l.resets, s.resets, "workers={workers} s{i}");
+            assert_eq!(l.theta, s.theta, "workers={workers} s{i} θ̂ must match bit-for-bit");
+            assert_eq!(l.ridge_a, s.ridge_a, "workers={workers} s{i} ridge A must match");
+            assert_eq!(l.ridge_b, s.ridge_b, "workers={workers} s{i} ridge b must match");
+        }
     }
 }
 
@@ -438,9 +452,9 @@ fn single_replica_static_cluster_is_pinned_to_the_legacy_transcript() {
         (policies, envs, sources)
     };
 
-    let (policies, envs, sources) = build_parts();
+    let (mut policies, envs, sources) = build_parts();
     let legacy = legacy_fleet_run(
-        policies,
+        &mut policies,
         envs,
         sources,
         contention,
@@ -646,8 +660,10 @@ fn fleet_reporting_and_determinism() {
     assert!(fs.aggregate.total_regret_ms.is_finite());
     assert_eq!(a.offload_counts().len(), 200);
 
-    for s in a.sessions() {
-        let snap = s.snapshot();
+    // Resident learner state lives in the engine's SoA policy store, so
+    // snapshots are read through the engine.
+    for (i, s) in a.sessions().iter().enumerate() {
+        let snap = a.policy_snapshot(i);
         assert!(snap.observations > 0, "session {} never got feedback", s.id);
         assert!(snap.theta.is_some(), "μLinUCB keeps a model");
         assert_eq!(s.metrics.records.len(), 200);

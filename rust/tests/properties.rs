@@ -4,6 +4,7 @@
 
 use ans::bandit::forced::ForcedSchedule;
 use ans::bandit::linalg::RidgeState;
+use ans::bandit::PolicyStore;
 use ans::models::{features, zoo, FeatureScale, Layer, Network, Shape, Stage};
 use ans::simulator::network::TokenBucket;
 use ans::simulator::{Environment, Uplink, Workload, DEVICE_MAXN, EDGE_GPU};
@@ -232,6 +233,95 @@ fn downdating_everything_restores_the_identity_prior() {
     }
     for (i, v) in st.theta().iter().enumerate() {
         assert!(v.abs() < 1e-7, "theta[{i}] = {v} after full downdate");
+    }
+}
+
+#[test]
+fn batched_store_ops_are_bit_identical_to_scalar_ridge_states() {
+    // The SoA perf refactor's correctness contract: predict_batch /
+    // update_batch / downdate_batch / refresh_batch over the packed
+    // per-field arenas must produce the EXACT bits the scalar RidgeState
+    // path does — both routes run the same slice kernels in the same
+    // per-slot op order, so the comparison is `assert_eq!` on f64 bits,
+    // not a tolerance.  16 sessions × 1000 randomized interleaved ops
+    // crosses the 64-op Cholesky refresh boundary ~15× per slot, and the
+    // explicit refresh arm exercises refresh_batch off-cadence too.
+    const N: usize = 16;
+    const D: usize = 7;
+    let beta = 1.0;
+    let mut rng = Rng::new(0x50A_57095);
+    let mut scalars: Vec<RidgeState> = (0..N).map(|_| RidgeState::new(D, beta)).collect();
+    let mut store = PolicyStore::with_capacity(D, N);
+    for st in &scalars {
+        store.push_slot();
+        store.slot_mut(store.len() - 1).load_from(st);
+    }
+
+    // Rounds still absorbed in the window — the downdate arm sheds these.
+    let mut history: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    let mut xs = vec![0.0; N * D];
+    let mut ys = vec![0.0; N];
+    let mut got = vec![0.0; N];
+    for round in 0..1000 {
+        let roll = rng.uniform(0.0, 1.0);
+        if roll < 0.22 && !history.is_empty() {
+            // Window turnover: shed one previously absorbed round.
+            let k = (rng.uniform(0.0, history.len() as f64) as usize).min(history.len() - 1);
+            let (hx, hy) = history.swap_remove(k);
+            for (i, st) in scalars.iter_mut().enumerate() {
+                st.downdate(&hx[i * D..(i + 1) * D], hy[i]);
+            }
+            store.downdate_batch(&hx, &hy);
+        } else if roll < 0.27 {
+            // Off-cadence exact refresh on every slot at once.
+            for st in &mut scalars {
+                st.refresh_inverse();
+            }
+            store.refresh_batch();
+        } else {
+            for i in 0..N {
+                for k in 0..D {
+                    xs[i * D + k] = rng.uniform(-2.0, 2.0);
+                }
+                ys[i] = rng.uniform(0.0, 100.0);
+            }
+            for (i, st) in scalars.iter_mut().enumerate() {
+                st.update(&xs[i * D..(i + 1) * D], ys[i]);
+            }
+            store.update_batch(&xs, &ys);
+            history.push((xs.clone(), ys.clone()));
+        }
+
+        // Dense probe: batched predictions plus every slot's full state,
+        // bit-for-bit against the scalar twin.
+        if round % 37 == 0 || round == 999 {
+            for v in xs.iter_mut() {
+                *v = rng.uniform(-2.0, 2.0);
+            }
+            store.predict_batch(&xs, &mut got);
+            for (i, st) in scalars.iter().enumerate() {
+                let x = &xs[i * D..(i + 1) * D];
+                assert_eq!(got[i], st.predict(x), "predict slot {i} round {round}");
+                let slot = store.slot(i);
+                assert_eq!(
+                    slot.confidence_sq(x),
+                    st.confidence_sq(x),
+                    "confidence slot {i} round {round}"
+                );
+                assert_eq!(slot.a_data(), &st.a.data[..], "A slot {i} round {round}");
+                assert_eq!(slot.b_data(), &st.b[..], "b slot {i} round {round}");
+                let unpacked = slot.to_ridge_state();
+                assert_eq!(
+                    unpacked.a_inv.data, st.a_inv.data,
+                    "A⁻¹ slot {i} round {round}"
+                );
+                assert_eq!(
+                    unpacked.ops_since_refresh(),
+                    st.ops_since_refresh(),
+                    "refresh counter slot {i} round {round}"
+                );
+            }
+        }
     }
 }
 
