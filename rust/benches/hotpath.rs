@@ -202,6 +202,43 @@ fn main() {
     );
     assert_eq!(delta, 0, "queue-aware select/realize must not allocate");
 
+    // The same queue-aware round with event tracing ENABLED: every
+    // submit/admit/batch/drain/refresh event lands in a preallocated
+    // ring (overwriting the oldest once full), so the steady-state round
+    // must stay exactly zero-alloc with telemetry on — the ISSUE 7
+    // acceptance bar.
+    let mut teng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.25),
+        scheduler: SchedulerConfig {
+            batch_window_ms: 4.0,
+            max_batch: 8,
+            ..SchedulerConfig::event(AdmissionPolicy::Fifo)
+        },
+        queue_signal: QueueSignal::Full,
+        trace_capacity: 4096,
+        ..Default::default()
+    });
+    let taudit_rounds = 256;
+    for i in 0..16 {
+        let env = ans::simulator::Environment::simple(zoo::vgg16(), 10.0 + i as f64, 60 + i as u64);
+        let pol = LinUcb::paper_default(1_000_000);
+        teng.add_session(Box::new(pol), env, FrameSource::uniform());
+    }
+    teng.reserve(64 + taudit_rounds);
+    teng.run(64); // warm-up: rings were preallocated at construction
+    let before = allocations();
+    teng.run(taudit_rounds);
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} rounds x 16 sessions",
+        "alloc/engine_traced_steady_state", delta, taudit_rounds
+    );
+    assert_eq!(delta, 0, "traced engine rounds must not allocate");
+    assert!(
+        !teng.drain_trace().is_empty(),
+        "the traced audit must actually have recorded events"
+    );
+
     // And the SoA policy store's batched cross-session round directly:
     // arm-major predict + confidence over the packed arenas, one batched
     // Sherman–Morrison update and downdate (which also exercises the

@@ -447,6 +447,10 @@ impl Policy for LinUcb {
         }
     }
 
+    fn reset_count(&self) -> usize {
+        self.core.resets
+    }
+
     fn snapshot(&self) -> PolicySnapshot {
         match &self.backing {
             Backing::Owned(r) => self.core.snapshot(Some(r.a.data.clone()), Some(r.b.clone())),

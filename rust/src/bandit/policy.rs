@@ -97,6 +97,13 @@ pub trait Policy: Send {
         None
     }
 
+    /// Drift resets triggered so far (LinUCB family; 0 for everything
+    /// else).  O(1) — the telemetry layer polls it around every observe
+    /// to emit `policy_reset` trace events without a full snapshot.
+    fn reset_count(&self) -> usize {
+        0
+    }
+
     /// O(d) diagnostics snapshot for per-session fleet reporting.  The
     /// default covers stateless policies; learners override it.
     fn snapshot(&self) -> PolicySnapshot {

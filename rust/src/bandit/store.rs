@@ -88,6 +88,13 @@ impl<'a> RidgeSlot<'a> {
         self.d
     }
 
+    /// Sherman–Morrison ops folded since the last Cholesky refresh (the
+    /// every-64-ops counter).  The telemetry layer detects a refresh by
+    /// watching this wrap back to a smaller value across an observe.
+    pub fn ops_since_refresh(&self) -> usize {
+        self.ops
+    }
+
     pub fn a_data(&self) -> &[f64] {
         self.a
     }

@@ -91,6 +91,17 @@ pub struct Config {
     pub placement: String,
     /// Rounds between rebalances under `--placement migrate`.
     pub migrate_every: usize,
+    /// Structured-trace output path (JSONL; empty = tracing off).
+    /// Tracing never perturbs the served results — the bit-identity pins
+    /// hold with it on or off.
+    pub trace: String,
+    /// Per-ring trace-event capacity (each worker ring plus the main
+    /// ring holds this many events; the oldest are overwritten and
+    /// counted once full).
+    pub trace_capacity: usize,
+    /// Emit a fleet-merged window summary every N rounds as JSONL
+    /// (`ans fleet` only; 0 = off).
+    pub metrics_every: usize,
 }
 
 impl Default for Config {
@@ -130,6 +141,9 @@ impl Default for Config {
             replicas: 1,
             placement: "static".into(),
             migrate_every: 50,
+            trace: String::new(),
+            trace_capacity: 65536,
+            metrics_every: 0,
         }
     }
 }
@@ -188,6 +202,9 @@ impl Config {
                 "replicas" => self.replicas = val.as_usize()?,
                 "placement" => self.placement = val.as_str()?.to_string(),
                 "migrate_every" => self.migrate_every = val.as_usize()?,
+                "trace" => self.trace = val.as_str()?.to_string(),
+                "trace_capacity" => self.trace_capacity = val.as_usize()?,
+                "metrics_every" => self.metrics_every = val.as_usize()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -250,6 +267,11 @@ impl Config {
             self.placement = v.to_string();
         }
         self.migrate_every = args.usize_or("migrate-every", self.migrate_every)?;
+        if let Some(v) = args.get("trace") {
+            self.trace = v.to_string();
+        }
+        self.trace_capacity = args.usize_or("trace-capacity", self.trace_capacity)?;
+        self.metrics_every = args.usize_or("metrics-every", self.metrics_every)?;
         Ok(())
     }
 
@@ -362,6 +384,7 @@ impl Config {
             crate::coordinator::cluster::PLACEMENT_NAMES.join(", ")
         );
         anyhow::ensure!(self.migrate_every >= 1, "migrate-every must be ≥ 1 round");
+        anyhow::ensure!(self.trace_capacity >= 1, "trace-capacity must be ≥ 1 event");
         Ok(())
     }
 
@@ -684,6 +707,23 @@ mod tests {
         let err = Config::from_args(&args("fleet --event-clock --signal-stagger 8")).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("queue-signal"), "{msg}");
+    }
+
+    #[test]
+    fn telemetry_knobs_parse_and_validate() {
+        // Defaults: tracing and periodic metrics off.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert!(cfg.trace.is_empty());
+        assert_eq!(cfg.trace_capacity, 65536);
+        assert_eq!(cfg.metrics_every, 0);
+        let cfg = Config::from_args(&args(
+            "fleet --trace /tmp/t.jsonl --trace-capacity 1024 --metrics-every 50",
+        ))
+        .unwrap();
+        assert_eq!(cfg.trace, "/tmp/t.jsonl");
+        assert_eq!(cfg.trace_capacity, 1024);
+        assert_eq!(cfg.metrics_every, 50);
+        assert!(Config::from_args(&args("fleet --trace-capacity 0")).is_err());
     }
 
     #[test]

@@ -46,6 +46,7 @@ use super::metrics::{FleetSummary, Metrics, ReplicaSummary, Summary};
 use crate::bandit::{Policy, PolicySnapshot};
 use crate::config::Config;
 use crate::simulator::{ComputeProfile, Environment, Workload};
+use crate::telemetry::PhaseClock;
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 use crate::video::Weights;
@@ -244,12 +245,12 @@ impl Cluster {
         let replicas: Vec<Replica> = specs
             .into_iter()
             .enumerate()
-            .map(|(id, spec)| Replica {
-                id,
-                spec,
-                engine: Engine::new(cfg.engine.clone()),
-                migrations_in: 0,
-                migrations_out: 0,
+            .map(|(id, spec)| {
+                let mut engine = Engine::new(cfg.engine.clone());
+                // Stamp trace events with the replica id so the merged
+                // cluster trace attributes every event to its edge.
+                engine.set_trace_replica(id);
+                Replica { id, spec, engine, migrations_in: 0, migrations_out: 0 }
             })
             .collect();
         let base_load = vec![0.0; replicas.len()];
@@ -407,6 +408,9 @@ impl Cluster {
         self.base_load[to] += in_cost;
         attach(&mut session, &self.replicas[to].spec);
         self.replicas[to].engine.push_session(session);
+        // The destination logs the move (push_session already traced the
+        // attach; the migrate event carries the from→to hop on top).
+        self.replicas[to].engine.trace_migrate(id, from, to);
         self.replicas[from].migrations_out += 1;
         self.replicas[to].migrations_in += 1;
         self.assignment[id] = to;
@@ -503,6 +507,12 @@ impl Cluster {
         } else {
             f64::NAN
         };
+        // Phase timing merges in replica-id order (the canonical merge
+        // every telemetry aggregate uses).
+        let mut phases = PhaseClock::new(self.cfg.engine.workers.max(1));
+        for r in &self.replicas {
+            phases.merge(r.engine.phase_clock());
+        }
         FleetSummary {
             per_session,
             aggregate,
@@ -515,6 +525,46 @@ impl Cluster {
             serve_ms,
             frames_per_sec,
             replicas: self.replicas.iter().map(|r| r.summary()).collect(),
+            phases,
+        }
+    }
+
+    /// Drain every replica's trace buffer into one canonically ordered
+    /// event stream: (round, kind, session, replica) — replica-merged
+    /// traces are deterministic for any worker count and replica pinning
+    /// (modulo the wall-clock field, like the per-engine trace).
+    pub fn drain_trace(&mut self) -> Vec<crate::telemetry::TraceEvent> {
+        let mut all = Vec::new();
+        for r in &mut self.replicas {
+            all.extend(r.engine.drain_trace());
+        }
+        all.sort_by(crate::telemetry::trace::canonical_order);
+        all
+    }
+
+    /// Total trace events dropped to ring overflow across replicas.
+    pub fn trace_dropped(&self) -> u64 {
+        self.replicas.iter().map(|r| r.engine.trace_dropped()).sum()
+    }
+
+    /// Fleet-merged summary over rounds `[from, to)` only — the
+    /// `--metrics-every` periodic snapshot stream.  `None` when nothing
+    /// was served in the window.
+    pub fn window_summary(&self, from: usize, to: usize) -> Option<Summary> {
+        let sessions = self.sessions();
+        let p_max = sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        let mut window = Metrics::new();
+        for s in sessions {
+            for r in &s.metrics.records {
+                if r.t >= from && r.t < to {
+                    window.records.push(r.clone());
+                }
+            }
+        }
+        if window.records.is_empty() {
+            None
+        } else {
+            Some(window.summary(p_max))
         }
     }
 }

@@ -67,6 +67,7 @@ use crate::edge::{
 use crate::models::features::{QUEUE_LOAD_FEATURE, QUEUE_MERGE_FEATURE};
 use crate::models::{features, FeatureScale, FeatureVector};
 use crate::simulator::{Contention, Environment, SharedIngress};
+use crate::telemetry::{EventKind, Phase, PhaseClock, TraceEvent, TraceRing, Tracer};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 use crate::video::{Frame, KeyframeDetector, VideoStream, Weights};
@@ -547,6 +548,15 @@ pub struct EngineConfig {
     /// forecast wait.  0 (the default) is pinned bit-identical to the
     /// unstaggered transcripts; > 0 requires an active queue signal.
     pub signal_stagger_ms: f64,
+    /// Structured event-trace ring capacity per shard (DESIGN.md §12).
+    /// 0 (the default) disables tracing entirely — the engine holds no
+    /// tracer and every emission site is one `Option` branch.  > 0
+    /// preallocates rings of this many [`TraceEvent`]s for the main
+    /// thread and each pool worker; once full, the oldest events are
+    /// overwritten (and counted) rather than allocating.  Tracing never
+    /// perturbs the simulation: the round transcripts are bit-identical
+    /// with tracing on and off (pinned in `rust/tests/fleet.rs`).
+    pub trace_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -559,6 +569,7 @@ impl Default for EngineConfig {
             workers: 1,
             queue_signal: QueueSignal::Off,
             signal_stagger_ms: 0.0,
+            trace_capacity: 0,
         }
     }
 }
@@ -618,21 +629,31 @@ fn session_select(
 }
 
 /// Realize step for one session (draw the noisy delay, learn, record).
+/// When tracing (`ring` is `Some`), the learner's refresh counter and
+/// reset counter are read before and after the observe so the rare
+/// `policy_refresh` / `policy_reset` transitions become trace events —
+/// two O(1) reads per frame, nothing fed back into the simulation.
+#[allow(clippy::too_many_arguments)]
 fn session_realize(
     s: &mut Session,
-    slot: Option<&mut RidgeSlotMut<'_>>,
+    mut slot: Option<&mut RidgeSlotMut<'_>>,
     d: &Decision,
     leg: &Leg,
     t: usize,
     k: usize,
     contention: &Contention,
     round: &RoundInfo,
+    ring: Option<&mut TraceRing>,
 ) {
     let id = s.id;
+    let watch = ring.is_some();
+    let ops_before =
+        if watch { slot.as_ref().map_or(0, |sl| sl.read().ops_since_refresh()) } else { 0 };
+    let resets_before = if watch { s.policy.reset_count() } else { 0 };
     let Session { policy, env, metrics, front, contexts, expected, .. } = s;
     realize_one(
         policy.as_mut(),
-        slot,
+        slot.as_mut().map(|sl| &mut **sl),
         env,
         metrics,
         front,
@@ -648,6 +669,33 @@ fn session_realize(
         round,
         id,
     );
+    if let Some(ring) = ring {
+        let clock = round.capture_ms(t, id);
+        let ops_after = slot.as_ref().map_or(0, |sl| sl.read().ops_since_refresh());
+        let resets_after = policy.reset_count();
+        if ops_after < ops_before && resets_after == resets_before {
+            // The counter only moves backwards on a Cholesky refresh (or
+            // a drift reset, reported as its own event below).
+            ring.push(TraceEvent::new(
+                EventKind::PolicyRefresh,
+                t,
+                Some(id),
+                clock,
+                ops_before as f64,
+                0.0,
+            ));
+        }
+        if resets_after > resets_before {
+            ring.push(TraceEvent::new(
+                EventKind::PolicyReset,
+                t,
+                Some(id),
+                clock,
+                resets_after as f64,
+                0.0,
+            ));
+        }
+    }
 }
 
 /// Run the select phase across all sessions, sharded over the worker
@@ -655,6 +703,7 @@ fn session_realize(
 /// owns its policy, environment RNG, and frame source; its learner state
 /// sits at the same index in `store`), so any worker count yields
 /// bit-identical decisions.
+#[allow(clippy::too_many_arguments)]
 fn select_phase(
     pool: Option<&WorkerPool>,
     sessions: &mut [Session],
@@ -664,6 +713,7 @@ fn select_phase(
     k_estimate: usize,
     contention: Contention,
     round: RoundInfo,
+    timing: &mut [f64],
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), store.len());
@@ -674,31 +724,37 @@ fn select_phase(
         return;
     }
     let Some(pool) = pool else {
+        let start = Instant::now();
         for (i, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
             let mut slot = store.slot_mut(i);
             *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
         }
+        timing[0] += start.elapsed().as_secs_f64() * 1e3;
         return;
     };
     let per = shard_len(sessions.len(), pool.workers());
     // The store tiles into per-shard strided windows exactly congruent
     // with the session chunks: worker w's sessions and its ridge slots
     // are disjoint borrows of the same arenas, no locks on the arrays
-    // themselves (DESIGN.md §11).
+    // themselves (DESIGN.md §11).  Each shard carries its worker's phase
+    // timing slot; short pools leave trailing slots untouched.
     let shards: Vec<_> = sessions
         .chunks_mut(per)
         .zip(decisions.chunks_mut(per))
         .zip(store.shard_slices(per))
-        .map(|((s, d), st)| Mutex::new((s, d, st)))
+        .zip(timing.iter_mut())
+        .map(|(((s, d), st), tm)| Mutex::new((s, d, st, tm)))
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
+            let start = Instant::now();
             let mut guard = shard.lock().expect("select shard lock");
-            let (sessions, decisions, store) = &mut *guard;
+            let (sessions, decisions, store, tm) = &mut *guard;
             for (j, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
                 let mut slot = store.slot_mut(j);
                 *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
             }
+            **tm += start.elapsed().as_secs_f64() * 1e3;
         }
     });
 }
@@ -718,6 +774,8 @@ fn observe_phase(
     k: usize,
     contention: Contention,
     round: RoundInfo,
+    timing: &mut [f64],
+    rings: Option<&mut [TraceRing]>,
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), legs.len());
@@ -726,29 +784,64 @@ fn observe_phase(
         return;
     }
     let Some(pool) = pool else {
+        let start = Instant::now();
+        let mut ring0 = rings.and_then(|r| r.first_mut());
         for (i, ((s, d), leg)) in sessions.iter_mut().zip(decisions).zip(legs).enumerate() {
             let mut slot = store.slot_mut(i);
-            session_realize(s, Some(&mut slot), d, leg, t, k, &contention, &round);
+            session_realize(
+                s,
+                Some(&mut slot),
+                d,
+                leg,
+                t,
+                k,
+                &contention,
+                &round,
+                ring0.as_deref_mut(),
+            );
         }
+        timing[0] += start.elapsed().as_secs_f64() * 1e3;
         return;
+    };
+    // One trace ring per worker (all `None` when tracing is off).  This
+    // per-phase Vec rides the existing pooled-mode O(W) shard-handle
+    // allocation (see StepScratch docs) — the workers=1 inline path
+    // above, which the zero-alloc audits pin, never builds it.
+    let ring_opts: Vec<Option<&mut TraceRing>> = match rings {
+        Some(rs) => rs.iter_mut().map(Some).collect(),
+        None => (0..pool.workers()).map(|_| None).collect(),
     };
     let per = shard_len(sessions.len(), pool.workers());
     let shards: Vec<_> = sessions
         .chunks_mut(per)
         .zip(decisions.chunks(per).zip(legs.chunks(per)))
         .zip(store.shard_slices(per))
-        .map(|((s, (d, l)), st)| Mutex::new((s, d, l, st)))
+        .zip(ring_opts)
+        .zip(timing.iter_mut())
+        .map(|((((s, (d, l)), st), ring), tm)| Mutex::new((s, d, l, st, ring, tm)))
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
+            let start = Instant::now();
             let mut guard = shard.lock().expect("observe shard lock");
-            let (sessions, decisions, legs, store) = &mut *guard;
+            let (sessions, decisions, legs, store, ring, tm) = &mut *guard;
             for (j, ((s, d), leg)) in
                 sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()).enumerate()
             {
                 let mut slot = store.slot_mut(j);
-                session_realize(s, Some(&mut slot), d, leg, t, k, &contention, &round);
+                session_realize(
+                    s,
+                    Some(&mut slot),
+                    d,
+                    leg,
+                    t,
+                    k,
+                    &contention,
+                    &round,
+                    ring.as_deref_mut(),
+                );
             }
+            **tm += start.elapsed().as_secs_f64() * 1e3;
         }
     });
 }
@@ -784,6 +877,14 @@ pub struct Engine {
     /// Wall-clock time spent inside [`Engine::run`] (throughput
     /// reporting; never feeds back into any simulated quantity).
     serve_wall_ms: f64,
+    /// Structured event tracer (`None` = tracing off; DESIGN.md §12).
+    /// Rings are preallocated per shard so steady-state emission is a
+    /// bounded store, never an allocation.
+    tracer: Option<Tracer>,
+    /// Wall-clock accounting per select/submit/realize/observe phase per
+    /// worker.  Always on: recording is one `Instant` delta per phase,
+    /// and wall readings never feed back into any simulated quantity.
+    phases: PhaseClock,
 }
 
 impl Engine {
@@ -810,6 +911,12 @@ impl Engine {
             "--signal-stagger perturbs the published queue signal and \
              requires --queue-signal wait|full"
         );
+        let workers = cfg.workers.max(1);
+        let tracer = if cfg.trace_capacity > 0 {
+            Some(Tracer::new(workers, cfg.trace_capacity))
+        } else {
+            None
+        };
         Engine {
             cfg,
             sessions: Vec::new(),
@@ -822,6 +929,8 @@ impl Engine {
             offloaders_last: 0,
             offload_counts: Vec::new(),
             serve_wall_ms: 0.0,
+            tracer,
+            phases: PhaseClock::new(workers),
         }
     }
 
@@ -838,6 +947,7 @@ impl Engine {
         let mut slot = self.store.slot_mut(id);
         session.policy.adopt_slot(&mut slot);
         self.sessions.push(session);
+        self.trace_membership(EventKind::SessionAttach, id);
         id
     }
 
@@ -862,7 +972,9 @@ impl Engine {
         self.store.insert_slot(pos);
         let mut slot = self.store.slot_mut(pos);
         session.policy.adopt_slot(&mut slot);
+        let id = session.id;
         self.sessions.insert(pos, session);
+        self.trace_membership(EventKind::SessionAttach, id);
     }
 
     /// Detach the session with the given global id (cluster migration).
@@ -882,7 +994,68 @@ impl Engine {
         // session is self-contained again (same bits, same refresh phase).
         session.policy.release_slot(self.store.slot(idx));
         self.store.remove_slot(idx);
+        self.trace_membership(EventKind::SessionEvict, id);
         session
+    }
+
+    /// Emit a membership trace event (attach/evict), stamped at the
+    /// current round boundary on the virtual clock with the resident
+    /// count after the change.
+    fn trace_membership(&mut self, kind: EventKind, id: usize) {
+        if let Some(tr) = self.tracer.as_mut() {
+            let clock = self.round as f64 * self.cfg.frame_interval_ms;
+            let n = self.sessions.len() as f64;
+            tr.main().push(TraceEvent::new(kind, self.round, Some(id), clock, n, 0.0));
+        }
+    }
+
+    /// Record a cluster migration in this (destination) engine's trace:
+    /// `a` = source replica, `b` = destination replica.  The cluster
+    /// router calls this right after [`Engine::push_session`].
+    pub fn trace_migrate(&mut self, id: usize, from: usize, to: usize) {
+        if let Some(tr) = self.tracer.as_mut() {
+            let clock = self.round as f64 * self.cfg.frame_interval_ms;
+            tr.main().push(TraceEvent::new(
+                EventKind::SessionMigrate,
+                self.round,
+                Some(id),
+                clock,
+                from as f64,
+                to as f64,
+            ));
+        }
+    }
+
+    /// Is structured tracing active on this engine?
+    pub fn trace_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Stamp every event this engine traces with a replica id (cluster
+    /// replicas; standalone engines leave events unstamped).
+    pub fn set_trace_replica(&mut self, replica: usize) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.set_replica(replica);
+        }
+    }
+
+    /// Drain the trace rings into the canonical event sequence (sorted
+    /// by round, kind, session — see [`Tracer::drain`]).  Empty when
+    /// tracing is off.  Report-time only: draining allocates.
+    pub fn drain_trace(&mut self) -> Vec<TraceEvent> {
+        self.tracer.as_mut().map_or_else(Vec::new, Tracer::drain)
+    }
+
+    /// Events overwritten because a trace ring was full (0 = the trace
+    /// is complete).
+    pub fn trace_dropped(&self) -> u64 {
+        self.tracer.as_ref().map_or(0, Tracer::dropped)
+    }
+
+    /// Accumulated wall-clock per select/submit/realize/observe phase
+    /// per worker (always on).
+    pub fn phase_clock(&self) -> &PhaseClock {
+        &self.phases
     }
 
     /// The deterministic pre-round queue forecast ([`EdgeEstimate`]) —
@@ -974,9 +1147,11 @@ impl Engine {
     /// queue state stay put, k_t = 0 is logged, and the round counter
     /// advances so replicas stay aligned.
     pub fn step(&mut self) {
+        let step_start = Instant::now();
         if self.sessions.is_empty() {
             self.offloaders_last = 0;
             self.offload_counts.push(0);
+            self.push_round_barrier(self.round, 0, step_start);
             self.round += 1;
             return;
         }
@@ -985,6 +1160,20 @@ impl Engine {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
         let round = self.round_info();
+        if round.event {
+            // Trace the frozen pre-round forecast every policy selects
+            // under (clock = when the executor frees up).
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.main().push(TraceEvent::new(
+                    EventKind::ForecastFrozen,
+                    t,
+                    None,
+                    round.estimate.free_at_ms,
+                    round.estimate.backlog as f64,
+                    round.estimate.merge_probability,
+                ));
+            }
+        }
         let mut scratch = std::mem::take(&mut self.scratch);
 
         // Phase 1 (sharded): every session picks a partition under last
@@ -1004,6 +1193,7 @@ impl Engine {
             k_estimate,
             contention,
             round,
+            self.phases.row_mut(Phase::Select),
         );
 
         // Phase 2: the actual concurrency this round determines the edge
@@ -1024,7 +1214,21 @@ impl Engine {
 
         self.offloaders_last = k;
         self.offload_counts.push(k);
+        self.push_round_barrier(t, k, step_start);
         self.round += 1;
+    }
+
+    /// Trace the end-of-round barrier: `a` = k_t, `wall_ms` = wall time
+    /// the round took (the only nondeterministic trace field — the
+    /// worker-count pins compare events through
+    /// [`TraceEvent::sans_wall`]).
+    fn push_round_barrier(&mut self, t: usize, k: usize, step_start: Instant) {
+        if let Some(tr) = self.tracer.as_mut() {
+            let clock = (t + 1) as f64 * self.cfg.frame_interval_ms;
+            let mut ev = TraceEvent::new(EventKind::RoundBarrier, t, None, clock, k as f64, 0.0);
+            ev.wall_ms = step_start.elapsed().as_secs_f64() * 1e3;
+            tr.main().push(ev);
+        }
     }
 
     /// PR 1's lockstep realize phase, byte for byte: factor(k_t) on every
@@ -1044,6 +1248,32 @@ impl Engine {
         let n = self.sessions.len();
         scratch.legs.clear();
         scratch.legs.resize(n, (0.0, 1, EdgeLeg::Lockstep));
+
+        // Trace every offload submission (tracer-gated: recomputing
+        // bytes/tx here keeps the hot loop below untouched when off).
+        if let Some(tr) = self.tracer.as_mut() {
+            let ring = tr.main();
+            for (s, d) in self.sessions.iter().zip(scratch.decisions.iter()) {
+                if d.p == s.env.num_partitions() {
+                    continue;
+                }
+                let bytes = s.env.psi_bytes(d.p);
+                let tx = crate::simulator::tx_delay_ms(
+                    bytes,
+                    s.env.current_rate_mbps(),
+                    s.env.rtt_ms,
+                );
+                ring.push(TraceEvent::new(
+                    EventKind::FrameSubmitted,
+                    t,
+                    Some(s.id),
+                    now_ms + s.front[d.p] + tx,
+                    d.p as f64,
+                    bytes as f64,
+                ));
+            }
+        }
+        let realize_start = Instant::now();
 
         // Shared-ingress pass, in *physical arrival order* (FIFO at the
         // edge NIC, independent of session index): each ψ_p arrives once
@@ -1071,6 +1301,7 @@ impl Engine {
                 scratch.legs[i].0 = ingress.consume(bytes, arrival_ms);
             }
         }
+        self.phases.add(Phase::Realize, 0, realize_start.elapsed().as_secs_f64() * 1e3);
 
         observe_phase(
             self.pool.as_ref(),
@@ -1082,6 +1313,8 @@ impl Engine {
             k,
             contention,
             round,
+            self.phases.row_mut(Phase::Observe),
+            self.tracer.as_mut().map(|tr| tr.worker_rings()),
         );
     }
 
@@ -1100,9 +1333,14 @@ impl Engine {
     fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch, round: RoundInfo) {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
-        let Engine { sessions, store, ingress, scheduler, pool, .. } = self;
+        let Engine { sessions, store, ingress, scheduler, pool, tracer, phases, .. } = self;
         let scheduler = scheduler.as_mut().expect("event path has a scheduler");
         let deadline = scheduler.cfg.deadline_ms;
+        // Main-thread event ring for the shared-state resolution below
+        // (everything here runs in canonical merge order regardless of
+        // the worker count, so the trace is worker-count invariant).
+        let mut ring = tracer.as_mut().map(|tr| tr.main());
+        let submit_start = Instant::now();
 
         scratch.tx_ms.clear();
         scratch.tx_ms.resize(n, 0.0);
@@ -1128,6 +1366,16 @@ impl Engine {
             // replica, where ids are cluster-wide).
             let capture = round.capture_ms(t, s.id);
             scratch.tx_ms[i] = tx;
+            if let Some(r) = ring.as_deref_mut() {
+                r.push(TraceEvent::new(
+                    EventKind::FrameSubmitted,
+                    t,
+                    Some(s.id),
+                    capture + s.front[d.p] + tx,
+                    d.p as f64,
+                    bytes as f64,
+                ));
+            }
             queue.push(capture + s.front[d.p] + tx, (i, bytes));
         }
 
@@ -1137,6 +1385,16 @@ impl Engine {
             if !scheduler.has_room() {
                 scheduler.note_rejected();
                 scratch.rejected[i] = true;
+                if let Some(r) = ring.as_deref_mut() {
+                    r.push(TraceEvent::new(
+                        EventKind::FrameRejected,
+                        t,
+                        Some(sessions[i].id),
+                        nic_ms,
+                        scratch.decisions[i].p as f64,
+                        0.0,
+                    ));
+                }
                 continue;
             }
             let ing = match ingress.as_mut() {
@@ -1145,6 +1403,16 @@ impl Engine {
             };
             scratch.ingress_wait[i] = ing;
             let d = &scratch.decisions[i];
+            if let Some(r) = ring.as_deref_mut() {
+                r.push(TraceEvent::new(
+                    EventKind::FrameAdmitted,
+                    t,
+                    Some(sessions[i].id),
+                    nic_ms + ing,
+                    d.p as f64,
+                    ing,
+                ));
+            }
             let capture = round.capture_ms(t, sessions[i].id);
             // Jobs carry the GLOBAL session id so the queue's cross-round
             // per-session state (WeightedFair credit) is never
@@ -1174,6 +1442,9 @@ impl Engine {
             debug_assert!(submitted, "has_room was checked");
         }
 
+        phases.add(Phase::Submit, 0, submit_start.elapsed().as_secs_f64() * 1e3);
+        let realize_start = Instant::now();
+
         scheduler.drain_scheduled_into(&mut scratch.scheduled);
         for sch in &scratch.scheduled {
             // Map the job's global session id back to its local slot
@@ -1187,6 +1458,28 @@ impl Engine {
                 service_ms: sch.service_ms,
                 batch_size: sch.batch_size,
             });
+            if let Some(r) = ring.as_deref_mut() {
+                r.push(TraceEvent::new(
+                    EventKind::FrameBatched,
+                    t,
+                    Some(sch.session),
+                    sch.start_ms,
+                    sch.batch_size as f64,
+                    sch.queue_wait_ms,
+                ));
+            }
+        }
+        if !scratch.scheduled.is_empty() {
+            if let Some(r) = ring.as_deref_mut() {
+                r.push(TraceEvent::new(
+                    EventKind::QueueDrain,
+                    t,
+                    None,
+                    scheduler.free_at_ms(),
+                    scratch.scheduled.len() as f64,
+                    scheduler.pending() as f64,
+                ));
+            }
         }
 
         // Per-session leg resolution (cheap, read-only), then the
@@ -1199,6 +1492,16 @@ impl Engine {
                 (0.0, 1, EdgeLeg::Lockstep)
             } else if scratch.rejected[i] {
                 let mean = scratch.tx_ms[i] + s.env.device_fallback_ms(p);
+                if let Some(r) = ring.as_deref_mut() {
+                    r.push(TraceEvent::new(
+                        EventKind::DeviceFallback,
+                        t,
+                        Some(s.id),
+                        round.capture_ms(t, s.id),
+                        p as f64,
+                        mean,
+                    ));
+                }
                 (0.0, 0, EdgeLeg::Event { mean_ms: mean, rejected: true })
             } else {
                 match scratch.outcomes[i] {
@@ -1212,6 +1515,8 @@ impl Engine {
             };
             scratch.legs.push(leg);
         }
+        drop(ring);
+        phases.add(Phase::Realize, 0, realize_start.elapsed().as_secs_f64() * 1e3);
 
         observe_phase(
             pool.as_ref(),
@@ -1223,6 +1528,8 @@ impl Engine {
             k,
             contention,
             round,
+            phases.row_mut(Phase::Observe),
+            tracer.as_mut().map(|tr| tr.worker_rings()),
         );
     }
 
@@ -1288,6 +1595,27 @@ impl Engine {
             serve_ms,
             frames_per_sec,
             replicas: Vec::new(),
+            phases: self.phases.clone(),
+        }
+    }
+
+    /// Fleet-merged summary over rounds `[from, to)` only — the
+    /// `--metrics-every` periodic snapshot stream.  `None` when no
+    /// session recorded a frame in the window (e.g. an idle engine).
+    pub fn window_summary(&self, from: usize, to: usize) -> Option<Summary> {
+        let mut window = Metrics::new();
+        let p_max = self.sessions.iter().map(|s| s.env.num_partitions()).max().unwrap_or(0);
+        for s in &self.sessions {
+            for r in &s.metrics.records {
+                if r.t >= from && r.t < to {
+                    window.records.push(r.clone());
+                }
+            }
+        }
+        if window.records.is_empty() {
+            None
+        } else {
+            Some(window.summary(p_max))
         }
     }
 }
@@ -1308,6 +1636,7 @@ pub(crate) fn engine_config_from(cfg: &Config) -> EngineConfig {
         workers: cfg.workers,
         queue_signal: cfg.queue_signal_mode(),
         signal_stagger_ms: cfg.signal_stagger_ms,
+        trace_capacity: if cfg.trace.is_empty() { 0 } else { cfg.trace_capacity },
     }
 }
 

@@ -1,5 +1,6 @@
 //! Per-frame records and experiment summaries.
 
+use crate::telemetry::{Histogram, PhaseClock};
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Streaming};
 
@@ -86,6 +87,20 @@ pub struct Summary {
     pub mean_batch_size: f64,
     /// Offloads the edge scheduler rejected back to on-device execution.
     pub rejected_offloads: usize,
+    /// Log-bucketed distribution of end-to-end delay (every frame).
+    pub delay_hist: Histogram,
+    /// Log-bucketed distribution of shared-edge queue wait (every frame;
+    /// on-device frames contribute their 0).
+    pub queue_wait_hist: Histogram,
+    /// Log-bucketed distribution of edge batch sizes (only frames that
+    /// actually executed at the edge).
+    pub batch_hist: Histogram,
+    /// Log-bucketed distribution of per-frame event-clock regret
+    /// (`event_expected − event_oracle`; never negative by construction).
+    pub regret_hist: Histogram,
+    /// Σ event-clock regret by chosen arm (index = partition point) —
+    /// which arms the per-frame regret accrued on.
+    pub arm_regret_ms: Vec<f64>,
 }
 
 impl Summary {
@@ -144,6 +159,11 @@ impl Metrics {
         let mut batch = Streaming::new();
         let mut rejected = 0usize;
         let mut misses = 0usize;
+        let mut delay_hist = Histogram::new();
+        let mut queue_wait_hist = Histogram::new();
+        let mut batch_hist = Histogram::new();
+        let mut regret_hist = Histogram::new();
+        let mut arm_regret = vec![0.0f64; num_partitions + 1];
         let delays: Vec<f64> = recs.iter().map(|r| r.delay_ms).collect();
         for r in recs {
             all.push(r.delay_ms);
@@ -153,7 +173,8 @@ impl Metrics {
                 non_key.push(r.delay_ms);
             }
             regret += r.expected_ms - r.oracle_ms;
-            event_regret += r.event_expected_ms - r.event_oracle_ms;
+            let frame_event_regret = r.event_expected_ms - r.event_oracle_ms;
+            event_regret += frame_event_regret;
             hist[r.p] += 1;
             if r.p == r.oracle_p {
                 oracle_hits += 1;
@@ -161,6 +182,7 @@ impl Metrics {
             queue_wait.push(r.queue_wait_ms);
             if r.batch_size > 0 {
                 batch.push(r.batch_size as f64);
+                batch_hist.record(r.batch_size as f64);
             }
             if r.rejected {
                 rejected += 1;
@@ -168,6 +190,10 @@ impl Metrics {
             if r.deadline_miss {
                 misses += 1;
             }
+            delay_hist.record(r.delay_ms);
+            queue_wait_hist.record(r.queue_wait_ms);
+            regret_hist.record(frame_event_regret);
+            arm_regret[r.p] += frame_event_regret;
         }
         Summary {
             frames: recs.len(),
@@ -184,6 +210,11 @@ impl Metrics {
             mean_queue_wait_ms: queue_wait.mean(),
             mean_batch_size: if batch.count() > 0 { batch.mean() } else { 0.0 },
             rejected_offloads: rejected,
+            delay_hist,
+            queue_wait_hist,
+            batch_hist,
+            regret_hist,
+            arm_regret_ms: arm_regret,
         }
     }
 
@@ -325,6 +356,9 @@ pub struct FleetSummary {
     /// Per-replica load/wait/regret columns when the run came from the
     /// replica cluster (empty for a standalone engine).
     pub replicas: Vec<ReplicaSummary>,
+    /// Wall-clock per-phase timing grid (select/submit/realize/observe ×
+    /// worker), merged across replicas for cluster runs.
+    pub phases: PhaseClock,
 }
 
 impl FleetSummary {
@@ -381,6 +415,7 @@ impl FleetSummary {
                 "replicas",
                 Json::Arr(self.replicas.iter().map(replica_json).collect()),
             ),
+            ("phase_ms", self.phases.to_json()),
         ])
         .to_string()
     }
@@ -451,7 +486,10 @@ fn replica_json(r: &ReplicaSummary) -> Json {
     ])
 }
 
-fn summary_json(s: &Summary) -> Json {
+/// JSON view of one [`Summary`] — the per-session entries of
+/// [`FleetSummary::to_json`] and the per-window records of the
+/// `--metrics-every` snapshot stream (`main.rs`).
+pub fn summary_json(s: &Summary) -> Json {
     obj(vec![
         ("frames", Json::from(s.frames)),
         ("mean_delay_ms", jnum(s.mean_delay_ms)),
@@ -465,6 +503,14 @@ fn summary_json(s: &Summary) -> Json {
         ("mean_batch_size", jnum(s.mean_batch_size)),
         ("rejected_offloads", Json::from(s.rejected_offloads)),
         ("modal_partition", Json::from(s.modal_partition())),
+        ("delay_hist", s.delay_hist.to_json()),
+        ("queue_wait_hist", s.queue_wait_hist.to_json()),
+        ("batch_hist", s.batch_hist.to_json()),
+        ("regret_hist", s.regret_hist.to_json()),
+        (
+            "arm_regret_ms",
+            Json::Arr(s.arm_regret_ms.iter().map(|&v| jnum(v)).collect()),
+        ),
     ])
 }
 
@@ -581,6 +627,7 @@ mod tests {
             serve_ms: 0.0,
             frames_per_sec: f64::NAN,
             replicas: Vec::new(),
+            phases: PhaseClock::new(1),
         };
         assert!((fs.delay_spread_ms() - 20.0).abs() < 1e-12);
         assert!((fs.p95_spread_ms() - 20.0).abs() < 1e-12);
@@ -664,6 +711,7 @@ mod tests {
                     migrations_out: 1,
                 },
             ],
+            phases: PhaseClock::new(4),
         };
         let json = fs.to_json();
         // The fields the EXPERIMENTS.md recipes consume.
@@ -681,6 +729,12 @@ mod tests {
             "\"event_regret_ms\"",
             "\"deadline_misses\"",
             "\"per_session\"",
+            "\"delay_hist\"",
+            "\"queue_wait_hist\"",
+            "\"batch_hist\"",
+            "\"regret_hist\"",
+            "\"arm_regret_ms\"",
+            "\"phase_ms\"",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
         }

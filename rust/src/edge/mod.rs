@@ -178,6 +178,18 @@ impl EdgeScheduler {
     pub fn stats(&self) -> &QueueStats {
         &self.queue.stats
     }
+
+    /// Jobs currently sitting in the waiting room (between rounds this
+    /// is the backlog the next forecast publishes).
+    pub fn pending(&self) -> usize {
+        self.queue.pending()
+    }
+
+    /// Virtual-clock time at which the executor frees up — the
+    /// `queue_drain` trace event's clock stamp.
+    pub fn free_at_ms(&self) -> f64 {
+        self.queue.free_at_ms()
+    }
 }
 
 #[cfg(test)]

@@ -14,7 +14,8 @@
 //!   with deterministic migration), the event-driven
 //!   edge-server scheduler with
 //!   admission control and cross-session batching ([`edge`]),
-//!   the environment/testbed simulator ([`simulator`]),
+//!   the environment/testbed simulator ([`simulator`]), the
+//!   deterministic zero-alloc observability layer ([`telemetry`]),
 //!   the model zoo with contextual features ([`models`]), SSIM key-frame
 //!   detection ([`video`]), and the PJRT runtime that executes
 //!   AOT-compiled partitions ([`runtime`]).
@@ -31,5 +32,6 @@ pub mod edge;
 pub mod models;
 pub mod runtime;
 pub mod simulator;
+pub mod telemetry;
 pub mod util;
 pub mod video;

@@ -10,8 +10,11 @@
 
 use ans::bandit::PolicySnapshot;
 use ans::config::Config;
+use ans::coordinator::metrics::{summary_json, Summary};
 use ans::coordinator::{cluster, engine, exhibits, experiment, pipeline, FleetSummary};
+use ans::telemetry::TraceEvent;
 use ans::util::cli::Args;
+use ans::util::json::{obj, Json};
 use ans::video::Weights;
 use anyhow::{Context, Result};
 
@@ -62,6 +65,14 @@ SUBCOMMANDS:
              --replicas 1 (default) is byte-for-byte the single engine;
              cluster runs add per-replica tables, --json columns and a
              per-replica CSV.
+             Telemetry: --trace FILE dumps the structured per-round
+             event trace as JSONL after the run (--trace-capacity N
+             bounds each preallocated ring; overflow overwrites the
+             oldest events and is reported).  --metrics-every N streams
+             a fleet-merged window summary (delay/wait/batch/regret
+             histograms included) every N rounds to a _metrics.jsonl
+             artifact.  Neither perturbs the served results: all
+             bit-identity pins hold with telemetry on or off.
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -205,18 +216,55 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             },
         );
         let mut cl = cluster::cluster_from_config(&cfg);
-        cl.run(cfg.frames);
+        let mut snapshots: Vec<String> = Vec::new();
+        if cfg.metrics_every > 0 {
+            let mut done = 0;
+            while done < cfg.frames {
+                let chunk = cfg.metrics_every.min(cfg.frames - done);
+                cl.run(chunk);
+                if let Some(sum) = cl.window_summary(done, done + chunk) {
+                    snapshots.push(window_json(done, done + chunk, &sum));
+                }
+                done += chunk;
+            }
+        } else {
+            cl.run(cfg.frames);
+        }
+        let trace = if cfg.trace.is_empty() {
+            None
+        } else {
+            Some((cl.drain_trace(), cl.trace_dropped()))
+        };
         let fs = cl.fleet_summary();
         let sessions = cl.sessions();
         print_session_table(&sessions, &cl.policy_snapshots(), &fs);
         print_replica_table(&fs, cl.migrations());
         print_fleet_footer(&fs, &cfg, sched.deadline_ms);
         write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
+        write_telemetry_artifacts(&cfg, trace, &snapshots)?;
         return Ok(());
     }
 
     let mut eng = engine::fleet_from_config(&cfg);
-    eng.run(cfg.frames);
+    let mut snapshots: Vec<String> = Vec::new();
+    if cfg.metrics_every > 0 {
+        let mut done = 0;
+        while done < cfg.frames {
+            let chunk = cfg.metrics_every.min(cfg.frames - done);
+            eng.run(chunk);
+            if let Some(sum) = eng.window_summary(done, done + chunk) {
+                snapshots.push(window_json(done, done + chunk, &sum));
+            }
+            done += chunk;
+        }
+    } else {
+        eng.run(cfg.frames);
+    }
+    let trace = if cfg.trace.is_empty() {
+        None
+    } else {
+        Some((eng.drain_trace(), eng.trace_dropped()))
+    };
     let fs = eng.fleet_summary();
     let sessions: Vec<&engine::Session> = eng.sessions().iter().collect();
     print_session_table(&sessions, &eng.policy_snapshots(), &fs);
@@ -232,6 +280,60 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
+    write_telemetry_artifacts(&cfg, trace, &snapshots)?;
+    Ok(())
+}
+
+/// One `--metrics-every` snapshot line: the window's round bounds plus
+/// the fleet-merged summary (histograms and arm regret included).
+fn window_json(from: usize, to: usize, sum: &Summary) -> String {
+    obj(vec![
+        ("from_round", Json::from(from)),
+        ("to_round", Json::from(to)),
+        ("summary", summary_json(sum)),
+    ])
+    .to_string()
+}
+
+/// Write the drained event trace (JSONL, one event per line) and the
+/// periodic metrics snapshots collected during the run.
+fn write_telemetry_artifacts(
+    cfg: &Config,
+    trace: Option<(Vec<TraceEvent>, u64)>,
+    snapshots: &[String],
+) -> Result<()> {
+    if let Some((events, dropped)) = trace {
+        if let Some(dir) = std::path::Path::new(&cfg.trace).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = String::with_capacity(events.len() * 96);
+        for ev in &events {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        std::fs::write(&cfg.trace, out).with_context(|| format!("writing trace {}", cfg.trace))?;
+        println!("event trace JSONL -> {} ({} events)", cfg.trace, events.len());
+        if dropped > 0 {
+            eprintln!(
+                "warning: {dropped} trace events overwritten (ring capacity {}); \
+                 raise --trace-capacity for a complete trace",
+                cfg.trace_capacity
+            );
+        }
+    }
+    if !snapshots.is_empty() {
+        std::fs::create_dir_all("bench_results")?;
+        let path = format!(
+            "bench_results/fleet_{}_s{}x{}_seed{}_metrics.jsonl",
+            cfg.model, cfg.sessions, cfg.frames, cfg.seed
+        );
+        let mut out = snapshots.join("\n");
+        out.push('\n');
+        std::fs::write(&path, out)?;
+        println!("periodic metrics JSONL -> {path} ({} windows)", snapshots.len());
+    }
     Ok(())
 }
 
@@ -241,13 +343,13 @@ fn print_session_table(
     fs: &FleetSummary,
 ) {
     println!(
-        "\n  {:<4} {:>10} {:>11} {:>10} {:>11} {:>8} {:>16} {:>6} {:>7}",
-        "sess", "rate Mbps", "mean ms", "p95 ms", "regret ms", "oracle%", "modal partition", "obs", "resets"
+        "\n  {:<4} {:>10} {:>11} {:>10} {:>11} {:>8} {:>16} {:>6} {:>7} {:>5} {:>5}",
+        "sess", "rate Mbps", "mean ms", "p95 ms", "regret ms", "oracle%", "modal partition", "obs", "resets", "rej", "miss"
     );
     for ((s, snap), sum) in sessions.iter().zip(snaps).zip(&fs.per_session) {
         let modal = sum.modal_partition();
         println!(
-            "  s{:<3} {:>10.1} {:>11.1} {:>10.1} {:>11.1} {:>8.1} {:>16} {:>6} {:>7}",
+            "  s{:<3} {:>10.1} {:>11.1} {:>10.1} {:>11.1} {:>8.1} {:>16} {:>6} {:>7} {:>5} {:>5}",
             s.id,
             s.env.current_rate_mbps(),
             sum.mean_delay_ms,
@@ -257,6 +359,8 @@ fn print_session_table(
             s.env.net.partition_label(modal),
             snap.observations,
             snap.resets,
+            sum.rejected_offloads,
+            sum.deadline_misses,
         );
     }
 }

@@ -1,0 +1,362 @@
+//! Log-bucketed histograms (HDR-style) with exact, order-canonical merge.
+//!
+//! The fleet summary used to carry only means and a p95 computed from a
+//! sorted copy of every delay — fine for one run, useless for streaming
+//! snapshots (`--metrics-every`) and impossible to merge across replicas
+//! without re-sorting the union.  [`Histogram`] replaces that with a
+//! fixed array of logarithmically spaced buckets:
+//!
+//! * **Fixed size, no allocation.**  The bucket array is `[u64; 250]`
+//!   inline in the struct; `record` is a shift-and-mask on the f64 bit
+//!   pattern plus an integer increment.  Filling one is alloc-free.
+//! * **Exact merge.**  Bucket counts are integers, so merging shard or
+//!   replica histograms is associative and exact; the only f64 field is
+//!   the running `sum`, which merges bit-identically *when merged in
+//!   canonical order* (each shard covers a contiguous range of the
+//!   canonical session order, so shard-merge-in-order replays the exact
+//!   single-threaded addition sequence — pinned in
+//!   `rust/tests/properties.rs`).
+//! * **Bounded quantile error.**  A quantile estimate is the upper edge
+//!   of the bucket holding the target rank, so it is within one bucket
+//!   width (a factor of `2^(1/8)` ≈ 9%) of the exact order statistic.
+//!
+//! Bucket geometry: values are keyed by the biased binary exponent and
+//! the top [`SUB_BITS`] mantissa bits — [`SUB_BUCKETS`] linear
+//! sub-buckets per octave over `2^MIN_EXP ..= 2^(MAX_EXP+1)` (about
+//! 1 µs to 2 Ms in the millisecond unit the simulator uses), plus an
+//! underflow bucket (zero, negatives, NaN, subnormals) and an overflow
+//! bucket.  Everything the fleet records (delays, waits, batch sizes,
+//! regrets) lands comfortably inside the covered range.
+
+use crate::util::json::{obj, Json};
+
+/// Mantissa bits that sub-divide each octave: 8 linear sub-buckets per
+/// power of two, i.e. ~9% relative bucket width.
+const SUB_BITS: u32 = 3;
+/// Sub-buckets per octave (`2^SUB_BITS`).
+const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// Smallest covered binary exponent: values below `2^-10` (~0.001 ms)
+/// fall into the underflow bucket.
+const MIN_EXP: i32 = -10;
+/// Largest covered binary exponent: values at or above `2^21`
+/// (~2.1e6 ms) fall into the overflow bucket.
+const MAX_EXP: i32 = 20;
+/// Covered octaves.
+const OCTAVES: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+/// Total buckets: underflow + covered + overflow.
+pub const NUM_BUCKETS: usize = OCTAVES * SUB_BUCKETS + 2;
+/// Index of the overflow bucket.
+const OVERFLOW: usize = NUM_BUCKETS - 1;
+
+/// Bucket index for a value, from its IEEE-754 bit pattern.  Total over
+/// all f64s: zero, negatives, NaN, and subnormals go to the underflow
+/// bucket; `inf` and anything ≥ `2^(MAX_EXP+1)` to the overflow bucket.
+fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) || v < f64::MIN_POSITIVE {
+        return 0; // zero, negative, NaN, subnormal
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+    if exp < MIN_EXP {
+        return 0;
+    }
+    if exp > MAX_EXP {
+        return OVERFLOW; // includes +inf (biased exponent 0x7ff)
+    }
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    1 + (exp - MIN_EXP) as usize * SUB_BUCKETS + sub
+}
+
+/// Inclusive upper edge of a bucket: the smallest value that would land
+/// in the *next* bucket, i.e. every recorded value in bucket `i` is
+/// `≤ bucket_upper(i)` (and `> bucket_lower(i)` apart from rounding at
+/// the exact edge).
+fn bucket_upper(index: usize) -> f64 {
+    if index == 0 {
+        return (2.0f64).powi(MIN_EXP);
+    }
+    if index >= OVERFLOW {
+        return f64::INFINITY;
+    }
+    let off = index - 1;
+    let exp = MIN_EXP + (off / SUB_BUCKETS) as i32;
+    let sub = (off % SUB_BUCKETS) as f64;
+    (2.0f64).powi(exp) * (1.0 + (sub + 1.0) / SUB_BUCKETS as f64)
+}
+
+/// Lower edge of a bucket (0 for the underflow bucket).
+fn bucket_lower(index: usize) -> f64 {
+    if index == 0 {
+        return 0.0;
+    }
+    let off = index - 1;
+    let exp = MIN_EXP + (off / SUB_BUCKETS) as i32;
+    let sub = (off % SUB_BUCKETS) as f64;
+    (2.0f64).powi(exp) * (1.0 + sub / SUB_BUCKETS as f64)
+}
+
+/// A fixed-size log-bucketed histogram.  See the module docs for the
+/// geometry and the merge/determinism contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; NUM_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram (all buckets zero).
+    pub const fn new() -> Histogram {
+        Histogram {
+            counts: [0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one value.  Non-finite inputs are clamped to 0.0 (they
+    /// land in the underflow bucket and keep `sum`/`min`/`max` finite
+    /// and deterministic).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v } else { 0.0 };
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded values (finite-clamped as in [`record`](Self::record)).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Arithmetic mean, or NaN when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (∞ when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest recorded value (−∞ when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fold `other` into `self`.  Bucket counts add exactly; `sum` adds
+    /// in call order, which is bit-identical to a single-threaded fill
+    /// when merges happen in canonical (shard/replica id) order.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The zero-based rank the quantile `q` targets: nearest rank,
+    /// `round((count - 1) * q)` — the bounds property in
+    /// `tests/properties.rs` compares against the same order statistic.
+    fn rank(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let r = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round();
+        (r as u64).min(self.count - 1)
+    }
+
+    /// Quantile estimate: the upper edge of the bucket holding the
+    /// target rank (NaN when empty).  Within one bucket width of the
+    /// exact order statistic.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_bounds(q).1
+    }
+
+    /// `(lower, upper)` edges of the bucket holding the quantile's
+    /// target rank — the exact sorted-sample quantile lies within this
+    /// interval (pinned in `tests/properties.rs`).  NaN pair when empty.
+    pub fn quantile_bounds(&self, q: f64) -> (f64, f64) {
+        if self.count == 0 {
+            return (f64::NAN, f64::NAN);
+        }
+        let rank = self.rank(q);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                // The underflow bucket's recorded values may include
+                // exact zeros; its lower edge is already 0.  Clamp the
+                // top bucket's upper edge to the observed max so the
+                // bound stays finite.
+                let hi = bucket_upper(i).min(self.max);
+                return (bucket_lower(i), hi);
+            }
+        }
+        (bucket_lower(OVERFLOW), self.max)
+    }
+
+    /// JSON object: count / sum / mean / min / max / p50 / p90 / p99
+    /// plus the non-empty buckets as `[lower_edge, count]` pairs
+    /// (compact sparse encoding; empty buckets are omitted).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![jnum(bucket_lower(i)), Json::Num(c as f64)]))
+            .collect();
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", jnum(self.sum)),
+            ("mean", jnum(self.mean())),
+            ("min", jnum(if self.count == 0 { f64::NAN } else { self.min })),
+            ("max", jnum(if self.count == 0 { f64::NAN } else { self.max })),
+            ("p50", jnum(self.quantile(0.50))),
+            ("p90", jnum(self.quantile(0.90))),
+            ("p99", jnum(self.quantile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Non-finite numbers have no JSON literal; emit `null` (matches the
+/// convention in `coordinator/metrics.rs`).
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_edges_bracket_their_values() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = rng.uniform(1e-3, 1e6);
+            let i = bucket_index(v);
+            assert!(v > bucket_lower(i) || i == 0, "{v} vs lower {}", bucket_lower(i));
+            assert!(v <= bucket_upper(i), "{v} vs upper {}", bucket_upper(i));
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_land_in_underflow() {
+        for v in [0.0, -1.0, f64::NAN, f64::NEG_INFINITY, 1e-320] {
+            assert_eq!(bucket_index(v), 0, "{v}");
+        }
+        assert_eq!(bucket_index(f64::INFINITY), OVERFLOW);
+        assert_eq!(bucket_index(1e308), OVERFLOW);
+    }
+
+    #[test]
+    fn record_tracks_count_sum_min_max() {
+        let mut h = Histogram::new();
+        for v in [3.0, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 6.0);
+        assert_eq!(h.mean(), 2.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 3.0);
+    }
+
+    #[test]
+    fn non_finite_records_clamp_to_zero() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_bound_exact_order_statistics() {
+        let mut rng = Rng::new(11);
+        let mut h = Histogram::new();
+        let mut vals: Vec<f64> = (0..2000).map(|_| rng.uniform(0.01, 5000.0)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = vals[(((vals.len() - 1) as f64 * q).round()) as usize];
+            let (lo, hi) = h.quantile_bounds(q);
+            assert!(lo <= exact && exact <= hi, "q={q}: {lo} !<= {exact} !<= {hi}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential_fill() {
+        let mut rng = Rng::new(13);
+        let vals: Vec<f64> = (0..512).map(|_| rng.uniform(0.0, 1000.0)).collect();
+        let mut whole = Histogram::new();
+        for &v in &vals {
+            whole.record(v);
+        }
+        let mut merged = Histogram::new();
+        for chunk in vals.chunks(100) {
+            let mut part = Histogram::new();
+            for &v in chunk {
+                part.record(v);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(whole, merged);
+        assert_eq!(whole.sum().to_bits(), merged.sum().to_bits());
+    }
+
+    #[test]
+    fn empty_histogram_is_well_behaved() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.mean().is_nan());
+        assert!(h.quantile(0.5).is_nan());
+        let json = h.to_json().to_string();
+        assert!(json.contains("\"count\":0"), "{json}");
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let mut h = Histogram::new();
+        for v in [1.0, 10.0, 100.0, 1000.0] {
+            h.record(v);
+        }
+        let text = h.to_json().to_string();
+        let parsed = Json::parse(&text).expect("histogram JSON parses");
+        assert_eq!(parsed.get("count").unwrap().as_f64().unwrap(), 4.0);
+    }
+}

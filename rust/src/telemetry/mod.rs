@@ -1,0 +1,38 @@
+//! Deterministic, zero-allocation-in-steady-state observability.
+//!
+//! Three pillars, each in its own submodule:
+//!
+//! * [`trace`] — a structured event trace: fixed-size [`TraceEvent`]
+//!   records in preallocated per-shard ring buffers ([`TraceRing`],
+//!   [`Tracer`]), stamped with the virtual event clock plus
+//!   round/session/replica ids and drained to JSONL when `--trace` is
+//!   set.  Off (`trace_capacity == 0`) the engine holds no tracer and
+//!   every emission site is one `Option` branch.
+//! * [`hist`] — log-bucketed [`Histogram`]s (HDR-style fixed bucket
+//!   arrays) for end-to-end delay, queue wait, batch size, and per-arm
+//!   regret; exactly mergeable across shards and replicas in canonical
+//!   order, exported in `FleetSummary::to_json` and the
+//!   `--metrics-every` snapshot stream.
+//! * [`phase`] — wall-clock [`PhaseClock`] accounting per
+//!   select/submit/realize/observe phase per worker, so frames/sec
+//!   regressions are attributable to a phase.
+//!
+//! Two hard invariants, pinned in `rust/tests/fleet.rs` and
+//! `rust/benches/hotpath.rs` and argued in DESIGN.md §12:
+//!
+//! 1. **Telemetry never perturbs the simulation.**  Every recorded
+//!    quantity is read *out* of the round; nothing flows back.  The
+//!    worker-count and replica bit-identity pins hold with tracing on
+//!    and off, and the trace content itself is deterministic modulo the
+//!    wall-clock timing fields.
+//! 2. **Steady-state rounds stay zero-alloc with tracing enabled.**
+//!    Rings, histograms, and phase grids are fixed-size and
+//!    preallocated; the hot path only writes into them.
+
+pub mod hist;
+pub mod phase;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use phase::{Phase, PhaseClock, PHASE_NAMES};
+pub use trace::{EventKind, TraceEvent, TraceRing, Tracer};

@@ -1,0 +1,172 @@
+//! Per-phase, per-worker wall-clock accounting.
+//!
+//! The engine round decomposes into four phases — parallel select,
+//! main-thread submit (ingress + admission), main-thread realize
+//! (executor drain + leg resolution), and parallel observe — and the
+//! fleet summary's frames/sec number is useless for diagnosing a
+//! regression unless it can be attributed to one of them.  A
+//! [`PhaseClock`] is a flat, preallocated `phases × workers` grid of
+//! accumulated milliseconds: recording is `Instant::elapsed` plus one
+//! `f64 +=`, allocation-free and — because wall-clock readings never
+//! feed back into any simulated quantity — incapable of perturbing
+//! bit-identity.  Lockstep rounds fold their whole serial realize leg
+//! into [`Phase::Realize`]; the submit row stays zero there.
+
+use crate::util::json::{obj, Json};
+
+/// The four phases of an engine round, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Parallel policy selection (sharded across workers).
+    Select,
+    /// Main-thread ingress + admission (event scheduler only).
+    Submit,
+    /// Main-thread executor drain and leg resolution.
+    Realize,
+    /// Parallel feedback/observe (sharded across workers).
+    Observe,
+}
+
+/// All phases, in execution order (indexes match [`PhaseClock`] rows).
+pub const PHASES: [Phase; 4] = [Phase::Select, Phase::Submit, Phase::Realize, Phase::Observe];
+
+/// Stable lowercase names (JSON keys, summary rows).
+pub const PHASE_NAMES: [&str; 4] = ["select", "submit", "realize", "observe"];
+
+impl Phase {
+    fn index(self) -> usize {
+        match self {
+            Phase::Select => 0,
+            Phase::Submit => 1,
+            Phase::Realize => 2,
+            Phase::Observe => 3,
+        }
+    }
+}
+
+/// Accumulated wall-clock per `(phase, worker)`, flat row-major layout
+/// (`ms[phase * workers + worker]`).  Preallocated at engine build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseClock {
+    workers: usize,
+    ms: Vec<f64>,
+}
+
+impl PhaseClock {
+    /// A zeroed clock for `workers` logical workers (min 1).
+    pub fn new(workers: usize) -> PhaseClock {
+        let workers = workers.max(1);
+        PhaseClock { workers, ms: vec![0.0; PHASES.len() * workers] }
+    }
+
+    /// Logical workers tracked.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Add `ms` to one `(phase, worker)` cell.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, worker: usize, ms: f64) {
+        self.ms[phase.index() * self.workers + worker] += ms;
+    }
+
+    /// The mutable per-worker row for one phase — handed to the
+    /// parallel phases so each worker's shard closure can time itself
+    /// into its own slot (disjoint `&mut` via the same chunking as the
+    /// session shards).
+    pub fn row_mut(&mut self, phase: Phase) -> &mut [f64] {
+        let w = self.workers;
+        let start = phase.index() * w;
+        &mut self.ms[start..start + w]
+    }
+
+    /// Accumulated ms for one phase summed over workers.
+    pub fn phase_ms(&self, phase: Phase) -> f64 {
+        let start = phase.index() * self.workers;
+        self.ms[start..start + self.workers].iter().sum()
+    }
+
+    /// Accumulated ms across all phases and workers.
+    pub fn total_ms(&self) -> f64 {
+        self.ms.iter().sum()
+    }
+
+    /// Fold another clock in (replica aggregation).  Worker counts may
+    /// differ across heterogeneous engines; cells merge by worker id
+    /// and any overflow workers fold into the last local slot.
+    pub fn merge(&mut self, other: &PhaseClock) {
+        for (pi, phase) in PHASES.iter().enumerate() {
+            for w in 0..other.workers {
+                let local = w.min(self.workers - 1);
+                self.ms[pi * self.workers + local] +=
+                    other.ms[phase.index() * other.workers + w];
+            }
+        }
+    }
+
+    /// JSON object: per-phase totals plus the per-worker breakdown of
+    /// the parallel phases.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::with_capacity(PHASES.len() + 2);
+        for (name, phase) in PHASE_NAMES.iter().zip(PHASES.iter()) {
+            pairs.push((name, Json::Num(self.phase_ms(*phase))));
+        }
+        pairs.push(("total", Json::Num(self.total_ms())));
+        let select_row = (0..self.workers)
+            .map(|w| Json::Num(self.ms[Phase::Select.index() * self.workers + w]))
+            .collect();
+        let observe_row = (0..self.workers)
+            .map(|w| Json::Num(self.ms[Phase::Observe.index() * self.workers + w]))
+            .collect();
+        pairs.push(("select_per_worker", Json::Arr(select_row)));
+        pairs.push(("observe_per_worker", Json::Arr(observe_row)));
+        obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_totals() {
+        let mut c = PhaseClock::new(2);
+        c.add(Phase::Select, 0, 1.0);
+        c.add(Phase::Select, 1, 2.0);
+        c.add(Phase::Observe, 1, 4.0);
+        assert_eq!(c.phase_ms(Phase::Select), 3.0);
+        assert_eq!(c.phase_ms(Phase::Observe), 4.0);
+        assert_eq!(c.phase_ms(Phase::Submit), 0.0);
+        assert_eq!(c.total_ms(), 7.0);
+    }
+
+    #[test]
+    fn row_mut_addresses_one_phase() {
+        let mut c = PhaseClock::new(3);
+        c.row_mut(Phase::Observe)[2] = 5.0;
+        assert_eq!(c.phase_ms(Phase::Observe), 5.0);
+        assert_eq!(c.phase_ms(Phase::Select), 0.0);
+    }
+
+    #[test]
+    fn merge_folds_mismatched_worker_counts() {
+        let mut a = PhaseClock::new(2);
+        a.add(Phase::Select, 0, 1.0);
+        let mut b = PhaseClock::new(4);
+        b.add(Phase::Select, 3, 2.0);
+        b.add(Phase::Realize, 0, 7.0);
+        a.merge(&b);
+        assert_eq!(a.phase_ms(Phase::Select), 3.0, "worker 3 folds into last slot");
+        assert_eq!(a.phase_ms(Phase::Realize), 7.0);
+    }
+
+    #[test]
+    fn json_carries_phase_totals() {
+        let mut c = PhaseClock::new(2);
+        c.add(Phase::Realize, 0, 2.5);
+        let parsed =
+            crate::util::json::Json::parse(&c.to_json().to_string()).expect("clock JSON parses");
+        assert_eq!(parsed.get("realize").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(parsed.get("select_per_worker").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,420 @@
+//! Structured event trace: fixed-size records in preallocated per-shard
+//! ring buffers, drained to JSONL at report time.
+//!
+//! Determinism contract (pinned in `rust/tests/fleet.rs`): the drained,
+//! canonically ordered event sequence is identical at every worker
+//! count, modulo the wall-clock field of round barriers.  Two design
+//! choices carry that:
+//!
+//! * **Per-shard rings, no cross-thread interleaving.**  Each pool
+//!   worker writes only its own ring (same disjoint-shard discipline as
+//!   the engine's session vectors), and the main thread has its own.
+//!   Nothing is timestamped with wall clock except [`EventKind::RoundBarrier`]'s
+//!   `wall_ms`, which the canonical comparison strips.
+//! * **Canonical drain order.**  Drain concatenates rings (main first,
+//!   then workers in id order) and stable-sorts by
+//!   `(round, kind, session)`.  Within one round a session's events of
+//!   one kind all come from exactly one ring (a session lives in one
+//!   shard per round), so the stable sort yields the same sequence no
+//!   matter which ring they sat in — the shard boundaries vanish.
+//!
+//! Zero-alloc contract (pinned in `benches/hotpath.rs`): rings are
+//! allocated once at `Tracer::new` with a fixed capacity; `push` never
+//! allocates — once full it overwrites the oldest record and counts the
+//! drop, so a long run with a small ring degrades to "most recent N
+//! events" rather than OOM or malloc traffic.
+
+use crate::util::json::{obj, Json};
+
+/// Sentinel for "no session / no replica attached to this event".
+pub const NO_ID: u32 = u32::MAX;
+
+/// What happened.  Declaration order IS the canonical intra-round sort
+/// order (the derived `Ord`), arranged to follow the engine's phase
+/// order: pre-round forecast, membership changes, then the frame
+/// lifecycle, then policy mutations, then the round barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// Pre-round forecast frozen (event scheduler): `a` = backlog,
+    /// `b` = merge probability; clock = forecast free-at.
+    ForecastFrozen,
+    /// Session joined an engine: `a` = slot count after attach.
+    SessionAttach,
+    /// Session moved between replicas: `a` = source replica,
+    /// `b` = destination replica.
+    SessionMigrate,
+    /// Session removed from an engine: `a` = slot count after evict.
+    SessionEvict,
+    /// Frame handed to the uplink: `a` = partition, `b` = payload bytes;
+    /// clock = NIC arrival (capture + front + transmit).
+    FrameSubmitted,
+    /// Frame admitted to the edge queue: `a` = partition,
+    /// `b` = ingress wait ms; clock = enqueue time.
+    FrameAdmitted,
+    /// Frame bounced by admission control: `a` = partition;
+    /// clock = attempted-enqueue time.
+    FrameRejected,
+    /// Frame placed in an executor batch: `a` = batch size,
+    /// `b` = queue wait ms; clock = batch start.
+    FrameBatched,
+    /// Edge executor drained the round's queue: `a` = jobs dispatched
+    /// this round; clock = executor free-at after the drain.
+    QueueDrain,
+    /// Frame fell back to full on-device execution: `a` = partition,
+    /// `b` = realized on-device delay ms.
+    DeviceFallback,
+    /// Policy's cached factorization refreshed (periodic Cholesky):
+    /// `a` = ops folded since the previous refresh.
+    PolicyRefresh,
+    /// Policy drift reset fired: `a` = total resets so far.
+    PolicyReset,
+    /// End of round: `a` = concurrent offloaders k_t; `wall_ms` = wall
+    /// clock spent in the round (stripped by the canonical comparison).
+    RoundBarrier,
+}
+
+impl EventKind {
+    /// Stable snake_case name (JSONL `kind` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ForecastFrozen => "forecast_frozen",
+            EventKind::SessionAttach => "session_attach",
+            EventKind::SessionMigrate => "session_migrate",
+            EventKind::SessionEvict => "session_evict",
+            EventKind::FrameSubmitted => "frame_submitted",
+            EventKind::FrameAdmitted => "frame_admitted",
+            EventKind::FrameRejected => "frame_rejected",
+            EventKind::FrameBatched => "frame_batched",
+            EventKind::QueueDrain => "queue_drain",
+            EventKind::DeviceFallback => "device_fallback",
+            EventKind::PolicyRefresh => "policy_refresh",
+            EventKind::PolicyReset => "policy_reset",
+            EventKind::RoundBarrier => "round_barrier",
+        }
+    }
+
+    /// JSONL key names for the `a`/`b` payload slots of this kind
+    /// (`None` = slot unused, omitted from the JSON object).
+    fn payload_names(self) -> (Option<&'static str>, Option<&'static str>) {
+        match self {
+            EventKind::ForecastFrozen => (Some("backlog"), Some("merge_probability")),
+            EventKind::SessionAttach => (Some("sessions"), None),
+            EventKind::SessionMigrate => (Some("from_replica"), Some("to_replica")),
+            EventKind::SessionEvict => (Some("sessions"), None),
+            EventKind::FrameSubmitted => (Some("partition"), Some("bytes")),
+            EventKind::FrameAdmitted => (Some("partition"), Some("ingress_wait_ms")),
+            EventKind::FrameRejected => (Some("partition"), None),
+            EventKind::FrameBatched => (Some("batch_size"), Some("queue_wait_ms")),
+            EventKind::QueueDrain => (Some("dispatched"), Some("pending")),
+            EventKind::DeviceFallback => (Some("partition"), Some("device_ms")),
+            EventKind::PolicyRefresh => (Some("ops_folded"), None),
+            EventKind::PolicyReset => (Some("resets"), None),
+            EventKind::RoundBarrier => (Some("offloaders"), None),
+        }
+    }
+}
+
+/// One fixed-size trace record.  `Copy` and field-only — pushing one is
+/// a bounded store into a preallocated ring, never an allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Engine round the event belongs to.
+    pub round: u32,
+    /// What happened.
+    pub kind: EventKind,
+    /// Global session id, or [`NO_ID`] for fleet-level events.
+    pub session: u32,
+    /// Replica id ([`NO_ID`] until stamped; single engines stamp 0).
+    pub replica: u32,
+    /// Virtual event-clock stamp in simulated ms (deterministic).
+    pub clock_ms: f64,
+    /// Kind-specific payload slot (see [`EventKind::payload_names`]).
+    pub a: f64,
+    /// Second payload slot.
+    pub b: f64,
+    /// Wall-clock ms (RoundBarrier only; 0 elsewhere).  The only
+    /// nondeterministic field — stripped by [`TraceEvent::sans_wall`].
+    pub wall_ms: f64,
+}
+
+impl TraceEvent {
+    /// Build an event; `session = None` marks a fleet-level event.
+    pub fn new(
+        kind: EventKind,
+        round: usize,
+        session: Option<usize>,
+        clock_ms: f64,
+        a: f64,
+        b: f64,
+    ) -> TraceEvent {
+        TraceEvent {
+            round: round as u32,
+            kind,
+            session: session.map_or(NO_ID, |s| s as u32),
+            replica: NO_ID,
+            clock_ms,
+            a,
+            b,
+            wall_ms: 0.0,
+        }
+    }
+
+    /// The event with its wall-clock field zeroed — the deterministic
+    /// projection the worker-count pins compare.
+    pub fn sans_wall(mut self) -> TraceEvent {
+        self.wall_ms = 0.0;
+        self
+    }
+
+    /// One JSONL object.  Unused payload slots and absent ids are
+    /// omitted; `wall_ms` only appears on round barriers.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("round", Json::Num(self.round as f64)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+        ];
+        if self.session != NO_ID {
+            pairs.push(("session", Json::Num(self.session as f64)));
+        }
+        if self.replica != NO_ID {
+            pairs.push(("replica", Json::Num(self.replica as f64)));
+        }
+        pairs.push(("clock_ms", jnum(self.clock_ms)));
+        let (a_name, b_name) = self.kind.payload_names();
+        if let Some(name) = a_name {
+            pairs.push((name, jnum(self.a)));
+        }
+        if let Some(name) = b_name {
+            pairs.push((name, jnum(self.b)));
+        }
+        if self.kind == EventKind::RoundBarrier {
+            pairs.push(("wall_ms", jnum(self.wall_ms)));
+        }
+        obj(pairs)
+    }
+}
+
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// A fixed-capacity ring of trace events.  Grows (by plain `push`) only
+/// until it first reaches capacity — the backing `Vec` is reserved up
+/// front, so even that phase never reallocates — then overwrites the
+/// oldest record in place and counts the drop.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Index of the *oldest* record once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `capacity` events (min 1).
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(1);
+        TraceRing { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    /// Append an event, overwriting the oldest once full.  Never
+    /// allocates: the backing storage was reserved at construction.
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no events are held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Move every held event into `out` in arrival order (oldest first)
+    /// and reset the ring (capacity and drop counter are kept).
+    pub fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+/// The engine-side tracer: one ring for the main thread plus one per
+/// pool worker, all preallocated.  `None`-able at the engine level so
+/// tracing off costs one branch per would-be event.
+#[derive(Debug)]
+pub struct Tracer {
+    /// Ring 0 belongs to the main thread; ring `1 + w` to pool worker `w`.
+    rings: Vec<TraceRing>,
+    replica: u32,
+}
+
+impl Tracer {
+    /// Rings for `workers` pool workers plus the main thread, each with
+    /// `capacity` slots.
+    pub fn new(workers: usize, capacity: usize) -> Tracer {
+        let rings = (0..workers.max(1) + 1).map(|_| TraceRing::new(capacity)).collect();
+        Tracer { rings, replica: NO_ID }
+    }
+
+    /// Stamp every drained event with this replica id.  Clusters call
+    /// this once per replica; standalone engines never do, leaving the
+    /// id at [`NO_ID`] so the JSONL omits the `replica` field.
+    pub fn set_replica(&mut self, replica: usize) {
+        self.replica = replica as u32;
+    }
+
+    /// The main thread's ring.
+    pub fn main(&mut self) -> &mut TraceRing {
+        &mut self.rings[0]
+    }
+
+    /// The per-worker rings (index = worker id), for the observe phase
+    /// to hand one to each shard.
+    pub fn worker_rings(&mut self) -> &mut [TraceRing] {
+        &mut self.rings[1..]
+    }
+
+    /// Total events overwritten across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Drain every ring and return the canonical event sequence:
+    /// concatenated main-then-workers, stamped with the replica id,
+    /// stable-sorted by `(round, kind, session)`.  See the module docs
+    /// for why this is worker-count invariant.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        let total: usize = self.rings.iter().map(|r| r.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for ring in &mut self.rings {
+            ring.drain_into(&mut out);
+        }
+        for ev in &mut out {
+            ev.replica = self.replica;
+        }
+        out.sort_by_key(|e| (e.round, e.kind, e.session));
+        out
+    }
+}
+
+/// Canonical cross-replica order for merged traces: round, then kind,
+/// then session, then replica.  `Cluster::drain_trace` sorts with this.
+pub fn canonical_order(a: &TraceEvent, b: &TraceEvent) -> std::cmp::Ordering {
+    (a.round, a.kind, a.session, a.replica).cmp(&(b.round, b.kind, b.session, b.replica))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, round: usize, session: usize) -> TraceEvent {
+        TraceEvent::new(kind, round, Some(session), round as f64 * 10.0, 1.0, 2.0)
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(ev(EventKind::FrameSubmitted, i, 0));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        let rounds: Vec<u32> = out.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![2, 3, 4], "oldest two overwritten");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_never_reallocates_past_construction() {
+        let mut r = TraceRing::new(8);
+        let ptr = r.buf.as_ptr();
+        for i in 0..100 {
+            r.push(ev(EventKind::FrameAdmitted, i, i));
+        }
+        assert_eq!(r.buf.as_ptr(), ptr, "backing storage must be stable");
+        assert_eq!(r.buf.capacity(), 8);
+    }
+
+    #[test]
+    fn drain_orders_by_round_kind_session() {
+        let mut t = Tracer::new(2, 16);
+        // Deliberately out of order and spread over rings.
+        t.main().push(ev(EventKind::RoundBarrier, 1, 0));
+        t.worker_rings()[1].push(ev(EventKind::FrameSubmitted, 1, 3));
+        t.worker_rings()[0].push(ev(EventKind::FrameSubmitted, 1, 1));
+        t.main().push(ev(EventKind::FrameSubmitted, 0, 2));
+        t.set_replica(4);
+        let out = t.drain();
+        let key: Vec<(u32, EventKind, u32)> =
+            out.iter().map(|e| (e.round, e.kind, e.session)).collect();
+        assert_eq!(
+            key,
+            vec![
+                (0, EventKind::FrameSubmitted, 2),
+                (1, EventKind::FrameSubmitted, 1),
+                (1, EventKind::FrameSubmitted, 3),
+                (1, EventKind::RoundBarrier, 0),
+            ]
+        );
+        assert!(out.iter().all(|e| e.replica == 4));
+    }
+
+    #[test]
+    fn kind_order_follows_the_phase_sequence() {
+        assert!(EventKind::ForecastFrozen < EventKind::FrameSubmitted);
+        assert!(EventKind::FrameSubmitted < EventKind::FrameAdmitted);
+        assert!(EventKind::FrameAdmitted < EventKind::FrameBatched);
+        assert!(EventKind::PolicyRefresh < EventKind::RoundBarrier);
+    }
+
+    #[test]
+    fn json_encodes_kind_specific_payloads() {
+        let e = TraceEvent::new(EventKind::FrameBatched, 7, Some(2), 123.5, 4.0, 6.25);
+        let text = e.to_json().to_string();
+        let parsed = Json::parse(&text).expect("event JSON parses");
+        assert_eq!(parsed.get("kind").unwrap().as_str().unwrap(), "frame_batched");
+        assert_eq!(parsed.get("batch_size").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(parsed.get("queue_wait_ms").unwrap().as_f64().unwrap(), 6.25);
+        assert!(parsed.opt("wall_ms").is_none(), "wall only on barriers");
+
+        let mut b = TraceEvent::new(EventKind::RoundBarrier, 7, None, 0.0, 3.0, 0.0);
+        b.wall_ms = 1.5;
+        let text = b.to_json().to_string();
+        let parsed = Json::parse(&text).expect("barrier JSON parses");
+        assert!(parsed.opt("session").is_none(), "fleet-level event has no session");
+        assert_eq!(parsed.get("wall_ms").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn sans_wall_strips_only_the_wall_field() {
+        let mut e = ev(EventKind::RoundBarrier, 3, 1);
+        e.wall_ms = 99.0;
+        let s = e.sans_wall();
+        assert_eq!(s.wall_ms, 0.0);
+        assert_eq!((s.round, s.kind, s.session, s.clock_ms), (3, EventKind::RoundBarrier, 1, 30.0));
+    }
+}

@@ -723,3 +723,97 @@ fn per_session_uplinks_differentiate_outcomes() {
     assert!(slow_mo >= 60, "slow link tail MO share {slow_mo}/100");
     assert!(fast_off >= 90, "fast link tail off-device share {fast_off}/100");
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry (ISSUE 7): the trace is an *observer*.  Two pins: (1) with
+// tracing enabled, the queue-aware fleet emits the identical event
+// sequence at workers 1/2/4 (modulo the wall-clock field, which is the
+// only nondeterministic slot); (2) enabling tracing does not perturb a
+// single bit of the per-frame transcript vs the untraced run.
+// ---------------------------------------------------------------------------
+#[test]
+fn trace_is_deterministic_across_worker_counts_and_free_of_side_effects() {
+    use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
+
+    let rounds = 200;
+    let net = zoo::partnet();
+    // Queue-aware, batching, with a bounded waiting room so the trace
+    // exercises the full event vocabulary: submits, admissions,
+    // rejections + device fallbacks, batches, drains, refreshes.
+    let scheduler = || {
+        let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+        sc.batch_window_ms = 6.0;
+        sc.max_batch = 4;
+        sc.queue_capacity = 2;
+        sc
+    };
+    let run = |workers: usize, trace_capacity: usize| {
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: scheduler(),
+            queue_signal: QueueSignal::Full,
+            workers,
+            trace_capacity,
+            ..Default::default()
+        });
+        for (i, env) in scenario::fleet(net.clone(), 8, 10.0, 90).into_iter().enumerate() {
+            eng.add_session(
+                mu_linucb(&net, rounds),
+                env,
+                FrameSource::video(900 + i as u64, 0.85, Weights::default_paper()),
+            );
+        }
+        eng.run(rounds);
+        eng
+    };
+
+    // Reference: single worker, traced.
+    let mut base = run(1, 65_536);
+    assert_eq!(base.trace_dropped(), 0, "capacity must hold the whole run");
+    let base_events: Vec<_> = base.drain_trace().into_iter().map(|e| e.sans_wall()).collect();
+    assert!(
+        base_events.len() > rounds, // at least one event per round (the barrier)
+        "trace should be rich, got {} events",
+        base_events.len()
+    );
+    // The scenario must actually exercise rejection → fallback.
+    assert!(
+        base_events.iter().any(|e| e.kind == ans::telemetry::EventKind::FrameRejected),
+        "bounded queue should reject some offloads"
+    );
+
+    for workers in [2usize, 4] {
+        let mut eng = run(workers, 65_536);
+        assert_eq!(eng.trace_dropped(), 0, "workers={workers}");
+        let events: Vec<_> = eng.drain_trace().into_iter().map(|e| e.sans_wall()).collect();
+        assert_eq!(
+            events.len(),
+            base_events.len(),
+            "workers={workers}: event count must match workers=1"
+        );
+        for (i, (a, b)) in base_events.iter().zip(&events).enumerate() {
+            assert_eq!(a, b, "workers={workers}: event #{i} diverges");
+        }
+    }
+
+    // Observer property: the traced transcript IS the untraced one.
+    let untraced = run(4, 0);
+    assert!(!untraced.trace_enabled());
+    let traced = run(4, 65_536);
+    for (i, (u, t)) in untraced.sessions().iter().zip(traced.sessions()).enumerate() {
+        assert_eq!(u.metrics.records.len(), t.metrics.records.len(), "s{i}");
+        for (a, b) in u.metrics.records.iter().zip(&t.metrics.records) {
+            assert_eq!(a.p, b.p, "s{i} t={}", a.t);
+            assert_eq!(a.delay_ms.to_bits(), b.delay_ms.to_bits(), "s{i} t={}", a.t);
+            assert_eq!(
+                a.event_expected_ms.to_bits(),
+                b.event_expected_ms.to_bits(),
+                "s{i} t={}",
+                a.t
+            );
+            assert_eq!(a.queue_wait_ms.to_bits(), b.queue_wait_ms.to_bits(), "s{i} t={}", a.t);
+            assert_eq!(a.batch_size, b.batch_size, "s{i} t={}", a.t);
+            assert_eq!(a.deadline_miss, b.deadline_miss, "s{i} t={}", a.t);
+        }
+    }
+}

@@ -766,3 +766,97 @@ fn prop_edge_queue_batch_delay_never_exceeds_sum_of_solo_delays() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry histograms: shard/replica merge must be bit-identical to a
+// single-threaded fill, and quantile estimates must bracket the exact
+// order statistic within one bucket (the ISSUE 7 mergeability contract
+// that lets `--metrics-every` snapshots and cross-replica summaries use
+// histograms without perturbing bit-identity).
+// ---------------------------------------------------------------------------
+use ans::telemetry::Histogram;
+
+fn random_samples(rng: &mut Rng) -> Vec<f64> {
+    let n = 1 + rng.below(600);
+    (0..n).map(|_| rng.uniform(0.01, 5_000.0)).collect()
+}
+
+fn fill(vals: &[f64]) -> Histogram {
+    let mut h = Histogram::new();
+    for &v in vals {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn prop_histogram_shard_merge_is_bit_identical() {
+    forall(21, 40, random_samples, |vals| {
+        let whole = fill(vals);
+        for workers in [1usize, 2, 3, 4, 7] {
+            // Mirror the engine's sharding: contiguous chunks of the
+            // canonical session order, merged back in shard order.
+            let per = vals.len().div_ceil(workers).max(1);
+            let mut merged = Histogram::new();
+            for shard in vals.chunks(per) {
+                merged.merge(&fill(shard));
+            }
+            ensure(merged == whole, format!("workers={workers}: merged != whole"))?;
+            ensure(
+                merged.sum().to_bits() == whole.sum().to_bits(),
+                format!("workers={workers}: sum bits differ"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_replica_merge_of_merges_is_bit_identical() {
+    forall(22, 40, random_samples, |vals| {
+        let whole = fill(vals);
+        // Two-level merge: replicas own contiguous spans, each replica
+        // fills per-shard histograms and merges them in shard order,
+        // then the fleet merges replicas in replica-id order — exactly
+        // what Cluster::fleet_summary does.
+        let replicas = 3usize;
+        let per_rep = vals.len().div_ceil(replicas).max(1);
+        let mut fleet = Histogram::new();
+        for span in vals.chunks(per_rep) {
+            let per_shard = span.len().div_ceil(2).max(1);
+            let mut rep = Histogram::new();
+            for shard in span.chunks(per_shard) {
+                rep.merge(&fill(shard));
+            }
+            fleet.merge(&rep);
+        }
+        ensure(fleet == whole, "merge-of-merges != single-threaded fill")?;
+        ensure(fleet.sum().to_bits() == whole.sum().to_bits(), "sum bits differ")
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bound_exact_within_one_bucket() {
+    forall(23, 40, random_samples, |vals| {
+        let h = fill(vals);
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            // Nearest-rank order statistic — the definition Histogram's
+            // rank() targets.
+            let r = (((sorted.len() - 1) as f64) * q).round() as usize;
+            let exact = sorted[r];
+            let (lo, hi) = h.quantile_bounds(q);
+            ensure(
+                lo <= exact && exact <= hi,
+                format!("q={q}: exact {exact} outside [{lo}, {hi}]"),
+            )?;
+            // One log-bucket wide: upper/lower ≤ 9/8 (SUB_BITS = 3).
+            ensure(
+                hi <= lo * (9.0 / 8.0) + 1e-12,
+                format!("q={q}: bucket [{lo}, {hi}] wider than one bucket"),
+            )?;
+        }
+        Ok(())
+    });
+}
