@@ -18,7 +18,7 @@
 use ans::bandit;
 use ans::bandit::linalg::RidgeState;
 use ans::bandit::PolicyStore;
-use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::engine::{Engine, EngineConfig, SelectBatch};
 use ans::coordinator::FrameSource;
 use ans::edge::{AdmissionPolicy, SchedulerConfig};
 use ans::models::{zoo, CONTEXT_DIM};
@@ -125,6 +125,93 @@ fn main() {
     println!("scaling sweep JSON -> bench_results/fleet_scale.json");
 
     policy_soa(&b, samples, host_cores);
+    select_armmajor(&b, samples, host_cores);
+}
+
+/// End-to-end arm-major vs session-major select (ISSUE 8 acceptance):
+/// the SAME 256-session μLinUCB lockstep scenario served twice through
+/// the full engine — once with `--select-batch off` (the scalar
+/// per-session path) and once with `--select-batch on` (the arm-major
+/// batched store kernels).  The two paths are pinned bit-identical
+/// (`rust/tests/fleet.rs`), re-asserted here via a transcript checksum,
+/// so the ratio is purely the layout/loop-order effect carried into
+/// frames/sec.
+fn select_armmajor(b: &Bench, samples: usize, host_cores: usize) {
+    const N: usize = 256; // the fleet_scale acceptance cell
+    let name = "select_armmajor/on_vs_off_s256";
+    if !b.enabled(name) {
+        return;
+    }
+    let rounds = (FRAME_BUDGET / N).max(20);
+
+    // Serve once in the given mode; returns (frames/sec, transcript
+    // checksum over every session's (p, delay bits, wait bits)).
+    let serve_mode = |mode: SelectBatch| -> (f64, u64) {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(2, 0.25),
+            ingress_mbps: Some(400.0),
+            select_batch: mode,
+            ..Default::default()
+        });
+        for env in scenario::fleet(net.clone(), N, 12.0, 7) {
+            let policy =
+                bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, rounds, None, None)
+                    .expect("known policy");
+            eng.add_session(policy, env, FrameSource::uniform());
+        }
+        assert_eq!(eng.select_batch_effective(), mode.name());
+        eng.reserve(rounds);
+        let start = Instant::now();
+        eng.run(rounds);
+        let secs = start.elapsed().as_secs_f64();
+        let mut sum = 0u64;
+        for s in eng.sessions() {
+            for r in &s.metrics.records {
+                sum = sum
+                    .wrapping_add(r.p as u64)
+                    .wrapping_add(r.delay_ms.to_bits())
+                    .wrapping_add(r.queue_wait_ms.to_bits());
+            }
+        }
+        ((N * rounds) as f64 / secs.max(1e-9), sum)
+    };
+
+    let mut off_fps = 0.0_f64;
+    let mut on_fps = 0.0_f64;
+    let mut off_sum = 0u64;
+    let mut on_sum = 0u64;
+    for _ in 0..samples {
+        let (f, c) = serve_mode(SelectBatch::Off);
+        off_fps = off_fps.max(f);
+        off_sum = c;
+        let (f, c) = serve_mode(SelectBatch::On);
+        on_fps = on_fps.max(f);
+        on_sum = c;
+    }
+    assert_eq!(
+        off_sum, on_sum,
+        "arm-major and scalar select must serve bit-identical transcripts"
+    );
+    let speedup = on_fps / off_fps.max(1e-9);
+    println!(
+        "{name:<40} off {off_fps:>12.0} f/s   on {on_fps:>12.0} f/s   speedup x{speedup:.2}"
+    );
+
+    let doc = obj(vec![
+        ("bench", Json::from("select_armmajor")),
+        ("host_cores", Json::from(host_cores)),
+        ("samples", Json::from(samples)),
+        ("sessions", Json::from(N)),
+        ("rounds", Json::from(rounds)),
+        ("transcript_checksum", Json::from(format!("{on_sum:016x}"))),
+        ("session_major_frames_per_sec", Json::from(off_fps)),
+        ("arm_major_frames_per_sec", Json::from(on_fps)),
+        ("speedup", Json::from(speedup)),
+    ]);
+    std::fs::write("bench_results/select_armmajor.json", doc.to_string())
+        .expect("writing bench_results/select_armmajor.json");
+    println!("arm-major select comparison JSON -> bench_results/select_armmajor.json");
 }
 
 /// Scalar-vs-SoA comparison of the cross-session policy math itself:

@@ -8,7 +8,7 @@
 use ans::bandit::linalg::RidgeState;
 use ans::bandit::policy::{FrameContext, Privileged};
 use ans::bandit::{LinUcb, Policy, PolicyStore};
-use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::engine::{Engine, EngineConfig, SelectBatch};
 use ans::coordinator::FrameSource;
 use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
 use ans::models::{features, zoo, FeatureScale, CONTEXT_DIM};
@@ -147,10 +147,14 @@ fn main() {
     assert_eq!(delta, 0, "steady-state select/observe must not allocate");
 
     // Same audit through the full engine round (lockstep, contended,
-    // shared ingress — every per-round scratch buffer in play).
+    // shared ingress — every per-round scratch buffer in play).  Pinned
+    // to the scalar per-session path: under the default `auto` an
+    // all-μLinUCB fleet would take the arm-major driver, which has its
+    // own audit below.
     let mut eng = Engine::new(EngineConfig {
         contention: Contention::new(1, 0.5),
         ingress_mbps: Some(200.0),
+        select_batch: SelectBatch::Off,
         ..Default::default()
     });
     let audit_rounds = 512;
@@ -169,6 +173,39 @@ fn main() {
         "alloc/engine_lockstep_steady_state", delta, audit_rounds
     );
     assert_eq!(delta, 0, "steady-state engine rounds must not allocate");
+
+    // The same lockstep audit through the ARM-MAJOR batched select
+    // (ISSUE 8): an all-μLinUCB fleet under the default `--select-batch
+    // auto` resolves to the batched driver, whose per-round scratch
+    // (theta arenas, score matrix, plans, gathered update tiles) is
+    // pre-sized by `Engine::reserve` — so the steady state must stay
+    // exactly zero allocations per round, same bar as the scalar path.
+    let mut beng = Engine::new(EngineConfig {
+        contention: Contention::new(1, 0.5),
+        ingress_mbps: Some(200.0),
+        ..Default::default()
+    });
+    let baudit_rounds = 512;
+    for i in 0..16 {
+        let env = ans::simulator::Environment::simple(zoo::vgg16(), 10.0 + i as f64, 80 + i as u64);
+        let pol = LinUcb::paper_default(1_000_000);
+        beng.add_session(Box::new(pol), env, FrameSource::uniform());
+    }
+    assert_eq!(
+        beng.select_batch_effective(),
+        "on",
+        "auto must resolve to the arm-major driver for an all-store-backed fleet"
+    );
+    beng.reserve(64 + baudit_rounds);
+    beng.run(64); // warm-up: batch scratch arenas at capacity
+    let before = allocations();
+    beng.run(baudit_rounds);
+    let delta = allocations() - before;
+    println!(
+        "{:<44} {} allocs over {} rounds x 16 sessions",
+        "alloc/engine_armmajor_steady_state", delta, baudit_rounds
+    );
+    assert_eq!(delta, 0, "arm-major batched rounds must not allocate");
 
     // And through the queue-aware event path: per round, the engine now
     // additionally computes the pre-round forecast, writes per-arm

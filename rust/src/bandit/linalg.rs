@@ -315,6 +315,24 @@ pub fn confidence_batch(d: usize, a_inv: &[f64], xs: &[f64], out: &mut [f64]) {
     }
 }
 
+/// θ̂ = A⁻¹b for every slot: `out[i·d..(i+1)·d] = A_i⁻¹ b_i`.  The same
+/// `k_matvec` the scalar θ̂-cache refresh runs, swept once across the
+/// A⁻¹/b arenas — the materialization step of the arm-major select.
+pub fn theta_batch(d: usize, a_inv: &[f64], b: &[f64], out: &mut [f64]) {
+    let dd = d * d;
+    let n = out.len() / d;
+    assert_eq!(out.len(), n * d);
+    assert_eq!(a_inv.len(), n * dd);
+    assert_eq!(b.len(), n * d);
+    for ((ai, bi), o) in a_inv
+        .chunks_exact(dd)
+        .zip(b.chunks_exact(d))
+        .zip(out.chunks_exact_mut(d))
+    {
+        k_matvec(d, ai, bi, o);
+    }
+}
+
 /// Batched Sherman–Morrison update: slot i absorbs (xs[i], ys[i]).
 #[allow(clippy::too_many_arguments)]
 pub fn update_batch(
@@ -1074,5 +1092,29 @@ mod tests {
         assert_eq!(a_inv, st.a_inv.data);
         assert_eq!(b, st.b);
         assert_eq!(ops[0], st.ops_since_refresh());
+    }
+
+    #[test]
+    fn theta_batch_matches_per_slot_theta_into_bits() {
+        // The strided θ̂ materialization is the same k_matvec per slot.
+        let d = 7;
+        let n = 4;
+        let mut rng = Rng::new(53);
+        let mut states: Vec<RidgeState> = (0..n).map(|_| RidgeState::new(d, 0.5)).collect();
+        for st in &mut states {
+            for _ in 0..30 {
+                let x = random_vec(&mut rng, d);
+                st.update(&x, rng.uniform(0.0, 60.0));
+            }
+        }
+        let a_inv: Vec<f64> = states.iter().flat_map(|s| s.a_inv.data.clone()).collect();
+        let b: Vec<f64> = states.iter().flat_map(|s| s.b.clone()).collect();
+        let mut out = vec![0.0; n * d];
+        theta_batch(d, &a_inv, &b, &mut out);
+        let mut want = vec![0.0; d];
+        for (i, st) in states.iter().enumerate() {
+            st.theta_into(&mut want);
+            assert_eq!(&out[i * d..(i + 1) * d], &want[..], "slot {i}");
+        }
     }
 }

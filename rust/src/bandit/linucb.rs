@@ -273,6 +273,81 @@ impl LinUcb {
         self.core.resets
     }
 
+    // --- Arm-major batched-select driver (DESIGN.md §13) ---------------
+    //
+    // The fleet engine's batched select/observe phases decompose the
+    // scalar `select`/`observe` above into the same steps in the same
+    // order, but interleaved *across* sessions so the ridge math runs
+    // through the store's strided batch kernels.  Each method below is a
+    // thin window onto one step of the scalar path; sessions are
+    // independent, so any cross-session interleaving of these steps
+    // produces per-session bits identical to the scalar loop.
+
+    /// True when this learner's ridge state lives in the engine's SoA
+    /// store (slot == session index) — the eligibility test for the
+    /// arm-major batched select.
+    pub(crate) fn is_store_backed(&self) -> bool {
+        matches!(self.backing, Backing::Slot)
+    }
+
+    /// Step 1 of a batched select: [`Core::select_prelude`] with evicted
+    /// window entries *gathered* (for the shard's batched downdate)
+    /// instead of downdated inline.  Returns (evicted, warm-up arm).
+    pub(crate) fn batch_select_prelude(
+        &mut self,
+        t: usize,
+        p_max: usize,
+        evict: impl FnMut(&FeatureVector, f64),
+    ) -> (bool, Option<usize>) {
+        debug_assert!(self.is_store_backed(), "batched select drives store-backed learners");
+        self.core.select_prelude(t, p_max, evict)
+    }
+
+    /// Refresh the θ̂ cache from an externally materialized row of the
+    /// shard's θ̂ arena.  The arena row is the same `k_matvec` output the
+    /// scalar path writes into the cache directly, so the copy is
+    /// bit-identical to `ridge.theta_into(&mut theta_cache)`.
+    pub(crate) fn set_theta_cache(&mut self, theta: &[f64]) {
+        self.core.theta_cache.copy_from_slice(theta);
+    }
+
+    /// Per-frame score coefficients (confidence scale, effective α) for
+    /// the arm-major scoring sweep — the exact [`Core::score_arms`]
+    /// prologue arithmetic.
+    pub(crate) fn batch_score_params(&self, weight: f64, front_delays: &[f64]) -> (f64, f64) {
+        self.core.score_params(weight, front_delays)
+    }
+
+    /// Forced-exclusion argmin over a scratch-arena score row — the exact
+    /// [`Core::pick_from`] the scalar select runs on `self.scores`.
+    pub(crate) fn batch_pick(&self, t: usize, scores: &[f64], p_max: usize) -> usize {
+        self.core.pick_from(t, scores, p_max)
+    }
+
+    /// Step 1 of a batched observe: the drift check (and, on trigger, the
+    /// full inline reset + re-learn).  Returns true when the observation
+    /// was consumed; false means the caller owes the batched ridge update
+    /// followed by [`LinUcb::batch_observe_commit`].
+    pub(crate) fn batch_observe_prelude(
+        &mut self,
+        slot: &mut RidgeSlotMut<'_>,
+        x: &FeatureVector,
+        edge_delay_ms: f64,
+    ) -> bool {
+        self.core.observe_prelude(slot, x, edge_delay_ms)
+    }
+
+    /// Step 3 of a batched observe, after the batched update applied this
+    /// observation to the slot: counters, window history, θ̂ cache.
+    pub(crate) fn batch_observe_commit(
+        &mut self,
+        slot: &RidgeSlotMut<'_>,
+        x: &FeatureVector,
+        edge_delay_ms: f64,
+    ) {
+        self.core.observe_commit(slot, x, edge_delay_ms);
+    }
+
     #[cfg(test)]
     fn owned_ridge(&self) -> &RidgeState {
         match &self.backing {
@@ -299,18 +374,26 @@ impl Core {
         ridge.theta_into(&mut self.theta_cache);
     }
 
-    fn score_arms<R: RidgeBacking>(&mut self, ridge: &R, ctx: &FrameContext) {
-        // Allocation-free: θ̂ lands in the reused cache buffer.
-        ridge.theta_into(&mut self.theta_cache);
-        let l_t = if self.use_weights { ctx.weight } else { 0.0 };
+    /// The per-frame score coefficients: (confidence scale (1−L_t)⁺,
+    /// effective α).  Shared by the scalar [`Core::score_arms`] and the
+    /// engine's arm-major sweep so both compute identical bits.
+    fn score_params(&self, weight: f64, front_delays: &[f64]) -> (f64, f64) {
+        let l_t = if self.use_weights { weight } else { 0.0 };
         let conf_scale = (1.0 - l_t).max(0.0);
         let alpha = if self.auto_scale {
             // d_P^f (the known on-device delay) anchors the delay scale.
-            let scale = ctx.front_delays[ctx.max_partition()] / REF_SCALE_MS;
+            let scale = front_delays[front_delays.len() - 1] / REF_SCALE_MS;
             self.alpha * scale.max(1e-3)
         } else {
             self.alpha
         };
+        (conf_scale, alpha)
+    }
+
+    fn score_arms<R: RidgeBacking>(&mut self, ridge: &R, ctx: &FrameContext) {
+        // Allocation-free: θ̂ lands in the reused cache buffer.
+        ridge.theta_into(&mut self.theta_cache);
+        let (conf_scale, alpha) = self.score_params(ctx.weight, ctx.front_delays);
         self.scores.clear();
         for (p, x) in ctx.contexts.iter().enumerate() {
             let pred = dot(&self.theta_cache, x);
@@ -325,52 +408,85 @@ impl Core {
         }
     }
 
-    fn select<R: RidgeBacking>(&mut self, ridge: &mut R, ctx: &FrameContext) -> usize {
-        let p_max = ctx.max_partition();
-        self.current_frame = ctx.t;
+    /// Ridge-free prologue of [`Core::select`]: stamp the frame, pop
+    /// expired window entries (handing each to `evict` — the scalar path
+    /// downdates inline, the arm-major path gathers them for the shard's
+    /// batched downdate), and claim the warm-up arm if the sweep is still
+    /// running.  Returns (evicted anything, warm-up arm).
+    fn select_prelude(
+        &mut self,
+        t: usize,
+        p_max: usize,
+        mut evict: impl FnMut(&FeatureVector, f64),
+    ) -> (bool, Option<usize>) {
+        self.current_frame = t;
         // Frame-aged eviction: drop observations older than the window.
+        let mut evicted = false;
         if let Some(w) = self.window {
-            let mut evicted = false;
             while let Some(&(x, y, t0)) = self.history.front() {
-                if t0 + w <= ctx.t {
-                    ridge.downdate(&x, y);
+                if t0 + w <= t {
+                    evict(&x, y);
                     self.history.pop_front();
                     evicted = true;
                 } else {
                     break;
                 }
             }
-            if evicted {
-                // Keep the θ̂ cache in lockstep with the model even when
-                // the warm-up branch below returns before scoring.
-                ridge.theta_into(&mut self.theta_cache);
-            }
         }
         // Warm-up sweep: sample every off-device arm once, in order.
+        let mut warmup = None;
         if let Some(next) = self.warmup_next {
             if next < p_max {
                 self.warmup_next = Some(next + 1);
-                return next;
+                warmup = Some(next);
+            } else {
+                self.warmup_next = None;
             }
-            self.warmup_next = None;
         }
-        self.score_arms(&*ridge, ctx);
-        let exclude_mo = self
-            .forced
-            .as_ref()
-            .map(|f| f.is_forced(ctx.t))
-            .unwrap_or(false);
+        (evicted, warmup)
+    }
+
+    /// Forced-exclusion argmin over an externally held score row (the
+    /// scalar path passes `self.scores`; the arm-major path passes its
+    /// scratch-arena row).  First-on-ties, like the original loop.
+    fn pick_from(&self, t: usize, scores: &[f64], p_max: usize) -> usize {
+        let exclude_mo = self.forced.as_ref().map(|f| f.is_forced(t)).unwrap_or(false);
         let limit = if exclude_mo { p_max } else { p_max + 1 };
         let mut best = 0;
         for p in 1..limit {
-            if self.scores[p] < self.scores[best] {
+            if scores[p] < scores[best] {
                 best = p;
             }
         }
         best
     }
 
-    fn observe<R: RidgeBacking>(&mut self, ridge: &mut R, x: &FeatureVector, edge_delay_ms: f64) {
+    fn select<R: RidgeBacking>(&mut self, ridge: &mut R, ctx: &FrameContext) -> usize {
+        let p_max = ctx.max_partition();
+        let (evicted, warmup) = self.select_prelude(ctx.t, p_max, |x, y| ridge.downdate(x, y));
+        if evicted {
+            // Keep the θ̂ cache in lockstep with the model even when the
+            // warm-up branch below returns before scoring.
+            ridge.theta_into(&mut self.theta_cache);
+        }
+        if let Some(next) = warmup {
+            return next;
+        }
+        self.score_arms(&*ridge, ctx);
+        self.pick_from(ctx.t, &self.scores, p_max)
+    }
+
+    /// Drift-check prologue of [`Core::observe`].  Returns true when the
+    /// observation was fully consumed by a drift reset (the ridge already
+    /// re-learned it); false means the caller still owes the ridge update
+    /// (inline for the scalar path, batched for the arm-major path)
+    /// followed by [`Core::observe_commit`].
+    fn observe_prelude<R: RidgeBacking>(
+        &mut self,
+        ridge: &mut R,
+        x: &FeatureVector,
+        edge_delay_ms: f64,
+    ) -> bool {
         // Drift check BEFORE the update: how wrong was the current model
         // about this observation?  `predict` is the allocation-free
         // bᵀA⁻¹x form of dot(θ̂, x).
@@ -392,16 +508,29 @@ impl Core {
                     ridge.update(x, edge_delay_ms);
                     self.n_obs = 1;
                     ridge.theta_into(&mut self.theta_cache);
-                    return;
+                    return true;
                 }
             }
         }
-        ridge.update(x, edge_delay_ms);
+        false
+    }
+
+    /// Bookkeeping epilogue of [`Core::observe`], after the ridge update
+    /// has been applied: observation count, window history, θ̂ cache.
+    fn observe_commit<R: RidgeBacking>(&mut self, ridge: &R, x: &FeatureVector, edge_delay_ms: f64) {
         self.n_obs += 1;
         if self.window.is_some() {
             self.history.push_back((*x, edge_delay_ms, self.current_frame));
         }
         ridge.theta_into(&mut self.theta_cache);
+    }
+
+    fn observe<R: RidgeBacking>(&mut self, ridge: &mut R, x: &FeatureVector, edge_delay_ms: f64) {
+        if self.observe_prelude(ridge, x, edge_delay_ms) {
+            return;
+        }
+        ridge.update(x, edge_delay_ms);
+        self.observe_commit(&*ridge, x, edge_delay_ms);
     }
 
     fn snapshot(&self, ridge_a: Option<Vec<f64>>, ridge_b: Option<Vec<f64>>) -> PolicySnapshot {
@@ -481,6 +610,15 @@ impl Policy for LinUcb {
     fn release_slot(&mut self, slot: RidgeSlot<'_>) {
         if matches!(self.backing, Backing::Slot) {
             self.backing = Backing::Owned(slot.to_ridge_state());
+        }
+    }
+
+    fn as_batched(&mut self) -> Option<&mut LinUcb> {
+        match self.backing {
+            Backing::Slot => Some(self),
+            // Owned state (custom-d learner that refused its slot): the
+            // engine must keep driving it through the scalar `*_in` path.
+            Backing::Owned(_) => None,
         }
     }
 

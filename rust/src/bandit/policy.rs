@@ -161,6 +161,17 @@ pub trait Policy: Send {
     fn snapshot_in(&self, _slot: Option<RidgeSlot<'_>>) -> PolicySnapshot {
         self.snapshot()
     }
+
+    /// Downcast hook for the engine's arm-major batched select
+    /// (DESIGN.md §13): a LinUCB-family learner whose ridge state is
+    /// *currently store-backed* returns itself, telling the engine it may
+    /// drive this session through the batched store kernels.  Everything
+    /// else (baselines, Neurosurgeon, a learner that refused its slot)
+    /// returns `None` and stays on the scalar `select_in`/`observe_in`
+    /// fallback inside the same shard.
+    fn as_batched(&mut self) -> Option<&mut super::linucb::LinUcb> {
+        None
+    }
 }
 
 /// Pure Edge Offloading: always p = 0.

@@ -213,6 +213,10 @@ pub struct StoreSliceMut<'a> {
 }
 
 impl<'a> StoreSliceMut<'a> {
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -238,6 +242,57 @@ impl<'a> StoreSliceMut<'a> {
             rhs: &mut self.rhs[v..v + d],
             col: &mut self.col[v..v + d],
             ops: &mut self.ops[j],
+        }
+    }
+
+    /// Read-only view of slot `j` within this window — the arm-major
+    /// select's scoring reads (quad forms, post-argmin predicts) go
+    /// through this without taking a mutable borrow.
+    pub fn slot_at(&self, j: usize) -> RidgeSlot<'_> {
+        assert!(j < self.len, "slot {j} out of window (len {})", self.len);
+        let d = self.d;
+        let dd = d * d;
+        RidgeSlot {
+            d,
+            a: &self.a[j * dd..(j + 1) * dd],
+            a_inv: &self.a_inv[j * dd..(j + 1) * dd],
+            b: &self.b[j * d..(j + 1) * d],
+            ops: self.ops[j],
+        }
+    }
+
+    /// Materialize θ̂ = A⁻¹b for **every** slot in this window into a
+    /// contiguous arena (`out[j·d..(j+1)·d]` = slot j's θ̂) — one strided
+    /// sweep over the window's A⁻¹/b arenas via [`linalg::theta_batch`].
+    /// Same `k_matvec` per slot as the scalar θ̂-cache refresh, so the
+    /// arena rows are bit-identical to what the scalar path caches.
+    pub fn theta_batch_into(&self, out: &mut [f64]) {
+        linalg::theta_batch(self.d, self.a_inv, self.b, out);
+    }
+
+    /// Batched Sherman–Morrison over an index subset of this window:
+    /// slot `idx[i]` absorbs `(xs[i·d..(i+1)·d], ys[i])`, in list order —
+    /// the same `k_update` kernel per entry as `slot_mut(j).update(..)`,
+    /// applied as one forward walk over the window's arenas.
+    pub fn update_batch_at(&mut self, idx: &[usize], xs: &[f64], ys: &[f64]) {
+        assert_eq!(xs.len(), idx.len() * self.d);
+        assert_eq!(ys.len(), idx.len());
+        let d = self.d;
+        for (i, &j) in idx.iter().enumerate() {
+            self.slot_mut(j).update(&xs[i * d..(i + 1) * d], ys[i]);
+        }
+    }
+
+    /// Batched negative-sign Sherman–Morrison over an index subset:
+    /// slot `idx[i]` sheds `(xs[i·d..(i+1)·d], ys[i])`, in list order
+    /// (repeats allowed — a windowed learner can evict several frames in
+    /// one round; list order preserves its per-slot downdate order).
+    pub fn downdate_batch_at(&mut self, idx: &[usize], xs: &[f64], ys: &[f64]) {
+        assert_eq!(xs.len(), idx.len() * self.d);
+        assert_eq!(ys.len(), idx.len());
+        let d = self.d;
+        for (i, &j) in idx.iter().enumerate() {
+            self.slot_mut(j).downdate(&xs[i * d..(i + 1) * d], ys[i]);
         }
     }
 }
@@ -363,6 +418,25 @@ impl PolicyStore {
             rhs: &mut self.rhs[v..v + d],
             col: &mut self.col[v..v + d],
             ops: &mut self.ops[i],
+        }
+    }
+
+    /// The whole store as one window — the workers=1 arm-major select
+    /// path takes this instead of [`PolicyStore::shard_slices`] so the
+    /// inline and pooled shard code drive the same batched entry points
+    /// (and this allocates nothing, unlike the shard vector).
+    pub fn as_slice_mut(&mut self) -> StoreSliceMut<'_> {
+        StoreSliceMut {
+            d: self.d,
+            len: self.len,
+            a: &mut self.a,
+            a_inv: &mut self.a_inv,
+            b: &mut self.b,
+            scratch: &mut self.scratch,
+            chol: &mut self.chol,
+            rhs: &mut self.rhs,
+            col: &mut self.col,
+            ops: &mut self.ops,
         }
     }
 
@@ -619,6 +693,75 @@ mod tests {
             assert_eq!(out_a[i], mirror.slot(i).predict(&probe[i * d..(i + 1) * d]));
             assert_eq!(store.slot(i).a_data(), mirror.slot(i).a_data());
             assert_eq!(store.slot(i).b_data(), mirror.slot(i).b_data());
+        }
+    }
+
+    #[test]
+    fn indexed_window_batches_match_per_slot_calls() {
+        // The arm-major select/observe building blocks — indexed
+        // update/downdate and the θ̂ arena — are bit-identical to driving
+        // each slot through its scalar RidgeSlotMut methods.
+        let d = 9;
+        let n = 6;
+        let mut rng = Rng::new(29);
+        let mut store = PolicyStore::new(d);
+        let mut mirror = PolicyStore::new(d);
+        for i in 0..n {
+            store.push_slot();
+            mirror.push_slot();
+            store.slot_mut(i).reset(0.25);
+            mirror.slot_mut(i).reset(0.25);
+        }
+        let mut history: Vec<(usize, Vec<f64>, f64)> = Vec::new();
+        for round in 0..60 {
+            // A sparse subset of slots observes this round (like a fleet
+            // where only offloading sessions feed back), some twice.
+            let mut idx = Vec::new();
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for i in 0..n {
+                for _ in 0..rng.below(3) {
+                    let x = random_x(&mut rng, d);
+                    let y = rng.uniform(0.0, 80.0);
+                    idx.push(i);
+                    xs.extend_from_slice(&x);
+                    ys.push(y);
+                    history.push((i, x, y));
+                }
+            }
+            let mut win = store.as_slice_mut();
+            win.update_batch_at(&idx, &xs, &ys);
+            for (k, &i) in idx.iter().enumerate() {
+                mirror.slot_mut(i).update(&xs[k * d..(k + 1) * d], ys[k]);
+            }
+            // Evict the oldest few through the indexed downdate.
+            if round % 4 == 3 && history.len() > 4 {
+                let (mut di, mut dx, mut dy) = (Vec::new(), Vec::new(), Vec::new());
+                for (i, x, y) in history.drain(..3) {
+                    di.push(i);
+                    dx.extend_from_slice(&x);
+                    dy.push(y);
+                }
+                store.as_slice_mut().downdate_batch_at(&di, &dx, &dy);
+                for (k, &i) in di.iter().enumerate() {
+                    mirror.slot_mut(i).downdate(&dx[k * d..(k + 1) * d], dy[k]);
+                }
+            }
+        }
+        let win = store.as_slice_mut();
+        let mut thetas = vec![0.0; n * d];
+        win.theta_batch_into(&mut thetas);
+        let mut want = vec![0.0; d];
+        for i in 0..n {
+            assert_eq!(win.slot_at(i).a_data(), mirror.slot(i).a_data(), "slot {i} A");
+            assert_eq!(win.slot_at(i).b_data(), mirror.slot(i).b_data(), "slot {i} b");
+            assert_eq!(
+                win.slot_at(i).ops_since_refresh(),
+                mirror.slot(i).ops_since_refresh(),
+                "slot {i} ops"
+            );
+            mirror.slot(i).theta_into(&mut want);
+            assert_eq!(&thetas[i * d..(i + 1) * d], &want[..], "slot {i} theta");
         }
     }
 }

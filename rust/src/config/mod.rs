@@ -83,6 +83,12 @@ pub struct Config {
     /// wait (0 = off, pinned bit-identical; > 0 requires an active
     /// `--queue-signal`).
     pub signal_stagger_ms: f64,
+    /// Arm-major batched select mode (`on` | `off` | `auto`).  `auto`
+    /// (the default) drives the batched store kernels whenever every
+    /// session in the engine is store-backed (μLinUCB fleets) and falls
+    /// back to the scalar per-session loop otherwise; the two paths are
+    /// pinned bit-identical, so this is purely a throughput knob.
+    pub select_batch: String,
     /// Engine replicas behind the cluster router (`ans fleet
     /// --replicas`).  1 = the plain single-engine fleet, byte-for-byte.
     pub replicas: usize,
@@ -138,6 +144,7 @@ impl Default for Config {
             event_clock: false,
             queue_signal: "off".into(),
             signal_stagger_ms: 0.0,
+            select_batch: "auto".into(),
             replicas: 1,
             placement: "static".into(),
             migrate_every: 50,
@@ -199,6 +206,7 @@ impl Config {
                 "event_clock" => self.event_clock = val.as_bool()?,
                 "queue_signal" => self.queue_signal = val.as_str()?.to_string(),
                 "signal_stagger_ms" => self.signal_stagger_ms = val.as_f64()?,
+                "select_batch" => self.select_batch = val.as_str()?.to_string(),
                 "replicas" => self.replicas = val.as_usize()?,
                 "placement" => self.placement = val.as_str()?.to_string(),
                 "migrate_every" => self.migrate_every = val.as_usize()?,
@@ -262,6 +270,9 @@ impl Config {
             self.queue_signal = v.to_string();
         }
         self.signal_stagger_ms = args.f64_or("signal-stagger", self.signal_stagger_ms)?;
+        if let Some(v) = args.get("select-batch") {
+            self.select_batch = v.to_string();
+        }
         self.replicas = args.usize_or("replicas", self.replicas)?;
         if let Some(v) = args.get("placement") {
             self.placement = v.to_string();
@@ -366,6 +377,11 @@ impl Config {
                  add --queue-signal wait|full"
             );
         }
+        anyhow::ensure!(
+            crate::coordinator::SelectBatch::by_name(&self.select_batch).is_some(),
+            "unknown select-batch `{}` — valid modes: on, off, auto",
+            self.select_batch
+        );
         anyhow::ensure!(self.replicas >= 1, "replicas must be ≥ 1");
         anyhow::ensure!(
             self.replicas <= 64,
@@ -724,6 +740,26 @@ mod tests {
         assert_eq!(cfg.trace_capacity, 1024);
         assert_eq!(cfg.metrics_every, 50);
         assert!(Config::from_args(&args("fleet --trace-capacity 0")).is_err());
+    }
+
+    #[test]
+    fn select_batch_knob_parses_and_validates() {
+        use crate::coordinator::SelectBatch;
+        // Default: auto — batched whenever the whole fleet is store-backed.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert_eq!(cfg.select_batch, "auto");
+        assert!(matches!(
+            SelectBatch::by_name(&cfg.select_batch),
+            Some(SelectBatch::Auto)
+        ));
+        let cfg = Config::from_args(&args("fleet --select-batch on")).unwrap();
+        assert!(matches!(SelectBatch::by_name(&cfg.select_batch), Some(SelectBatch::On)));
+        let cfg = Config::from_args(&args("fleet --select-batch off")).unwrap();
+        assert!(matches!(SelectBatch::by_name(&cfg.select_batch), Some(SelectBatch::Off)));
+        // Bad values rejected with the valid list in the message.
+        let err = Config::from_args(&args("fleet --select-batch sometimes")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("on") && msg.contains("auto"), "{msg}");
     }
 
     #[test]

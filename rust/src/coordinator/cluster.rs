@@ -501,6 +501,17 @@ impl Cluster {
         } else {
             self.cfg.engine.scheduler.policy.name().to_string()
         };
+        // The cluster is "on" only when every replica actually drives the
+        // arm-major path (a single mixed replica falls back per-shard).
+        let select_batch = if self
+            .replicas
+            .iter()
+            .all(|r| r.engine.select_batch_effective() == "on")
+        {
+            "on".to_string()
+        } else {
+            "off".to_string()
+        };
         let serve_ms = self.serve_wall_ms;
         let frames_per_sec = if serve_ms > 0.0 {
             aggregate.frames as f64 / (serve_ms / 1e3)
@@ -520,6 +531,7 @@ impl Cluster {
             peak_offloaders,
             peak_contention_factor: self.cfg.engine.contention.factor(peak_replica_k),
             scheduler,
+            select_batch,
             p95_queue_wait_ms: percentile(&queue_waits, 0.95),
             workers: self.cfg.engine.workers.max(1),
             serve_ms,

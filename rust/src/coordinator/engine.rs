@@ -58,7 +58,9 @@
 use super::metrics::{FleetSummary, FrameRecord, Metrics, Summary};
 use super::pool::{shard_len, WorkerPool};
 use crate::bandit::policy::argmin;
-use crate::bandit::{FrameContext, Policy, PolicySnapshot, PolicyStore, Privileged, RidgeSlotMut};
+use crate::bandit::{
+    FrameContext, Policy, PolicySnapshot, PolicyStore, Privileged, RidgeSlotMut, StoreSliceMut,
+};
 use crate::config::Config;
 use crate::edge::{
     EdgeEstimate, EdgeJob, EdgeScheduler, EventQueue, Outcome, QueueSignal, QueueStats, Scheduled,
@@ -299,6 +301,55 @@ pub(crate) fn select_one(
     round: &RoundInfo,
     session_id: usize,
 ) -> Decision {
+    let (is_key, weight) = prep_select(
+        env,
+        source,
+        front,
+        contexts,
+        expected,
+        waits,
+        t,
+        concurrent_estimate,
+        contention,
+        round,
+        session_id,
+    );
+    let queue_wait_ms: &[f64] = if round.signal.is_off() { &[] } else { waits };
+    decide(
+        policy,
+        slot,
+        t,
+        is_key,
+        weight,
+        front,
+        contexts,
+        env.current_rate_mbps(),
+        Some(&*expected),
+        queue_wait_ms,
+    )
+}
+
+/// Everything in [`select_one`] *except* the policy decision: advance the
+/// environment and frame source, fill the expected totals and per-arm
+/// forecast waits, and (under [`QueueSignal::Full`]) write the queue
+/// features into the context vectors.  Returns `(is_key, weight)` for the
+/// frame.  The arm-major batched select runs this prep per session, then
+/// replaces the scalar `decide` with the shard-wide batched scoring sweep
+/// — same inputs, same bits (DESIGN.md §13).
+#[allow(clippy::too_many_arguments)]
+fn prep_select(
+    env: &mut Environment,
+    source: &mut FrameSource,
+    front: &[f64],
+    contexts: &mut [FeatureVector],
+    expected: &mut [f64],
+    waits: &mut [f64],
+    t: usize,
+    concurrent_estimate: usize,
+    contention: &Contention,
+    round: &RoundInfo,
+    session_id: usize,
+) -> (bool, f64) {
     env.tick(t);
     if round.signal.is_off() {
         env.set_contention_factor(contention.factor(concurrent_estimate));
@@ -306,18 +357,7 @@ pub(crate) fn select_one(
         for (p, v) in expected.iter_mut().enumerate() {
             *v = env.expected_total(p);
         }
-        return decide(
-            policy,
-            slot,
-            t,
-            is_key,
-            weight,
-            front,
-            contexts,
-            env.current_rate_mbps(),
-            Some(&*expected),
-            &[],
-        );
+        return (is_key, weight);
     }
     // Queue-aware select: contention reaches the policies through the
     // virtual-clock forecast, not a multiplicative factor.
@@ -352,18 +392,7 @@ pub(crate) fn select_one(
             x[QUEUE_LOAD_FEATURE] = est.amortization - 1.0;
         }
     }
-    decide(
-        policy,
-        slot,
-        t,
-        is_key,
-        weight,
-        front,
-        contexts,
-        rate,
-        Some(&*expected),
-        waits,
-    )
+    (is_key, weight)
 }
 
 /// How one frame's edge leg realizes (see [`realize_one`]).
@@ -379,6 +408,25 @@ pub(crate) enum EdgeLeg {
     /// a rejected offload) was resolved on the virtual clock; draw the
     /// session's noise on it.
     Event { mean_ms: f64, rejected: bool },
+}
+
+/// How [`realize_one`] delivers learner feedback for an offloaded frame.
+///
+/// The scalar path observes inline ([`Feedback::Observe`], through
+/// `Policy::observe_in`).  The arm-major batched observe phase instead
+/// *gathers* each session's `(x, d^e)` pair ([`Feedback::Defer`]) so the
+/// whole shard's ridge updates run through the store's batched kernels
+/// afterwards — in session order, so per-slot op order (and therefore
+/// every learner bit) is unchanged.  The feedback value handed to the
+/// sink is exactly what `observe_in` would have received; nothing else
+/// in [`realize_one`] reads policy state, so deferring cannot perturb
+/// the record (DESIGN.md §13).
+pub(crate) enum Feedback<'a> {
+    /// Feed the policy inline (the scalar path).
+    Observe,
+    /// Hand `(context, feedback_ms)` to the sink; the caller owes the
+    /// ridge update + commit.
+    Defer(&'a mut dyn FnMut(&FeatureVector, f64)),
 }
 
 /// Realize phase for one simulated session: apply the fleet's actual
@@ -421,6 +469,7 @@ pub(crate) fn realize_one(
     leg: EdgeLeg,
     round: &RoundInfo,
     session_id: usize,
+    feedback_mode: Feedback<'_>,
 ) {
     env.set_contention_factor(contention.factor(concurrent));
     for (p, v) in expected.iter_mut().enumerate() {
@@ -450,7 +499,10 @@ pub(crate) fn realize_one(
         } else {
             (realized_edge - queue_wait_ms).max(0.0)
         };
-        policy.observe_in(p, &contexts[p], feedback, slot);
+        match feedback_mode {
+            Feedback::Observe => policy.observe_in(p, &contexts[p], feedback, slot),
+            Feedback::Defer(sink) => sink(&contexts[p], feedback),
+        }
     }
     let oracle_p = argmin(expected);
     let (event_expected_ms, event_oracle_p, event_oracle_ms) = if round.event {
@@ -509,6 +561,41 @@ pub(crate) fn realize_one(
     });
 }
 
+/// Arm-major batched-select mode (`--select-batch`; DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectBatch {
+    /// Force the batched driver.  Mixed fleets still work: sessions whose
+    /// policy is not store-backed run the scalar fallback inside the
+    /// batched shard pass.
+    On,
+    /// Force the legacy scalar per-session path.
+    Off,
+    /// Batched exactly when every resident session is store-backed (the
+    /// default): an all-μLinUCB fleet gets the arm-major kernels, a
+    /// mixed or baseline fleet keeps the scalar loop.
+    Auto,
+}
+
+impl SelectBatch {
+    /// Parse a `--select-batch` value (config/CLI entry point).
+    pub fn by_name(name: &str) -> Option<SelectBatch> {
+        match name {
+            "on" => Some(SelectBatch::On),
+            "off" => Some(SelectBatch::Off),
+            "auto" => Some(SelectBatch::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectBatch::On => "on",
+            SelectBatch::Off => "off",
+            SelectBatch::Auto => "auto",
+        }
+    }
+}
+
 /// Engine knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -548,6 +635,14 @@ pub struct EngineConfig {
     /// forecast wait.  0 (the default) is pinned bit-identical to the
     /// unstaggered transcripts; > 0 requires an active queue signal.
     pub signal_stagger_ms: f64,
+    /// Arm-major batched select/observe (`--select-batch`; DESIGN.md
+    /// §13).  [`SelectBatch::Auto`] (the default) drives the shard
+    /// phases through the SoA store's batched kernels whenever every
+    /// resident session is store-backed, and falls back to the scalar
+    /// per-session loop otherwise.  Both paths are pinned bit-identical
+    /// at every worker count (`rust/tests/fleet.rs`), so the knob is a
+    /// pure performance escape hatch.
+    pub select_batch: SelectBatch,
     /// Structured event-trace ring capacity per shard (DESIGN.md §12).
     /// 0 (the default) disables tracing entirely — the engine holds no
     /// tracer and every emission site is one `Option` branch.  > 0
@@ -569,6 +664,7 @@ impl Default for EngineConfig {
             workers: 1,
             queue_signal: QueueSignal::Off,
             signal_stagger_ms: 0.0,
+            select_batch: SelectBatch::Auto,
             trace_capacity: 0,
         }
     }
@@ -597,6 +693,74 @@ struct StepScratch {
     rejected: Vec<bool>,
     outcomes: Vec<Option<Outcome>>,
     scheduled: Vec<Scheduled>,
+}
+
+/// Where one session stands inside the batched select passes.
+#[derive(Debug, Clone, Copy, Default)]
+enum Plan {
+    /// Decision already written (scalar fallback, warm-up, or final pick).
+    #[default]
+    Done,
+    /// Prep + prelude ran; the session still needs its θ̂ cache refreshed
+    /// and either the warm-up finalization or the scoring sweep.
+    Pending { is_key: bool, weight: f64, evicted: bool, warmup: Option<usize> },
+    /// Scoring coefficients fixed; the arm-major sweep fills this
+    /// session's score row, then the argmin pass decides.
+    Score { is_key: bool, weight: f64, conf_scale: f64, alpha: f64 },
+}
+
+/// Per-worker scratch arenas for the arm-major batched select/observe
+/// (DESIGN.md §13).  Pre-sized by [`Engine::reserve`] so the batched
+/// steady state allocates nothing — asserted by the hotpath bench's
+/// `alloc/engine_armmajor_steady_state` audit.
+#[derive(Default)]
+struct BatchScratch {
+    /// θ̂ per shard slot, materialized by the batched `k_matvec` sweep
+    /// (`per × d`, row per session).
+    thetas: Vec<f64>,
+    /// Arm-major score matrix (`per × max_arms`, row per session).
+    scores: Vec<f64>,
+    /// Per-session pass state.
+    plans: Vec<Plan>,
+    /// Gathered window evictions: slot index / flattened context /
+    /// feedback, in per-session eviction order (batched downdate input).
+    ev_j: Vec<usize>,
+    ev_x: Vec<f64>,
+    ev_y: Vec<f64>,
+    /// Gathered observe feedback, one entry max per session per round
+    /// (batched update input; drift-consumed entries are compacted out).
+    up_j: Vec<usize>,
+    up_x: Vec<f64>,
+    up_y: Vec<f64>,
+    /// Refresh/reset counters read before the deferred observes so the
+    /// trace pass can emit the same transitions as the scalar path.
+    ops_before: Vec<usize>,
+    resets_before: Vec<usize>,
+}
+
+impl BatchScratch {
+    /// Grow `v`'s capacity to at least `cap` (no-op once steady).
+    fn grow<T>(v: &mut Vec<T>, cap: usize) {
+        if v.capacity() < cap {
+            v.reserve(cap - v.len());
+        }
+    }
+
+    /// Pre-size for a shard of `per` sessions, ridge dimension `d`, and
+    /// at most `arms` arms per session.
+    fn reserve(&mut self, per: usize, d: usize, arms: usize) {
+        Self::grow(&mut self.thetas, per * d);
+        Self::grow(&mut self.scores, per * arms);
+        Self::grow(&mut self.plans, per);
+        Self::grow(&mut self.ev_j, per);
+        Self::grow(&mut self.ev_x, per * d);
+        Self::grow(&mut self.ev_y, per);
+        Self::grow(&mut self.up_j, per);
+        Self::grow(&mut self.up_x, per * d);
+        Self::grow(&mut self.up_y, per);
+        Self::grow(&mut self.ops_before, per);
+        Self::grow(&mut self.resets_before, per);
+    }
 }
 
 /// Select step for one session (advance env/source, ask the policy).
@@ -668,6 +832,7 @@ fn session_realize(
         leg.2,
         round,
         id,
+        Feedback::Observe,
     );
     if let Some(ring) = ring {
         let clock = round.capture_ms(t, id);
@@ -698,6 +863,343 @@ fn session_realize(
     }
 }
 
+/// Arm-major batched select over one shard (DESIGN.md §13): the scalar
+/// per-session loop decomposed into shard-wide passes so the ridge math
+/// runs through the store's strided batch kernels.
+///
+/// Pass structure (per-session op order is preserved, so every learner
+/// and transcript bit matches the scalar path exactly):
+///
+/// 1. per session: env/source prep, then the select prelude (window
+///    evictions *gathered* instead of downdated inline; warm-up claim).
+///    Non-store-backed sessions take the whole scalar `session_select`
+///    here and are done.
+/// 2. batched downdate of all gathered evictions (in gather order — each
+///    slot sees its own evictions in its own order, slots are disjoint),
+///    then one batched `k_matvec` sweep materializing every slot's θ̂.
+/// 3. per session: refresh the policy's θ̂ cache from its arena row
+///    (bit-identical to the scalar `theta_into`), finalize warm-up
+///    decisions, fix scoring coefficients for the rest.
+/// 4. the arm-major sweep: for each arm index, score it across all
+///    still-scoring sessions (same per-score arithmetic as the scalar
+///    `score_arms`, reading the θ̂ arena rows).
+/// 5. per session: forced-exclusion argmin over its score row, then the
+///    same post-pick prediction the scalar `decide` records.
+#[allow(clippy::too_many_arguments)]
+fn select_shard_batched(
+    sessions: &mut [Session],
+    decisions: &mut [Decision],
+    win: &mut StoreSliceMut<'_>,
+    batchable: &[bool],
+    sc: &mut BatchScratch,
+    t: usize,
+    k_estimate: usize,
+    contention: &Contention,
+    round: &RoundInfo,
+) {
+    let n = sessions.len();
+    let d = win.dim();
+    debug_assert_eq!(win.len(), n);
+    debug_assert_eq!(batchable.len(), n);
+    sc.plans.clear();
+    sc.plans.resize(n, Plan::Done);
+    sc.ev_j.clear();
+    sc.ev_x.clear();
+    sc.ev_y.clear();
+
+    // Pass 1: prep + prelude (or the full scalar path for fallbacks).
+    for j in 0..n {
+        if !batchable[j] {
+            let mut slot = win.slot_mut(j);
+            decisions[j] =
+                session_select(&mut sessions[j], Some(&mut slot), t, k_estimate, contention, round);
+            continue;
+        }
+        let s = &mut sessions[j];
+        let id = s.id;
+        let Session { policy, env, source, front, contexts, expected, waits, .. } = s;
+        let (is_key, weight) = prep_select(
+            env,
+            source,
+            front,
+            contexts,
+            expected,
+            waits,
+            t,
+            k_estimate,
+            contention,
+            round,
+            id,
+        );
+        let p_max = env.num_partitions();
+        let lu = policy.as_batched().expect("batchable sessions are store-backed LinUCB");
+        let (ev_j, ev_x, ev_y) = (&mut sc.ev_j, &mut sc.ev_x, &mut sc.ev_y);
+        let (evicted, warmup) = lu.batch_select_prelude(t, p_max, |x, y| {
+            ev_j.push(j);
+            ev_x.extend_from_slice(x);
+            ev_y.push(y);
+        });
+        sc.plans[j] = Plan::Pending { is_key, weight, evicted, warmup };
+    }
+
+    // Pass 2: expired window entries leave every slot at once, then one
+    // strided sweep materializes θ̂ for the whole shard.
+    if !sc.ev_j.is_empty() {
+        win.downdate_batch_at(&sc.ev_j, &sc.ev_x, &sc.ev_y);
+    }
+    sc.thetas.clear();
+    sc.thetas.resize(n * d, 0.0);
+    win.theta_batch_into(&mut sc.thetas);
+
+    // Pass 3: θ̂ caches, warm-up finalization, scoring coefficients.
+    let mut max_arms = 0;
+    for j in 0..n {
+        let Plan::Pending { is_key, weight, evicted, warmup } = sc.plans[j] else {
+            continue;
+        };
+        let s = &mut sessions[j];
+        let row = &sc.thetas[j * d..(j + 1) * d];
+        let p_max = s.env.num_partitions();
+        let lu = s.policy.as_batched().expect("batchable");
+        if let Some(arm) = warmup {
+            // The scalar path refreshes the cache on the warm-up return
+            // only when the prelude evicted something.
+            if evicted {
+                lu.set_theta_cache(row);
+            }
+            let wait = if round.signal.is_off() { 0.0 } else { s.waits[arm] };
+            let predicted_edge_ms = if arm == p_max {
+                None
+            } else {
+                Some(win.slot_at(j).predict(&s.contexts[arm]) + wait)
+            };
+            decisions[j] = Decision { p: arm, is_key, weight, predicted_edge_ms };
+            sc.plans[j] = Plan::Done;
+        } else {
+            lu.set_theta_cache(row);
+            let (conf_scale, alpha) = lu.batch_score_params(weight, &s.front);
+            sc.plans[j] = Plan::Score { is_key, weight, conf_scale, alpha };
+            max_arms = max_arms.max(s.front.len());
+        }
+    }
+
+    // Pass 4: the arm-major scoring sweep — same per-cell arithmetic as
+    // the scalar `score_arms`, iterated arm-outer so each arm index
+    // streams across the shard's contiguous θ̂/A⁻¹ arenas.
+    let stride = max_arms;
+    sc.scores.clear();
+    sc.scores.resize(n * stride, 0.0);
+    for p in 0..max_arms {
+        for j in 0..n {
+            let Plan::Score { conf_scale, alpha, .. } = sc.plans[j] else {
+                continue;
+            };
+            let s = &sessions[j];
+            if p >= s.front.len() {
+                continue;
+            }
+            let x = &s.contexts[p];
+            let wait = if round.signal.is_off() { 0.0 } else { s.waits[p] };
+            let pred = crate::bandit::linalg::dot(&sc.thetas[j * d..(j + 1) * d], x);
+            let width = (conf_scale * win.slot_at(j).confidence_sq(x)).max(0.0).sqrt();
+            sc.scores[j * stride + p] = s.front[p] + wait + pred - alpha * width;
+        }
+    }
+
+    // Pass 5: per-session argmin + the post-pick prediction.
+    for j in 0..n {
+        let Plan::Score { is_key, weight, .. } = sc.plans[j] else {
+            continue;
+        };
+        let s = &mut sessions[j];
+        let p_max = s.env.num_partitions();
+        let row = &sc.scores[j * stride..j * stride + p_max + 1];
+        let p = s
+            .policy
+            .as_batched()
+            .expect("batchable")
+            .batch_pick(t, row, p_max);
+        debug_assert!(p <= p_max);
+        let wait = if round.signal.is_off() { 0.0 } else { s.waits[p] };
+        let predicted_edge_ms = if p == p_max {
+            None
+        } else {
+            Some(win.slot_at(j).predict(&s.contexts[p]) + wait)
+        };
+        decisions[j] = Decision { p, is_key, weight, predicted_edge_ms };
+        sc.plans[j] = Plan::Done;
+    }
+}
+
+/// Arm-major batched observe over one shard (DESIGN.md §13): realize
+/// every frame with feedback *gathered*, drift-check each observation
+/// against its pre-update slot, push the survivors through the store's
+/// batched update, then commit bookkeeping — all in session order, so
+/// per-slot op order matches the scalar loop bit for bit.  Refresh/reset
+/// trace events are emitted in a final pass; [`Tracer::drain`] sorts
+/// canonically, so the drained trace is identical to the scalar path's.
+#[allow(clippy::too_many_arguments)]
+fn observe_shard_batched(
+    sessions: &mut [Session],
+    decisions: &[Decision],
+    legs: &[Leg],
+    win: &mut StoreSliceMut<'_>,
+    batchable: &[bool],
+    sc: &mut BatchScratch,
+    t: usize,
+    k: usize,
+    contention: &Contention,
+    round: &RoundInfo,
+    mut ring: Option<&mut TraceRing>,
+) {
+    let n = sessions.len();
+    let d = win.dim();
+    let watch = ring.is_some();
+    sc.up_j.clear();
+    sc.up_x.clear();
+    sc.up_y.clear();
+    sc.ops_before.clear();
+    sc.ops_before.resize(n, 0);
+    sc.resets_before.clear();
+    sc.resets_before.resize(n, 0);
+
+    // Pass 1: realize every frame; batchable sessions defer their
+    // feedback into the gather arrays (session order = gather order).
+    for j in 0..n {
+        if !batchable[j] {
+            let mut slot = win.slot_mut(j);
+            session_realize(
+                &mut sessions[j],
+                Some(&mut slot),
+                &decisions[j],
+                &legs[j],
+                t,
+                k,
+                contention,
+                round,
+                ring.as_deref_mut(),
+            );
+            continue;
+        }
+        if watch {
+            sc.ops_before[j] = win.slot_at(j).ops_since_refresh();
+            sc.resets_before[j] = sessions[j].policy.reset_count();
+        }
+        let s = &mut sessions[j];
+        let id = s.id;
+        let Session { policy, env, metrics, front, contexts, expected, .. } = s;
+        let (up_j, up_x, up_y) = (&mut sc.up_j, &mut sc.up_x, &mut sc.up_y);
+        let mut sink = |x: &FeatureVector, y: f64| {
+            up_j.push(j);
+            up_x.extend_from_slice(x);
+            up_y.push(y);
+        };
+        realize_one(
+            policy.as_mut(),
+            None,
+            env,
+            metrics,
+            front,
+            contexts,
+            expected,
+            &decisions[j],
+            t,
+            k,
+            contention,
+            legs[j].0,
+            legs[j].1,
+            legs[j].2,
+            round,
+            id,
+            Feedback::Defer(&mut sink),
+        );
+    }
+
+    // Pass 2: drift prelude per observation against its pre-update slot
+    // (exactly where the scalar observe checks).  Drift-consumed entries
+    // re-learned inline; survivors compact in place for the batched
+    // update.
+    let mut w = 0;
+    for i in 0..sc.up_j.len() {
+        let j = sc.up_j[i];
+        let y = sc.up_y[i];
+        let mut xv = [0.0f64; crate::models::CONTEXT_DIM];
+        xv.copy_from_slice(&sc.up_x[i * d..(i + 1) * d]);
+        let consumed = {
+            let mut slot = win.slot_mut(j);
+            sessions[j]
+                .policy
+                .as_batched()
+                .expect("batchable")
+                .batch_observe_prelude(&mut slot, &xv, y)
+        };
+        if consumed {
+            continue;
+        }
+        sc.up_j[w] = j;
+        sc.up_y[w] = y;
+        sc.up_x.copy_within(i * d..(i + 1) * d, w * d);
+        w += 1;
+    }
+    sc.up_j.truncate(w);
+    sc.up_y.truncate(w);
+    sc.up_x.truncate(w * d);
+
+    // Pass 3: one batched Sherman–Morrison update over the survivors.
+    if !sc.up_j.is_empty() {
+        win.update_batch_at(&sc.up_j, &sc.up_x, &sc.up_y);
+    }
+
+    // Pass 4: per-observation bookkeeping (counters, window history, θ̂
+    // cache) against the post-update slot, in the same session order.
+    for i in 0..sc.up_j.len() {
+        let j = sc.up_j[i];
+        let mut xv = [0.0f64; crate::models::CONTEXT_DIM];
+        xv.copy_from_slice(&sc.up_x[i * d..(i + 1) * d]);
+        let slot = win.slot_mut(j);
+        sessions[j]
+            .policy
+            .as_batched()
+            .expect("batchable")
+            .batch_observe_commit(&slot, &xv, sc.up_y[i]);
+    }
+
+    // Pass 5: refresh/reset trace transitions for the deferred sessions
+    // (the scalar path emits these inside `session_realize`; ring order
+    // within a worker differs, but the canonical drain sort makes the
+    // drained trace identical).
+    if let Some(ring) = ring {
+        for (j, s) in sessions.iter().enumerate() {
+            if !batchable[j] {
+                continue;
+            }
+            let clock = round.capture_ms(t, s.id);
+            let ops_after = win.slot_at(j).ops_since_refresh();
+            let resets_after = s.policy.reset_count();
+            if ops_after < sc.ops_before[j] && resets_after == sc.resets_before[j] {
+                ring.push(TraceEvent::new(
+                    EventKind::PolicyRefresh,
+                    t,
+                    Some(s.id),
+                    clock,
+                    sc.ops_before[j] as f64,
+                    0.0,
+                ));
+            }
+            if resets_after > sc.resets_before[j] {
+                ring.push(TraceEvent::new(
+                    EventKind::PolicyReset,
+                    t,
+                    Some(s.id),
+                    clock,
+                    resets_after as f64,
+                    0.0,
+                ));
+            }
+        }
+    }
+}
+
 /// Run the select phase across all sessions, sharded over the worker
 /// pool when one exists.  The phase is independent per session (each
 /// owns its policy, environment RNG, and frame source; its learner state
@@ -709,6 +1211,9 @@ fn select_phase(
     sessions: &mut [Session],
     store: &mut PolicyStore,
     decisions: &mut [Decision],
+    batchable: &[bool],
+    scratch: &mut [BatchScratch],
+    batch: bool,
     t: usize,
     k_estimate: usize,
     contention: Contention,
@@ -717,6 +1222,7 @@ fn select_phase(
 ) {
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), store.len());
+    debug_assert_eq!(sessions.len(), batchable.len());
     // Explicit empty-shard no-op: a replica holding zero sessions (or a
     // pool wider than the session list) must not rely on chunk-range
     // arithmetic producing nothing to iterate.
@@ -725,9 +1231,24 @@ fn select_phase(
     }
     let Some(pool) = pool else {
         let start = Instant::now();
-        for (i, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
-            let mut slot = store.slot_mut(i);
-            *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
+        if batch {
+            let mut win = store.as_slice_mut();
+            select_shard_batched(
+                sessions,
+                decisions,
+                &mut win,
+                batchable,
+                &mut scratch[0],
+                t,
+                k_estimate,
+                &contention,
+                &round,
+            );
+        } else {
+            for (i, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
+                let mut slot = store.slot_mut(i);
+                *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
+            }
         }
         timing[0] += start.elapsed().as_secs_f64() * 1e3;
         return;
@@ -742,17 +1263,33 @@ fn select_phase(
         .chunks_mut(per)
         .zip(decisions.chunks_mut(per))
         .zip(store.shard_slices(per))
+        .zip(batchable.chunks(per))
+        .zip(scratch.iter_mut())
         .zip(timing.iter_mut())
-        .map(|(((s, d), st), tm)| Mutex::new((s, d, st, tm)))
+        .map(|(((((s, d), st), bt), sc), tm)| Mutex::new((s, d, st, bt, sc, tm)))
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let start = Instant::now();
             let mut guard = shard.lock().expect("select shard lock");
-            let (sessions, decisions, store, tm) = &mut *guard;
-            for (j, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
-                let mut slot = store.slot_mut(j);
-                *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
+            let (sessions, decisions, store, batchable, sc, tm) = &mut *guard;
+            if batch {
+                select_shard_batched(
+                    &mut **sessions,
+                    &mut **decisions,
+                    store,
+                    batchable,
+                    &mut **sc,
+                    t,
+                    k_estimate,
+                    &contention,
+                    &round,
+                );
+            } else {
+                for (j, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
+                    let mut slot = store.slot_mut(j);
+                    *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
+                }
             }
             **tm += start.elapsed().as_secs_f64() * 1e3;
         }
@@ -770,6 +1307,9 @@ fn observe_phase(
     store: &mut PolicyStore,
     decisions: &[Decision],
     legs: &[Leg],
+    batchable: &[bool],
+    scratch: &mut [BatchScratch],
+    batch: bool,
     t: usize,
     k: usize,
     contention: Contention,
@@ -780,25 +1320,43 @@ fn observe_phase(
     debug_assert_eq!(sessions.len(), decisions.len());
     debug_assert_eq!(sessions.len(), legs.len());
     debug_assert_eq!(sessions.len(), store.len());
+    debug_assert_eq!(sessions.len(), batchable.len());
     if sessions.is_empty() {
         return;
     }
     let Some(pool) = pool else {
         let start = Instant::now();
         let mut ring0 = rings.and_then(|r| r.first_mut());
-        for (i, ((s, d), leg)) in sessions.iter_mut().zip(decisions).zip(legs).enumerate() {
-            let mut slot = store.slot_mut(i);
-            session_realize(
-                s,
-                Some(&mut slot),
-                d,
-                leg,
+        if batch {
+            let mut win = store.as_slice_mut();
+            observe_shard_batched(
+                sessions,
+                decisions,
+                legs,
+                &mut win,
+                batchable,
+                &mut scratch[0],
                 t,
                 k,
                 &contention,
                 &round,
-                ring0.as_deref_mut(),
+                ring0,
             );
+        } else {
+            for (i, ((s, d), leg)) in sessions.iter_mut().zip(decisions).zip(legs).enumerate() {
+                let mut slot = store.slot_mut(i);
+                session_realize(
+                    s,
+                    Some(&mut slot),
+                    d,
+                    leg,
+                    t,
+                    k,
+                    &contention,
+                    &round,
+                    ring0.as_deref_mut(),
+                );
+            }
         }
         timing[0] += start.elapsed().as_secs_f64() * 1e3;
         return;
@@ -816,30 +1374,50 @@ fn observe_phase(
         .chunks_mut(per)
         .zip(decisions.chunks(per).zip(legs.chunks(per)))
         .zip(store.shard_slices(per))
+        .zip(batchable.chunks(per))
+        .zip(scratch.iter_mut())
         .zip(ring_opts)
         .zip(timing.iter_mut())
-        .map(|((((s, (d, l)), st), ring), tm)| Mutex::new((s, d, l, st, ring, tm)))
+        .map(|((((((s, (d, l)), st), bt), sc), ring), tm)| {
+            Mutex::new((s, d, l, st, bt, sc, ring, tm))
+        })
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let start = Instant::now();
             let mut guard = shard.lock().expect("observe shard lock");
-            let (sessions, decisions, legs, store, ring, tm) = &mut *guard;
-            for (j, ((s, d), leg)) in
-                sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()).enumerate()
-            {
-                let mut slot = store.slot_mut(j);
-                session_realize(
-                    s,
-                    Some(&mut slot),
-                    d,
-                    leg,
+            let (sessions, decisions, legs, store, batchable, sc, ring, tm) = &mut *guard;
+            if batch {
+                observe_shard_batched(
+                    &mut **sessions,
+                    decisions,
+                    legs,
+                    store,
+                    batchable,
+                    &mut **sc,
                     t,
                     k,
                     &contention,
                     &round,
                     ring.as_deref_mut(),
                 );
+            } else {
+                for (j, ((s, d), leg)) in
+                    sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()).enumerate()
+                {
+                    let mut slot = store.slot_mut(j);
+                    session_realize(
+                        s,
+                        Some(&mut slot),
+                        d,
+                        leg,
+                        t,
+                        k,
+                        &contention,
+                        &round,
+                        ring.as_deref_mut(),
+                    );
+                }
             }
             **tm += start.elapsed().as_secs_f64() * 1e3;
         }
@@ -867,6 +1445,15 @@ pub struct Engine {
     pool: Option<WorkerPool>,
     /// Reused per-round buffers (allocation-free steady state).
     scratch: StepScratch,
+    /// Per-session batched-select eligibility, maintained at the same
+    /// index as `sessions`/`store`: true iff the policy is a
+    /// store-backed LinUCB ([`Policy::as_batched`]).  Drives
+    /// [`SelectBatch::Auto`] and the per-session fallback inside the
+    /// batched shard passes.
+    batchable: Vec<bool>,
+    /// Per-worker arm-major scratch arenas (DESIGN.md §13), pre-sized by
+    /// [`Engine::reserve`] so the batched steady state never allocates.
+    select_scratch: Vec<BatchScratch>,
     round: usize,
     /// Offload count of the previous round — the causal estimate every
     /// session selects under in the next round.
@@ -925,6 +1512,8 @@ impl Engine {
             scheduler,
             pool,
             scratch: StepScratch::default(),
+            batchable: Vec::new(),
+            select_scratch: (0..workers).map(|_| BatchScratch::default()).collect(),
             round: 0,
             offloaders_last: 0,
             offload_counts: Vec::new(),
@@ -946,6 +1535,7 @@ impl Engine {
         self.store.push_slot();
         let mut slot = self.store.slot_mut(id);
         session.policy.adopt_slot(&mut slot);
+        self.batchable.push(session.policy.as_batched().is_some());
         self.sessions.push(session);
         self.trace_membership(EventKind::SessionAttach, id);
         id
@@ -972,6 +1562,7 @@ impl Engine {
         self.store.insert_slot(pos);
         let mut slot = self.store.slot_mut(pos);
         session.policy.adopt_slot(&mut slot);
+        self.batchable.insert(pos, session.policy.as_batched().is_some());
         let id = session.id;
         self.sessions.insert(pos, session);
         self.trace_membership(EventKind::SessionAttach, id);
@@ -994,6 +1585,7 @@ impl Engine {
         // session is self-contained again (same bits, same refresh phase).
         session.policy.release_slot(self.store.slot(idx));
         self.store.remove_slot(idx);
+        self.batchable.remove(idx);
         self.trace_membership(EventKind::SessionEvict, id);
         session
     }
@@ -1065,6 +1657,29 @@ impl Engine {
         match self.scheduler.as_ref() {
             Some(s) => s.forecast(),
             None => EdgeEstimate::idle(),
+        }
+    }
+
+    /// Does the next round run the arm-major batched select/observe?
+    /// Resolves [`SelectBatch::Auto`] against the resident fleet.
+    fn batch_active(&self) -> bool {
+        match self.cfg.select_batch {
+            SelectBatch::Off => false,
+            SelectBatch::On => true,
+            SelectBatch::Auto => {
+                !self.sessions.is_empty() && self.batchable.iter().all(|&b| b)
+            }
+        }
+    }
+
+    /// The select mode the engine actually runs ("on"/"off") after
+    /// resolving [`SelectBatch::Auto`] — recorded in
+    /// [`FleetSummary::select_batch`] so bench JSONs are self-describing.
+    pub fn select_batch_effective(&self) -> &'static str {
+        if self.batch_active() {
+            "on"
+        } else {
+            "off"
         }
     }
 
@@ -1184,11 +1799,15 @@ impl Engine {
             n,
             Decision { p: 0, is_key: false, weight: 0.0, predicted_edge_ms: None },
         );
+        let batch = self.batch_active();
         select_phase(
             self.pool.as_ref(),
             &mut self.sessions,
             &mut self.store,
             &mut scratch.decisions,
+            &self.batchable,
+            &mut self.select_scratch,
+            batch,
             t,
             k_estimate,
             contention,
@@ -1303,12 +1922,16 @@ impl Engine {
         }
         self.phases.add(Phase::Realize, 0, realize_start.elapsed().as_secs_f64() * 1e3);
 
+        let batch = self.batch_active();
         observe_phase(
             self.pool.as_ref(),
             &mut self.sessions,
             &mut self.store,
             &scratch.decisions,
             &scratch.legs,
+            &self.batchable,
+            &mut self.select_scratch,
+            batch,
             t,
             k,
             contention,
@@ -1333,7 +1956,19 @@ impl Engine {
     fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch, round: RoundInfo) {
         let contention = self.cfg.contention;
         let n = self.sessions.len();
-        let Engine { sessions, store, ingress, scheduler, pool, tracer, phases, .. } = self;
+        let batch = self.batch_active();
+        let Engine {
+            sessions,
+            store,
+            ingress,
+            scheduler,
+            pool,
+            tracer,
+            phases,
+            batchable,
+            select_scratch,
+            ..
+        } = self;
         let scheduler = scheduler.as_mut().expect("event path has a scheduler");
         let deadline = scheduler.cfg.deadline_ms;
         // Main-thread event ring for the shared-state resolution below
@@ -1524,6 +2159,9 @@ impl Engine {
             store,
             &scratch.decisions,
             &scratch.legs,
+            batchable,
+            select_scratch,
+            batch,
             t,
             k,
             contention,
@@ -1541,6 +2179,21 @@ impl Engine {
             s.metrics.reserve(rounds);
         }
         self.offload_counts.reserve(rounds);
+        // Pre-size the arm-major scratch arenas so the batched phases
+        // never allocate in steady state (the hotpath bench's
+        // `alloc/engine_armmajor_steady_state` audit).  Windowed-policy
+        // eviction gathers can still grow past `per` entries in a burst;
+        // the standard fleet (μLinUCB, no window) never does.
+        let n = self.sessions.len();
+        if n > 0 {
+            let per = shard_len(n, self.cfg.workers.max(1));
+            let d = self.store.dim();
+            let arms =
+                self.sessions.iter().map(|s| s.env.num_partitions() + 1).max().unwrap_or(0);
+            for sc in &mut self.select_scratch {
+                sc.reserve(per, d, arms);
+            }
+        }
     }
 
     /// Serve `rounds` frames per session, accumulating wall-clock time
@@ -1590,6 +2243,7 @@ impl Engine {
             peak_offloaders,
             peak_contention_factor: self.cfg.contention.factor(peak_offloaders),
             scheduler,
+            select_batch: self.select_batch_effective().to_string(),
             p95_queue_wait_ms: percentile(&queue_waits, 0.95),
             workers: self.cfg.workers.max(1),
             serve_ms,
@@ -1636,6 +2290,7 @@ pub(crate) fn engine_config_from(cfg: &Config) -> EngineConfig {
         workers: cfg.workers,
         queue_signal: cfg.queue_signal_mode(),
         signal_stagger_ms: cfg.signal_stagger_ms,
+        select_batch: SelectBatch::by_name(&cfg.select_batch).expect("validated select-batch"),
         trace_capacity: if cfg.trace.is_empty() { 0 } else { cfg.trace_capacity },
     }
 }

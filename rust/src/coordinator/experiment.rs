@@ -69,6 +69,7 @@ pub fn run(
             engine::EdgeLeg::Lockstep,
             &round,
             0,
+            engine::Feedback::Observe,
         );
     }
     metrics

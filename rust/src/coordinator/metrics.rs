@@ -343,6 +343,10 @@ pub struct FleetSummary {
     /// Admission policy name (`fifo` is the PR 1 lockstep when the
     /// event clock is off).
     pub scheduler: String,
+    /// Effective arm-major select mode the engine served with ("on" /
+    /// "off"), after resolving `--select-batch auto` against the fleet —
+    /// bench JSONs are self-describing (DESIGN.md §13).
+    pub select_batch: String,
     /// p95 of the shared-edge queueing delay over every served frame.
     pub p95_queue_wait_ms: f64,
     /// Worker-pool size the engine served with (1 = single-threaded).
@@ -396,6 +400,7 @@ impl FleetSummary {
     pub fn to_json(&self) -> String {
         obj(vec![
             ("scheduler", Json::from(self.scheduler.as_str())),
+            ("select_batch", Json::from(self.select_batch.as_str())),
             ("sessions", Json::from(self.per_session.len())),
             ("workers", Json::from(self.workers)),
             ("serve_ms", jnum(self.serve_ms)),
@@ -622,6 +627,7 @@ mod tests {
             peak_offloaders: 2,
             peak_contention_factor: 1.5,
             scheduler: "fifo".to_string(),
+            select_batch: "off".to_string(),
             p95_queue_wait_ms: 0.0,
             workers: 1,
             serve_ms: 0.0,
@@ -672,6 +678,7 @@ mod tests {
             peak_offloaders: 2,
             peak_contention_factor: 1.5,
             scheduler: "edf".to_string(),
+            select_batch: "on".to_string(),
             p95_queue_wait_ms: 1.25,
             workers: 4,
             serve_ms: 125.0,
@@ -717,6 +724,7 @@ mod tests {
         // The fields the EXPERIMENTS.md recipes consume.
         for key in [
             "\"scheduler\":\"edf\"",
+            "\"select_batch\":\"on\"",
             "\"workers\":4",
             "\"serve_ms\":125",
             "\"frames_per_sec\":16",

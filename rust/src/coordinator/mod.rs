@@ -29,7 +29,7 @@ pub mod pipeline;
 pub mod pool;
 
 pub use cluster::{cluster_from_config, Cluster, ClusterConfig, Placement, Replica, ReplicaSpec};
-pub use engine::{Engine, EngineConfig, FrameSource, Session};
+pub use engine::{Engine, EngineConfig, FrameSource, SelectBatch, Session};
 pub use experiment::{quick_run, run};
 pub use metrics::{FleetSummary, FrameRecord, Metrics, ReplicaSummary, Summary};
 pub use pipeline::{serve, PipelineConfig, ServingReport};

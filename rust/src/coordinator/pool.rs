@@ -21,6 +21,14 @@
 //! ([`PolicyStore::shard_slices`](crate::bandit::PolicyStore)).  Slot
 //! index == session index inside a shard, so each worker walks a
 //! contiguous window of both with no cross-shard aliasing.
+//!
+//! The arm-major batched select (DESIGN.md §13) rides the same tiling:
+//! under `--select-batch`, each worker runs the batched store kernels
+//! (theta refresh, update/downdate) over its *whole* contiguous store
+//! window and scores arm-major across its shard's sessions, instead of
+//! calling the scalar per-session path slot by slot.  The shard geometry
+//! is unchanged — only the loop order inside a shard differs — so the
+//! worker-count bit-identity pin carries over to the batched path.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -39,6 +39,11 @@ SUBCOMMANDS:
              --workers W shards sessions across a per-core worker pool
              (output is bit-identical at every worker count; throughput
              lands in the summary and --json artifact).
+             --select-batch on|off|auto drives the select/observe phases
+             through the arm-major batched store kernels (auto, the
+             default, batches whenever every session is store-backed);
+             batched and scalar paths are pinned bit-identical, and the
+             effective mode lands in the summary and --json artifact.
              Edge scheduler: --scheduler edf|wfair, --event-clock,
              --queue-capacity Q or --stagger MS switch on the
              event-driven edge queue; --batch-window MS, --max-batch B
@@ -428,11 +433,13 @@ fn print_fleet_footer(fs: &FleetSummary, cfg: &Config, deadline_ms: f64) {
         fs.aggregate.rejected_offloads,
     );
     println!(
-        "throughput: {:.0} frames/s over {:.1} ms wall ({} worker{})",
+        "throughput: {:.0} frames/s over {:.1} ms wall ({} worker{}, select-batch {} -> {})",
         fs.frames_per_sec,
         fs.serve_ms,
         fs.workers,
         if fs.workers == 1 { "" } else { "s" },
+        cfg.select_batch,
+        fs.select_batch,
     );
 }
 

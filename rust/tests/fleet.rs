@@ -817,3 +817,226 @@ fn trace_is_deterministic_across_worker_counts_and_free_of_side_effects() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Arm-major batched select (ISSUE 8): the batched store-kernel driver is
+// an *implementation* of the same per-session op order, so forcing it on
+// must not move one bit of anything observable — per-frame records,
+// learner state (A / b / θ̂ / counters), or the event trace — at any
+// worker count.  The scenario is queue-aware + traced + bounded-queue so
+// every select/observe side channel is in play.
+// ---------------------------------------------------------------------------
+#[test]
+fn arm_major_batched_select_is_bit_identical_to_the_scalar_path() {
+    use ans::coordinator::engine::SelectBatch;
+    use ans::edge::{AdmissionPolicy, QueueSignal, SchedulerConfig};
+
+    let rounds = 200;
+    let net = zoo::partnet();
+    let scheduler = || {
+        let mut sc = SchedulerConfig::event(AdmissionPolicy::Fifo);
+        sc.batch_window_ms = 6.0;
+        sc.max_batch = 4;
+        sc.queue_capacity = 2;
+        sc
+    };
+    let run = |workers: usize, mode: SelectBatch| {
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.25),
+            scheduler: scheduler(),
+            queue_signal: QueueSignal::Full,
+            workers,
+            trace_capacity: 65_536,
+            select_batch: mode,
+            ..Default::default()
+        });
+        for (i, env) in scenario::fleet(net.clone(), 8, 10.0, 90).into_iter().enumerate() {
+            eng.add_session(
+                mu_linucb(&net, rounds),
+                env,
+                FrameSource::video(900 + i as u64, 0.85, Weights::default_paper()),
+            );
+        }
+        eng.run(rounds);
+        eng
+    };
+
+    // Reference: the scalar per-session path, single worker.
+    let mut scalar = run(1, SelectBatch::Off);
+    assert_eq!(scalar.select_batch_effective(), "off");
+    assert_eq!(scalar.fleet_summary().select_batch, "off");
+    let scalar_events: Vec<_> =
+        scalar.drain_trace().into_iter().map(|e| e.sans_wall()).collect();
+    let scalar_snaps: Vec<_> = (0..8).map(|i| scalar.policy_snapshot(i)).collect();
+
+    for workers in [1usize, 2, 4] {
+        let mut batched = run(workers, SelectBatch::On);
+        assert_eq!(batched.select_batch_effective(), "on");
+        assert_eq!(batched.fleet_summary().select_batch, "on");
+        // Transcript pin.
+        for (i, (s, b)) in scalar.sessions().iter().zip(batched.sessions()).enumerate() {
+            assert_eq!(s.metrics.records.len(), b.metrics.records.len(), "s{i}");
+            for (l, w) in s.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.delay_ms.to_bits(),
+                    w.delay_ms.to_bits(),
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.predicted_edge_ms, w.predicted_edge_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.queue_wait_ms.to_bits(),
+                    w.queue_wait_ms.to_bits(),
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.batch_size, w.batch_size, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.event_expected_ms.to_bits(),
+                    w.event_expected_ms.to_bits(),
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(l.event_oracle_p, w.event_oracle_p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(l.deadline_miss, w.deadline_miss, "workers={workers} s{i} t={}", l.t);
+            }
+        }
+        // Learner-state pin: A, b, θ̂ and the counters, bit for bit.
+        for (i, l) in scalar_snaps.iter().enumerate() {
+            let b = batched.policy_snapshot(i);
+            assert_eq!(l.observations, b.observations, "workers={workers} s{i}");
+            assert_eq!(l.resets, b.resets, "workers={workers} s{i}");
+            assert_eq!(l.theta, b.theta, "workers={workers} s{i} θ̂ must match bit-for-bit");
+            assert_eq!(l.ridge_a, b.ridge_a, "workers={workers} s{i} ridge A must match");
+            assert_eq!(l.ridge_b, b.ridge_b, "workers={workers} s{i} ridge b must match");
+        }
+        // Trace pin: the batched driver emits the identical canonical
+        // event stream (modulo wall clock).
+        let events: Vec<_> = batched.drain_trace().into_iter().map(|e| e.sans_wall()).collect();
+        assert_eq!(
+            events.len(),
+            scalar_events.len(),
+            "workers={workers}: batched trace length must match scalar"
+        );
+        for (i, (a, b)) in scalar_events.iter().zip(&events).enumerate() {
+            assert_eq!(a, b, "workers={workers}: event #{i} diverges");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed fleets under `--select-batch on`: μLinUCB sessions ride the
+// batched kernels while Neurosurgeon sessions take the scalar fallback
+// *inside the same shard pass* — and the interleaving must still be
+// unobservable.  `auto` on the same fleet resolves to the scalar path.
+// ---------------------------------------------------------------------------
+#[test]
+fn forced_batched_mixed_fleet_uses_the_fallback_and_stays_pinned() {
+    use ans::coordinator::engine::SelectBatch;
+
+    let rounds = 150;
+    let net = zoo::vgg16();
+    let run = |workers: usize, mode: SelectBatch| {
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.5),
+            ingress_mbps: Some(200.0),
+            workers,
+            select_batch: mode,
+            ..Default::default()
+        });
+        for (i, env) in scenario::fleet(net.clone(), 6, 16.0, 77).into_iter().enumerate() {
+            let policy: Box<dyn Policy> = if i % 2 == 0 {
+                mu_linucb(&net, rounds)
+            } else {
+                bandit::by_name("neurosurgeon", &net, &DEVICE_MAXN, &EDGE_GPU, rounds, None, None)
+                    .unwrap()
+            };
+            eng.add_session(
+                policy,
+                env,
+                FrameSource::video(700 + i as u64, 0.85, Weights::default_paper()),
+            );
+        }
+        eng.run(rounds);
+        eng
+    };
+
+    // Auto on a mixed fleet resolves to the scalar path.
+    let auto = run(1, SelectBatch::Auto);
+    assert_eq!(auto.select_batch_effective(), "off");
+    assert_eq!(auto.fleet_summary().select_batch, "off");
+
+    for workers in [1usize, 2, 4] {
+        let forced = run(workers, SelectBatch::On);
+        assert_eq!(forced.select_batch_effective(), "on");
+        assert_eq!(forced.fleet_summary().select_batch, "on");
+        for (i, (a, f)) in auto.sessions().iter().zip(forced.sessions()).enumerate() {
+            assert_eq!(a.metrics.records.len(), f.metrics.records.len(), "s{i}");
+            for (l, w) in a.metrics.records.iter().zip(&f.metrics.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{i} t={}", l.t);
+                assert_eq!(
+                    l.delay_ms.to_bits(),
+                    w.delay_ms.to_bits(),
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.predicted_edge_ms, w.predicted_edge_ms,
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.queue_wait_ms.to_bits(),
+                    w.queue_wait_ms.to_bits(),
+                    "workers={workers} s{i} t={}",
+                    l.t
+                );
+            }
+        }
+        for i in 0..6 {
+            let l = auto.policy_snapshot(i);
+            let w = forced.policy_snapshot(i);
+            assert_eq!(l.observations, w.observations, "workers={workers} s{i}");
+            assert_eq!(l.theta, w.theta, "workers={workers} s{i}");
+            assert_eq!(l.ridge_a, w.ridge_a, "workers={workers} s{i}");
+            assert_eq!(l.ridge_b, w.ridge_b, "workers={workers} s{i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `auto` tracks fleet composition across membership changes: a pure
+// μLinUCB fleet batches, adding any non-store-backed session drops to
+// the scalar path, and removing it restores batching.
+// ---------------------------------------------------------------------------
+#[test]
+fn auto_select_batch_tracks_fleet_composition() {
+    let net = zoo::vgg16();
+    let mut eng = Engine::new(EngineConfig::default());
+    assert_eq!(eng.select_batch_effective(), "off", "empty fleet must not batch");
+    for i in 0..3 {
+        eng.add_session(
+            mu_linucb(&net, 100),
+            Environment::simple(net.clone(), 12.0 + i as f64, 30 + i as u64),
+            FrameSource::uniform(),
+        );
+    }
+    assert_eq!(eng.select_batch_effective(), "on");
+    eng.add_session(
+        bandit::by_name("neurosurgeon", &net, &DEVICE_MAXN, &EDGE_GPU, 100, None, None).unwrap(),
+        Environment::simple(net.clone(), 20.0, 40),
+        FrameSource::uniform(),
+    );
+    assert_eq!(eng.select_batch_effective(), "off", "one scalar session disables auto");
+    let neuro_id = eng.sessions().last().unwrap().id;
+    eng.remove_session(neuro_id);
+    assert_eq!(eng.select_batch_effective(), "on", "removal restores batching");
+    // The mode is a pure observer: the mixed prefix still serves.
+    eng.run(20);
+    assert_eq!(eng.sessions()[0].metrics.records.len(), 20);
+}

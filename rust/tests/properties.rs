@@ -325,6 +325,77 @@ fn batched_store_ops_are_bit_identical_to_scalar_ridge_states() {
     }
 }
 
+#[test]
+fn armmajor_window_kernels_are_bit_identical_to_scalar_ridge_states() {
+    // The arm-major select phase (DESIGN.md §13) drives three window
+    // kernels over a contiguous store slice: `theta_batch_into` (strided
+    // θ̂ = A⁻¹b refresh for the whole shard), and the *gathered*
+    // `update_batch_at` / `downdate_batch_at` (only the sessions that
+    // actually observed / evicted this round, in session order).  Each
+    // must produce the exact bits of the scalar per-slot calls, for any
+    // randomized index subset — including the empty one and the
+    // 64-op Cholesky refresh crossing inside a gathered update.
+    const N: usize = 12;
+    const D: usize = 7;
+    let mut rng = Rng::new(0xA2A_0801);
+    let mut scalars: Vec<RidgeState> = (0..N).map(|_| RidgeState::new(D, 1.0)).collect();
+    let mut store = PolicyStore::with_capacity(D, N);
+    for st in &scalars {
+        store.push_slot();
+        store.slot_mut(store.len() - 1).load_from(st);
+    }
+
+    let mut history: Vec<(Vec<usize>, Vec<f64>, Vec<f64>)> = Vec::new();
+    let mut thetas = vec![0.0; N * D];
+    let mut theta_ref = vec![0.0; D];
+    for round in 0..600 {
+        let mut win = store.as_slice_mut();
+        let roll = rng.uniform(0.0, 1.0);
+        if roll < 0.25 && !history.is_empty() {
+            let k = (rng.uniform(0.0, history.len() as f64) as usize).min(history.len() - 1);
+            let (idx, xs, ys) = history.swap_remove(k);
+            for (i, &j) in idx.iter().enumerate() {
+                scalars[j].downdate(&xs[i * D..(i + 1) * D], ys[i]);
+            }
+            win.downdate_batch_at(&idx, &xs, &ys);
+        } else {
+            // A random subset of sessions observes this round (possibly
+            // none — the kernels must accept an empty gather).
+            let idx: Vec<usize> = (0..N).filter(|_| rng.uniform(0.0, 1.0) < 0.6).collect();
+            let mut xs = vec![0.0; idx.len() * D];
+            for v in xs.iter_mut() {
+                *v = rng.uniform(-2.0, 2.0);
+            }
+            let ys: Vec<f64> = idx.iter().map(|_| rng.uniform(0.0, 100.0)).collect();
+            for (i, &j) in idx.iter().enumerate() {
+                scalars[j].update(&xs[i * D..(i + 1) * D], ys[i]);
+            }
+            win.update_batch_at(&idx, &xs, &ys);
+            history.push((idx, xs, ys));
+        }
+
+        if round % 23 == 0 || round == 599 {
+            win.theta_batch_into(&mut thetas);
+            for (j, st) in scalars.iter().enumerate() {
+                st.theta_into(&mut theta_ref);
+                assert_eq!(
+                    &thetas[j * D..(j + 1) * D],
+                    &theta_ref[..],
+                    "θ̂ slot {j} round {round}"
+                );
+                let slot = win.slot_at(j);
+                assert_eq!(slot.a_data(), &st.a.data[..], "A slot {j} round {round}");
+                assert_eq!(slot.b_data(), &st.b[..], "b slot {j} round {round}");
+                assert_eq!(
+                    slot.ops_since_refresh(),
+                    st.ops_since_refresh(),
+                    "refresh counter slot {j} round {round}"
+                );
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Shaped link: work conservation and FIFO ordering for any send pattern.
 // ---------------------------------------------------------------------------
