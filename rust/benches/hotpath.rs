@@ -322,5 +322,66 @@ fn main() {
     );
     assert_eq!(delta, 0, "batched SoA store round must not allocate");
 
+    // The open-world churn audit (ISSUE 9): a steady-state round that
+    // ADMITS a new session, HIBERNATES sessions whose duty burst ends
+    // (policy cold-pack into a pooled byte arena), and WAKES sessions
+    // from cold storage — with [`OpenWorld::prepare`] having pre-built
+    // shells and pre-sized arenas, buckets, and engine envelopes — must
+    // perform exactly zero heap allocations, same bar as a closed-world
+    // round.
+    {
+        use ans::coordinator::OpenWorld;
+        use ans::simulator::scenario::ChurnSchedule;
+
+        let churn_builder: ans::coordinator::openworld::SessionBuilder = Box::new(|g| {
+            let env = ans::simulator::Environment::simple(
+                zoo::vgg16(),
+                10.0 + (g % 8) as f64,
+                700 + g,
+            );
+            let pol: Box<dyn Policy> = Box::new(LinUcb::paper_default(1_000_000));
+            (pol, env, FrameSource::uniform())
+        });
+        // 64 live, 8-round duty period with 1-round bursts (~8 sleeps +
+        // 8 wakes per boundary), one admission per round, no departures
+        // inside the audit window (min lifespan 100 > warm-up + 1).
+        let mut world = OpenWorld::new(
+            EngineConfig {
+                contention: Contention::new(1, 0.5),
+                ingress_mbps: Some(200.0),
+                ..Default::default()
+            },
+            ChurnSchedule::new(0xC0FFEE, 64, 1.0, 200, 0.125).with_period(8),
+            churn_builder,
+        );
+        let churn_warm = 33usize;
+        world.run(churn_warm);
+        // The prepare contract: shells, arenas, buckets, and engine
+        // envelopes pre-sized for the horizon — rounds inside it are
+        // allocation-free.  (Wake shells are consumed per cycle, so a
+        // server re-prepares as its horizon advances.)
+        world.prepare(2);
+        let s0 = world.stats();
+        let before = allocations();
+        world.round();
+        let delta = allocations() - before;
+        let s1 = world.stats();
+        assert!(s1.admissions > s0.admissions, "audited round must admit a session");
+        assert!(s1.hibernates > s0.hibernates, "audited round must hibernate a session");
+        assert!(s1.wakes > s0.wakes, "audited round must wake a session");
+        println!(
+            "{:<44} {} allocs over 1 churn round ({} admit, {} hibernate, {} wake)",
+            "alloc/openworld_churn_round",
+            delta,
+            s1.admissions - s0.admissions,
+            s1.hibernates - s0.hibernates,
+            s1.wakes - s0.wakes,
+        );
+        assert_eq!(
+            delta, 0,
+            "a prepared churn round (admission + hibernation + wake) must not allocate"
+        );
+    }
+
     b.write_csv("hotpath.csv").expect("writing bench_results/hotpath.csv");
 }

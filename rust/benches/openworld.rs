@@ -1,0 +1,206 @@
+//! Open-world fleet throughput (§Perf, ISSUE 9 acceptance): admissions
+//! per second and frames per second at 10k and 100k LIVE sessions with a
+//! ~1% duty cycle (period 100, one-round bursts), against one engine.
+//!
+//! The exhibit is the O(active) claim: a steady open-world round costs
+//! proportional to the sessions currently on-burst, never the live
+//! population — off-duty sessions are hibernated byte arenas, and the
+//! engine's active-set index skips idle residents.  The bench pins the
+//! claim directly: a 100 000-live open-world round (~1 000 active) must
+//! be CHEAPER than a 10 000-session all-active closed-world round, i.e.
+//! 10x the population serves faster because only 1% of it is awake.
+//!
+//! Results go to `bench_results/openworld.json`; CI runs the bench in
+//! smoke mode (`BENCH_SAMPLES=3`) and uploads the artifact.  The
+//! hibernation/zero-alloc churn audit lives in `benches/hotpath.rs`;
+//! bit-identity of churn under sharding is pinned in `rust/tests/`.
+
+use ans::bandit;
+use ans::coordinator::engine::{Engine, EngineConfig};
+use ans::coordinator::openworld::SessionBuilder;
+use ans::coordinator::{FrameSource, OpenWorld};
+use ans::models::zoo;
+use ans::simulator::scenario::ChurnSchedule;
+use ans::simulator::{scenario, Contention, DEVICE_MAXN, EDGE_GPU};
+use ans::util::bench::Bench;
+use ans::util::json::{obj, Json};
+use std::time::Instant;
+
+/// Duty-cycle period: each session is on-burst 1 round in 100 (~1%).
+const PERIOD: usize = 100;
+/// Mean lifespan in rounds — far beyond the bench horizon, so the
+/// timed window measures duty churn (hibernate/wake), not departures.
+const LIFESPAN: usize = 10_000;
+const SEED: u64 = 90;
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        contention: Contention::new(2, 0.25),
+        ingress_mbps: Some(400.0),
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+fn builder() -> SessionBuilder {
+    let net = zoo::partnet();
+    Box::new(move |g| {
+        let env = scenario::fleet_session(net.clone(), g, 12.0, DEVICE_MAXN, EDGE_GPU, 1.0, SEED);
+        let policy = bandit::by_name("mu-linucb", &net, &DEVICE_MAXN, &EDGE_GPU, 1_000, None, None)
+            .expect("known policy");
+        (policy, env, FrameSource::uniform())
+    })
+}
+
+struct Cell {
+    live: usize,
+    admissions_per_sec: f64,
+    rounds_per_sec: f64,
+    frames_per_sec: f64,
+    round_ms: f64,
+    active: usize,
+    resident: usize,
+    cold: usize,
+    cold_bytes: usize,
+}
+
+/// Admit `live` sessions (timed), settle, then time one full duty
+/// period of steady churn rounds.  Returns the best sample.
+fn openworld_cell(live: usize, samples: usize) -> Cell {
+    let mut best: Option<Cell> = None;
+    for _ in 0..samples {
+        let schedule = ChurnSchedule::new(SEED, live, 0.5, LIFESPAN, 0.01).with_period(PERIOD);
+        let start = Instant::now();
+        let mut world = OpenWorld::new(engine_cfg(), schedule, builder());
+        let adm_secs = start.elapsed().as_secs_f64();
+
+        world.run(10); // settle caches and the first wake cohorts
+        let s0 = world.stats();
+        let start = Instant::now();
+        world.run(PERIOD);
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        let s1 = world.stats();
+
+        let frames = (s1.frames - s0.frames) as f64;
+        let cell = Cell {
+            live: s1.live,
+            admissions_per_sec: live as f64 / adm_secs.max(1e-9),
+            rounds_per_sec: PERIOD as f64 / secs,
+            frames_per_sec: frames / secs,
+            round_ms: secs * 1e3 / PERIOD as f64,
+            active: s1.active,
+            resident: s1.resident,
+            cold: s1.cold,
+            cold_bytes: s1.cold_bytes,
+        };
+        // Residency must track the active set, not the population.
+        assert!(
+            cell.active >= live / (2 * PERIOD) && cell.active <= 2 * live / PERIOD,
+            "live {live}: steady active {} should be ~{}",
+            cell.active,
+            live / PERIOD
+        );
+        assert!(
+            cell.resident < live / 10,
+            "live {live}: {} resident — off-duty sessions must be cold, not resident",
+            cell.resident
+        );
+        if best.as_ref().map_or(true, |b| cell.round_ms < b.round_ms) {
+            best = Some(cell);
+        }
+    }
+    best.expect("at least one sample")
+}
+
+/// Closed-world reference: `sessions` all-active μLinUCB sessions on
+/// the same engine configuration.  Returns best-of-samples round ms.
+fn closed_round_ms(sessions: usize, samples: usize) -> f64 {
+    const TIMED: usize = 5;
+    let mut best = f64::INFINITY;
+    for _ in 0..samples {
+        let net = zoo::partnet();
+        let mut eng = Engine::new(engine_cfg());
+        let mut build = builder();
+        for g in 0..sessions as u64 {
+            let (policy, env, source) = build(g);
+            eng.add_session(policy, env, source);
+        }
+        eng.reserve(2 + TIMED);
+        eng.run(2);
+        let start = Instant::now();
+        eng.run(TIMED);
+        best = best.min(start.elapsed().as_secs_f64() * 1e3 / TIMED as f64);
+    }
+    best
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let samples = b.samples.max(1);
+    println!("openworld: {} sample(s) per cell, duty 1% (period {PERIOD})", samples);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut cells: Vec<(usize, Cell)> = Vec::new();
+    for live in [10_000usize, 100_000] {
+        let name = format!("openworld/live{live}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let cell = openworld_cell(live, samples);
+        println!(
+            "{name:<28} {:>10.0} admissions/s  {:>9.0} frames/s  {:>8.3} ms/round  \
+             active {:>5}  resident {:>6}  cold {:>6} ({} KiB)",
+            cell.admissions_per_sec,
+            cell.frames_per_sec,
+            cell.round_ms,
+            cell.active,
+            cell.resident,
+            cell.cold,
+            cell.cold_bytes / 1024,
+        );
+        rows.push(obj(vec![
+            ("live", Json::from(cell.live)),
+            ("period", Json::from(PERIOD)),
+            ("active", Json::from(cell.active)),
+            ("resident", Json::from(cell.resident)),
+            ("cold", Json::from(cell.cold)),
+            ("cold_bytes", Json::from(cell.cold_bytes)),
+            ("admissions_per_sec", Json::from(cell.admissions_per_sec)),
+            ("rounds_per_sec", Json::from(cell.rounds_per_sec)),
+            ("frames_per_sec", Json::from(cell.frames_per_sec)),
+            ("round_ms", Json::from(cell.round_ms)),
+        ]));
+        cells.push((live, cell));
+    }
+
+    // The acceptance exhibit: 100k live at 1% duty vs 10k all-active.
+    // (-1 when the 100k cell is filtered out via BENCH_FILTER.)
+    let mut baseline_ms = -1.0;
+    if let Some((_, big)) = cells.iter().find(|(live, _)| *live == 100_000) {
+        baseline_ms = closed_round_ms(10_000, samples);
+        println!(
+            "openworld/exhibit            100k-live round {:.3} ms vs 10k-all-active {:.3} ms",
+            big.round_ms, baseline_ms
+        );
+        assert!(
+            big.round_ms < baseline_ms,
+            "O(active) regression: a 100k-live 1%-duty round ({:.3} ms) must beat a \
+             10k-session all-active round ({:.3} ms)",
+            big.round_ms,
+            baseline_ms
+        );
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::from("openworld")),
+        ("samples", Json::from(samples)),
+        ("period", Json::from(PERIOD)),
+        ("mean_lifespan", Json::from(LIFESPAN)),
+        ("closed_10k_round_ms", Json::from(baseline_ms)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").expect("creating bench_results/");
+    std::fs::write("bench_results/openworld.json", doc.to_string())
+        .expect("writing bench_results/openworld.json");
+    println!("open-world throughput JSON -> bench_results/openworld.json");
+}

@@ -613,6 +613,91 @@ impl Policy for LinUcb {
         }
     }
 
+    fn supports_hibernate(&self) -> bool {
+        true
+    }
+
+    fn pack_cold(&self, slot: Option<RidgeSlot<'_>>, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_bool, put_f64, put_f64s, put_usize};
+        let c = &self.core;
+        put_usize(out, c.n_obs);
+        put_usize(out, c.current_frame);
+        put_usize(out, c.resets);
+        put_f64(out, c.drift_ema);
+        put_usize(out, c.drift_samples);
+        match c.warmup_next {
+            None => put_bool(out, false),
+            Some(n) => {
+                put_bool(out, true);
+                put_usize(out, n);
+            }
+        }
+        put_f64s(out, &c.theta_cache);
+        put_usize(out, c.history.len());
+        for (x, y, t) in &c.history {
+            put_f64s(out, &x[..]);
+            put_f64(out, *y);
+            put_usize(out, *t);
+        }
+        // The ridge state, read straight from wherever it lives — the
+        // store-backed path never materializes an owned copy.
+        match &self.backing {
+            Backing::Slot => {
+                slot.expect("store-backed LinUCB pack_cold needs its slot").pack(out)
+            }
+            Backing::Owned(r) => RidgeSlot {
+                d: r.d,
+                a: &r.a.data,
+                a_inv: &r.a_inv.data,
+                b: &r.b,
+                ops: r.ops_since_refresh(),
+            }
+            .pack(out),
+        }
+    }
+
+    fn unpack_cold(
+        &mut self,
+        slot: Option<&mut RidgeSlotMut<'_>>,
+        r: &mut crate::util::bytes::Reader<'_>,
+    ) {
+        let c = &mut self.core;
+        c.n_obs = r.take_usize();
+        c.current_frame = r.take_usize();
+        c.resets = r.take_usize();
+        c.drift_ema = r.take_f64();
+        c.drift_samples = r.take_usize();
+        c.warmup_next = if r.take_bool() { Some(r.take_usize()) } else { None };
+        r.take_f64s_exact(&mut c.theta_cache);
+        let n = r.take_usize();
+        c.history.clear();
+        c.history.reserve(n);
+        for _ in 0..n {
+            let mut x: FeatureVector = [0.0; crate::models::CONTEXT_DIM];
+            r.take_f64s_exact(&mut x);
+            let y = r.take_f64();
+            let t = r.take_usize();
+            c.history.push_back((x, y, t));
+        }
+        match slot {
+            Some(s) => {
+                s.unpack(r);
+                self.backing = Backing::Slot;
+            }
+            None => {
+                let d = r.take_usize();
+                let mut a = Vec::new();
+                let mut a_inv = Vec::new();
+                let mut b = Vec::new();
+                r.take_f64s_into(&mut a);
+                r.take_f64s_into(&mut a_inv);
+                r.take_f64s_into(&mut b);
+                let ops = r.take_usize();
+                self.backing = Backing::Owned(RidgeState::from_parts(d, a, a_inv, b, ops));
+            }
+        }
+    }
+
     fn as_batched(&mut self) -> Option<&mut LinUcb> {
         match self.backing {
             Backing::Slot => Some(self),
@@ -1035,6 +1120,97 @@ mod tests {
             owned.owned_ridge().ops_since_refresh(),
             stored.owned_ridge().ops_since_refresh(),
             "refresh phase must survive adopt/release"
+        );
+    }
+
+    /// Drive a store-backed policy over an explicit frame range (the
+    /// hibernation tests split one logical stream across a pack/unpack).
+    fn drive(
+        policy: &mut dyn Policy,
+        store: &mut PolicyStore,
+        env: &mut Environment,
+        ts: std::ops::Range<usize>,
+        chosen: &mut Vec<usize>,
+    ) {
+        let scale = FeatureScale::for_network(&env.net);
+        let contexts = features::context_vectors(&env.net, &scale);
+        let front: Vec<f64> = env.front_delays().to_vec();
+        let p_max = env.num_partitions();
+        for t in ts {
+            env.tick(t);
+            let ctx = FrameContext {
+                t,
+                weight: 0.2,
+                front_delays: &front,
+                contexts: &contexts,
+                queue_wait_ms: &[],
+                privileged: Privileged { rate_mbps: env.current_rate_mbps(), expected_totals: None },
+            };
+            let mut slot = store.slot_mut(0);
+            let p = policy.select_in(&ctx, Some(&mut slot));
+            if p != p_max {
+                let d_e = env.observe_edge_delay(p);
+                let mut slot = store.slot_mut(0);
+                policy.observe_in(p, &contexts[p], d_e, Some(&mut slot));
+            }
+            chosen.push(p);
+        }
+    }
+
+    #[test]
+    fn cold_pack_unpack_round_trips_mid_stream() {
+        // Hibernate a store-backed μLinUCB (windowed + drift-reset, so
+        // every piece of mutable core state is live) halfway through a
+        // stream, wake it into a fresh policy + fresh slot, and the
+        // continuation must be bit-identical to a twin that never packed.
+        let frames = 400;
+        let halfway = 217;
+        let build = || LinUcb::ans_default(frames).with_window(60);
+
+        let mut env_a = Environment::simple(zoo::vgg16(), 12.0, 8);
+        let mut control = build();
+        let mut store_a = PolicyStore::new(CONTEXT_DIM);
+        store_a.push_slot();
+        let mut slot = store_a.slot_mut(0);
+        assert!(control.adopt_slot(&mut slot));
+        let mut chosen_a = Vec::new();
+        drive(&mut control, &mut store_a, &mut env_a, 0..frames, &mut chosen_a);
+
+        let mut env_b = Environment::simple(zoo::vgg16(), 12.0, 8);
+        let mut first = build();
+        let mut store_b = PolicyStore::new(CONTEXT_DIM);
+        store_b.push_slot();
+        let mut slot = store_b.slot_mut(0);
+        assert!(first.adopt_slot(&mut slot));
+        let mut chosen_b = Vec::new();
+        drive(&mut first, &mut store_b, &mut env_b, 0..halfway, &mut chosen_b);
+        assert!(first.supports_hibernate());
+        let mut blob = Vec::new();
+        first.pack_cold(Some(store_b.slot(0)), &mut blob);
+        assert!(!blob.is_empty());
+        drop(first); // the Session struct is gone while hibernated
+
+        let mut woken = build(); // config-identical rebuild
+        let mut store_c = PolicyStore::new(CONTEXT_DIM);
+        store_c.push_slot(); // freshly adopted slot (possibly recycled)
+        let mut reader = crate::util::bytes::Reader::new(&blob);
+        let mut slot = store_c.slot_mut(0);
+        woken.unpack_cold(Some(&mut slot), &mut reader);
+        assert!(reader.is_empty(), "every packed byte must be consumed");
+        drive(&mut woken, &mut store_c, &mut env_b, halfway..frames, &mut chosen_b);
+
+        assert_eq!(chosen_a, chosen_b, "decision stream must survive hibernation");
+        assert_eq!(control.observations(), woken.observations());
+        assert_eq!(control.resets(), woken.resets());
+        assert_eq!(control.theta(), woken.theta());
+        let snap_a = control.snapshot_in(Some(store_a.slot(0)));
+        let snap_c = woken.snapshot_in(Some(store_c.slot(0)));
+        assert_eq!(snap_a.ridge_a, snap_c.ridge_a);
+        assert_eq!(snap_a.ridge_b, snap_c.ridge_b);
+        assert_eq!(
+            store_a.slot(0).ops_since_refresh(),
+            store_c.slot(0).ops_since_refresh(),
+            "refresh phase must survive the cold round trip"
         );
     }
 

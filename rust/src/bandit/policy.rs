@@ -162,6 +162,38 @@ pub trait Policy: Send {
         self.snapshot()
     }
 
+    // --- Byte-cost hibernation (DESIGN.md §14) -------------------------
+    //
+    // The open-world engine packs cold sessions into a flat byte arena
+    // and frees their Session struct and store slot entirely.  A policy
+    // opts in by returning true from `supports_hibernate` and making
+    // `pack_cold`/`unpack_cold` a lossless round trip; the engine refuses
+    // to hibernate sessions whose policy does not opt in (they stay
+    // resident when idle).  Only *mutable* state belongs in the arena —
+    // configuration (α, β, arm count, forced schedules) is rebuilt from
+    // the session's global id by the deterministic session builder.
+
+    /// Whether this policy can round-trip through a cold byte arena.
+    /// Stateless baselines opt in trivially (nothing to pack); learners
+    /// opt in by implementing the pack/unpack pair.
+    fn supports_hibernate(&self) -> bool {
+        false
+    }
+
+    /// Append every bit of mutable policy state to a cold arena.  `slot`
+    /// is the session's store slot when the policy is store-backed — the
+    /// ridge state is read straight from it, no owned copy materialized.
+    fn pack_cold(&self, _slot: Option<RidgeSlot<'_>>, _out: &mut Vec<u8>) {}
+
+    /// Restore state packed by [`Policy::pack_cold`] into this
+    /// freshly-rebuilt policy (and its newly adopted slot, if any).
+    fn unpack_cold(
+        &mut self,
+        _slot: Option<&mut RidgeSlotMut<'_>>,
+        _r: &mut crate::util::bytes::Reader<'_>,
+    ) {
+    }
+
     /// Downcast hook for the engine's arm-major batched select
     /// (DESIGN.md §13): a LinUCB-family learner whose ridge state is
     /// *currently store-backed* returns itself, telling the engine it may
@@ -185,6 +217,10 @@ impl Policy for EdgeOnly {
     fn select(&mut self, _ctx: &FrameContext) -> usize {
         0
     }
+
+    fn supports_hibernate(&self) -> bool {
+        true // stateless: the default empty pack/unpack is lossless
+    }
 }
 
 /// Pure On-device Processing: always p = P.
@@ -197,6 +233,10 @@ impl Policy for MobileOnly {
 
     fn select(&mut self, ctx: &FrameContext) -> usize {
         ctx.max_partition()
+    }
+
+    fn supports_hibernate(&self) -> bool {
+        true
     }
 }
 
@@ -221,6 +261,10 @@ impl Policy for Fixed {
         assert!(self.p <= ctx.max_partition(), "fixed partition out of range");
         self.p
     }
+
+    fn supports_hibernate(&self) -> bool {
+        true
+    }
 }
 
 /// Oracle: reads the true expected delays (privileged; regret reference).
@@ -237,6 +281,10 @@ impl Policy for Oracle {
             .expected_totals
             .expect("Oracle needs privileged expected_totals");
         argmin(totals)
+    }
+
+    fn supports_hibernate(&self) -> bool {
+        true
     }
 }
 
@@ -317,6 +365,21 @@ mod tests {
     fn argmin_first_on_ties() {
         assert_eq!(argmin(&[2.0, 1.0, 1.0]), 1);
         assert_eq!(argmin(&[0.5]), 0);
+    }
+
+    #[test]
+    fn stateless_baselines_hibernate_with_empty_arenas() {
+        let mut blob = Vec::new();
+        for p in [
+            Box::new(EdgeOnly) as Box<dyn Policy>,
+            Box::new(MobileOnly),
+            Box::new(Fixed::new(1)),
+            Box::new(Oracle),
+        ] {
+            assert!(p.supports_hibernate(), "{}", p.name());
+            p.pack_cold(None, &mut blob);
+            assert!(blob.is_empty(), "{} packed bytes despite being stateless", p.name());
+        }
     }
 
     #[test]

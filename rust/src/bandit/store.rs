@@ -81,6 +81,18 @@ impl<'a> RidgeSlotMut<'a> {
         self.b.copy_from_slice(&st.b);
         *self.ops = st.ops_since_refresh();
     }
+
+    /// Restore state packed by [`RidgeSlot::pack`] into this slot, bit for
+    /// bit.  Fully overwrites the slot, so waking into a recycled slot
+    /// needs no prior zeroing.
+    pub fn unpack(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        let d = r.take_usize();
+        assert_eq!(d, self.d, "packed ridge dimension {d} does not match slot dim {}", self.d);
+        r.take_f64s_exact(self.a);
+        r.take_f64s_exact(self.a_inv);
+        r.take_f64s_exact(self.b);
+        *self.ops = r.take_usize();
+    }
 }
 
 impl<'a> RidgeSlot<'a> {
@@ -124,6 +136,20 @@ impl<'a> RidgeSlot<'a> {
             self.b.to_vec(),
             self.ops,
         )
+    }
+
+    /// Append the slot's persistent state (d, A, A⁻¹, b, op counter) to a
+    /// cold byte arena — hibernation reads straight from the slot without
+    /// materializing an owned [`RidgeState`].  The scratch/Cholesky
+    /// buffers are pure work space (rebuilt on the next refresh) and are
+    /// deliberately not serialized.
+    pub fn pack(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_f64s, put_usize};
+        put_usize(out, self.d);
+        put_f64s(out, self.a);
+        put_f64s(out, self.a_inv);
+        put_f64s(out, self.b);
+        put_usize(out, self.ops);
     }
 }
 
@@ -270,6 +296,26 @@ impl<'a> StoreSliceMut<'a> {
         linalg::theta_batch(self.d, self.a_inv, self.b, out);
     }
 
+    /// Materialize θ̂ for an index subset of this window: row `i` of `out`
+    /// (`out[i·d..(i+1)·d]`) gets slot `idx[i]`'s θ̂ — the gathered form of
+    /// [`StoreSliceMut::theta_batch_into`] the open-world phases use so a
+    /// round's θ̂ sweep is O(active), not O(slots in the window).  Same
+    /// `k_matvec` per slot, so the rows are bit-identical.
+    pub fn theta_batch_at(&self, idx: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), idx.len() * self.d);
+        let d = self.d;
+        let dd = d * d;
+        for (i, &j) in idx.iter().enumerate() {
+            assert!(j < self.len, "slot {j} out of window (len {})", self.len);
+            linalg::k_matvec(
+                d,
+                &self.a_inv[j * dd..(j + 1) * dd],
+                &self.b[j * d..(j + 1) * d],
+                &mut out[i * d..(i + 1) * d],
+            );
+        }
+    }
+
     /// Batched Sherman–Morrison over an index subset of this window:
     /// slot `idx[i]` absorbs `(xs[i·d..(i+1)·d], ys[i])`, in list order —
     /// the same `k_update` kernel per entry as `slot_mut(j).update(..)`,
@@ -297,8 +343,12 @@ impl<'a> StoreSliceMut<'a> {
     }
 }
 
-/// Structure-of-arrays policy store: one slot of ridge state per session,
-/// slot index == local session index inside the owning engine.
+/// Structure-of-arrays policy store: one slot of ridge state per resident
+/// session.  Closed-world engines keep slot index == local session index;
+/// the open-world engine instead recycles slots through a free list
+/// ([`PolicyStore::alloc_slot`] / [`PolicyStore::free_slot`]) so churn
+/// never compacts or moves the arenas, and keeps its sessions sorted by
+/// slot so shards still borrow contiguous windows.
 #[derive(Debug, Clone, Default)]
 pub struct PolicyStore {
     d: usize,
@@ -311,6 +361,10 @@ pub struct PolicyStore {
     rhs: Vec<f64>,
     col: Vec<f64>,
     ops: Vec<usize>,
+    /// Recycled slot indices, kept sorted descending so `pop()` hands out
+    /// the smallest free slot — deterministic re-adoption order, and new
+    /// sessions pack toward the front of the arenas.
+    free: Vec<usize>,
 }
 
 impl PolicyStore {
@@ -354,6 +408,11 @@ impl PolicyStore {
     /// migration), never on the per-frame path.
     pub fn insert_slot(&mut self, pos: usize) {
         assert!(pos <= self.len, "insert position {pos} out of bounds (len {})", self.len);
+        for f in &mut self.free {
+            if *f >= pos {
+                *f += 1; // freed slots above the insertion point shift up
+            }
+        }
         let d = self.d;
         let dd = d * d;
         let zero_m = std::iter::repeat(0.0).take(dd);
@@ -373,6 +432,12 @@ impl PolicyStore {
     /// releases the state first if it matters).
     pub fn remove_slot(&mut self, pos: usize) {
         assert!(pos < self.len, "remove position {pos} out of bounds (len {})", self.len);
+        debug_assert!(!self.free.contains(&pos), "removing a slot that is on the free list");
+        for f in &mut self.free {
+            if *f > pos {
+                *f -= 1; // freed slots above the removal point shift down
+            }
+        }
         let d = self.d;
         let dd = d * d;
         self.a.drain(pos * dd..(pos + 1) * dd);
@@ -384,6 +449,54 @@ impl PolicyStore {
         self.col.drain(pos * d..(pos + 1) * d);
         self.ops.remove(pos);
         self.len -= 1;
+    }
+
+    /// Claim a slot: the smallest recycled slot if any is free, otherwise
+    /// a fresh slot appended at the end.  The returned slot may hold stale
+    /// bits from its previous occupant — adoption and cold-wake unpacking
+    /// fully overwrite `A`/`A⁻¹`/`b`/`ops`, so no zeroing pass is needed
+    /// (and gathered kernels never visit unlisted slots).
+    pub fn alloc_slot(&mut self) -> usize {
+        if let Some(i) = self.free.pop() {
+            i
+        } else {
+            self.push_slot();
+            self.len - 1
+        }
+    }
+
+    /// Return slot `i` to the free list for recycling.  The arenas never
+    /// compact or move: every other slot keeps its index, so resident
+    /// sessions' slot bindings stay valid across arbitrary churn.
+    pub fn free_slot(&mut self, i: usize) {
+        assert!(i < self.len, "free position {i} out of bounds (len {})", self.len);
+        debug_assert!(!self.free.contains(&i), "slot {i} freed twice");
+        let pos = self.free.partition_point(|&f| f > i);
+        self.free.insert(pos, i); // keep sorted descending
+    }
+
+    /// Number of slots currently on the free list.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pre-size the arenas for `extra` additional slots beyond the current
+    /// length, and the free list for every slot that could ever be freed —
+    /// after this, any interleaving of alloc/free within that envelope
+    /// allocates nothing.
+    pub fn reserve_slots(&mut self, extra: usize) {
+        let d = self.d;
+        let dd = d * d;
+        self.a.reserve(extra * dd);
+        self.a_inv.reserve(extra * dd);
+        self.chol.reserve(extra * dd);
+        self.b.reserve(extra * d);
+        self.scratch.reserve(extra * d);
+        self.rhs.reserve(extra * d);
+        self.col.reserve(extra * d);
+        self.ops.reserve(extra);
+        let want = self.len + extra;
+        self.free.reserve(want.saturating_sub(self.free.len()));
     }
 
     /// Read-only view of slot `i` (allocation-free).
@@ -489,6 +602,68 @@ impl PolicyStore {
                 ops: o0,
             });
             remaining -= take;
+        }
+        out
+    }
+
+    /// Split the store into disjoint windows at explicit interior slot
+    /// boundaries: `cuts` is a non-decreasing list of slot indices ≤ `len`
+    /// and the result is `cuts.len() + 1` windows covering
+    /// `[0, cuts[0]), [cuts[0], cuts[1]), …, [cuts[last], len)`.  The
+    /// open-world engine tiles by **active** count, so shard windows are
+    /// variable-width runs of slots (possibly containing free slots, which
+    /// the gathered kernels never touch) rather than the congruent
+    /// `per`-slot chunks of [`PolicyStore::shard_slices`].
+    pub fn windows_at(&mut self, cuts: &[usize]) -> Vec<StoreSliceMut<'_>> {
+        let d = self.d;
+        let dd = d * d;
+        let mut out = Vec::with_capacity(cuts.len() + 1);
+        let mut a: &mut [f64] = &mut self.a;
+        let mut a_inv: &mut [f64] = &mut self.a_inv;
+        let mut b: &mut [f64] = &mut self.b;
+        let mut scratch: &mut [f64] = &mut self.scratch;
+        let mut chol: &mut [f64] = &mut self.chol;
+        let mut rhs: &mut [f64] = &mut self.rhs;
+        let mut col: &mut [f64] = &mut self.col;
+        let mut ops: &mut [usize] = &mut self.ops;
+        let mut prev = 0usize;
+        for k in 0..=cuts.len() {
+            let end = if k < cuts.len() { cuts[k] } else { self.len };
+            assert!(
+                prev <= end && end <= self.len,
+                "window cuts must be non-decreasing and within the store: prev={prev} end={end} len={}",
+                self.len
+            );
+            let take = end - prev;
+            let (a0, a1) = std::mem::take(&mut a).split_at_mut(take * dd);
+            let (ai0, ai1) = std::mem::take(&mut a_inv).split_at_mut(take * dd);
+            let (b0, b1) = std::mem::take(&mut b).split_at_mut(take * d);
+            let (s0, s1) = std::mem::take(&mut scratch).split_at_mut(take * d);
+            let (ch0, ch1) = std::mem::take(&mut chol).split_at_mut(take * dd);
+            let (r0, r1) = std::mem::take(&mut rhs).split_at_mut(take * d);
+            let (c0, c1) = std::mem::take(&mut col).split_at_mut(take * d);
+            let (o0, o1) = std::mem::take(&mut ops).split_at_mut(take);
+            a = a1;
+            a_inv = ai1;
+            b = b1;
+            scratch = s1;
+            chol = ch1;
+            rhs = r1;
+            col = c1;
+            ops = o1;
+            out.push(StoreSliceMut {
+                d,
+                len: take,
+                a: a0,
+                a_inv: ai0,
+                b: b0,
+                scratch: s0,
+                chol: ch0,
+                rhs: r0,
+                col: c0,
+                ops: o0,
+            });
+            prev = end;
         }
         out
     }
@@ -644,6 +819,150 @@ mod tests {
             assert_eq!(store.slot(i).a_data(), &st.a.data[..], "slot {i}");
             assert_eq!(store.slot(i).b_data(), &st.b[..], "slot {i}");
         }
+    }
+
+    #[test]
+    fn free_list_recycles_smallest_slot_first() {
+        let d = 2;
+        let mut store = PolicyStore::new(d);
+        assert_eq!(store.alloc_slot(), 0);
+        assert_eq!(store.alloc_slot(), 1);
+        assert_eq!(store.alloc_slot(), 2);
+        assert_eq!(store.alloc_slot(), 3);
+        assert_eq!(store.len(), 4);
+        store.free_slot(2);
+        store.free_slot(0);
+        store.free_slot(3);
+        assert_eq!(store.free_slots(), 3);
+        // Smallest free slot wins, deterministically, regardless of the
+        // order the slots were freed in.
+        assert_eq!(store.alloc_slot(), 0);
+        assert_eq!(store.alloc_slot(), 2);
+        assert_eq!(store.alloc_slot(), 3);
+        assert_eq!(store.free_slots(), 0);
+        // Exhausted free list falls back to appending.
+        assert_eq!(store.alloc_slot(), 4);
+        assert_eq!(store.len(), 5);
+    }
+
+    #[test]
+    fn recycled_slot_adoption_is_lossless_without_zeroing() {
+        let d = 5;
+        let mut rng = Rng::new(41);
+        let mut store = PolicyStore::new(d);
+        let s0 = store.alloc_slot();
+        let mut tenant = RidgeState::new(d, 0.01);
+        for _ in 0..30 {
+            let x = random_x(&mut rng, d);
+            tenant.update(&x, rng.uniform(0.0, 200.0));
+        }
+        store.slot_mut(s0).load_from(&tenant);
+        store.free_slot(s0); // stale bits remain — no zeroing
+        let s1 = store.alloc_slot();
+        assert_eq!(s1, s0, "smallest free slot recycled");
+        let mut next = RidgeState::new(d, 0.5);
+        for _ in 0..7 {
+            let x = random_x(&mut rng, d);
+            next.update(&x, rng.uniform(0.0, 50.0));
+        }
+        store.slot_mut(s1).load_from(&next);
+        let got = store.slot(s1).to_ridge_state();
+        assert_eq!(got.a.data, next.a.data);
+        assert_eq!(got.a_inv.data, next.a_inv.data);
+        assert_eq!(got.b, next.b);
+        assert_eq!(got.ops_since_refresh(), next.ops_since_refresh());
+    }
+
+    #[test]
+    fn slot_pack_unpack_round_trips_every_bit() {
+        let d = 9;
+        let mut rng = Rng::new(47);
+        let mut store = PolicyStore::new(d);
+        store.push_slot();
+        store.push_slot();
+        let mut st = RidgeState::new(d, 0.01);
+        for _ in 0..90 {
+            let x = random_x(&mut rng, d);
+            st.update(&x, rng.uniform(0.0, 300.0));
+        }
+        store.slot_mut(0).load_from(&st);
+        let mut blob = Vec::new();
+        store.slot(0).pack(&mut blob);
+        // Unpack into a different (dirty) slot: bits must match exactly.
+        store.slot_mut(1).reset(7.0);
+        store
+            .slot_mut(1)
+            .unpack(&mut crate::util::bytes::Reader::new(&blob));
+        assert_eq!(store.slot(1).a_data(), store.slot(0).a_data());
+        assert_eq!(store.slot(1).b_data(), store.slot(0).b_data());
+        assert_eq!(store.slot(1).ops_since_refresh(), store.slot(0).ops_since_refresh());
+        let probe = random_x(&mut rng, d);
+        assert_eq!(store.slot(1).predict(&probe), store.slot(0).predict(&probe));
+        assert_eq!(store.slot(1).confidence_sq(&probe), store.slot(0).confidence_sq(&probe));
+    }
+
+    #[test]
+    fn windows_at_tiles_variable_width_runs() {
+        let d = 2;
+        let mut store = PolicyStore::new(d);
+        for i in 0..9 {
+            store.push_slot();
+            store.slot_mut(i).reset(1.0 + i as f64);
+        }
+        // Uneven cuts, including an empty middle window.
+        let mut seen = Vec::new();
+        let mut lens = Vec::new();
+        for mut w in store.windows_at(&[2, 2, 7]) {
+            lens.push(w.len());
+            for j in 0..w.len() {
+                seen.push(w.slot_mut(j).read().a_data()[0]);
+            }
+        }
+        assert_eq!(lens, vec![2, 0, 5, 2]);
+        assert_eq!(seen, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn gathered_theta_matches_per_slot_theta() {
+        let d = 9;
+        let n = 5;
+        let mut rng = Rng::new(53);
+        let mut store = PolicyStore::new(d);
+        for i in 0..n {
+            store.push_slot();
+            store.slot_mut(i).reset(0.25);
+            for _ in 0..12 {
+                let x = random_x(&mut rng, d);
+                let y = rng.uniform(0.0, 60.0);
+                store.slot_mut(i).update(&x, y);
+            }
+        }
+        let idx = [3usize, 0, 4];
+        let mut rows = vec![0.0; idx.len() * d];
+        store.as_slice_mut().theta_batch_at(&idx, &mut rows);
+        let mut want = vec![0.0; d];
+        for (i, &j) in idx.iter().enumerate() {
+            store.slot(j).theta_into(&mut want);
+            assert_eq!(&rows[i * d..(i + 1) * d], &want[..], "row {i} (slot {j})");
+        }
+    }
+
+    #[test]
+    fn reserve_slots_prevents_growth_reallocation() {
+        let d = 4;
+        let mut store = PolicyStore::new(d);
+        store.reserve_slots(16);
+        let cap = store.a.capacity();
+        for _ in 0..16 {
+            store.alloc_slot();
+        }
+        for i in (0..16).step_by(2) {
+            store.free_slot(i);
+        }
+        for _ in 0..8 {
+            store.alloc_slot();
+        }
+        assert_eq!(store.a.capacity(), cap, "arena must not regrow inside the envelope");
     }
 
     #[test]

@@ -108,6 +108,15 @@ pub struct Config {
     /// Emit a fleet-merged window summary every N rounds as JSONL
     /// (`ans fleet` only; 0 = off).
     pub metrics_every: usize,
+    /// Open-world fleet: mean session arrivals per round (0 = closed
+    /// world, the default).  `--sessions` becomes the initial cohort.
+    pub arrivals: f64,
+    /// Open-world fleet: mean session lifespan in rounds (per-session
+    /// draws are uniform in `[mean/2, 3·mean/2)`).
+    pub lifespan: usize,
+    /// Open-world fleet: fraction of each activity cycle a session
+    /// spends active (1 = always on; idle spans hibernate to bytes).
+    pub duty: f64,
 }
 
 impl Default for Config {
@@ -151,6 +160,9 @@ impl Default for Config {
             trace: String::new(),
             trace_capacity: 65536,
             metrics_every: 0,
+            arrivals: 0.0,
+            lifespan: 400,
+            duty: 1.0,
         }
     }
 }
@@ -213,6 +225,9 @@ impl Config {
                 "trace" => self.trace = val.as_str()?.to_string(),
                 "trace_capacity" => self.trace_capacity = val.as_usize()?,
                 "metrics_every" => self.metrics_every = val.as_usize()?,
+                "arrivals" => self.arrivals = val.as_f64()?,
+                "lifespan" => self.lifespan = val.as_usize()?,
+                "duty" => self.duty = val.as_f64()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -283,6 +298,9 @@ impl Config {
         }
         self.trace_capacity = args.usize_or("trace-capacity", self.trace_capacity)?;
         self.metrics_every = args.usize_or("metrics-every", self.metrics_every)?;
+        self.arrivals = args.f64_or("arrivals", self.arrivals)?;
+        self.lifespan = args.usize_or("lifespan", self.lifespan)?;
+        self.duty = args.f64_or("duty", self.duty)?;
         Ok(())
     }
 
@@ -401,6 +419,22 @@ impl Config {
         );
         anyhow::ensure!(self.migrate_every >= 1, "migrate-every must be ≥ 1 round");
         anyhow::ensure!(self.trace_capacity >= 1, "trace-capacity must be ≥ 1 event");
+        anyhow::ensure!(
+            self.arrivals >= 0.0 && self.arrivals.is_finite(),
+            "arrivals must be ≥ 0 per round"
+        );
+        anyhow::ensure!(self.lifespan >= 2, "lifespan must be ≥ 2 rounds");
+        anyhow::ensure!(
+            self.duty > 0.0 && self.duty <= 1.0,
+            "duty must be in (0, 1]"
+        );
+        if self.arrivals > 0.0 {
+            anyhow::ensure!(
+                self.replicas == 1,
+                "open-world churn (--arrivals) runs on a single engine; \
+                 drop --replicas or set it to 1"
+            );
+        }
         Ok(())
     }
 
@@ -707,6 +741,29 @@ mod tests {
         let err = Config::from_args(&args("fleet --placement roulette")).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("least-loaded") && msg.contains("migrate"), "{msg}");
+    }
+
+    #[test]
+    fn openworld_knobs_parse_and_validate() {
+        // Defaults: closed world.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert_eq!(cfg.arrivals, 0.0);
+        assert_eq!(cfg.lifespan, 400);
+        assert_eq!(cfg.duty, 1.0);
+        let cfg = Config::from_args(&args(
+            "fleet --sessions 100 --arrivals 0.5 --lifespan 200 --duty 0.1",
+        ))
+        .unwrap();
+        assert_eq!(cfg.arrivals, 0.5);
+        assert_eq!(cfg.lifespan, 200);
+        assert_eq!(cfg.duty, 0.1);
+        assert!(Config::from_args(&args("fleet --arrivals -1")).is_err());
+        assert!(Config::from_args(&args("fleet --lifespan 1")).is_err());
+        assert!(Config::from_args(&args("fleet --duty 0")).is_err());
+        assert!(Config::from_args(&args("fleet --duty 1.5")).is_err());
+        // Churn is single-engine for now.
+        let err = Config::from_args(&args("fleet --arrivals 1 --replicas 2")).unwrap_err();
+        assert!(format!("{err:#}").contains("single engine"));
     }
 
     #[test]

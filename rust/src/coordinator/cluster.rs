@@ -437,13 +437,12 @@ impl Cluster {
         for id in 0..n {
             let from = self.assignment[id];
             let best = {
-                let sess = self.replicas[from].engine.sessions();
-                // Session lists are sorted by global id (the engine's
-                // push invariant), so the lookup is a binary search.
-                let idx = sess
-                    .binary_search_by_key(&id, |s| s.id)
+                // Sessions are kept in store-slot order, not id order, so
+                // go through the engine's id index.
+                let s = self.replicas[from]
+                    .engine
+                    .session_by_id(id)
                     .expect("assignment tracks session homes");
-                let s = &sess[idx];
                 let mut best = 0;
                 let mut best_score = f64::INFINITY;
                 for (r, rep) in self.replicas.iter().enumerate() {

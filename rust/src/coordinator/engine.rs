@@ -117,6 +117,38 @@ impl FrameSource {
             }
         }
     }
+
+    /// Serialize the source's resume cursor for hibernation (byte-cost
+    /// cold state, DESIGN.md §14).  `Uniform` is stateless beyond its
+    /// weight; `Video` packs the stream generator position and the
+    /// detector's reference-frame cursor.
+    pub fn pack_cursor(&self, out: &mut Vec<u8>) {
+        match self {
+            FrameSource::Uniform { weight } => {
+                crate::util::bytes::put_u64(out, 0);
+                crate::util::bytes::put_f64(out, *weight);
+            }
+            FrameSource::Video { stream, detector } => {
+                crate::util::bytes::put_u64(out, 1);
+                stream.pack_cursor(out);
+                detector.pack_cursor(out);
+            }
+        }
+    }
+
+    /// Restore a cursor packed by [`FrameSource::pack_cursor`] into this
+    /// source (the wake-side shell must be variant-compatible).
+    pub fn unpack_cursor(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        let tag = r.take_u64();
+        match (tag, self) {
+            (0, FrameSource::Uniform { weight }) => *weight = r.take_f64(),
+            (1, FrameSource::Video { stream, detector }) => {
+                stream.unpack_cursor(r);
+                detector.unpack_cursor(r);
+            }
+            (tag, _) => panic!("frame-source cursor variant mismatch (tag {tag})"),
+        }
+    }
 }
 
 /// One session's pending decision within a round.
@@ -147,6 +179,13 @@ pub struct Session {
     expected: Vec<f64>,
     /// Per-arm forecast queue wait scratch (queue-signal modes).
     waits: Vec<f64>,
+    /// The session's SoA store slot while resident (`usize::MAX` when
+    /// detached — mid-migration, hibernated, or post-`into_sessions`).
+    pub(crate) slot: usize,
+    /// Whether the session participates in rounds.  Idle residents keep
+    /// their store slot but are skipped by every phase (O(active) rounds,
+    /// DESIGN.md §14).
+    pub(crate) active: bool,
 }
 
 impl Session {
@@ -167,6 +206,8 @@ impl Session {
             contexts,
             expected,
             waits,
+            slot: usize::MAX,
+            active: true,
         }
     }
 
@@ -681,11 +722,17 @@ type Leg = (f64, usize, EdgeLeg);
 /// see DESIGN.md §8 scaling caveats.
 #[derive(Default)]
 struct StepScratch {
+    /// The round's **active-set index**: list positions of the sessions
+    /// that participate this round, ascending (== ascending store slot).
+    /// Every other per-round buffer below is parallel to this index, so
+    /// a steady-state round is O(active) in policy math and edge
+    /// traffic, not O(resident) (DESIGN.md §14).
+    act: Vec<usize>,
     decisions: Vec<Decision>,
-    /// Canonical offload-merge queue: entries are `(session, ψ bytes)`
-    /// keyed by NIC-arrival time.  Pushing in session order makes ties
-    /// resolve by session id — the deterministic merge order every
-    /// worker count reproduces.
+    /// Canonical offload-merge queue: entries are `(active index, ψ
+    /// bytes)` keyed by NIC-arrival time with the **global session id**
+    /// as the tie key — the deterministic merge order every worker count
+    /// (and any residency layout) reproduces.
     arrivals: EventQueue<(usize, usize)>,
     legs: Vec<Leg>,
     tx_ms: Vec<f64>,
@@ -693,6 +740,23 @@ struct StepScratch {
     rejected: Vec<bool>,
     outcomes: Vec<Option<Outcome>>,
     scheduled: Vec<Scheduled>,
+}
+
+impl StepScratch {
+    /// Grow every active-set-parallel buffer to at least `cap` entries —
+    /// the churn-envelope pre-sizing [`Engine::reserve_sessions`] applies
+    /// so a fluctuating active set never reallocates mid-round.
+    fn reserve(&mut self, cap: usize) {
+        BatchScratch::grow(&mut self.act, cap);
+        BatchScratch::grow(&mut self.decisions, cap);
+        BatchScratch::grow(&mut self.legs, cap);
+        BatchScratch::grow(&mut self.tx_ms, cap);
+        BatchScratch::grow(&mut self.ingress_wait, cap);
+        BatchScratch::grow(&mut self.rejected, cap);
+        BatchScratch::grow(&mut self.outcomes, cap);
+        BatchScratch::grow(&mut self.scheduled, cap);
+        self.arrivals.reserve(cap);
+    }
 }
 
 /// Where one session stands inside the batched select passes.
@@ -715,21 +779,29 @@ enum Plan {
 /// `alloc/engine_armmajor_steady_state` audit.
 #[derive(Default)]
 struct BatchScratch {
-    /// θ̂ per shard slot, materialized by the batched `k_matvec` sweep
-    /// (`per × d`, row per session).
+    /// θ̂ per active session, materialized by the gathered `k_matvec`
+    /// sweep (`act × d`, row per active entry).
     thetas: Vec<f64>,
-    /// Arm-major score matrix (`per × max_arms`, row per session).
+    /// Arm-major score matrix (`act × max_arms`, row per active entry).
     scores: Vec<f64>,
-    /// Per-session pass state.
+    /// Per-active-entry pass state.
     plans: Vec<Plan>,
-    /// Gathered window evictions: slot index / flattened context /
+    /// Window-relative store slot per active entry, filled in pass 1 —
+    /// the gather index the batched kernels iterate.  Free slots and
+    /// idle residents inside the window are simply never listed.
+    jw: Vec<usize>,
+    /// Gathered window evictions: window slot / flattened context /
     /// feedback, in per-session eviction order (batched downdate input).
     ev_j: Vec<usize>,
     ev_x: Vec<f64>,
     ev_y: Vec<f64>,
     /// Gathered observe feedback, one entry max per session per round
     /// (batched update input; drift-consumed entries are compacted out).
+    /// `up_j` holds the window slot (the kernel index); `up_i` the
+    /// active-entry index (the session back-reference) — compacted in
+    /// lockstep.
     up_j: Vec<usize>,
+    up_i: Vec<usize>,
     up_x: Vec<f64>,
     up_y: Vec<f64>,
     /// Refresh/reset counters read before the deferred observes so the
@@ -752,10 +824,12 @@ impl BatchScratch {
         Self::grow(&mut self.thetas, per * d);
         Self::grow(&mut self.scores, per * arms);
         Self::grow(&mut self.plans, per);
+        Self::grow(&mut self.jw, per);
         Self::grow(&mut self.ev_j, per);
         Self::grow(&mut self.ev_x, per * d);
         Self::grow(&mut self.ev_y, per);
         Self::grow(&mut self.up_j, per);
+        Self::grow(&mut self.up_i, per);
         Self::grow(&mut self.up_x, per * d);
         Self::grow(&mut self.up_y, per);
         Self::grow(&mut self.ops_before, per);
@@ -888,6 +962,9 @@ fn session_realize(
 #[allow(clippy::too_many_arguments)]
 fn select_shard_batched(
     sessions: &mut [Session],
+    pos_base: usize,
+    act: &[usize],
+    slot_base: usize,
     decisions: &mut [Decision],
     win: &mut StoreSliceMut<'_>,
     batchable: &[bool],
@@ -897,25 +974,36 @@ fn select_shard_batched(
     contention: &Contention,
     round: &RoundInfo,
 ) {
-    let n = sessions.len();
+    let n = act.len();
     let d = win.dim();
-    debug_assert_eq!(win.len(), n);
-    debug_assert_eq!(batchable.len(), n);
+    debug_assert_eq!(decisions.len(), n);
     sc.plans.clear();
     sc.plans.resize(n, Plan::Done);
+    sc.jw.clear();
     sc.ev_j.clear();
     sc.ev_x.clear();
     sc.ev_y.clear();
 
     // Pass 1: prep + prelude (or the full scalar path for fallbacks).
-    for j in 0..n {
-        if !batchable[j] {
-            let mut slot = win.slot_mut(j);
-            decisions[j] =
-                session_select(&mut sessions[j], Some(&mut slot), t, k_estimate, contention, round);
+    // `act` holds absolute list positions; the shard's sessions slice
+    // starts at `pos_base` and its store window at slot `slot_base`.
+    for a in 0..n {
+        let pos = act[a];
+        let jw = sessions[pos - pos_base].slot - slot_base;
+        sc.jw.push(jw);
+        if !batchable[pos] {
+            let mut slot = win.slot_mut(jw);
+            decisions[a] = session_select(
+                &mut sessions[pos - pos_base],
+                Some(&mut slot),
+                t,
+                k_estimate,
+                contention,
+                round,
+            );
             continue;
         }
-        let s = &mut sessions[j];
+        let s = &mut sessions[pos - pos_base];
         let id = s.id;
         let Session { policy, env, source, front, contexts, expected, waits, .. } = s;
         let (is_key, weight) = prep_select(
@@ -935,30 +1023,31 @@ fn select_shard_batched(
         let lu = policy.as_batched().expect("batchable sessions are store-backed LinUCB");
         let (ev_j, ev_x, ev_y) = (&mut sc.ev_j, &mut sc.ev_x, &mut sc.ev_y);
         let (evicted, warmup) = lu.batch_select_prelude(t, p_max, |x, y| {
-            ev_j.push(j);
+            ev_j.push(jw);
             ev_x.extend_from_slice(x);
             ev_y.push(y);
         });
-        sc.plans[j] = Plan::Pending { is_key, weight, evicted, warmup };
+        sc.plans[a] = Plan::Pending { is_key, weight, evicted, warmup };
     }
 
-    // Pass 2: expired window entries leave every slot at once, then one
-    // strided sweep materializes θ̂ for the whole shard.
+    // Pass 2: expired window entries leave every touched slot at once,
+    // then one gathered sweep materializes θ̂ for exactly the active
+    // entries (O(active), not O(slots in the window)).
     if !sc.ev_j.is_empty() {
         win.downdate_batch_at(&sc.ev_j, &sc.ev_x, &sc.ev_y);
     }
     sc.thetas.clear();
     sc.thetas.resize(n * d, 0.0);
-    win.theta_batch_into(&mut sc.thetas);
+    win.theta_batch_at(&sc.jw, &mut sc.thetas);
 
     // Pass 3: θ̂ caches, warm-up finalization, scoring coefficients.
     let mut max_arms = 0;
-    for j in 0..n {
-        let Plan::Pending { is_key, weight, evicted, warmup } = sc.plans[j] else {
+    for a in 0..n {
+        let Plan::Pending { is_key, weight, evicted, warmup } = sc.plans[a] else {
             continue;
         };
-        let s = &mut sessions[j];
-        let row = &sc.thetas[j * d..(j + 1) * d];
+        let s = &mut sessions[act[a] - pos_base];
+        let row = &sc.thetas[a * d..(a + 1) * d];
         let p_max = s.env.num_partitions();
         let lu = s.policy.as_batched().expect("batchable");
         if let Some(arm) = warmup {
@@ -971,49 +1060,49 @@ fn select_shard_batched(
             let predicted_edge_ms = if arm == p_max {
                 None
             } else {
-                Some(win.slot_at(j).predict(&s.contexts[arm]) + wait)
+                Some(win.slot_at(sc.jw[a]).predict(&s.contexts[arm]) + wait)
             };
-            decisions[j] = Decision { p: arm, is_key, weight, predicted_edge_ms };
-            sc.plans[j] = Plan::Done;
+            decisions[a] = Decision { p: arm, is_key, weight, predicted_edge_ms };
+            sc.plans[a] = Plan::Done;
         } else {
             lu.set_theta_cache(row);
             let (conf_scale, alpha) = lu.batch_score_params(weight, &s.front);
-            sc.plans[j] = Plan::Score { is_key, weight, conf_scale, alpha };
+            sc.plans[a] = Plan::Score { is_key, weight, conf_scale, alpha };
             max_arms = max_arms.max(s.front.len());
         }
     }
 
     // Pass 4: the arm-major scoring sweep — same per-cell arithmetic as
     // the scalar `score_arms`, iterated arm-outer so each arm index
-    // streams across the shard's contiguous θ̂/A⁻¹ arenas.
+    // streams across the shard's gathered θ̂/A⁻¹ rows.
     let stride = max_arms;
     sc.scores.clear();
     sc.scores.resize(n * stride, 0.0);
     for p in 0..max_arms {
-        for j in 0..n {
-            let Plan::Score { conf_scale, alpha, .. } = sc.plans[j] else {
+        for a in 0..n {
+            let Plan::Score { conf_scale, alpha, .. } = sc.plans[a] else {
                 continue;
             };
-            let s = &sessions[j];
+            let s = &sessions[act[a] - pos_base];
             if p >= s.front.len() {
                 continue;
             }
             let x = &s.contexts[p];
             let wait = if round.signal.is_off() { 0.0 } else { s.waits[p] };
-            let pred = crate::bandit::linalg::dot(&sc.thetas[j * d..(j + 1) * d], x);
-            let width = (conf_scale * win.slot_at(j).confidence_sq(x)).max(0.0).sqrt();
-            sc.scores[j * stride + p] = s.front[p] + wait + pred - alpha * width;
+            let pred = crate::bandit::linalg::dot(&sc.thetas[a * d..(a + 1) * d], x);
+            let width = (conf_scale * win.slot_at(sc.jw[a]).confidence_sq(x)).max(0.0).sqrt();
+            sc.scores[a * stride + p] = s.front[p] + wait + pred - alpha * width;
         }
     }
 
     // Pass 5: per-session argmin + the post-pick prediction.
-    for j in 0..n {
-        let Plan::Score { is_key, weight, .. } = sc.plans[j] else {
+    for a in 0..n {
+        let Plan::Score { is_key, weight, .. } = sc.plans[a] else {
             continue;
         };
-        let s = &mut sessions[j];
+        let s = &mut sessions[act[a] - pos_base];
         let p_max = s.env.num_partitions();
-        let row = &sc.scores[j * stride..j * stride + p_max + 1];
+        let row = &sc.scores[a * stride..a * stride + p_max + 1];
         let p = s
             .policy
             .as_batched()
@@ -1024,10 +1113,10 @@ fn select_shard_batched(
         let predicted_edge_ms = if p == p_max {
             None
         } else {
-            Some(win.slot_at(j).predict(&s.contexts[p]) + wait)
+            Some(win.slot_at(sc.jw[a]).predict(&s.contexts[p]) + wait)
         };
-        decisions[j] = Decision { p, is_key, weight, predicted_edge_ms };
-        sc.plans[j] = Plan::Done;
+        decisions[a] = Decision { p, is_key, weight, predicted_edge_ms };
+        sc.plans[a] = Plan::Done;
     }
 }
 
@@ -1041,6 +1130,9 @@ fn select_shard_batched(
 #[allow(clippy::too_many_arguments)]
 fn observe_shard_batched(
     sessions: &mut [Session],
+    pos_base: usize,
+    act: &[usize],
+    slot_base: usize,
     decisions: &[Decision],
     legs: &[Leg],
     win: &mut StoreSliceMut<'_>,
@@ -1052,10 +1144,12 @@ fn observe_shard_batched(
     round: &RoundInfo,
     mut ring: Option<&mut TraceRing>,
 ) {
-    let n = sessions.len();
+    let n = act.len();
     let d = win.dim();
     let watch = ring.is_some();
+    sc.jw.clear();
     sc.up_j.clear();
+    sc.up_i.clear();
     sc.up_x.clear();
     sc.up_y.clear();
     sc.ops_before.clear();
@@ -1063,16 +1157,19 @@ fn observe_shard_batched(
     sc.resets_before.clear();
     sc.resets_before.resize(n, 0);
 
-    // Pass 1: realize every frame; batchable sessions defer their
-    // feedback into the gather arrays (session order = gather order).
-    for j in 0..n {
-        if !batchable[j] {
-            let mut slot = win.slot_mut(j);
+    // Pass 1: realize every active frame; batchable sessions defer their
+    // feedback into the gather arrays (active order = gather order).
+    for a in 0..n {
+        let pos = act[a];
+        let jw = sessions[pos - pos_base].slot - slot_base;
+        sc.jw.push(jw);
+        if !batchable[pos] {
+            let mut slot = win.slot_mut(jw);
             session_realize(
-                &mut sessions[j],
+                &mut sessions[pos - pos_base],
                 Some(&mut slot),
-                &decisions[j],
-                &legs[j],
+                &decisions[a],
+                &legs[a],
                 t,
                 k,
                 contention,
@@ -1082,15 +1179,16 @@ fn observe_shard_batched(
             continue;
         }
         if watch {
-            sc.ops_before[j] = win.slot_at(j).ops_since_refresh();
-            sc.resets_before[j] = sessions[j].policy.reset_count();
+            sc.ops_before[a] = win.slot_at(jw).ops_since_refresh();
+            sc.resets_before[a] = sessions[pos - pos_base].policy.reset_count();
         }
-        let s = &mut sessions[j];
+        let s = &mut sessions[pos - pos_base];
         let id = s.id;
         let Session { policy, env, metrics, front, contexts, expected, .. } = s;
-        let (up_j, up_x, up_y) = (&mut sc.up_j, &mut sc.up_x, &mut sc.up_y);
+        let (up_j, up_i, up_x, up_y) = (&mut sc.up_j, &mut sc.up_i, &mut sc.up_x, &mut sc.up_y);
         let mut sink = |x: &FeatureVector, y: f64| {
-            up_j.push(j);
+            up_j.push(jw);
+            up_i.push(a);
             up_x.extend_from_slice(x);
             up_y.push(y);
         };
@@ -1102,13 +1200,13 @@ fn observe_shard_batched(
             front,
             contexts,
             expected,
-            &decisions[j],
+            &decisions[a],
             t,
             k,
             contention,
-            legs[j].0,
-            legs[j].1,
-            legs[j].2,
+            legs[a].0,
+            legs[a].1,
+            legs[a].2,
             round,
             id,
             Feedback::Defer(&mut sink),
@@ -1121,13 +1219,14 @@ fn observe_shard_batched(
     // update.
     let mut w = 0;
     for i in 0..sc.up_j.len() {
-        let j = sc.up_j[i];
+        let jw = sc.up_j[i];
+        let a = sc.up_i[i];
         let y = sc.up_y[i];
         let mut xv = [0.0f64; crate::models::CONTEXT_DIM];
         xv.copy_from_slice(&sc.up_x[i * d..(i + 1) * d]);
         let consumed = {
-            let mut slot = win.slot_mut(j);
-            sessions[j]
+            let mut slot = win.slot_mut(jw);
+            sessions[act[a] - pos_base]
                 .policy
                 .as_batched()
                 .expect("batchable")
@@ -1136,12 +1235,14 @@ fn observe_shard_batched(
         if consumed {
             continue;
         }
-        sc.up_j[w] = j;
+        sc.up_j[w] = jw;
+        sc.up_i[w] = a;
         sc.up_y[w] = y;
         sc.up_x.copy_within(i * d..(i + 1) * d, w * d);
         w += 1;
     }
     sc.up_j.truncate(w);
+    sc.up_i.truncate(w);
     sc.up_y.truncate(w);
     sc.up_x.truncate(w * d);
 
@@ -1153,11 +1254,12 @@ fn observe_shard_batched(
     // Pass 4: per-observation bookkeeping (counters, window history, θ̂
     // cache) against the post-update slot, in the same session order.
     for i in 0..sc.up_j.len() {
-        let j = sc.up_j[i];
+        let jw = sc.up_j[i];
+        let a = sc.up_i[i];
         let mut xv = [0.0f64; crate::models::CONTEXT_DIM];
         xv.copy_from_slice(&sc.up_x[i * d..(i + 1) * d]);
-        let slot = win.slot_mut(j);
-        sessions[j]
+        let slot = win.slot_mut(jw);
+        sessions[act[a] - pos_base]
             .policy
             .as_batched()
             .expect("batchable")
@@ -1169,24 +1271,26 @@ fn observe_shard_batched(
     // within a worker differs, but the canonical drain sort makes the
     // drained trace identical).
     if let Some(ring) = ring {
-        for (j, s) in sessions.iter().enumerate() {
-            if !batchable[j] {
+        for a in 0..n {
+            let pos = act[a];
+            if !batchable[pos] {
                 continue;
             }
+            let s = &sessions[pos - pos_base];
             let clock = round.capture_ms(t, s.id);
-            let ops_after = win.slot_at(j).ops_since_refresh();
+            let ops_after = win.slot_at(sc.jw[a]).ops_since_refresh();
             let resets_after = s.policy.reset_count();
-            if ops_after < sc.ops_before[j] && resets_after == sc.resets_before[j] {
+            if ops_after < sc.ops_before[a] && resets_after == sc.resets_before[a] {
                 ring.push(TraceEvent::new(
                     EventKind::PolicyRefresh,
                     t,
                     Some(s.id),
                     clock,
-                    sc.ops_before[j] as f64,
+                    sc.ops_before[a] as f64,
                     0.0,
                 ));
             }
-            if resets_after > sc.resets_before[j] {
+            if resets_after > sc.resets_before[a] {
                 ring.push(TraceEvent::new(
                     EventKind::PolicyReset,
                     t,
@@ -1200,15 +1304,65 @@ fn observe_shard_batched(
     }
 }
 
-/// Run the select phase across all sessions, sharded over the worker
-/// pool when one exists.  The phase is independent per session (each
-/// owns its policy, environment RNG, and frame source; its learner state
-/// sits at the same index in `store`), so any worker count yields
+/// Split `items` into `cuts.len() + 1` contiguous mutable parts at the
+/// given ascending absolute cut positions: part 0 is `[0, cuts[0])`,
+/// part `w` is `[cuts[w-1], cuts[w])`, the last part runs to the end.
+fn split_positions<'a, T>(mut items: &'a mut [T], cuts: &[usize]) -> Vec<&'a mut [T]> {
+    let mut parts = Vec::with_capacity(cuts.len() + 1);
+    let mut base = 0;
+    for &c in cuts {
+        let (head, tail) = items.split_at_mut(c - base);
+        parts.push(head);
+        items = tail;
+        base = c;
+    }
+    parts.push(items);
+    parts
+}
+
+/// The per-shard tiling of one sharded phase: `act` (ascending list
+/// positions of this round's active sessions) splits into `per`-entry
+/// chunks, and the cut positions/slots anchor the congruent session
+/// splits and variable-width store windows.  Balancing by **active**
+/// count keeps workers evenly loaded however the idle residents are
+/// laid out (DESIGN.md §14).
+struct PhaseTiling {
+    per: usize,
+    /// Absolute list position where shard `w ≥ 1` begins (`act[w·per]`).
+    pos_cuts: Vec<usize>,
+    /// Absolute store slot where shard `w ≥ 1`'s window begins.
+    slot_cuts: Vec<usize>,
+}
+
+impl PhaseTiling {
+    fn new(sessions: &[Session], act: &[usize], workers: usize) -> PhaseTiling {
+        let per = shard_len(act.len(), workers);
+        let nshards = act.len().div_ceil(per);
+        let pos_cuts: Vec<usize> = (1..nshards).map(|w| act[w * per]).collect();
+        let slot_cuts: Vec<usize> = pos_cuts.iter().map(|&p| sessions[p].slot).collect();
+        PhaseTiling { per, pos_cuts, slot_cuts }
+    }
+
+    /// `(pos_base, slot_base)` for shard `w`.
+    fn base(&self, w: usize) -> (usize, usize) {
+        if w == 0 {
+            (0, 0)
+        } else {
+            (self.pos_cuts[w - 1], self.slot_cuts[w - 1])
+        }
+    }
+}
+
+/// Run the select phase across the round's active set, sharded over the
+/// worker pool when one exists.  The phase is independent per session
+/// (each owns its policy, environment RNG, and frame source; its learner
+/// state lives at its `slot` in `store`), so any worker count yields
 /// bit-identical decisions.
 #[allow(clippy::too_many_arguments)]
 fn select_phase(
     pool: Option<&WorkerPool>,
     sessions: &mut [Session],
+    act: &[usize],
     store: &mut PolicyStore,
     decisions: &mut [Decision],
     batchable: &[bool],
@@ -1220,21 +1374,25 @@ fn select_phase(
     round: RoundInfo,
     timing: &mut [f64],
 ) {
-    debug_assert_eq!(sessions.len(), decisions.len());
-    debug_assert_eq!(sessions.len(), store.len());
+    debug_assert_eq!(act.len(), decisions.len());
     debug_assert_eq!(sessions.len(), batchable.len());
-    // Explicit empty-shard no-op: a replica holding zero sessions (or a
-    // pool wider than the session list) must not rely on chunk-range
+    // Explicit empty no-op: a replica holding zero active sessions (or a
+    // pool wider than the active set) must not rely on chunk-range
     // arithmetic producing nothing to iterate.
-    if sessions.is_empty() {
+    if act.is_empty() {
         return;
     }
     let Some(pool) = pool else {
         let start = Instant::now();
         if batch {
+            // One window over the whole store (pos/slot bases 0) — free
+            // slots and idle residents inside it are never gathered.
             let mut win = store.as_slice_mut();
             select_shard_batched(
                 sessions,
+                0,
+                act,
+                0,
                 decisions,
                 &mut win,
                 batchable,
@@ -1245,39 +1403,49 @@ fn select_phase(
                 &round,
             );
         } else {
-            for (i, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
-                let mut slot = store.slot_mut(i);
+            for (&pos, d) in act.iter().zip(decisions.iter_mut()) {
+                let s = &mut sessions[pos];
+                let mut slot = store.slot_mut(s.slot);
                 *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
             }
         }
         timing[0] += start.elapsed().as_secs_f64() * 1e3;
         return;
     };
-    let per = shard_len(sessions.len(), pool.workers());
-    // The store tiles into per-shard strided windows exactly congruent
-    // with the session chunks: worker w's sessions and its ridge slots
-    // are disjoint borrows of the same arenas, no locks on the arrays
-    // themselves (DESIGN.md §11).  Each shard carries its worker's phase
-    // timing slot; short pools leave trailing slots untouched.
-    let shards: Vec<_> = sessions
-        .chunks_mut(per)
-        .zip(decisions.chunks_mut(per))
-        .zip(store.shard_slices(per))
-        .zip(batchable.chunks(per))
+    // Tile by active count: shard w owns act[w·per..(w+1)·per], the
+    // session run and store window spanning exactly those entries.
+    // Windows are disjoint borrows of the same arenas, no locks on the
+    // arrays themselves (DESIGN.md §11/§14).  Each shard carries its
+    // worker's phase timing slot; short pools leave trailing slots
+    // untouched.
+    let tiling = PhaseTiling::new(sessions, act, pool.workers());
+    let windows = store.windows_at(&tiling.slot_cuts);
+    let shards: Vec<_> = split_positions(sessions, &tiling.pos_cuts)
+        .into_iter()
+        .zip(act.chunks(tiling.per))
+        .zip(decisions.chunks_mut(tiling.per))
+        .zip(windows)
         .zip(scratch.iter_mut())
         .zip(timing.iter_mut())
-        .map(|(((((s, d), st), bt), sc), tm)| Mutex::new((s, d, st, bt, sc, tm)))
+        .enumerate()
+        .map(|(w, (((((s, a), d), win), sc), tm))| {
+            let (pos_base, slot_base) = tiling.base(w);
+            Mutex::new((s, pos_base, a, slot_base, d, win, sc, tm))
+        })
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let start = Instant::now();
             let mut guard = shard.lock().expect("select shard lock");
-            let (sessions, decisions, store, batchable, sc, tm) = &mut *guard;
+            let (sessions, pos_base, act, slot_base, decisions, win, sc, tm) = &mut *guard;
             if batch {
                 select_shard_batched(
                     &mut **sessions,
+                    *pos_base,
+                    act,
+                    *slot_base,
                     &mut **decisions,
-                    store,
+                    win,
                     batchable,
                     &mut **sc,
                     t,
@@ -1286,8 +1454,9 @@ fn select_phase(
                     &round,
                 );
             } else {
-                for (j, (s, d)) in sessions.iter_mut().zip(decisions.iter_mut()).enumerate() {
-                    let mut slot = store.slot_mut(j);
+                for (&pos, d) in act.iter().zip(decisions.iter_mut()) {
+                    let s = &mut sessions[pos - *pos_base];
+                    let mut slot = win.slot_mut(s.slot - *slot_base);
                     *d = session_select(s, Some(&mut slot), t, k_estimate, &contention, &round);
                 }
             }
@@ -1304,6 +1473,7 @@ fn select_phase(
 fn observe_phase(
     pool: Option<&WorkerPool>,
     sessions: &mut [Session],
+    act: &[usize],
     store: &mut PolicyStore,
     decisions: &[Decision],
     legs: &[Leg],
@@ -1317,11 +1487,10 @@ fn observe_phase(
     timing: &mut [f64],
     rings: Option<&mut [TraceRing]>,
 ) {
-    debug_assert_eq!(sessions.len(), decisions.len());
-    debug_assert_eq!(sessions.len(), legs.len());
-    debug_assert_eq!(sessions.len(), store.len());
+    debug_assert_eq!(act.len(), decisions.len());
+    debug_assert_eq!(act.len(), legs.len());
     debug_assert_eq!(sessions.len(), batchable.len());
-    if sessions.is_empty() {
+    if act.is_empty() {
         return;
     }
     let Some(pool) = pool else {
@@ -1331,6 +1500,9 @@ fn observe_phase(
             let mut win = store.as_slice_mut();
             observe_shard_batched(
                 sessions,
+                0,
+                act,
+                0,
                 decisions,
                 legs,
                 &mut win,
@@ -1343,8 +1515,9 @@ fn observe_phase(
                 ring0,
             );
         } else {
-            for (i, ((s, d), leg)) in sessions.iter_mut().zip(decisions).zip(legs).enumerate() {
-                let mut slot = store.slot_mut(i);
+            for ((&pos, d), leg) in act.iter().zip(decisions).zip(legs) {
+                let s = &mut sessions[pos];
+                let mut slot = store.slot_mut(s.slot);
                 session_realize(
                     s,
                     Some(&mut slot),
@@ -1369,30 +1542,37 @@ fn observe_phase(
         Some(rs) => rs.iter_mut().map(Some).collect(),
         None => (0..pool.workers()).map(|_| None).collect(),
     };
-    let per = shard_len(sessions.len(), pool.workers());
-    let shards: Vec<_> = sessions
-        .chunks_mut(per)
-        .zip(decisions.chunks(per).zip(legs.chunks(per)))
-        .zip(store.shard_slices(per))
-        .zip(batchable.chunks(per))
+    let tiling = PhaseTiling::new(sessions, act, pool.workers());
+    let windows = store.windows_at(&tiling.slot_cuts);
+    let shards: Vec<_> = split_positions(sessions, &tiling.pos_cuts)
+        .into_iter()
+        .zip(act.chunks(tiling.per))
+        .zip(decisions.chunks(tiling.per).zip(legs.chunks(tiling.per)))
+        .zip(windows)
         .zip(scratch.iter_mut())
         .zip(ring_opts)
         .zip(timing.iter_mut())
-        .map(|((((((s, (d, l)), st), bt), sc), ring), tm)| {
-            Mutex::new((s, d, l, st, bt, sc, ring, tm))
+        .enumerate()
+        .map(|(w, ((((((s, a), (d, l)), win), sc), ring), tm))| {
+            let (pos_base, slot_base) = tiling.base(w);
+            Mutex::new((s, pos_base, a, slot_base, d, l, win, sc, ring, tm))
         })
         .collect();
     pool.run(&|w| {
         if let Some(shard) = shards.get(w) {
             let start = Instant::now();
             let mut guard = shard.lock().expect("observe shard lock");
-            let (sessions, decisions, legs, store, batchable, sc, ring, tm) = &mut *guard;
+            let (sessions, pos_base, act, slot_base, decisions, legs, win, sc, ring, tm) =
+                &mut *guard;
             if batch {
                 observe_shard_batched(
                     &mut **sessions,
+                    *pos_base,
+                    act,
+                    *slot_base,
                     decisions,
                     legs,
-                    store,
+                    win,
                     batchable,
                     &mut **sc,
                     t,
@@ -1402,10 +1582,9 @@ fn observe_phase(
                     ring.as_deref_mut(),
                 );
             } else {
-                for (j, ((s, d), leg)) in
-                    sessions.iter_mut().zip(decisions.iter()).zip(legs.iter()).enumerate()
-                {
-                    let mut slot = store.slot_mut(j);
+                for ((&pos, d), leg) in act.iter().zip(decisions.iter()).zip(legs.iter()) {
+                    let s = &mut sessions[pos - *pos_base];
+                    let mut slot = win.slot_mut(s.slot - *slot_base);
                     session_realize(
                         s,
                         Some(&mut slot),
@@ -1427,15 +1606,32 @@ fn observe_phase(
 /// The multi-session serving engine (see module docs).
 pub struct Engine {
     pub cfg: EngineConfig,
+    /// Resident sessions, kept sorted by store slot between rounds
+    /// ([`Engine::commit_membership`]).  In a closed fleet slots are
+    /// handed out in id order, so this coincides with the historical
+    /// id-sorted list; churn recycles freed slots, and slot order keeps
+    /// phase iteration, shard tiling, and store windows congruent.
     sessions: Vec<Session>,
-    /// Structure-of-arrays learner state, one slot per resident session
-    /// at the same index (DESIGN.md §11): all ridge A matrices
-    /// contiguous, all A⁻¹ contiguous, all b vectors contiguous.  On
+    /// Structure-of-arrays learner state (DESIGN.md §11): all ridge A
+    /// matrices contiguous, all A⁻¹ contiguous, all b vectors
+    /// contiguous.  Each resident session binds one slot
+    /// (`Session::slot`); freed slots go on the store's free list and
+    /// are recycled at the next admission, so the arenas never compact
+    /// and surviving bindings stay valid across arbitrary churn.  On
     /// attach every policy moves its ridge state into its slot
     /// ([`Policy::adopt_slot`]); on detach ([`Engine::remove_session`])
     /// it takes the state back, so a migrating [`Session`] struct stays
     /// self-contained and cluster moves remain lossless.
     store: PolicyStore,
+    /// `(global id, list position)` sorted by id — the O(log n) id
+    /// lookup every cross-session mapping uses.  Stale while `dirty`.
+    id_index: Vec<(usize, usize)>,
+    /// Membership changed since the last [`Engine::commit_membership`]
+    /// (session order, `batchable`, and `id_index` are stale).
+    dirty: bool,
+    /// Next global id handed out by [`Engine::add_session`] — ids are
+    /// never recycled, so departed sessions stay addressable in traces.
+    next_id: usize,
     ingress: Option<SharedIngress>,
     /// The event-driven edge server — `None` when the scheduler config
     /// degenerates to the PR 1 lockstep rounds.
@@ -1508,6 +1704,9 @@ impl Engine {
             cfg,
             sessions: Vec::new(),
             store: PolicyStore::new(crate::models::CONTEXT_DIM),
+            id_index: Vec::new(),
+            dirty: false,
+            next_id: 0,
             ingress,
             scheduler,
             pool,
@@ -1523,49 +1722,47 @@ impl Engine {
         }
     }
 
-    /// Register a session; returns its id.
+    /// Register a session; returns its (never-recycled) global id.
     pub fn add_session(
         &mut self,
         policy: Box<dyn Policy>,
         env: Environment,
         source: FrameSource,
     ) -> usize {
-        let id = self.sessions.len();
-        let mut session = Session::new(id, policy, env, source);
-        self.store.push_slot();
-        let mut slot = self.store.slot_mut(id);
-        session.policy.adopt_slot(&mut slot);
-        self.batchable.push(session.policy.as_batched().is_some());
-        self.sessions.push(session);
-        self.trace_membership(EventKind::SessionAttach, id);
+        let id = self.next_id;
+        self.attach_session(Session::new(id, policy, env, source));
         id
     }
 
-    /// Attach a fully-built session (cluster placement/migration),
-    /// keeping the session list sorted by global id — the canonical
-    /// cross-session merge order (arrival time, session id) then matches
-    /// the push order at every worker count.
-    pub fn push_session(&mut self, mut session: Session) {
+    /// Attach a fully-built session: allocate (or recycle) a store slot,
+    /// move the incoming policy's owned ridge state into it (exact bits,
+    /// including the Sherman–Morrison refresh phase), and defer the
+    /// ordering work to [`Engine::commit_membership`] — O(1) amortized,
+    /// so a burst of admissions costs one sort at the next round.
+    pub fn attach_session(&mut self, mut session: Session) {
         debug_assert!(
-            self.sessions.iter().all(|s| s.id != session.id),
+            self.pos_of_id(session.id).is_none(),
             "duplicate session id {}",
             session.id
         );
-        let pos = self
-            .sessions
-            .iter()
-            .position(|s| s.id > session.id)
-            .unwrap_or(self.sessions.len());
-        // Open the store slot at the same index, then move the incoming
-        // policy's owned ridge state into it (exact bits, including the
-        // Sherman–Morrison refresh phase).
-        self.store.insert_slot(pos);
-        let mut slot = self.store.slot_mut(pos);
-        session.policy.adopt_slot(&mut slot);
-        self.batchable.insert(pos, session.policy.as_batched().is_some());
+        let slot = self.store.alloc_slot();
+        let mut sm = self.store.slot_mut(slot);
+        session.policy.adopt_slot(&mut sm);
+        session.slot = slot;
         let id = session.id;
-        self.sessions.insert(pos, session);
+        self.next_id = self.next_id.max(id + 1);
+        self.batchable.push(session.policy.as_batched().is_some());
+        self.sessions.push(session);
+        self.dirty = true;
         self.trace_membership(EventKind::SessionAttach, id);
+    }
+
+    /// Attach a fully-built session (cluster placement/migration) and
+    /// commit membership immediately, so the engine's positional views
+    /// are consistent before the next round.
+    pub fn push_session(&mut self, session: Session) {
+        self.attach_session(session);
+        self.commit_membership();
     }
 
     /// Detach the session with the given global id (cluster migration).
@@ -1575,29 +1772,207 @@ impl Engine {
     /// Only call at a round boundary: the edge queue holds no
     /// per-session references between rounds.
     pub fn remove_session(&mut self, id: usize) -> Session {
-        let idx = self
-            .sessions
-            .iter()
-            .position(|s| s.id == id)
+        let pos = self
+            .pos_of_id(id)
             .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
-        let mut session = self.sessions.remove(idx);
-        // Hand the ridge state back before closing the slot: the departing
+        let mut session = self.sessions.swap_remove(pos);
+        self.batchable.swap_remove(pos);
+        // Hand the ridge state back before freeing the slot: the departing
         // session is self-contained again (same bits, same refresh phase).
-        session.policy.release_slot(self.store.slot(idx));
-        self.store.remove_slot(idx);
-        self.batchable.remove(idx);
+        session.policy.release_slot(self.store.slot(session.slot));
+        self.store.free_slot(session.slot);
+        session.slot = usize::MAX;
+        session.active = true;
+        self.dirty = true;
+        self.commit_membership();
         self.trace_membership(EventKind::SessionEvict, id);
         session
+    }
+
+    /// Restore the between-rounds membership invariants after churn:
+    /// sessions sorted by store slot, `batchable` re-derived per
+    /// position, and the id index rebuilt.  Idempotent and allocation
+    /// free once [`Engine::reserve_sessions`] has sized the structures —
+    /// `sort_unstable` is O(n) on the nearly-sorted layouts churn
+    /// produces, and [`Engine::step`] calls this once per dirty round.
+    fn commit_membership(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.sessions.sort_unstable_by_key(|s| s.slot);
+        self.batchable.clear();
+        for s in &mut self.sessions {
+            self.batchable.push(s.policy.as_batched().is_some());
+        }
+        self.id_index.clear();
+        self.id_index.extend(self.sessions.iter().enumerate().map(|(pos, s)| (s.id, pos)));
+        self.id_index.sort_unstable_by_key(|&(id, _)| id);
+        self.dirty = false;
+    }
+
+    /// List position of global id `id` — binary search through the id
+    /// index when it is fresh, linear scan while membership edits are
+    /// pending.
+    fn pos_of_id(&self, id: usize) -> Option<usize> {
+        if self.dirty {
+            self.sessions.iter().position(|s| s.id == id)
+        } else {
+            self.id_index
+                .binary_search_by_key(&id, |&(i, _)| i)
+                .ok()
+                .map(|k| self.id_index[k].1)
+        }
+    }
+
+    /// Is a session with this global id resident (active or idle)?
+    pub fn contains(&self, id: usize) -> bool {
+        self.pos_of_id(id).is_some()
+    }
+
+    /// Borrow the resident session with this global id.
+    pub fn session_by_id(&self, id: usize) -> Option<&Session> {
+        self.pos_of_id(id).map(|pos| &self.sessions[pos])
+    }
+
+    /// Park (`false`) or resume (`true`) a resident session without
+    /// detaching it: an idle resident keeps its store slot, environment
+    /// clock, and every cursor exactly where they are, but is skipped by
+    /// every phase until resumed — rounds cost O(active), not
+    /// O(resident) (DESIGN.md §14).
+    pub fn set_active(&mut self, id: usize, active: bool) {
+        let pos = self
+            .pos_of_id(id)
+            .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
+        self.sessions[pos].active = active;
+    }
+
+    /// Resident sessions currently participating in rounds.
+    pub fn num_active(&self) -> usize {
+        self.sessions.iter().filter(|s| s.active).count()
+    }
+
+    /// Can the session with this id round-trip through the cold arena
+    /// ([`Policy::supports_hibernate`])?
+    pub fn can_hibernate(&self, id: usize) -> bool {
+        self.pos_of_id(id)
+            .is_some_and(|pos| self.sessions[pos].policy.supports_hibernate())
+    }
+
+    /// Hibernate a resident session at a round boundary: pack its policy
+    /// cold state (ridge slot included), environment cursor, and
+    /// frame-source cursor into `arena` (cleared first), free its store
+    /// slot, and drop the [`Session`] — the session's resident cost
+    /// becomes the arena bytes plus its metrics, nothing else
+    /// (DESIGN.md §14).  Pass a recycled arena to keep churn rounds
+    /// allocation-free.
+    pub fn hibernate_session(&mut self, id: usize, mut arena: Vec<u8>) -> super::ColdSession {
+        let pos = self
+            .pos_of_id(id)
+            .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
+        assert!(
+            self.sessions[pos].policy.supports_hibernate(),
+            "policy {} cannot hibernate",
+            self.sessions[pos].policy.name()
+        );
+        let session = self.sessions.swap_remove(pos);
+        self.batchable.swap_remove(pos);
+        self.dirty = true;
+        arena.clear();
+        session.policy.pack_cold(Some(self.store.slot(session.slot)), &mut arena);
+        session.env.pack_cursor(&mut arena);
+        session.source.pack_cursor(&mut arena);
+        self.store.free_slot(session.slot);
+        self.trace_membership_b(EventKind::SessionHibernate, id, arena.len() as f64);
+        super::ColdSession { id, arena, metrics: session.metrics }
+    }
+
+    /// Wake a hibernated session: bind a (recycled) store slot to the
+    /// freshly-built `shell`, then overwrite policy, environment, and
+    /// frame-source state from the cold arena — bit-identical to a twin
+    /// that was never hibernated (pinned in `rust/tests/fleet.rs`).  The
+    /// shell must be constructed from the same parameters as the
+    /// original (wake rebinds structure; the arena restores state).
+    /// Returns the arena for reuse.
+    pub fn wake_session(&mut self, cold: super::ColdSession, mut shell: Session) -> Vec<u8> {
+        let super::ColdSession { id, arena, metrics } = cold;
+        debug_assert_eq!(shell.id, id, "wake shell must match the cold session's id");
+        shell.metrics = metrics;
+        let slot = self.store.alloc_slot();
+        {
+            let mut sm = self.store.slot_mut(slot);
+            shell.policy.adopt_slot(&mut sm);
+        }
+        shell.slot = slot;
+        {
+            let mut r = crate::util::bytes::Reader::new(&arena);
+            let mut sm = self.store.slot_mut(slot);
+            shell.policy.unpack_cold(Some(&mut sm), &mut r);
+            shell.env.unpack_cursor(&mut r);
+            shell.source.unpack_cursor(&mut r);
+            assert!(r.is_empty(), "cold arena not fully consumed on wake (session {id})");
+        }
+        self.batchable.push(shell.policy.as_batched().is_some());
+        self.next_id = self.next_id.max(id + 1);
+        self.sessions.push(shell);
+        self.dirty = true;
+        self.trace_membership_b(EventKind::SessionWake, id, arena.len() as f64);
+        arena
+    }
+
+    /// Permanently remove a resident session at a round boundary,
+    /// discarding learner and environment state but returning its
+    /// metrics so its served records survive for reporting.
+    pub fn evict_session(&mut self, id: usize) -> Metrics {
+        let pos = self
+            .pos_of_id(id)
+            .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
+        let session = self.sessions.swap_remove(pos);
+        self.batchable.swap_remove(pos);
+        self.store.free_slot(session.slot);
+        self.dirty = true;
+        self.trace_membership(EventKind::SessionEvict, id);
+        session.metrics
+    }
+
+    /// Pre-size the membership structures (and the store's slot arenas +
+    /// free list) for `extra` more resident sessions, so admissions,
+    /// hibernations, and wakes within that envelope never allocate
+    /// inside a churn round.
+    pub fn reserve_sessions(&mut self, extra: usize) {
+        self.sessions.reserve(extra);
+        self.batchable.reserve(extra);
+        let want = self.sessions.len() + extra;
+        self.id_index.reserve(want.saturating_sub(self.id_index.len()));
+        self.store.reserve_slots(extra);
+        // Pre-size every per-round buffer to the residency envelope so a
+        // churn round (admission + hibernation + active-set growth) stays
+        // allocation-free — the hotpath bench's churn audit.
+        self.scratch.reserve(want);
+        if want > 0 {
+            let per = shard_len(want, self.cfg.workers.max(1));
+            let d = self.store.dim();
+            let arms =
+                self.sessions.iter().map(|s| s.env.num_partitions() + 1).max().unwrap_or(0);
+            for sc in &mut self.select_scratch {
+                sc.reserve(per, d, arms);
+            }
+        }
     }
 
     /// Emit a membership trace event (attach/evict), stamped at the
     /// current round boundary on the virtual clock with the resident
     /// count after the change.
     fn trace_membership(&mut self, kind: EventKind, id: usize) {
+        self.trace_membership_b(kind, id, 0.0);
+    }
+
+    /// [`Engine::trace_membership`] with a payload in the `b` field
+    /// (hibernate/wake carry the cold-arena byte count).
+    fn trace_membership_b(&mut self, kind: EventKind, id: usize, b: f64) {
         if let Some(tr) = self.tracer.as_mut() {
             let clock = self.round as f64 * self.cfg.frame_interval_ms;
             let n = self.sessions.len() as f64;
-            tr.main().push(TraceEvent::new(kind, self.round, Some(id), clock, n, 0.0));
+            tr.main().push(TraceEvent::new(kind, self.round, Some(id), clock, n, b));
         }
     }
 
@@ -1696,9 +2071,12 @@ impl Engine {
     }
 
     pub fn into_sessions(mut self) -> Vec<Session> {
-        for (i, s) in self.sessions.iter_mut().enumerate() {
-            s.policy.release_slot(self.store.slot(i));
+        for s in self.sessions.iter_mut() {
+            s.policy.release_slot(self.store.slot(s.slot));
+            s.slot = usize::MAX;
         }
+        // Canonical hand-off order (report-time only).
+        self.sessions.sort_unstable_by_key(|s| s.id);
         self.sessions
     }
 
@@ -1706,16 +2084,15 @@ impl Engine {
     /// through its store slot (works for store-backed and owned policies
     /// alike — the slot is simply ignored by the latter).
     pub fn policy_snapshot(&self, idx: usize) -> PolicySnapshot {
-        self.sessions[idx].policy.snapshot_in(Some(self.store.slot(idx)))
+        let s = &self.sessions[idx];
+        s.policy.snapshot_in(Some(self.store.slot(s.slot)))
     }
 
-    /// [`Engine::policy_snapshot`] addressed by *global* session id
-    /// (sessions are kept sorted by id, so this is an exact lookup).
+    /// [`Engine::policy_snapshot`] addressed by *global* session id.
     pub fn policy_snapshot_by_id(&self, id: usize) -> PolicySnapshot {
         let idx = self
-            .sessions
-            .binary_search_by_key(&id, |s| s.id)
-            .unwrap_or_else(|_| panic!("no session with id {id} in this engine"));
+            .pos_of_id(id)
+            .unwrap_or_else(|| panic!("no session with id {id} in this engine"));
         self.policy_snapshot(idx)
     }
 
@@ -1763,7 +2140,21 @@ impl Engine {
     /// advances so replicas stay aligned.
     pub fn step(&mut self) {
         let step_start = Instant::now();
-        if self.sessions.is_empty() {
+        self.commit_membership();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        // The round's active-set index: ascending list positions (==
+        // ascending slots) of the sessions that participate.  O(resident)
+        // to rebuild; every phase below is O(active).
+        scratch.act.clear();
+        scratch
+            .act
+            .extend(self.sessions.iter().enumerate().filter(|(_, s)| s.active).map(|(i, _)| i));
+        if scratch.act.is_empty() {
+            // No active sessions (an empty engine, or an all-idle
+            // resident fleet): a deterministic no-op round — the virtual
+            // clock and queue state stay put, k_t = 0 is logged, and the
+            // round counter advances so replicas stay aligned.
+            self.scratch = scratch;
             self.offloaders_last = 0;
             self.offload_counts.push(0);
             self.push_round_barrier(self.round, 0, step_start);
@@ -1773,7 +2164,7 @@ impl Engine {
         let t = self.round;
         let k_estimate = self.offloaders_last;
         let contention = self.cfg.contention;
-        let n = self.sessions.len();
+        let n = scratch.act.len();
         let round = self.round_info();
         if round.event {
             // Trace the frozen pre-round forecast every policy selects
@@ -1789,11 +2180,10 @@ impl Engine {
                 ));
             }
         }
-        let mut scratch = std::mem::take(&mut self.scratch);
 
-        // Phase 1 (sharded): every session picks a partition under last
-        // round's observed concurrency (the causal load estimate) — or,
-        // under a queue signal, the pre-round queue forecast.
+        // Phase 1 (sharded): every active session picks a partition under
+        // last round's observed concurrency (the causal load estimate) —
+        // or, under a queue signal, the pre-round queue forecast.
         scratch.decisions.clear();
         scratch.decisions.resize(
             n,
@@ -1803,6 +2193,7 @@ impl Engine {
         select_phase(
             self.pool.as_ref(),
             &mut self.sessions,
+            &scratch.act,
             &mut self.store,
             &mut scratch.decisions,
             &self.batchable,
@@ -1820,8 +2211,8 @@ impl Engine {
         let k = scratch
             .decisions
             .iter()
-            .zip(&self.sessions)
-            .filter(|(d, s)| d.p != s.env.num_partitions())
+            .zip(scratch.act.iter())
+            .filter(|(d, &pos)| d.p != self.sessions[pos].env.num_partitions())
             .count();
 
         if self.scheduler.is_none() {
@@ -1864,15 +2255,17 @@ impl Engine {
     ) {
         let contention = self.cfg.contention;
         let now_ms = t as f64 * self.cfg.frame_interval_ms;
-        let n = self.sessions.len();
-        scratch.legs.clear();
-        scratch.legs.resize(n, (0.0, 1, EdgeLeg::Lockstep));
+        let StepScratch { act, decisions, legs, arrivals, .. } = scratch;
+        let n = act.len();
+        legs.clear();
+        legs.resize(n, (0.0, 1, EdgeLeg::Lockstep));
 
         // Trace every offload submission (tracer-gated: recomputing
         // bytes/tx here keeps the hot loop below untouched when off).
         if let Some(tr) = self.tracer.as_mut() {
             let ring = tr.main();
-            for (s, d) in self.sessions.iter().zip(scratch.decisions.iter()) {
+            for (&pos, d) in act.iter().zip(decisions.iter()) {
+                let s = &self.sessions[pos];
                 if d.p == s.env.num_partitions() {
                     continue;
                 }
@@ -1899,12 +2292,11 @@ impl Engine {
         // its front finished AND its bytes crossed the session's own
         // uplink (expected tx time; the noisy realization is drawn in
         // realize_one on top of this queueing term).  The merge order is
-        // canonical — arrival time, ties by session id — realized by
-        // pushing into the deterministic [`EventQueue`] in session order
-        // and popping in time order.
+        // canonical — arrival time, ties by **global session id** — so
+        // neither the worker count nor the residency layout perturbs it.
         if let Some(ingress) = &mut self.ingress {
-            let queue = &mut scratch.arrivals;
-            for (i, (s, d)) in self.sessions.iter().zip(scratch.decisions.iter()).enumerate() {
+            for (a, (&pos, d)) in act.iter().zip(decisions.iter()).enumerate() {
+                let s = &self.sessions[pos];
                 if d.p == s.env.num_partitions() {
                     continue;
                 }
@@ -1914,10 +2306,10 @@ impl Engine {
                     s.env.current_rate_mbps(),
                     s.env.rtt_ms,
                 );
-                queue.push(now_ms + s.front[d.p] + tx, (i, bytes));
+                arrivals.push_keyed(now_ms + s.front[d.p] + tx, s.id as u64, (a, bytes));
             }
-            while let Some((arrival_ms, (i, bytes))) = queue.pop() {
-                scratch.legs[i].0 = ingress.consume(bytes, arrival_ms);
+            while let Some((arrival_ms, (a, bytes))) = arrivals.pop() {
+                legs[a].0 = ingress.consume(bytes, arrival_ms);
             }
         }
         self.phases.add(Phase::Realize, 0, realize_start.elapsed().as_secs_f64() * 1e3);
@@ -1926,6 +2318,7 @@ impl Engine {
         observe_phase(
             self.pool.as_ref(),
             &mut self.sessions,
+            &scratch.act,
             &mut self.store,
             &scratch.decisions,
             &scratch.legs,
@@ -1955,11 +2348,11 @@ impl Engine {
     /// learn + record step fans out across the pool.
     fn realize_event(&mut self, t: usize, k: usize, scratch: &mut StepScratch, round: RoundInfo) {
         let contention = self.cfg.contention;
-        let n = self.sessions.len();
         let batch = self.batch_active();
         let Engine {
             sessions,
             store,
+            id_index,
             ingress,
             scheduler,
             pool,
@@ -1977,19 +2370,32 @@ impl Engine {
         let mut ring = tracer.as_mut().map(|tr| tr.main());
         let submit_start = Instant::now();
 
-        scratch.tx_ms.clear();
-        scratch.tx_ms.resize(n, 0.0);
-        scratch.ingress_wait.clear();
-        scratch.ingress_wait.resize(n, 0.0);
-        scratch.rejected.clear();
-        scratch.rejected.resize(n, false);
-        scratch.outcomes.clear();
-        scratch.outcomes.resize(n, None);
+        let StepScratch {
+            act,
+            decisions,
+            arrivals,
+            legs,
+            tx_ms,
+            ingress_wait,
+            rejected,
+            outcomes,
+            scheduled,
+        } = scratch;
+        let n = act.len();
+        tx_ms.clear();
+        tx_ms.resize(n, 0.0);
+        ingress_wait.clear();
+        ingress_wait.resize(n, 0.0);
+        rejected.clear();
+        rejected.resize(n, false);
+        outcomes.clear();
+        outcomes.resize(n, None);
 
         // NIC arrivals in physical order (same canonical merge as the
-        // lockstep ingress pass: arrival time, ties by session id).
-        let queue = &mut scratch.arrivals;
-        for (i, (s, d)) in sessions.iter().zip(scratch.decisions.iter()).enumerate() {
+        // lockstep ingress pass: arrival time, ties by global session
+        // id).
+        for (a, (&pos, d)) in act.iter().zip(decisions.iter()).enumerate() {
+            let s = &sessions[pos];
             if d.p == s.env.num_partitions() {
                 continue;
             }
@@ -1997,10 +2403,11 @@ impl Engine {
             let tx =
                 crate::simulator::tx_delay_ms(bytes, s.env.current_rate_mbps(), s.env.rtt_ms);
             // Capture staggering keys on the *global* session id (== the
-            // local index in a standalone engine, but not in a cluster
-            // replica, where ids are cluster-wide).
+            // local index in a standalone closed engine, but not in a
+            // cluster replica or a churned fleet, where ids outlive
+            // residency layouts).
             let capture = round.capture_ms(t, s.id);
-            scratch.tx_ms[i] = tx;
+            tx_ms[a] = tx;
             if let Some(r) = ring.as_deref_mut() {
                 r.push(TraceEvent::new(
                     EventKind::FrameSubmitted,
@@ -2011,22 +2418,23 @@ impl Engine {
                     bytes as f64,
                 ));
             }
-            queue.push(capture + s.front[d.p] + tx, (i, bytes));
+            arrivals.push_keyed(capture + s.front[d.p] + tx, s.id as u64, (a, bytes));
         }
 
         // Admission (before the payload spends shared-ingress bandwidth),
         // then ingress, then the waiting room.
-        while let Some((nic_ms, (i, bytes))) = queue.pop() {
+        while let Some((nic_ms, (a, bytes))) = arrivals.pop() {
+            let i = act[a];
             if !scheduler.has_room() {
                 scheduler.note_rejected();
-                scratch.rejected[i] = true;
+                rejected[a] = true;
                 if let Some(r) = ring.as_deref_mut() {
                     r.push(TraceEvent::new(
                         EventKind::FrameRejected,
                         t,
                         Some(sessions[i].id),
                         nic_ms,
-                        scratch.decisions[i].p as f64,
+                        decisions[a].p as f64,
                         0.0,
                     ));
                 }
@@ -2036,8 +2444,8 @@ impl Engine {
                 Some(g) => g.consume(bytes, nic_ms),
                 None => 0.0,
             };
-            scratch.ingress_wait[i] = ing;
-            let d = &scratch.decisions[i];
+            ingress_wait[a] = ing;
+            let d = &decisions[a];
             if let Some(r) = ring.as_deref_mut() {
                 r.push(TraceEvent::new(
                     EventKind::FrameAdmitted,
@@ -2080,15 +2488,20 @@ impl Engine {
         phases.add(Phase::Submit, 0, submit_start.elapsed().as_secs_f64() * 1e3);
         let realize_start = Instant::now();
 
-        scheduler.drain_scheduled_into(&mut scratch.scheduled);
-        for sch in &scratch.scheduled {
-            // Map the job's global session id back to its local slot
-            // (sessions are kept sorted by id, so this is an exact,
-            // allocation-free lookup).
-            let local = sessions
-                .binary_search_by_key(&sch.session, |s| s.id)
-                .expect("scheduled job belongs to a resident session");
-            scratch.outcomes[local] = Some(Outcome::Served {
+        scheduler.drain_scheduled_into(scheduled);
+        for sch in scheduled.iter() {
+            // Map the job's global session id back through the id index
+            // to its list position, then to its active-set entry — both
+            // exact, allocation-free lookups.
+            let pos = id_index
+                [id_index
+                    .binary_search_by_key(&sch.session, |&(id, _)| id)
+                    .expect("scheduled job belongs to a resident session")]
+            .1;
+            let a = act
+                .binary_search(&pos)
+                .expect("scheduled job belongs to an active session");
+            outcomes[a] = Some(Outcome::Served {
                 queue_wait_ms: sch.queue_wait_ms,
                 service_ms: sch.service_ms,
                 batch_size: sch.batch_size,
@@ -2104,14 +2517,14 @@ impl Engine {
                 ));
             }
         }
-        if !scratch.scheduled.is_empty() {
+        if !scheduled.is_empty() {
             if let Some(r) = ring.as_deref_mut() {
                 r.push(TraceEvent::new(
                     EventKind::QueueDrain,
                     t,
                     None,
                     scheduler.free_at_ms(),
-                    scratch.scheduled.len() as f64,
+                    scheduled.len() as f64,
                     scheduler.pending() as f64,
                 ));
             }
@@ -2120,13 +2533,14 @@ impl Engine {
         // Per-session leg resolution (cheap, read-only), then the
         // sharded observe phase: each session's noise stream draws
         // deterministically, exactly one draw per offload attempt.
-        scratch.legs.clear();
-        for (i, (s, d)) in sessions.iter().zip(scratch.decisions.iter()).enumerate() {
+        legs.clear();
+        for (a, (&pos, d)) in act.iter().zip(decisions.iter()).enumerate() {
+            let s = &sessions[pos];
             let p = d.p;
             let leg = if p == s.env.num_partitions() {
                 (0.0, 1, EdgeLeg::Lockstep)
-            } else if scratch.rejected[i] {
-                let mean = scratch.tx_ms[i] + s.env.device_fallback_ms(p);
+            } else if rejected[a] {
+                let mean = tx_ms[a] + s.env.device_fallback_ms(p);
                 if let Some(r) = ring.as_deref_mut() {
                     r.push(TraceEvent::new(
                         EventKind::DeviceFallback,
@@ -2139,16 +2553,16 @@ impl Engine {
                 }
                 (0.0, 0, EdgeLeg::Event { mean_ms: mean, rejected: true })
             } else {
-                match scratch.outcomes[i] {
+                match outcomes[a] {
                     Some(Outcome::Served { queue_wait_ms, service_ms, batch_size }) => {
-                        let qw = scratch.ingress_wait[i] + queue_wait_ms;
-                        let mean = scratch.tx_ms[i] + qw + service_ms;
+                        let qw = ingress_wait[a] + queue_wait_ms;
+                        let mean = tx_ms[a] + qw + service_ms;
                         (qw, batch_size, EdgeLeg::Event { mean_ms: mean, rejected: false })
                     }
                     _ => unreachable!("every admitted offload is scheduled"),
                 }
             };
-            scratch.legs.push(leg);
+            legs.push(leg);
         }
         drop(ring);
         phases.add(Phase::Realize, 0, realize_start.elapsed().as_secs_f64() * 1e3);
@@ -2156,9 +2570,10 @@ impl Engine {
         observe_phase(
             pool.as_ref(),
             sessions,
+            act,
             store,
-            &scratch.decisions,
-            &scratch.legs,
+            decisions,
+            legs,
             batchable,
             select_scratch,
             batch,

@@ -1,0 +1,44 @@
+//! Byte-cost hibernation: the cold representation of a parked session.
+//!
+//! A hibernated session costs *bytes, not slots*: the engine packs the
+//! policy's cold state (ridge `A`/`b` plus scalar learner state), the
+//! environment cursor (RNG stream, frame index, link state), and the
+//! video-source cursor into one flat little-endian arena
+//! ([`crate::util::bytes`]), then frees the session's policy-store slot
+//! and drops the [`super::Session`] entirely.  Waking allocates a fresh
+//! slot (free-list recycling keeps slot order == residency order),
+//! rebinds a shell session, and unpacks the arena — bit-identical to a
+//! twin that never slept (DESIGN.md §14).
+//!
+//! The arena `Vec<u8>` is caller-owned and recycled: `hibernate_session`
+//! takes a spare buffer and fills it; `wake_session` returns it empty for
+//! the pool.  A steady-state churn round therefore performs no heap
+//! allocation even while parking and waking sessions.
+
+use super::metrics::Metrics;
+
+/// A parked session: everything needed to resurrect it bit-identically,
+/// flattened to bytes, plus the (uncompressed) per-frame metrics that
+/// must survive hibernation for end-of-run reporting.
+///
+/// Produced by [`super::Engine::hibernate_session`] and consumed by
+/// [`super::Engine::wake_session`].
+#[derive(Debug)]
+pub struct ColdSession {
+    /// Global session id (never recycled across the fleet's lifetime).
+    pub id: usize,
+    /// Flat little-endian cold state: policy (`pack_cold`), environment
+    /// cursor, then frame-source cursor, in that fixed order.
+    pub arena: Vec<u8>,
+    /// Per-frame records carried across the gap — metrics are reporting
+    /// state, not learner state, so they ride along uncompressed.
+    pub metrics: Metrics,
+}
+
+impl ColdSession {
+    /// Resident byte cost of the packed state (the `b` payload of the
+    /// `session_hibernate` trace event).
+    pub fn cold_bytes(&self) -> usize {
+        self.arena.len()
+    }
+}

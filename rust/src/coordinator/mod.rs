@@ -11,6 +11,12 @@
 //!   deterministic session migration at round boundaries (DESIGN.md §10).
 //! * [`pool`] — the fixed-size persistent worker pool behind the
 //!   engine's parallel select/observe phases.
+//! * [`hibernate`] — the byte-cost cold representation of a parked
+//!   session ([`hibernate::ColdSession`]); packed/unpacked by the engine
+//!   at round boundaries (DESIGN.md §14).
+//! * [`openworld`] — the open-world fleet driver: deterministic
+//!   arrival/departure churn with duty-cycle hibernation over one engine
+//!   ([`openworld::OpenWorld`]), O(active) per round.
 //! * [`experiment`] — the single-stream simulation runner (all paper
 //!   exhibits); a thin wrapper over one engine session.
 //! * [`pipeline`] — the *real* serving path: PartNet over two PJRT clients
@@ -24,12 +30,16 @@ pub mod cluster;
 pub mod engine;
 pub mod exhibits;
 pub mod experiment;
+pub mod hibernate;
 pub mod metrics;
+pub mod openworld;
 pub mod pipeline;
 pub mod pool;
 
 pub use cluster::{cluster_from_config, Cluster, ClusterConfig, Placement, Replica, ReplicaSpec};
 pub use engine::{Engine, EngineConfig, FrameSource, SelectBatch, Session};
+pub use hibernate::ColdSession;
+pub use openworld::{openworld_from_config, OpenWorld, OpenWorldStats};
 pub use experiment::{quick_run, run};
 pub use metrics::{FleetSummary, FrameRecord, Metrics, ReplicaSummary, Summary};
 pub use pipeline::{serve, PipelineConfig, ServingReport};

@@ -1,0 +1,462 @@
+//! Open-world fleet driver: deterministic session churn over one engine.
+//!
+//! Closed-world benchmarks hold the population fixed; a real edge fleet
+//! does not.  This driver runs a [`ChurnSchedule`] — a deterministic
+//! open-loop arrival/departure process with per-session duty cycles —
+//! against one [`Engine`], applying every membership change at round
+//! boundaries only (the engine's contract):
+//!
+//! 1. **Departures** — sessions whose lifespan expires this round are
+//!    evicted (resident) or dropped from cold storage (hibernated); their
+//!    metrics survive for end-of-run reporting.
+//! 2. **Sleeps** — sessions whose duty burst ends are hibernated into a
+//!    byte arena ([`super::ColdSession`]) when the policy supports it, or
+//!    parked resident-idle otherwise.
+//! 3. **Wakes** — sessions whose next burst starts are woken from cold
+//!    (slot rebind + arena unpack) or flipped back to active.
+//! 4. **Arrivals** — new global ids are admitted with freshly built
+//!    sessions; each session's whole life is a pure function of
+//!    `(seed, id)`, so lazily materializing session 50 000 cannot perturb
+//!    anyone else.  Admits that arrive off-duty hibernate immediately,
+//!    so residency tracks the active set from round 0.
+//!
+//! Every phase transition is found in O(transitions) via cycle-offset
+//! buckets (`(arrival + phase) mod period` congruence classes) and a
+//! departure ring — the driver never scans the live population, and the
+//! engine's active-set index keeps the round itself O(active).  With
+//! [`OpenWorld::prepare`] pre-sizing shells, arenas, and buckets, a
+//! steady-state churn round (admission + hibernation included) performs
+//! zero heap allocations — audited in `rust/benches/hotpath.rs`.
+
+use std::collections::HashMap;
+use std::mem::take;
+
+use crate::bandit::policy::Policy;
+use crate::simulator::scenario::ChurnSchedule;
+use crate::simulator::Environment;
+
+use super::metrics::Metrics;
+use super::{ColdSession, Engine, EngineConfig, FrameSource, Session};
+
+/// Builds the structural parts of global session `g` — policy,
+/// environment, frame source.  Must be deterministic in `g`: a wake
+/// shell built by the same closure must match the original session's
+/// construction parameters bit-for-bit (the arena restores state; the
+/// builder restores structure).
+pub type SessionBuilder = Box<dyn FnMut(u64) -> (Box<dyn Policy>, Environment, FrameSource)>;
+
+/// Aggregate fleet state at a round boundary (see [`OpenWorld::stats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpenWorldStats {
+    /// Rounds completed so far.
+    pub rounds: usize,
+    /// Live sessions: resident (active + idle) plus hibernated.
+    pub live: usize,
+    /// Sessions resident in the engine (holding a store slot).
+    pub resident: usize,
+    /// Resident sessions participating in rounds.
+    pub active: usize,
+    /// Hibernated sessions (byte-cost only).
+    pub cold: usize,
+    /// Total bytes across all cold arenas.
+    pub cold_bytes: usize,
+    /// Lifetime admission / eviction / hibernate / wake counts.
+    pub admissions: u64,
+    pub evictions: u64,
+    pub hibernates: u64,
+    pub wakes: u64,
+    /// Frames offered to the engine (one per active session per round).
+    pub frames: u64,
+}
+
+/// The open-world fleet: one [`Engine`] plus the churn machinery that
+/// admits, parks, wakes, and evicts sessions per a [`ChurnSchedule`].
+pub struct OpenWorld {
+    engine: Engine,
+    schedule: ChurnSchedule,
+    builder: SessionBuilder,
+    /// Rounds completed (== the engine's round counter).
+    t: usize,
+    /// Wake transitions bucketed by `t mod period`: id `g` appears in
+    /// bucket `(arrival − phase) mod period`, the congruence class of
+    /// every round where its cycle offset is 0.  Dead ids are purged
+    /// lazily (each costs at most one extra visit).
+    wake_bucket: Vec<Vec<u64>>,
+    /// Sleep transitions: bucket `(arrival − phase + on) mod period`,
+    /// offset `on` — the round a burst ends.
+    sleep_bucket: Vec<Vec<u64>>,
+    /// Departure ring: slot `departs_at mod ring_len`; the ring is longer
+    /// than any possible lifespan, so a slot never holds two horizons.
+    departs: Vec<Vec<u64>>,
+    /// Cold storage: hibernated sessions by global id.  Never iterated
+    /// for behavior (only keyed access), so map order cannot leak into
+    /// results.
+    cold: HashMap<usize, ColdSession>,
+    /// Pre-built session shells (admissions and wakes) keyed by global
+    /// id — filled by [`OpenWorld::prepare`] so churn rounds inside the
+    /// prepared horizon never construct sessions.
+    shells: HashMap<usize, Session>,
+    /// Recycled cold arenas: hibernation pops one, wake pushes it back.
+    arena_pool: Vec<Vec<u8>>,
+    /// Metrics of departed sessions, in departure order.
+    departed: Vec<(usize, Metrics)>,
+    /// Incrementally maintained active count (avoids an O(resident) scan
+    /// per round for throughput accounting).
+    active_now: usize,
+    admissions: u64,
+    evictions: u64,
+    hibernates: u64,
+    wakes: u64,
+    frames: u64,
+}
+
+impl OpenWorld {
+    /// Build the fleet and admit the construction-time cohort (global
+    /// ids `0..schedule.initial`, arrival round 0).
+    pub fn new(cfg: EngineConfig, schedule: ChurnSchedule, builder: SessionBuilder) -> OpenWorld {
+        let period = schedule.period;
+        // Longer than any drawn lifespan (`< ⌈3·mean/2⌉`), so each ring
+        // slot holds exactly one departure horizon.
+        let ring_len = (3 * schedule.mean_lifespan).div_ceil(2) + 1;
+        let mut world = OpenWorld {
+            engine: Engine::new(cfg),
+            schedule,
+            builder,
+            t: 0,
+            wake_bucket: (0..period).map(|_| Vec::new()).collect(),
+            sleep_bucket: (0..period).map(|_| Vec::new()).collect(),
+            departs: (0..ring_len).map(|_| Vec::new()).collect(),
+            cold: HashMap::new(),
+            shells: HashMap::new(),
+            arena_pool: Vec::new(),
+            departed: Vec::new(),
+            active_now: 0,
+            admissions: 0,
+            evictions: 0,
+            hibernates: 0,
+            wakes: 0,
+            frames: 0,
+        };
+        for g in 0..world.schedule.initial as u64 {
+            world.admit(g, 0);
+        }
+        world
+    }
+
+    fn build_session(&mut self, g: u64) -> Session {
+        let (policy, env, source) = (self.builder)(g);
+        Session::new(g as usize, policy, env, source)
+    }
+
+    /// Admit global id `g` at round boundary `t`: attach a session
+    /// (pre-built shell if available), register its departure and duty
+    /// transitions, and park it idle if it arrives mid-cycle outside its
+    /// burst.
+    fn admit(&mut self, g: u64, t: usize) {
+        let plan = self.schedule.plan(g);
+        let shell = match self.shells.remove(&(g as usize)) {
+            Some(shell) => shell,
+            None => self.build_session(g),
+        };
+        self.engine.attach_session(shell);
+        let ring = plan.departs_at() % self.departs.len();
+        self.departs[ring].push(g);
+        if plan.on < plan.period {
+            let w = (plan.arrival + plan.period - plan.phase) % plan.period;
+            self.wake_bucket[w].push(g);
+            self.sleep_bucket[(w + plan.on) % plan.period].push(g);
+        }
+        if plan.active_at(t) {
+            self.active_now += 1;
+        } else if self.engine.can_hibernate(g as usize) {
+            // Off-duty at admission: go straight to cold so residency
+            // tracks the active set from round 0 — a 100k-live fleet at
+            // 1% duty never holds 100k resident sessions, even
+            // transiently (its wake bucket revives it on-burst).
+            let arena = self.arena_pool.pop().unwrap_or_default();
+            let cold = self.engine.hibernate_session(g as usize, arena);
+            self.cold.insert(g as usize, cold);
+            self.hibernates += 1;
+        } else {
+            self.engine.set_active(g as usize, false);
+        }
+        self.admissions += 1;
+    }
+
+    /// Apply every membership change due at the boundary of round `t`,
+    /// in the canonical order: departures, sleeps, wakes, arrivals.
+    fn boundary(&mut self, t: usize) {
+        // 1. Departures: evict residents, drop cold sessions; keep metrics.
+        let idx = t % self.departs.len();
+        let mut leaving = take(&mut self.departs[idx]);
+        for &g in &leaving {
+            let id = g as usize;
+            if self.engine.contains(id) {
+                if self.engine.session_by_id(id).is_some_and(|s| s.active) {
+                    self.active_now -= 1;
+                }
+                self.departed.push((id, self.engine.evict_session(id)));
+            } else if let Some(cold) = self.cold.remove(&id) {
+                let ColdSession { id, mut arena, metrics } = cold;
+                arena.clear();
+                self.arena_pool.push(arena);
+                self.departed.push((id, metrics));
+            } else {
+                unreachable!("departing session {id} is neither resident nor cold");
+            }
+            self.shells.remove(&id);
+            self.evictions += 1;
+        }
+        leaving.clear();
+        self.departs[idx] = leaving;
+
+        // 2. Sleeps: burst ends — hibernate (byte cost) or park idle.
+        let mut bucket = take(&mut self.sleep_bucket[t % self.schedule.period]);
+        bucket.retain(|&g| {
+            let id = g as usize;
+            if !self.schedule.plan(g).alive_at(t) {
+                return false; // lazy purge of the departed
+            }
+            if self.engine.contains(id) {
+                let was_active = self.engine.session_by_id(id).is_some_and(|s| s.active);
+                if self.engine.can_hibernate(id) {
+                    let arena = self.arena_pool.pop().unwrap_or_default();
+                    let cold = self.engine.hibernate_session(id, arena);
+                    self.cold.insert(id, cold);
+                    self.hibernates += 1;
+                } else {
+                    self.engine.set_active(id, false);
+                }
+                if was_active {
+                    self.active_now -= 1;
+                }
+            }
+            true
+        });
+        self.sleep_bucket[t % self.schedule.period] = bucket;
+
+        // 3. Wakes: burst starts — unpack from cold or flip back active.
+        let mut bucket = take(&mut self.wake_bucket[t % self.schedule.period]);
+        bucket.retain(|&g| {
+            let id = g as usize;
+            if !self.schedule.plan(g).alive_at(t) {
+                return false;
+            }
+            if let Some(cold) = self.cold.remove(&id) {
+                let shell = match self.shells.remove(&id) {
+                    Some(shell) => shell,
+                    None => {
+                        let (policy, env, source) = (self.builder)(g);
+                        Session::new(id, policy, env, source)
+                    }
+                };
+                let arena = self.engine.wake_session(cold, shell);
+                self.arena_pool.push(arena);
+                self.active_now += 1;
+                self.wakes += 1;
+            } else {
+                debug_assert!(self.engine.contains(id), "alive session {id} lost");
+                if !self.engine.session_by_id(id).is_some_and(|s| s.active) {
+                    self.engine.set_active(id, true);
+                    self.active_now += 1;
+                }
+            }
+            true
+        });
+        self.wake_bucket[t % self.schedule.period] = bucket;
+
+        // 4. Arrivals: admit this boundary's cohort of fresh global ids.
+        for g in self.schedule.arrivals_at(t) {
+            self.admit(g, t);
+        }
+    }
+
+    /// Pre-size everything the next `horizon` rounds touch — session
+    /// shells for arrivals and wakes, spare cold arenas, bucket/ring/map
+    /// capacity, engine membership and scratch envelopes — so churn
+    /// rounds inside the horizon perform zero heap allocations (the
+    /// hotpath bench's churn audit).  Idempotent; call again to extend.
+    pub fn prepare(&mut self, horizon: usize) {
+        let period = self.schedule.period;
+        let ring_len = self.departs.len();
+
+        // Arrival shells, and how many admissions the window holds.
+        let mut due: Vec<u64> = Vec::new();
+        for dt in 0..horizon {
+            due.extend(self.schedule.arrivals_at(self.t + dt));
+        }
+        let arrivals = due.len();
+        // Wake shells: every id in a wake bucket the window will visit
+        // (cheap over-approximation — an unused shell is parked memory).
+        for dt in 0..horizon.min(period) {
+            due.extend(self.wake_bucket[(self.t + dt) % period].iter().copied());
+        }
+        for g in due {
+            let id = g as usize;
+            if !self.shells.contains_key(&id) && !self.engine.contains(id) {
+                let plan = self.schedule.plan(g);
+                let mut shell = self.build_session(g);
+                // Enough record capacity for every burst the session can
+                // ever serve, so admission-round metrics never regrow.
+                let bursts = plan.lifespan.div_ceil(plan.period) + 1;
+                shell.metrics.reserve(bursts * plan.on);
+                self.shells.insert(id, shell);
+            }
+        }
+
+        // Cold sessions waking inside the window resume pushing records;
+        // their metrics buffers travel in the arena (outside the reach of
+        // `Engine::reserve`), so pre-size them here.
+        for dt in 0..horizon.min(period) {
+            for &g in &self.wake_bucket[(self.t + dt) % period] {
+                if let Some(c) = self.cold.get_mut(&(g as usize)) {
+                    c.metrics.reserve(horizon);
+                }
+            }
+        }
+
+        // Transition envelopes inside the window.
+        let sleeps: usize = (0..horizon.min(period))
+            .map(|dt| self.sleep_bucket[(self.t + dt) % period].len())
+            .sum();
+        let wakes: usize = (0..horizon.min(period))
+            .map(|dt| self.wake_bucket[(self.t + dt) % period].len())
+            .sum();
+        let departures: usize = (0..horizon.min(ring_len))
+            .map(|dt| self.departs[(self.t + dt) % ring_len].len())
+            .sum();
+
+        // Spare arenas for every possible hibernation, pre-grown to a
+        // generous multiple of the largest cold image seen so far.
+        let est = self
+            .cold
+            .values()
+            .map(|c| c.arena.len())
+            .max()
+            .unwrap_or(0)
+            .max(1024)
+            * 2;
+        // Admissions can hibernate on arrival (off-duty admits), so the
+        // arena/cold envelope covers them too.
+        while self.arena_pool.len() < sleeps + arrivals {
+            self.arena_pool.push(Vec::new());
+        }
+        for arena in &mut self.arena_pool {
+            if arena.capacity() < est {
+                arena.reserve(est - arena.len());
+            }
+        }
+        // Waking sessions return arenas to the pool mid-window; sleeps
+        // re-take them, but a wake-heavy boundary can push the pool past
+        // its high-water mark — keep headroom so the push never regrows.
+        self.arena_pool.reserve(wakes);
+
+        self.cold.reserve(sleeps + arrivals);
+        self.departed.reserve(departures);
+        for b in self.wake_bucket.iter_mut().chain(self.sleep_bucket.iter_mut()) {
+            b.reserve(arrivals + 1);
+        }
+        for slot in &mut self.departs {
+            slot.reserve(arrivals + 1);
+        }
+        self.engine.reserve_sessions(arrivals + sleeps + 1);
+        self.engine.reserve(horizon);
+    }
+
+    /// Run one round: apply this boundary's membership changes, then
+    /// step the engine (select → submit → realize → observe).
+    pub fn round(&mut self) {
+        self.boundary(self.t);
+        self.frames += self.active_now as u64;
+        self.engine.step();
+        self.t += 1;
+    }
+
+    /// Run `rounds` rounds.
+    pub fn run(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            self.round();
+        }
+    }
+
+    /// Fleet-state snapshot at the current boundary.
+    pub fn stats(&self) -> OpenWorldStats {
+        let resident = self.engine.num_sessions();
+        OpenWorldStats {
+            rounds: self.t,
+            live: resident + self.cold.len(),
+            resident,
+            active: self.active_now,
+            cold: self.cold.len(),
+            cold_bytes: self.cold.values().map(|c| c.arena.len()).sum(),
+            admissions: self.admissions,
+            evictions: self.evictions,
+            hibernates: self.hibernates,
+            wakes: self.wakes,
+            frames: self.frames,
+        }
+    }
+
+    /// Borrow the underlying engine (trace draining, forecasts, …).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Mutably borrow the underlying engine.
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// The driving schedule.
+    pub fn schedule(&self) -> &ChurnSchedule {
+        &self.schedule
+    }
+
+    /// Consume the fleet and return every session's metrics — departed,
+    /// hibernated, and resident alike — sorted by global id (the
+    /// canonical cross-run comparison order).
+    pub fn into_metrics(mut self) -> Vec<(usize, Metrics)> {
+        let mut out = self.departed;
+        out.extend(self.cold.drain().map(|(id, c)| (id, c.metrics)));
+        out.extend(self.engine.into_sessions().into_iter().map(|s| (s.id, s.metrics)));
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+}
+
+/// Assemble the open-world fleet a [`crate::config::Config`] with
+/// `--arrivals > 0` describes: the closed-world
+/// [`super::engine::fleet_from_config`] session family (same per-id
+/// environments, policies, and video streams — session `g` here is
+/// bit-identical to session `g` there), driven by a [`ChurnSchedule`]
+/// built from `--sessions/--arrivals/--lifespan/--duty`.
+pub fn openworld_from_config(cfg: &crate::config::Config) -> OpenWorld {
+    let net = crate::models::zoo::by_name(&cfg.model).expect("validated model");
+    let device = crate::simulator::profile_by_name(&cfg.device).expect("validated device");
+    let edge = crate::simulator::profile_by_name(&cfg.edge).expect("validated edge");
+    let schedule = ChurnSchedule::new(cfg.seed, cfg.sessions, cfg.arrivals, cfg.lifespan, cfg.duty);
+    let ecfg = super::engine::engine_config_from(cfg);
+    let cfg = cfg.clone();
+    let builder: SessionBuilder = Box::new(move |g| {
+        let env = crate::simulator::scenario::fleet_session(
+            net.clone(),
+            g,
+            cfg.rate_mbps,
+            device,
+            edge,
+            cfg.load,
+            cfg.seed,
+        );
+        let policy = cfg.policy(&env.net, &env.device, &env.edge);
+        let source = FrameSource::video(
+            crate::util::rng::Rng::stream_seed(
+                cfg.seed,
+                super::engine::VIDEO_STREAM_BASE + g,
+            ),
+            cfg.ssim_threshold,
+            crate::video::Weights::new(cfg.l_key, cfg.l_non_key),
+        );
+        (policy, env, source)
+    });
+    OpenWorld::new(ecfg, schedule, builder)
+}

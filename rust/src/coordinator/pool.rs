@@ -16,11 +16,15 @@
 //! worker count — the property `rust/tests/fleet.rs` pins bit-for-bit.
 //!
 //! Since the SoA policy-store refactor the engine's shard ranges tile
-//! *two* parallel structures with the same `chunks_mut(per)` geometry:
-//! the session vector and the store's per-field ridge arenas
-//! ([`PolicyStore::shard_slices`](crate::bandit::PolicyStore)).  Slot
-//! index == session index inside a shard, so each worker walks a
-//! contiguous window of both with no cross-shard aliasing.
+//! *two* parallel structures: the session vector and the store's
+//! per-field ridge arenas.  Sessions are kept sorted by store slot, so
+//! each worker walks one contiguous session range and one contiguous
+//! store window with no cross-shard aliasing.  Under open-world churn
+//! the tiling is *variable*: shards are balanced by **active** session
+//! count (idle residents and free slots ride along inside a window but
+//! are never touched), so the cut positions — equal-length active
+//! chunks, converted to slot boundaries — differ round to round while
+//! the per-session work stays a pure function of the inputs.
 //!
 //! The arm-major batched select (DESIGN.md §13) rides the same tiling:
 //! under `--select-batch`, each worker runs the batched store kernels

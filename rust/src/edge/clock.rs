@@ -37,17 +37,22 @@ impl VirtualClock {
     }
 }
 
-/// One timestamped entry in the event queue.
+/// One timestamped entry in the event queue.  `key` is the tie-break at
+/// equal timestamps: the submission sequence number for [`EventQueue::push`]
+/// (FIFO ties), or an explicit caller key for [`EventQueue::push_keyed`]
+/// (the engine passes `(round, global session id)` so the cross-session
+/// merge order is canonical — independent of iteration order — even when
+/// open-world churn makes slot order diverge from id order).
 #[derive(Debug, Clone)]
 struct Event<T> {
     time_ms: f64,
-    seq: u64,
+    key: u64,
     payload: T,
 }
 
 impl<T> PartialEq for Event<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.time_ms == other.time_ms && self.seq == other.seq
+        self.time_ms == other.time_ms && self.key == other.key
     }
 }
 
@@ -62,11 +67,11 @@ impl<T> PartialOrd for Event<T> {
 impl<T> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: reverse so the earliest event (then
-        // the lowest sequence number) surfaces first.
+        // the lowest key) surfaces first.
         other
             .time_ms
             .total_cmp(&self.time_ms)
-            .then_with(|| other.seq.cmp(&self.seq))
+            .then_with(|| other.key.cmp(&self.key))
     }
 }
 
@@ -97,11 +102,29 @@ impl<T> EventQueue<T> {
         self.heap.is_empty()
     }
 
-    /// Enqueue `payload` at `time_ms`.
+    /// Enqueue `payload` at `time_ms` (ties resolve FIFO by push order).
     pub fn push(&mut self, time_ms: f64, payload: T) {
         assert!(time_ms.is_finite(), "event time must be finite, got {time_ms}");
-        self.heap.push(Event { time_ms, seq: self.seq, payload });
+        self.heap.push(Event { time_ms, key: self.seq, payload });
         self.seq += 1;
+    }
+
+    /// Enqueue `payload` at `time_ms` with an explicit tie-break key:
+    /// simultaneous events pop in ascending key order regardless of push
+    /// order.  The engine passes `(round << 32) | global session id`, so
+    /// the cross-session merge is canonical under open-world churn (where
+    /// iteration order is slot order, not id order) and, within one
+    /// round's closed-world pushes, identical to the FIFO tie-break the
+    /// legacy transcripts pin.  Do not mix with [`EventQueue::push`] in
+    /// the same queue — the key spaces are unrelated.
+    pub fn push_keyed(&mut self, time_ms: f64, key: u64, payload: T) {
+        assert!(time_ms.is_finite(), "event time must be finite, got {time_ms}");
+        self.heap.push(Event { time_ms, key, payload });
+    }
+
+    /// Pre-size the heap for `n` additional events (zero-alloc rounds).
+    pub fn reserve(&mut self, n: usize) {
+        self.heap.reserve(n);
     }
 
     /// Timestamp of the earliest pending event.
@@ -176,6 +199,23 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn non_finite_event_time_rejected() {
         EventQueue::new().push(f64::NAN, ());
+    }
+
+    #[test]
+    fn keyed_ties_resolve_by_key_not_push_order() {
+        let mut q = EventQueue::new();
+        // Push in reverse key order: the keys must still win the tie.
+        for id in (0..10u64).rev() {
+            q.push_keyed(7.0, id, id);
+        }
+        for id in 0..10 {
+            assert_eq!(q.pop(), Some((7.0, id)), "ties must resolve by ascending key");
+        }
+        // Earlier timestamps still come first regardless of key.
+        q.push_keyed(5.0, 100, 100);
+        q.push_keyed(1.0, 900, 900);
+        assert_eq!(q.pop(), Some((1.0, 900)));
+        assert_eq!(q.pop(), Some((5.0, 100)));
     }
 
     #[test]

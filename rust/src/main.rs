@@ -78,6 +78,12 @@ SUBCOMMANDS:
              histograms included) every N rounds to a _metrics.jsonl
              artifact.  Neither perturbs the served results: all
              bit-identity pins hold with telemetry on or off.
+             Open world: --arrivals A admits ~A sessions per round
+             (--sessions becomes the initial cohort); --lifespan L is
+             the mean session lifetime in rounds, --duty D the active
+             fraction of each activity cycle.  Off-duty sessions
+             hibernate into a byte arena (policy permitting) and wake
+             bit-identical; rounds cost O(active), not O(ever-admitted).
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -250,6 +256,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    if cfg.arrivals > 0.0 {
+        return run_openworld(args, &cfg);
+    }
+
     let mut eng = engine::fleet_from_config(&cfg);
     let mut snapshots: Vec<String> = Vec::new();
     if cfg.metrics_every > 0 {
@@ -286,6 +296,72 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
     write_telemetry_artifacts(&cfg, trace, &snapshots)?;
+    Ok(())
+}
+
+/// The open-world fleet path (`--arrivals > 0`): deterministic session
+/// churn with duty-cycle hibernation over one engine; reports fleet
+/// state, churn counters, and byte-cost residency instead of the
+/// closed-world per-session table.
+fn run_openworld(args: &Args, cfg: &Config) -> Result<()> {
+    println!(
+        "  open world: {} initial sessions, {} arrivals/round, mean lifespan {} rounds, \
+         duty {:.0}%",
+        cfg.sessions,
+        cfg.arrivals,
+        cfg.lifespan,
+        100.0 * cfg.duty,
+    );
+    let mut world = ans::coordinator::openworld_from_config(cfg);
+    let start = std::time::Instant::now();
+    world.run(cfg.frames);
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let stats = world.stats();
+    let trace = if cfg.trace.is_empty() {
+        None
+    } else {
+        Some((world.engine_mut().drain_trace(), world.engine_mut().trace_dropped()))
+    };
+    println!(
+        "\nfleet after {} rounds: {} live ({} resident, {} active, {} hibernated in {} cold bytes)",
+        stats.rounds, stats.live, stats.resident, stats.active, stats.cold, stats.cold_bytes,
+    );
+    println!(
+        "churn: {} admissions, {} evictions, {} hibernations, {} wakes",
+        stats.admissions, stats.evictions, stats.hibernates, stats.wakes,
+    );
+    println!(
+        "throughput: {:.0} frames/s ({} frames over {:.1} ms wall, {} worker{})",
+        stats.frames as f64 * 1e3 / wall_ms.max(1e-9),
+        stats.frames,
+        wall_ms,
+        cfg.workers,
+        if cfg.workers == 1 { "" } else { "s" },
+    );
+    write_telemetry_artifacts(cfg, trace, &[])?;
+    if args.flag("json") {
+        std::fs::create_dir_all("bench_results")?;
+        let path = format!(
+            "bench_results/openworld_{}_s{}x{}_seed{}.json",
+            cfg.model, cfg.sessions, cfg.frames, cfg.seed
+        );
+        let json = obj(vec![
+            ("rounds", Json::from(stats.rounds)),
+            ("live", Json::from(stats.live)),
+            ("resident", Json::from(stats.resident)),
+            ("active", Json::from(stats.active)),
+            ("cold", Json::from(stats.cold)),
+            ("cold_bytes", Json::from(stats.cold_bytes)),
+            ("admissions", Json::from(stats.admissions as usize)),
+            ("evictions", Json::from(stats.evictions as usize)),
+            ("hibernates", Json::from(stats.hibernates as usize)),
+            ("wakes", Json::from(stats.wakes as usize)),
+            ("frames", Json::from(stats.frames as usize)),
+            ("wall_ms", Json::from(wall_ms)),
+        ]);
+        std::fs::write(&path, json.to_string())?;
+        println!("open-world metrics JSON -> {path}");
+    }
     Ok(())
 }
 

@@ -227,6 +227,34 @@ impl Environment {
     pub fn oracle_delay(&self) -> f64 {
         self.expected_total(self.oracle_partition())
     }
+
+    /// Append the environment's *mutable* cursors to a cold arena: noise
+    /// RNG, frame index, tick caches, the contention factor, and the
+    /// uplink process state.  The static config (network, profiles,
+    /// workload schedule, rate parameters) is NOT serialized — on wake
+    /// the open-world driver rebuilds a config-identical environment
+    /// from the session's global id and overlays this cursor, making a
+    /// hibernated session cost bytes, not structs (DESIGN.md §14).
+    pub fn pack_cursor(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_f64, put_usize};
+        self.rng.pack_cursor(out);
+        put_usize(out, self.frame);
+        put_f64(out, self.current_rate);
+        put_f64(out, self.current_load);
+        put_f64(out, self.contention_factor);
+        self.uplink.pack_cursor(out);
+    }
+
+    /// Restore a cursor packed by [`Environment::pack_cursor`] into a
+    /// config-identical environment.
+    pub fn unpack_cursor(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        self.rng.unpack_cursor(r);
+        self.frame = r.take_usize();
+        self.current_rate = r.take_f64();
+        self.current_load = r.take_f64();
+        self.contention_factor = r.take_f64();
+        self.uplink.unpack_cursor(r);
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +430,38 @@ mod tests {
         let avg: f64 = (0..n).map(|_| env.noisy(42.0)).sum::<f64>() / n as f64;
         assert!((avg - 42.0).abs() < 0.25, "avg {avg}");
         assert!(env.noisy(-100.0) >= 0.0, "clamped at zero like observe_edge_delay");
+    }
+
+    #[test]
+    fn cursor_round_trip_resumes_markov_env_bit_exactly() {
+        let build = || {
+            Environment::new(
+                zoo::vgg16(),
+                DEVICE_MAXN,
+                EDGE_GPU,
+                Workload::constant(1.0),
+                Uplink::markov(50.0, 5.0, 0.2, 11),
+                42,
+            )
+        };
+        let mut a = build();
+        for t in 0..37 {
+            a.tick(t);
+            a.observe_edge_delay(t % 5);
+        }
+        a.set_contention_factor(2.5);
+        let mut blob = Vec::new();
+        a.pack_cursor(&mut blob);
+        // Fresh config-identical twin, cursor overlaid.
+        let mut b = build();
+        b.unpack_cursor(&mut crate::util::bytes::Reader::new(&blob));
+        assert_eq!(b.contention_factor(), 2.5);
+        for t in 37..80 {
+            a.tick(t);
+            b.tick(t);
+            assert_eq!(a.current_rate_mbps(), b.current_rate_mbps(), "Markov chain at t={t}");
+            assert_eq!(a.observe_edge_delay(3), b.observe_edge_delay(3), "noise stream at t={t}");
+        }
     }
 
     #[test]

@@ -66,6 +66,37 @@ impl Uplink {
             }
         }
     }
+
+    /// Append the process's *mutable* cursor to a cold arena (the rate
+    /// parameters themselves are config, rebuilt from the session's
+    /// global id on wake).  Constant/Steps are pure functions of `t` and
+    /// pack nothing beyond a variant tag.
+    pub fn pack_cursor(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_bool, put_u64};
+        match self {
+            Uplink::Constant(_) => put_u64(out, 0),
+            Uplink::Steps(_) => put_u64(out, 1),
+            Uplink::Markov { state_fast, rng, .. } => {
+                put_u64(out, 2);
+                put_bool(out, *state_fast);
+                rng.pack_cursor(out);
+            }
+        }
+    }
+
+    /// Restore a cursor packed by [`Uplink::pack_cursor`] into a
+    /// config-identical process (same variant; asserts on mismatch).
+    pub fn unpack_cursor(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        let tag = r.take_u64();
+        match (self, tag) {
+            (Uplink::Constant(_), 0) | (Uplink::Steps(_), 1) => {}
+            (Uplink::Markov { state_fast, rng, .. }, 2) => {
+                *state_fast = r.take_bool();
+                rng.unpack_cursor(r);
+            }
+            (u, t) => panic!("uplink cursor tag {t} does not match rebuilt process {u:?}"),
+        }
+    }
 }
 
 /// Transmission delay in ms for `bytes` at `rate_mbps`, plus one RTT.

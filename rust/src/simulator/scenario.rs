@@ -111,18 +111,34 @@ pub fn fleet_with(
 ) -> Vec<Environment> {
     assert!(n_sessions >= 1, "fleet needs at least one session");
     (0..n_sessions)
-        .map(|i| {
-            let rate = base_rate_mbps * FLEET_RATE_MULTIPLIERS[i % FLEET_RATE_MULTIPLIERS.len()];
-            Environment::new(
-                net.clone(),
-                device,
-                edge,
-                Workload::constant(load),
-                network::Uplink::constant(rate),
-                Rng::stream_seed(seed, i as u64),
-            )
-        })
+        .map(|i| fleet_session(net.clone(), i as u64, base_rate_mbps, device, edge, load, seed))
         .collect()
+}
+
+/// Session `g`'s environment from the [`fleet_with`] family, built
+/// lazily: a pure function of `(seed, g)`, identical to entry `g` of the
+/// eager fleet.  The open-world driver materializes arrivals (and wake
+/// shells) through this, so a 100k-session horizon never pre-builds
+/// 100k environments.
+pub fn fleet_session(
+    net: Network,
+    g: u64,
+    base_rate_mbps: f64,
+    device: ComputeProfile,
+    edge: ComputeProfile,
+    load: f64,
+    seed: u64,
+) -> Environment {
+    let rate =
+        base_rate_mbps * FLEET_RATE_MULTIPLIERS[(g % FLEET_RATE_MULTIPLIERS.len() as u64) as usize];
+    Environment::new(
+        net,
+        device,
+        edge,
+        Workload::constant(load),
+        network::Uplink::constant(rate),
+        Rng::stream_seed(seed, g),
+    )
 }
 
 /// Heterogeneous replica family for the cluster router
@@ -197,6 +213,153 @@ pub fn fleet_markov(
             )
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Open-world churn: deterministic arrival/departure/activity process.
+// ---------------------------------------------------------------------------
+
+/// Stream-id offset for per-session churn plans, far above any fleet
+/// env/noise stream id so plan draws never collide with environment draws
+/// built from the same base seed.
+pub const CHURN_STREAM_BASE: u64 = 1 << 40;
+
+/// One session's whole life, decided at admission time and never revised:
+/// a pure function of `(schedule seed, global session id)` via
+/// [`Rng::stream_seed`], so materializing session 50 000 lazily — or never
+/// — cannot perturb any other session's plan (the open-world analogue of
+/// the closed-world fleet-growth invariant above).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionPlan {
+    /// Round whose boundary admits the session.
+    pub arrival: usize,
+    /// Rounds from admission to departure (eviction at `arrival + lifespan`).
+    pub lifespan: usize,
+    /// Activity cycle length in rounds (schedule-wide constant).
+    pub period: usize,
+    /// Active rounds per cycle (`duty · period`, at least 1).
+    pub on: usize,
+    /// Cycle phase offset — sessions don't burst in lockstep.
+    pub phase: usize,
+}
+
+impl SessionPlan {
+    /// Round whose boundary evicts the session.
+    pub fn departs_at(&self) -> usize {
+        self.arrival + self.lifespan
+    }
+
+    /// Admitted and not yet departed at round `t`.
+    pub fn alive_at(&self, t: usize) -> bool {
+        t >= self.arrival && t < self.departs_at()
+    }
+
+    /// Generating frames at round `t`: alive, and inside the `on`-burst of
+    /// its activity cycle.
+    pub fn active_at(&self, t: usize) -> bool {
+        self.alive_at(t) && (t - self.arrival + self.phase) % self.period < self.on
+    }
+
+    /// The cycle offset at round `t` (0 = the round a burst starts).
+    /// Drivers bucket sessions by `(arrival + phase) mod period` so each
+    /// round's activity transitions are found in O(transitions), never by
+    /// scanning the live population.
+    pub fn cycle_offset(&self, t: usize) -> usize {
+        debug_assert!(t >= self.arrival);
+        (t - self.arrival + self.phase) % self.period
+    }
+}
+
+/// Deterministic open-loop session churn: a fractional arrival rate per
+/// round, a mean lifespan, and a duty cycle.  Everything is a pure
+/// function of `(seed, global id)` or of the round number — there is no
+/// mutable generator state, so arrivals materialize lazily (the driver
+/// asks "who arrives at round t?" and builds exactly those sessions) and
+/// existing sessions are never reseeded as the world grows.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnSchedule {
+    pub seed: u64,
+    /// Sessions alive at construction (global ids `0..initial`, arrival 0).
+    pub initial: usize,
+    /// Mean arrivals per round (fractional rates accumulate: 0.25 admits
+    /// one session every 4 rounds).
+    pub arrivals_per_round: f64,
+    /// Mean lifespan in rounds; per-session lifespans draw uniformly from
+    /// `[mean/2, 3·mean/2)`.
+    pub mean_lifespan: usize,
+    /// Fraction of each activity cycle a session spends active.
+    pub duty: f64,
+    /// Activity cycle length in rounds.
+    pub period: usize,
+}
+
+impl ChurnSchedule {
+    pub fn new(
+        seed: u64,
+        initial: usize,
+        arrivals_per_round: f64,
+        mean_lifespan: usize,
+        duty: f64,
+    ) -> ChurnSchedule {
+        assert!(arrivals_per_round >= 0.0 && arrivals_per_round.is_finite());
+        assert!(mean_lifespan >= 2, "lifespan draws need mean ≥ 2 rounds");
+        assert!(duty > 0.0 && duty <= 1.0, "duty must be in (0, 1], got {duty}");
+        ChurnSchedule { seed, initial, arrivals_per_round, mean_lifespan, duty, period: 100 }
+    }
+
+    /// Override the activity-cycle length (default 100 rounds).
+    pub fn with_period(mut self, period: usize) -> ChurnSchedule {
+        assert!(period >= 1);
+        self.period = period;
+        self
+    }
+
+    /// Global ids admitted strictly before round `t`'s frames run:
+    /// `initial + ⌊t · arrivals_per_round⌋`.  Monotone in `t`, and the
+    /// cumulative form means fractional rates never drift: exactly
+    /// `⌊T·a⌋` open-world arrivals happen over any horizon `T`.
+    pub fn arrived_before(&self, t: usize) -> u64 {
+        self.initial as u64 + (t as f64 * self.arrivals_per_round).floor() as u64
+    }
+
+    /// Global ids admitted at the boundary of round `t` (empty most
+    /// rounds when the rate is fractional).  Round 0's boundary admits
+    /// nothing — ids `0..initial` are the construction-time cohort.
+    pub fn arrivals_at(&self, t: usize) -> std::ops::Range<u64> {
+        self.arrived_before(t)..self.arrived_before(t + 1)
+    }
+
+    /// The admission round of global id `g` — the inverse of
+    /// [`ChurnSchedule::arrivals_at`], exact against the same float
+    /// arithmetic (the candidate from the division is corrected until the
+    /// cumulative counts agree).
+    pub fn arrival_round(&self, g: u64) -> usize {
+        if g < self.initial as u64 {
+            return 0;
+        }
+        let a = self.arrivals_per_round;
+        assert!(a > 0.0, "id {g} can never arrive with a zero arrival rate");
+        let k = g - self.initial as u64 + 1; // need ⌊(t+1)·a⌋ ≥ k
+        let mut t1 = ((k as f64 / a).ceil() as usize).max(1);
+        while ((t1 as f64 * a).floor() as u64) < k {
+            t1 += 1;
+        }
+        while t1 > 1 && (((t1 - 1) as f64 * a).floor() as u64) >= k {
+            t1 -= 1;
+        }
+        t1 - 1
+    }
+
+    /// Materialize global id `g`'s plan.  Pure in `(seed, g)`.
+    pub fn plan(&self, g: u64) -> SessionPlan {
+        let mut rng = Rng::new(Rng::stream_seed(self.seed, CHURN_STREAM_BASE + g));
+        let lo = (self.mean_lifespan / 2).max(1);
+        let hi = (3 * self.mean_lifespan).div_ceil(2).max(lo + 1);
+        let lifespan = lo + rng.below(hi - lo);
+        let on = ((self.duty * self.period as f64).round() as usize).clamp(1, self.period);
+        let phase = rng.below(self.period);
+        SessionPlan { arrival: self.arrival_round(g), lifespan, period: self.period, on, phase }
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +491,89 @@ mod tests {
             }
         }
         assert!(diverged, "per-session Markov chains must not move in lockstep");
+    }
+
+    #[test]
+    fn churn_arrivals_accumulate_fractional_rates() {
+        let sched = ChurnSchedule::new(7, 10, 0.25, 40, 0.1);
+        assert_eq!(sched.arrived_before(0), 10, "round 0 starts with the initial cohort");
+        assert_eq!(sched.arrived_before(4), 11);
+        assert_eq!(sched.arrived_before(100), 10 + 25);
+        // Each boundary admits the ids the cumulative count says, no more.
+        let mut total = 0;
+        for t in 0..100 {
+            let r = sched.arrivals_at(t);
+            assert!(r.start <= r.end);
+            total += (r.end - r.start) as usize;
+        }
+        assert_eq!(total, 25, "⌊100 · 0.25⌋ arrivals over 100 rounds");
+        assert!(sched.arrivals_at(0).is_empty(), "round 0 boundary admits nothing");
+    }
+
+    #[test]
+    fn churn_arrival_round_inverts_arrivals_at() {
+        for &rate in &[0.1, 0.25, 1.0, 3.7, 0.333] {
+            let sched = ChurnSchedule::new(3, 5, rate, 40, 0.2);
+            for t in 0..200 {
+                for g in sched.arrivals_at(t) {
+                    assert_eq!(sched.arrival_round(g), t, "rate={rate} id={g}");
+                    assert_eq!(sched.plan(g).arrival, t);
+                }
+            }
+            for g in 0..5u64 {
+                assert_eq!(sched.arrival_round(g), 0, "initial cohort arrives at round 0");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_plans_are_pure_in_seed_and_id() {
+        let sched = ChurnSchedule::new(11, 4, 0.5, 60, 0.05).with_period(50);
+        for g in 0..64u64 {
+            assert_eq!(sched.plan(g), sched.plan(g), "plan must be deterministic");
+        }
+        // Lifespans land in [mean/2, 3·mean/2) and actually spread.
+        let spans: std::collections::BTreeSet<usize> =
+            (0..64u64).map(|g| sched.plan(g).lifespan).collect();
+        assert!(spans.iter().all(|&l| (30..90).contains(&l)), "{spans:?}");
+        assert!(spans.len() > 8, "lifespans should spread: {spans:?}");
+        // Phases spread across the cycle.
+        let phases: std::collections::BTreeSet<usize> =
+            (0..64u64).map(|g| sched.plan(g).phase).collect();
+        assert!(phases.len() > 10, "phases should spread: {phases:?}");
+    }
+
+    #[test]
+    fn churn_activity_follows_the_duty_cycle() {
+        let sched = ChurnSchedule::new(13, 1, 0.0, 1000, 0.01);
+        let plan = sched.plan(0);
+        assert_eq!(plan.period, 100);
+        assert_eq!(plan.on, 1, "1% duty on a 100-round cycle is one round on");
+        let active: Vec<usize> =
+            (0..400).filter(|&t| plan.active_at(t)).collect();
+        assert_eq!(active.len(), 4, "one active round per cycle: {active:?}");
+        for w in active.windows(2) {
+            assert_eq!(w[1] - w[0], 100, "bursts recur every period");
+        }
+        // Activity stops at departure and never starts before arrival.
+        assert!(!plan.active_at(plan.departs_at()));
+        let late = ChurnSchedule::new(13, 0, 0.5, 1000, 1.0).plan(5);
+        assert!(late.arrival > 0);
+        assert!(!late.active_at(late.arrival - 1));
+        assert!(late.active_at(late.arrival), "duty 1.0 means active every alive round");
+        assert!(late.active_at(late.departs_at() - 1));
+    }
+
+    #[test]
+    fn churn_ids_materialize_lazily_without_cross_talk() {
+        // Asking for id 50_000's plan must not involve (or perturb) any
+        // other id — pure stream split, same invariant as fleet growth.
+        let sched = ChurnSchedule::new(17, 100, 2.0, 50, 0.01);
+        let far = sched.plan(50_000);
+        let near_before = sched.plan(3);
+        let _ = sched.plan(50_000);
+        assert_eq!(sched.plan(3), near_before);
+        assert_eq!(sched.plan(50_000), far);
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub enum EventKind {
     /// Session moved between replicas: `a` = source replica,
     /// `b` = destination replica.
     SessionMigrate,
+    /// Session packed into a cold byte arena at a round boundary:
+    /// `a` = resident sessions after the pack, `b` = arena bytes.
+    SessionHibernate,
+    /// Cold session rebuilt and re-adopted into a store slot:
+    /// `a` = resident sessions after the wake, `b` = arena bytes read.
+    SessionWake,
     /// Session removed from an engine: `a` = slot count after evict.
     SessionEvict,
     /// Frame handed to the uplink: `a` = partition, `b` = payload bytes;
@@ -80,6 +86,8 @@ impl EventKind {
             EventKind::ForecastFrozen => "forecast_frozen",
             EventKind::SessionAttach => "session_attach",
             EventKind::SessionMigrate => "session_migrate",
+            EventKind::SessionHibernate => "session_hibernate",
+            EventKind::SessionWake => "session_wake",
             EventKind::SessionEvict => "session_evict",
             EventKind::FrameSubmitted => "frame_submitted",
             EventKind::FrameAdmitted => "frame_admitted",
@@ -100,6 +108,8 @@ impl EventKind {
             EventKind::ForecastFrozen => (Some("backlog"), Some("merge_probability")),
             EventKind::SessionAttach => (Some("sessions"), None),
             EventKind::SessionMigrate => (Some("from_replica"), Some("to_replica")),
+            EventKind::SessionHibernate => (Some("sessions"), Some("cold_bytes")),
+            EventKind::SessionWake => (Some("sessions"), Some("cold_bytes")),
             EventKind::SessionEvict => (Some("sessions"), None),
             EventKind::FrameSubmitted => (Some("partition"), Some("bytes")),
             EventKind::FrameAdmitted => (Some("partition"), Some("ingress_wait_ms")),
@@ -389,6 +399,13 @@ mod tests {
         assert!(EventKind::FrameSubmitted < EventKind::FrameAdmitted);
         assert!(EventKind::FrameAdmitted < EventKind::FrameBatched);
         assert!(EventKind::PolicyRefresh < EventKind::RoundBarrier);
+        // Lifecycle transitions happen at the round boundary, before any
+        // frame of the round: attach, migrate, hibernate, wake, evict.
+        assert!(EventKind::SessionAttach < EventKind::SessionMigrate);
+        assert!(EventKind::SessionMigrate < EventKind::SessionHibernate);
+        assert!(EventKind::SessionHibernate < EventKind::SessionWake);
+        assert!(EventKind::SessionWake < EventKind::SessionEvict);
+        assert!(EventKind::SessionEvict < EventKind::FrameSubmitted);
     }
 
     #[test]

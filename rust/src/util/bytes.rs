@@ -1,0 +1,190 @@
+//! Flat little-endian byte codec for cold-session arenas (DESIGN.md §14).
+//!
+//! Hibernated sessions live as plain byte blobs: every mutable cursor of
+//! a parked session (ridge state, window history, RNG words, Markov chain
+//! phase, video sprites) is appended to a `Vec<u8>` with the writers
+//! below and read back in the same order on wake.  No framing, no schema,
+//! no versioning — the reader is always the same build that produced the
+//! blob, and the surrounding config (network, profiles, policy
+//! parameters) is reconstructed deterministically from the session's
+//! global id, never serialized.  Little-endian fixed-width encoding keeps
+//! the round-trip bit-exact for `f64` (including NaN payloads and -0.0)
+//! and allocation-free on the write side once the arena has capacity.
+
+/// Append a `u64` (little-endian).
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `usize` as `u64` (cold blobs are host-width independent).
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+/// Append an `f64` via its IEEE-754 bit pattern — bit-exact round-trip.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Append a `bool` as one byte.
+pub fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+/// Append a raw byte slice, length-prefixed.
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_usize(out, v.len());
+    out.extend_from_slice(v);
+}
+
+/// Append an `f64` slice, length-prefixed.
+pub fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+/// Sequential reader over a cold arena.  Panics on underrun — a short or
+/// misordered blob is a logic error, never recoverable data.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take_u64(&mut self) -> u64 {
+        let end = self.pos + 8;
+        assert!(end <= self.buf.len(), "cold arena underrun at byte {}", self.pos);
+        let v = u64::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        v
+    }
+
+    pub fn take_usize(&mut self) -> usize {
+        self.take_u64() as usize
+    }
+
+    pub fn take_f64(&mut self) -> f64 {
+        f64::from_bits(self.take_u64())
+    }
+
+    pub fn take_bool(&mut self) -> bool {
+        let end = self.pos + 1;
+        assert!(end <= self.buf.len(), "cold arena underrun at byte {}", self.pos);
+        let v = self.buf[self.pos];
+        self.pos = end;
+        assert!(v <= 1, "corrupt bool byte {v} at {}", self.pos - 1);
+        v == 1
+    }
+
+    /// Read a length-prefixed byte slice (borrowed from the arena).
+    pub fn take_bytes(&mut self) -> &'a [u8] {
+        let len = self.take_usize();
+        let end = self.pos + len;
+        assert!(end <= self.buf.len(), "cold arena underrun at byte {}", self.pos);
+        let v = &self.buf[self.pos..end];
+        self.pos = end;
+        v
+    }
+
+    /// Read a length-prefixed `f64` slice into `out` (resized to fit).
+    pub fn take_f64s_into(&mut self, out: &mut Vec<f64>) {
+        let len = self.take_usize();
+        out.clear();
+        out.reserve(len);
+        for _ in 0..len {
+            out.push(self.take_f64());
+        }
+    }
+
+    /// Read a length-prefixed `f64` slice into an exactly-sized buffer
+    /// (the slot-arena form: the destination length is the schema).
+    pub fn take_f64s_exact(&mut self, out: &mut [f64]) {
+        let len = self.take_usize();
+        assert_eq!(len, out.len(), "cold arena field length mismatch");
+        for slot in out.iter_mut() {
+            *slot = self.take_f64();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_scalar_kind() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX - 7);
+        put_usize(&mut buf, 42);
+        put_f64(&mut buf, -0.0);
+        put_f64(&mut buf, f64::NAN);
+        put_bool(&mut buf, true);
+        put_bool(&mut buf, false);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.take_u64(), u64::MAX - 7);
+        assert_eq!(r.take_usize(), 42);
+        assert_eq!(r.take_f64().to_bits(), (-0.0f64).to_bits(), "-0.0 must survive");
+        assert!(r.take_f64().is_nan(), "NaN must survive");
+        assert!(r.take_bool());
+        assert!(!r.take_bool());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn round_trips_slices() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, &[1, 2, 3]);
+        put_f64s(&mut buf, &[1.5, -2.25, 1e-300]);
+        put_f64s(&mut buf, &[]);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.take_bytes(), &[1, 2, 3]);
+        let mut v = vec![99.0];
+        r.take_f64s_into(&mut v);
+        assert_eq!(v, vec![1.5, -2.25, 1e-300]);
+        let mut fixed = [0.0; 0];
+        r.take_f64s_exact(&mut fixed);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn exact_reader_checks_length() {
+        let mut buf = Vec::new();
+        put_f64s(&mut buf, &[1.0, 2.0]);
+        let mut r = Reader::new(&buf);
+        let mut out = [0.0; 2];
+        r.take_f64s_exact(&mut out);
+        assert_eq!(out, [1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "underrun")]
+    fn underrun_panics() {
+        let buf = vec![1, 2, 3];
+        Reader::new(&buf).take_u64();
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn exact_length_mismatch_panics() {
+        let mut buf = Vec::new();
+        put_f64s(&mut buf, &[1.0]);
+        let mut r = Reader::new(&buf);
+        let mut out = [0.0; 2];
+        r.take_f64s_exact(&mut out);
+    }
+}

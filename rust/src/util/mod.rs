@@ -5,6 +5,7 @@
 
 pub mod alloc;
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -142,6 +142,28 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
+
+    /// Append the generator's full cursor (PCG state, stream increment,
+    /// cached Box–Muller spare) to a cold arena — see `util::bytes`.
+    pub fn pack_cursor(&self, out: &mut Vec<u8>) {
+        super::bytes::put_u64(out, self.state);
+        super::bytes::put_u64(out, self.inc);
+        match self.gauss_spare {
+            Some(s) => {
+                super::bytes::put_bool(out, true);
+                super::bytes::put_f64(out, s);
+            }
+            None => super::bytes::put_bool(out, false),
+        }
+    }
+
+    /// Restore a cursor packed by [`Rng::pack_cursor`] — the stream
+    /// resumes bit-exactly where it was packed.
+    pub fn unpack_cursor(&mut self, r: &mut super::bytes::Reader<'_>) {
+        self.state = r.take_u64();
+        self.inc = r.take_u64();
+        self.gauss_spare = if r.take_bool() { Some(r.take_f64()) } else { None };
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +266,22 @@ mod tests {
         assert!(same < 4);
         // Distinct seeds map the same id to distinct streams.
         assert_ne!(Rng::stream_seed(1, 5), Rng::stream_seed(2, 5));
+    }
+
+    #[test]
+    fn packed_cursor_resumes_bit_exactly() {
+        let mut a = Rng::new(17);
+        for _ in 0..7 {
+            a.gaussian(); // leave a Box–Muller spare cached
+        }
+        let mut blob = Vec::new();
+        a.pack_cursor(&mut blob);
+        let mut b = Rng::new(999); // unrelated stream, fully overwritten
+        b.unpack_cursor(&mut crate::util::bytes::Reader::new(&blob));
+        for _ in 0..64 {
+            assert_eq!(a.gaussian(), b.gaussian());
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

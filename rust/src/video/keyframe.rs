@@ -80,6 +80,36 @@ impl KeyframeDetector {
     pub fn reset(&mut self) {
         self.prev = None;
     }
+
+    /// Append the detector's mutable cursor (the retained previous frame)
+    /// to a cold arena.  Threshold and weights are config.
+    pub fn pack_cursor(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_bool, put_bytes, put_usize};
+        match &self.prev {
+            None => put_bool(out, false),
+            Some(f) => {
+                put_bool(out, true);
+                put_usize(out, f.width);
+                put_usize(out, f.height);
+                put_usize(out, f.index);
+                put_bool(out, f.is_event);
+                put_bytes(out, &f.pixels);
+            }
+        }
+    }
+
+    /// Restore a cursor packed by [`KeyframeDetector::pack_cursor`].
+    pub fn unpack_cursor(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        self.prev = if r.take_bool() {
+            let width = r.take_usize();
+            let height = r.take_usize();
+            let index = r.take_usize();
+            let is_event = r.take_bool();
+            Some(Frame { width, height, pixels: r.take_bytes().to_vec(), index, is_event })
+        } else {
+            None
+        };
+    }
 }
 
 #[cfg(test)]

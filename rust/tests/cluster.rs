@@ -231,3 +231,75 @@ fn migrate_placement_follows_the_fast_replica() {
     let moved: usize = fs.replicas.iter().map(|r| r.migrations_in).sum();
     assert_eq!(moved, cl.migrations(), "per-replica counters agree with the router");
 }
+
+// ---------------------------------------------------------------------------
+// Open-world admissions on the routed tier (ISSUE 9): sessions joining
+// MID-RUN — priced by the greedy router at their arrival round, landing
+// in recycled store slots — leave the cluster transcript deterministic
+// across reruns and invariant to the worker-pool size.  (Replica count
+// changes the physics, so the churn pin here is rerun + worker
+// invariance at replicas=2, not replicas=1 vs 2 equality.)
+// ---------------------------------------------------------------------------
+#[test]
+fn mid_run_admissions_are_deterministic_and_worker_invariant() {
+    let build = |workers: usize| {
+        let net = zoo::partnet();
+        let mut cl = Cluster::new(
+            ClusterConfig::new(
+                EngineConfig {
+                    contention: Contention::new(1, 0.25),
+                    workers,
+                    ..Default::default()
+                },
+                Placement::LeastLoaded,
+                1_000_000,
+            ),
+            ReplicaSpec::uniform(2, EDGE_GPU, Workload::constant(1.0)),
+        );
+        for env in scenario::fleet(net.clone(), 6, 10.0, 11) {
+            cl.add_session(policy(&net, "mu-linucb", 120), env, FrameSource::uniform());
+        }
+        cl.run(40);
+        // Late cohort: four sessions arrive in two waves mid-run, priced
+        // against queues that already carry 40 rounds of history.
+        for (wave, seed) in [(0usize, 300u64), (1, 400)] {
+            for env in scenario::fleet(net.clone(), 2, 12.0, seed) {
+                cl.add_session(policy(&net, "mu-linucb", 120), env, FrameSource::uniform());
+            }
+            cl.run(20 + wave * 10);
+        }
+        cl
+    };
+    let reference = build(1);
+    assert_eq!(reference.num_sessions(), 10);
+    let late = reference.sessions()[6];
+    assert!(
+        late.metrics.records.len() < reference.sessions()[0].metrics.records.len(),
+        "late admits must have shorter transcripts"
+    );
+    for workers in [1usize, 4] {
+        let other = build(workers);
+        assert_eq!(
+            reference.assignment(),
+            other.assignment(),
+            "workers={workers}: admission routing must not see the pool size"
+        );
+        for (a, b) in reference.sessions().iter().zip(&other.sessions()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len(), "s{}", a.id);
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.p, rb.p, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(ra.delay_ms, rb.delay_ms, "workers={workers} s{} t={}", a.id, ra.t);
+                assert_eq!(
+                    ra.queue_wait_ms, rb.queue_wait_ms,
+                    "workers={workers} s{} t={}",
+                    a.id, ra.t
+                );
+            }
+            let sa = reference.policy_snapshot(a.id);
+            let sb = other.policy_snapshot(b.id);
+            assert_eq!(sa.theta, sb.theta, "workers={workers} s{} θ̂ bits", a.id);
+            assert_eq!(sa.ridge_a, sb.ridge_a, "workers={workers} s{} ridge A bits", a.id);
+        }
+    }
+}

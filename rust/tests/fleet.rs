@@ -1040,3 +1040,231 @@ fn auto_select_batch_tracks_fleet_composition() {
     eng.run(20);
     assert_eq!(eng.sessions()[0].metrics.records.len(), 20);
 }
+
+// ---------------------------------------------------------------------------
+// Open-world churn (ISSUE 9).  Helpers: a contended, ingress-coupled
+// churn fleet over partnet — arrivals, departures, duty-cycled
+// hibernation — built from a pure (seed, id) session family.
+// ---------------------------------------------------------------------------
+fn churn_world(workers: usize, trace_capacity: usize) -> ans::coordinator::OpenWorld {
+    use ans::coordinator::OpenWorld;
+    use ans::simulator::scenario::ChurnSchedule;
+    use ans::util::rng::Rng;
+
+    let net = zoo::partnet();
+    let horizon = 400; // policy horizon upper bound for any lifespan
+    let builder: ans::coordinator::openworld::SessionBuilder = Box::new(move |g| {
+        let env = scenario::fleet_session(
+            net.clone(),
+            g,
+            10.0,
+            DEVICE_MAXN,
+            EDGE_GPU,
+            1.0,
+            90,
+        );
+        let policy = mu_linucb(&net, horizon);
+        let source = FrameSource::video(
+            Rng::stream_seed(90, (1 << 32) + g),
+            0.85,
+            Weights::default_paper(),
+        );
+        (policy, env, source)
+    });
+    let schedule = ChurnSchedule::new(90, 8, 0.3, 60, 0.4).with_period(20);
+    OpenWorld::new(
+        EngineConfig {
+            contention: Contention::new(1, 0.5),
+            ingress_mbps: Some(200.0),
+            workers,
+            trace_capacity,
+            ..Default::default()
+        },
+        schedule,
+        builder,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// The churn pin: an open-world fleet — admissions, duty-cycle
+// hibernations, wakes, and evictions all mid-run — serves a transcript
+// that is bit-identical across workers ∈ {1, 2, 4} and across reruns.
+// Residency layout (store slots, active-set tiling) must be unobservable.
+// ---------------------------------------------------------------------------
+#[test]
+fn open_world_churn_is_bit_identical_across_worker_counts() {
+    let rounds = 150;
+    let run = |workers: usize| {
+        let mut world = churn_world(workers, 0);
+        world.run(rounds);
+        (world.stats(), world.into_metrics())
+    };
+
+    let (base_stats, base) = run(1);
+    // The scenario must actually churn: every transition kind fires.
+    assert!(base_stats.admissions > 8, "arrivals beyond the initial cohort");
+    assert!(base_stats.evictions > 0, "lifespans must expire mid-run");
+    assert!(base_stats.hibernates > 0, "duty cycles must park sessions");
+    assert!(base_stats.wakes > 0, "parked sessions must wake");
+    assert!(base_stats.cold > 0 || base_stats.resident > 0, "someone is live");
+    let frames: usize = base.iter().map(|(_, m)| m.records.len()).sum();
+    assert_eq!(frames as u64, base_stats.frames, "every offered frame lands in a record");
+
+    for workers in [1usize, 2, 4] {
+        let (stats, metrics) = run(workers);
+        assert_eq!(stats, base_stats, "workers={workers}: fleet counters diverge");
+        assert_eq!(metrics.len(), base.len(), "workers={workers}: session count diverges");
+        for ((id_a, a), (id_b, b)) in base.iter().zip(&metrics) {
+            assert_eq!(id_a, id_b, "workers={workers}: session order diverges");
+            assert_eq!(
+                a.records.len(),
+                b.records.len(),
+                "workers={workers} session {id_a}: record count"
+            );
+            for (l, w) in a.records.iter().zip(&b.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{id_a} t={}", l.t);
+                assert_eq!(
+                    l.delay_ms.to_bits(),
+                    w.delay_ms.to_bits(),
+                    "workers={workers} s{id_a} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.queue_wait_ms.to_bits(),
+                    w.queue_wait_ms.to_bits(),
+                    "workers={workers} s{id_a} t={}",
+                    l.t
+                );
+                assert_eq!(l.predicted_edge_ms, w.predicted_edge_ms,
+                    "workers={workers} s{id_a} t={}", l.t);
+                assert_eq!(l.oracle_p, w.oracle_p, "workers={workers} s{id_a} t={}", l.t);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Churn telemetry: the trace speaks hibernate/wake, and the full event
+// stream (membership transitions included) is deterministic across
+// worker counts modulo the wall-clock field.
+// ---------------------------------------------------------------------------
+#[test]
+fn churn_trace_is_deterministic_and_speaks_hibernate_wake() {
+    use ans::telemetry::EventKind;
+
+    let rounds = 120;
+    let run = |workers: usize| {
+        let mut world = churn_world(workers, 65_536);
+        world.run(rounds);
+        assert_eq!(world.engine().trace_dropped(), 0, "workers={workers}");
+        let events: Vec<_> = world
+            .engine_mut()
+            .drain_trace()
+            .into_iter()
+            .map(|e| e.sans_wall())
+            .collect();
+        events
+    };
+
+    let base = run(1);
+    let hibernates = base.iter().filter(|e| e.kind == EventKind::SessionHibernate).count();
+    let wakes = base.iter().filter(|e| e.kind == EventKind::SessionWake).count();
+    let attaches = base.iter().filter(|e| e.kind == EventKind::SessionAttach).count();
+    let evicts = base.iter().filter(|e| e.kind == EventKind::SessionEvict).count();
+    assert!(hibernates > 0, "trace must record hibernations");
+    assert!(wakes > 0, "trace must record wakes");
+    assert!(attaches > 8, "trace must record open-world admissions");
+    assert!(evicts > 0, "trace must record departures");
+
+    for workers in [2usize, 4] {
+        let events = run(workers);
+        assert_eq!(events.len(), base.len(), "workers={workers}: event count diverges");
+        for (i, (a, b)) in base.iter().zip(&events).enumerate() {
+            assert_eq!(a, b, "workers={workers}: event #{i} diverges");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hibernation is lossless: park a session to a byte arena mid-run, wake
+// it later, and its entire future — records AND learner state (A, b, θ̂,
+// counters) — must be bit-identical to a twin fleet whose session idled
+// resident (same active set every round, state never serialized), at
+// every worker count.
+// ---------------------------------------------------------------------------
+#[test]
+fn hibernate_wake_is_bit_identical_to_a_never_hibernated_twin() {
+    use ans::coordinator::Session;
+
+    let net = zoo::partnet();
+    let horizon = 150;
+    let mk_env = |i: u64| Environment::simple(net.clone(), 10.0 + i as f64, 100 + i);
+    let mk_src = |i: u64| FrameSource::video(500 + i, 0.85, Weights::default_paper());
+    let build = |workers: usize| {
+        let mut eng = Engine::new(EngineConfig {
+            contention: Contention::new(1, 0.5),
+            ingress_mbps: Some(200.0),
+            workers,
+            ..Default::default()
+        });
+        for i in 0..4u64 {
+            eng.add_session(mu_linucb(&net, horizon), mk_env(i), mk_src(i));
+        }
+        eng
+    };
+
+    for workers in [1usize, 2, 4] {
+        let mut hib = build(workers);
+        let mut twin = build(workers);
+        hib.run(60);
+        twin.run(60);
+
+        // Park session 1: to bytes in one fleet, resident-idle in the other.
+        assert!(hib.can_hibernate(1));
+        let cold = hib.hibernate_session(1, Vec::new());
+        assert!(cold.cold_bytes() > 0, "cold arena must hold the packed state");
+        assert!(!hib.contains(1));
+        twin.set_active(1, false);
+        hib.run(30);
+        twin.run(30);
+
+        // Wake: rebind a freshly built shell, unpack the arena.
+        let shell = Session::new(1, mu_linucb(&net, horizon), mk_env(1), mk_src(1));
+        hib.wake_session(cold, shell);
+        twin.set_active(1, true);
+        hib.run(60);
+        twin.run(60);
+
+        for id in 0..4usize {
+            let a = hib.session_by_id(id).unwrap();
+            let b = twin.session_by_id(id).unwrap();
+            assert_eq!(
+                a.metrics.records.len(),
+                b.metrics.records.len(),
+                "workers={workers} s{id}: record count"
+            );
+            for (l, w) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(l.p, w.p, "workers={workers} s{id} t={}", l.t);
+                assert_eq!(
+                    l.delay_ms.to_bits(),
+                    w.delay_ms.to_bits(),
+                    "workers={workers} s{id} t={}",
+                    l.t
+                );
+                assert_eq!(
+                    l.queue_wait_ms.to_bits(),
+                    w.queue_wait_ms.to_bits(),
+                    "workers={workers} s{id} t={}",
+                    l.t
+                );
+            }
+            let sa = hib.policy_snapshot_by_id(id);
+            let sb = twin.policy_snapshot_by_id(id);
+            assert_eq!(sa.observations, sb.observations, "workers={workers} s{id}");
+            assert_eq!(sa.resets, sb.resets, "workers={workers} s{id}");
+            assert_eq!(sa.theta, sb.theta, "workers={workers} s{id} θ̂ bits");
+            assert_eq!(sa.ridge_a, sb.ridge_a, "workers={workers} s{id} ridge A bits");
+            assert_eq!(sa.ridge_b, sb.ridge_b, "workers={workers} s{id} ridge b bits");
+        }
+    }
+}

@@ -326,6 +326,102 @@ fn batched_store_ops_are_bit_identical_to_scalar_ridge_states() {
 }
 
 #[test]
+fn prop_slot_freelist_recycles_smallest_first_and_never_corrupts_live_slots() {
+    // The open-world churn contract (DESIGN.md §14): sessions allocate
+    // and free store slots in arbitrary interleavings, and (a) alloc
+    // always hands out the SMALLEST free slot (then a fresh append) so
+    // slot assignment is a pure function of the alloc/free history,
+    // (b) freeing and recycling a slot never perturbs a single bit of
+    // any other live slot's ridge state, and (c) the free-list count
+    // stays consistent with live occupancy throughout.
+    use std::collections::BTreeSet;
+
+    const D: usize = 5;
+    let mut rng = Rng::new(0xF3EE_1157);
+    let mut store = PolicyStore::new(D);
+    store.reserve_slots(32);
+    // Model state: (slot, scalar twin) per live session + the mirrored
+    // free set the store must agree with.
+    let mut live: Vec<(usize, RidgeState)> = Vec::new();
+    let mut free_model: BTreeSet<usize> = BTreeSet::new();
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for round in 0..600 {
+        let roll = rng.uniform(0.0, 1.0);
+        if roll < 0.35 && live.len() < 24 {
+            // Admission: the store must hand out min(free) else append.
+            let expected =
+                free_model.first().copied().unwrap_or(store.len());
+            let slot = store.alloc_slot();
+            assert_eq!(slot, expected, "round {round}: alloc order");
+            free_model.remove(&slot);
+            let mut st = RidgeState::new(D, 1.0);
+            for _ in 0..3 {
+                let x: Vec<f64> = (0..D).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                st.update(&x, rng.uniform(0.0, 50.0));
+            }
+            store.slot_mut(slot).load_from(&st);
+            live.push((slot, st));
+        } else if roll < 0.55 && !live.is_empty() {
+            // Departure: free a random live slot.
+            let k = (rng.uniform(0.0, live.len() as f64) as usize).min(live.len() - 1);
+            let (slot, _) = live.swap_remove(k);
+            store.free_slot(slot);
+            free_model.insert(slot);
+        } else if !live.is_empty() {
+            // A serving round: gathered batched update over the live
+            // slots, mirrored on the scalar twins.
+            live.sort_by_key(|(slot, _)| *slot);
+            let idx: Vec<usize> = live.iter().map(|(slot, _)| *slot).collect();
+            xs.clear();
+            ys.clear();
+            for _ in &idx {
+                for _ in 0..D {
+                    xs.push(rng.uniform(-2.0, 2.0));
+                }
+                ys.push(rng.uniform(0.0, 50.0));
+            }
+            store.update_batch_at(&idx, &xs, &ys);
+            for (i, (_, st)) in live.iter_mut().enumerate() {
+                st.update(&xs[i * D..(i + 1) * D], ys[i]);
+            }
+        }
+
+        assert_eq!(
+            store.free_slots(),
+            free_model.len(),
+            "round {round}: free-list count drifts"
+        );
+        assert_eq!(store.len(), live.len() + free_model.len(), "round {round}");
+        if round % 29 == 0 {
+            for (slot, st) in &live {
+                let s = store.slot(*slot);
+                assert_eq!(s.a_data(), &st.a.data[..], "round {round} slot {slot} A bits");
+                assert_eq!(s.b_data(), &st.b[..], "round {round} slot {slot} b bits");
+                assert_eq!(
+                    s.ops_since_refresh(),
+                    st.ops_since_refresh(),
+                    "round {round} slot {slot} refresh counter"
+                );
+            }
+        }
+    }
+
+    // Drain: free everything, then re-admitting must sweep the slots in
+    // ascending order — the free list is fully ordered, no slot lost.
+    for (slot, _) in live.drain(..) {
+        store.free_slot(slot);
+    }
+    let n = store.len();
+    assert_eq!(store.free_slots(), n);
+    for want in 0..n {
+        assert_eq!(store.alloc_slot(), want, "drained store must refill in order");
+    }
+    assert_eq!(store.free_slots(), 0);
+}
+
+#[test]
 fn armmajor_window_kernels_are_bit_identical_to_scalar_ridge_states() {
     // The arm-major select phase (DESIGN.md §13) drives three window
     // kernels over a contiguous store slice: `theta_batch_into` (strided
