@@ -15,11 +15,24 @@
 //! Results land in `bench_results/cluster_scale.json`; CI runs the
 //! sweep in smoke mode (`BENCH_SAMPLES=3`) and uploads the artifact
 //! alongside the other bench JSONs.
+//!
+//! The second sweep (DESIGN.md §15) runs the SAME config-described fleet
+//! through the in-process cluster and through `--distribute process`
+//! (one child per replica over the framed protocol) and reports the
+//! honest wall-clock ratio into `bench_results/distributed_scale.json`.
+//! Honesty has two legs: `host_cores` is recorded next to every speedup
+//! (a 1-core box cannot show >1× and the JSON says so), and both modes'
+//! per-session transcripts are checksummed and asserted identical — a
+//! speedup obtained by drifting from the in-process decisions aborts the
+//! bench instead of reporting.
 
 use ans::bandit;
-use ans::coordinator::cluster::{Cluster, ClusterConfig, Placement, ReplicaSpec};
+use ans::config::Config;
+use ans::coordinator::cluster::{
+    cluster_from_config, Cluster, ClusterConfig, Placement, ReplicaSpec,
+};
 use ans::coordinator::engine::EngineConfig;
-use ans::coordinator::FrameSource;
+use ans::coordinator::{FrameSource, ProcessCluster};
 use ans::models::zoo;
 use ans::simulator::{scenario, Contention, Workload, DEVICE_MAXN, EDGE_GPU};
 use ans::util::bench::Bench;
@@ -65,6 +78,131 @@ fn serve_once(sessions: usize, replicas: usize, placement: Placement) -> (f64, f
     let secs = start.elapsed().as_secs_f64();
     let fs = cl.fleet_summary();
     ((sessions * rounds) as f64 / secs.max(1e-9), fs.aggregate.mean_delay_ms)
+}
+
+/// The config-described twin of the sweep fleet, for the distributed
+/// comparison (process workers bootstrap from the embedded config, so
+/// this sweep must go through [`cluster_from_config`], not the manual
+/// builder above).
+fn config_for(sessions: usize, replicas: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.sessions = sessions;
+    cfg.replicas = replicas;
+    cfg.frames = (FRAME_BUDGET / sessions).max(20);
+    cfg.rate_mbps = 12.0;
+    cfg.seed = 7;
+    cfg.placement = "least-loaded".into();
+    cfg.distribute = "process".into();
+    cfg.worker_exe = env!("CARGO_BIN_EXE_ans").into();
+    cfg
+}
+
+/// FNV-1a over every session's packed per-frame records, in canonical
+/// session order — the bit-identity witness both modes must share.
+fn transcript_checksum(cl: &Cluster) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut buf = Vec::new();
+    for s in cl.sessions() {
+        buf.clear();
+        s.metrics.pack(&mut buf);
+        for &byte in &buf {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One in-process serve of the config fleet: (frames/sec, checksum).
+fn serve_inproc(cfg: &Config) -> (f64, u64) {
+    let mut cl = cluster_from_config(cfg);
+    let start = Instant::now();
+    cl.run(cfg.frames);
+    let secs = start.elapsed().as_secs_f64();
+    ((cfg.sessions * cfg.frames) as f64 / secs.max(1e-9), transcript_checksum(&cl))
+}
+
+/// One process-per-replica serve: (frames/sec over the framed rounds,
+/// child bootstrap+merge overhead ms, checksum).  The serving clock
+/// covers only the round protocol; spawn/bootstrap/merge are reported
+/// separately so the steady-state ratio is not diluted by startup.
+fn serve_process(cfg: &Config) -> (f64, f64, u64) {
+    let setup = Instant::now();
+    let state = cluster_from_config(cfg).snapshot_state();
+    let mut pc = ProcessCluster::launch(cfg, &state).expect("launching replica workers");
+    let mut overhead = setup.elapsed().as_secs_f64();
+    let start = Instant::now();
+    pc.run(cfg.frames).expect("distributed run");
+    let secs = start.elapsed().as_secs_f64();
+    let merge = Instant::now();
+    let merged = pc.finish().expect("merging replica states");
+    overhead += merge.elapsed().as_secs_f64();
+    (
+        (cfg.sessions * cfg.frames) as f64 / secs.max(1e-9),
+        1e3 * overhead,
+        transcript_checksum(&merged),
+    )
+}
+
+fn distributed_sweep(b: &Bench, samples: usize) {
+    let host_cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rows: Vec<Json> = Vec::new();
+    for &sessions in SESSIONS {
+        let name = format!("distributed_scale/s{sessions}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        for &replicas in REPLICAS {
+            let cfg = config_for(sessions, replicas);
+            let mut best_in = 0.0_f64;
+            let mut best_proc = 0.0_f64;
+            let mut overhead_ms = f64::INFINITY;
+            let mut checksum = 0u64;
+            for _ in 0..samples {
+                let (fps_in, sum_in) = serve_inproc(&cfg);
+                let (fps_proc, over, sum_proc) = serve_process(&cfg);
+                assert_eq!(
+                    sum_in, sum_proc,
+                    "s{sessions} r{replicas}: process transcripts drifted from in-process"
+                );
+                best_in = best_in.max(fps_in);
+                best_proc = best_proc.max(fps_proc);
+                overhead_ms = overhead_ms.min(over);
+                checksum = sum_in;
+            }
+            let speedup = best_proc / best_in.max(1e-9);
+            println!(
+                "{name:<32} replicas {replicas}  in-proc {best_in:>10.0} f/s  process \
+                 {best_proc:>10.0} f/s  (x{speedup:.2}, {host_cores} core(s), setup \
+                 {overhead_ms:.0} ms)"
+            );
+            rows.push(obj(vec![
+                ("sessions", Json::from(sessions)),
+                ("replicas", Json::from(replicas)),
+                ("rounds", Json::from(cfg.frames)),
+                ("inproc_frames_per_sec", Json::from(best_in)),
+                ("process_frames_per_sec", Json::from(best_proc)),
+                ("speedup", Json::from(speedup)),
+                ("setup_overhead_ms", Json::from(overhead_ms)),
+                ("transcript_checksum", Json::from(format!("{checksum:016x}"))),
+            ]));
+        }
+    }
+    if rows.is_empty() {
+        return;
+    }
+    let doc = obj(vec![
+        ("bench", Json::from("distributed_scale")),
+        ("samples", Json::from(samples)),
+        ("frame_budget", Json::from(FRAME_BUDGET)),
+        ("host_cores", Json::from(host_cores)),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").expect("creating bench_results/");
+    std::fs::write("bench_results/distributed_scale.json", doc.to_string())
+        .expect("writing bench_results/distributed_scale.json");
+    println!("distributed sweep JSON -> bench_results/distributed_scale.json");
 }
 
 fn main() {
@@ -118,4 +256,6 @@ fn main() {
     std::fs::write("bench_results/cluster_scale.json", doc.to_string())
         .expect("writing bench_results/cluster_scale.json");
     println!("cluster sweep JSON -> bench_results/cluster_scale.json");
+
+    distributed_sweep(&b, samples);
 }

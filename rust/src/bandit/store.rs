@@ -480,6 +480,16 @@ impl PolicyStore {
         self.free.len()
     }
 
+    /// The free list itself (sorted descending — its in-memory order).
+    /// Snapshots persist this alongside [`PolicyStore::len`]; restore
+    /// replays `push_slot` for every slot then `free_slot` for each entry,
+    /// and because `free_slot` keeps the vector sorted the rebuilt list is
+    /// identical regardless of replay order — so post-restore allocation
+    /// order matches the unbroken run exactly.
+    pub fn free_list(&self) -> &[usize] {
+        &self.free
+    }
+
     /// Pre-size the arenas for `extra` additional slots beyond the current
     /// length, and the free list for every slot that could ever be freed —
     /// after this, any interleaving of alloc/free within that envelope

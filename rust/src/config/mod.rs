@@ -117,6 +117,27 @@ pub struct Config {
     /// Open-world fleet: fraction of each activity cycle a session
     /// spends active (1 = always on; idle spans hibernate to bytes).
     pub duty: f64,
+    /// Write a typed fleet snapshot to this path (`ans fleet` only;
+    /// empty = off).  With `--snapshot-at` the snapshot is taken mid-run
+    /// and the run continues; otherwise it is taken at the end.
+    pub snapshot: String,
+    /// Round to take the `--snapshot` at (0 = end of run).  The run
+    /// still completes all `--frames` rounds, so an unbroken run and a
+    /// snapshot→resume pair cover identical round ranges.
+    pub snapshot_at: usize,
+    /// Resume a fleet run from a typed snapshot file (empty = fresh
+    /// run).  The snapshot's embedded config supplies every structural
+    /// knob; the run completes the remaining rounds bit-identically to
+    /// the unbroken run.
+    pub resume: String,
+    /// Cluster execution mode (`in-process` | `process`).  `process`
+    /// runs each replica in its own child process over the framed
+    /// protocol — bit-identical outputs, honest multi-core scaling.
+    pub distribute: String,
+    /// Path of the worker executable for `--distribute process`
+    /// (empty = this binary).  Exists so tests and benches can point the
+    /// parent at the compiled test binary's sibling `ans`.
+    pub worker_exe: String,
 }
 
 impl Default for Config {
@@ -163,6 +184,11 @@ impl Default for Config {
             arrivals: 0.0,
             lifespan: 400,
             duty: 1.0,
+            snapshot: String::new(),
+            snapshot_at: 0,
+            resume: String::new(),
+            distribute: "in-process".into(),
+            worker_exe: String::new(),
         }
     }
 }
@@ -179,9 +205,85 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Serialize every *structural* knob as a JSON config object — the
+    /// exact document [`Config::from_json_value`] rebuilds from.  This
+    /// is what snapshots embed and what the parent ships to child
+    /// workers, so a resumed or distributed run reproduces the original
+    /// structure (model, policy horizon, scheduler, cluster shape)
+    /// without re-spelling flags.  Invocation-local knobs — `snapshot`,
+    /// `snapshot_at`, `resume`, `distribute`, `worker_exe` — are *not*
+    /// emitted: they describe how one particular invocation was driven,
+    /// not what the run is.  `deadline_ms` is emitted only when it was
+    /// explicitly configured, because its mere presence flips
+    /// `deadline_set` (lockstep deadline-miss accounting) on decode.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("model", Json::from(self.model.as_str())),
+            ("policy", Json::from(self.policy.as_str())),
+            ("frames", Json::from(self.frames)),
+            ("rate_mbps", Json::from(self.rate_mbps)),
+            ("device", Json::from(self.device.as_str())),
+            ("edge", Json::from(self.edge.as_str())),
+            ("load", Json::from(self.load)),
+            ("alpha", Json::from(self.alpha)),
+            ("mu", Json::from(self.mu)),
+            ("window", Json::from(self.window)),
+            ("ssim_threshold", Json::from(self.ssim_threshold)),
+            ("l_key", Json::from(self.l_key)),
+            ("l_non_key", Json::from(self.l_non_key)),
+            ("seed", Json::from(self.seed as usize)),
+            ("fps", Json::from(self.fps)),
+            ("max_batch", Json::from(self.max_batch)),
+            ("artifacts_dir", Json::from(self.artifacts_dir.display().to_string())),
+            ("sessions", Json::from(self.sessions)),
+            ("workers", Json::from(self.workers)),
+            ("contention_capacity", Json::from(self.contention_capacity)),
+            ("contention_slope", Json::from(self.contention_slope)),
+            ("ingress_mbps", Json::from(self.ingress_mbps)),
+            ("scheduler", Json::from(self.scheduler.as_str())),
+            ("batch_window_ms", Json::from(self.batch_window_ms)),
+            ("queue_capacity", Json::from(self.queue_capacity)),
+            ("stagger_ms", Json::from(self.stagger_ms)),
+            ("event_clock", Json::from(self.event_clock)),
+            ("queue_signal", Json::from(self.queue_signal.as_str())),
+            ("signal_stagger_ms", Json::from(self.signal_stagger_ms)),
+            ("select_batch", Json::from(self.select_batch.as_str())),
+            ("replicas", Json::from(self.replicas)),
+            ("placement", Json::from(self.placement.as_str())),
+            ("migrate_every", Json::from(self.migrate_every)),
+            ("trace", Json::from(self.trace.as_str())),
+            ("trace_capacity", Json::from(self.trace_capacity)),
+            ("metrics_every", Json::from(self.metrics_every)),
+            ("arrivals", Json::from(self.arrivals)),
+            ("lifespan", Json::from(self.lifespan)),
+            ("duty", Json::from(self.duty)),
+        ];
+        if self.deadline_set {
+            fields.push(("deadline_ms", Json::from(self.deadline_ms)));
+        }
+        crate::util::json::obj(fields)
+    }
+
+    /// Rebuild a config from the JSON object [`Config::to_json`] emits
+    /// (defaults + overlay + validation).  Used for snapshot-embedded
+    /// configs and child-worker bootstrap.
+    pub fn from_json_value(v: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        cfg.apply_json_object(v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     fn apply_json(&mut self, path: &str) -> Result<()> {
         let text = std::fs::read_to_string(path)?;
         let v = Json::parse(&text)?;
+        self.apply_json_object(&v)
+    }
+
+    /// Overlay every key of a JSON config object onto `self`.  Shared by
+    /// `--config file.json` and the snapshot-embedded config
+    /// ([`Config::from_json_value`]); unknown keys are an error.
+    fn apply_json_object(&mut self, v: &Json) -> Result<()> {
         let obj = v.as_obj().context("config root must be an object")?;
         for (key, val) in obj {
             match key.as_str() {
@@ -228,6 +330,11 @@ impl Config {
                 "arrivals" => self.arrivals = val.as_f64()?,
                 "lifespan" => self.lifespan = val.as_usize()?,
                 "duty" => self.duty = val.as_f64()?,
+                "snapshot" => self.snapshot = val.as_str()?.to_string(),
+                "snapshot_at" => self.snapshot_at = val.as_usize()?,
+                "resume" => self.resume = val.as_str()?.to_string(),
+                "distribute" => self.distribute = val.as_str()?.to_string(),
+                "worker_exe" => self.worker_exe = val.as_str()?.to_string(),
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -301,6 +408,19 @@ impl Config {
         self.arrivals = args.f64_or("arrivals", self.arrivals)?;
         self.lifespan = args.usize_or("lifespan", self.lifespan)?;
         self.duty = args.f64_or("duty", self.duty)?;
+        if let Some(v) = args.get("snapshot") {
+            self.snapshot = v.to_string();
+        }
+        self.snapshot_at = args.usize_or("snapshot-at", self.snapshot_at)?;
+        if let Some(v) = args.get("resume") {
+            self.resume = v.to_string();
+        }
+        if let Some(v) = args.get("distribute") {
+            self.distribute = v.to_string();
+        }
+        if let Some(v) = args.get("worker-exe") {
+            self.worker_exe = v.to_string();
+        }
         Ok(())
     }
 
@@ -433,6 +553,41 @@ impl Config {
                 self.replicas == 1,
                 "open-world churn (--arrivals) runs on a single engine; \
                  drop --replicas or set it to 1"
+            );
+        }
+        anyhow::ensure!(
+            self.distribute == "in-process" || self.distribute == "process",
+            "unknown distribute mode `{}` — valid modes: in-process, process",
+            self.distribute
+        );
+        if self.snapshot_at > 0 {
+            anyhow::ensure!(
+                !self.snapshot.is_empty(),
+                "--snapshot-at names a round but no file — add --snapshot FILE"
+            );
+            anyhow::ensure!(
+                self.snapshot_at < self.frames,
+                "--snapshot-at {} must fall inside the run (frames = {})",
+                self.snapshot_at,
+                self.frames
+            );
+            anyhow::ensure!(
+                self.resume.is_empty(),
+                "--snapshot-at counts rounds of a fresh run; it cannot combine with --resume \
+                 (resume, then --snapshot to capture the completed state)"
+            );
+            anyhow::ensure!(
+                self.distribute != "process",
+                "--snapshot-at is not supported under --distribute process \
+                 (children snapshot only at finish); run in-process to split a run"
+            );
+        }
+        if self.arrivals > 0.0 {
+            anyhow::ensure!(
+                self.snapshot.is_empty() && self.resume.is_empty()
+                    && self.distribute == "in-process",
+                "open-world churn (--arrivals) has no snapshot/distributed path; \
+                 drop --snapshot/--resume/--distribute"
             );
         }
         Ok(())
@@ -827,6 +982,73 @@ mod tests {
         let err = Config::from_args(&args("x --model alexnet")).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("vgg16") && msg.contains("partnet"), "{msg}");
+    }
+
+    #[test]
+    fn snapshot_and_distribute_knobs_parse_and_validate() {
+        // Defaults: no snapshot, no resume, in-process.
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        assert!(cfg.snapshot.is_empty());
+        assert_eq!(cfg.snapshot_at, 0);
+        assert!(cfg.resume.is_empty());
+        assert_eq!(cfg.distribute, "in-process");
+        assert!(cfg.worker_exe.is_empty());
+        let cfg = Config::from_args(&args(
+            "fleet --frames 200 --snapshot /tmp/s.json --snapshot-at 100",
+        ))
+        .unwrap();
+        assert_eq!(cfg.snapshot, "/tmp/s.json");
+        assert_eq!(cfg.snapshot_at, 100);
+        let cfg = Config::from_args(&args(
+            "fleet --replicas 2 --distribute process --worker-exe /tmp/ans",
+        ))
+        .unwrap();
+        assert_eq!(cfg.distribute, "process");
+        assert_eq!(cfg.worker_exe, "/tmp/ans");
+        // snapshot-at needs a file and must fall inside the run.
+        let err = Config::from_args(&args("fleet --snapshot-at 100 --frames 200")).unwrap_err();
+        assert!(format!("{err:#}").contains("--snapshot"), "{err:#}");
+        assert!(Config::from_args(&args(
+            "fleet --snapshot /tmp/s.json --snapshot-at 500 --frames 500"
+        ))
+        .is_err());
+        // snapshot-at is for fresh in-process runs only.
+        assert!(Config::from_args(&args(
+            "fleet --snapshot /tmp/s.json --snapshot-at 10 --resume /tmp/r.json"
+        ))
+        .is_err());
+        assert!(Config::from_args(&args(
+            "fleet --snapshot /tmp/s.json --snapshot-at 10 --distribute process"
+        ))
+        .is_err());
+        // Unknown mode lists the choices.
+        let err = Config::from_args(&args("fleet --distribute threads")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("in-process") && msg.contains("process"), "{msg}");
+        // Open-world churn has neither path.
+        assert!(Config::from_args(&args("fleet --arrivals 1 --snapshot /tmp/s.json")).is_err());
+        assert!(Config::from_args(&args("fleet --arrivals 1 --distribute process")).is_err());
+    }
+
+    #[test]
+    fn config_json_round_trips_exactly() {
+        let cfg = Config::from_args(&args(
+            "fleet --sessions 12 --replicas 3 --workers 2 --placement migrate \
+             --migrate-every 25 --scheduler edf --deadline 60 --queue-signal full \
+             --rate 7.25 --mu 0.3 --seed 9 --frames 123 --metrics-every 10",
+        ))
+        .unwrap();
+        let back = Config::from_json_value(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(format!("{back:?}"), format!("{cfg:?}"), "structural fields round-trip");
+        assert!(back.deadline_set);
+        assert_eq!(back.to_json().to_string(), cfg.to_json().to_string());
+        // Without an explicit deadline, the embedded config must not
+        // invent one (deadline_set stays false through the round trip).
+        let cfg = Config::from_args(&args("fleet --sessions 4")).unwrap();
+        let back = Config::from_json_value(&cfg.to_json()).unwrap();
+        assert!(!back.deadline_set);
+        assert_eq!(back.scheduler_config().deadline_ms, f64::INFINITY);
     }
 
     #[test]

@@ -127,6 +127,16 @@ impl ReplicaSpec {
             })
             .collect()
     }
+
+    /// Expected full-offload (EO, p = 0) service cost of `env`'s network
+    /// on this replica's edge at round `t` — the router's unit of load.
+    /// EO is the worst-case back-end span, so the score upper-bounds
+    /// what a session can ask of the replica per round.  Lives on the
+    /// spec (not [`Replica`]) so the process-cluster parent, which holds
+    /// specs but no engines, prices the same auction.
+    pub fn eo_cost_ms(&self, env: &Environment, t: usize) -> f64 {
+        self.edge.delay_ms(&env.net.backend_stats(0), self.load.at(t))
+    }
 }
 
 /// One engine replica behind the router: the full per-round serving core
@@ -141,12 +151,10 @@ pub struct Replica {
 }
 
 impl Replica {
-    /// Expected full-offload (EO, p = 0) service cost of `env`'s network
-    /// on this replica at round `t` — the router's unit of load.  EO is
-    /// the worst-case back-end span, so the score upper-bounds what a
-    /// session can ask of the replica per round.
+    /// The router's load unit for this replica (see
+    /// [`ReplicaSpec::eo_cost_ms`]).
     fn eo_cost_ms(&self, env: &Environment, t: usize) -> f64 {
-        self.spec.edge.delay_ms(&env.net.backend_stats(0), self.spec.load.at(t))
+        self.spec.eo_cost_ms(env, t)
     }
 
     /// Per-replica reporting slice (see [`ReplicaSummary`] on the
@@ -431,32 +439,21 @@ impl Cluster {
         // adds the *live* wait at scoring time).
         let waits: Vec<f64> =
             self.replicas.iter().map(|r| r.engine.forecast().wait_ms(now_ms)).collect();
-        let mut load = vec![0.0f64; self.replicas.len()];
-        let n = self.assignment.len();
-        let mut target = vec![0usize; n];
-        for id in 0..n {
-            let from = self.assignment[id];
-            let best = {
-                // Sessions are kept in store-slot order, not id order, so
-                // go through the engine's id index.
-                let s = self.replicas[from]
-                    .engine
-                    .session_by_id(id)
-                    .expect("assignment tracks session homes");
-                let mut best = 0;
-                let mut best_score = f64::INFINITY;
-                for (r, rep) in self.replicas.iter().enumerate() {
-                    let score = waits[r] + load[r] + rep.eo_cost_ms(&s.env, t);
-                    if score < best_score {
-                        best_score = score;
-                        best = r;
-                    }
-                }
-                load[best] += self.replicas[best].eo_cost_ms(&s.env, t);
-                best
-            };
-            target[id] = best;
-        }
+        let (target, load) = {
+            let specs: Vec<&ReplicaSpec> = self.replicas.iter().map(|r| &r.spec).collect();
+            // Sessions are kept in store-slot order, not id order, so go
+            // through the engine's id index.
+            let envs: Vec<&Environment> = (0..self.assignment.len())
+                .map(|id| {
+                    &self.replicas[self.assignment[id]]
+                        .engine
+                        .session_by_id(id)
+                        .expect("assignment tracks session homes")
+                        .env
+                })
+                .collect();
+            auction_assignment(&specs, &waits, &envs, t)
+        };
         for (id, &to) in target.iter().enumerate() {
             self.migrate_session(id, to);
         }
@@ -578,14 +575,203 @@ impl Cluster {
             Some(window.summary(p_max))
         }
     }
+
+    /// Fold externally measured serving wall-clock into the throughput
+    /// accounting — the process-cluster parent times the distributed run
+    /// and stamps it onto the reassembled cluster here.
+    pub(crate) fn add_serve_wall_ms(&mut self, ms: f64) {
+        self.serve_wall_ms += ms;
+    }
+
+    // --- Typed snapshot / restore (DESIGN.md §15) ----------------------
+
+    /// Name of the first resident policy anywhere in the cluster that
+    /// cannot round-trip through a cold arena (`None` = snapshot-safe).
+    pub fn unsnapshottable_policy(&self) -> Option<String> {
+        self.replicas.iter().find_map(|r| r.engine.unsnapshottable_policy())
+    }
+
+    /// Capture the whole cluster's mutable state — router bookkeeping
+    /// plus every replica's engine — as a typed
+    /// [`super::snapshot::ClusterState`].  Non-destructive; call at a
+    /// round boundary.  Wall-clock throughput accounting is *not*
+    /// state: a resumed cluster restarts its serve timer, since wall
+    /// time is excluded from every bit-identity pin anyway.
+    pub fn snapshot_state(&mut self) -> super::snapshot::ClusterState {
+        super::snapshot::ClusterState {
+            round: self.round,
+            migrations: self.migrations,
+            assignment: self.assignment.clone(),
+            base_load: self.base_load.clone(),
+            replicas: self
+                .replicas
+                .iter_mut()
+                .map(|r| super::snapshot::ReplicaState {
+                    id: r.id,
+                    label: r.spec.label.clone(),
+                    edge: r.spec.edge.name.to_string(),
+                    load: r.spec.load.clone(),
+                    migrations_in: r.migrations_in,
+                    migrations_out: r.migrations_out,
+                    engine: r.engine.snapshot_state(),
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Bind a session's environment to a replica's edge: the replica owns
 /// the edge compute profile and its exogenous workload; the session
 /// keeps everything device-side (uplink, noise stream, front delays).
-fn attach(session: &mut Session, spec: &ReplicaSpec) {
+/// Crate-visible so the process-per-replica child driver
+/// ([`super::remote`]) rebinds migrated-in sessions the same way.
+pub(crate) fn attach(session: &mut Session, spec: &ReplicaSpec) {
     session.env.edge = spec.edge;
     session.env.workload = spec.load.clone();
+}
+
+/// The rebalancer's greedy auction, extracted as a pure function of
+/// frozen inputs: per-replica specs, pre-round forecast waits, and each
+/// session's environment (in global id order).  Returns the target
+/// replica per session and the final per-replica auction load totals.
+/// Both the in-process [`Cluster::rebalance`] and the process-cluster
+/// parent ([`super::remote::ProcessCluster`]) call exactly this, which
+/// is the determinism argument for distributed migration: same frozen
+/// inputs → same moves (DESIGN.md §15).
+pub(crate) fn auction_assignment(
+    specs: &[&ReplicaSpec],
+    waits: &[f64],
+    envs: &[&Environment],
+    t: usize,
+) -> (Vec<usize>, Vec<f64>) {
+    assert_eq!(specs.len(), waits.len(), "one forecast wait per replica");
+    let mut load = vec![0.0f64; specs.len()];
+    let mut target = vec![0usize; envs.len()];
+    for (id, env) in envs.iter().enumerate() {
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for (r, spec) in specs.iter().enumerate() {
+            let score = waits[r] + load[r] + spec.eo_cost_ms(env, t);
+            if score < best_score {
+                best_score = score;
+                best = r;
+            }
+        }
+        load[best] += specs[best].eo_cost_ms(env, t);
+        target[id] = best;
+    }
+    (target, load)
+}
+
+/// Deterministic session-shell factory for snapshot restore and the
+/// process-per-replica children: rebuilds a [`Session`]'s *structure*
+/// (environment, policy, video source) exactly as
+/// [`cluster_from_config`] built it for that global id — environments
+/// via the (seed, id)-pure [`crate::simulator::scenario::fleet_session`],
+/// video streams via the same `VIDEO_STREAM_BASE + id` split — leaving
+/// all mutable state to be overlaid from a snapshot arena (the
+/// hibernation wake contract, generalized).
+pub(crate) struct ShellFactory {
+    cfg: Config,
+    net: crate::models::Network,
+    device: ComputeProfile,
+    edge: ComputeProfile,
+}
+
+impl ShellFactory {
+    pub fn new(cfg: &Config) -> ShellFactory {
+        ShellFactory {
+            cfg: cfg.clone(),
+            net: crate::models::zoo::by_name(&cfg.model).expect("validated model"),
+            device: crate::simulator::profile_by_name(&cfg.device).expect("validated device"),
+            edge: crate::simulator::profile_by_name(&cfg.edge).expect("validated edge"),
+        }
+    }
+
+    /// Global id `g`'s base environment — identical to the entry the
+    /// eager fleet build would have produced.
+    pub fn env(&self, id: usize) -> Environment {
+        crate::simulator::scenario::fleet_session(
+            self.net.clone(),
+            id as u64,
+            self.cfg.rate_mbps,
+            self.device,
+            self.edge,
+            self.cfg.load,
+            self.cfg.seed,
+        )
+    }
+
+    /// A structure-identical shell for global id `id`, bound to `spec`'s
+    /// edge.  The policy is built against the *base* environment first
+    /// (the `cluster_from_config` construction order), then the spec is
+    /// attached — restore then overlays all mutable state.
+    pub fn shell(&self, id: usize, spec: &ReplicaSpec) -> Session {
+        let env = self.env(id);
+        let policy = self.cfg.policy(&env.net, &env.device, &env.edge);
+        let source = FrameSource::video(
+            Rng::stream_seed(self.cfg.seed, super::engine::VIDEO_STREAM_BASE + id as u64),
+            self.cfg.ssim_threshold,
+            Weights::new(self.cfg.l_key, self.cfg.l_non_key),
+        );
+        let mut s = Session::new(id, policy, env, source);
+        attach(&mut s, spec);
+        s
+    }
+}
+
+/// Rebuild a running [`Cluster`] from a decoded snapshot: structure from
+/// `cfg` (which must be the snapshot's embedded config), state from
+/// `state`.  The result is bit-identical to the cluster that was
+/// snapshotted — same records, learner state, router totals, and trace
+/// history (pinned in `rust/tests/snapshot.rs`).
+pub fn cluster_from_snapshot(cfg: &Config, state: &super::snapshot::ClusterState) -> Cluster {
+    let specs: Vec<ReplicaSpec> = state
+        .replicas
+        .iter()
+        .map(|r| {
+            ReplicaSpec::new(
+                r.label.clone(),
+                crate::simulator::profile_by_name(&r.edge).expect("validated by snapshot decode"),
+                r.load.clone(),
+            )
+        })
+        .collect();
+    let mut cluster = Cluster::new(
+        ClusterConfig {
+            engine: engine_config_from(cfg),
+            placement: cfg.placement_mode(),
+            migrate_every: cfg.migrate_every,
+        },
+        specs,
+    );
+    // Cross-check the router's view against the per-replica membership
+    // before touching any engine.
+    for rs in &state.replicas {
+        for ss in &rs.engine.sessions {
+            assert!(
+                ss.id < state.assignment.len() && state.assignment[ss.id] == rs.id,
+                "snapshot assignment says session {} lives on replica {:?}, \
+                 but replica {} holds it",
+                ss.id,
+                state.assignment.get(ss.id),
+                rs.id
+            );
+        }
+    }
+    let shells = ShellFactory::new(cfg);
+    for (r, rs) in cluster.replicas.iter_mut().zip(&state.replicas) {
+        let replica_shells: Vec<Session> =
+            rs.engine.sessions.iter().map(|ss| shells.shell(ss.id, &r.spec)).collect();
+        r.engine.restore_state(&rs.engine, replica_shells);
+        r.migrations_in = rs.migrations_in;
+        r.migrations_out = rs.migrations_out;
+    }
+    cluster.assignment = state.assignment.clone();
+    cluster.base_load = state.base_load.clone();
+    cluster.round = state.round;
+    cluster.migrations = state.migrations;
+    cluster
 }
 
 /// Assemble the replica cluster a [`Config`] describes: `cfg.replicas`
@@ -596,6 +782,27 @@ fn attach(session: &mut Session, spec: &ReplicaSpec) {
 /// streams, so `--replicas 1 --placement static` is byte-for-byte the
 /// single-engine fleet (pinned in `rust/tests/fleet.rs`).
 pub fn cluster_from_config(cfg: &Config) -> Cluster {
+    let edge = crate::simulator::profile_by_name(&cfg.edge).expect("validated edge");
+    cluster_with_replicas(
+        cfg,
+        ReplicaSpec::uniform(cfg.replicas, edge, Workload::constant(cfg.load)),
+    )
+}
+
+/// [`cluster_from_config`] over an explicit (possibly heterogeneous)
+/// replica spec set.  Sessions are still built the config-described way
+/// — same environments, policies and RNG streams — which is exactly
+/// what the snapshot/process machinery rebuilds shells from
+/// ([`ShellFactory`]), so typed snapshots and `--distribute process`
+/// apply to heterogeneous clusters too (the per-replica edge profile
+/// and workload ride [`super::snapshot::ReplicaState`]).  Used by the
+/// distributed bit-identity tests and `benches/cluster_scale.rs`.
+pub fn cluster_with_replicas(cfg: &Config, specs: Vec<ReplicaSpec>) -> Cluster {
+    assert_eq!(
+        specs.len(),
+        cfg.replicas,
+        "replica specs must match cfg.replicas (snapshots cross-check the two)"
+    );
     let net = crate::models::zoo::by_name(&cfg.model).expect("validated model");
     let device = crate::simulator::profile_by_name(&cfg.device).expect("validated device");
     let edge = crate::simulator::profile_by_name(&cfg.edge).expect("validated edge");
@@ -608,7 +815,6 @@ pub fn cluster_from_config(cfg: &Config) -> Cluster {
         cfg.load,
         cfg.seed,
     );
-    let specs = ReplicaSpec::uniform(cfg.replicas, edge, Workload::constant(cfg.load));
     let mut cluster = Cluster::new(
         ClusterConfig {
             engine: engine_config_from(cfg),

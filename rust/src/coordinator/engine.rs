@@ -1668,6 +1668,16 @@ pub struct Engine {
     /// worker.  Always on: recording is one `Instant` delta per phase,
     /// and wall readings never feed back into any simulated quantity.
     phases: PhaseClock,
+    /// Trace events carried over from before a snapshot/restore:
+    /// [`Engine::snapshot_state`] folds the live rings in here (so the
+    /// snapshot holds the full history without consuming it) and
+    /// [`Engine::restore_state`] seeds it from the snapshot, so
+    /// [`Engine::drain_trace`] on a resumed engine returns the same
+    /// canonical event stream an unbroken run would (DESIGN.md §15).
+    trace_backlog: Vec<TraceEvent>,
+    /// Ring-overflow drops recorded before the snapshot this engine was
+    /// restored from (added to the live rings' counts).
+    trace_dropped_carry: u64,
 }
 
 impl Engine {
@@ -1719,6 +1729,8 @@ impl Engine {
             serve_wall_ms: 0.0,
             tracer,
             phases: PhaseClock::new(workers),
+            trace_backlog: Vec::new(),
+            trace_dropped_carry: 0,
         }
     }
 
@@ -2008,21 +2020,222 @@ impl Engine {
 
     /// Drain the trace rings into the canonical event sequence (sorted
     /// by round, kind, session — see [`Tracer::drain`]).  Empty when
-    /// tracing is off.  Report-time only: draining allocates.
+    /// tracing is off.  Report-time only: draining allocates.  Any
+    /// snapshot/restore backlog is merged in front, so a resumed run's
+    /// trace is the unbroken run's trace.
     pub fn drain_trace(&mut self) -> Vec<TraceEvent> {
-        self.tracer.as_mut().map_or_else(Vec::new, Tracer::drain)
+        let mut out = std::mem::take(&mut self.trace_backlog);
+        if let Some(tr) = self.tracer.as_mut() {
+            if out.is_empty() {
+                return tr.drain();
+            }
+            out.extend(tr.drain());
+            out.sort_by_key(|e| (e.round, e.kind, e.session));
+        }
+        out
     }
 
     /// Events overwritten because a trace ring was full (0 = the trace
-    /// is complete).
+    /// is complete).  Includes drops recorded before the snapshot a
+    /// resumed engine was restored from.
     pub fn trace_dropped(&self) -> u64 {
-        self.tracer.as_ref().map_or(0, Tracer::dropped)
+        self.trace_dropped_carry + self.tracer.as_ref().map_or(0, Tracer::dropped)
     }
 
     /// Accumulated wall-clock per select/submit/realize/observe phase
     /// per worker (always on).
     pub fn phase_clock(&self) -> &PhaseClock {
         &self.phases
+    }
+
+    // --- Typed snapshot / restore (DESIGN.md §15) ----------------------
+
+    /// Name of the first resident policy that cannot round-trip through
+    /// a cold arena (`None` = the whole engine can be snapshotted).
+    /// The CLI checks this before `--snapshot`/`--distribute process`
+    /// and turns an unsupported policy (Neurosurgeon) into a friendly
+    /// error instead of a panic.
+    pub fn unsnapshottable_policy(&self) -> Option<String> {
+        self.sessions
+            .iter()
+            .find(|s| !s.policy.supports_hibernate())
+            .map(|s| s.policy.name().to_string())
+    }
+
+    /// Capture the engine's complete mutable serving state as a typed
+    /// [`super::snapshot::EngineState`].  Non-destructive: the engine
+    /// keeps running afterwards, bit-identical to a twin that was never
+    /// snapshotted (the cold-arena pack is `&self`; the one side effect
+    /// is folding the live trace rings into the retained backlog, which
+    /// [`Engine::drain_trace`] returns either way).  Call at a round
+    /// boundary only — between rounds the edge queue's waiting room and
+    /// virtual clocks are the entire scheduler state, so packing them
+    /// captures everything in flight.
+    pub fn snapshot_state(&mut self) -> super::snapshot::EngineState {
+        use crate::util::bytes::put_usize;
+        self.commit_membership();
+        // Fold the live rings into the backlog: the snapshot carries the
+        // full event history and the engine keeps it for its own drain.
+        if let Some(tr) = self.tracer.as_mut() {
+            let fresh = tr.drain();
+            if !fresh.is_empty() {
+                self.trace_backlog.extend(fresh);
+                self.trace_backlog.sort_by_key(|e| (e.round, e.kind, e.session));
+            }
+        }
+        let mut sessions = Vec::with_capacity(self.sessions.len());
+        for s in &self.sessions {
+            assert!(
+                s.policy.supports_hibernate(),
+                "policy {} cannot snapshot (no cold round-trip); \
+                 check Engine::unsnapshottable_policy first",
+                s.policy.name()
+            );
+            let mut arena = Vec::new();
+            s.policy.pack_cold(Some(self.store.slot(s.slot)), &mut arena);
+            s.env.pack_cursor(&mut arena);
+            s.source.pack_cursor(&mut arena);
+            let mut records = Vec::new();
+            s.metrics.pack(&mut records);
+            sessions.push(super::snapshot::SessionState {
+                id: s.id,
+                active: s.active,
+                slot: s.slot,
+                arena,
+                records,
+            });
+        }
+        let mut ingress = Vec::new();
+        if let Some(ing) = self.ingress.as_ref() {
+            ing.pack_state(&mut ingress);
+        }
+        let mut scheduler = Vec::new();
+        if let Some(sched) = self.scheduler.as_ref() {
+            sched.pack_state(&mut scheduler);
+        }
+        let mut trace = Vec::new();
+        put_usize(&mut trace, self.trace_backlog.len());
+        for e in &self.trace_backlog {
+            e.pack(&mut trace);
+        }
+        super::snapshot::EngineState {
+            round: self.round,
+            next_id: self.next_id,
+            offloaders_last: self.offloaders_last,
+            offload_counts: self.offload_counts.clone(),
+            store_slots: self.store.len(),
+            free_slots: self.store.free_list().to_vec(),
+            ingress,
+            scheduler,
+            sessions,
+            trace,
+            trace_dropped: self.trace_dropped(),
+        }
+    }
+
+    /// Rebuild a snapshotted engine into `self`, which must be a
+    /// freshly-built engine with the same [`EngineConfig`].  `shells`
+    /// holds one config-identical [`Session`] shell per snapshot
+    /// session, in snapshot order and built from the same parameters as
+    /// the originals — restore rebinds structure, the snapshot overlays
+    /// state (the [`Engine::wake_session`] contract, generalized to the
+    /// whole engine).  Restore is trace-silent: membership is rebuilt by
+    /// direct field surgery rather than [`Engine::attach_session`], so
+    /// no spurious attach events pollute the resumed trace (the packed
+    /// backlog already holds the history).  The result is bit-identical
+    /// to the engine that was snapshotted, pinned on disk in
+    /// `rust/tests/snapshot.rs`.
+    pub fn restore_state(&mut self, state: &super::snapshot::EngineState, shells: Vec<Session>) {
+        use crate::util::bytes::Reader;
+        assert!(
+            self.sessions.is_empty() && self.round == 0,
+            "restore_state needs a fresh engine"
+        );
+        assert_eq!(
+            shells.len(),
+            state.sessions.len(),
+            "restore needs one shell per snapshot session"
+        );
+        // Rebuild the store's slot window exactly: push every slot in
+        // index order, then free the snapshot's free list.  free_slot
+        // keeps the list sorted descending, so the rebuilt vector is
+        // identical to the snapshot's regardless of replay order.
+        for _ in 0..state.store_slots {
+            self.store.push_slot();
+        }
+        for &f in &state.free_slots {
+            self.store.free_slot(f);
+        }
+        for (mut shell, ss) in shells.into_iter().zip(&state.sessions) {
+            assert_eq!(shell.id, ss.id, "shell order must match snapshot order");
+            assert!(ss.slot < state.store_slots, "session {} slot {} out of window", ss.id, ss.slot);
+            {
+                let mut sm = self.store.slot_mut(ss.slot);
+                shell.policy.adopt_slot(&mut sm);
+            }
+            shell.slot = ss.slot;
+            shell.active = ss.active;
+            {
+                let mut r = Reader::new(&ss.arena);
+                let mut sm = self.store.slot_mut(ss.slot);
+                shell.policy.unpack_cold(Some(&mut sm), &mut r);
+                shell.env.unpack_cursor(&mut r);
+                shell.source.unpack_cursor(&mut r);
+                assert!(
+                    r.is_empty(),
+                    "snapshot arena not fully consumed (session {})",
+                    ss.id
+                );
+            }
+            {
+                let mut r = Reader::new(&ss.records);
+                shell.metrics = Metrics::unpack(&mut r);
+                assert!(
+                    r.is_empty(),
+                    "snapshot records not fully consumed (session {})",
+                    ss.id
+                );
+            }
+            self.batchable.push(shell.policy.as_batched().is_some());
+            self.sessions.push(shell);
+        }
+        self.dirty = true;
+        self.commit_membership();
+        self.next_id = state.next_id;
+        self.round = state.round;
+        self.offloaders_last = state.offloaders_last;
+        self.offload_counts = state.offload_counts.clone();
+        match self.ingress.as_mut() {
+            Some(ing) => {
+                let mut r = Reader::new(&state.ingress);
+                ing.unpack_state(&mut r);
+                assert!(r.is_empty(), "snapshot ingress state not fully consumed");
+            }
+            None => assert!(
+                state.ingress.is_empty(),
+                "snapshot carries shared-ingress state but this engine has none \
+                 (config mismatch)"
+            ),
+        }
+        match self.scheduler.as_mut() {
+            Some(sched) => {
+                let mut r = Reader::new(&state.scheduler);
+                sched.unpack_state(&mut r);
+                assert!(r.is_empty(), "snapshot scheduler state not fully consumed");
+            }
+            None => assert!(
+                state.scheduler.is_empty(),
+                "snapshot carries edge-scheduler state but this engine runs \
+                 lockstep (config mismatch)"
+            ),
+        }
+        {
+            let mut r = Reader::new(&state.trace);
+            let n = r.take_usize();
+            self.trace_backlog = (0..n).map(|_| TraceEvent::unpack(&mut r)).collect();
+            assert!(r.is_empty(), "snapshot trace backlog not fully consumed");
+        }
+        self.trace_dropped_carry = state.trace_dropped;
     }
 
     /// The deterministic pre-round queue forecast ([`EdgeEstimate`]) —

@@ -1,6 +1,7 @@
 //! Per-frame records and experiment summaries.
 
 use crate::telemetry::{Histogram, PhaseClock};
+use crate::util::bytes::{put_bool, put_f64, put_usize, Reader};
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Streaming};
 
@@ -51,6 +52,67 @@ pub struct FrameRecord {
     /// (false when no finite deadline is set).  Counted independent of
     /// EDF admission.
     pub deadline_miss: bool,
+}
+
+impl FrameRecord {
+    /// Append the record to a snapshot arena, every field verbatim
+    /// (f64s as bit patterns, so noisy delays survive bit-exactly).
+    pub fn pack(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.t);
+        put_usize(out, self.p);
+        put_bool(out, self.is_key);
+        put_f64(out, self.weight);
+        put_f64(out, self.delay_ms);
+        put_f64(out, self.expected_ms);
+        put_usize(out, self.oracle_p);
+        put_f64(out, self.oracle_ms);
+        put_f64(out, self.rate_mbps);
+        put_bool(out, self.predicted_edge_ms.is_some());
+        put_f64(out, self.predicted_edge_ms.unwrap_or(0.0));
+        put_f64(out, self.true_edge_ms);
+        put_f64(out, self.queue_wait_ms);
+        put_usize(out, self.batch_size);
+        put_bool(out, self.rejected);
+        put_f64(out, self.event_expected_ms);
+        put_usize(out, self.event_oracle_p);
+        put_f64(out, self.event_oracle_ms);
+        put_bool(out, self.deadline_miss);
+    }
+
+    /// Rebuild a record packed by [`FrameRecord::pack`].
+    pub fn unpack(r: &mut Reader<'_>) -> FrameRecord {
+        let t = r.take_usize();
+        let p = r.take_usize();
+        let is_key = r.take_bool();
+        let weight = r.take_f64();
+        let delay_ms = r.take_f64();
+        let expected_ms = r.take_f64();
+        let oracle_p = r.take_usize();
+        let oracle_ms = r.take_f64();
+        let rate_mbps = r.take_f64();
+        let has_pred = r.take_bool();
+        let pred = r.take_f64();
+        FrameRecord {
+            t,
+            p,
+            is_key,
+            weight,
+            delay_ms,
+            expected_ms,
+            oracle_p,
+            oracle_ms,
+            rate_mbps,
+            predicted_edge_ms: if has_pred { Some(pred) } else { None },
+            true_edge_ms: r.take_f64(),
+            queue_wait_ms: r.take_f64(),
+            batch_size: r.take_usize(),
+            rejected: r.take_bool(),
+            event_expected_ms: r.take_f64(),
+            event_oracle_p: r.take_usize(),
+            event_oracle_ms: r.take_f64(),
+            deadline_miss: r.take_bool(),
+        }
+    }
 }
 
 /// Aggregated metrics over a run.
@@ -253,6 +315,25 @@ impl Metrics {
             return f64::NAN;
         }
         tail.iter().map(|(_, e)| e).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Append every record to a snapshot arena (length-prefixed).
+    pub fn pack(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.records.len());
+        for r in &self.records {
+            r.pack(out);
+        }
+    }
+
+    /// Rebuild metrics packed by [`Metrics::pack`].
+    pub fn unpack(r: &mut Reader<'_>) -> Metrics {
+        let n = r.take_usize();
+        let mut m = Metrics::new();
+        m.records.reserve(n);
+        for _ in 0..n {
+            m.records.push(FrameRecord::unpack(r));
+        }
+        m
     }
 
     /// Concatenate per-session metrics into one fleet-wide view (records
@@ -805,6 +886,41 @@ mod tests {
         assert!((s.total_regret_ms - (20.0 + 30.0)).abs() < 1e-12);
         assert!((s.event_regret_ms - (20.0 + 10.0)).abs() < 1e-12);
         assert_eq!(s.deadline_misses, 1);
+    }
+
+    #[test]
+    fn records_pack_round_trips_bit_exactly() {
+        let mut m = Metrics::new();
+        let mut a = rec(0, 1, 10.125, true);
+        a.predicted_edge_ms = None;
+        a.queue_wait_ms = f64::NAN; // pathological but must survive bit-exact
+        a.rejected = true;
+        m.push(a);
+        m.push(rec(1, 2, 31.0e-3, false));
+        let mut arena = Vec::new();
+        m.pack(&mut arena);
+        // Double-encode is byte-stable (the property tests lean on this).
+        let mut again = Vec::new();
+        m.pack(&mut again);
+        assert_eq!(arena, again);
+        let back = Metrics::unpack(&mut Reader::new(&arena));
+        assert_eq!(back.records.len(), 2);
+        for (orig, got) in m.records.iter().zip(&back.records) {
+            assert_eq!(orig.t, got.t);
+            assert_eq!(orig.p, got.p);
+            assert_eq!(orig.is_key, got.is_key);
+            assert_eq!(orig.delay_ms.to_bits(), got.delay_ms.to_bits());
+            assert_eq!(orig.queue_wait_ms.to_bits(), got.queue_wait_ms.to_bits());
+            assert_eq!(orig.predicted_edge_ms.map(f64::to_bits), got.predicted_edge_ms.map(f64::to_bits));
+            assert_eq!(orig.rejected, got.rejected);
+            assert_eq!(orig.deadline_miss, got.deadline_miss);
+        }
+        // Empty metrics round-trip too.
+        let empty = Metrics::new();
+        let mut buf = Vec::new();
+        empty.pack(&mut buf);
+        let back = Metrics::unpack(&mut Reader::new(&buf));
+        assert!(back.records.is_empty());
     }
 
     #[test]

@@ -17,6 +17,14 @@
 //! * [`openworld`] — the open-world fleet driver: deterministic
 //!   arrival/departure churn with duty-cycle hibernation over one engine
 //!   ([`openworld::OpenWorld`]), O(active) per round.
+//! * [`snapshot`] — the typed snapshot schema: full serving state
+//!   (sessions, learners, queues, clocks, cursors, trace backlog) as a
+//!   bit-exact JSON document for `--snapshot`/`--resume` (DESIGN.md §15).
+//! * [`protocol`] — the length-prefixed framed protocol between the
+//!   cluster parent and its per-replica child processes.
+//! * [`remote`] — process-per-replica execution ([`remote::ProcessCluster`]):
+//!   each replica runs in its own child process, bit-identical to the
+//!   in-process cluster, for honest multi-core scaling.
 //! * [`experiment`] — the single-stream simulation runner (all paper
 //!   exhibits); a thin wrapper over one engine session.
 //! * [`pipeline`] — the *real* serving path: PartNet over two PJRT clients
@@ -35,11 +43,19 @@ pub mod metrics;
 pub mod openworld;
 pub mod pipeline;
 pub mod pool;
+pub mod protocol;
+pub mod remote;
+pub mod snapshot;
 
-pub use cluster::{cluster_from_config, Cluster, ClusterConfig, Placement, Replica, ReplicaSpec};
+pub use cluster::{
+    cluster_from_config, cluster_from_snapshot, cluster_with_replicas, Cluster, ClusterConfig,
+    Placement, Replica, ReplicaSpec,
+};
 pub use engine::{Engine, EngineConfig, FrameSource, SelectBatch, Session};
 pub use hibernate::ColdSession;
 pub use openworld::{openworld_from_config, OpenWorld, OpenWorldStats};
 pub use experiment::{quick_run, run};
 pub use metrics::{FleetSummary, FrameRecord, Metrics, ReplicaSummary, Summary};
 pub use pipeline::{serve, PipelineConfig, ServingReport};
+pub use remote::{run_replica_worker, ProcessCluster};
+pub use snapshot::{ClusterState, EngineState, FleetSnapshot, ReplicaState, SessionState};

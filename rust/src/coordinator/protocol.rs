@@ -1,0 +1,274 @@
+//! The framed wire protocol between the process-cluster parent and its
+//! per-replica child workers (DESIGN.md §15).
+//!
+//! Every frame is `[u32 payload_len (LE)] [u8 tag] [payload]` over the
+//! child's stdin/stdout pipes.  Payloads are either fixed-width
+//! little-endian scalars (round counts, f64 bit patterns) or UTF-8 JSON
+//! documents in the typed snapshot schema ([`super::snapshot`]) — the
+//! same bit-exact encoding the on-disk snapshots use, so "migrate a
+//! session between processes" and "resume a session from disk" are one
+//! code path.
+//!
+//! The exchange is strictly request/reply in a fixed order driven by the
+//! parent (bootstrap → {step | forecast | detach | attach}* → finish),
+//! which is what makes the distributed cluster deterministic: no frame
+//! ever races another, and each reply is matched to its request by
+//! position.  A child that dies mid-run surfaces as an
+//! `UnexpectedEof`/`BrokenPipe` on the next read/write, which the parent
+//! wraps with the replica id and pid ([`super::remote`]).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Hard ceiling on a single frame's payload (1 GiB): a corrupt or
+/// misaligned length prefix dies with a named error instead of an
+/// attempted giant allocation.
+const MAX_PAYLOAD: usize = 1 << 30;
+
+/// One protocol frame.  Parent→child: `Bootstrap`, `Step`, `Forecast`,
+/// `Detach`, `Attach`, `Finish`.  Child→parent: `Ack`, `Wait`,
+/// `Session`, `State`, `Err`.  JSON-carrying frames keep the document
+/// opaque here; [`super::remote`] builds/reads them via the snapshot
+/// codecs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Child bootstrap: `{config, replica, n_sessions?, spec, engine}`.
+    Bootstrap(Json),
+    /// Serve this many rounds, then `Ack`.
+    Step(u64),
+    /// Evaluate the frozen queue forecast at `now_ms`, reply `Wait`.
+    Forecast(f64),
+    /// Detach session `id` (trace-visible eviction), reply `Session`.
+    Detach(usize),
+    /// Attach a migrated-in session: `{from, to, session}`, reply `Ack`.
+    Attach(Json),
+    /// Snapshot the engine and exit, reply `State`.
+    Finish,
+    /// Command completed.
+    Ack,
+    /// Forecast wait in ms (bit-exact).
+    Wait(f64),
+    /// A detached session's wire blob ([`MigrateBlob`] as JSON).
+    Session(Json),
+    /// The child's final typed engine state (snapshot schema JSON).
+    State(Json),
+    /// The child failed; the message is the child-side error chain.
+    Err(String),
+}
+
+const TAG_BOOTSTRAP: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_FORECAST: u8 = 3;
+const TAG_DETACH: u8 = 4;
+const TAG_ATTACH: u8 = 5;
+const TAG_FINISH: u8 = 6;
+const TAG_ACK: u8 = 16;
+const TAG_WAIT: u8 = 17;
+const TAG_SESSION: u8 = 18;
+const TAG_STATE: u8 = 19;
+const TAG_ERR: u8 = 20;
+
+impl Frame {
+    /// Short frame name for error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Bootstrap(_) => "bootstrap",
+            Frame::Step(_) => "step",
+            Frame::Forecast(_) => "forecast",
+            Frame::Detach(_) => "detach",
+            Frame::Attach(_) => "attach",
+            Frame::Finish => "finish",
+            Frame::Ack => "ack",
+            Frame::Wait(_) => "wait",
+            Frame::Session(_) => "session",
+            Frame::State(_) => "state",
+            Frame::Err(_) => "err",
+        }
+    }
+
+    fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Frame::Bootstrap(doc) => (TAG_BOOTSTRAP, doc.to_string().into_bytes()),
+            Frame::Step(n) => (TAG_STEP, n.to_le_bytes().to_vec()),
+            Frame::Forecast(ms) => (TAG_FORECAST, ms.to_bits().to_le_bytes().to_vec()),
+            Frame::Detach(id) => (TAG_DETACH, (*id as u64).to_le_bytes().to_vec()),
+            Frame::Attach(doc) => (TAG_ATTACH, doc.to_string().into_bytes()),
+            Frame::Finish => (TAG_FINISH, Vec::new()),
+            Frame::Ack => (TAG_ACK, Vec::new()),
+            Frame::Wait(ms) => (TAG_WAIT, ms.to_bits().to_le_bytes().to_vec()),
+            Frame::Session(doc) => (TAG_SESSION, doc.to_string().into_bytes()),
+            Frame::State(doc) => (TAG_STATE, doc.to_string().into_bytes()),
+            Frame::Err(msg) => (TAG_ERR, msg.clone().into_bytes()),
+        }
+    }
+
+    fn decode(tag: u8, payload: Vec<u8>) -> Result<Frame> {
+        let u64_payload = |payload: &[u8]| -> Result<u64> {
+            let bytes: [u8; 8] = payload
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("expected 8-byte payload, got {}", payload.len()))?;
+            Ok(u64::from_le_bytes(bytes))
+        };
+        let json_payload = |payload: Vec<u8>| -> Result<Json> {
+            let text = String::from_utf8(payload).context("frame payload is not UTF-8")?;
+            Json::parse(&text).map_err(anyhow::Error::from)
+        };
+        Ok(match tag {
+            TAG_BOOTSTRAP => Frame::Bootstrap(json_payload(payload).context("bootstrap frame")?),
+            TAG_STEP => Frame::Step(u64_payload(&payload).context("step frame")?),
+            TAG_FORECAST => {
+                Frame::Forecast(f64::from_bits(u64_payload(&payload).context("forecast frame")?))
+            }
+            TAG_DETACH => Frame::Detach(u64_payload(&payload).context("detach frame")? as usize),
+            TAG_ATTACH => Frame::Attach(json_payload(payload).context("attach frame")?),
+            TAG_FINISH => Frame::Finish,
+            TAG_ACK => Frame::Ack,
+            TAG_WAIT => Frame::Wait(f64::from_bits(u64_payload(&payload).context("wait frame")?)),
+            TAG_SESSION => Frame::Session(json_payload(payload).context("session frame")?),
+            TAG_STATE => Frame::State(json_payload(payload).context("state frame")?),
+            TAG_ERR => Frame::Err(String::from_utf8_lossy(&payload).into_owned()),
+            other => bail!("unknown frame tag {other}"),
+        })
+    }
+}
+
+/// Write one frame and flush (the peer blocks on it).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let (tag, payload) = frame.encode();
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame.  EOF before or inside a frame surfaces as an
+/// `UnexpectedEof` io error — the caller turns that into a "replica
+/// died" report.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut header = [0u8; 5];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    let tag = header[4];
+    if len > MAX_PAYLOAD {
+        bail!("frame payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap (corrupt stream?)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Frame::decode(tag, payload)
+}
+
+// ---------------------------------------------------------------------------
+// Migration blob: a detached session on the wire.
+// ---------------------------------------------------------------------------
+
+/// A whole session crossing process boundaries: identity, activity, and
+/// the same packed arenas the snapshot schema uses — `arena` is the
+/// cold image with the policy packed from its *owned* backing
+/// (`pack_cold(None)`, since a detached session holds no store slot),
+/// then the env and source cursors; `records` is the packed metrics
+/// history.  The destination rebuilds a structure-identical shell and
+/// overlays this, exactly as an in-process migration hands the live
+/// struct across.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrateBlob {
+    pub id: usize,
+    pub active: bool,
+    pub arena: Vec<u8>,
+    pub records: Vec<u8>,
+}
+
+impl MigrateBlob {
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("id", Json::from(self.id)),
+            ("active", Json::from(self.active)),
+            ("arena", crate::util::json::bytes_hex(&self.arena)),
+            ("records", crate::util::json::bytes_hex(&self.records)),
+        ])
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> std::result::Result<MigrateBlob, crate::util::json::JsonError> {
+        use crate::util::json::{field_bool, field_bytes_hex, field_usize};
+        Ok(MigrateBlob {
+            id: field_usize(v, path, "id")?,
+            active: field_bool(v, path, "active")?,
+            arena: field_bytes_hex(v, path, "arena")?,
+            records: field_bytes_hex(v, path, "records")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_over_a_pipe_buffer() {
+        let frames = vec![
+            Frame::Bootstrap(Json::parse(r#"{"replica": 0}"#).unwrap()),
+            Frame::Step(250),
+            Frame::Forecast(f64::NAN),
+            Frame::Detach(7),
+            Frame::Attach(Json::parse(r#"{"from": 1, "to": 0}"#).unwrap()),
+            Frame::Finish,
+            Frame::Ack,
+            Frame::Wait(-0.0),
+            Frame::Session(Json::parse(r#"{"id": 3}"#).unwrap()),
+            Frame::State(Json::parse(r#"{"round": 9}"#).unwrap()),
+            Frame::Err("child exploded".into()),
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            let back = read_frame(&mut r).unwrap();
+            match (f, &back) {
+                // NaN != NaN under PartialEq; compare bits for the floats.
+                (Frame::Forecast(a), Frame::Forecast(b)) | (Frame::Wait(a), Frame::Wait(b)) => {
+                    assert_eq!(a.to_bits(), b.to_bits())
+                }
+                _ => assert_eq!(f, &back),
+            }
+        }
+        assert!(r.is_empty(), "stream fully consumed");
+    }
+
+    #[test]
+    fn truncated_and_corrupt_streams_are_named_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Step(10)).unwrap();
+        // Truncation anywhere inside the frame is an io error (EOF).
+        for cut in [0, 3, 5, buf.len() - 1] {
+            let mut r = &buf[..cut];
+            assert!(read_frame(&mut r).is_err(), "cut at {cut}");
+        }
+        // Unknown tag.
+        let mut bad = vec![0, 0, 0, 0, 99];
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r).unwrap_err().to_string().contains("tag 99"));
+        // Absurd length prefix dies before allocating.
+        bad = ((MAX_PAYLOAD + 1) as u32).to_le_bytes().to_vec();
+        bad.push(TAG_ACK);
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn migrate_blob_round_trips() {
+        let blob = MigrateBlob {
+            id: 5,
+            active: false,
+            arena: (0..64).collect(),
+            records: vec![0xde, 0xad],
+        };
+        let back =
+            MigrateBlob::from_json(&Json::parse(&blob.to_json().to_string()).unwrap(), "b").unwrap();
+        assert_eq!(back, blob);
+        let err = MigrateBlob::from_json(&Json::parse(r#"{"id": 1}"#).unwrap(), "b").unwrap_err();
+        assert!(err.0.contains("`b`"), "{err}");
+    }
+}

@@ -1,0 +1,501 @@
+//! Process-per-replica cluster execution (DESIGN.md §15).
+//!
+//! [`ProcessCluster`] runs each [`super::cluster::Replica`] in its own
+//! child process (the hidden `ans _replica-worker` subcommand,
+//! [`run_replica_worker`]), speaking the framed protocol of
+//! [`super::protocol`] over stdin/stdout pipes.  The division of labor
+//! mirrors the in-process [`super::cluster::Cluster`] exactly:
+//!
+//! * the **parent** owns the router — assignment, auction load totals,
+//!   migration counters, and the rebalance schedule.  It drives children
+//!   in lockstep chunks aligned to `migrate_every` boundaries and runs
+//!   the *same* [`super::cluster::auction_assignment`] over the same
+//!   frozen inputs (per-replica specs, forecast waits fetched from the
+//!   children at the boundary, per-session base environments);
+//! * each **child** owns one replica's engine: it bootstraps by
+//!   restoring its slice of a typed snapshot, serves rounds on command,
+//!   and hands sessions across on detach/attach frames using the same
+//!   arenas the hibernation/snapshot subsystem packs.
+//!
+//! Because replicas share no mutable state and the router sees only
+//! frozen pre-round state, the interleaving freedom of real processes
+//! changes nothing: records, learner state, router decisions, and the
+//! merged trace are bit-identical to the in-process cluster at every
+//! replica and worker count (pinned in `rust/tests/distributed.rs`) —
+//! which makes the multi-core speedups of `benches/cluster_scale.rs`
+//! honest rather than approximate.
+//!
+//! Failure model: a child that exits mid-run (crash, OOM-kill, test
+//! hook) surfaces as a clean parent error naming the replica and pid at
+//! the next frame exchange — never a hang, because every request is
+//! matched by exactly one reply and EOF on the pipe is an error.
+//! Recovery is by `--resume` from the last snapshot.
+
+use super::cluster::{auction_assignment, ShellFactory};
+use super::engine::{engine_config_from, Engine, Session};
+use super::metrics::Metrics;
+use super::protocol::{read_frame, write_frame, Frame, MigrateBlob};
+use super::snapshot::{workload_from_json, workload_to_json, ClusterState, EngineState, ReplicaState};
+use crate::config::Config;
+use crate::coordinator::cluster::{cluster_from_snapshot, Cluster, Placement, ReplicaSpec};
+use crate::simulator::Environment;
+use crate::util::bytes::Reader;
+use crate::util::json::{field, field_str, field_usize, obj, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::time::Instant;
+
+/// Crash-injection hook for the kill-a-child test: when set to `N`, a
+/// worker exits with code 42 after serving `N` rounds, without replying
+/// — the parent must then report a clean "replica died" error.
+pub const CRASH_AFTER_ENV: &str = "ANS_TEST_CRASH_AFTER_ROUNDS";
+
+// ---------------------------------------------------------------------------
+// Parent.
+// ---------------------------------------------------------------------------
+
+struct Worker {
+    id: usize,
+    child: Child,
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+/// The parent half of the process cluster (see module docs).  Build one
+/// from a [`ClusterState`] (fresh from
+/// [`super::cluster::cluster_from_config`] + `snapshot_state`, or loaded
+/// from disk), [`ProcessCluster::run`] the horizon, then
+/// [`ProcessCluster::finish`] to collect the children's final engine
+/// states into an ordinary in-process [`Cluster`] for reporting.
+pub struct ProcessCluster {
+    cfg: Config,
+    specs: Vec<ReplicaSpec>,
+    /// Current home replica per global session id.
+    assignment: Vec<usize>,
+    base_load: Vec<f64>,
+    round: usize,
+    migrations: usize,
+    migrations_in: Vec<usize>,
+    migrations_out: Vec<usize>,
+    /// Per-session base environments for auction pricing.  The auction
+    /// reads only static network structure (`env.net`), so these never
+    /// need ticking or cursor state.
+    envs: Vec<Environment>,
+    frame_interval_ms: f64,
+    workers: Vec<Worker>,
+    serve_wall_ms: f64,
+}
+
+impl ProcessCluster {
+    /// Spawn one worker per replica and bootstrap each from its slice of
+    /// `state`.  The worker binary is `cfg.worker_exe` when set (tests
+    /// and benches point it at `env!("CARGO_BIN_EXE_ans")`), else the
+    /// current executable.
+    pub fn launch(cfg: &Config, state: &ClusterState) -> Result<ProcessCluster> {
+        let exe = if cfg.worker_exe.is_empty() {
+            std::env::current_exe().context("resolving the worker executable")?
+        } else {
+            std::path::PathBuf::from(&cfg.worker_exe)
+        };
+        let specs: Vec<ReplicaSpec> = state
+            .replicas
+            .iter()
+            .map(|r| {
+                ReplicaSpec::new(
+                    r.label.clone(),
+                    crate::simulator::profile_by_name(&r.edge)
+                        .expect("validated by snapshot decode"),
+                    r.load.clone(),
+                )
+            })
+            .collect();
+        let shells = ShellFactory::new(cfg);
+        let envs: Vec<Environment> =
+            (0..state.assignment.len()).map(|id| shells.env(id)).collect();
+        let mut workers = Vec::with_capacity(state.replicas.len());
+        for r in &state.replicas {
+            let mut child = Command::new(&exe)
+                .arg("_replica-worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                // stderr inherited: child panic backtraces reach the user.
+                .spawn()
+                .with_context(|| {
+                    format!("spawning worker for replica {} ({})", r.id, exe.display())
+                })?;
+            let stdin = child.stdin.take().expect("piped stdin");
+            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+            workers.push(Worker { id: r.id, child, stdin, stdout });
+        }
+        let mut pc = ProcessCluster {
+            cfg: cfg.clone(),
+            specs,
+            assignment: state.assignment.clone(),
+            base_load: state.base_load.clone(),
+            round: state.round,
+            migrations: state.migrations,
+            migrations_in: state.replicas.iter().map(|r| r.migrations_in).collect(),
+            migrations_out: state.replicas.iter().map(|r| r.migrations_out).collect(),
+            envs,
+            frame_interval_ms: engine_config_from(cfg).frame_interval_ms,
+            workers,
+            serve_wall_ms: 0.0,
+        };
+        // Bootstrap all children first, then collect the acks — the
+        // (potentially large) snapshot restores run concurrently.
+        for (i, r) in state.replicas.iter().enumerate() {
+            let doc = obj(vec![
+                ("config", pc.cfg.to_json()),
+                ("replica", Json::from(r.id)),
+                (
+                    "spec",
+                    obj(vec![
+                        ("label", Json::from(r.label.clone())),
+                        ("edge", Json::from(r.edge.clone())),
+                        ("load", workload_to_json(&r.load)),
+                    ]),
+                ),
+                ("engine", r.engine.to_json()),
+            ]);
+            pc.send(i, &Frame::Bootstrap(doc))?;
+        }
+        for i in 0..pc.workers.len() {
+            pc.expect_ack(i, "bootstrap")?;
+        }
+        Ok(pc)
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn died(&mut self, r: usize) -> String {
+        let w = &mut self.workers[r];
+        // A finished child yields its exit status; a live one reports
+        // the protocol failure only.
+        let status = match w.child.try_wait() {
+            Ok(Some(st)) => format!(" ({st})"),
+            _ => String::new(),
+        };
+        format!("replica {} worker (pid {}) died mid-run{status}", w.id, w.child.id())
+    }
+
+    fn send(&mut self, r: usize, frame: &Frame) -> Result<()> {
+        match write_frame(&mut self.workers[r].stdin, frame) {
+            Ok(()) => Ok(()),
+            Err(e) => Err(e.context(self.died(r))),
+        }
+    }
+
+    fn recv(&mut self, r: usize) -> Result<Frame> {
+        let frame = match read_frame(&mut self.workers[r].stdout) {
+            Ok(f) => f,
+            Err(e) => return Err(e.context(self.died(r))),
+        };
+        if let Frame::Err(msg) = frame {
+            bail!("replica {} worker failed: {msg}", self.workers[r].id);
+        }
+        Ok(frame)
+    }
+
+    fn expect_ack(&mut self, r: usize, what: &str) -> Result<()> {
+        match self.recv(r)? {
+            Frame::Ack => Ok(()),
+            other => bail!(
+                "replica {} worker replied `{}` to {what}, expected ack",
+                self.workers[r].id,
+                other.name()
+            ),
+        }
+    }
+
+    /// Serve `rounds` cluster rounds: children step in parallel between
+    /// migration boundaries; at each boundary the parent re-runs the
+    /// greedy auction exactly where [`Cluster::step`] would.
+    pub fn run(&mut self, rounds: usize) -> Result<()> {
+        let start = Instant::now();
+        let end = self.round + rounds;
+        let migrate = self.cfg.placement_mode() == Placement::Migrate;
+        let every = self.cfg.migrate_every;
+        while self.round < end {
+            if migrate && self.round > 0 && self.round % every == 0 {
+                self.rebalance()?;
+            }
+            let next = if migrate { ((self.round / every + 1) * every).min(end) } else { end };
+            let chunk = (next - self.round) as u64;
+            for r in 0..self.workers.len() {
+                self.send(r, &Frame::Step(chunk))?;
+            }
+            for r in 0..self.workers.len() {
+                self.expect_ack(r, "step")?;
+            }
+            self.round = next;
+        }
+        self.serve_wall_ms += start.elapsed().as_secs_f64() * 1e3;
+        Ok(())
+    }
+
+    /// The distributed rebalance: fetch every replica's frozen forecast
+    /// wait, run the shared auction, then apply the moves in global
+    /// session-id order — each move detaches the packed session from its
+    /// source child and attaches it at the destination (the wire twin of
+    /// [`Cluster::migrate_session`], trace events included).
+    fn rebalance(&mut self) -> Result<()> {
+        let t = self.round;
+        let now_ms = t as f64 * self.frame_interval_ms;
+        for r in 0..self.workers.len() {
+            self.send(r, &Frame::Forecast(now_ms))?;
+        }
+        let mut waits = Vec::with_capacity(self.workers.len());
+        for r in 0..self.workers.len() {
+            match self.recv(r)? {
+                Frame::Wait(w) => waits.push(w),
+                other => bail!(
+                    "replica {} worker replied `{}` to forecast",
+                    self.workers[r].id,
+                    other.name()
+                ),
+            }
+        }
+        let (target, load) = {
+            let specs: Vec<&ReplicaSpec> = self.specs.iter().collect();
+            let envs: Vec<&Environment> = self.envs.iter().collect();
+            auction_assignment(&specs, &waits, &envs, t)
+        };
+        for (id, &to) in target.iter().enumerate() {
+            let from = self.assignment[id];
+            if from == to {
+                continue;
+            }
+            self.send(from, &Frame::Detach(id))?;
+            let blob = match self.recv(from)? {
+                Frame::Session(doc) => doc,
+                other => bail!(
+                    "replica {} worker replied `{}` to detach",
+                    self.workers[from].id,
+                    other.name()
+                ),
+            };
+            self.send(
+                to,
+                &Frame::Attach(obj(vec![
+                    ("from", Json::from(from)),
+                    ("to", Json::from(to)),
+                    ("session", blob),
+                ])),
+            )?;
+            self.expect_ack(to, "attach")?;
+            self.migrations_out[from] += 1;
+            self.migrations_in[to] += 1;
+            self.assignment[id] = to;
+            self.migrations += 1;
+        }
+        // Carry the fresh auction totals, exactly like the in-process
+        // rebalance (intermediate repricing is overwritten there too).
+        self.base_load = load;
+        Ok(())
+    }
+
+    /// Collect every child's final typed engine state and reassemble an
+    /// ordinary in-process [`Cluster`] — summaries, policy snapshots,
+    /// trace drains, and `--snapshot` output all reuse the existing
+    /// cluster reporting verbatim.  Consumes the parent; children exit.
+    pub fn finish(mut self) -> Result<Cluster> {
+        for r in 0..self.workers.len() {
+            self.send(r, &Frame::Finish)?;
+        }
+        let mut replicas = Vec::with_capacity(self.workers.len());
+        for r in 0..self.workers.len() {
+            let engine = match self.recv(r)? {
+                Frame::State(doc) => {
+                    EngineState::from_json(&doc, &format!("replicas[{r}].engine"))
+                        .with_context(|| {
+                            format!("decoding replica {} final state", self.workers[r].id)
+                        })?
+                }
+                other => bail!(
+                    "replica {} worker replied `{}` to finish",
+                    self.workers[r].id,
+                    other.name()
+                ),
+            };
+            replicas.push(ReplicaState {
+                id: r,
+                label: self.specs[r].label.clone(),
+                edge: self.specs[r].edge.name.to_string(),
+                load: self.specs[r].load.clone(),
+                migrations_in: self.migrations_in[r],
+                migrations_out: self.migrations_out[r],
+                engine,
+            });
+        }
+        for w in &mut self.workers {
+            let _ = w.child.wait();
+        }
+        let state = ClusterState {
+            round: self.round,
+            migrations: self.migrations,
+            assignment: self.assignment.clone(),
+            base_load: self.base_load.clone(),
+            replicas,
+        };
+        let mut cluster = cluster_from_snapshot(&self.cfg, &state);
+        cluster.add_serve_wall_ms(self.serve_wall_ms);
+        Ok(cluster)
+    }
+}
+
+impl Drop for ProcessCluster {
+    /// Never leave orphaned workers: on any exit path (including error
+    /// unwinds in the CLI) children are killed and reaped.  Workers that
+    /// already exited make both calls harmless no-ops.
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Child.
+// ---------------------------------------------------------------------------
+
+/// Entry point of the hidden `ans _replica-worker` subcommand: serve one
+/// replica's engine over the framed stdin/stdout protocol until the
+/// parent sends `finish` (or the pipe closes).  Any child-side failure
+/// is reported to the parent as an `Err` frame before exiting nonzero.
+pub fn run_replica_worker() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = BufWriter::new(stdout.lock());
+    match worker_loop(&mut input, &mut output) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = write_frame(&mut output, &Frame::Err(format!("{e:#}")));
+            Err(e)
+        }
+    }
+}
+
+fn worker_loop(input: &mut impl Read, output: &mut impl Write) -> Result<()> {
+    // Bootstrap: config → structure, engine state → overlay.
+    let frame = read_frame(input).context("reading bootstrap frame")?;
+    let Frame::Bootstrap(doc) = frame else {
+        bail!("expected bootstrap frame, got `{}`", frame.name());
+    };
+    let cfg = Config::from_json_value(field(&doc, "bootstrap", "config")?)
+        .context("decoding bootstrap config")?;
+    let replica = field_usize(&doc, "bootstrap", "replica")?;
+    let spec_v = field(&doc, "bootstrap", "spec")?;
+    let spec = ReplicaSpec::new(
+        field_str(spec_v, "bootstrap.spec", "label")?,
+        {
+            let name = field_str(spec_v, "bootstrap.spec", "edge")?;
+            crate::simulator::profile_by_name(name)
+                .with_context(|| format!("unknown edge profile `{name}` in bootstrap"))?
+        },
+        workload_from_json(field(spec_v, "bootstrap.spec", "load")?, "bootstrap.spec.load")?,
+    );
+    let engine_state =
+        EngineState::from_json(field(&doc, "bootstrap", "engine")?, "bootstrap.engine")?;
+    let shells = ShellFactory::new(&cfg);
+    let mut engine = Engine::new(engine_config_from(&cfg));
+    engine.set_trace_replica(replica);
+    let replica_shells: Vec<Session> =
+        engine_state.sessions.iter().map(|ss| shells.shell(ss.id, &spec)).collect();
+    engine.restore_state(&engine_state, replica_shells);
+    write_frame(output, &Frame::Ack)?;
+
+    let crash_after: Option<usize> =
+        std::env::var(CRASH_AFTER_ENV).ok().and_then(|v| v.parse().ok());
+    let mut stepped = 0usize;
+
+    loop {
+        match read_frame(input).context("reading command frame")? {
+            Frame::Step(n) => {
+                let n = n as usize;
+                engine.reserve(n);
+                for _ in 0..n {
+                    engine.step();
+                    stepped += 1;
+                    if crash_after.is_some_and(|limit| stepped >= limit) {
+                        // Die without replying: the parent must surface
+                        // this as a named replica failure, not a hang.
+                        std::process::exit(42);
+                    }
+                }
+                write_frame(output, &Frame::Ack)?;
+            }
+            Frame::Forecast(now_ms) => {
+                write_frame(output, &Frame::Wait(engine.forecast().wait_ms(now_ms)))?;
+            }
+            Frame::Detach(id) => {
+                let session = engine.remove_session(id);
+                write_frame(output, &Frame::Session(pack_session(&session).to_json()))?;
+            }
+            Frame::Attach(doc) => {
+                let from = field_usize(&doc, "attach", "from")?;
+                let to = field_usize(&doc, "attach", "to")?;
+                ensure!(to == replica, "attach routed to replica {to}, but this is {replica}");
+                let blob = MigrateBlob::from_json(field(&doc, "attach", "session")?, "attach.session")?;
+                let session = unpack_session(&shells, &spec, &blob)?;
+                let id = session.id;
+                engine.push_session(session);
+                engine.trace_migrate(id, from, to);
+                write_frame(output, &Frame::Ack)?;
+            }
+            Frame::Finish => {
+                write_frame(output, &Frame::State(engine.snapshot_state().to_json()))?;
+                return Ok(());
+            }
+            other => bail!("unexpected `{}` frame from parent", other.name()),
+        }
+    }
+}
+
+/// Pack a detached session for the wire.  `remove_session` released the
+/// policy's store slot back into its owned backing, so the cold pack
+/// reads the owned ridge state (`pack_cold(None)`) — the exact state an
+/// in-process migration hands across inside the live struct.
+fn pack_session(s: &Session) -> MigrateBlob {
+    let mut arena = Vec::new();
+    s.policy.pack_cold(None, &mut arena);
+    s.env.pack_cursor(&mut arena);
+    s.source.pack_cursor(&mut arena);
+    let mut records = Vec::new();
+    s.metrics.pack(&mut records);
+    MigrateBlob { id: s.id, active: s.active, arena, records }
+}
+
+/// Rebuild a migrated-in session at the destination: structure from the
+/// shell factory (bound to this replica's spec), state from the blob.
+fn unpack_session(shells: &ShellFactory, spec: &ReplicaSpec, blob: &MigrateBlob) -> Result<Session> {
+    // The factory shell is already attached to `spec`'s edge — the same
+    // rebind an in-process migration applies before push_session.
+    let mut s = shells.shell(blob.id, spec);
+    {
+        let mut r = Reader::new(&blob.arena);
+        s.policy.unpack_cold(None, &mut r);
+        s.env.unpack_cursor(&mut r);
+        s.source.unpack_cursor(&mut r);
+        ensure!(r.is_empty(), "migration arena not fully consumed (session {})", blob.id);
+    }
+    {
+        let mut r = Reader::new(&blob.records);
+        s.metrics = Metrics::unpack(&mut r);
+        ensure!(r.is_empty(), "migration records not fully consumed (session {})", blob.id);
+    }
+    s.active = blob.active;
+    Ok(s)
+}

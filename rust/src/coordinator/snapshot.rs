@@ -1,0 +1,550 @@
+//! Typed snapshot schema: the on-disk (and on-wire) form of a complete
+//! serving fleet (DESIGN.md §15).
+//!
+//! The schema is a small tower of plain structs mirroring the runtime
+//! tiers — [`SessionState`] → [`EngineState`] → [`ReplicaState`] →
+//! [`ClusterState`] → [`FleetSnapshot`] — each with a `to_json` /
+//! `from_json` pair built on the typed decode layer in [`crate::util::json`].
+//! Two representation rules make the round-trip *bit*-exact:
+//!
+//! * every f64 travels as its 16-hex-digit IEEE-754 bit pattern
+//!   ([`crate::util::json::f64_bits`]), so NaN sentinels, ±∞ deadlines
+//!   and −0.0 all survive;
+//! * the dense per-session state (policy cold arena + env/source
+//!   cursors, packed frame records, packed trace backlog, ingress and
+//!   scheduler legs) travels as hex-encoded byte strings of the same
+//!   little-endian arenas the hibernation subsystem uses (DESIGN.md
+//!   §14) — the snapshot *is* the hibernation format, lifted to disk.
+//!
+//! Decode failures name the exact field with a dotted path
+//! (```snapshot.cluster.replicas[2].engine.round`: expected integer``)
+//! and JSON syntax errors carry a byte offset, so a truncated or
+//! hand-mangled `--resume` file dies with a friendly CLI error, never a
+//! panic (exercised in `rust/tests/snapshot.rs`).
+//!
+//! The same [`EngineState`] value is the bootstrap/finish payload of the
+//! process-per-replica protocol ([`super::protocol`]): a child process
+//! is "resumed" from its replica's slice of the snapshot, which is what
+//! makes distributed runs bit-identical to in-process runs.
+
+use crate::config::Config;
+use crate::simulator::{compute, Workload};
+use crate::util::json::{
+    self, bytes_hex, f64_bits, f64s_bits, field, field_arr, field_bool, field_bytes_hex,
+    field_f64s_bits, field_str, field_u64, field_usize, field_usizes, obj, Json, JsonError,
+};
+use anyhow::Context;
+
+/// Schema version stamped into every snapshot; bump on any wire change.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// The `kind` tag distinguishing fleet snapshots from the repo's other
+/// JSON artifacts.
+pub const SNAPSHOT_KIND: &str = "ans-fleet-snapshot";
+
+type Result<T> = std::result::Result<T, JsonError>;
+
+// ---------------------------------------------------------------------------
+// Session tier.
+// ---------------------------------------------------------------------------
+
+/// One session's complete mutable state: identity, residency, and the
+/// packed arenas.  `arena` is the hibernation cold image (policy state
+/// via `Policy::pack_cold`, then env cursor, then source cursor — the
+/// exact `Engine::hibernate_session` order); `records` is the packed
+/// per-frame metrics history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    pub id: usize,
+    pub active: bool,
+    /// Ridge-store slot index the session's policy occupied.
+    pub slot: usize,
+    pub arena: Vec<u8>,
+    pub records: Vec<u8>,
+}
+
+impl SessionState {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::from(self.id)),
+            ("active", Json::from(self.active)),
+            ("slot", Json::from(self.slot)),
+            ("arena", bytes_hex(&self.arena)),
+            ("records", bytes_hex(&self.records)),
+        ])
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<SessionState> {
+        Ok(SessionState {
+            id: field_usize(v, path, "id")?,
+            active: field_bool(v, path, "active")?,
+            slot: field_usize(v, path, "slot")?,
+            arena: field_bytes_hex(v, path, "arena")?,
+            records: field_bytes_hex(v, path, "records")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine tier.
+// ---------------------------------------------------------------------------
+
+/// One engine core's complete mutable state, captured at a round
+/// boundary by [`super::engine::Engine::snapshot_state`] and replayed by
+/// [`super::engine::Engine::restore_state`].  Structure (worker pool,
+/// contention model, scheduler configuration) is *not* here — it is
+/// rebuilt from the embedded [`Config`]; this is only what a run
+/// mutates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineState {
+    pub round: usize,
+    pub next_id: usize,
+    /// Concurrent offloaders of the previous round (the contention
+    /// coupling input of the next one).
+    pub offloaders_last: usize,
+    pub offload_counts: Vec<usize>,
+    /// Ridge-store slot-window size; sessions reference slots below it.
+    pub store_slots: usize,
+    /// Free slots, sorted descending (the allocator's own order).
+    pub free_slots: Vec<usize>,
+    /// Packed shared-ingress queue state (empty when ingress is off).
+    pub ingress: Vec<u8>,
+    /// Packed edge-scheduler state: waiting room, virtual clocks, event
+    /// queue (empty in lockstep mode).
+    pub scheduler: Vec<u8>,
+    pub sessions: Vec<SessionState>,
+    /// Packed trace backlog (count-prefixed `TraceEvent`s): the full
+    /// event history up to the snapshot, so a resumed run drains the
+    /// same trace an unbroken run would.
+    pub trace: Vec<u8>,
+    pub trace_dropped: u64,
+}
+
+impl EngineState {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("round", Json::from(self.round)),
+            ("next_id", Json::from(self.next_id)),
+            ("offloaders_last", Json::from(self.offloaders_last)),
+            ("offload_counts", Json::from(self.offload_counts.clone())),
+            ("store_slots", Json::from(self.store_slots)),
+            ("free_slots", Json::from(self.free_slots.clone())),
+            ("ingress", bytes_hex(&self.ingress)),
+            ("scheduler", bytes_hex(&self.scheduler)),
+            (
+                "sessions",
+                Json::Arr(self.sessions.iter().map(SessionState::to_json).collect()),
+            ),
+            ("trace", bytes_hex(&self.trace)),
+            ("trace_dropped", Json::from(self.trace_dropped as usize)),
+        ])
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<EngineState> {
+        let sessions = field_arr(v, path, "sessions")?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SessionState::from_json(s, &format!("{path}.sessions[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let state = EngineState {
+            round: field_usize(v, path, "round")?,
+            next_id: field_usize(v, path, "next_id")?,
+            offloaders_last: field_usize(v, path, "offloaders_last")?,
+            offload_counts: field_usizes(v, path, "offload_counts")?,
+            store_slots: field_usize(v, path, "store_slots")?,
+            free_slots: field_usizes(v, path, "free_slots")?,
+            ingress: field_bytes_hex(v, path, "ingress")?,
+            scheduler: field_bytes_hex(v, path, "scheduler")?,
+            sessions,
+            trace: field_bytes_hex(v, path, "trace")?,
+            trace_dropped: field_u64(v, path, "trace_dropped")?,
+        };
+        for (i, s) in state.sessions.iter().enumerate() {
+            if s.slot >= state.store_slots {
+                return Err(JsonError(format!(
+                    "`{path}.sessions[{i}].slot`: slot {} outside the {}-slot store window",
+                    s.slot, state.store_slots
+                )));
+            }
+        }
+        Ok(state)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster tier.
+// ---------------------------------------------------------------------------
+
+/// One replica: its spec (edge profile by zoo name + exogenous workload
+/// schedule), migration counters, and its engine core's state.
+#[derive(Debug, Clone)]
+pub struct ReplicaState {
+    pub id: usize,
+    pub label: String,
+    /// Edge compute profile, by `compute::profile_by_name` name.
+    pub edge: String,
+    pub load: Workload,
+    pub migrations_in: usize,
+    pub migrations_out: usize,
+    pub engine: EngineState,
+}
+
+impl ReplicaState {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::from(self.id)),
+            ("label", Json::from(self.label.clone())),
+            ("edge", Json::from(self.edge.clone())),
+            ("load", workload_to_json(&self.load)),
+            ("migrations_in", Json::from(self.migrations_in)),
+            ("migrations_out", Json::from(self.migrations_out)),
+            ("engine", self.engine.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<ReplicaState> {
+        let edge = field_str(v, path, "edge")?.to_string();
+        if compute::profile_by_name(&edge).is_none() {
+            return Err(JsonError(format!(
+                "`{path}.edge`: unknown compute profile `{edge}`"
+            )));
+        }
+        Ok(ReplicaState {
+            id: field_usize(v, path, "id")?,
+            label: field_str(v, path, "label")?.to_string(),
+            edge,
+            load: workload_from_json(field(v, path, "load")?, &format!("{path}.load"))?,
+            migrations_in: field_usize(v, path, "migrations_in")?,
+            migrations_out: field_usize(v, path, "migrations_out")?,
+            engine: EngineState::from_json(field(v, path, "engine")?, &format!("{path}.engine"))?,
+        })
+    }
+}
+
+/// The routed replica tier's state: router bookkeeping plus one
+/// [`ReplicaState`] per replica.  A single-engine fleet is the 1-replica
+/// special case — there is one snapshot schema, not two.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    pub round: usize,
+    pub migrations: usize,
+    /// Session id → owning replica index.
+    pub assignment: Vec<usize>,
+    /// The placement router's per-replica committed-load estimates.
+    pub base_load: Vec<f64>,
+    pub replicas: Vec<ReplicaState>,
+}
+
+impl ClusterState {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("round", Json::from(self.round)),
+            ("migrations", Json::from(self.migrations)),
+            ("assignment", Json::from(self.assignment.clone())),
+            ("base_load", f64s_bits(&self.base_load)),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(ReplicaState::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<ClusterState> {
+        let replicas = field_arr(v, path, "replicas")?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaState::from_json(r, &format!("{path}.replicas[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let state = ClusterState {
+            round: field_usize(v, path, "round")?,
+            migrations: field_usize(v, path, "migrations")?,
+            assignment: field_usizes(v, path, "assignment")?,
+            base_load: field_f64s_bits(v, path, "base_load")?,
+            replicas,
+        };
+        if state.replicas.is_empty() {
+            return Err(JsonError(format!("`{path}.replicas`: snapshot has no replicas")));
+        }
+        if state.base_load.len() != state.replicas.len() {
+            return Err(JsonError(format!(
+                "`{path}.base_load`: {} entries for {} replicas",
+                state.base_load.len(),
+                state.replicas.len()
+            )));
+        }
+        for (i, &r) in state.assignment.iter().enumerate() {
+            if r >= state.replicas.len() {
+                return Err(JsonError(format!(
+                    "`{path}.assignment[{i}]`: replica {r} out of range (cluster has {})",
+                    state.replicas.len()
+                )));
+            }
+        }
+        for (i, r) in state.replicas.iter().enumerate() {
+            if r.id != i {
+                return Err(JsonError(format!(
+                    "`{path}.replicas[{i}].id`: expected {i}, got {} (replicas must be in \
+                     canonical order)",
+                    r.id
+                )));
+            }
+        }
+        Ok(state)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet tier: the on-disk document.
+// ---------------------------------------------------------------------------
+
+/// The complete on-disk snapshot: the run's [`Config`] (so `--resume`
+/// rebuilds identical structure — policies, schedulers, worker pools,
+/// and crucially the original `frames` horizon the learners' forced
+/// schedules were sized against) plus the [`ClusterState`].
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub config: Config,
+    pub cluster: ClusterState,
+}
+
+impl FleetSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::from(SNAPSHOT_KIND)),
+            ("version", Json::from(SNAPSHOT_VERSION)),
+            ("config", self.config.to_json()),
+            ("cluster", self.cluster.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<FleetSnapshot> {
+        let kind = field_str(v, "snapshot", "kind")?;
+        anyhow::ensure!(
+            kind == SNAPSHOT_KIND,
+            "not a fleet snapshot: kind is `{kind}`, expected `{SNAPSHOT_KIND}`"
+        );
+        let version = field_usize(v, "snapshot", "version")?;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot schema version {version} is not supported (this build reads \
+             version {SNAPSHOT_VERSION})"
+        );
+        let config = Config::from_json_value(field(v, "snapshot", "config")?)
+            .context("decoding `snapshot.config`")?;
+        let cluster = ClusterState::from_json(field(v, "snapshot", "cluster")?, "snapshot.cluster")?;
+        anyhow::ensure!(
+            cluster.replicas.len() == config.replicas,
+            "snapshot has {} replicas but its embedded config says {}",
+            cluster.replicas.len(),
+            config.replicas
+        );
+        Ok(FleetSnapshot { config, cluster })
+    }
+
+    /// Serialize and write to `path` (parent directories created).
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating snapshot directory for {path}"))?;
+            }
+        }
+        let mut out = self.to_json().to_string();
+        out.push('\n');
+        std::fs::write(path, out).with_context(|| format!("writing snapshot {path}"))?;
+        Ok(())
+    }
+
+    /// Read and decode `path`.  Every failure mode is a named error: a
+    /// missing file says so, truncated/invalid JSON names the byte
+    /// offset, and a schema mismatch names the exact dotted field.
+    pub fn load(path: &str) -> anyhow::Result<FleetSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading snapshot {path}"))?;
+        let v = Json::parse(&text)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("snapshot {path} is not valid JSON"))?;
+        FleetSnapshot::from_json(&v).with_context(|| format!("decoding snapshot {path}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload wire form.
+// ---------------------------------------------------------------------------
+
+/// Encode a [`Workload`] schedule: `{"constant": bits}` or
+/// `{"steps": [[frame, bits], ...]}` (loads as f64 bit patterns).
+pub fn workload_to_json(w: &Workload) -> Json {
+    match w {
+        Workload::Constant(l) => obj(vec![("constant", f64_bits(*l))]),
+        Workload::Steps(steps) => obj(vec![(
+            "steps",
+            Json::Arr(
+                steps
+                    .iter()
+                    .map(|&(t, l)| Json::Arr(vec![Json::from(t), f64_bits(l)]))
+                    .collect(),
+            ),
+        )]),
+    }
+}
+
+/// Decode a value written by [`workload_to_json`].
+pub fn workload_from_json(v: &Json, path: &str) -> Result<Workload> {
+    if let Some(l) = v.opt("constant") {
+        return Ok(Workload::Constant(json::parse_f64_bits(
+            l,
+            &format!("{path}.constant"),
+        )?));
+    }
+    if let Some(arr) = v.opt("steps") {
+        let arr = arr
+            .as_arr()
+            .map_err(|e| JsonError(format!("`{path}.steps`: {}", e.0)))?;
+        let mut steps = Vec::with_capacity(arr.len());
+        for (i, entry) in arr.iter().enumerate() {
+            let p = format!("{path}.steps[{i}]");
+            let pair = entry.as_arr().map_err(|e| JsonError(format!("`{p}`: {}", e.0)))?;
+            if pair.len() != 2 {
+                return Err(JsonError(format!(
+                    "`{p}`: expected [frame, load] pair, got {} elements",
+                    pair.len()
+                )));
+            }
+            let t = pair[0]
+                .as_usize()
+                .map_err(|e| JsonError(format!("`{p}[0]`: {}", e.0)))?;
+            let l = json::parse_f64_bits(&pair[1], &format!("{p}[1]"))?;
+            steps.push((t, l));
+        }
+        if steps.is_empty() || steps[0].0 != 0 {
+            return Err(JsonError(format!(
+                "`{path}.steps`: schedule must start at frame 0"
+            )));
+        }
+        if !steps.windows(2).all(|w| w[0].0 < w[1].0) {
+            return Err(JsonError(format!(
+                "`{path}.steps`: frames must be strictly increasing"
+            )));
+        }
+        return Ok(Workload::Steps(steps));
+    }
+    Err(JsonError(format!(
+        "`{path}`: workload needs a `constant` or `steps` field"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_engine() -> EngineState {
+        EngineState {
+            round: 57,
+            next_id: 3,
+            offloaders_last: 2,
+            offload_counts: vec![1, 0, 4],
+            store_slots: 4,
+            free_slots: vec![3],
+            ingress: vec![1, 2, 3, 0xff],
+            scheduler: vec![],
+            sessions: vec![
+                SessionState {
+                    id: 0,
+                    active: true,
+                    slot: 0,
+                    arena: (0..=255).collect(),
+                    records: vec![9, 8, 7],
+                },
+                SessionState { id: 2, active: false, slot: 2, arena: vec![], records: vec![] },
+            ],
+            trace: vec![0; 9],
+            trace_dropped: 12,
+        }
+    }
+
+    #[test]
+    fn engine_state_round_trips_through_text() {
+        let state = sample_engine();
+        let text = state.to_json().to_string();
+        let back = EngineState::from_json(&Json::parse(&text).unwrap(), "e").unwrap();
+        assert_eq!(back, state);
+    }
+
+    #[test]
+    fn cluster_state_round_trips_with_odd_floats() {
+        let state = ClusterState {
+            round: 100,
+            migrations: 7,
+            assignment: vec![0, 1, 0],
+            base_load: vec![0.0, f64::NAN],
+            replicas: vec![
+                ReplicaState {
+                    id: 0,
+                    label: "r0".into(),
+                    edge: "edge_gpu_1080ti".into(),
+                    load: Workload::Constant(1.0),
+                    migrations_in: 1,
+                    migrations_out: 0,
+                    engine: sample_engine(),
+                },
+                ReplicaState {
+                    id: 1,
+                    label: "r1".into(),
+                    edge: "gpu".into(),
+                    load: Workload::Steps(vec![(0, 6.0), (50, 1.0)]),
+                    migrations_in: 0,
+                    migrations_out: 1,
+                    engine: sample_engine(),
+                },
+            ],
+        };
+        let text = state.to_json().to_string();
+        let back = ClusterState::from_json(&Json::parse(&text).unwrap(), "c").unwrap();
+        assert_eq!(back.round, state.round);
+        assert_eq!(back.assignment, state.assignment);
+        assert_eq!(back.base_load[0].to_bits(), state.base_load[0].to_bits());
+        assert!(back.base_load[1].is_nan());
+        assert_eq!(back.replicas.len(), 2);
+        assert_eq!(back.replicas[1].engine, state.replicas[1].engine);
+        match &back.replicas[1].load {
+            Workload::Steps(s) => assert_eq!(s, &vec![(0, 6.0), (50, 1.0)]),
+            other => panic!("expected steps workload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_errors_name_the_field() {
+        let mut state = sample_engine();
+        state.sessions[1].slot = 9; // outside the 4-slot window
+        let err =
+            EngineState::from_json(&Json::parse(&state.to_json().to_string()).unwrap(), "e")
+                .unwrap_err();
+        assert!(err.0.contains("e.sessions[1].slot"), "{err}");
+
+        let v = Json::parse(r#"{"round": 1}"#).unwrap();
+        let err = EngineState::from_json(&v, "snapshot.engine").unwrap_err();
+        assert!(err.0.contains("snapshot.engine"), "{err}");
+
+        let bad_edge = Json::parse(
+            r#"{"id":0,"label":"r0","edge":"tpu","load":{"constant":"3ff0000000000000"},
+                "migrations_in":0,"migrations_out":0,"engine":{}}"#,
+        )
+        .unwrap();
+        let err = ReplicaState::from_json(&bad_edge, "r").unwrap_err();
+        assert!(err.0.contains("r.edge") && err.0.contains("tpu"), "{err}");
+    }
+
+    #[test]
+    fn workload_wire_rejects_malformed_schedules() {
+        let ok = workload_to_json(&Workload::Steps(vec![(0, 1.0), (10, 2.0)]));
+        match workload_from_json(&ok, "w").unwrap() {
+            Workload::Steps(s) => assert_eq!(s.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        let bad = Json::parse(r#"{"steps": [[5, "3ff0000000000000"]]}"#).unwrap();
+        assert!(workload_from_json(&bad, "w").unwrap_err().0.contains("frame 0"));
+        let empty = Json::parse(r#"{}"#).unwrap();
+        assert!(workload_from_json(&empty, "w").unwrap_err().0.contains("`w`"));
+    }
+}

@@ -145,6 +145,35 @@ impl<T> EventQueue<T> {
         self.heap.pop().map(|e| (e.time_ms, e.payload))
     }
 
+    /// The internal submission-sequence counter (snapshot leg: future
+    /// [`EventQueue::push`]es must keep numbering where the saved queue
+    /// left off, or tie-break keys diverge after a restore).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Restore the submission-sequence counter saved by [`EventQueue::seq`].
+    pub fn set_seq(&mut self, seq: u64) {
+        self.seq = seq;
+    }
+
+    /// Every pending entry as `(time_ms, key, payload)` in canonical pop
+    /// order — the snapshot encoding.  Re-inserting the entries in this
+    /// order via [`EventQueue::push_keyed`] (then restoring the counter
+    /// with [`EventQueue::set_seq`]) reproduces the pop sequence exactly:
+    /// `(time, key)` pairs are unique per queue, so pop order — the only
+    /// thing any consumer observes besides the order-insensitive
+    /// [`EventQueue::payloads`] aggregation — is fully determined.
+    pub fn entries_sorted(&self) -> Vec<(f64, u64, T)>
+    where
+        T: Clone,
+    {
+        let mut out: Vec<(f64, u64, T)> =
+            self.heap.iter().map(|e| (e.time_ms, e.key, e.payload.clone())).collect();
+        out.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        out
+    }
+
     /// Drop every pending event while keeping the allocated capacity.
     /// (The engine's per-round merges drain via `pop` until empty and
     /// never need this; it exists for callers that must abandon a
@@ -216,6 +245,33 @@ mod tests {
         q.push_keyed(1.0, 900, 900);
         assert_eq!(q.pop(), Some((1.0, 900)));
         assert_eq!(q.pop(), Some((5.0, 100)));
+    }
+
+    #[test]
+    fn entries_sorted_snapshot_reproduces_pop_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(1.0, "a2");
+        q.push(2.0, "b");
+        let entries = q.entries_sorted();
+        let seq = q.seq();
+        // Rebuild a twin from the snapshot legs.
+        let mut twin = EventQueue::new();
+        for (t, k, p) in entries {
+            twin.push_keyed(t, k, p);
+        }
+        twin.set_seq(seq);
+        // Identical pops, and identical tie-breaks on post-restore pushes.
+        q.push(1.0, "late");
+        twin.push(1.0, "late");
+        loop {
+            let (a, b) = (q.pop(), twin.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

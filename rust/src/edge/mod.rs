@@ -190,6 +190,19 @@ impl EdgeScheduler {
     pub fn free_at_ms(&self) -> f64 {
         self.queue.free_at_ms()
     }
+
+    /// Append the scheduler's mutable state to a snapshot arena (see
+    /// [`EdgeQueue::pack_state`]; the config half is rebuilt from
+    /// [`crate::config::Config`] on restore).
+    pub fn pack_state(&self, out: &mut Vec<u8>) {
+        self.queue.pack_state(out);
+    }
+
+    /// Restore state packed by [`EdgeScheduler::pack_state`] into a
+    /// config-identical freshly-built scheduler.
+    pub fn unpack_state(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        self.queue.unpack_state(r);
+    }
 }
 
 #[cfg(test)]

@@ -48,6 +48,37 @@ pub struct EdgeJob {
     pub seq: u64,
 }
 
+impl EdgeJob {
+    /// Append every field to a snapshot arena (fixed-width, bit-exact).
+    pub fn pack(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_f64, put_u64, put_usize};
+        put_usize(out, self.session);
+        put_usize(out, self.p);
+        put_usize(out, self.bytes);
+        put_f64(out, self.capture_ms);
+        put_f64(out, self.arrival_ms);
+        put_f64(out, self.deadline_ms);
+        put_f64(out, self.weight);
+        put_f64(out, self.solo_ms);
+        put_u64(out, self.seq);
+    }
+
+    /// Read a job packed by [`EdgeJob::pack`].
+    pub fn unpack(r: &mut crate::util::bytes::Reader<'_>) -> EdgeJob {
+        EdgeJob {
+            session: r.take_usize(),
+            p: r.take_usize(),
+            bytes: r.take_usize(),
+            capture_ms: r.take_f64(),
+            arrival_ms: r.take_f64(),
+            deadline_ms: r.take_f64(),
+            weight: r.take_f64(),
+            solo_ms: r.take_f64(),
+            seq: r.take_u64(),
+        }
+    }
+}
+
 /// One job's resolved schedule.
 #[derive(Debug, Clone)]
 pub struct Scheduled {
@@ -205,6 +236,64 @@ impl EdgeQueue {
             self.cfg.max_batch,
             &self.cfg.contention,
         )
+    }
+
+    /// Append every mutable cursor of the queue to a snapshot arena:
+    /// virtual clock, submission counters, per-session WeightedFair
+    /// credits, executor stats, and both job buffers (the event heap in
+    /// canonical sorted order — see [`EventQueue::entries_sorted`]).
+    /// Between engine rounds both buffers are empty (every drain runs to
+    /// exhaustion), but the encoding is total so property tests can
+    /// round-trip mid-flight states too.
+    pub fn pack_state(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::{put_f64, put_f64s, put_u64, put_usize};
+        put_f64(out, self.clock.now_ms());
+        put_u64(out, self.next_seq);
+        put_u64(out, self.arrivals.seq());
+        put_f64s(out, &self.attained_wait_ms);
+        put_usize(out, self.stats.dispatched);
+        put_usize(out, self.stats.rejected);
+        put_usize(out, self.stats.batches);
+        put_usize(out, self.stats.batched_jobs);
+        put_f64(out, self.stats.total_queue_wait_ms);
+        put_f64(out, self.stats.busy_ms);
+        let entries = self.arrivals.entries_sorted();
+        put_usize(out, entries.len());
+        for (time_ms, key, job) in &entries {
+            put_f64(out, *time_ms);
+            put_u64(out, *key);
+            job.pack(out);
+        }
+        put_usize(out, self.waiting.len());
+        for job in &self.waiting {
+            job.pack(out);
+        }
+    }
+
+    /// Restore state packed by [`EdgeQueue::pack_state`] into a
+    /// config-identical freshly-built queue.
+    pub fn unpack_state(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        self.clock.advance_to(r.take_f64());
+        self.next_seq = r.take_u64();
+        let arrivals_seq = r.take_u64();
+        r.take_f64s_into(&mut self.attained_wait_ms);
+        self.stats.dispatched = r.take_usize();
+        self.stats.rejected = r.take_usize();
+        self.stats.batches = r.take_usize();
+        self.stats.batched_jobs = r.take_usize();
+        self.stats.total_queue_wait_ms = r.take_f64();
+        self.stats.busy_ms = r.take_f64();
+        let n_arrivals = r.take_usize();
+        for _ in 0..n_arrivals {
+            let time_ms = r.take_f64();
+            let key = r.take_u64();
+            self.arrivals.push_keyed(time_ms, key, EdgeJob::unpack(r));
+        }
+        self.arrivals.set_seq(arrivals_seq);
+        let n_waiting = r.take_usize();
+        for _ in 0..n_waiting {
+            self.waiting.push(EdgeJob::unpack(r));
+        }
     }
 
     /// Submit a job; returns `false` (and counts a rejection) when the
@@ -459,6 +548,46 @@ mod tests {
             (wf[0] - wf[1]).abs() <= 5.0 + 1e-9,
             "wfair waits stay within one service of each other: {wf:?}"
         );
+    }
+
+    #[test]
+    fn pack_state_round_trips_a_mid_flight_queue_bit_exactly() {
+        let mut c = cfg(AdmissionPolicy::WeightedFair);
+        c.max_batch = 4;
+        c.batch_window_ms = 6.0;
+        let mut q = EdgeQueue::new(c.clone());
+        // Build up history: dispatched work, credits, and a live backlog.
+        for s in 0..4 {
+            q.submit(job(s, 1, s as f64, 7.0));
+        }
+        let _ = q.drain();
+        for s in 0..3 {
+            q.submit(job(s, 2, 100.0 + s as f64, 5.0));
+        }
+        let mut blob = Vec::new();
+        q.pack_state(&mut blob);
+        let mut twin = EdgeQueue::new(c);
+        twin.unpack_state(&mut crate::util::bytes::Reader::new(&blob));
+        // Double-encode is byte-stable (canonical heap encoding).
+        let mut blob2 = Vec::new();
+        twin.pack_state(&mut blob2);
+        assert_eq!(blob, blob2, "snapshot encoding must be canonical");
+        // Both queues serve the backlog and later submissions identically.
+        q.submit(job(9, 2, 104.0, 5.0));
+        twin.submit(job(9, 2, 104.0, 5.0));
+        let a = q.drain();
+        let b = twin.drain();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.session, y.session);
+            assert_eq!(x.seq, y.seq);
+            assert_eq!(x.start_ms.to_bits(), y.start_ms.to_bits());
+            assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits());
+            assert_eq!(x.queue_wait_ms.to_bits(), y.queue_wait_ms.to_bits());
+            assert_eq!(x.batch_size, y.batch_size);
+        }
+        assert_eq!(q.stats.dispatched, twin.stats.dispatched);
+        assert_eq!(q.stats.busy_ms.to_bits(), twin.stats.busy_ms.to_bits());
     }
 
     #[test]

@@ -11,7 +11,10 @@
 use ans::bandit::PolicySnapshot;
 use ans::config::Config;
 use ans::coordinator::metrics::{summary_json, Summary};
-use ans::coordinator::{cluster, engine, exhibits, experiment, pipeline, FleetSummary};
+use ans::coordinator::{
+    cluster, engine, exhibits, experiment, pipeline, ClusterState, FleetSnapshot, FleetSummary,
+    ProcessCluster,
+};
 use ans::telemetry::TraceEvent;
 use ans::util::cli::Args;
 use ans::util::json::{obj, Json};
@@ -84,6 +87,18 @@ SUBCOMMANDS:
              fraction of each activity cycle.  Off-duty sessions
              hibernate into a byte arena (policy permitting) and wake
              bit-identical; rounds cost O(active), not O(ever-admitted).
+             Snapshot/resume: --snapshot FILE writes the typed fleet
+             snapshot (sessions, learners, queues, clocks, cursors —
+             bit-exact) at the end of the run, or mid-run at round R
+             with --snapshot-at R while the run continues to --frames;
+             --resume FILE completes a snapshotted run bit-identically
+             to the unbroken one (the snapshot's embedded config
+             supplies every structural knob; CLI output knobs still
+             apply).  --distribute process runs each replica in its own
+             child process over a framed pipe protocol — outputs are
+             bit-identical to in-process at every replica/worker count,
+             so multi-core speedups are honest; --worker-exe PATH
+             overrides the worker binary (tests and benches).
   serve      Real serving: PartNet artifacts over PJRT, SSIM key frames,
              dynamic batching, simulated shaped uplink.
              --frames N --rate MBPS --fps F --max-batch 1|4 --policy P
@@ -115,6 +130,10 @@ fn main() {
             println!("{HELP}");
             Ok(())
         }
+        // Hidden: the process-cluster child driver.  `--distribute
+        // process` spawns one per replica; it speaks the framed protocol
+        // on stdin/stdout and is not part of the public CLI surface.
+        "_replica-worker" => ans::coordinator::run_replica_worker(),
         other => {
             eprintln!(
                 "unknown subcommand `{other}` — valid subcommands: {}\n\n{HELP}",
@@ -168,7 +187,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    let cfg = Config::from_args(args)?;
+    let mut cfg = Config::from_args(args)?;
+    // --resume: the snapshot's embedded config supplies every structural
+    // knob (model, policy horizon, scheduler, cluster shape), so the
+    // completed run is bit-identical to the unbroken one.  Only
+    // invocation-local knobs — output paths, execution mode — ride the
+    // resuming command line.
+    let resumed: Option<ClusterState> = if cfg.resume.is_empty() {
+        None
+    } else {
+        let snap = FleetSnapshot::load(&cfg.resume)?;
+        let mut rc = snap.config;
+        rc.resume = cfg.resume.clone();
+        rc.snapshot = cfg.snapshot.clone();
+        rc.distribute = cfg.distribute.clone();
+        rc.worker_exe = cfg.worker_exe.clone();
+        if args.get("trace").is_some() {
+            rc.trace = cfg.trace.clone();
+        }
+        anyhow::ensure!(
+            snap.cluster.round < rc.frames,
+            "snapshot {} already covers the whole run ({} of {} rounds served) — \
+             nothing left to resume",
+            cfg.resume,
+            snap.cluster.round,
+            rc.frames
+        );
+        println!(
+            "resuming {} at round {} of {}",
+            cfg.resume, snap.cluster.round, rc.frames
+        );
+        cfg = rc;
+        Some(snap.cluster)
+    };
     println!(
         "fleet: {} sessions × {} frames of {} ({}) over a shared {} edge ({} worker{})",
         cfg.sessions,
@@ -215,45 +266,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
 
-    if cfg.replicas > 1 {
-        println!(
-            "  cluster: {} replicas, placement {}{}",
-            cfg.replicas,
-            cfg.placement,
-            if cfg.placement == "migrate" {
-                format!(" (rebalance every {} rounds)", cfg.migrate_every)
-            } else {
-                String::new()
-            },
-        );
-        let mut cl = cluster::cluster_from_config(&cfg);
-        let mut snapshots: Vec<String> = Vec::new();
-        if cfg.metrics_every > 0 {
-            let mut done = 0;
-            while done < cfg.frames {
-                let chunk = cfg.metrics_every.min(cfg.frames - done);
-                cl.run(chunk);
-                if let Some(sum) = cl.window_summary(done, done + chunk) {
-                    snapshots.push(window_json(done, done + chunk, &sum));
-                }
-                done += chunk;
-            }
-        } else {
-            cl.run(cfg.frames);
-        }
-        let trace = if cfg.trace.is_empty() {
-            None
-        } else {
-            Some((cl.drain_trace(), cl.trace_dropped()))
-        };
-        let fs = cl.fleet_summary();
-        let sessions = cl.sessions();
-        print_session_table(&sessions, &cl.policy_snapshots(), &fs);
-        print_replica_table(&fs, cl.migrations());
-        print_fleet_footer(&fs, &cfg, sched.deadline_ms);
-        write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
-        write_telemetry_artifacts(&cfg, trace, &snapshots)?;
-        return Ok(());
+    // Any snapshot/resume/distribute knob routes through the cluster
+    // path even at --replicas 1: a 1-replica cluster serves the fleet
+    // bit-identically to the single engine, and the snapshot schema is
+    // one shape for every fleet.
+    if cfg.replicas > 1
+        || resumed.is_some()
+        || !cfg.snapshot.is_empty()
+        || cfg.distribute == "process"
+    {
+        return run_fleet_cluster(args, &cfg, resumed, sched.deadline_ms);
     }
 
     if cfg.arrivals > 0.0 {
@@ -296,6 +318,162 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     write_fleet_artifacts(args, &cfg, &fs, &sessions)?;
     write_telemetry_artifacts(&cfg, trace, &snapshots)?;
+    Ok(())
+}
+
+/// The cluster fleet path: `--replicas > 1`, any snapshot/resume knob,
+/// or `--distribute process`.  In-process and process-per-replica
+/// execution share this reporting tail — process mode reassembles an
+/// ordinary [`cluster::Cluster`] from the children's final typed states,
+/// so summaries, traces, artifacts and end-of-run snapshots are one code
+/// path (and bit-identical across modes, pinned in tests/distributed.rs).
+fn run_fleet_cluster(
+    args: &Args,
+    cfg: &Config,
+    initial: Option<ClusterState>,
+    deadline_ms: f64,
+) -> Result<()> {
+    if cfg.replicas > 1 {
+        println!(
+            "  cluster: {} replicas, placement {}{}",
+            cfg.replicas,
+            cfg.placement,
+            if cfg.placement == "migrate" {
+                format!(" (rebalance every {} rounds)", cfg.migrate_every)
+            } else {
+                String::new()
+            },
+        );
+    }
+    let start_round = initial.as_ref().map_or(0, |s| s.round);
+    let mut windows: Vec<String> = Vec::new();
+    let mut cl = if cfg.distribute == "process" {
+        println!(
+            "  distribute: process ({} replica worker{} over the framed protocol)",
+            cfg.replicas,
+            if cfg.replicas == 1 { "" } else { "s" },
+        );
+        let state = match initial {
+            Some(state) => state,
+            None => {
+                let mut fresh = cluster::cluster_from_config(cfg);
+                ensure_snapshottable(&fresh, cfg)?;
+                fresh.snapshot_state()
+            }
+        };
+        let mut pc = ProcessCluster::launch(cfg, &state)?;
+        pc.run(cfg.frames - start_round)?;
+        pc.finish()?
+    } else {
+        let mut cl = match &initial {
+            None => cluster::cluster_from_config(cfg),
+            Some(state) => restore_cluster(cfg, state)?,
+        };
+        if !cfg.snapshot.is_empty() {
+            ensure_snapshottable(&cl, cfg)?;
+        }
+        // One loop for all in-process boundaries: --metrics-every
+        // windows (aligned to absolute round multiples) and the mid-run
+        // --snapshot-at point.  `Cluster::run` chunking is pinned
+        // bit-identical, so neither boundary perturbs the served run.
+        let mut done = start_round;
+        let mut win_start = start_round;
+        while done < cfg.frames {
+            let mut next = cfg.frames;
+            if cfg.metrics_every > 0 {
+                next = next.min((done / cfg.metrics_every + 1) * cfg.metrics_every);
+            }
+            if cfg.snapshot_at > done {
+                next = next.min(cfg.snapshot_at);
+            }
+            cl.run(next - done);
+            done = next;
+            if done == cfg.snapshot_at && !cfg.snapshot.is_empty() && done < cfg.frames {
+                save_fleet_snapshot(cfg, &mut cl)?;
+            }
+            if cfg.metrics_every > 0 && (done % cfg.metrics_every == 0 || done == cfg.frames) {
+                if let Some(sum) = cl.window_summary(win_start, done) {
+                    windows.push(window_json(win_start, done, &sum));
+                }
+                win_start = done;
+            }
+        }
+        cl
+    };
+    // Process mode computes the --metrics-every windows post hoc: the
+    // reassembled records carry their rounds, so every window summary is
+    // reproducible after the fact (same bounds as the in-process loop).
+    if cfg.distribute == "process" && cfg.metrics_every > 0 {
+        let mut from = start_round;
+        while from < cfg.frames {
+            let to = ((from / cfg.metrics_every + 1) * cfg.metrics_every).min(cfg.frames);
+            if let Some(sum) = cl.window_summary(from, to) {
+                windows.push(window_json(from, to, &sum));
+            }
+            from = to;
+        }
+    }
+    // End-of-run snapshot, taken *before* the trace drain (the snapshot
+    // folds the trace rings non-destructively, so a snapshotted run
+    // still emits its full --trace file).
+    if !cfg.snapshot.is_empty() && cfg.snapshot_at == 0 {
+        save_fleet_snapshot(cfg, &mut cl)?;
+    }
+    let trace = if cfg.trace.is_empty() {
+        None
+    } else {
+        Some((cl.drain_trace(), cl.trace_dropped()))
+    };
+    let fs = cl.fleet_summary();
+    let sessions = cl.sessions();
+    print_session_table(&sessions, &cl.policy_snapshots(), &fs);
+    print_replica_table(&fs, cl.migrations());
+    print_fleet_footer(&fs, cfg, deadline_ms);
+    write_fleet_artifacts(args, cfg, &fs, &sessions)?;
+    write_telemetry_artifacts(cfg, trace, &windows)?;
+    Ok(())
+}
+
+/// `--snapshot`/`--distribute process` need every session's policy to
+/// have a typed cold representation; fail before serving, not mid-run.
+fn ensure_snapshottable(cl: &cluster::Cluster, cfg: &Config) -> Result<()> {
+    if let Some(p) = cl.unsnapshottable_policy() {
+        anyhow::bail!(
+            "policy `{p}` has no typed cold representation — --snapshot and \
+             --distribute process need a store-backed policy (e.g. {})",
+            if cfg.policy == "mu-linucb" { "the default" } else { "mu-linucb" }
+        );
+    }
+    Ok(())
+}
+
+/// Rebuild the in-process cluster from a decoded snapshot.  The typed
+/// decode layer already catches schema errors with field-level messages;
+/// a snapshot that *decodes* but carries a truncated or internally
+/// inconsistent arena fails deep in the unpack path, so the restore runs
+/// under `catch_unwind` and resurfaces as a CLI error naming the file.
+fn restore_cluster(cfg: &Config, state: &ClusterState) -> Result<cluster::Cluster> {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let restored = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cluster::cluster_from_snapshot(cfg, state)
+    }));
+    std::panic::set_hook(prev);
+    restored.map_err(|p| {
+        let msg = p
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| p.downcast_ref::<&str>().copied())
+            .unwrap_or("restore panicked");
+        anyhow::anyhow!("snapshot {} is corrupt or inconsistent: {msg}", cfg.resume)
+    })
+}
+
+/// Write the typed fleet snapshot for the cluster's current state.
+fn save_fleet_snapshot(cfg: &Config, cl: &mut cluster::Cluster) -> Result<()> {
+    let snap = FleetSnapshot { config: cfg.clone(), cluster: cl.snapshot_state() };
+    snap.save(&cfg.snapshot)?;
+    println!("fleet snapshot -> {} (round {})", cfg.snapshot, snap.cluster.round);
     Ok(())
 }
 

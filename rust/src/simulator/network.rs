@@ -182,6 +182,18 @@ impl SharedIngress {
     pub fn reset(&mut self) {
         self.bucket = TokenBucket::new(self.rate_mbps);
     }
+
+    /// Append the NIC's only mutable cursor (the shaper's next-free time)
+    /// to a snapshot arena; the rate is config, rebuilt on restore.
+    pub fn pack_state(&self, out: &mut Vec<u8>) {
+        crate::util::bytes::put_f64(out, self.bucket.next_free_ms);
+    }
+
+    /// Restore state packed by [`SharedIngress::pack_state`] into a
+    /// config-identical fresh ingress.
+    pub fn unpack_state(&mut self, r: &mut crate::util::bytes::Reader<'_>) {
+        self.bucket.next_free_ms = r.take_f64();
+    }
 }
 
 #[cfg(test)]

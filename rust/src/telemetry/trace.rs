@@ -24,6 +24,7 @@
 //! drop, so a long run with a small ring degrades to "most recent N
 //! events" rather than OOM or malloc traffic.
 
+use crate::util::bytes::{put_f64, put_u64, Reader};
 use crate::util::json::{obj, Json};
 
 /// Sentinel for "no session / no replica attached to this event".
@@ -101,6 +102,51 @@ impl EventKind {
         }
     }
 
+    /// Stable wire code for snapshots (the enum's declaration index).
+    /// Appending new kinds at the end keeps old snapshots readable.
+    pub fn code(self) -> u8 {
+        match self {
+            EventKind::ForecastFrozen => 0,
+            EventKind::SessionAttach => 1,
+            EventKind::SessionMigrate => 2,
+            EventKind::SessionHibernate => 3,
+            EventKind::SessionWake => 4,
+            EventKind::SessionEvict => 5,
+            EventKind::FrameSubmitted => 6,
+            EventKind::FrameAdmitted => 7,
+            EventKind::FrameRejected => 8,
+            EventKind::FrameBatched => 9,
+            EventKind::QueueDrain => 10,
+            EventKind::DeviceFallback => 11,
+            EventKind::PolicyRefresh => 12,
+            EventKind::PolicyReset => 13,
+            EventKind::RoundBarrier => 14,
+        }
+    }
+
+    /// Inverse of [`EventKind::code`]; `None` for unknown wire codes
+    /// (a snapshot written by a newer build).
+    pub fn from_code(code: u8) -> Option<EventKind> {
+        Some(match code {
+            0 => EventKind::ForecastFrozen,
+            1 => EventKind::SessionAttach,
+            2 => EventKind::SessionMigrate,
+            3 => EventKind::SessionHibernate,
+            4 => EventKind::SessionWake,
+            5 => EventKind::SessionEvict,
+            6 => EventKind::FrameSubmitted,
+            7 => EventKind::FrameAdmitted,
+            8 => EventKind::FrameRejected,
+            9 => EventKind::FrameBatched,
+            10 => EventKind::QueueDrain,
+            11 => EventKind::DeviceFallback,
+            12 => EventKind::PolicyRefresh,
+            13 => EventKind::PolicyReset,
+            14 => EventKind::RoundBarrier,
+            _ => return None,
+        })
+    }
+
     /// JSONL key names for the `a`/`b` payload slots of this kind
     /// (`None` = slot unused, omitted from the JSON object).
     fn payload_names(self) -> (Option<&'static str>, Option<&'static str>) {
@@ -174,6 +220,38 @@ impl TraceEvent {
     pub fn sans_wall(mut self) -> TraceEvent {
         self.wall_ms = 0.0;
         self
+    }
+
+    /// Append the event to a snapshot arena: every field verbatim
+    /// (including `wall_ms` and sentinel ids), so a restored trace is
+    /// byte-for-byte the trace an unbroken run would have drained.
+    pub fn pack(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.round as u64);
+        put_u64(out, self.kind.code() as u64);
+        put_u64(out, self.session as u64);
+        put_u64(out, self.replica as u64);
+        put_f64(out, self.clock_ms);
+        put_f64(out, self.a);
+        put_f64(out, self.b);
+        put_f64(out, self.wall_ms);
+    }
+
+    /// Rebuild an event packed by [`TraceEvent::pack`].
+    pub fn unpack(r: &mut Reader<'_>) -> TraceEvent {
+        let round = r.take_u64() as u32;
+        let code = r.take_u64() as u8;
+        let kind = EventKind::from_code(code)
+            .unwrap_or_else(|| panic!("unknown trace event kind code {code} in snapshot"));
+        TraceEvent {
+            round,
+            kind,
+            session: r.take_u64() as u32,
+            replica: r.take_u64() as u32,
+            clock_ms: r.take_f64(),
+            a: r.take_f64(),
+            b: r.take_f64(),
+            wall_ms: r.take_f64(),
+        }
     }
 
     /// One JSONL object.  Unused payload slots and absent ids are
@@ -424,6 +502,52 @@ mod tests {
         let parsed = Json::parse(&text).expect("barrier JSON parses");
         assert!(parsed.opt("session").is_none(), "fleet-level event has no session");
         assert_eq!(parsed.get("wall_ms").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn pack_round_trips_every_field_bit_exactly() {
+        let mut e = TraceEvent::new(EventKind::RoundBarrier, 9, None, 123.456, 7.0, -0.0);
+        e.replica = 3;
+        e.wall_ms = 0.875;
+        let plain = ev(EventKind::FrameBatched, 2, 5);
+        let mut arena = Vec::new();
+        e.pack(&mut arena);
+        plain.pack(&mut arena);
+        let mut r = Reader::new(&arena);
+        let e2 = TraceEvent::unpack(&mut r);
+        let p2 = TraceEvent::unpack(&mut r);
+        assert!(r.is_empty());
+        assert_eq!(e, e2);
+        assert_eq!(e2.wall_ms, 0.875, "wall clock survives the snapshot verbatim");
+        assert_eq!(e2.b.to_bits(), (-0.0f64).to_bits(), "negative zero is bit-exact");
+        assert_eq!(plain, p2);
+        assert_eq!(p2.session, 5);
+        assert_eq!(p2.replica, NO_ID, "sentinel ids survive");
+    }
+
+    #[test]
+    fn kind_codes_round_trip_and_reject_unknown() {
+        for kind in [
+            EventKind::ForecastFrozen,
+            EventKind::SessionAttach,
+            EventKind::SessionMigrate,
+            EventKind::SessionHibernate,
+            EventKind::SessionWake,
+            EventKind::SessionEvict,
+            EventKind::FrameSubmitted,
+            EventKind::FrameAdmitted,
+            EventKind::FrameRejected,
+            EventKind::FrameBatched,
+            EventKind::QueueDrain,
+            EventKind::DeviceFallback,
+            EventKind::PolicyRefresh,
+            EventKind::PolicyReset,
+            EventKind::RoundBarrier,
+        ] {
+            assert_eq!(EventKind::from_code(kind.code()), Some(kind));
+        }
+        assert_eq!(EventKind::from_code(15), None);
+        assert_eq!(EventKind::from_code(255), None);
     }
 
     #[test]

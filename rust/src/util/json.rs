@@ -211,6 +211,135 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+// ---------------------------------------------------------------------------
+// Typed decode layer (snapshot codec).
+//
+// Free functions that thread a dotted *path* through every access, so a
+// decode failure deep inside a snapshot names the exact field:
+// "`cluster.replicas[2].engine.round`: expected integer, got string".
+// This is the serde-style typed layer over the untyped [`Json`] value —
+// the snapshot/restore subsystem (`coordinator::snapshot`) is built
+// entirely on it.  Two representation rules keep round-trips bit-exact:
+//
+// * f64 state is encoded as its 16-hex-digit IEEE-754 bit pattern
+//   ([`f64_bits`]) — `Json::Num` cannot hold NaN/∞ and the writer folds
+//   integral floats, so raw numbers cannot guarantee bit identity;
+// * binary arenas (policy cold state, packed records/traces) are
+//   hex-encoded byte strings ([`bytes_hex`]).
+// ---------------------------------------------------------------------------
+
+fn at(path: &str, key: &str, e: JsonError) -> JsonError {
+    JsonError(format!("`{path}.{key}`: {}", e.0))
+}
+
+/// Required object field with path context in the error.
+pub fn field<'a>(v: &'a Json, path: &str, key: &str) -> Result<&'a Json> {
+    v.as_obj()
+        .map_err(|e| JsonError(format!("`{path}`: {}", e.0)))?
+        .get(key)
+        .ok_or_else(|| JsonError(format!("`{path}`: missing field `{key}`")))
+}
+
+pub fn field_usize(v: &Json, path: &str, key: &str) -> Result<usize> {
+    field(v, path, key)?.as_usize().map_err(|e| at(path, key, e))
+}
+
+pub fn field_u64(v: &Json, path: &str, key: &str) -> Result<u64> {
+    let n = field(v, path, key)?.as_i64().map_err(|e| at(path, key, e))?;
+    u64::try_from(n).map_err(|_| at(path, key, JsonError(format!("expected u64, got {n}"))))
+}
+
+pub fn field_bool(v: &Json, path: &str, key: &str) -> Result<bool> {
+    field(v, path, key)?.as_bool().map_err(|e| at(path, key, e))
+}
+
+pub fn field_str<'a>(v: &'a Json, path: &str, key: &str) -> Result<&'a str> {
+    field(v, path, key)?.as_str().map_err(|e| at(path, key, e))
+}
+
+pub fn field_arr<'a>(v: &'a Json, path: &str, key: &str) -> Result<&'a [Json]> {
+    field(v, path, key)?.as_arr().map_err(|e| at(path, key, e))
+}
+
+pub fn field_usizes(v: &Json, path: &str, key: &str) -> Result<Vec<usize>> {
+    field_arr(v, path, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            x.as_usize()
+                .map_err(|e| JsonError(format!("`{path}.{key}[{i}]`: {}", e.0)))
+        })
+        .collect()
+}
+
+/// Bit-exact f64 encoding: the 16-hex-digit IEEE-754 bit pattern as a
+/// string.  Survives NaN, ±∞, −0.0 and subnormals — everything the
+/// numeric JSON writer cannot.
+pub fn f64_bits(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// Decode a value written by [`f64_bits`].
+pub fn parse_f64_bits(v: &Json, path: &str) -> Result<f64> {
+    let s = v.as_str().map_err(|e| JsonError(format!("`{path}`: {}", e.0)))?;
+    if s.len() != 16 {
+        return Err(JsonError(format!(
+            "`{path}`: expected 16 hex digits of f64 bits, got `{s}`"
+        )));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| JsonError(format!("`{path}`: invalid f64 bit pattern `{s}`")))
+}
+
+pub fn field_f64_bits(v: &Json, path: &str, key: &str) -> Result<f64> {
+    parse_f64_bits(field(v, path, key)?, &format!("{path}.{key}"))
+}
+
+/// Encode a slice of f64s bit-exactly (array of [`f64_bits`] strings).
+pub fn f64s_bits(vs: &[f64]) -> Json {
+    Json::Arr(vs.iter().map(|&v| f64_bits(v)).collect())
+}
+
+pub fn field_f64s_bits(v: &Json, path: &str, key: &str) -> Result<Vec<f64>> {
+    field_arr(v, path, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, x)| parse_f64_bits(x, &format!("{path}.{key}[{i}]")))
+        .collect()
+}
+
+/// Hex-encode a binary arena leg (policy cold state, packed records).
+pub fn bytes_hex(b: &[u8]) -> Json {
+    let mut s = String::with_capacity(b.len() * 2);
+    for byte in b {
+        s.push_str(&format!("{byte:02x}"));
+    }
+    Json::Str(s)
+}
+
+/// Decode a value written by [`bytes_hex`].
+pub fn parse_bytes_hex(v: &Json, path: &str) -> Result<Vec<u8>> {
+    let s = v.as_str().map_err(|e| JsonError(format!("`{path}`: {}", e.0)))?;
+    if s.len() % 2 != 0 {
+        return Err(JsonError(format!(
+            "`{path}`: hex arena has odd length {} (truncated?)",
+            s.len()
+        )));
+    }
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16).map_err(|_| {
+                JsonError(format!("`{path}`: invalid hex at byte {i} of arena"))
+            })
+        })
+        .collect()
+}
+
+pub fn field_bytes_hex(v: &Json, path: &str, key: &str) -> Result<Vec<u8>> {
+    parse_bytes_hex(field(v, path, key)?, &format!("{path}.{key}"))
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -500,5 +629,62 @@ mod tests {
     fn obj_builder() {
         let v = obj(vec![("x", 1i64.into()), ("y", "z".into())]);
         assert_eq!(v.to_string(), r#"{"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn typed_fields_name_the_path_on_failure() {
+        let v = Json::parse(r#"{"engine": {"round": "ten"}}"#).unwrap();
+        let engine = field(&v, "snapshot", "engine").unwrap();
+        let err = field_usize(engine, "snapshot.engine", "round").unwrap_err();
+        assert!(err.0.contains("snapshot.engine.round"), "{err}");
+        let err = field(engine, "snapshot.engine", "next_id").unwrap_err();
+        assert!(
+            err.0.contains("snapshot.engine") && err.0.contains("missing field `next_id`"),
+            "{err}"
+        );
+        // Wrong shape at the container itself also names the path.
+        let err = field(engine.get("round").unwrap(), "snapshot.engine.round", "x").unwrap_err();
+        assert!(err.0.contains("snapshot.engine.round"), "{err}");
+    }
+
+    #[test]
+    fn f64_bits_round_trip_is_bit_exact() {
+        for v in [0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 1e-310, -3.7] {
+            let enc = f64_bits(v);
+            let dec = parse_f64_bits(&enc, "x").unwrap();
+            assert_eq!(dec.to_bits(), v.to_bits(), "{v}");
+        }
+        // Survives a full serialize → parse cycle too.
+        let doc = obj(vec![("v", f64_bits(-0.0))]);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(field_f64_bits(&back, "doc", "v").unwrap().to_bits(), (-0.0f64).to_bits());
+        // Malformed patterns are named errors, not panics.
+        assert!(parse_f64_bits(&Json::Str("xyz".into()), "p").unwrap_err().0.contains("`p`"));
+        assert!(parse_f64_bits(&Json::Num(1.0), "p").is_err());
+    }
+
+    #[test]
+    fn bytes_hex_round_trip() {
+        let arena: Vec<u8> = (0..=255).collect();
+        let enc = bytes_hex(&arena);
+        assert_eq!(parse_bytes_hex(&enc, "a").unwrap(), arena);
+        assert_eq!(parse_bytes_hex(&bytes_hex(&[]), "a").unwrap(), Vec::<u8>::new());
+        let err = parse_bytes_hex(&Json::Str("abc".into()), "a").unwrap_err();
+        assert!(err.0.contains("odd length"), "{err}");
+        assert!(parse_bytes_hex(&Json::Str("zz".into()), "a").is_err());
+    }
+
+    #[test]
+    fn f64s_bits_and_usizes_round_trip() {
+        let vs = vec![1.0, f64::NAN, -0.0, 2.5e300];
+        let back = field_f64s_bits(&obj(vec![("v", f64s_bits(&vs))]), "d", "v").unwrap();
+        assert_eq!(back.len(), vs.len());
+        for (a, b) in vs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let v = Json::parse(r#"{"s": [3, 1, 2]}"#).unwrap();
+        assert_eq!(field_usizes(&v, "d", "s").unwrap(), vec![3, 1, 2]);
+        let bad = Json::parse(r#"{"s": [3, "x"]}"#).unwrap();
+        assert!(field_usizes(&bad, "d", "s").unwrap_err().0.contains("d.s[1]"));
     }
 }

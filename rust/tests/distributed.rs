@@ -1,0 +1,149 @@
+//! Process-per-replica execution (DESIGN.md §15): the framed child
+//! protocol must be bit-identical to the in-process cluster at every
+//! replica/worker count, and a child dying mid-run must surface as a
+//! clean error naming the replica — never a hang.
+
+use ans::config::Config;
+use ans::coordinator::cluster::{cluster_with_replicas, Cluster};
+use ans::coordinator::remote::CRASH_AFTER_ENV;
+use ans::coordinator::{ProcessCluster, ReplicaSpec};
+use ans::simulator::scenario;
+use std::sync::Mutex;
+
+/// `ANS_TEST_CRASH_AFTER_ROUNDS` is process-global and inherited by
+/// every spawned child, so tests that launch workers serialize here.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn hetero_cfg(sessions: usize, replicas: usize, workers: usize, frames: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.sessions = sessions;
+    cfg.replicas = replicas;
+    cfg.workers = workers;
+    cfg.frames = frames;
+    cfg.rate_mbps = 10.0;
+    cfg.seed = 42;
+    cfg.placement = "migrate".into();
+    cfg.migrate_every = 20;
+    cfg.scheduler = "edf".into();
+    cfg.queue_signal = "full".into();
+    cfg.trace = "ring".into();
+    cfg.trace_capacity = 4096;
+    cfg.distribute = "process".into();
+    cfg.worker_exe = env!("CARGO_BIN_EXE_ans").into();
+    cfg
+}
+
+fn hetero_cluster(cfg: &Config) -> Cluster {
+    let specs = ReplicaSpec::from_edges(scenario::hetero_replica_swing(
+        cfg.replicas,
+        6.0,
+        cfg.frames / 2,
+    ));
+    cluster_with_replicas(cfg, specs)
+}
+
+fn transcripts(cl: &Cluster) -> Vec<Vec<u8>> {
+    cl.sessions()
+        .iter()
+        .map(|s| {
+            let mut b = Vec::new();
+            s.metrics.pack(&mut b);
+            b
+        })
+        .collect()
+}
+
+fn assert_same_run(a: &mut Cluster, b: &mut Cluster, what: &str) {
+    assert_eq!(a.assignment(), b.assignment(), "{what}: assignment");
+    assert_eq!(a.migrations(), b.migrations(), "{what}: migrations");
+    assert_eq!(transcripts(a), transcripts(b), "{what}: per-session transcripts");
+    for (sa, sb) in a.policy_snapshots().iter().zip(b.policy_snapshots()) {
+        assert_eq!(sa.observations, sb.observations, "{what}: observations");
+        assert_eq!(sa.resets, sb.resets, "{what}: resets");
+        assert_eq!(sa.theta, sb.theta, "{what}: θ̂ bits");
+        assert_eq!(sa.ridge_a, sb.ridge_a, "{what}: ridge A bits");
+        assert_eq!(sa.ridge_b, sb.ridge_b, "{what}: ridge b bits");
+    }
+    assert_eq!(a.drain_trace(), b.drain_trace(), "{what}: merged trace");
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance matrix: replicas 1/2/4 × engine workers 1/2 on the
+// heterogeneous swing + migrate + EDF + queue-signal-full scenario.
+// Children serve every round over the framed protocol; the merged
+// result must be bit-identical to the in-process cluster.
+// ---------------------------------------------------------------------------
+#[test]
+fn process_cluster_is_bit_identical_to_in_process() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let frames = 60;
+    for replicas in [1usize, 2, 4] {
+        for workers in [1usize, 2] {
+            let cfg = hetero_cfg(8, replicas, workers, frames);
+
+            let mut reference = hetero_cluster(&cfg);
+            reference.run(frames);
+
+            let state = hetero_cluster(&cfg).snapshot_state();
+            let mut pc = ProcessCluster::launch(&cfg, &state)
+                .unwrap_or_else(|e| panic!("launch r={replicas} w={workers}: {e:#}"));
+            pc.run(frames).unwrap_or_else(|e| panic!("run r={replicas} w={workers}: {e:#}"));
+            let mut merged = pc
+                .finish()
+                .unwrap_or_else(|e| panic!("finish r={replicas} w={workers}: {e:#}"));
+
+            assert_same_run(
+                &mut reference,
+                &mut merged,
+                &format!("replicas={replicas} workers={workers}"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A mid-run resume (the crash-recovery path the CLI exposes) also goes
+// through the process tier: bootstrap children from a round-40 snapshot
+// and serve the remainder — identical to the unbroken in-process run.
+// ---------------------------------------------------------------------------
+#[test]
+fn process_cluster_resumes_from_a_mid_run_snapshot() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let frames = 80;
+    let cfg = hetero_cfg(6, 2, 1, frames);
+
+    let mut reference = hetero_cluster(&cfg);
+    reference.run(frames);
+
+    let mut first = hetero_cluster(&cfg);
+    first.run(40);
+    let state = first.snapshot_state();
+    let mut pc = ProcessCluster::launch(&cfg, &state).unwrap();
+    pc.run(frames - 40).unwrap();
+    let mut merged = pc.finish().unwrap();
+    assert_same_run(&mut reference, &mut merged, "process resume from round 40");
+}
+
+// ---------------------------------------------------------------------------
+// Kill-a-child: the worker exits after N rounds without replying.  The
+// parent must return a clean error naming the dead replica — and must
+// not hang waiting on the closed pipe.
+// ---------------------------------------------------------------------------
+#[test]
+fn a_dead_child_is_a_named_error_not_a_hang() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = hetero_cfg(6, 2, 1, 40);
+    let state = hetero_cluster(&cfg).snapshot_state();
+
+    std::env::set_var(CRASH_AFTER_ENV, "10");
+    let launched = ProcessCluster::launch(&cfg, &state);
+    std::env::remove_var(CRASH_AFTER_ENV);
+    let mut pc = launched.unwrap();
+
+    let err = pc.run(40).expect_err("a dead child must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replica"), "error names the replica tier: {msg}");
+    assert!(msg.contains("died mid-run"), "error says what happened: {msg}");
+    // Drop(pc) reaps the remaining children; returning from the test
+    // without hanging IS the no-hang assertion.
+}

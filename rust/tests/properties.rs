@@ -1002,6 +1002,166 @@ fn prop_histogram_replica_merge_of_merges_is_bit_identical() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Typed snapshot codec (DESIGN.md §15): encode → parse → decode →
+// re-encode must be the identity on the snapshot text for ANY state the
+// schema admits — arbitrary byte arenas (policy cold images, cursors,
+// scheduler legs), f64s with NaN payloads / ±∞ / −0.0 riding the
+// bit-pattern encoding, and the empty/boundary shapes (no sessions, no
+// free slots, empty arenas, zero-step workloads).
+// ---------------------------------------------------------------------------
+use ans::coordinator::snapshot::{
+    workload_from_json, workload_to_json, ClusterState, EngineState, ReplicaState, SessionState,
+};
+use ans::util::json::Json;
+
+fn random_bytes(rng: &mut Rng, max: usize) -> Vec<u8> {
+    (0..rng.below(max + 1)).map(|_| rng.below(256) as u8).collect()
+}
+
+/// f64s weighted toward the values a naive decimal codec loses.
+fn wild_f64(rng: &mut Rng) -> f64 {
+    match rng.below(6) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => f64::from_bits(rng.next_u64()),
+        _ => rng.uniform(0.0, 8.0),
+    }
+}
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    if rng.bernoulli(0.5) {
+        Workload::Constant(wild_f64(rng))
+    } else {
+        Workload::Steps((0..rng.below(5)).map(|_| (rng.below(1000), wild_f64(rng))).collect())
+    }
+}
+
+fn random_engine_state(rng: &mut Rng) -> EngineState {
+    let n = rng.below(5);
+    let store_slots = n + rng.below(4);
+    let sessions: Vec<SessionState> = (0..n)
+        .map(|i| SessionState {
+            id: rng.below(10_000),
+            active: rng.bernoulli(0.8),
+            slot: i, // any slot below the window; sessions own distinct slots
+            arena: random_bytes(rng, 160),
+            records: random_bytes(rng, 320),
+        })
+        .collect();
+    // Slots above the live sessions may sit on the free list (descending,
+    // the allocator's own order).
+    let mut free_slots: Vec<usize> = (n..store_slots).filter(|_| rng.bernoulli(0.5)).collect();
+    free_slots.reverse();
+    EngineState {
+        round: rng.below(100_000),
+        next_id: rng.below(100_000),
+        offloaders_last: rng.below(64),
+        offload_counts: (0..rng.below(6)).map(|_| rng.below(1000)).collect(),
+        store_slots,
+        free_slots,
+        ingress: random_bytes(rng, 64),
+        scheduler: random_bytes(rng, 240),
+        sessions,
+        trace: random_bytes(rng, 160),
+        trace_dropped: rng.below(1 << 20) as u64,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct RandomClusterState(ClusterState);
+
+impl Shrink for RandomClusterState {
+    fn shrink(&self) -> Vec<RandomClusterState> {
+        let mut out = Vec::new();
+        if self.0.replicas.len() > 1 {
+            let mut cs = self.0.clone();
+            cs.replicas.truncate(1);
+            cs.base_load.truncate(1);
+            cs.assignment.iter_mut().for_each(|r| *r = 0);
+            out.push(RandomClusterState(cs));
+        }
+        out
+    }
+}
+
+fn random_cluster_state(rng: &mut Rng) -> RandomClusterState {
+    let n_rep = 1 + rng.below(3);
+    let names = ["gpu", "cpu", "maxn", "maxq"];
+    let replicas: Vec<ReplicaState> = (0..n_rep)
+        .map(|i| ReplicaState {
+            id: i,
+            label: format!("edge{i}"),
+            edge: names[rng.below(names.len())].into(),
+            load: random_workload(rng),
+            migrations_in: rng.below(50),
+            migrations_out: rng.below(50),
+            engine: random_engine_state(rng),
+        })
+        .collect();
+    RandomClusterState(ClusterState {
+        round: rng.below(100_000),
+        migrations: rng.below(500),
+        assignment: (0..rng.below(20)).map(|_| rng.below(n_rep)).collect(),
+        base_load: (0..n_rep).map(|_| wild_f64(rng)).collect(),
+        replicas,
+    })
+}
+
+#[test]
+fn prop_snapshot_codec_round_trips_any_admissible_state_bit_exactly() {
+    forall(31, 60, random_cluster_state, |RandomClusterState(cs)| {
+        let text = cs.to_json().to_string();
+        let parsed = Json::parse(&text).map_err(|e| format!("re-parse: {e}"))?;
+        let decoded = ClusterState::from_json(&parsed, "cluster")
+            .map_err(|e| format!("decode: {e}"))?;
+        ensure(
+            decoded.to_json().to_string() == text,
+            "decode → re-encode is not the identity on the snapshot text",
+        )?;
+        // The typed tiers with structural equality must also agree value-
+        // wise (text equality alone can't distinguish field mixups that
+        // happen to serialize identically).
+        for (a, b) in cs.replicas.iter().zip(&decoded.replicas) {
+            ensure(a.engine == b.engine, "engine state changed across the codec")?;
+        }
+        // base_load carries its exact bit patterns — NaN payloads included.
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        ensure(bits(&cs.base_load) == bits(&decoded.base_load), "base_load bits")?;
+        Ok(())
+    });
+}
+
+#[derive(Debug, Clone)]
+struct RandomWorkload(Workload);
+
+impl Shrink for RandomWorkload {}
+
+#[test]
+fn prop_workload_wire_form_round_trips_bit_exactly() {
+    forall(32, 80, |rng| RandomWorkload(random_workload(rng)), |RandomWorkload(w)| {
+        let text = workload_to_json(w).to_string();
+        let parsed = Json::parse(&text).map_err(|e| format!("re-parse: {e}"))?;
+        let decoded =
+            workload_from_json(&parsed, "load").map_err(|e| format!("decode: {e}"))?;
+        ensure(
+            workload_to_json(&decoded).to_string() == text,
+            "workload decode → re-encode is not the identity",
+        )?;
+        // Schedules evaluate identically frame by frame (bit-compare, so
+        // a NaN load surviving the wire still counts as equal).
+        for t in [0usize, 1, 7, 500, 999, 10_000] {
+            ensure(
+                w.at(t).to_bits() == decoded.at(t).to_bits(),
+                format!("load at frame {t} changed across the wire"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_histogram_quantiles_bound_exact_within_one_bucket() {
     forall(23, 40, random_samples, |vals| {

@@ -1,0 +1,290 @@
+//! Typed snapshot/restore (DESIGN.md §15): disk round-trips are
+//! bit-identical, a snapshotted run resumes bit-identically to the
+//! unbroken one (the generalization of the twin-replica losslessness
+//! pin in `tests/cluster.rs` to disk), and malformed snapshot files
+//! surface as friendly CLI errors rather than panics.
+
+use ans::config::Config;
+use ans::coordinator::cluster::{cluster_from_snapshot, cluster_with_replicas, Cluster};
+use ans::coordinator::{FleetSnapshot, ReplicaSpec};
+use ans::simulator::scenario;
+use ans::util::json::Json;
+use std::process::Command;
+
+/// A cluster shape that exercises everything the snapshot carries:
+/// heterogeneous swing replicas (so `migrate` placement really moves
+/// sessions), the EDF event queue (waiting room + virtual clocks), the
+/// queue-aware select signal (forecast context), and live trace rings.
+fn hetero_cfg(sessions: usize, replicas: usize, frames: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.sessions = sessions;
+    cfg.replicas = replicas;
+    cfg.frames = frames;
+    cfg.rate_mbps = 10.0;
+    cfg.seed = 42;
+    cfg.placement = "migrate".into();
+    cfg.migrate_every = 25;
+    cfg.scheduler = "edf".into();
+    cfg.queue_signal = "full".into();
+    // A non-empty trace path sizes the trace rings (nothing is written
+    // in lib tests); the drained trace must survive snapshot/resume.
+    cfg.trace = "ring".into();
+    cfg.trace_capacity = 4096;
+    cfg
+}
+
+fn hetero_cluster(cfg: &Config) -> Cluster {
+    let specs = ReplicaSpec::from_edges(scenario::hetero_replica_swing(
+        cfg.replicas,
+        6.0,
+        cfg.frames / 2,
+    ));
+    cluster_with_replicas(cfg, specs)
+}
+
+/// Per-session packed transcripts — the bit-level comparison key.
+fn transcripts(cl: &Cluster) -> Vec<Vec<u8>> {
+    cl.sessions()
+        .iter()
+        .map(|s| {
+            let mut b = Vec::new();
+            s.metrics.pack(&mut b);
+            b
+        })
+        .collect()
+}
+
+fn assert_same_run(a: &mut Cluster, b: &mut Cluster, what: &str) {
+    assert_eq!(a.assignment(), b.assignment(), "{what}: assignment");
+    assert_eq!(a.migrations(), b.migrations(), "{what}: migrations");
+    assert_eq!(transcripts(a), transcripts(b), "{what}: per-session transcripts");
+    for (sa, sb) in a.policy_snapshots().iter().zip(b.policy_snapshots()) {
+        assert_eq!(sa.observations, sb.observations, "{what}: observations");
+        assert_eq!(sa.resets, sb.resets, "{what}: resets");
+        assert_eq!(sa.theta, sb.theta, "{what}: θ̂ bits");
+        assert_eq!(sa.ridge_a, sb.ridge_a, "{what}: ridge A bits");
+        assert_eq!(sa.ridge_b, sb.ridge_b, "{what}: ridge b bits");
+    }
+    assert_eq!(a.drain_trace(), b.drain_trace(), "{what}: merged trace");
+    assert_eq!(a.trace_dropped(), b.trace_dropped(), "{what}: trace overflow");
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ans_snap_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Disk round-trip: encode → write → read → decode → re-encode is the
+// identity on the snapshot text, and restoring then re-snapshotting
+// reproduces the identical document (restore is lossless).
+// ---------------------------------------------------------------------------
+#[test]
+fn snapshot_survives_disk_and_restore_bit_identically() {
+    let cfg = hetero_cfg(6, 2, 80);
+    let mut cl = hetero_cluster(&cfg);
+    cl.run(80);
+    let snap = FleetSnapshot { config: cfg.clone(), cluster: cl.snapshot_state() };
+    let text = snap.to_json().to_string();
+
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join("fleet.snapshot.json");
+    snap.save(path.to_str().unwrap()).unwrap();
+    let loaded = FleetSnapshot::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.to_json().to_string(), text, "disk round-trip is the identity");
+
+    let mut restored = cluster_from_snapshot(&loaded.config, &loaded.cluster);
+    let again = FleetSnapshot {
+        config: loaded.config.clone(),
+        cluster: restored.snapshot_state(),
+    };
+    assert_eq!(again.to_json().to_string(), text, "restore → re-snapshot is the identity");
+    assert_same_run(&mut cl, &mut restored, "restored cluster");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Split runs: snapshot at round R, resume from the decoded document,
+// complete — bit-identical to never stopping.  R=50 lands exactly on a
+// migrate boundary (the resumed run's first step must rebalance, like
+// the unbroken one); R=60 lands mid-window.
+// ---------------------------------------------------------------------------
+#[test]
+fn resumed_run_completes_bit_identically_to_the_unbroken_run() {
+    let frames = 120;
+    let cfg = hetero_cfg(8, 2, frames);
+    let mut unbroken = hetero_cluster(&cfg);
+    unbroken.run(frames);
+    assert!(unbroken.migrations() > 0, "scenario must actually migrate");
+
+    for split in [50usize, 60] {
+        let mut first = hetero_cluster(&cfg);
+        first.run(split);
+        let snap = FleetSnapshot { config: cfg.clone(), cluster: first.snapshot_state() };
+        // Through the text codec, as a real resume would read it.
+        let decoded =
+            FleetSnapshot::from_json(&Json::parse(&snap.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(decoded.cluster.round, split);
+        let mut resumed = cluster_from_snapshot(&decoded.config, &decoded.cluster);
+        resumed.run(frames - split);
+        assert_same_run(&mut unbroken, &mut resumed, &format!("split at {split}"));
+        // Drained above; rebuild the reference for the next split.
+        unbroken = hetero_cluster(&cfg);
+        unbroken.run(frames);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recovery: a run dies after its last snapshot; resuming from that file
+// serves the remaining rounds and lands exactly where the unbroken run
+// does.  (The process-cluster kill test in tests/distributed.rs covers
+// the dying half; this covers the recovery half, through disk.)
+// ---------------------------------------------------------------------------
+#[test]
+fn recovery_from_the_last_snapshot_completes_the_run() {
+    let frames = 90;
+    let cfg = hetero_cfg(6, 2, frames);
+    let dir = tmp_dir("recovery");
+    let path = dir.join("last.snapshot.json");
+
+    let mut doomed = hetero_cluster(&cfg);
+    doomed.run(40);
+    FleetSnapshot { config: cfg.clone(), cluster: doomed.snapshot_state() }
+        .save(path.to_str().unwrap())
+        .unwrap();
+    doomed.run(17); // rounds served after the snapshot die with the "crash"
+    drop(doomed);
+
+    let snap = FleetSnapshot::load(path.to_str().unwrap()).unwrap();
+    let mut recovered = cluster_from_snapshot(&snap.config, &snap.cluster);
+    recovered.run(frames - 40);
+
+    let mut unbroken = hetero_cluster(&cfg);
+    unbroken.run(frames);
+    assert_same_run(&mut unbroken, &mut recovered, "recovered run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// CLI end-to-end: --snapshot-at + --resume reproduces the unbroken run's
+// reported tables, and malformed snapshot files are named errors.
+// ---------------------------------------------------------------------------
+
+fn ans(dir: &std::path::Path, args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_ans"))
+        .args(args)
+        .current_dir(dir)
+        .output()
+        .expect("spawning the ans binary")
+}
+
+/// The deterministic report lines: session rows, the replica table, and
+/// the aggregate/event/contention/queue footers (everything except
+/// wall-clock throughput).
+fn report_lines(stdout: &[u8]) -> Vec<String> {
+    let row = |t: &str, prefix: char| {
+        let mut ch = t.chars();
+        ch.next() == Some(prefix) && ch.next().is_some_and(|c| c.is_ascii_digit())
+    };
+    String::from_utf8_lossy(stdout)
+        .lines()
+        .filter(|l| {
+            let t = l.trim_start();
+            row(t, 's')
+                || row(t, 'r')
+                || l.starts_with("aggregate:")
+                || l.starts_with("event clock:")
+                || l.starts_with("contention:")
+                || l.starts_with("edge queue:")
+        })
+        .map(str::to_string)
+        .collect()
+}
+
+const CLI_FLAGS: &[&str] = &[
+    "fleet", "--sessions", "6", "--frames", "60", "--replicas", "2", "--placement", "migrate",
+    "--migrate-every", "20", "--scheduler", "edf", "--queue-signal", "full", "--seed", "42",
+];
+
+#[test]
+fn cli_snapshot_at_then_resume_matches_the_unbroken_run() {
+    let dir = tmp_dir("cli");
+    let snap = dir.join("mid.snapshot.json");
+    let snap = snap.to_str().unwrap();
+
+    let unbroken = ans(&dir, CLI_FLAGS);
+    assert!(unbroken.status.success(), "{}", String::from_utf8_lossy(&unbroken.stderr));
+    let reference = report_lines(&unbroken.stdout);
+    assert!(!reference.is_empty(), "reference run reports tables");
+
+    // Snapshot mid-run; the run itself continues and must report the
+    // exact same tables.
+    let mut with_snap = CLI_FLAGS.to_vec();
+    with_snap.extend(["--snapshot", snap, "--snapshot-at", "30"]);
+    let out = ans(&dir, &with_snap);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(report_lines(&out.stdout), reference, "--snapshot-at must not perturb the run");
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("fleet snapshot ->"),
+        "snapshot path is reported"
+    );
+
+    // Resume: completes rounds 30..60 and reports the full-run tables.
+    let out = ans(&dir, &["fleet", "--resume", snap]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let resumed = report_lines(&out.stdout);
+    assert_eq!(resumed, reference, "resumed run must report the unbroken tables");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("resuming"), "resume is announced");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_resume_files_are_friendly_errors_not_panics() {
+    let dir = tmp_dir("malformed");
+    let check = |args: &[&str], needle: &str, tag: &str| {
+        let out = ans(&dir, args);
+        assert!(!out.status.success(), "{tag}: must fail");
+        let err = String::from_utf8_lossy(&out.stderr).into_owned();
+        assert!(err.contains("error:"), "{tag}: friendly error prefix, got: {err}");
+        assert!(err.contains(needle), "{tag}: error should mention `{needle}`, got: {err}");
+        assert!(!err.contains("panicked"), "{tag}: no panic output, got: {err}");
+    };
+
+    // Missing file.
+    check(
+        &["fleet", "--resume", "no-such-snapshot.json"],
+        "no-such-snapshot.json",
+        "missing",
+    );
+
+    // A good snapshot to corrupt.
+    let good = dir.join("good.snapshot.json");
+    let good_s = good.to_str().unwrap();
+    let mut flags = CLI_FLAGS.to_vec();
+    flags.extend(["--snapshot", good_s]);
+    let out = ans(&dir, &flags);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&good).unwrap();
+
+    // Truncated JSON: byte offset named by the parser.
+    let trunc = dir.join("truncated.snapshot.json");
+    std::fs::write(&trunc, &text[..text.len() / 2]).unwrap();
+    check(&["fleet", "--resume", trunc.to_str().unwrap()], "truncated.snapshot.json", "truncated");
+
+    // Wrong field type: decode error names the field path.
+    let badfield = dir.join("badfield.snapshot.json");
+    std::fs::write(&badfield, text.replace("\"round\":", "\"round\":\"x\", \"_round\":")).unwrap();
+    check(&["fleet", "--resume", badfield.to_str().unwrap()], "round", "bad-field");
+
+    // Valid JSON, valid hex, truncated arena: the unpack path would
+    // panic deep in a Reader; the CLI must catch it and name the file.
+    let shortarena = dir.join("shortarena.snapshot.json");
+    let pos = text.find("\"arena\":\"").expect("snapshot has an arena") + "\"arena\":\"".len();
+    let mut cut = text.clone();
+    cut.replace_range(pos..pos + 32, "");
+    std::fs::write(&shortarena, cut).unwrap();
+    check(&["fleet", "--resume", shortarena.to_str().unwrap()], "corrupt", "short-arena");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
